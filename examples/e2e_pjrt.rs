@@ -1,0 +1,156 @@
+//! END-TO-END DRIVER: proves all three layers compose on a real
+//! workload, and records the headline numbers for EXPERIMENTS.md.
+//!
+//! Pipeline under test:
+//!   L1 Pallas kernels (FLiMS merge step + bitonic chunk sort)
+//!     → L2 JAX graphs, AOT-lowered to HLO text (`make artifacts`)
+//!       → L3 rust coordinator executing them via PJRT, cross-checked
+//!         against the native rust engine and the dynamic batcher.
+//!
+//! Workloads: 2^16-element uniform and Zipf-skewed f32 arrays (full
+//! sort), 2x16384 merges, and an 8-way batched sort through the
+//! batching path — with native-vs-PJRT output equality asserted
+//! elementwise.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_pjrt
+//! ```
+
+use std::time::Instant;
+
+use flims::data::{gen_u32, Distribution};
+use flims::flims::sort::{sort_desc, SortConfig};
+use flims::key::F32Key;
+use flims::runtime::{ArtifactKind, RuntimeHandle};
+use flims::util::rng::Rng;
+
+fn gen_f32(rng: &mut Rng, n: usize, dist: Distribution) -> Vec<f32> {
+    // Map u32 keys into exactly-representable f32 (24-bit) so the native
+    // and PJRT paths agree bit-for-bit.
+    gen_u32(rng, n, dist).into_iter().map(|x| (x >> 8) as f32).collect()
+}
+
+fn native_sort(x: &[f32]) -> Vec<f32> {
+    let mut keys: Vec<F32Key> = x.iter().map(|&v| F32Key::from_f32(v)).collect();
+    sort_desc(&mut keys, SortConfig { w: 16, chunk: 128 });
+    keys.into_iter().map(|k| k.to_f32()).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("=============== e2e: L1 Pallas -> L2 JAX/HLO -> L3 rust/PJRT ===============\n");
+    let rt = RuntimeHandle::load(std::path::Path::new("artifacts"))?;
+    println!("platform: {}", rt.platform()?);
+    for s in rt.specs()? {
+        println!("  artifact {:<26} kind={:?} n={} w={}", s.name, s.kind, s.n, s.w);
+    }
+
+    let mut rng = Rng::new(2024);
+    let mut failures = 0;
+
+    // ---- full sorts: uniform + zipf, 2^16 elements --------------------
+    for dist in [
+        Distribution::Uniform,
+        Distribution::Zipf { s_x100: 120, n_ranks: 4096 },
+    ] {
+        let n = 1 << 16;
+        let data = gen_f32(&mut rng, n, dist);
+        let expect = native_sort(&data);
+
+        let t = Instant::now();
+        let got = rt.sort_padded(data.clone())?;
+        let dt = t.elapsed();
+        let ok = got == expect;
+        failures += (!ok) as u32;
+        println!(
+            "sort n=2^16 {:<12} pjrt={:>8.2?} ({:.2} M elem/s)  match-native={}",
+            dist.name(),
+            dt,
+            n as f64 / dt.as_secs_f64() / 1e6,
+            ok
+        );
+    }
+
+    // ---- merge2: 2 x 16384 -------------------------------------------
+    {
+        let n = 16384;
+        let mut a = gen_f32(&mut rng, n, Distribution::Uniform);
+        let mut b = gen_f32(&mut rng, n, Distribution::Uniform);
+        a.sort_unstable_by(|x, y| y.partial_cmp(x).unwrap());
+        b.sort_unstable_by(|x, y| y.partial_cmp(x).unwrap());
+        let spec = rt
+            .best_for(ArtifactKind::Merge2, n)?
+            .ok_or_else(|| anyhow::anyhow!("no merge2 artifact"))?;
+        let t = Instant::now();
+        let got = rt.merge2(&spec.name, a.clone(), b.clone())?;
+        let dt = t.elapsed();
+        let mut expect: Vec<f32> = a.iter().chain(b.iter()).copied().collect();
+        expect.sort_unstable_by(|x, y| y.partial_cmp(x).unwrap());
+        let ok = got == expect;
+        failures += (!ok) as u32;
+        println!(
+            "merge 2x{n}    pjrt={:>8.2?} ({:.2} M elem/s)  match-native={}",
+            dt,
+            (2 * n) as f64 / dt.as_secs_f64() / 1e6,
+            ok
+        );
+    }
+
+    // ---- batched sort: the batcher's artifact (8 x 1024) --------------
+    {
+        let spec = rt
+            .specs()?
+            .into_iter()
+            .find(|s| s.kind == ArtifactKind::BatchedSort)
+            .ok_or_else(|| anyhow::anyhow!("no batched artifact"))?;
+        let rows: Vec<Vec<f32>> = (0..spec.batch)
+            .map(|_| gen_f32(&mut rng, spec.n, Distribution::Uniform))
+            .collect();
+        let t = Instant::now();
+        let got = rt.batched_sort(&spec.name, rows.clone())?;
+        let dt = t.elapsed();
+        let ok = rows
+            .iter()
+            .zip(&got)
+            .all(|(inp, out)| *out == native_sort(inp));
+        failures += (!ok) as u32;
+        println!(
+            "batched sort {}x{}  pjrt={:>8.2?} ({:.2} M elem/s)  match-native={}",
+            spec.batch,
+            spec.n,
+            dt,
+            (spec.batch * spec.n) as f64 / dt.as_secs_f64() / 1e6,
+            ok
+        );
+    }
+
+    // ---- throughput snapshot for EXPERIMENTS.md ------------------------
+    {
+        let n = 1 << 16;
+        let data = gen_f32(&mut rng, n, Distribution::Uniform);
+        // warm
+        let _ = rt.sort_padded(data.clone())?;
+        let iters = 5;
+        let t = Instant::now();
+        for _ in 0..iters {
+            let _ = rt.sort_padded(data.clone())?;
+        }
+        let per = t.elapsed() / iters;
+        let t = Instant::now();
+        for _ in 0..iters {
+            let _ = native_sort(&data);
+        }
+        let per_native = t.elapsed() / iters;
+        println!(
+            "\nsteady-state sort 2^16: pjrt {per:?}/sort ({:.2} M elem/s) vs native {per_native:?}/sort ({:.2} M elem/s)",
+            n as f64 / per.as_secs_f64() / 1e6,
+            n as f64 / per_native.as_secs_f64() / 1e6,
+        );
+    }
+
+    if failures == 0 {
+        println!("\ne2e OK: all PJRT outputs match the native engine elementwise");
+        Ok(())
+    } else {
+        anyhow::bail!("{failures} e2e checks FAILED")
+    }
+}

@@ -1,0 +1,81 @@
+//! Quickstart: the public API in five minutes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Covers: the Table-1 execution trace, 2-way merging (all variants),
+//! complete sorting (sequential + parallel), and the hardware models.
+
+use flims::flims::flimsj::merge_flimsj;
+use flims::flims::scalar::{merge_skew, FlimsMerger, Variant};
+use flims::flims::stable::merge_stable;
+use flims::flims::{merge_desc, par_sort_desc, sort_desc, SortConfig};
+use flims::flims::parallel::ParSortConfig;
+use flims::hw::{estimate, fmax_mhz, netlist, Design};
+use flims::key::Kv;
+
+fn main() {
+    // --- 1. The paper's Table 1 example: watch FLiMS merge ------------
+    let a: Vec<u32> = vec![29, 26, 26, 17, 16, 11, 5, 4, 3, 3];
+    let b: Vec<u32> = vec![22, 21, 19, 18, 15, 12, 9, 8, 7, 0];
+    let (merged, trace) = FlimsMerger::new(&a, &b, 4, Variant::Basic).run_traced();
+    println!("--- Table 1 trace (w=4) ---\n{}", trace.render());
+    println!("merged: {merged:?}\n");
+
+    // --- 2. 2-way merge, the library call ------------------------------
+    let out = merge_desc(&a, &b, 8);
+    assert!(flims::is_sorted_desc(&out));
+    println!("merge_desc(w=8) -> {} elements, sorted ✓", out.len());
+
+    // Skew-optimised variant (algorithm 2) balances duplicate streams:
+    let dup_a = vec![7u32; 64];
+    let dup_b = vec![7u32; 64];
+    let (_, stats) = merge_skew(&dup_a, &dup_b, 8);
+    println!(
+        "merge_skew on all-duplicates: dequeued A={} B={} (balanced ✓)",
+        stats.dequeued_a, stats.dequeued_b
+    );
+
+    // Stable variant (algorithm 3) keeps A-then-B order for equal keys:
+    let ka = vec![Kv::new(5, 1), Kv::new(5, 2)];
+    let kb = vec![Kv::new(5, 100)];
+    println!("merge_stable ties: {:?}", merge_stable(&ka, &kb, 4));
+
+    // FLiMSj (algorithm 4) dequeues whole rows:
+    let (out_j, rows) = merge_flimsj(&a, &b, 4);
+    println!(
+        "merge_flimsj: {} elements, {} whole-row fetches ({}A + {}B)\n",
+        out_j.len(),
+        rows.rows_a + rows.rows_b,
+        rows.rows_a,
+        rows.rows_b
+    );
+
+    // --- 3. Complete sorting (paper §8.2) ------------------------------
+    let mut data: Vec<u32> = (0..100_000u32).map(|i| i.wrapping_mul(2654435761)).collect();
+    sort_desc(&mut data, SortConfig { w: 16, chunk: 128 });
+    assert!(flims::is_sorted_desc(&data));
+    println!("sort_desc: 100k elements sorted ✓");
+
+    let mut data2: Vec<u32> = (0..500_000u32).map(|i| i.wrapping_mul(0x9E3779B9)).collect();
+    par_sort_desc(&mut data2, ParSortConfig::default());
+    assert!(flims::is_sorted_desc(&data2));
+    println!("par_sort_desc: 500k elements sorted ✓\n");
+
+    // --- 4. Hardware models (Table 2/3, fig. 13) -----------------------
+    for d in [Design::Flims, Design::Wms] {
+        let n = netlist(d, 32, 64);
+        let r = estimate(&n);
+        println!(
+            "{:<6} w=32: {} comparators, latency {}, ~{:.1} kLUT / {:.1} kFF, Fmax ~{:.0} MHz",
+            d.name(),
+            n.comparators(),
+            n.latency(),
+            r.kluts(),
+            r.kffs(),
+            fmax_mhz(d, 32, 64)
+        );
+    }
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,106 @@
+//! Sorting-as-a-service demo: starts the coordinator (router + dynamic
+//! batcher + TCP front end) on an ephemeral port, drives it with
+//! concurrent clients, and prints the service metrics.
+//!
+//! If AOT artifacts exist (run `make artifacts`), the service loads the
+//! PJRT runtime and `sortf pjrt …` requests execute the Pallas kernels;
+//! otherwise it serves native-only.
+//!
+//! ```bash
+//! cargo run --release --example sort_service
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use flims::config::AppConfig;
+use flims::coordinator::{BatcherConfig, Router, Service};
+use flims::runtime::RuntimeHandle;
+use flims::util::rng::Rng;
+
+fn main() {
+    let cfg = AppConfig::default();
+    let runtime = match RuntimeHandle::load(std::path::Path::new(&cfg.artifacts_dir)) {
+        Ok(rt) => {
+            println!(
+                "pjrt runtime loaded: {} artifacts on '{}'",
+                rt.specs().map(|s| s.len()).unwrap_or(0),
+                rt.platform().unwrap_or_default()
+            );
+            Some(rt)
+        }
+        Err(e) => {
+            println!("pjrt runtime unavailable ({e:#}); native only");
+            None
+        }
+    };
+    let has_pjrt = runtime.is_some();
+    let router = Arc::new(Router::new(cfg, runtime));
+    let service = Arc::new(Service::new(
+        router.clone(),
+        BatcherConfig { max_batch: 4, window: Duration::from_micros(300) },
+    ));
+
+    // Ephemeral port.
+    let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap();
+    drop(probe);
+    let bind = addr.to_string();
+    {
+        let svc = service.clone();
+        std::thread::spawn(move || svc.serve(&bind));
+    }
+    std::thread::sleep(Duration::from_millis(100));
+
+    // Drive with 4 concurrent clients, mixed request types.
+    let mut handles = Vec::new();
+    for client in 0..4u64 {
+        let addr = addr;
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(client + 1);
+            let mut conn = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            for req in 0..8 {
+                let n = 16 + rng.range(0, 48);
+                let vals: Vec<String> =
+                    (0..n).map(|_| (rng.below(1000)).to_string()).collect();
+                let line = match (client + req) % 3 {
+                    0 => format!("sort native {}", vals.join(" ")),
+                    1 => format!("batch {}", vals.join(" ")),
+                    _ => format!("sortf native {}", vals.join(" ")),
+                };
+                writeln!(conn, "{line}").unwrap();
+                let mut resp = String::new();
+                reader.read_line(&mut resp).unwrap();
+                assert!(resp.starts_with("ok "), "bad response: {resp}");
+                // Verify descending order.
+                let nums: Vec<f64> = resp[3..]
+                    .split_whitespace()
+                    .map(|t| t.parse().unwrap())
+                    .collect();
+                assert!(nums.windows(2).all(|p| p[0] >= p[1]));
+            }
+            writeln!(conn, "quit").unwrap();
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // PJRT path (batched artifact) if available.
+    if has_pjrt {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        writeln!(conn, "sortf pjrt 3.5 -1.25 0 99.75 7").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        println!("pjrt sortf response: {}", resp.trim());
+        assert!(resp.starts_with("ok "));
+    }
+
+    println!("metrics: {}", router.metrics.report());
+    service.shutdown();
+    println!("sort_service example OK (32 concurrent requests served)");
+}

@@ -1,0 +1,112 @@
+"""AOT compiler: lower the L2 graphs to HLO *text* artifacts for rust.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` rust crate) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids, so text
+round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Run once via ``make artifacts``; emits ``artifacts/*.hlo.txt`` plus a
+``manifest.json`` the rust runtime uses to discover shapes/configs.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default artifact set: small configs execute fast under the CPU PJRT
+# client; the e2e example uses sort_65536. All f32 (Literal-friendly).
+CONFIGS = [
+    {"kind": "merge2", "n": 4096, "w": 8},
+    {"kind": "merge2", "n": 16384, "w": 8},
+    {"kind": "full_sort", "n": 4096, "w": 8, "chunk": 128},
+    {"kind": "full_sort", "n": 16384, "w": 8, "chunk": 128},
+    {"kind": "full_sort", "n": 65536, "w": 8, "chunk": 256},
+    {"kind": "batched_sort", "batch": 8, "n": 1024, "w": 8, "chunk": 128},
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_config(cfg):
+    f32 = jax.ShapeDtypeStruct
+    import jax.numpy as jnp
+
+    if cfg["kind"] == "merge2":
+        fn = functools.partial(model.merge2, w=cfg["w"])
+        spec = f32((cfg["n"],), jnp.float32)
+        lowered = jax.jit(fn).lower(spec, spec)
+        name = f"merge2_n{cfg['n']}_w{cfg['w']}"
+        inputs = [["f32", cfg["n"]], ["f32", cfg["n"]]]
+        outputs = [["f32", 2 * cfg["n"]]]
+    elif cfg["kind"] == "full_sort":
+        fn = functools.partial(model.full_sort, w=cfg["w"], chunk=cfg["chunk"])
+        spec = f32((cfg["n"],), jnp.float32)
+        lowered = jax.jit(fn).lower(spec)
+        name = f"sort_n{cfg['n']}_w{cfg['w']}_c{cfg['chunk']}"
+        inputs = [["f32", cfg["n"]]]
+        outputs = [["f32", cfg["n"]]]
+    elif cfg["kind"] == "batched_sort":
+        fn = functools.partial(model.batched_sort, w=cfg["w"], chunk=cfg["chunk"])
+        spec = f32((cfg["batch"], cfg["n"]), jnp.float32)
+        lowered = jax.jit(fn).lower(spec)
+        name = f"bsort_b{cfg['batch']}_n{cfg['n']}_w{cfg['w']}_c{cfg['chunk']}"
+        inputs = [["f32", cfg["batch"], cfg["n"]]]
+        outputs = [["f32", cfg["batch"], cfg["n"]]]
+    else:
+        raise ValueError(cfg["kind"])
+    return name, to_hlo_text(lowered), inputs, outputs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(compat) single-file marker path")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out:  # Makefile passes artifacts/model.hlo.txt as the stamp
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"order": "descending", "artifacts": []}
+    for cfg in CONFIGS:
+        name, text, inputs, outputs = lower_config(cfg)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entry = dict(cfg)
+        entry.update({"name": name, "file": f"{name}.hlo.txt",
+                      "inputs": inputs, "outputs": outputs})
+        manifest["artifacts"].append(entry)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # TSV manifest for the rust runtime (no JSON parser needed there):
+    # name kind file n w chunk batch
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        for e in manifest["artifacts"]:
+            f.write("\t".join(str(x) for x in [
+                e["name"], e["kind"], e["file"], e.get("n", 0),
+                e.get("w", 0), e.get("chunk", 0), e.get("batch", 0),
+            ]) + "\n")
+    if args.out:  # stamp file so `make -q artifacts` sees freshness
+        with open(args.out, "w") as f:
+            f.write("see manifest.json\n")
+    print("manifest.json written")
+
+
+if __name__ == "__main__":
+    main()

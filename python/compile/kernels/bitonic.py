@@ -1,0 +1,68 @@
+"""Layer-1 Pallas kernel: bitonic sort-in-chunks (paper §8.2).
+
+The complete-sort pipeline needs initial sorted runs before the FLiMS
+merge passes take over. The paper builds these with a bitonic sorter
+("sort-in-chunks", optimal chunk = 512 on their AVX2 target); we do the
+same with a vectorised Batcher bitonic network applied across all chunks
+at once — the chunk axis is the batch dimension, the network operates on
+the lane axis.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def bitonic_sort_desc(x):
+    """Full Batcher bitonic sorting network (descending) on the last axis.
+
+    Works on any power-of-two length. Stage (k, j) compares elements at
+    stride j within alternating-direction blocks of size k, exactly the
+    textbook network; all comparisons of a stage run as one vectorised
+    min/max pair, the SIMD formulation of paper §8.2.
+    """
+    n = x.shape[-1]
+    assert n & (n - 1) == 0, "bitonic sorter needs a power-of-two width"
+    idx = jnp.arange(n)
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            partner = idx ^ j
+            x_p = jnp.take(x, partner, axis=-1)
+            # Descending overall: block direction flips with bit k.
+            up = (idx & k) == 0
+            keep_hi = partner > idx
+            hi = jnp.maximum(x, x_p)
+            lo = jnp.minimum(x, x_p)
+            # In an "up" (descending) block the smaller index keeps max.
+            want_hi = jnp.where(up, keep_hi, ~keep_hi)
+            x = jnp.where(want_hi, hi, lo)
+            j //= 2
+        k *= 2
+    return x
+
+
+def _chunk_sort_kernel(x_ref, o_ref, *, chunk):
+    x = x_ref[...]
+    o_ref[...] = bitonic_sort_desc(x.reshape(-1, chunk)).reshape(x.shape)
+
+
+def pallas_chunk_sort(x, chunk=128):
+    """Sort each ``chunk``-sized run of x descending (Pallas, interpret)."""
+    n = x.shape[0]
+    assert n % chunk == 0
+    # Block a group of chunks per program to keep grid size moderate.
+    group = max(1, min(n // chunk, 64))
+    block = group * chunk
+    grid = n // block
+    return pl.pallas_call(
+        partial(_chunk_sort_kernel, chunk=chunk),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(x)

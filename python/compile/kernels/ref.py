@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels (build-time correctness only).
+
+Everything here is deliberately trivial — jnp.sort + flip — so kernel
+bugs cannot be mirrored in the reference. flip(sort(x)) avoids the
+negation trick, which would overflow on INT_MIN inputs from hypothesis.
+"""
+
+import jax.numpy as jnp
+
+
+def sort_desc(x, axis=-1):
+    return jnp.flip(jnp.sort(x, axis=axis), axis=axis)
+
+
+def merge_ref(a, b):
+    """Descending merge of two descending-sorted arrays."""
+    return sort_desc(jnp.concatenate([a, b]))
+
+
+def sort_ref(x):
+    """Descending sort."""
+    return sort_desc(x)
+
+
+def chunk_sort_ref(x, chunk):
+    """Descending sort of each chunk-sized run."""
+    return sort_desc(x.reshape(-1, chunk)).reshape(x.shape)
+
+
+def merge_pass_ref(x, run):
+    """One mergesort pass over descending runs of length ``run``."""
+    return sort_desc(x.reshape(-1, 2 * run)).reshape(x.shape)

@@ -1,0 +1,50 @@
+"""Layer-2 JAX compute graphs, composed from the Layer-1 Pallas kernels.
+
+These are the graphs that get AOT-lowered to HLO text by ``aot.py`` and
+executed from rust via PJRT. Python never runs on the request path —
+each (shape, w, chunk) configuration becomes one self-contained artifact.
+
+Graphs:
+  * ``merge2``    — FLiMS 2-way merge of two descending-sorted arrays
+                    (the paper's core contribution as one executable).
+  * ``full_sort`` — §8.2 complete sort: bitonic sort-in-chunks + log2
+                    FLiMS merge passes (a software PMT: every pass is a
+                    level of the merge tree, each grid program a merger).
+  * ``batched_sort`` — full_sort vmapped over a batch dimension, the
+                    shape the rust dynamic batcher feeds.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.bitonic import pallas_chunk_sort
+from .kernels.flims import pallas_merge, pallas_merge_pass
+
+
+def merge2(a, b, *, w=8):
+    """Merge two descending-sorted arrays into one (FLiMS kernel)."""
+    return (pallas_merge(a, b, w=w),)
+
+
+def full_sort(x, *, w=8, chunk=128):
+    """Complete descending sort of a 1-D array (power-of-two length).
+
+    Mirrors paper §8.2: a sort-in-chunks pass builds runs of ``chunk``,
+    then FLiMS merge passes double the run length until one run remains.
+    The pass count is static (log2(n/chunk)), so the whole pipeline
+    lowers to a single fused HLO module.
+    """
+    n = x.shape[0]
+    assert n & (n - 1) == 0, "power-of-two length required"
+    assert n >= chunk
+    x = pallas_chunk_sort(x, chunk=chunk)
+    run = chunk
+    while run < n:
+        x = pallas_merge_pass(x, run, w=w)
+        run *= 2
+    return (x,)
+
+
+def batched_sort(xs, *, w=8, chunk=128):
+    """Sort each row of a (batch, n) array — the dynamic batcher's shape."""
+    return (jax.vmap(lambda r: full_sort(r, w=w, chunk=chunk)[0])(xs),)

@@ -1,0 +1,6 @@
+# Allow `pytest python/tests/` from the repo root: make the `compile`
+# package importable regardless of the invocation directory.
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

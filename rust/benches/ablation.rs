@@ -1,0 +1,105 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. merge tier: per-bank gathers vs FLiMSj whole-row prefetch (§8.1's
+//!    two fetching strategies);
+//! 2. adaptive lane width in the sort vs fixed w;
+//! 3. columnar vs per-chunk scalar sort-in-chunks;
+//! 4. skew optimisation on/off at the single-merger level (cycle sim).
+//!
+//! Run: `cargo bench --bench ablation`
+
+use std::time::Duration;
+
+use flims::data::{gen_u32, Distribution};
+use flims::flims::chunk_sort::{sort_chunks_columnar, sort_chunks_desc};
+use flims::flims::lanes::{merge_desc_w_slice, merge_flimsj_w_slice};
+use flims::flims::sort::{sort_desc, SortConfig};
+use flims::hw::{run_stream, FlimsCycle, SimConfig};
+use flims::util::bench::{bench, black_box};
+use flims::util::rng::Rng;
+
+fn main() {
+    let budget = Duration::from_millis(600);
+    let mut rng = Rng::new(2025);
+
+    println!("== ablation 1: merge tier (2 x 2^20 u32, w=16) ==\n");
+    let n = 1 << 20;
+    let mut a = gen_u32(&mut rng, n, Distribution::Uniform);
+    let mut b = gen_u32(&mut rng, n, Distribution::Uniform);
+    a.sort_unstable_by(|x, y| y.cmp(x));
+    b.sort_unstable_by(|x, y| y.cmp(x));
+    let mut dst = vec![0u32; 2 * n];
+    let r1 = bench("per-bank gathers", budget, || {
+        merge_desc_w_slice::<u32, 16>(black_box(&a), black_box(&b), &mut dst);
+        black_box(dst[0]);
+    });
+    let r2 = bench("whole-row prefetch (FLiMSj)", budget, || {
+        merge_flimsj_w_slice::<u32, 16>(black_box(&a), black_box(&b), &mut dst);
+        black_box(dst[0]);
+    });
+    println!("per-bank gathers   : {:>8.1} M elem/s", r1.mitems_per_sec(2 * n));
+    println!("whole-row (FLiMSj) : {:>8.1} M elem/s", r2.mitems_per_sec(2 * n));
+    println!("(winner depends on ISA: gathers win with AVX-512 masks, rows win on baseline codegen)\n");
+
+    println!("== ablation 2: adaptive vs fixed lane width (sort 2^20) ==\n");
+    let data = gen_u32(&mut rng, 1 << 20, Distribution::Uniform);
+    // Fixed w is emulated by chunk=w-floor configs; adaptive is default.
+    let r_adaptive = bench("adaptive", budget, || {
+        let mut v = data.clone();
+        sort_desc(&mut v, SortConfig { w: 16, chunk: 256 });
+        black_box(v[0]);
+    });
+    println!("adaptive w (base 16): {:>8.1} M elem/s", r_adaptive.mitems_per_sec(1 << 20));
+    for w in [8usize, 64] {
+        // Fixing w = raising base so the adaptive cap never exceeds it is
+        // not expressible; instead compare different bases (the adaptive
+        // path floors at the base and is monotone in it).
+        let r = bench("fixed-ish", budget, || {
+            let mut v = data.clone();
+            sort_desc(&mut v, SortConfig { w, chunk: 256 });
+            black_box(v[0]);
+        });
+        println!("base w={w:<3}          : {:>8.1} M elem/s", r.mitems_per_sec(1 << 20));
+    }
+    println!();
+
+    println!("== ablation 3: sort-in-chunks formulation (2^18 u32, c=128) ==\n");
+    let data = gen_u32(&mut rng, 1 << 18, Distribution::Uniform);
+    let r_scalar = bench("scalar per-chunk", budget, || {
+        let mut v = data.clone();
+        sort_chunks_desc(&mut v, 128);
+        black_box(v[0]);
+    });
+    let r_col = bench("columnar (SoA)", budget, || {
+        let mut v = data.clone();
+        sort_chunks_columnar(&mut v, 128);
+        black_box(v[0]);
+    });
+    println!("scalar per-chunk : {:>8.1} M elem/s", r_scalar.mitems_per_sec(1 << 18));
+    println!(
+        "columnar (SoA)   : {:>8.1} M elem/s  ({:.1}x)\n",
+        r_col.mitems_per_sec(1 << 18),
+        r_scalar.median_ns / r_col.median_ns
+    );
+
+    println!("== ablation 4: skew optimisation (cycle sim, constant data, bw=w/2) ==\n");
+    let w = 8;
+    let ca = vec![7u32; 4096];
+    let cb = vec![7u32; 4096];
+    let cfg = SimConfig { fifo_depth: 4, bw_a: w / 2, bw_b: w / 2, ..Default::default() };
+    let mut basic: FlimsCycle<u32> = FlimsCycle::new(w, false);
+    let rb = run_stream(&mut basic, &ca, &cb, cfg);
+    let mut skew: FlimsCycle<u32> = FlimsCycle::new(w, true);
+    let rs = run_stream(&mut skew, &ca, &cb, cfg);
+    println!(
+        "algorithm 1: {:>6} cycles, {:>5} stalls, {:.2} elem/cycle",
+        rb.cycles, rb.stall_cycles, rb.throughput
+    );
+    println!(
+        "algorithm 2: {:>6} cycles, {:>5} stalls, {:.2} elem/cycle  ({:.2}x)",
+        rs.cycles,
+        rs.stall_cycles,
+        rs.throughput,
+        rs.throughput / rb.throughput
+    );
+}

@@ -1,0 +1,58 @@
+//! Regenerates **Fig. 13**: maximal operating frequency for FLiMS,
+//! FLiMSj, WMS and EHMS over w = 4…512 (timing model; see DESIGN.md §4
+//! for the Vivado-substitution argument).
+//!
+//! Run: `cargo bench --bench fig13_fmax`
+
+use flims::hw::timing::routable;
+use flims::hw::{fmax_mhz, Design};
+
+fn main() {
+    let ws = [4usize, 8, 16, 32, 64, 128, 256, 512];
+    println!("== Fig. 13: estimated maximal operating frequency (MHz, 64-bit) ==\n");
+    println!(
+        "{:<6} {:>9} {:>9} {:>14} {:>9}",
+        "w", "FLiMS", "FLiMSj", "WMS", "EHMS"
+    );
+    for w in ws {
+        let wms = fmax_mhz(Design::Wms, w, 64);
+        let wms_s = if routable(Design::Wms, w, 64) {
+            format!("{wms:.0}")
+        } else {
+            format!("{wms:.0} (no-route)")
+        };
+        println!(
+            "{:<6} {:>9.0} {:>9.0} {:>14} {:>9.0}",
+            w,
+            fmax_mhz(Design::Flims, w, 64),
+            fmax_mhz(Design::Flimsj, w, 64),
+            wms_s,
+            fmax_mhz(Design::Ehms, w, 64),
+        );
+    }
+
+    println!("\n== All designs (including the long-feedback baselines) ==\n");
+    print!("{:<6}", "w");
+    for d in flims::hw::ALL_DESIGNS {
+        print!("{:>9}", d.name());
+    }
+    println!();
+    for w in ws {
+        print!("{:<6}", w);
+        for d in flims::hw::ALL_DESIGNS {
+            print!("{:>9.0}", fmax_mhz(d, w, 64));
+        }
+        println!();
+    }
+
+    // Headline shape checks (fig. 13's qualitative claims).
+    for w in ws {
+        assert!(fmax_mhz(Design::Flims, w, 64) > fmax_mhz(Design::Wms, w, 64));
+        assert!(fmax_mhz(Design::Flims, w, 64) > fmax_mhz(Design::Ehms, w, 64));
+    }
+    let gap = fmax_mhz(Design::Flims, 512, 64) / fmax_mhz(Design::Wms, 512, 64);
+    println!(
+        "\nheadline: FLiMS beats WMS/EHMS at every w; gap at w=512 is {gap:.2}x \
+         (paper: 'sometimes more than double')"
+    );
+}

@@ -1,0 +1,53 @@
+//! Regenerates **Fig. 14**: 2-way merge throughput of the lane-parallel
+//! FLiMS implementation as a function of the emulated parallelism `w`
+//! (the paper sweeps an AVX2 build on 2×2^24 random i32; we sweep the
+//! branchless auto-vectorised rust build — same algorithm, same access
+//! pattern; expect the same plateau-then-decline shape).
+//!
+//! Run: `cargo bench --bench fig14_w_sweep` (env FULL=1 for 2^24)
+
+use std::time::Duration;
+
+use flims::data::{gen_u32, Distribution};
+use flims::flims::lanes::merge_desc_fast;
+use flims::util::bench::{bench, black_box};
+use flims::util::rng::Rng;
+
+fn main() {
+    let full = std::env::var("FULL").is_ok();
+    let n: usize = if full { 1 << 24 } else { 1 << 21 };
+    println!(
+        "== Fig. 14: merge throughput vs emulated w (2 x {} sorted u32) ==\n",
+        n
+    );
+    let mut rng = Rng::new(14);
+    let mut a = gen_u32(&mut rng, n, Distribution::Uniform);
+    let mut b = gen_u32(&mut rng, n, Distribution::Uniform);
+    a.sort_unstable_by(|x, y| y.cmp(x));
+    b.sort_unstable_by(|x, y| y.cmp(x));
+
+    println!("{:<6} {:>14} {:>14}", "w", "M elem/s", "ns/elem");
+    let mut results = Vec::new();
+    for w in [2usize, 4, 8, 16, 32, 64, 128, 256] {
+        let mut out: Vec<u32> = Vec::with_capacity(2 * n);
+        let r = bench(&format!("merge w={w}"), Duration::from_millis(800), || {
+            out.clear();
+            merge_desc_fast(black_box(&a), black_box(&b), w, &mut out);
+            black_box(out.last().copied());
+        });
+        let meps = r.mitems_per_sec(2 * n);
+        println!("{:<6} {:>14.1} {:>14.3}", w, meps, r.median_ns / (2 * n) as f64);
+        results.push((w, meps));
+    }
+
+    // Shape check: the optimum should be an interior w (the paper found
+    // w = 16..32 on AVX2), i.e. not the smallest or the largest point.
+    let best = results
+        .iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    println!(
+        "\nheadline: best w = {} at {:.1} M elem/s (paper fig. 14: optimum at w=16..32)",
+        best.0, best.1
+    );
+}

@@ -1,0 +1,102 @@
+//! Regenerates **Fig. 15**: complete-sort throughput versus input size
+//! for the FLiMS-based sort (single- and multi-threaded) against the
+//! baselines the paper uses: `std::sort` (rust `sort_unstable`), radix
+//! sort (IPP analogue) and parallel samplesort (`block_indirect_sort`
+//! analogue).
+//!
+//! Paper range: 2^12 … 2^28. Default here: 2^12 … 2^22 (env FULL=1
+//! extends to 2^24; the shape — who wins where, and the crossovers — is
+//! what we reproduce, not absolute GB/s).
+//!
+//! Run: `cargo bench --bench fig15_full_sort`
+
+use std::time::Duration;
+
+use flims::baselines::{radix_sort_desc, samplesort_desc};
+use flims::data::{gen_u32, Distribution};
+use flims::flims::parallel::{par_sort_desc, ParSortConfig};
+use flims::flims::sort::{sort_desc, SortConfig};
+use flims::util::bench::{bench, black_box};
+use flims::util::rng::Rng;
+
+fn main() {
+    let full = std::env::var("FULL").is_ok();
+    let max_exp = if full { 24 } else { 22 };
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "== Fig. 15: full-sort throughput vs input size (u32, uniform; {threads} hw threads) ==\n"
+    );
+    println!(
+        "{:<8} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "n", "flims-1T", "flims-mT", "std::sort", "radix", "samplesort"
+    );
+    println!("{:<8} {:>12} {:>12} {:>12} {:>12} {:>12}", "", "M/s", "M/s", "M/s", "M/s", "M/s");
+
+    let cfg = SortConfig { w: 16, chunk: 128 };
+    let budget = Duration::from_millis(if full { 1500 } else { 600 });
+    let mut crossover_seen = false;
+    let mut last: Option<(f64, f64)> = None;
+
+    for exp in (12..=max_exp).step_by(2) {
+        let n = 1usize << exp;
+        let mut rng = Rng::new(exp as u64);
+        let data = gen_u32(&mut rng, n, Distribution::Uniform);
+
+        let t_flims = bench("flims", budget, || {
+            let mut v = data.clone();
+            sort_desc(&mut v, cfg);
+            black_box(v.len());
+        });
+        let t_par = bench("flims-mt", budget, || {
+            let mut v = data.clone();
+            par_sort_desc(
+                &mut v,
+                ParSortConfig { base: cfg, threads: 0, seq_cutoff: 1 << 15 },
+            );
+            black_box(v.len());
+        });
+        let t_std = bench("std", budget, || {
+            let mut v = data.clone();
+            v.sort_unstable_by(|a, b| b.cmp(a));
+            black_box(v.len());
+        });
+        let t_radix = bench("radix", budget, || {
+            let mut v = data.clone();
+            radix_sort_desc(&mut v);
+            black_box(v.len());
+        });
+        let t_sample = bench("samplesort", budget, || {
+            let mut v = data.clone();
+            samplesort_desc(&mut v, 0);
+            black_box(v.len());
+        });
+
+        let m = |r: &flims::util::bench::BenchResult| r.mitems_per_sec(n);
+        println!(
+            "2^{:<6} {:>12.1} {:>12.1} {:>12.1} {:>12.1} {:>12.1}",
+            exp,
+            m(&t_flims),
+            m(&t_par),
+            m(&t_std),
+            m(&t_radix),
+            m(&t_sample)
+        );
+        if let Some((prev_f, prev_s)) = last {
+            if (prev_f > prev_s) != (m(&t_flims) > m(&t_std)) {
+                crossover_seen = true;
+            }
+        }
+        last = Some((m(&t_flims), m(&t_std)));
+    }
+
+    println!(
+        "\nheadline (paper fig. 15 shape): radix leads small/mid sizes; \
+         FLiMS-based sort competes with/overtakes library sorts as n grows.\
+         {}",
+        if crossover_seen { " (crossover observed)" } else { "" }
+    );
+    println!(
+        "note: single hw-thread hosts compress the 1T/mT gap; the paper's \
+         16T Ryzen shows the multi-threaded separation."
+    );
+}

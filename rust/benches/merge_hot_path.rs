@@ -1,0 +1,117 @@
+//! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
+//! the merge-step inner loop across tiers (dynamic pad-aware vs
+//! const-width), the butterfly alone, chunk sort, and the cycle-sim
+//! throughput (simulator perf target: ≥1M merger-cycles/s at w=32).
+//!
+//! Run: `cargo bench --bench merge_hot_path`
+
+use std::time::Duration;
+
+use flims::data::{gen_u32, Distribution};
+use flims::flims::butterfly::butterfly_desc_w;
+use flims::flims::chunk_sort::{sort_chunks_columnar, sort_chunks_desc};
+use flims::flims::lanes::{merge_desc_into, merge_desc_w, merge_flimsj_w_slice};
+use flims::hw::{run_stream, FlimsCycle, SimConfig};
+use flims::util::bench::{bench, black_box, fmt_ns};
+use flims::util::rng::Rng;
+
+fn main() {
+    let n = 1usize << 20;
+    let mut rng = Rng::new(99);
+    let mut a = gen_u32(&mut rng, n, Distribution::Uniform);
+    let mut b = gen_u32(&mut rng, n, Distribution::Uniform);
+    a.sort_unstable_by(|x, y| y.cmp(x));
+    b.sort_unstable_by(|x, y| y.cmp(x));
+    let budget = Duration::from_millis(700);
+
+    println!("== merge hot path (2 x 2^20 u32) ==\n");
+
+    let mut out: Vec<u32> = Vec::with_capacity(2 * n);
+    let r = bench("merge_desc_w::<u32,16>", budget, || {
+        out.clear();
+        merge_desc_w::<u32, 16>(black_box(&a), black_box(&b), &mut out);
+        black_box(out.last().copied());
+    });
+    println!(
+        "{:<28} {:>10.1} M elem/s   ({}/iter)",
+        r.name,
+        r.mitems_per_sec(2 * n),
+        fmt_ns(r.median_ns)
+    );
+
+    let mut dst = vec![0u32; 2 * n];
+    let r = bench("merge_flimsj_w_slice w=16", budget, || {
+        merge_flimsj_w_slice::<u32, 16>(black_box(&a), black_box(&b), &mut dst);
+        black_box(dst[0]);
+    });
+    println!(
+        "{:<28} {:>10.1} M elem/s   ({}/iter)",
+        r.name,
+        r.mitems_per_sec(2 * n),
+        fmt_ns(r.median_ns)
+    );
+
+    let r = bench("merge_desc_into (dyn w=16)", budget, || {
+        merge_desc_into(black_box(&a), black_box(&b), 16, &mut out);
+        black_box(out.last().copied());
+    });
+    println!(
+        "{:<28} {:>10.1} M elem/s   ({}/iter)",
+        r.name,
+        r.mitems_per_sec(2 * n),
+        fmt_ns(r.median_ns)
+    );
+
+    // Butterfly column alone.
+    let mut lanes = [0u32; 16];
+    for (i, l) in lanes.iter_mut().enumerate() {
+        *l = (16 - i) as u32;
+    }
+    let r = bench("butterfly_desc_w::<u32,16>", Duration::from_millis(300), || {
+        let mut x = black_box(lanes);
+        butterfly_desc_w(&mut x);
+        black_box(x[0]);
+    });
+    println!("{:<28} {:>10} per column", r.name, fmt_ns(r.median_ns));
+
+    // Chunk sort pass.
+    let data = gen_u32(&mut rng, 1 << 18, Distribution::Uniform);
+    let r = bench("sort_chunks_desc c=128", budget, || {
+        let mut v = data.clone();
+        sort_chunks_desc(&mut v, 128);
+        black_box(v[0]);
+    });
+    println!(
+        "{:<28} {:>10.1} M elem/s   ({}/iter)",
+        r.name,
+        r.mitems_per_sec(1 << 18),
+        fmt_ns(r.median_ns)
+    );
+
+    let r = bench("sort_chunks_columnar c=128", budget, || {
+        let mut v = data.clone();
+        sort_chunks_columnar(&mut v, 128);
+        black_box(v[0]);
+    });
+    println!(
+        "{:<28} {:>10.1} M elem/s   ({}/iter)",
+        r.name,
+        r.mitems_per_sec(1 << 18),
+        fmt_ns(r.median_ns)
+    );
+
+    // Cycle-sim throughput (perf target from DESIGN.md §7).
+    let (sa, sb) = (&a[..1 << 16], &b[..1 << 16]);
+    let t = std::time::Instant::now();
+    let mut m: FlimsCycle<u32> = FlimsCycle::new(32, false);
+    let sim = run_stream(&mut m, sa, sb, SimConfig { fifo_depth: 4, ..Default::default() });
+    let dt = t.elapsed();
+    let cps = sim.cycles as f64 / dt.as_secs_f64();
+    println!(
+        "{:<28} {:>10.2} M merger-cycles/s ({} cycles in {:?})",
+        "FlimsCycle sim w=32",
+        cps / 1e6,
+        sim.cycles,
+        dt
+    );
+}

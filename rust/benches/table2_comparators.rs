@@ -1,0 +1,93 @@
+//! Regenerates **Table 2**: feedback length, latency, comparator count,
+//! modules, topology and tie-record column for all eight designs, with
+//! the structural netlist counts cross-checked against the closed forms
+//! (the paper's yosys validation analogue).
+//!
+//! Run: `cargo bench --bench table2_comparators`
+
+use flims::hw::{netlist, Design, ALL_DESIGNS};
+
+fn main() {
+    println!("== Table 2: comparing high-throughput 2-way mergers ==\n");
+    println!(
+        "{:<8} {:>14} {:>14} {:>20}  {:<40} {:<9} {:>10}",
+        "design", "feedback(w)", "latency(w)", "comparators(w)", "modules", "topology", "tie-record"
+    );
+    let fmt_fb = |d: Design| match d {
+        Design::Basic => "log2(w)+2",
+        Design::Pmt => "log2(w)+1",
+        _ => "1",
+    };
+    let fmt_lat = |d: Design| match d {
+        Design::Basic => "log2(w)+2",
+        Design::Pmt => "2log2(w)+1",
+        Design::Mms | Design::Vms => "2log2(w)+3",
+        Design::Wms | Design::Ehms => "log2(w)+3",
+        Design::Flims => "log2(w)+1",
+        Design::Flimsj => "log2(w)+2",
+    };
+    let fmt_cmp = |d: Design| match d {
+        Design::Basic => "w + w·lg(w)",
+        Design::Pmt => "w + ½w·lg(w)",
+        Design::Mms | Design::Vms => "2w + w·lg(w) + 1",
+        Design::Wms => "3w + ½w·lg(w)",
+        Design::Ehms => "2.5w + ½w·lg(w) + 2",
+        Design::Flims | Design::Flimsj => "w + ½w·lg(w)",
+    };
+    for d in ALL_DESIGNS {
+        println!(
+            "{:<8} {:>14} {:>14} {:>20}  {:<40} {:<9} {:>10}",
+            d.name(),
+            fmt_fb(d),
+            fmt_lat(d),
+            fmt_cmp(d),
+            d.modules(),
+            d.topology(),
+            if d.tie_record_unsafe() { "yes" } else { "no" }
+        );
+    }
+
+    println!("\n== Concrete comparator counts (netlist count == closed form) ==\n");
+    print!("{:<8}", "w");
+    for d in ALL_DESIGNS {
+        print!("{:>9}", d.name());
+    }
+    println!();
+    for wexp in 2..=9 {
+        let w = 1usize << wexp;
+        print!("{:<8}", w);
+        for d in ALL_DESIGNS {
+            let structural = netlist(d, w, 64).comparators();
+            let analytical = d.comparators(w);
+            assert_eq!(structural, analytical, "{} at w={w}", d.name());
+            print!("{:>9}", structural);
+        }
+        println!();
+    }
+    println!("\n(all structural counts verified against the Table 2 formulas)");
+
+    println!("\n== Latency in cycles ==\n");
+    print!("{:<8}", "w");
+    for d in ALL_DESIGNS {
+        print!("{:>9}", d.name());
+    }
+    println!();
+    for wexp in 2..=9 {
+        let w = 1usize << wexp;
+        print!("{:<8}", w);
+        for d in ALL_DESIGNS {
+            print!("{:>9}", d.latency(w));
+        }
+        println!();
+    }
+
+    // Headline check (the paper's claim): FLiMS minimises both columns.
+    for wexp in 2..=9 {
+        let w = 1usize << wexp;
+        assert!(ALL_DESIGNS
+            .iter()
+            .all(|d| d.comparators(w) >= Design::Flims.comparators(w)));
+        assert!(ALL_DESIGNS.iter().all(|d| d.latency(w) >= Design::Flims.latency(w)));
+    }
+    println!("\nheadline: FLiMS has the fewest comparators and least latency at every w [ok]");
+}

@@ -1,0 +1,85 @@
+//! Regenerates **Table 3** (LUT/FF as AXI peripherals, 64-bit) and
+//! **Fig. 12** (resource ratio over FLiMS) from the structural cost
+//! model, alongside the paper's Vivado numbers for comparison.
+//!
+//! Run: `cargo bench --bench table3_resources`
+
+use flims::hw::cost::{PAPER_EHMS_TABLE3, PAPER_FLIMS_TABLE3, PAPER_WMS_TABLE3};
+use flims::hw::{estimate, netlist, Design};
+
+fn main() {
+    let ws = [4usize, 8, 16, 32, 64, 128, 256, 512];
+    println!("== Table 3: resource utilisation (64-bit, modelled vs paper/Vivado) ==\n");
+    println!(
+        "{:<5} | {:>8} {:>8} | {:>8} {:>8} | {:>8} {:>8} | {:>8} {:>8}",
+        "w", "FLiMS kL", "kFF", "FLiMSj kL", "kFF", "WMS kL", "kFF", "EHMS kL", "kFF"
+    );
+    for w in ws {
+        let r = |d| estimate(&netlist(d, w, 64));
+        let (f, j, wm, eh) = (
+            r(Design::Flims),
+            r(Design::Flimsj),
+            r(Design::Wms),
+            r(Design::Ehms),
+        );
+        println!(
+            "{:<5} | {:>8.1} {:>8.1} | {:>9.1} {:>8.1} | {:>8.1} {:>8.1} | {:>8.1} {:>8.1}",
+            w,
+            f.kluts(),
+            f.kffs(),
+            j.kluts(),
+            j.kffs(),
+            wm.kluts(),
+            wm.kffs(),
+            eh.kluts(),
+            eh.kffs()
+        );
+    }
+
+    println!("\n-- paper (Vivado 2020.1, Alveo U280) for reference --");
+    println!("{:<5} | {:>8} {:>8} | {:>8} {:>8} | {:>8} {:>8}", "w", "FLiMS kL", "kFF", "WMS kL", "kFF", "EHMS kL", "kFF");
+    for i in 0..ws.len() {
+        let (w, fl, ff) = PAPER_FLIMS_TABLE3[i];
+        let (_, wl, wf) = PAPER_WMS_TABLE3[i];
+        let (_, el, ef) = PAPER_EHMS_TABLE3[i];
+        println!(
+            "{:<5} | {:>8.1} {:>8.1} | {:>8.1} {:>8.1} | {:>8.1} {:>8.1}",
+            w, fl, ff, wl, wf, el, ef
+        );
+    }
+
+    println!("\n== Fig. 12: resource ratio over FLiMS (modelled | paper) ==\n");
+    println!(
+        "{:<5} {:>12} {:>12} {:>12} {:>12}   {:>10} {:>10}",
+        "w", "WMS LUT x", "WMS FF x", "EHMS LUT x", "EHMS FF x", "paper WMS", "paper EHMS"
+    );
+    let mut max_err: f64 = 0.0;
+    for (i, &w) in ws.iter().enumerate() {
+        let f = estimate(&netlist(Design::Flims, w, 64));
+        let wm = estimate(&netlist(Design::Wms, w, 64));
+        let eh = estimate(&netlist(Design::Ehms, w, 64));
+        let (_, pfl, pff) = PAPER_FLIMS_TABLE3[i];
+        let (_, pwl, pwf) = PAPER_WMS_TABLE3[i];
+        let (_, pel, _pef) = PAPER_EHMS_TABLE3[i];
+        let model_wms_lut = wm.luts / f.luts;
+        let paper_wms_lut = pwl / pfl;
+        max_err = max_err.max((model_wms_lut - paper_wms_lut).abs() / paper_wms_lut);
+        println!(
+            "{:<5} {:>12.2} {:>12.2} {:>12.2} {:>12.2}   {:>10.2} {:>10.2}",
+            w,
+            model_wms_lut,
+            wm.ffs / f.ffs,
+            eh.luts / f.luts,
+            eh.ffs / f.ffs,
+            paper_wms_lut,
+            pel / pfl,
+        );
+        let _ = pff;
+        let _ = pwf;
+    }
+    println!(
+        "\nheadline: FLiMS is ~1.5-2x more resource-efficient than WMS/EHMS \
+         (worst model-vs-paper WMS-LUT-ratio error: {:.0}%)",
+        max_err * 100.0
+    );
+}

@@ -1,0 +1,131 @@
+//! The "basic" high-throughput merger (Table 2 row 1): the
+//! Chhugani-et-al / Casper-Olukotun loop built on a FULL 2w-to-2w
+//! bitonic merger (paper §2.2, fig. 4).
+//!
+//! Algorithm: hold a w-batch from each list; merge the two batches with
+//! the full bitonic merge network; the upper w goes to output, the lower
+//! w is fed back; a single comparison of the next batch heads decides
+//! which list refills. This is the design with the `log2(w)+2` feedback
+//! the FPGA line of work (and FLiMS) eliminates — kept here both as a
+//! software baseline and as the comparator-count reference.
+
+use crate::key::Item;
+
+/// Full bitonic merge of two descending w-batches: sorts the
+/// concatenation (a, reverse(b)) — a bitonic sequence — with the
+/// log2(2w)-stage network, descending.
+#[inline]
+fn bitonic_full_merge_desc<T: Item>(buf: &mut [T]) {
+    // buf holds [a (desc), b (asc = reversed desc)] of length 2w —
+    // bitonic; run the full butterfly over 2w.
+    crate::flims::butterfly::butterfly_desc(buf);
+}
+
+/// Merge two descending-sorted slices with the basic bitonic-merger loop.
+pub fn merge_basic_bitonic<T>(a: &[T], b: &[T], w: usize) -> Vec<T>
+where
+    T: Item<K = T> + crate::key::Key,
+{
+    assert!(w.is_power_of_two());
+    let total = a.len() + b.len();
+    let mut out = Vec::with_capacity(total + 2 * w);
+    if total == 0 {
+        return out;
+    }
+
+    let fetch_batch = |xs: &[T], start: usize, dst: &mut [T]| {
+        for (i, d) in dst.iter_mut().enumerate() {
+            *d = if start + i < xs.len() { xs[start + i] } else { T::SENTINEL };
+        }
+    };
+
+    // buf = [current merged lower half | incoming batch reversed]
+    let mut buf = vec![T::SENTINEL; 2 * w];
+
+    // Prime: first batch of A in the upper half (as descending), first
+    // batch of B reversed into the lower half.
+    fetch_batch(a, 0, &mut buf[..w]);
+    let mut pos_a = w.min(a.len());
+    let mut pos_b;
+    {
+        let mut tmp = vec![T::SENTINEL; w];
+        fetch_batch(b, 0, &mut tmp);
+        pos_b = w.min(b.len());
+        for i in 0..w {
+            buf[w + i] = tmp[w - 1 - i];
+        }
+    }
+
+    let steps = total.div_ceil(w);
+    for _ in 0..steps {
+        bitonic_full_merge_desc(&mut buf);
+        out.extend_from_slice(&buf[..w]);
+        // Lower w feeds back; refill upper from the list whose next head
+        // is larger (single comparison — fig. 4).
+        let head_a = if pos_a < a.len() { a[pos_a] } else { T::SENTINEL };
+        let head_b = if pos_b < b.len() { b[pos_b] } else { T::SENTINEL };
+        // Move lower half up, then place the reversed incoming batch low.
+        let lower: Vec<T> = buf[w..].to_vec();
+        buf[..w].copy_from_slice(&lower);
+        let mut tmp = vec![T::SENTINEL; w];
+        if head_a > head_b {
+            fetch_batch(a, pos_a, &mut tmp);
+            pos_a += w.min(a.len().saturating_sub(pos_a));
+        } else {
+            fetch_batch(b, pos_b, &mut tmp);
+            pos_b += w.min(b.len().saturating_sub(pos_b));
+        }
+        for i in 0..w {
+            buf[w + i] = tmp[w - 1 - i];
+        }
+    }
+    out.truncate(total);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_sorted_pair, gen_u32, Distribution};
+    use crate::util::rng::Rng;
+
+    fn oracle(a: &[u32], b: &[u32]) -> Vec<u32> {
+        let mut v: Vec<u32> = a.iter().chain(b.iter()).copied().collect();
+        v.sort_unstable_by(|x, y| y.cmp(x));
+        v
+    }
+
+    #[test]
+    fn matches_oracle() {
+        let mut rng = Rng::new(101);
+        for w in [2usize, 4, 8, 16, 32] {
+            for _ in 0..15 {
+                let (na, nb) = (rng.range(0, 300), rng.range(0, 300));
+                let (a, b) = gen_sorted_pair(&mut rng, na, nb, Distribution::Uniform, gen_u32);
+                let out = merge_basic_bitonic(&a, &b, w);
+                assert_eq!(out, oracle(&a, &b), "w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn duplicates() {
+        let mut rng = Rng::new(102);
+        let (a, b) = gen_sorted_pair(
+            &mut rng,
+            128,
+            128,
+            Distribution::DupHeavy { alphabet: 2 },
+            gen_u32,
+        );
+        assert_eq!(merge_basic_bitonic(&a, &b, 8), oracle(&a, &b));
+    }
+
+    #[test]
+    fn empty_and_one_sided() {
+        assert!(merge_basic_bitonic::<u32>(&[], &[], 4).is_empty());
+        let a: Vec<u32> = (0..50).rev().collect();
+        assert_eq!(merge_basic_bitonic(&a, &[], 8), a);
+        assert_eq!(merge_basic_bitonic(&[], &a, 8), a);
+    }
+}

@@ -1,0 +1,19 @@
+//! Baseline algorithms the paper benchmarks against (fig. 15 and the
+//! Table 2 "basic" merger):
+//!
+//! * [`stdsort`]  — `std::sort()` analogue (rust `slice::sort_unstable`).
+//! * [`radix`]    — LSD radix sort, the Intel IPP radix analogue.
+//! * [`samplesort`] — parallel samplesort, the Boost
+//!   `block_indirect_sort` analogue.
+//! * [`bitonic_merge`] — the Chhugani/Casper full-bitonic-merger loop
+//!   with the `log2(2w)`-stage feedback (Table 2 row "basic").
+
+pub mod bitonic_merge;
+pub mod radix;
+pub mod samplesort;
+pub mod stdsort;
+
+pub use bitonic_merge::merge_basic_bitonic;
+pub use radix::radix_sort_desc;
+pub use samplesort::samplesort_desc;
+pub use stdsort::{std_sort_desc, std_stable_sort_desc};

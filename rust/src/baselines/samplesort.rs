@@ -1,0 +1,96 @@
+//! Parallel samplesort — the Boost `block_indirect_sort` analogue of
+//! paper fig. 15 ("implements the samplesort sorting algorithm, regarded
+//! as one of the best performing C++ sort implementations").
+//!
+//! Classic structure: oversampled splitter selection, partition into
+//! `p` buckets, sort buckets in parallel, concatenate.
+
+use crate::util::rng::Rng;
+
+/// Descending parallel samplesort for u32 keys.
+pub fn samplesort_desc(x: &mut Vec<u32>, threads: usize) {
+    let n = x.len();
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    };
+    if n < 1 << 14 || threads == 1 {
+        x.sort_unstable_by(|a, b| b.cmp(a));
+        return;
+    }
+
+    let buckets = threads.next_power_of_two().min(64);
+    // Oversample: 32 samples per bucket.
+    let mut rng = Rng::new(0x5A5A);
+    let mut samples: Vec<u32> = (0..buckets * 32)
+        .map(|_| x[rng.below(n as u64) as usize])
+        .collect();
+    samples.sort_unstable_by(|a, b| b.cmp(a));
+    let splitters: Vec<u32> = (1..buckets).map(|i| samples[i * 32]).collect();
+
+    // Partition (descending buckets: bucket 0 holds the largest keys).
+    let mut parts: Vec<Vec<u32>> = (0..buckets).map(|_| Vec::new()).collect();
+    for &v in x.iter() {
+        // First splitter that v is greater-than determines the bucket.
+        let b = splitters.partition_point(|&s| s >= v);
+        parts[b].push(v);
+    }
+
+    // Sort buckets in parallel.
+    std::thread::scope(|s| {
+        for p in &mut parts {
+            s.spawn(|| p.sort_unstable_by(|a, b| b.cmp(a)));
+        }
+    });
+
+    x.clear();
+    for p in parts {
+        x.extend_from_slice(&p);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_u32, Distribution};
+    use crate::util::rng::Rng;
+
+    fn check(mut v: Vec<u32>, threads: usize) {
+        let mut expect = v.clone();
+        expect.sort_unstable_by(|a, b| b.cmp(a));
+        samplesort_desc(&mut v, threads);
+        assert_eq!(v, expect);
+    }
+
+    #[test]
+    fn sorts_large() {
+        let mut rng = Rng::new(91);
+        check(gen_u32(&mut rng, 100_000, Distribution::Uniform), 4);
+    }
+
+    #[test]
+    fn sorts_small_fallback() {
+        let mut rng = Rng::new(92);
+        check(gen_u32(&mut rng, 100, Distribution::Uniform), 4);
+    }
+
+    #[test]
+    fn skewed_buckets_still_correct() {
+        let mut rng = Rng::new(93);
+        check(gen_u32(&mut rng, 80_000, Distribution::DupHeavy { alphabet: 3 }), 4);
+        check(
+            gen_u32(&mut rng, 80_000, Distribution::Zipf { s_x100: 150, n_ranks: 100 }),
+            4,
+        );
+    }
+
+    #[test]
+    fn thread_counts() {
+        let mut rng = Rng::new(94);
+        let v = gen_u32(&mut rng, 60_000, Distribution::Uniform);
+        for t in [1usize, 2, 5, 16] {
+            check(v.clone(), t);
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! Standard-library sort wrappers — the `std::sort()` baseline of paper
+//! fig. 15 (rust's `sort_unstable` is the idiomatic equivalent: an
+//! introsort-family pattern-defeating quicksort).
+
+use crate::key::Item;
+
+/// Descending unstable sort via the standard library.
+pub fn std_sort_desc<T: Item>(x: &mut [T]) {
+    x.sort_unstable_by(|a, b| b.key().cmp(&a.key()));
+}
+
+/// Descending stable sort via the standard library (timsort-family).
+pub fn std_stable_sort_desc<T: Item>(x: &mut [T]) {
+    x.sort_by(|a, b| b.key().cmp(&a.key()));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::key::{is_sorted_desc, Kv};
+
+    #[test]
+    fn sorts() {
+        let mut v = vec![3u32, 9, 1];
+        std_sort_desc(&mut v);
+        assert_eq!(v, vec![9, 3, 1]);
+    }
+
+    #[test]
+    fn stable_keeps_payload_order() {
+        let mut v = vec![Kv::new(5, 0), Kv::new(5, 1), Kv::new(7, 2)];
+        std_stable_sort_desc(&mut v);
+        assert_eq!(v, vec![Kv::new(7, 2), Kv::new(5, 0), Kv::new(5, 1)]);
+        assert!(is_sorted_desc(&v));
+    }
+}

@@ -1,0 +1,240 @@
+//! Configuration system: a TOML-subset file format plus CLI overrides.
+//! (The full `toml`/`serde` crates are unavailable offline; this parser
+//! covers the subset the framework uses: `[section]` headers, `key =
+//! value` with integers, booleans and strings.)
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Parsed configuration: section → key → raw value string.
+#[derive(Clone, Debug, Default)]
+pub struct RawConfig {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl RawConfig {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut cfg = RawConfig::default();
+        let mut section = String::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", ln + 1))?;
+            let v = v.trim().trim_matches('"').to_string();
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), v);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn set(&mut self, section: &str, key: &str, value: &str) {
+        self.sections
+            .entry(section.to_string())
+            .or_default()
+            .insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Result<Option<usize>, String> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("{section}.{key}: '{v}' is not an integer")),
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Result<Option<bool>, String> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some("true") => Ok(Some(true)),
+            Some("false") => Ok(Some(false)),
+            Some(v) => Err(format!("{section}.{key}: '{v}' is not a bool")),
+        }
+    }
+}
+
+/// Top-level framework configuration with defaults, file and CLI layers.
+#[derive(Clone, Debug)]
+pub struct AppConfig {
+    /// merge-lane parallelism (paper `w`)
+    pub w: usize,
+    /// sort-in-chunks run length (paper §8.2)
+    pub chunk: usize,
+    /// worker threads (0 = auto)
+    pub threads: usize,
+    /// AOT artifact directory for the PJRT runtime
+    pub artifacts_dir: String,
+    /// hardware-sim FIFO depth per bank
+    pub fifo_depth: usize,
+    /// service bind address
+    pub bind: String,
+    /// dynamic-batcher max batch
+    pub batch_max: usize,
+    /// dynamic-batcher window in microseconds
+    pub batch_window_us: u64,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        AppConfig {
+            w: 16,
+            chunk: 128,
+            threads: 0,
+            artifacts_dir: "artifacts".into(),
+            fifo_depth: 2,
+            bind: "127.0.0.1:7171".into(),
+            batch_max: 8,
+            batch_window_us: 500,
+        }
+    }
+}
+
+impl AppConfig {
+    /// Layer a RawConfig (file) over the defaults.
+    pub fn apply(&mut self, raw: &RawConfig) -> Result<(), String> {
+        if let Some(v) = raw.get_usize("engine", "w")? {
+            self.w = v;
+        }
+        if let Some(v) = raw.get_usize("engine", "chunk")? {
+            self.chunk = v;
+        }
+        if let Some(v) = raw.get_usize("engine", "threads")? {
+            self.threads = v;
+        }
+        if let Some(v) = raw.get("runtime", "artifacts_dir") {
+            self.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = raw.get_usize("hw", "fifo_depth")? {
+            self.fifo_depth = v;
+        }
+        if let Some(v) = raw.get("service", "bind") {
+            self.bind = v.to_string();
+        }
+        if let Some(v) = raw.get_usize("service", "batch_max")? {
+            self.batch_max = v;
+        }
+        if let Some(v) = raw.get_usize("service", "batch_window_us")? {
+            self.batch_window_us = v as u64;
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.w.is_power_of_two() {
+            return Err(format!("engine.w = {} must be a power of two", self.w));
+        }
+        if !self.chunk.is_power_of_two() || self.chunk < self.w {
+            return Err(format!(
+                "engine.chunk = {} must be a power of two >= w",
+                self.chunk
+            ));
+        }
+        if self.batch_max == 0 {
+            return Err("service.batch_max must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# engine tuning
+[engine]
+w = 32
+chunk = 256
+threads = 4
+
+[runtime]
+artifacts_dir = "custom/artifacts"
+
+[service]
+bind = "0.0.0.0:9999"
+batch_max = 16
+"#;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let raw = RawConfig::parse(SAMPLE).unwrap();
+        assert_eq!(raw.get("engine", "w"), Some("32"));
+        assert_eq!(raw.get("runtime", "artifacts_dir"), Some("custom/artifacts"));
+        assert_eq!(raw.get("service", "bind"), Some("0.0.0.0:9999"));
+        assert_eq!(raw.get("nope", "x"), None);
+    }
+
+    #[test]
+    fn applies_over_defaults() {
+        let raw = RawConfig::parse(SAMPLE).unwrap();
+        let mut cfg = AppConfig::default();
+        cfg.apply(&raw).unwrap();
+        assert_eq!(cfg.w, 32);
+        assert_eq!(cfg.chunk, 256);
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.batch_max, 16);
+        assert_eq!(cfg.fifo_depth, 2); // untouched default
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let raw = RawConfig::parse("[engine]\nw = 3\n").unwrap();
+        let mut cfg = AppConfig::default();
+        assert!(cfg.apply(&raw).is_err());
+
+        let raw = RawConfig::parse("[engine]\nw = banana\n").unwrap();
+        let mut cfg = AppConfig::default();
+        assert!(cfg.apply(&raw).is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let raw = RawConfig::parse("# hi\n\n[a]\nx = 1 # trailing\n").unwrap();
+        assert_eq!(raw.get("a", "x"), Some("1"));
+    }
+
+    #[test]
+    fn malformed_line_errors() {
+        assert!(RawConfig::parse("[a]\nnot-a-kv\n").is_err());
+    }
+
+    #[test]
+    fn bools_parse() {
+        let raw = RawConfig::parse("[x]\na = true\nb = false\n").unwrap();
+        assert_eq!(raw.get_bool("x", "a").unwrap(), Some(true));
+        assert_eq!(raw.get_bool("x", "b").unwrap(), Some(false));
+        assert!(RawConfig::parse("[x]\na = maybe\n")
+            .unwrap()
+            .get_bool("x", "a")
+            .is_err());
+    }
+
+    #[test]
+    fn chunk_must_cover_w() {
+        let raw = RawConfig::parse("[engine]\nw = 64\nchunk = 32\n").unwrap();
+        let mut cfg = AppConfig::default();
+        assert!(cfg.apply(&raw).is_err());
+    }
+}

@@ -1,0 +1,189 @@
+//! Dynamic batcher: coalesces concurrent same-shape sort requests into
+//! one batched execution (the `batched_sort` artifact on PJRT, or a
+//! parallel native pass), amortising dispatch overhead — the same
+//! window/max-batch policy a serving router applies to model calls.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::router::{Backend, Router};
+use crate::metrics::ServiceMetrics;
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// flush when this many requests are queued
+    pub max_batch: usize,
+    /// or when the oldest request has waited this long
+    pub window: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, window: Duration::from_micros(500) }
+    }
+}
+
+struct Pending {
+    data: Vec<f32>,
+    reply: mpsc::Sender<anyhow::Result<Vec<f32>>>,
+    enqueued: Instant,
+}
+
+/// A synchronous dynamic batcher. `submit` blocks until the request's
+/// batch executes (in the caller that triggers the flush, or a later
+/// one). A background flusher is intentionally avoided: with a
+/// single-threaded driver the window check happens on each submit; the
+/// service layer calls `flush_if_due` from its accept loop as the timer.
+pub struct Batcher {
+    router: Arc<Router>,
+    cfg: BatcherConfig,
+    queue: Mutex<Vec<Pending>>,
+    pub metrics: Arc<ServiceMetrics>,
+}
+
+impl Batcher {
+    pub fn new(router: Arc<Router>, cfg: BatcherConfig) -> Self {
+        let metrics = router.metrics.clone();
+        Batcher { router, cfg, queue: Mutex::new(Vec::new()), metrics }
+    }
+
+    /// Enqueue a sort request; returns a receiver for its result.
+    pub fn submit(&self, data: Vec<f32>) -> mpsc::Receiver<anyhow::Result<Vec<f32>>> {
+        let (tx, rx) = mpsc::channel();
+        let flush_now = {
+            let mut q = self.queue.lock().unwrap();
+            q.push(Pending { data, reply: tx, enqueued: Instant::now() });
+            q.len() >= self.cfg.max_batch
+        };
+        if flush_now {
+            self.flush();
+        }
+        rx
+    }
+
+    /// Flush if the oldest request exceeded the window.
+    pub fn flush_if_due(&self) {
+        let due = {
+            let q = self.queue.lock().unwrap();
+            q.first().map(|p| p.enqueued.elapsed() >= self.cfg.window).unwrap_or(false)
+        };
+        if due {
+            self.flush();
+        }
+    }
+
+    /// Execute everything queued as one batch.
+    pub fn flush(&self) {
+        let batch: Vec<Pending> = {
+            let mut q = self.queue.lock().unwrap();
+            std::mem::take(&mut *q)
+        };
+        if batch.is_empty() {
+            return;
+        }
+        self.metrics.batches.inc();
+
+        // Try the PJRT batched artifact when every request fits one
+        // shape; otherwise execute individually on the native engine.
+        let use_pjrt_batch = self.router.has_pjrt() && batch.len() >= 2;
+        if use_pjrt_batch {
+            if let Some(rt) = self.router.runtime() {
+                let spec = rt.specs().ok().and_then(|specs| {
+                    specs.into_iter().find(|s| {
+                        s.kind == crate::runtime::ArtifactKind::BatchedSort
+                            && s.batch >= batch.len()
+                            && batch.iter().all(|p| p.data.len() <= s.n)
+                    })
+                });
+                if let Some(spec) = spec {
+                    let rows: Vec<Vec<f32>> = (0..spec.batch)
+                        .map(|i| {
+                            let mut row = batch
+                                .get(i)
+                                .map(|p| p.data.clone())
+                                .unwrap_or_default();
+                            row.resize(spec.n, f32::NEG_INFINITY);
+                            row
+                        })
+                        .collect();
+                    match rt.batched_sort(&spec.name, rows) {
+                        Ok(sorted) => {
+                            for (i, p) in batch.into_iter().enumerate() {
+                                let mut row = sorted[i].clone();
+                                row.truncate(p.data.len());
+                                let _ = p.reply.send(Ok(row));
+                            }
+                            return;
+                        }
+                        Err(e) => {
+                            // fall through to per-request native path
+                            eprintln!("batched pjrt execution failed: {e:#}");
+                        }
+                    }
+                }
+            }
+        }
+        for p in batch {
+            let out = self.router.sort_f32(p.data, Backend::Native);
+            let _ = p.reply.send(out);
+        }
+    }
+
+    /// Queued depth (observability).
+    pub fn depth(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AppConfig;
+
+    fn mk() -> Batcher {
+        let router = Arc::new(Router::new(AppConfig::default(), None));
+        Batcher::new(router, BatcherConfig { max_batch: 3, window: Duration::from_millis(5) })
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let b = mk();
+        let r1 = b.submit(vec![3.0, 1.0, 2.0]);
+        let r2 = b.submit(vec![5.0, 4.0]);
+        assert_eq!(b.depth(), 2);
+        let r3 = b.submit(vec![9.0]); // hits max_batch=3 → flush
+        assert_eq!(b.depth(), 0);
+        assert_eq!(r1.recv().unwrap().unwrap(), vec![3.0, 2.0, 1.0]);
+        assert_eq!(r2.recv().unwrap().unwrap(), vec![5.0, 4.0]);
+        assert_eq!(r3.recv().unwrap().unwrap(), vec![9.0]);
+        assert_eq!(b.metrics.batches.get(), 1);
+    }
+
+    #[test]
+    fn window_flush() {
+        let b = mk();
+        let r1 = b.submit(vec![2.0, 7.0]);
+        std::thread::sleep(Duration::from_millis(10));
+        b.flush_if_due();
+        assert_eq!(r1.recv().unwrap().unwrap(), vec![7.0, 2.0]);
+    }
+
+    #[test]
+    fn flush_if_not_due_keeps_queue() {
+        let b = mk();
+        let _r = b.submit(vec![1.0]);
+        b.flush_if_due(); // window is 5ms; not due yet
+        assert_eq!(b.depth(), 1);
+        b.flush();
+        assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn empty_flush_is_noop() {
+        let b = mk();
+        b.flush();
+        assert_eq!(b.metrics.batches.get(), 0);
+    }
+}

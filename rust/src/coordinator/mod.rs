@@ -1,0 +1,18 @@
+//! Layer-3 coordinator: sorting-as-a-service.
+//!
+//! * [`router`] — backend dispatch: every request routes to the native
+//!   rust engine (FLiMS sort / merge / parallel sort) or to the PJRT
+//!   runtime executing the AOT Pallas artifacts.
+//! * [`batcher`] — dynamic batching: concurrent sort requests of the
+//!   same shape coalesce into one `batched_sort` artifact execution
+//!   (vLLM-router-style window + max-batch policy).
+//! * [`service`] — a TCP front end with a line-oriented protocol, one
+//!   worker thread per connection, shared metrics.
+
+pub mod batcher;
+pub mod router;
+pub mod service;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use router::{Backend, Router};
+pub use service::Service;

@@ -1,0 +1,233 @@
+//! Request router: picks an execution backend per request.
+//!
+//! Native = the rust FLiMS engine (always available, any length).
+//! Pjrt = the AOT-compiled Pallas/JAX artifacts (f32, artifact shapes,
+//! padded as needed) — the path that proves the three-layer stack
+//! composes, with Python absent at request time.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::AppConfig;
+use crate::flims::parallel::{par_sort_desc, ParSortConfig};
+use crate::flims::sort::{sort_desc, SortConfig};
+use crate::flims::lanes::merge_desc_fast;
+use crate::key::F32Key;
+use crate::metrics::ServiceMetrics;
+use crate::runtime::RuntimeHandle;
+
+/// Execution backend for a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Native,
+    NativeParallel,
+    Pjrt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "native" => Backend::Native,
+            "parallel" => Backend::NativeParallel,
+            "pjrt" => Backend::Pjrt,
+            other => return Err(anyhow!("unknown backend '{other}'")),
+        })
+    }
+}
+
+/// The router owns the engines and the metrics.
+pub struct Router {
+    cfg: AppConfig,
+    runtime: Option<RuntimeHandle>,
+    pub metrics: Arc<ServiceMetrics>,
+}
+
+impl Router {
+    pub fn new(cfg: AppConfig, runtime: Option<RuntimeHandle>) -> Self {
+        Router { cfg, runtime, metrics: Arc::new(ServiceMetrics::default()) }
+    }
+
+    pub fn has_pjrt(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    pub fn runtime(&self) -> Option<&RuntimeHandle> {
+        self.runtime.as_ref()
+    }
+
+    fn sort_cfg(&self) -> SortConfig {
+        SortConfig { w: self.cfg.w, chunk: self.cfg.chunk }
+    }
+
+    /// Sort u32 keys descending on the requested backend.
+    pub fn sort_u32(&self, mut data: Vec<u32>, backend: Backend) -> Result<Vec<u32>> {
+        self.metrics.requests.inc();
+        self.metrics.elements_sorted.add(data.len() as u64);
+        let t = std::time::Instant::now();
+        let out = match backend {
+            Backend::Native => {
+                sort_desc(&mut data, self.sort_cfg());
+                data
+            }
+            Backend::NativeParallel => {
+                par_sort_desc(
+                    &mut data,
+                    ParSortConfig {
+                        base: self.sort_cfg(),
+                        threads: self.cfg.threads,
+                        ..Default::default()
+                    },
+                );
+                data
+            }
+            Backend::Pjrt => {
+                // u32 → order-preserving f32 is lossy; route u32 through
+                // the native engine and reserve PJRT for f32 payloads.
+                return Err(anyhow!("pjrt backend sorts f32 only (use 'sortf')"));
+            }
+        };
+        self.metrics.latency.observe(t.elapsed());
+        Ok(out)
+    }
+
+    /// Sort f32 values descending on the requested backend.
+    pub fn sort_f32(&self, data: Vec<f32>, backend: Backend) -> Result<Vec<f32>> {
+        self.metrics.requests.inc();
+        self.metrics.elements_sorted.add(data.len() as u64);
+        let t = std::time::Instant::now();
+        let out = match backend {
+            Backend::Native | Backend::NativeParallel => {
+                let mut keys: Vec<F32Key> = data.iter().map(|&x| F32Key::from_f32(x)).collect();
+                if backend == Backend::NativeParallel {
+                    par_sort_desc(
+                        &mut keys,
+                        ParSortConfig {
+                            base: self.sort_cfg(),
+                            threads: self.cfg.threads,
+                            ..Default::default()
+                        },
+                    );
+                } else {
+                    sort_desc(&mut keys, self.sort_cfg());
+                }
+                keys.into_iter().map(|k| k.to_f32()).collect()
+            }
+            Backend::Pjrt => {
+                let rt = self
+                    .runtime
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("pjrt runtime not loaded (run `make artifacts`)"))?;
+                rt.sort_padded(data.clone())?
+            }
+        };
+        self.metrics.latency.observe(t.elapsed());
+        Ok(out)
+    }
+
+    /// Merge two descending-sorted u32 lists (native FLiMS lanes).
+    pub fn merge_u32(&self, a: &[u32], b: &[u32]) -> Vec<u32> {
+        self.metrics.requests.inc();
+        self.metrics.elements_sorted.add((a.len() + b.len()) as u64);
+        let mut out = Vec::with_capacity(a.len() + b.len());
+        merge_desc_fast(a, b, self.cfg.w, &mut out);
+        out
+    }
+
+    /// Merge two descending-sorted f32 lists via the PJRT merge2
+    /// artifact (padded), falling back to native when absent.
+    pub fn merge_f32(&self, a: &[f32], b: &[f32], backend: Backend) -> Result<Vec<f32>> {
+        self.metrics.requests.inc();
+        match backend {
+            Backend::Pjrt => {
+                let rt = self
+                    .runtime
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("pjrt runtime not loaded"))?;
+                let spec = rt
+                    .best_for(crate::runtime::ArtifactKind::Merge2, a.len().max(b.len()))?
+                    .ok_or_else(|| anyhow!("no merge2 artifact fits {}", a.len().max(b.len())))?;
+                let pad = |v: &[f32]| {
+                    let mut p = v.to_vec();
+                    p.resize(spec.n, f32::NEG_INFINITY);
+                    p
+                };
+                let mut out = rt.merge2(&spec.name, pad(a), pad(b))?;
+                out.truncate(a.len() + b.len());
+                Ok(out)
+            }
+            _ => {
+                let ka: Vec<F32Key> = a.iter().map(|&x| F32Key::from_f32(x)).collect();
+                let kb: Vec<F32Key> = b.iter().map(|&x| F32Key::from_f32(x)).collect();
+                let mut out = Vec::with_capacity(ka.len() + kb.len());
+                merge_desc_fast(&ka, &kb, self.cfg.w, &mut out);
+                Ok(out.into_iter().map(|k| k.to_f32()).collect())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_u32, Distribution};
+    use crate::util::rng::Rng;
+
+    fn router() -> Router {
+        Router::new(AppConfig::default(), None)
+    }
+
+    #[test]
+    fn native_sort_u32() {
+        let mut rng = Rng::new(301);
+        let v = gen_u32(&mut rng, 5000, Distribution::Uniform);
+        let mut expect = v.clone();
+        expect.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(router().sort_u32(v, Backend::Native).unwrap(), expect);
+    }
+
+    #[test]
+    fn parallel_sort_u32() {
+        let mut rng = Rng::new(302);
+        let v = gen_u32(&mut rng, 100_000, Distribution::Uniform);
+        let mut expect = v.clone();
+        expect.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(router().sort_u32(v, Backend::NativeParallel).unwrap(), expect);
+    }
+
+    #[test]
+    fn native_sort_f32_handles_negatives() {
+        let v = vec![1.5f32, -2.0, 0.0, -0.5, 3.25, f32::NEG_INFINITY];
+        let out = router().sort_f32(v, Backend::Native).unwrap();
+        assert_eq!(out, vec![3.25, 1.5, 0.0, -0.5, -2.0, f32::NEG_INFINITY]);
+    }
+
+    #[test]
+    fn merge_u32_works() {
+        let out = router().merge_u32(&[9, 5, 1], &[7, 3]);
+        assert_eq!(out, vec![9, 7, 5, 3, 1]);
+    }
+
+    #[test]
+    fn pjrt_without_runtime_errors() {
+        assert!(router().sort_f32(vec![1.0], Backend::Pjrt).is_err());
+        assert!(router().sort_u32(vec![1], Backend::Pjrt).is_err());
+    }
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!(Backend::parse("native").unwrap(), Backend::Native);
+        assert_eq!(Backend::parse("parallel").unwrap(), Backend::NativeParallel);
+        assert_eq!(Backend::parse("pjrt").unwrap(), Backend::Pjrt);
+        assert!(Backend::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn metrics_count_requests() {
+        let r = router();
+        let _ = r.sort_u32(vec![3, 1, 2], Backend::Native);
+        let _ = r.merge_u32(&[2], &[1]);
+        assert_eq!(r.metrics.requests.get(), 2);
+        assert_eq!(r.metrics.elements_sorted.get(), 5);
+    }
+}

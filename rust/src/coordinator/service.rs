@@ -1,0 +1,255 @@
+//! TCP service front end: a line-oriented protocol over the router and
+//! batcher. One worker thread per connection; a timer thread drives the
+//! batching window.
+//!
+//! Protocol (request → response, all one-line, values space-separated):
+//!
+//! ```text
+//! sort  <backend> <v1> <v2> …   →  ok <sorted descending>
+//! sortf <backend> <f1> <f2> …   →  ok <sorted descending>   (f32)
+//! batch <f1> <f2> …             →  ok <sorted>  (goes through the batcher)
+//! merge <a...> | <b...>         →  ok <merged>  (desc-sorted u32 inputs)
+//! stats                         →  ok <metrics summary>
+//! quit                          →  (closes the connection)
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::batcher::{Batcher, BatcherConfig};
+use crate::coordinator::router::{Backend, Router};
+
+pub struct Service {
+    pub router: Arc<Router>,
+    pub batcher: Arc<Batcher>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Service {
+    pub fn new(router: Arc<Router>, bcfg: BatcherConfig) -> Self {
+        let batcher = Arc::new(Batcher::new(router.clone(), bcfg));
+        Service { router, batcher, stop: Arc::new(AtomicBool::new(false)) }
+    }
+
+    /// Handle one protocol line (exposed for unit tests — the network
+    /// layer is a thin shell over this).
+    pub fn handle_line(&self, line: &str) -> Result<String> {
+        let line = line.trim();
+        let (cmd, rest) = line.split_once(' ').unwrap_or((line, ""));
+        match cmd {
+            "sort" => {
+                let (backend, nums) = rest
+                    .split_once(' ')
+                    .ok_or_else(|| anyhow!("usage: sort <backend> <values…>"))?;
+                let backend = Backend::parse(backend)?;
+                let data: Vec<u32> = parse_nums(nums)?;
+                let out = self.router.sort_u32(data, backend)?;
+                Ok(format!("ok {}", join(&out)))
+            }
+            "sortf" => {
+                let (backend, nums) = rest
+                    .split_once(' ')
+                    .ok_or_else(|| anyhow!("usage: sortf <backend> <values…>"))?;
+                let backend = Backend::parse(backend)?;
+                let data: Vec<f32> = parse_nums(nums)?;
+                let out = self.router.sort_f32(data, backend)?;
+                Ok(format!("ok {}", join(&out)))
+            }
+            "batch" => {
+                let data: Vec<f32> = parse_nums(rest)?;
+                let rx = self.batcher.submit(data);
+                // Ensure progress even if the batch never fills.
+                self.batcher.flush_if_due();
+                let out = match rx.recv_timeout(Duration::from_secs(30)) {
+                    Ok(r) => r?,
+                    Err(_) => {
+                        self.batcher.flush();
+                        rx.recv().map_err(|e| anyhow!("batch dropped: {e}"))??
+                    }
+                };
+                Ok(format!("ok {}", join(&out)))
+            }
+            "merge" => {
+                let (a, b) = rest
+                    .split_once('|')
+                    .ok_or_else(|| anyhow!("usage: merge <a…> | <b…>"))?;
+                let a: Vec<u32> = parse_nums(a.trim())?;
+                let b: Vec<u32> = parse_nums(b.trim())?;
+                let out = self.router.merge_u32(&a, &b);
+                Ok(format!("ok {}", join(&out)))
+            }
+            "stats" => Ok(format!("ok {}", self.router.metrics.report())),
+            "quit" => Ok("bye".into()),
+            other => Err(anyhow!("unknown command '{other}'")),
+        }
+    }
+
+    /// Serve forever on `bind` (blocking). A background timer thread
+    /// drives `flush_if_due` so the batching window is honoured even
+    /// while connections idle.
+    pub fn serve(self: &Arc<Self>, bind: &str) -> Result<()> {
+        let listener = TcpListener::bind(bind)?;
+        eprintln!("flims service listening on {bind}");
+        {
+            let svc = self.clone();
+            std::thread::spawn(move || loop {
+                if svc.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                svc.batcher.flush_if_due();
+                std::thread::sleep(Duration::from_micros(200));
+            });
+        }
+        for stream in listener.incoming() {
+            if self.stop.load(Ordering::Relaxed) {
+                break;
+            }
+            match stream {
+                Ok(s) => {
+                    let svc = self.clone();
+                    std::thread::spawn(move || svc.handle_conn(s));
+                }
+                Err(e) => eprintln!("accept error: {e}"),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+
+    fn handle_conn(&self, stream: TcpStream) {
+        let peer = stream.peer_addr().ok();
+        let mut writer = match stream.try_clone() {
+            Ok(w) => w,
+            Err(_) => return,
+        };
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            let line = match line {
+                Ok(l) => l,
+                Err(_) => break,
+            };
+            if line.trim() == "quit" {
+                let _ = writeln!(writer, "bye");
+                break;
+            }
+            let resp = match self.handle_line(&line) {
+                Ok(r) => r,
+                Err(e) => {
+                    self.router.metrics.errors.inc();
+                    format!("err {e:#}")
+                }
+            };
+            if writeln!(writer, "{resp}").is_err() {
+                break;
+            }
+        }
+        let _ = peer;
+    }
+}
+
+fn parse_nums<T: std::str::FromStr>(s: &str) -> Result<Vec<T>> {
+    s.split_whitespace()
+        .map(|t| t.parse::<T>().map_err(|_| anyhow!("bad number '{t}'")))
+        .collect()
+}
+
+fn join<T: std::fmt::Display>(v: &[T]) -> String {
+    v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AppConfig;
+
+    fn svc() -> Service {
+        let router = Arc::new(Router::new(AppConfig::default(), None));
+        Service::new(router, BatcherConfig { max_batch: 2, window: Duration::from_micros(1) })
+    }
+
+    #[test]
+    fn sort_command() {
+        let s = svc();
+        assert_eq!(s.handle_line("sort native 3 1 2").unwrap(), "ok 3 2 1");
+    }
+
+    #[test]
+    fn sortf_command() {
+        let s = svc();
+        assert_eq!(
+            s.handle_line("sortf native 1.5 -2 0").unwrap(),
+            "ok 1.5 0 -2"
+        );
+    }
+
+    #[test]
+    fn merge_command() {
+        let s = svc();
+        assert_eq!(s.handle_line("merge 9 5 | 7 3").unwrap(), "ok 9 7 5 3");
+    }
+
+    #[test]
+    fn batch_command_completes_via_window() {
+        let s = svc();
+        // Single request: window flush path must answer it.
+        assert_eq!(s.handle_line("batch 4 8 6").unwrap(), "ok 8 6 4");
+    }
+
+    #[test]
+    fn stats_command() {
+        let s = svc();
+        let _ = s.handle_line("sort native 2 1");
+        let out = s.handle_line("stats").unwrap();
+        assert!(out.starts_with("ok requests="));
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        let s = svc();
+        assert!(s.handle_line("sort martian 1 2").is_err());
+        assert!(s.handle_line("frobnicate").is_err());
+        assert!(s.handle_line("sort native 1 banana").is_err());
+        assert!(s.handle_line("merge 1 2 3").is_err()); // no separator
+    }
+
+    #[test]
+    fn tcp_round_trip() {
+        use std::io::{BufRead, BufReader, Write};
+        let router = Arc::new(Router::new(AppConfig::default(), None));
+        let service = Arc::new(Service::new(
+            router,
+            BatcherConfig { max_batch: 4, window: Duration::from_micros(100) },
+        ));
+        // Bind on an ephemeral port, then serve in the background.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        drop(listener);
+        let svc2 = service.clone();
+        let bind = addr.to_string();
+        let handle = std::thread::spawn(move || {
+            let _ = svc2.serve(&bind);
+        });
+        std::thread::sleep(Duration::from_millis(50));
+
+        let mut conn = TcpStream::connect(addr).unwrap();
+        writeln!(conn, "sort native 5 9 1").unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "ok 9 5 1");
+
+        writeln!(conn, "quit").unwrap();
+        service.shutdown();
+        // Poke the accept loop so it notices the stop flag.
+        let _ = TcpStream::connect(addr);
+        let _ = handle.join();
+    }
+}

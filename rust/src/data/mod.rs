@@ -1,0 +1,233 @@
+//! Workload generators for every experiment in the paper's evaluation.
+//!
+//! The paper's workloads: uniform random integers (figs. 14–15), skewed /
+//! duplicate-heavy data (§4.1), key-value records with duplicate keys
+//! (§6 tie-record), and pre-sorted sublists feeding the mergers. All
+//! generators are deterministic in the seed.
+
+use crate::key::{Item, Kv};
+use crate::util::rng::Rng;
+
+/// Data distribution shapes used across benches and tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Distribution {
+    /// Uniform random over the full key range (paper's default).
+    Uniform,
+    /// Small alphabet — duplicate-heavy, the §4.1 skew stressor.
+    DupHeavy { alphabet: u32 },
+    /// Zipf-ish: rank-skewed draws, the classic database skew model.
+    Zipf { s_x100: u32, n_ranks: u32 },
+    /// Already sorted ascending (adversarial for descending mergers).
+    SortedAsc,
+    /// Already sorted descending (best case).
+    SortedDesc,
+    /// Sawtooth runs of the given length.
+    Runs { run: u32 },
+    /// All elements equal — the degenerate skew extreme.
+    Constant,
+}
+
+impl Distribution {
+    pub fn name(&self) -> String {
+        match self {
+            Distribution::Uniform => "uniform".into(),
+            Distribution::DupHeavy { alphabet } => format!("dup{alphabet}"),
+            Distribution::Zipf { s_x100, n_ranks } => {
+                format!("zipf{}_{}", s_x100, n_ranks)
+            }
+            Distribution::SortedAsc => "sorted_asc".into(),
+            Distribution::SortedDesc => "sorted_desc".into(),
+            Distribution::Runs { run } => format!("runs{run}"),
+            Distribution::Constant => "constant".into(),
+        }
+    }
+}
+
+/// Generate `n` u32 keys from the distribution.
+pub fn gen_u32(rng: &mut Rng, n: usize, dist: Distribution) -> Vec<u32> {
+    match dist {
+        Distribution::Uniform => (0..n).map(|_| rng.next_u32()).collect(),
+        Distribution::DupHeavy { alphabet } => {
+            (0..n).map(|_| rng.below(alphabet as u64) as u32).collect()
+        }
+        Distribution::Zipf { s_x100, n_ranks } => {
+            let zipf = ZipfSampler::new(n_ranks as usize, s_x100 as f64 / 100.0);
+            (0..n).map(|_| zipf.sample(rng)).collect()
+        }
+        Distribution::SortedAsc => {
+            let mut v: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+            v.sort_unstable();
+            v
+        }
+        Distribution::SortedDesc => {
+            let mut v: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+            v.sort_unstable_by(|a, b| b.cmp(a));
+            v
+        }
+        Distribution::Runs { run } => {
+            let mut v = Vec::with_capacity(n);
+            while v.len() < n {
+                let len = (run as usize).min(n - v.len());
+                let mut chunk: Vec<u32> = (0..len).map(|_| rng.next_u32()).collect();
+                chunk.sort_unstable_by(|a, b| b.cmp(a));
+                v.extend(chunk);
+            }
+            v
+        }
+        Distribution::Constant => vec![0xC0FFEE; n],
+    }
+}
+
+/// Generate `n` u64 keys (uniform only needs widening; others map through
+/// the u32 generator to keep distributions identical across widths).
+pub fn gen_u64(rng: &mut Rng, n: usize, dist: Distribution) -> Vec<u64> {
+    match dist {
+        Distribution::Uniform => (0..n).map(|_| rng.next_u64()).collect(),
+        _ => gen_u32(rng, n, dist).into_iter().map(u64::from).collect(),
+    }
+}
+
+/// Key-value records with payload = original index, so payload integrity
+/// and stable order are checkable after any merge/sort.
+pub fn gen_kv(rng: &mut Rng, n: usize, dist: Distribution) -> Vec<Kv> {
+    gen_u32(rng, n, dist)
+        .into_iter()
+        .enumerate()
+        .map(|(i, key)| Kv::new(key, i as u32))
+        .collect()
+}
+
+/// A pair of descending-sorted lists for 2-way merger inputs.
+pub fn gen_sorted_pair<T, F>(rng: &mut Rng, n_a: usize, n_b: usize, dist: Distribution, gen: F) -> (Vec<T>, Vec<T>)
+where
+    T: Item,
+    F: Fn(&mut Rng, usize, Distribution) -> Vec<T>,
+{
+    let mut a = gen(rng, n_a, dist);
+    let mut b = gen(rng, n_b, dist);
+    sort_desc(&mut a);
+    sort_desc(&mut b);
+    (a, b)
+}
+
+/// `k` descending-sorted lists (merge-tree leaves).
+pub fn gen_sorted_lists(rng: &mut Rng, k: usize, each: usize, dist: Distribution) -> Vec<Vec<u32>> {
+    (0..k)
+        .map(|_| {
+            let mut v = gen_u32(rng, each, dist);
+            v.sort_unstable_by(|a, b| b.cmp(a));
+            v
+        })
+        .collect()
+}
+
+/// Descending stable sort by key (test oracle ordering).
+pub fn sort_desc<T: Item>(xs: &mut [T]) {
+    xs.sort_by(|a, b| b.key().cmp(&a.key()));
+}
+
+/// Zipf sampler over ranks 1..=n with exponent s (inverse-CDF on a
+/// precomputed table; exact, no rejection).
+pub struct ZipfSampler {
+    cdf: Vec<f64>,
+}
+
+impl ZipfSampler {
+    pub fn new(n_ranks: usize, s: f64) -> Self {
+        let mut cdf = Vec::with_capacity(n_ranks);
+        let mut acc = 0.0;
+        for k in 1..=n_ranks {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = *cdf.last().unwrap_or(&1.0);
+        for c in &mut cdf {
+            *c /= total;
+        }
+        ZipfSampler { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        let u = rng.f64();
+        match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&u).unwrap())
+        {
+            Ok(i) | Err(i) => i.min(self.cdf.len() - 1) as u32,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::key::is_sorted_desc;
+
+    #[test]
+    fn uniform_deterministic() {
+        let a = gen_u32(&mut Rng::new(1), 100, Distribution::Uniform);
+        let b = gen_u32(&mut Rng::new(1), 100, Distribution::Uniform);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dup_heavy_respects_alphabet() {
+        let v = gen_u32(&mut Rng::new(2), 1000, Distribution::DupHeavy { alphabet: 4 });
+        assert!(v.iter().all(|&x| x < 4));
+        // All four symbols should appear in 1000 draws.
+        for s in 0..4 {
+            assert!(v.contains(&s), "symbol {s} missing");
+        }
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let v = gen_u32(
+            &mut Rng::new(3),
+            10_000,
+            Distribution::Zipf { s_x100: 120, n_ranks: 1000 },
+        );
+        let top = v.iter().filter(|&&x| x == 0).count();
+        let tail = v.iter().filter(|&&x| x == 999).count();
+        assert!(top > tail * 5, "rank 0: {top}, rank 999: {tail}");
+    }
+
+    #[test]
+    fn sorted_variants_sorted() {
+        let asc = gen_u32(&mut Rng::new(4), 500, Distribution::SortedAsc);
+        assert!(asc.windows(2).all(|w| w[0] <= w[1]));
+        let desc = gen_u32(&mut Rng::new(4), 500, Distribution::SortedDesc);
+        assert!(is_sorted_desc(&desc));
+    }
+
+    #[test]
+    fn runs_have_descending_runs() {
+        let v = gen_u32(&mut Rng::new(5), 64, Distribution::Runs { run: 16 });
+        for c in v.chunks(16) {
+            assert!(is_sorted_desc(c));
+        }
+    }
+
+    #[test]
+    fn kv_payload_is_index() {
+        let v = gen_kv(&mut Rng::new(6), 50, Distribution::Uniform);
+        for (i, kv) in v.iter().enumerate() {
+            assert_eq!(kv.val, i as u32);
+        }
+    }
+
+    #[test]
+    fn sorted_pair_is_sorted() {
+        let (a, b) = gen_sorted_pair(&mut Rng::new(7), 64, 32, Distribution::Uniform, gen_u32);
+        assert!(is_sorted_desc(&a) && is_sorted_desc(&b));
+        assert_eq!(a.len(), 64);
+        assert_eq!(b.len(), 32);
+    }
+
+    #[test]
+    fn sorted_lists_shape() {
+        let ls = gen_sorted_lists(&mut Rng::new(8), 8, 100, Distribution::Uniform);
+        assert_eq!(ls.len(), 8);
+        assert!(ls.iter().all(|l| l.len() == 100 && is_sorted_desc(l)));
+    }
+}

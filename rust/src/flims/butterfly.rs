@@ -1,0 +1,148 @@
+//! The CAS network of FLiMS: a `log2(w)`-stage butterfly — the bitonic
+//! partial merger *minus its first stage* (paper §3.2, fig. 9).
+//!
+//! It is not a sorting network for arbitrary input, but it sorts every
+//! (cyclic rotation of a) bitonic sequence, which is exactly what the
+//! selector stage emits (paper proof §5.1).
+
+use crate::key::Item;
+
+/// Sort a rotated-bitonic slice descending in place.
+///
+/// `x.len()` must be a power of two. Stage strides go w/2, w/4, …, 1 —
+/// the classic butterfly topology; each pair is a compare-and-swap (CAS)
+/// with the larger element moving to the lower index.
+#[inline]
+pub fn butterfly_desc<T: Item>(x: &mut [T]) {
+    let w = x.len();
+    debug_assert!(w.is_power_of_two());
+    let mut stride = w / 2;
+    while stride >= 1 {
+        let mut g = 0;
+        while g < w {
+            for i in g..g + stride {
+                let (a, b) = (x[i], x[i + stride]);
+                // CAS: max to the top (descending).
+                let swap = b.key() > a.key();
+                x[i] = if swap { b } else { a };
+                x[i + stride] = if swap { a } else { b };
+            }
+            g += 2 * stride;
+        }
+        stride /= 2;
+    }
+}
+
+/// Const-width butterfly over an array — monomorphized so the compiler
+/// fully unrolls the stage loops (the software analogue of instantiating
+/// the CAS network at a fixed `w` in hardware).
+#[inline]
+pub fn butterfly_desc_w<T: Item, const W: usize>(x: &mut [T; W]) {
+    let mut stride = W / 2;
+    while stride >= 1 {
+        let mut g = 0;
+        while g < W {
+            for i in g..g + stride {
+                let (a, b) = (x[i], x[i + stride]);
+                let swap = b.key() > a.key();
+                x[i] = if swap { b } else { a };
+                x[i + stride] = if swap { a } else { b };
+            }
+            g += 2 * stride;
+        }
+        stride /= 2;
+    }
+}
+
+/// Number of CAS units in the butterfly: `(w/2)·log2(w)` — the paper's
+/// `½·w·log2(w)` term in Table 2.
+pub fn cas_count(w: usize) -> usize {
+    debug_assert!(w.is_power_of_two());
+    (w / 2) * w.trailing_zeros() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::key::is_sorted_desc;
+    use crate::util::rng::Rng;
+
+    fn bitonic(rng: &mut Rng, w: usize) -> Vec<u32> {
+        // ascending prefix + descending suffix of random data
+        let mut v: Vec<u32> = (0..w).map(|_| rng.below(50) as u32).collect();
+        let k = rng.below(w as u64 + 1) as usize;
+        v[..k].sort_unstable();
+        v[k..].sort_unstable_by(|a, b| b.cmp(a));
+        v
+    }
+
+    #[test]
+    fn sorts_bitonic_sequences() {
+        let mut rng = Rng::new(1);
+        for wexp in 1..=7 {
+            let w = 1 << wexp;
+            for _ in 0..50 {
+                let mut v = bitonic(&mut rng, w);
+                let mut expect = v.clone();
+                expect.sort_unstable_by(|a, b| b.cmp(a));
+                butterfly_desc(&mut v);
+                assert_eq!(v, expect, "w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn sorts_rotated_bitonic_sequences() {
+        let mut rng = Rng::new(2);
+        for wexp in 1..=6 {
+            let w = 1 << wexp;
+            for _ in 0..50 {
+                let mut v = bitonic(&mut rng, w);
+                let r = rng.below(w as u64) as usize;
+                v.rotate_left(r);
+                let mut expect = v.clone();
+                expect.sort_unstable_by(|a, b| b.cmp(a));
+                butterfly_desc(&mut v);
+                assert_eq!(v, expect, "w={w} rot={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn does_not_sort_arbitrary_input() {
+        // Sanity: the butterfly alone is not a sorting network (§3.2).
+        let mut v = vec![3u32, 9, 1, 7];
+        butterfly_desc(&mut v);
+        assert!(!is_sorted_desc(&v));
+    }
+
+    #[test]
+    fn const_width_matches_dynamic() {
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let v = bitonic(&mut rng, 16);
+            let mut a: [u32; 16] = v.clone().try_into().unwrap();
+            let mut b = v.clone();
+            butterfly_desc_w(&mut a);
+            butterfly_desc(&mut b);
+            assert_eq!(a.to_vec(), b);
+        }
+    }
+
+    #[test]
+    fn cas_counts_match_paper_formula() {
+        // ½ w log2 w
+        assert_eq!(cas_count(2), 1);
+        assert_eq!(cas_count(4), 4);
+        assert_eq!(cas_count(8), 12);
+        assert_eq!(cas_count(16), 32);
+        assert_eq!(cas_count(512), 2304);
+    }
+
+    #[test]
+    fn width_one_is_noop() {
+        let mut v = [5u32];
+        butterfly_desc(&mut v);
+        assert_eq!(v, [5]);
+    }
+}

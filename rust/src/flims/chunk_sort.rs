@@ -1,0 +1,228 @@
+//! Sort-in-chunks (paper §8.2): a Batcher bitonic sorting network over
+//! fixed-size chunks, producing the initial sorted runs that the FLiMS
+//! merge passes then combine. The paper found chunk = 512 optimal on
+//! AVX2; our sort pipeline tunes this per host (see `SortConfig`).
+
+use crate::key::Item;
+
+/// Sort `x` descending with the full bitonic network. `x.len()` must be
+/// a power of two. The stage structure (k blocks with direction flips,
+/// then the butterfly cleanup strides) is the textbook network — every
+/// stage is a data-independent column of CAS units, which is what makes
+/// both the SIMD and hardware formulations of the paper possible.
+pub fn bitonic_sort_desc<T: Item>(x: &mut [T]) {
+    let n = x.len();
+    debug_assert!(n.is_power_of_two());
+    let mut k = 2;
+    while k <= n {
+        let mut j = k / 2;
+        while j >= 1 {
+            for i in 0..n {
+                let p = i ^ j;
+                if p > i {
+                    // Block direction: descending overall ⇒ blocks with
+                    // (i & k) == 0 sort descending.
+                    let desc_block = (i & k) == 0;
+                    let (a, b) = (x[i], x[p]);
+                    let out_of_order = if desc_block {
+                        b.key() > a.key()
+                    } else {
+                        a.key() > b.key()
+                    };
+                    if out_of_order {
+                        x.swap(i, p);
+                    }
+                }
+            }
+            j /= 2;
+        }
+        k *= 2;
+    }
+}
+
+/// Sort each `chunk`-sized run of `x` descending. `x.len()` must be a
+/// multiple of `chunk`; `chunk` a power of two.
+pub fn sort_chunks_desc<T: Item>(x: &mut [T], chunk: usize) {
+    debug_assert!(chunk.is_power_of_two());
+    debug_assert_eq!(x.len() % chunk, 0);
+    for c in x.chunks_mut(chunk) {
+        bitonic_sort_desc(c);
+    }
+}
+
+/// Columnar (structure-of-arrays) chunk sorter — the faithful software
+/// image of the paper's SIMD sort-in-chunks (§8.2): many chunks are
+/// sorted *simultaneously*, with each network stage executed as
+/// contiguous elementwise min/max over a row of lanes (one lane = one
+/// chunk). The data is transposed into (position, lane) layout so every
+/// compare-exchange column is a pair of contiguous rows — exactly what
+/// the auto-vectorizer wants, and the same trick AVX2 code plays with
+/// registers.
+///
+/// Plain keys only (`T::K == T`); `x.len()` must be a multiple of
+/// `chunk`, `chunk` a power of two.
+pub fn sort_chunks_columnar<T>(x: &mut [T], chunk: usize)
+where
+    T: Item<K = T> + crate::key::Key,
+{
+    debug_assert!(chunk.is_power_of_two());
+    debug_assert_eq!(x.len() % chunk, 0);
+    /// lanes per group: 64 u32 lanes = 256 B per row — a few cache lines.
+    const G: usize = 64;
+    let nchunks = x.len() / chunk;
+    if nchunks == 0 {
+        return;
+    }
+    let mut scratch: Vec<T> = vec![T::SENTINEL; chunk * G];
+    let mut base = 0;
+    while base < nchunks {
+        let g = G.min(nchunks - base);
+        let off = base * chunk;
+        // Transpose in: scratch[pos * g + lane] = x[off + lane*chunk + pos].
+        // Loop order: contiguous writes + strided reads (gathers), which
+        // vectorizes much better than the scatter orientation.
+        {
+            let group = &x[off..off + g * chunk];
+            for pos in 0..chunk {
+                let row = &mut scratch[pos * g..pos * g + g];
+                for (lane, slot) in row.iter_mut().enumerate() {
+                    *slot = group[lane * chunk + pos];
+                }
+            }
+        }
+        // Bitonic network over positions; rows of g lanes vectorize.
+        let mut k = 2;
+        while k <= chunk {
+            let mut j = k / 2;
+            while j >= 1 {
+                for i in 0..chunk {
+                    let p = i ^ j;
+                    if p > i {
+                        let desc_block = (i & k) == 0;
+                        // Split to get two disjoint rows.
+                        let (lo, hi) = scratch.split_at_mut(p * g);
+                        let row_i = &mut lo[i * g..i * g + g];
+                        let row_p = &mut hi[..g];
+                        if desc_block {
+                            for c in 0..g {
+                                let (a, b) = (row_i[c], row_p[c]);
+                                let mx = if a > b { a } else { b };
+                                let mn = if a > b { b } else { a };
+                                row_i[c] = mx;
+                                row_p[c] = mn;
+                            }
+                        } else {
+                            for c in 0..g {
+                                let (a, b) = (row_i[c], row_p[c]);
+                                let mx = if a > b { a } else { b };
+                                let mn = if a > b { b } else { a };
+                                row_i[c] = mn;
+                                row_p[c] = mx;
+                            }
+                        }
+                    }
+                }
+                j /= 2;
+            }
+            k *= 2;
+        }
+        // Transpose out.
+        for lane in 0..g {
+            let dst = &mut x[off + lane * chunk..off + (lane + 1) * chunk];
+            for (pos, v) in dst.iter_mut().enumerate() {
+                *v = scratch[pos * g + lane];
+            }
+        }
+        base += g;
+    }
+}
+
+/// Insertion-sort fallback for short non-power-of-two tails.
+pub fn insertion_sort_desc<T: Item>(x: &mut [T]) {
+    for i in 1..x.len() {
+        let v = x[i];
+        let mut j = i;
+        while j > 0 && x[j - 1].key() < v.key() {
+            x[j] = x[j - 1];
+            j -= 1;
+        }
+        x[j] = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::key::is_sorted_desc;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bitonic_sorts_all_sizes() {
+        let mut rng = Rng::new(51);
+        for nexp in 0..=10 {
+            let n = 1 << nexp;
+            for _ in 0..5 {
+                let mut v: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+                let mut expect = v.clone();
+                expect.sort_unstable_by(|a, b| b.cmp(a));
+                bitonic_sort_desc(&mut v);
+                assert_eq!(v, expect, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn bitonic_exhaustive_small() {
+        // 0/1 principle-ish: all 2^n boolean inputs for n=8 — if a
+        // comparison network sorts all 0/1 sequences it sorts everything.
+        for bits in 0u32..256 {
+            let mut v: Vec<u32> = (0..8).map(|i| (bits >> i) & 1).collect();
+            bitonic_sort_desc(&mut v);
+            assert!(is_sorted_desc(&v), "bits={bits:#b} -> {v:?}");
+        }
+    }
+
+    #[test]
+    fn chunked_sort() {
+        let mut rng = Rng::new(52);
+        let mut v: Vec<u32> = (0..512).map(|_| rng.next_u32()).collect();
+        sort_chunks_desc(&mut v, 64);
+        for c in v.chunks(64) {
+            assert!(is_sorted_desc(c));
+        }
+    }
+
+    #[test]
+    fn columnar_matches_scalar() {
+        let mut rng = Rng::new(54);
+        for chunk in [4usize, 32, 128, 512] {
+            for nchunks in [1usize, 3, 64, 65, 130] {
+                let mut v: Vec<u32> =
+                    (0..chunk * nchunks).map(|_| rng.next_u32()).collect();
+                let mut expect = v.clone();
+                sort_chunks_desc(&mut expect, chunk);
+                sort_chunks_columnar(&mut v, chunk);
+                assert_eq!(v, expect, "chunk={chunk} n={nchunks}");
+            }
+        }
+    }
+
+    #[test]
+    fn insertion_sort_small() {
+        let mut rng = Rng::new(53);
+        for n in 0..40 {
+            let mut v: Vec<u32> = (0..n).map(|_| rng.below(10) as u32).collect();
+            let mut expect = v.clone();
+            expect.sort_unstable_by(|a, b| b.cmp(a));
+            insertion_sort_desc(&mut v);
+            assert_eq!(v, expect);
+        }
+    }
+
+    #[test]
+    fn duplicates_everywhere() {
+        let mut v = vec![3u32; 128];
+        bitonic_sort_desc(&mut v);
+        assert_eq!(v, vec![3u32; 128]);
+    }
+}

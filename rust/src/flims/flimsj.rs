@@ -1,0 +1,184 @@
+//! FLiMSj — the whole-row-dequeue variant (paper §4.3, algorithm 4,
+//! fig. 10).
+//!
+//! The plain FLiMS dequeues banks individually (w dequeue signals per
+//! input). FLiMSj unifies them: a single shared register row `cR` buffers
+//! the "top 2w-to-w" survivors so that, per cycle, exactly ONE whole
+//! w-row is fetched — from the input indicated by `dir_0` (lane 0's MAX
+//! decision). This is legal because the FIFOs are consumed round-robin
+//! and two bank cursors of one input never differ by more than one row.
+//!
+//! Register roles per lane i (our reading of algorithm 4):
+//!   * `c_r[i]` — the surviving candidate (loser of the last comparison);
+//!     `src[i]` names the side it substitutes (1 = the survivor is the
+//!     *B-side* candidate, so the A-side candidate comes fresh from the
+//!     prefetched row register `c_a[i]`; 0 = mirrored).
+//!   * `c_a[i]` / `c_b[i]` — prefetched row elements of A / reversed B.
+//!
+//! Row accounting (the paper's point): rows are fetched whole, one per
+//! cycle, totalling (|A|+|B|)/w fetches — matching output exactly.
+
+use crate::flims::butterfly::butterfly_desc;
+use crate::key::Item;
+
+/// Per-run statistics: whole-row fetches per input — the observable that
+/// distinguishes FLiMSj (w-wide dequeue signals) from plain FLiMS.
+#[derive(Clone, Debug, Default)]
+pub struct RowStats {
+    pub rows_a: usize,
+    pub rows_b: usize,
+    pub cycles: usize,
+}
+
+/// Merge two descending-sorted slices with whole-row dequeues
+/// (algorithm 4). Plain-key variant (sentinel-safe by value).
+pub fn merge_flimsj<T>(a: &[T], b: &[T], w: usize) -> (Vec<T>, RowStats)
+where
+    T: Item<K = T> + crate::key::Key,
+{
+    assert!(w.is_power_of_two());
+    let total = a.len() + b.len();
+    let mut out = Vec::with_capacity(total + w);
+    let mut stats = RowStats::default();
+    if total == 0 {
+        return (out, stats);
+    }
+
+    // Whole-row fetch: row r of A → lane i gets a[r*w + i]; row r of
+    // reversed B → lane i gets b[r*w + (w-1-i)]; sentinel past the end.
+    let fetch_row_a = |r: usize, c: &mut [T]| {
+        for (i, slot) in c.iter_mut().enumerate() {
+            let idx = r * w + i;
+            *slot = if idx < a.len() { a[idx] } else { T::SENTINEL };
+        }
+    };
+    let fetch_row_b = |r: usize, c: &mut [T]| {
+        for (i, slot) in c.iter_mut().enumerate() {
+            let idx = r * w + (w - 1 - i);
+            *slot = if idx < b.len() { b[idx] } else { T::SENTINEL };
+        }
+    };
+
+    let mut c_a = vec![T::SENTINEL; w];
+    let mut c_b = vec![T::SENTINEL; w];
+    let mut c_r = vec![T::SENTINEL; w];
+    // Init: candidates are row 0 of A (in cA, src=1) and reversed row 0
+    // of B (in cR); row 1 of B is prefetched into cB.
+    fetch_row_a(0, &mut c_a);
+    fetch_row_b(0, &mut c_r);
+    fetch_row_b(1, &mut c_b);
+    stats.rows_a = 1;
+    stats.rows_b = 2;
+    let mut src = vec![true; w]; // true: survivor cR plays the B side
+    let mut row_a = 1usize; // next unfetched A row
+    let mut row_b = 2usize;
+
+    let mut chosen = vec![T::SENTINEL; w];
+    let mut dir = vec![false; w]; // false: winner from A-side
+    let steps = total.div_ceil(w);
+    for _ in 0..steps {
+        for i in 0..w {
+            let a_cand = if src[i] { c_a[i] } else { c_r[i] };
+            let b_cand = if src[i] { c_r[i] } else { c_b[i] };
+            let take_a = a_cand > b_cand;
+            chosen[i] = if take_a { a_cand } else { b_cand };
+            dir[i] = !take_a;
+        }
+        let d0 = dir[0];
+        // Lanes that consumed their survivor refill cR from the side d0's
+        // row register (algorithm 4 lines 15–18); `src` follows MAX_0.
+        for i in 0..w {
+            let consumed_survivor = src[i] == dir[i]; // (src=1,dir=1)|(src=0,dir=0)
+            if consumed_survivor {
+                c_r[i] = if d0 { c_b[i] } else { c_a[i] };
+                src[i] = d0;
+            }
+        }
+        // Collective whole-row fetch (algorithm 4 line 21).
+        if d0 {
+            fetch_row_b(row_b, &mut c_b);
+            row_b += 1;
+            stats.rows_b += 1;
+        } else {
+            fetch_row_a(row_a, &mut c_a);
+            row_a += 1;
+            stats.rows_a += 1;
+        }
+        stats.cycles += 1;
+
+        let mut chunk = chosen.clone();
+        butterfly_desc(&mut chunk);
+        out.extend_from_slice(&chunk);
+    }
+    out.truncate(total);
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_sorted_pair, gen_u32, Distribution};
+    use crate::util::rng::Rng;
+
+    fn oracle(a: &[u32], b: &[u32]) -> Vec<u32> {
+        let mut v: Vec<u32> = a.iter().chain(b.iter()).copied().collect();
+        v.sort_unstable_by(|x, y| y.cmp(x));
+        v
+    }
+
+    #[test]
+    fn matches_oracle_random() {
+        let mut rng = Rng::new(41);
+        for wexp in 1..=6 {
+            let w = 1 << wexp;
+            for _ in 0..20 {
+                let (na, nb) = (rng.range(0, 400), rng.range(0, 400));
+                let (a, b) = gen_sorted_pair(&mut rng, na, nb, Distribution::Uniform, gen_u32);
+                let (out, _) = merge_flimsj(&a, &b, w);
+                assert_eq!(out, oracle(&a, &b), "w={w} |a|={} |b|={}", a.len(), b.len());
+            }
+        }
+    }
+
+    #[test]
+    fn matches_oracle_duplicates() {
+        let mut rng = Rng::new(42);
+        for _ in 0..30 {
+            let (na, nb) = (rng.range(0, 200), rng.range(0, 200));
+            let (a, b) = gen_sorted_pair(&mut rng, na, nb, Distribution::DupHeavy { alphabet: 2 }, gen_u32);
+            let (out, _) = merge_flimsj(&a, &b, 8);
+            assert_eq!(out, oracle(&a, &b));
+        }
+    }
+
+    #[test]
+    fn one_sided_inputs() {
+        let mut rng = Rng::new(43);
+        let (a, _) = gen_sorted_pair(&mut rng, 128, 0, Distribution::Uniform, gen_u32);
+        let (out, _) = merge_flimsj(&a, &[], 8);
+        assert_eq!(out, a);
+        let (out, _) = merge_flimsj(&[], &a, 8);
+        assert_eq!(out, a);
+    }
+
+    #[test]
+    fn whole_rows_fetched_match_consumption() {
+        // FLiMSj's defining property: rows fetched (beyond the 3-row
+        // prime) equals cycles run — exactly one per cycle.
+        let mut rng = Rng::new(44);
+        let (a, b) = gen_sorted_pair(&mut rng, 512, 512, Distribution::Uniform, gen_u32);
+        let (out, stats) = merge_flimsj(&a, &b, 16);
+        assert_eq!(out, oracle(&a, &b));
+        assert_eq!(stats.rows_a + stats.rows_b, 3 + stats.cycles);
+        assert_eq!(stats.cycles, (a.len() + b.len()) / 16);
+    }
+
+    #[test]
+    fn dominated_input() {
+        // All of A above all of B: fetch pattern is maximally one-sided.
+        let a: Vec<u32> = (1000..1064).rev().collect();
+        let b: Vec<u32> = (0..64).rev().collect();
+        let (out, _) = merge_flimsj(&a, &b, 8);
+        assert_eq!(out, oracle(&a, &b));
+    }
+}

@@ -1,0 +1,574 @@
+//! The optimized `w`-lane FLiMS merge — the hot path (paper §8's SIMD
+//! role, here as branchless rust the compiler auto-vectorises).
+//!
+//! Two tiers:
+//!
+//! * [`merge_desc`] / [`merge_desc_into`] — dynamic `w`, works for any
+//!   [`Item`] including payload records (pad-aware comparisons).
+//! * [`merge_desc_w`] — const-generic `W`, plain-key fast path used by
+//!   the sort pipeline: the selector + butterfly fully unroll, lane state
+//!   lives in stack arrays (the software image of the paper's registers),
+//!   and the steady-state loop runs without bounds checks.
+//!
+//! Plain keys may equal the sentinel — output is still the correct
+//! multiset because pad values are indistinguishable from real sentinels
+//! by value; for payload records use the pad-aware tier (see the
+//! tie-record discussion, paper §6).
+
+use crate::flims::butterfly::butterfly_desc_w;
+use crate::key::{Item, Key};
+
+/// Merge two descending-sorted slices; returns a new vector.
+pub fn merge_desc<T: Item>(a: &[T], b: &[T], w: usize) -> Vec<T> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    merge_desc_into(a, b, w, &mut out);
+    out
+}
+
+/// Merge two descending-sorted slices into `out` (cleared first).
+///
+/// Pad-aware: safe for payload records whose key equals the sentinel.
+pub fn merge_desc_into<T: Item>(a: &[T], b: &[T], w: usize, out: &mut Vec<T>) {
+    assert!(w.is_power_of_two());
+    out.clear();
+    let total = a.len() + b.len();
+    out.reserve(total);
+    if total == 0 {
+        return;
+    }
+    // (item, real) lane registers; B lanes bank-reversed (§3.1).
+    let fetch = |xs: &[T], idx: usize| -> (T, bool) {
+        match xs.get(idx) {
+            Some(&x) => (x, true),
+            None => (T::sentinel(), false),
+        }
+    };
+    let mut c_a: Vec<(T, bool)> = (0..w).map(|i| fetch(a, i)).collect();
+    let mut c_b: Vec<(T, bool)> = (0..w).map(|i| fetch(b, w - 1 - i)).collect();
+    let mut t_a = vec![0usize; w];
+    let mut t_b = vec![0usize; w];
+    let mut chosen: Vec<(T, bool)> = vec![(T::sentinel(), false); w];
+
+    let steps = total.div_ceil(w);
+    for _ in 0..steps {
+        for i in 0..w {
+            let (ka, ra) = (c_a[i].0.key(), c_a[i].1);
+            let (kb, rb) = (c_b[i].0.key(), c_b[i].1);
+            // Descending "greater": key, then realness (pads lose ties).
+            let take_a = ka > kb || (ka == kb && ra && !rb);
+            chosen[i] = if take_a { c_a[i] } else { c_b[i] };
+            if take_a {
+                t_a[i] += 1;
+                c_a[i] = fetch(a, i + w * t_a[i]);
+            } else {
+                t_b[i] += 1;
+                c_b[i] = fetch(b, (w - 1 - i) + w * t_b[i]);
+            }
+        }
+        butterfly_pairs(&mut chosen);
+        for &(x, real) in chosen.iter() {
+            if real {
+                out.push(x);
+            }
+        }
+    }
+    debug_assert_eq!(out.len(), total);
+}
+
+#[inline]
+fn butterfly_pairs<T: Item>(x: &mut [(T, bool)]) {
+    let w = x.len();
+    let mut stride = w / 2;
+    while stride >= 1 {
+        let mut g = 0;
+        while g < w {
+            for i in g..g + stride {
+                let (ka, ra) = (x[i].0.key(), x[i].1);
+                let (kb, rb) = (x[i + stride].0.key(), x[i + stride].1);
+                if kb > ka || (kb == ka && rb && !ra) {
+                    x.swap(i, i + stride);
+                }
+            }
+            g += 2 * stride;
+        }
+        stride /= 2;
+    }
+}
+
+/// Const-width plain-key fast path. `T::K == T` (plain keys) is implied
+/// by usage; sentinel-valued inputs keep multiset correctness.
+///
+/// Appends exactly `a.len() + b.len()` elements to `out`.
+pub fn merge_desc_w<T, const W: usize>(a: &[T], b: &[T], out: &mut Vec<T>)
+where
+    T: Item<K = T> + Key,
+{
+    let total = a.len() + b.len();
+    out.reserve(total);
+    if total == 0 {
+        return;
+    }
+
+    #[inline(always)]
+    fn fetch<T: Item<K = T> + Key>(xs: &[T], idx: usize) -> T {
+        // Sentinel beyond the end — the §3.1 end-of-stream filler.
+        if idx < xs.len() {
+            xs[idx]
+        } else {
+            T::SENTINEL
+        }
+    }
+
+    let mut c_a = [T::SENTINEL; W];
+    let mut c_b = [T::SENTINEL; W];
+    let mut t_a = [0usize; W];
+    let mut t_b = [0usize; W];
+    for i in 0..W {
+        c_a[i] = fetch(a, i);
+        c_b[i] = fetch(b, W - 1 - i);
+    }
+
+    let base = out.len();
+    let steps = total.div_ceil(W);
+    let mut chosen = [T::SENTINEL; W];
+    for _ in 0..steps {
+        // Selector stage (algorithm 1), branch-free select.
+        for i in 0..W {
+            let take_a = c_a[i] > c_b[i];
+            chosen[i] = if take_a { c_a[i] } else { c_b[i] };
+            // Advance exactly one of the two lane cursors.
+            t_a[i] += take_a as usize;
+            t_b[i] += !take_a as usize;
+            let na = fetch(a, i + W * t_a[i]);
+            let nb = fetch(b, (W - 1 - i) + W * t_b[i]);
+            c_a[i] = if take_a { na } else { c_a[i] };
+            c_b[i] = if take_a { c_b[i] } else { nb };
+        }
+        butterfly_desc_w(&mut chosen);
+        out.extend_from_slice(&chosen);
+    }
+    out.truncate(base + total);
+}
+
+/// Const-width plain-key merge writing into an exact-sized slice —
+/// `dst.len()` must equal `a.len() + b.len()`. Used by the sort pipeline
+/// so ping-pong passes never touch `Vec` lengths (the output region can
+/// be the middle of a larger buffer).
+pub fn merge_desc_w_slice<T, const W: usize>(a: &[T], b: &[T], dst: &mut [T])
+where
+    T: Item<K = T> + Key,
+{
+    let total = a.len() + b.len();
+    debug_assert_eq!(dst.len(), total);
+    if total == 0 {
+        return;
+    }
+
+    #[inline(always)]
+    fn fetch<T: Item<K = T> + Key>(xs: &[T], idx: usize) -> T {
+        if idx < xs.len() {
+            xs[idx]
+        } else {
+            T::SENTINEL
+        }
+    }
+
+    let mut c_a = [T::SENTINEL; W];
+    let mut c_b = [T::SENTINEL; W];
+    for i in 0..W {
+        c_a[i] = fetch(a, i);
+        c_b[i] = fetch(b, W - 1 - i);
+    }
+
+    let full_steps = total / W;
+    let mut chosen = [T::SENTINEL; W];
+    // Incremental lane indices replace the counters: idx_a[i] always
+    // points at the *next* element of bank A_i (one multiply-free
+    // conditional add per lane per step).
+    let mut idx_a = [0usize; W];
+    let mut idx_b = [0usize; W];
+    for i in 0..W {
+        idx_a[i] = i + W;
+        idx_b[i] = (W - 1 - i) + W;
+    }
+
+    // Phase 1 — provably in-bounds: after s steps every lane cursor is
+    // at most i + W·s < min(|a|,|b|) while s < min/W, so the first
+    // `safe_steps` selections need neither bounds checks nor sentinels.
+    let safe_steps = (a.len() / W).min(b.len() / W).saturating_sub(1).min(full_steps);
+    for s in 0..safe_steps {
+        for i in 0..W {
+            let take_a = c_a[i] > c_b[i];
+            chosen[i] = if take_a { c_a[i] } else { c_b[i] };
+            // SAFETY: idx_a[i] <= i + W*(s+1) < a.len() (resp. b) by the
+            // safe_steps bound above; indices only advance on a take.
+            let na = unsafe { *a.get_unchecked(idx_a[i]) };
+            let nb = unsafe { *b.get_unchecked(idx_b[i]) };
+            c_a[i] = if take_a { na } else { c_a[i] };
+            c_b[i] = if take_a { c_b[i] } else { nb };
+            idx_a[i] += if take_a { W } else { 0 };
+            idx_b[i] += if take_a { 0 } else { W };
+        }
+        butterfly_desc_w(&mut chosen);
+        dst[s * W..(s + 1) * W].copy_from_slice(&chosen);
+    }
+
+    // Phase 2 — tail with sentinel fills (end-of-stream, §3.1).
+    let step = |chosen: &mut [T; W],
+                c_a: &mut [T; W],
+                c_b: &mut [T; W],
+                idx_a: &mut [usize; W],
+                idx_b: &mut [usize; W]| {
+        for i in 0..W {
+            let take_a = c_a[i] > c_b[i];
+            chosen[i] = if take_a { c_a[i] } else { c_b[i] };
+            let na = fetch(a, idx_a[i]);
+            let nb = fetch(b, idx_b[i]);
+            c_a[i] = if take_a { na } else { c_a[i] };
+            c_b[i] = if take_a { c_b[i] } else { nb };
+            idx_a[i] += if take_a { W } else { 0 };
+            idx_b[i] += if take_a { 0 } else { W };
+        }
+        butterfly_desc_w(chosen);
+    };
+    for s in safe_steps..full_steps {
+        step(&mut chosen, &mut c_a, &mut c_b, &mut idx_a, &mut idx_b);
+        dst[s * W..(s + 1) * W].copy_from_slice(&chosen);
+    }
+    let rem = total % W;
+    if rem > 0 {
+        step(&mut chosen, &mut c_a, &mut c_b, &mut idx_a, &mut idx_b);
+        dst[full_steps * W..].copy_from_slice(&chosen[..rem]);
+    }
+}
+
+/// FLiMSj-style const-width merge into a slice — the *preferred faster
+/// method* of paper §8.1: "pre-fetching w-sized batches … reminiscent of
+/// FLiMSj". Per step the selector works purely on registers (no per-lane
+/// gathers), and exactly ONE contiguous w-row is fetched from the input
+/// chosen by lane 0's MAX decision (algorithm 4) — a straight memcpy the
+/// auto-vectorizer loves, replacing the 2·w scattered loads of the
+/// per-bank formulation.
+pub fn merge_flimsj_w_slice<T, const W: usize>(a: &[T], b: &[T], dst: &mut [T])
+where
+    T: Item<K = T> + Key,
+{
+    let total = a.len() + b.len();
+    debug_assert_eq!(dst.len(), total);
+    if total == 0 {
+        return;
+    }
+
+    #[inline(always)]
+    fn fetch_row_a<T: Item<K = T> + Key, const W: usize>(a: &[T], r: usize, c: &mut [T; W]) {
+        let base = r * W;
+        if base + W <= a.len() {
+            c.copy_from_slice(&a[base..base + W]);
+        } else {
+            for (i, slot) in c.iter_mut().enumerate() {
+                *slot = if base + i < a.len() { a[base + i] } else { T::SENTINEL };
+            }
+        }
+    }
+    #[inline(always)]
+    fn fetch_row_b<T: Item<K = T> + Key, const W: usize>(b: &[T], r: usize, c: &mut [T; W]) {
+        // reversed row: lane i gets b[r*W + W-1-i]
+        let base = r * W;
+        if base + W <= b.len() {
+            for i in 0..W {
+                c[i] = b[base + W - 1 - i];
+            }
+        } else {
+            for (i, slot) in c.iter_mut().enumerate() {
+                let idx = base + W - 1 - i;
+                *slot = if idx < b.len() { b[idx] } else { T::SENTINEL };
+            }
+        }
+    }
+
+    let mut c_a = [T::SENTINEL; W];
+    let mut c_b = [T::SENTINEL; W];
+    let mut c_r = [T::SENTINEL; W];
+    // Init (algorithm 4): candidates = row 0 of A (cA) + reversed row 0
+    // of B (cR, src=1); reversed row 1 of B prefetched into cB.
+    fetch_row_a(a, 0, &mut c_a);
+    fetch_row_b(b, 0, &mut c_r);
+    fetch_row_b(b, 1, &mut c_b);
+    let mut src = [true; W];
+    let (mut row_a, mut row_b) = (1usize, 2usize);
+
+    let mut chosen = [T::SENTINEL; W];
+    let mut take_a = [false; W];
+    let full_steps = total / W;
+    let rem = total % W;
+    let steps = full_steps + (rem > 0) as usize;
+    for s in 0..steps {
+        // Selector (register-only, branch-free per lane).
+        for i in 0..W {
+            let ac = if src[i] { c_a[i] } else { c_r[i] };
+            let bc = if src[i] { c_r[i] } else { c_b[i] };
+            let ta = ac > bc;
+            chosen[i] = if ta { ac } else { bc };
+            take_a[i] = ta;
+        }
+        let d0 = !take_a[0];
+        // Survivor steering: lanes that consumed their cR refill it from
+        // the side d0 indicates; src follows MAX_0 (algorithm 4 l.15-18).
+        for i in 0..W {
+            let consumed_r = src[i] != take_a[i]; // src==dir, dir = !take_a
+            let refill = if d0 { c_b[i] } else { c_a[i] };
+            c_r[i] = if consumed_r { refill } else { c_r[i] };
+            src[i] = if consumed_r { d0 } else { src[i] };
+        }
+        // One whole-row fetch (algorithm 4 line 21).
+        if d0 {
+            fetch_row_b(b, row_b, &mut c_b);
+            row_b += 1;
+        } else {
+            fetch_row_a(a, row_a, &mut c_a);
+            row_a += 1;
+        }
+        butterfly_desc_w(&mut chosen);
+        if s < full_steps {
+            dst[s * W..(s + 1) * W].copy_from_slice(&chosen);
+        } else {
+            dst[s * W..].copy_from_slice(&chosen[..rem]);
+        }
+    }
+}
+
+/// Dynamic-width dispatch of [`merge_flimsj_w_slice`].
+pub fn merge_flimsj_fast_slice<T>(a: &[T], b: &[T], w: usize, dst: &mut [T])
+where
+    T: Item<K = T> + Key,
+{
+    match w {
+        2 => merge_flimsj_w_slice::<T, 2>(a, b, dst),
+        4 => merge_flimsj_w_slice::<T, 4>(a, b, dst),
+        8 => merge_flimsj_w_slice::<T, 8>(a, b, dst),
+        16 => merge_flimsj_w_slice::<T, 16>(a, b, dst),
+        32 => merge_flimsj_w_slice::<T, 32>(a, b, dst),
+        64 => merge_flimsj_w_slice::<T, 64>(a, b, dst),
+        128 => merge_flimsj_w_slice::<T, 128>(a, b, dst),
+        256 => merge_flimsj_w_slice::<T, 256>(a, b, dst),
+        _ => merge_desc_fast_slice(a, b, w, dst),
+    }
+}
+
+/// Dynamic-width dispatch of [`merge_desc_w_slice`].
+pub fn merge_desc_fast_slice<T>(a: &[T], b: &[T], w: usize, dst: &mut [T])
+where
+    T: Item<K = T> + Key,
+{
+    match w {
+        2 => merge_desc_w_slice::<T, 2>(a, b, dst),
+        4 => merge_desc_w_slice::<T, 4>(a, b, dst),
+        8 => merge_desc_w_slice::<T, 8>(a, b, dst),
+        16 => merge_desc_w_slice::<T, 16>(a, b, dst),
+        32 => merge_desc_w_slice::<T, 32>(a, b, dst),
+        64 => merge_desc_w_slice::<T, 64>(a, b, dst),
+        128 => merge_desc_w_slice::<T, 128>(a, b, dst),
+        256 => merge_desc_w_slice::<T, 256>(a, b, dst),
+        _ => {
+            let mut tmp = Vec::new();
+            merge_desc_into(a, b, w, &mut tmp);
+            dst.copy_from_slice(&tmp);
+        }
+    }
+}
+
+/// Dynamic dispatch over the supported const widths.
+pub fn merge_desc_fast<T>(a: &[T], b: &[T], w: usize, out: &mut Vec<T>)
+where
+    T: Item<K = T> + Key,
+{
+    match w {
+        2 => merge_desc_w::<T, 2>(a, b, out),
+        4 => merge_desc_w::<T, 4>(a, b, out),
+        8 => merge_desc_w::<T, 8>(a, b, out),
+        16 => merge_desc_w::<T, 16>(a, b, out),
+        32 => merge_desc_w::<T, 32>(a, b, out),
+        64 => merge_desc_w::<T, 64>(a, b, out),
+        128 => merge_desc_w::<T, 128>(a, b, out),
+        256 => merge_desc_w::<T, 256>(a, b, out),
+        _ => {
+            let mut tmp = Vec::new();
+            merge_desc_into(a, b, w, &mut tmp);
+            out.extend_from_slice(&tmp);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_sorted_pair, gen_u32, Distribution};
+    use crate::key::Kv;
+    use crate::util::rng::Rng;
+
+    fn oracle<T: Item>(a: &[T], b: &[T]) -> Vec<T> {
+        let mut v: Vec<T> = a.iter().chain(b.iter()).copied().collect();
+        v.sort_by(|x, y| y.key().cmp(&x.key()));
+        v
+    }
+
+    #[test]
+    fn dynamic_matches_oracle() {
+        let mut rng = Rng::new(21);
+        for wexp in 0..=6 {
+            let w = 1 << wexp;
+            for _ in 0..15 {
+                let (na, nb) = (rng.range(0, 300), rng.range(0, 300));
+                let (a, b) = gen_sorted_pair(&mut rng, na, nb, Distribution::Uniform, gen_u32);
+                assert_eq!(merge_desc(&a, &b, w), oracle(&a, &b), "w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn const_width_matches_oracle() {
+        let mut rng = Rng::new(22);
+        for _ in 0..30 {
+            let (na, nb) = (rng.range(0, 500), rng.range(0, 500));
+            let (a, b) = gen_sorted_pair(&mut rng, na, nb, Distribution::Uniform, gen_u32);
+            let mut out = Vec::new();
+            merge_desc_w::<u32, 16>(&a, &b, &mut out);
+            assert_eq!(out, oracle(&a, &b));
+        }
+    }
+
+    #[test]
+    fn const_width_all_widths() {
+        let mut rng = Rng::new(23);
+        let (a, b) = gen_sorted_pair(&mut rng, 700, 300, Distribution::Uniform, gen_u32);
+        let expect = oracle(&a, &b);
+        for w in [2usize, 4, 8, 16, 32, 64, 128, 256] {
+            let mut out = Vec::new();
+            merge_desc_fast(&a, &b, w, &mut out);
+            assert_eq!(out, expect, "w={w}");
+        }
+    }
+
+    #[test]
+    fn flimsj_slice_matches_oracle() {
+        let mut rng = Rng::new(26);
+        for w in [2usize, 4, 8, 16, 32] {
+            for _ in 0..20 {
+                let (na, nb) = (rng.range(0, 700), rng.range(0, 700));
+                let (a, b) = gen_sorted_pair(&mut rng, na, nb, Distribution::Uniform, gen_u32);
+                let mut dst = vec![0u32; na + nb];
+                merge_flimsj_fast_slice(&a, &b, w, &mut dst);
+                assert_eq!(dst, oracle(&a, &b), "w={w} na={na} nb={nb}");
+            }
+        }
+    }
+
+    #[test]
+    fn flimsj_slice_duplicates_and_dominance() {
+        let mut rng = Rng::new(27);
+        for _ in 0..20 {
+            let (na, nb) = (rng.range(0, 300), rng.range(0, 300));
+            let (a, b) = gen_sorted_pair(&mut rng, na, nb, Distribution::DupHeavy { alphabet: 2 }, gen_u32);
+            let mut dst = vec![0u32; na + nb];
+            merge_flimsj_fast_slice(&a, &b, 8, &mut dst);
+            assert_eq!(dst, oracle(&a, &b));
+        }
+        // one-sided
+        let a: Vec<u32> = (0..100u32).rev().collect();
+        let mut dst = vec![0u32; 100];
+        merge_flimsj_fast_slice(&a, &[], 16, &mut dst);
+        assert_eq!(dst, a);
+        let mut dst = vec![0u32; 100];
+        merge_flimsj_fast_slice(&[], &a, 16, &mut dst);
+        assert_eq!(dst, a);
+    }
+
+    #[test]
+    fn zero_and_sentinel_values() {
+        // u32 sentinel is 0; zeros in the payload must survive by value.
+        let a = vec![9u32, 4, 0, 0];
+        let b = vec![7u32, 0];
+        assert_eq!(merge_desc(&a, &b, 4), vec![9, 7, 4, 0, 0, 0]);
+        let mut out = Vec::new();
+        merge_desc_w::<u32, 4>(&a, &b, &mut out);
+        assert_eq!(out, vec![9, 7, 4, 0, 0, 0]);
+    }
+
+    #[test]
+    fn records_with_sentinel_keys_keep_payloads() {
+        let a = vec![Kv::new(3, 10), Kv::new(0, 11)];
+        let b = vec![Kv::new(0, 12), Kv::new(0, 13)];
+        let out = merge_desc(&a, &b, 8);
+        let mut vals: Vec<u32> = out.iter().map(|k| k.val).collect();
+        vals.sort_unstable();
+        assert_eq!(vals, vec![10, 11, 12, 13]);
+    }
+
+    #[test]
+    fn dup_heavy_all_widths() {
+        let mut rng = Rng::new(24);
+        for w in [4usize, 16, 64] {
+            let (a, b) = gen_sorted_pair(
+                &mut rng,
+                256,
+                128,
+                Distribution::DupHeavy { alphabet: 2 },
+                gen_u32,
+            );
+            let mut out = Vec::new();
+            merge_desc_fast(&a, &b, w, &mut out);
+            assert_eq!(out, oracle(&a, &b), "w={w}");
+        }
+    }
+
+    #[test]
+    fn empty_sides() {
+        let mut out = Vec::new();
+        merge_desc_w::<u32, 8>(&[], &[], &mut out);
+        assert!(out.is_empty());
+        merge_desc_w::<u32, 8>(&[5, 1], &[], &mut out);
+        assert_eq!(out, vec![5, 1]);
+        out.clear();
+        merge_desc_w::<u32, 8>(&[], &[9, 2], &mut out);
+        assert_eq!(out, vec![9, 2]);
+    }
+
+    #[test]
+    fn appends_without_clobbering() {
+        let mut out = vec![111u32];
+        merge_desc_w::<u32, 4>(&[5, 3], &[4, 2], &mut out);
+        assert_eq!(out, vec![111, 5, 4, 3, 2]);
+    }
+
+    #[test]
+    fn u64_and_i32_keys() {
+        let mut rng = Rng::new(25);
+        let a64: Vec<u64> = {
+            let mut v: Vec<u64> = (0..100).map(|_| rng.next_u64()).collect();
+            v.sort_unstable_by(|x, y| y.cmp(x));
+            v
+        };
+        let b64: Vec<u64> = {
+            let mut v: Vec<u64> = (0..77).map(|_| rng.next_u64()).collect();
+            v.sort_unstable_by(|x, y| y.cmp(x));
+            v
+        };
+        let mut out = Vec::new();
+        merge_desc_w::<u64, 8>(&a64, &b64, &mut out);
+        assert_eq!(out, oracle(&a64, &b64));
+
+        let ai: Vec<i32> = {
+            let mut v: Vec<i32> = (0..64).map(|_| rng.next_u32() as i32).collect();
+            v.sort_unstable_by(|x, y| y.cmp(x));
+            v
+        };
+        let bi: Vec<i32> = {
+            let mut v: Vec<i32> = (0..32).map(|_| rng.next_u32() as i32).collect();
+            v.sort_unstable_by(|x, y| y.cmp(x));
+            v
+        };
+        let mut out = Vec::new();
+        merge_desc_w::<i32, 16>(&ai, &bi, &mut out);
+        assert_eq!(out, oracle(&ai, &bi));
+    }
+}

@@ -1,0 +1,32 @@
+//! The FLiMS algorithm family — the paper's core contribution, as a
+//! software library.
+//!
+//! Module map (paper section → module):
+//!
+//! * §3 algorithm 1 (selector stage + CAS network) →
+//!   [`scalar`] (hardware-faithful, per-bank queues, trace support) and
+//!   [`lanes`] (the optimized `w`-lane hot path, the §8 "SIMD" role).
+//! * §4.1 algorithm 2 (skewness optimisation) → [`scalar::merge_skew`].
+//! * §4.2 algorithm 3 (stable merge) → [`stable`].
+//! * §4.3 algorithm 4 (FLiMSj, whole-row dequeues) → [`flimsj`].
+//! * §8.2 sort-in-chunks + complete sort → [`chunk_sort`], [`sort`],
+//!   [`parallel`].
+//!
+//! Everything merges/sorts in **descending** order (the paper's
+//! convention); ascending wrappers are provided on the public API.
+
+pub mod butterfly;
+pub mod chunk_sort;
+pub mod flimsj;
+pub mod lanes;
+pub mod parallel;
+pub mod scalar;
+pub mod sort;
+pub mod stable;
+
+pub use butterfly::butterfly_desc;
+pub use lanes::merge_desc;
+pub use parallel::par_sort_desc;
+pub use scalar::{merge_basic, merge_skew, FlimsMerger, MergeTrace, Variant};
+pub use sort::{sort_desc, SortConfig};
+pub use stable::merge_stable;

@@ -1,0 +1,169 @@
+//! Multi-threaded FLiMS sort (paper §8.2's OpenMP variant): the
+//! sort-in-chunks pass runs on all cores over equal slices, then each
+//! merge-pass level distributes its independent pair-merges across the
+//! pool — "a similar loop initiates multiple instances of the FLiMS-based
+//! merge, as long as there are enough sublists in the current merge
+//! iteration".
+//!
+//! Implemented with `std::thread::scope` (no external pool crate): each
+//! pass spawns at most `threads` workers over disjoint output regions, so
+//! no synchronisation beyond the pass barrier is needed — the same
+//! barrier structure as a PMT level.
+
+use crate::flims::lanes::merge_desc_fast_slice;
+use crate::flims::sort::{sort_desc, SortConfig};
+use crate::key::{Item, Key};
+
+/// Parallel sort configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ParSortConfig {
+    pub base: SortConfig,
+    /// worker threads (`0` = all available)
+    pub threads: usize,
+    /// below this, fall back to single-threaded sort
+    pub seq_cutoff: usize,
+}
+
+impl Default for ParSortConfig {
+    fn default() -> Self {
+        ParSortConfig {
+            base: SortConfig::default(),
+            threads: 0,
+            seq_cutoff: 1 << 15,
+        }
+    }
+}
+
+fn effective_threads(req: usize) -> usize {
+    if req > 0 {
+        req
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Sort descending using multiple threads.
+pub fn par_sort_desc<T>(x: &mut Vec<T>, cfg: ParSortConfig)
+where
+    T: Item<K = T> + Key,
+{
+    let n = x.len();
+    let threads = effective_threads(cfg.threads);
+    if n < cfg.seq_cutoff || threads == 1 {
+        sort_desc(x, cfg.base);
+        return;
+    }
+
+    // Phase 1: split into `parts` equal consecutive portions, sort each
+    // on its own thread (paper: "sorting-in-chunks now happens on all
+    // cores, operating on equally-sized consecutive portions").
+    let parts = threads.next_power_of_two().min(64);
+    let part_len = n.div_ceil(parts);
+    {
+        let base = cfg.base;
+        std::thread::scope(|s| {
+            for piece in x.chunks_mut(part_len) {
+                s.spawn(move || {
+                    let mut v = piece.to_vec();
+                    sort_desc(&mut v, base);
+                    piece.copy_from_slice(&v);
+                });
+            }
+        });
+    }
+
+    // Phase 2: log2(parts) merge levels; each level merges adjacent run
+    // pairs in parallel (runs are `part_len`-scaled, last may be short).
+    let mut scratch: Vec<T> = vec![T::SENTINEL; n];
+    let mut run = part_len;
+    let mut src_is_x = true;
+    while run < n {
+        {
+            let (src, dst): (&[T], &mut [T]) = if src_is_x {
+                (&x[..], &mut scratch[..])
+            } else {
+                (&scratch[..], &mut x[..])
+            };
+            let w = cfg.base.w;
+            std::thread::scope(|s| {
+                let mut pos = 0;
+                let mut dst_rest = dst;
+                while pos < n {
+                    let end = (pos + 2 * run).min(n);
+                    let (dst_piece, rest) = dst_rest.split_at_mut(end - pos);
+                    dst_rest = rest;
+                    let src_a = &src[pos..(pos + run).min(end)];
+                    let src_b = &src[(pos + run).min(end)..end];
+                    s.spawn(move || {
+                        if src_b.is_empty() {
+                            dst_piece.copy_from_slice(src_a);
+                        } else {
+                            merge_desc_fast_slice(src_a, src_b, w, dst_piece);
+                        }
+                    });
+                    pos = end;
+                }
+            });
+        }
+        src_is_x = !src_is_x;
+        run *= 2;
+    }
+    if !src_is_x {
+        x.copy_from_slice(&scratch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_u32, Distribution};
+    use crate::util::rng::Rng;
+
+    fn check(mut v: Vec<u32>, cfg: ParSortConfig) {
+        let mut expect = v.clone();
+        expect.sort_unstable_by(|a, b| b.cmp(a));
+        par_sort_desc(&mut v, cfg);
+        assert_eq!(v, expect);
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let mut rng = Rng::new(71);
+        for n in [100usize, 40_000, 100_000, 250_000] {
+            let v = gen_u32(&mut rng, n, Distribution::Uniform);
+            check(
+                v,
+                ParSortConfig { threads: 4, seq_cutoff: 1 << 10, ..Default::default() },
+            );
+        }
+    }
+
+    #[test]
+    fn thread_counts() {
+        let mut rng = Rng::new(72);
+        let v = gen_u32(&mut rng, 150_000, Distribution::Uniform);
+        for t in [1usize, 2, 3, 8] {
+            check(
+                v.clone(),
+                ParSortConfig { threads: t, seq_cutoff: 1 << 10, ..Default::default() },
+            );
+        }
+    }
+
+    #[test]
+    fn skewed_data() {
+        let mut rng = Rng::new(73);
+        let v = gen_u32(&mut rng, 120_000, Distribution::DupHeavy { alphabet: 5 });
+        check(
+            v,
+            ParSortConfig { threads: 4, seq_cutoff: 1 << 10, ..Default::default() },
+        );
+    }
+
+    #[test]
+    fn small_input_takes_sequential_path() {
+        let mut rng = Rng::new(74);
+        let v = gen_u32(&mut rng, 500, Distribution::Uniform);
+        check(v, ParSortConfig::default());
+    }
+}

@@ -1,0 +1,432 @@
+//! Hardware-faithful FLiMS merger (paper §3, algorithm 1; §4.1,
+//! algorithm 2): per-bank FIFO queues, `w` distributed MAX units with
+//! `cA`/`cB` head registers, and per-cycle execution with optional trace
+//! capture — the model behind the Table 1 example and the oracle the
+//! cycle-accurate `hw::` netlists are checked against.
+//!
+//! This module favours clarity and observability over speed; the fast
+//! path lives in [`super::lanes`].
+
+use crate::key::Item;
+
+/// Which MAX-unit algorithm runs in the selector stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// Algorithm 1: ties dequeue from B.
+    Basic,
+    /// Algorithm 2: 1-bit `dir` register appended as comparison LSB makes
+    /// duplicate runs alternate sources (the §4.1 skew optimisation).
+    Skew,
+}
+
+/// A lane slot: a record plus a validity flag. Pads (end-of-stream
+/// filler, paper §3.1) always compare below real records so payload
+/// records whose key equals the sentinel are never displaced.
+#[derive(Clone, Copy, Debug)]
+struct Slot<T> {
+    item: T,
+    real: bool,
+}
+
+impl<T: Item> Slot<T> {
+    fn pad() -> Self {
+        Slot { item: T::sentinel(), real: false }
+    }
+    /// Descending-order "greater than": real beats pad on key ties.
+    #[inline]
+    fn gt(&self, other: &Slot<T>) -> bool {
+        match self.item.key().cmp(&other.item.key()) {
+            std::cmp::Ordering::Greater => true,
+            std::cmp::Ordering::Less => false,
+            std::cmp::Ordering::Equal => self.real && !other.real,
+        }
+    }
+}
+
+/// Per-cycle dequeue statistics — the observable the §4.1 skew
+/// experiments measure (balanced consumption of A and B).
+#[derive(Clone, Debug, Default)]
+pub struct MergeStats {
+    pub cycles: usize,
+    pub dequeued_a: usize,
+    pub dequeued_b: usize,
+    /// Maximum over cycles of |cumulative dequeues from A − from B|: the
+    /// rate-mismatch measure of §4.1. Algorithm 2 bounds this near `w`
+    /// on duplicate runs; algorithm 1 lets it grow with the run length.
+    pub max_cum_imbalance: usize,
+}
+
+/// One captured cycle for Table-1 style traces.
+#[derive(Clone, Debug)]
+pub struct TraceCycle {
+    pub cycle: usize,
+    pub c_a: Vec<Option<String>>,
+    pub c_b: Vec<Option<String>>,
+    pub output: Vec<String>,
+}
+
+/// Full execution trace (paper Table 1).
+#[derive(Clone, Debug, Default)]
+pub struct MergeTrace {
+    pub cycles: Vec<TraceCycle>,
+}
+
+impl MergeTrace {
+    /// Render as an aligned text table resembling the paper's Table 1.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("cycle | cA | cB | output chunk\n");
+        for c in &self.cycles {
+            let f = |v: &Vec<Option<String>>| {
+                v.iter()
+                    .map(|x| x.clone().unwrap_or_else(|| "-".into()))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            };
+            out.push_str(&format!(
+                "{:>5} | {} | {} | {}\n",
+                c.cycle,
+                f(&c.c_a),
+                f(&c.c_b),
+                c.output.join(" ")
+            ));
+        }
+        out
+    }
+}
+
+/// The hardware-faithful streaming merger.
+///
+/// Banks are modelled as cursors into the input slices (elements are
+/// stored round-robin across banks, so bank `i` of `A` serves
+/// `a[i], a[i+w], …` — paper §3.1).
+pub struct FlimsMerger<'a, T: Item> {
+    w: usize,
+    variant: Variant,
+    a: &'a [T],
+    b: &'a [T],
+    /// per-lane next fetch count for bank A_i / B_{w-1-i}
+    t_a: Vec<usize>,
+    t_b: Vec<usize>,
+    c_a: Vec<Slot<T>>,
+    c_b: Vec<Slot<T>>,
+    dir: Vec<bool>,
+    pub stats: MergeStats,
+}
+
+impl<'a, T: Item> FlimsMerger<'a, T> {
+    pub fn new(a: &'a [T], b: &'a [T], w: usize, variant: Variant) -> Self {
+        assert!(w.is_power_of_two(), "w must be a power of two");
+        let fetch = |xs: &[T], idx: usize| -> Slot<T> {
+            xs.get(idx)
+                .map(|&item| Slot { item, real: true })
+                .unwrap_or_else(Slot::pad)
+        };
+        // Lane i holds head of bank A_i and head of bank B_{w-1-i}.
+        let c_a: Vec<_> = (0..w).map(|i| fetch(a, i)).collect();
+        let c_b: Vec<_> = (0..w).map(|i| fetch(b, w - 1 - i)).collect();
+        FlimsMerger {
+            w,
+            variant,
+            a,
+            b,
+            t_a: vec![0; w],
+            t_b: vec![0; w],
+            c_a,
+            c_b,
+            dir: vec![false; w],
+            stats: MergeStats::default(),
+        }
+    }
+
+    /// Total cycles needed to drain both inputs.
+    pub fn total_cycles(&self) -> usize {
+        (self.a.len() + self.b.len()).div_ceil(self.w)
+    }
+
+    /// Execute one cycle: the selector stage picks the top `w`, the CAS
+    /// network sorts it, and the chosen lanes refill from their banks.
+    /// Returns the `w`-sized output chunk (pads stripped).
+    pub fn step(&mut self) -> Vec<T> {
+        let w = self.w;
+        let mut chosen: Vec<Slot<T>> = Vec::with_capacity(w);
+        let mut take_a_mask = vec![false; w];
+        for i in 0..w {
+            let (ca, cb) = (self.c_a[i], self.c_b[i]);
+            let take_a = match self.variant {
+                Variant::Basic => ca.gt(&cb),
+                Variant::Skew => {
+                    // Algorithm 2: {cA, dir} > {cB, !dir} — the 1-bit
+                    // history appended as LSB flips tie outcomes so
+                    // duplicate runs alternate sources.
+                    if ca.item.key() != cb.item.key() || ca.real != cb.real {
+                        ca.gt(&cb)
+                    } else {
+                        self.dir[i]
+                    }
+                }
+            };
+            take_a_mask[i] = take_a;
+            chosen.push(if take_a { ca } else { cb });
+        }
+        // Refill fired lanes from their banks (round-robin addressing).
+        for i in 0..w {
+            if take_a_mask[i] {
+                self.t_a[i] += 1;
+                let idx = i + w * self.t_a[i];
+                self.c_a[i] = self
+                    .a
+                    .get(idx)
+                    .map(|&item| Slot { item, real: true })
+                    .unwrap_or_else(Slot::pad);
+                self.dir[i] = false; // dir=0: took from A (alg 2 line 9)
+                if chosen[i].real {
+                    self.stats.dequeued_a += 1;
+                }
+            } else {
+                self.t_b[i] += 1;
+                let idx = (w - 1 - i) + w * self.t_b[i];
+                self.c_b[i] = self
+                    .b
+                    .get(idx)
+                    .map(|&item| Slot { item, real: true })
+                    .unwrap_or_else(Slot::pad);
+                self.dir[i] = true; // dir=1: took from B (alg 2 line 13)
+                if chosen[i].real {
+                    self.stats.dequeued_b += 1;
+                }
+            }
+        }
+        self.stats.cycles += 1;
+        let cum = self.stats.dequeued_a.abs_diff(self.stats.dequeued_b);
+        self.stats.max_cum_imbalance = self.stats.max_cum_imbalance.max(cum);
+
+        // CAS network sorts the (rotated-bitonic) selection.
+        butterfly_slots(&mut chosen);
+        chosen
+            .into_iter()
+            .filter(|s| s.real)
+            .map(|s| s.item)
+            .collect()
+    }
+
+    /// Drain everything into a vector.
+    pub fn run(mut self) -> (Vec<T>, MergeStats) {
+        let total = self.a.len() + self.b.len();
+        let mut out = Vec::with_capacity(total);
+        for _ in 0..self.total_cycles() {
+            out.extend(self.step());
+        }
+        debug_assert_eq!(out.len(), total);
+        (out, self.stats)
+    }
+
+    /// Drain with a Table-1 style trace (records `cA`/`cB` registers and
+    /// output chunk per cycle).
+    pub fn run_traced(mut self) -> (Vec<T>, MergeTrace) {
+        let total = self.a.len() + self.b.len();
+        let mut out = Vec::with_capacity(total);
+        let mut trace = MergeTrace::default();
+        for cycle in 0..self.total_cycles() {
+            let fmt = |v: &Vec<Slot<T>>| {
+                v.iter()
+                    .map(|s| s.real.then(|| format!("{:?}", s.item.key())))
+                    .collect()
+            };
+            let c_a = fmt(&self.c_a);
+            let c_b = fmt(&self.c_b);
+            let chunk = self.step();
+            trace.cycles.push(TraceCycle {
+                cycle: cycle + 1,
+                c_a,
+                c_b,
+                output: chunk.iter().map(|x| format!("{:?}", x.key())).collect(),
+            });
+            out.extend(chunk);
+        }
+        (out, trace)
+    }
+}
+
+fn butterfly_slots<T: Item>(x: &mut [Slot<T>]) {
+    // Butterfly with the pad-aware comparison (pads lose key ties).
+    let w = x.len();
+    let mut stride = w / 2;
+    while stride >= 1 {
+        let mut g = 0;
+        while g < w {
+            for i in g..g + stride {
+                if x[i + stride].gt(&x[i]) {
+                    x.swap(i, i + stride);
+                }
+            }
+            g += 2 * stride;
+        }
+        stride /= 2;
+    }
+}
+
+/// Merge two descending-sorted slices (algorithm 1). Convenience wrapper.
+pub fn merge_basic<T: Item>(a: &[T], b: &[T], w: usize) -> Vec<T> {
+    FlimsMerger::new(a, b, w, Variant::Basic).run().0
+}
+
+/// Merge with the §4.1 skewness optimisation (algorithm 2).
+pub fn merge_skew<T: Item>(a: &[T], b: &[T], w: usize) -> (Vec<T>, MergeStats) {
+    FlimsMerger::new(a, b, w, Variant::Skew).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_sorted_pair, gen_u32, Distribution};
+    use crate::key::{is_sorted_desc, Kv};
+    use crate::util::rng::Rng;
+
+    fn oracle<T: Item>(a: &[T], b: &[T]) -> Vec<T> {
+        let mut v: Vec<T> = a.iter().chain(b.iter()).copied().collect();
+        v.sort_by(|x, y| y.key().cmp(&x.key()));
+        v
+    }
+
+    #[test]
+    fn paper_table1_example() {
+        // Table 1, w=4: descending inputs; output must be the merged list.
+        let a: Vec<u32> = vec![29, 26, 26, 17, 16, 11, 5, 4, 3, 3];
+        let b: Vec<u32> = vec![22, 21, 19, 18, 15, 12, 9, 8, 7, 0];
+        // Pad to a multiple of anything is NOT required: lengths are 10+10.
+        let out = merge_basic(&a, &b, 4);
+        assert_eq!(out, oracle(&a, &b));
+        // First chunk should be the paper's first output row 29 26 26 22.
+        assert_eq!(&out[..4], &[29, 26, 26, 22]);
+    }
+
+    #[test]
+    fn random_merges_all_w() {
+        let mut rng = Rng::new(11);
+        for wexp in 0..=6 {
+            let w = 1 << wexp;
+            for _ in 0..20 {
+                let n_a = rng.range(0, 200);
+                let n_b = rng.range(0, 200);
+                let (a, b) =
+                    gen_sorted_pair(&mut rng, n_a, n_b, Distribution::Uniform, gen_u32);
+                let out = merge_basic(&a, &b, w);
+                assert_eq!(out, oracle(&a, &b), "w={w} nA={n_a} nB={n_b}");
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_heavy_merges() {
+        let mut rng = Rng::new(12);
+        for _ in 0..20 {
+            let (a, b) = gen_sorted_pair(
+                &mut rng,
+                96,
+                96,
+                Distribution::DupHeavy { alphabet: 3 },
+                gen_u32,
+            );
+            assert_eq!(merge_basic(&a, &b, 8), oracle(&a, &b));
+        }
+    }
+
+    #[test]
+    fn kv_payloads_survive_sentinel_keys() {
+        // Records whose key equals the sentinel (0) must keep payloads —
+        // the pad-aware comparison guarantees it.
+        let a = vec![Kv::new(5, 1), Kv::new(0, 2), Kv::new(0, 3)];
+        let b = vec![Kv::new(0, 4)];
+        let out = merge_basic(&a, &b, 4);
+        let mut vals: Vec<u32> = out.iter().map(|kv| kv.val).collect();
+        vals.sort_unstable();
+        assert_eq!(vals, vec![1, 2, 3, 4]);
+        assert!(is_sorted_desc(&out));
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(merge_basic::<u32>(&[], &[], 4), vec![]);
+        assert_eq!(merge_basic(&[3u32, 1], &[], 4), vec![3, 1]);
+        assert_eq!(merge_basic(&[], &[9u32], 8), vec![9]);
+    }
+
+    #[test]
+    fn skew_variant_correct() {
+        let mut rng = Rng::new(13);
+        for _ in 0..20 {
+            let (a, b) = gen_sorted_pair(
+                &mut rng,
+                64,
+                64,
+                Distribution::DupHeavy { alphabet: 2 },
+                gen_u32,
+            );
+            let (out, _) = merge_skew(&a, &b, 8);
+            assert_eq!(out, oracle(&a, &b));
+        }
+    }
+
+    #[test]
+    fn skew_variant_balances_duplicates() {
+        // All-equal inputs: algorithm 1 drains B first (ties pick B);
+        // algorithm 2 must alternate, halving the imbalance (§4.1).
+        let a = vec![7u32; 256];
+        let b = vec![7u32; 256];
+        let w = 8;
+
+        let mut basic = FlimsMerger::new(&a, &b, w, Variant::Basic);
+        for _ in 0..basic.total_cycles() / 2 {
+            basic.step();
+        }
+        let basic_stats = basic.stats.clone();
+
+        let mut skew = FlimsMerger::new(&a, &b, w, Variant::Skew);
+        for _ in 0..skew.total_cycles() / 2 {
+            skew.step();
+        }
+        let skew_stats = skew.stats.clone();
+
+        // Basic: first half of cycles dequeue only from B.
+        assert_eq!(basic_stats.dequeued_a, 0);
+        // Skew: both inputs consumed at a similar rate.
+        let (da, db) = (skew_stats.dequeued_a, skew_stats.dequeued_b);
+        assert!(
+            da.abs_diff(db) <= w,
+            "skew variant imbalance too high: A={da} B={db}"
+        );
+        // Algorithm 2 keeps cumulative imbalance bounded (≤ 2w here);
+        // algorithm 1's grows with the duplicate-run length.
+        assert!(skew_stats.max_cum_imbalance <= 2 * w);
+        assert!(basic_stats.max_cum_imbalance >= 128 - w);
+    }
+
+    #[test]
+    fn per_cycle_output_is_w_when_full() {
+        let mut rng = Rng::new(14);
+        let (a, b) = gen_sorted_pair(&mut rng, 64, 64, Distribution::Uniform, gen_u32);
+        let mut m = FlimsMerger::new(&a, &b, 8, Variant::Basic);
+        let mut prev_min: Option<u32> = None;
+        for _ in 0..m.total_cycles() {
+            let chunk = m.step();
+            assert_eq!(chunk.len(), 8, "valid cycles emit exactly w elements");
+            assert!(is_sorted_desc(&chunk));
+            if let Some(p) = prev_min {
+                assert!(chunk[0] <= p, "chunks must be globally descending");
+            }
+            prev_min = Some(*chunk.last().unwrap());
+        }
+    }
+
+    #[test]
+    fn trace_matches_paper_shape() {
+        let a: Vec<u32> = vec![29, 26, 26, 17, 16, 11, 5, 4, 3, 3];
+        let b: Vec<u32> = vec![22, 21, 19, 18, 15, 12, 9, 8, 7, 0];
+        let (out, trace) = FlimsMerger::new(&a, &b, 4, Variant::Basic).run_traced();
+        assert_eq!(out.len(), 20);
+        assert_eq!(trace.cycles.len(), 5);
+        let rendered = trace.render();
+        assert!(rendered.contains("29 26 26 22") || rendered.contains("22 26 26 29"));
+    }
+}

@@ -1,0 +1,214 @@
+//! Complete FLiMS-based merge sort (paper §8.2): sort-in-chunks builds
+//! the initial runs, then FLiMS merge passes double the run length until
+//! one run remains. Ping-pong buffers avoid per-pass allocation.
+//!
+//! Handles arbitrary lengths (not just powers of two): the bulk is
+//! chunk-aligned; the tail run is sorted directly and folded in by a
+//! final unbalanced merge — the merger itself supports unequal inputs.
+
+use crate::flims::chunk_sort::{insertion_sort_desc, sort_chunks_columnar};
+use crate::flims::lanes::merge_desc_fast_slice;
+use crate::key::{Item, Key};
+
+/// Tuning knobs for the sort pipeline.
+#[derive(Clone, Copy, Debug)]
+pub struct SortConfig {
+    /// Lane parallelism of the merge passes (paper fig. 14 sweeps this;
+    /// 16–32 was optimal on their AVX2 host).
+    pub w: usize,
+    /// Initial sorted-run length (paper §8.2: 512 on their host).
+    pub chunk: usize,
+}
+
+impl Default for SortConfig {
+    fn default() -> Self {
+        SortConfig { w: 16, chunk: 128 }
+    }
+}
+
+impl SortConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.w.is_power_of_two() {
+            return Err(format!("w={} must be a power of two", self.w));
+        }
+        if !self.chunk.is_power_of_two() {
+            return Err(format!("chunk={} must be a power of two", self.chunk));
+        }
+        if self.chunk < self.w {
+            return Err(format!(
+                "chunk={} must be >= w={}",
+                self.chunk, self.w
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Sort descending in place (buffer strategy internally ping-pongs).
+pub fn sort_desc<T>(x: &mut Vec<T>, cfg: SortConfig)
+where
+    T: Item<K = T> + Key,
+{
+    cfg.validate().expect("invalid SortConfig");
+    let n = x.len();
+    if n <= 1 {
+        return;
+    }
+    if n < 2 * cfg.chunk {
+        insertion_sort_desc(x);
+        return;
+    }
+
+    // Split: chunk-aligned bulk + tail.
+    let bulk = (n / cfg.chunk) * cfg.chunk;
+    sort_chunks_columnar(&mut x[..bulk], cfg.chunk);
+    insertion_sort_desc(&mut x[bulk..]);
+
+    // Merge passes over the bulk, ping-ponging between x and a scratch
+    // buffer. All writes go through exact-sized slices so the unsorted
+    // tail `x[bulk..]` is never disturbed.
+    //
+    // The lane width adapts to the run length (fig. 14: the optimum w
+    // grows with how much streaming work amortises the prime/drain):
+    // short early runs use cfg.w, long streaming passes widen up to 128.
+    let mut scratch: Vec<T> = vec![T::SENTINEL; n];
+    let mut run = cfg.chunk;
+    let mut src_is_x = true;
+    while run < bulk {
+        let w = adaptive_w(cfg.w, run);
+        {
+            let (src, dst): (&[T], &mut [T]) = if src_is_x {
+                (&x[..bulk], &mut scratch[..bulk])
+            } else {
+                (&scratch[..bulk], &mut x[..bulk])
+            };
+            let mut pos = 0;
+            while pos < bulk {
+                let end = (pos + 2 * run).min(bulk);
+                if pos + run >= end {
+                    // Lone (possibly short) run: copy through.
+                    dst[pos..end].copy_from_slice(&src[pos..end]);
+                } else {
+                    let (a, b) = (&src[pos..pos + run], &src[pos + run..end]);
+                    merge_desc_fast_slice(a, b, w, &mut dst[pos..end]);
+                }
+                pos = end;
+            }
+        }
+        src_is_x = !src_is_x;
+        run *= 2;
+    }
+
+    // Bring the bulk back into x if it ended in scratch.
+    if !src_is_x {
+        x[..bulk].copy_from_slice(&scratch[..bulk]);
+    }
+
+    // Fold in the tail (already sorted) with one unbalanced merge.
+    if bulk < n {
+        {
+            let (head, tail) = x.split_at(bulk);
+            merge_desc_fast_slice(head, tail, cfg.w, &mut scratch[..n]);
+        }
+        x.copy_from_slice(&scratch[..n]);
+    }
+}
+
+/// Lane width for a merge pass over runs of length `run`: at least the
+/// configured `w`, widened (up to 128) once the runs are long enough to
+/// amortise the wider merger's prime/drain (≈ run/2).
+#[inline]
+pub fn adaptive_w(base_w: usize, run: usize) -> usize {
+    let cap = (run / 2).next_power_of_two().min(128).max(1);
+    base_w.max(cap.min(128)).min(run.next_power_of_two())
+}
+
+/// Sort ascending in place (descending sort + reverse).
+pub fn sort_asc<T>(x: &mut Vec<T>, cfg: SortConfig)
+where
+    T: Item<K = T> + Key,
+{
+    sort_desc(x, cfg);
+    x.reverse();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_u32, Distribution};
+    use crate::util::rng::Rng;
+
+    fn check(mut v: Vec<u32>, cfg: SortConfig) {
+        let mut expect = v.clone();
+        expect.sort_unstable_by(|a, b| b.cmp(a));
+        sort_desc(&mut v, cfg);
+        assert_eq!(v, expect, "cfg={cfg:?}");
+    }
+
+    #[test]
+    fn sorts_various_sizes() {
+        let mut rng = Rng::new(61);
+        for n in [0usize, 1, 2, 7, 100, 127, 128, 129, 1000, 4096, 10_000, 65_536] {
+            let v = gen_u32(&mut rng, n, Distribution::Uniform);
+            check(v, SortConfig::default());
+        }
+    }
+
+    #[test]
+    fn sorts_all_distributions() {
+        let mut rng = Rng::new(62);
+        for dist in [
+            Distribution::Uniform,
+            Distribution::DupHeavy { alphabet: 3 },
+            Distribution::SortedAsc,
+            Distribution::SortedDesc,
+            Distribution::Runs { run: 32 },
+            Distribution::Constant,
+            Distribution::Zipf { s_x100: 120, n_ranks: 64 },
+        ] {
+            let v = gen_u32(&mut rng, 5000, dist);
+            check(v, SortConfig::default());
+        }
+    }
+
+    #[test]
+    fn sorts_with_all_configs() {
+        let mut rng = Rng::new(63);
+        let v = gen_u32(&mut rng, 20_000, Distribution::Uniform);
+        for w in [4usize, 8, 16, 32, 64] {
+            for chunk in [64usize, 128, 512] {
+                if chunk >= w {
+                    check(v.clone(), SortConfig { w, chunk });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ascending_wrapper() {
+        let mut rng = Rng::new(64);
+        let mut v = gen_u32(&mut rng, 3000, Distribution::Uniform);
+        let mut expect = v.clone();
+        expect.sort_unstable();
+        sort_asc(&mut v, SortConfig::default());
+        assert_eq!(v, expect);
+    }
+
+    #[test]
+    fn u64_keys() {
+        let mut rng = Rng::new(65);
+        let mut v: Vec<u64> = (0..10_000).map(|_| rng.next_u64()).collect();
+        let mut expect = v.clone();
+        expect.sort_unstable_by(|a, b| b.cmp(a));
+        sort_desc(&mut v, SortConfig::default());
+        assert_eq!(v, expect);
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(SortConfig { w: 3, chunk: 128 }.validate().is_err());
+        assert!(SortConfig { w: 16, chunk: 100 }.validate().is_err());
+        assert!(SortConfig { w: 16, chunk: 8 }.validate().is_err());
+        assert!(SortConfig { w: 16, chunk: 16 }.validate().is_ok());
+    }
+}

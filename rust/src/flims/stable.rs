@@ -1,0 +1,272 @@
+//! Stable FLiMS merge (paper §4.2, algorithm 3).
+//!
+//! Stability: duplicates from input A precede duplicates from input B in
+//! the output, and within each input the original order is kept. The
+//! hardware scheme appends {source bit, 2-bit batch-order counter, port
+//! number} to the key MSB-side; the 2-bit counter wraps, and the CAS
+//! units special-case the `00 vs 11` comparison — earliness is only ever
+//! compared between tags at distance ≤ 1, so two bits suffice (§4.2).
+//!
+//! This module implements the *faithful finite-tag* scheme (not a
+//! widened sequence number), so the paper's claim that 2 bits are enough
+//! is itself under test here.
+
+use crate::key::Item;
+
+/// Augmented lane record: item + stability tag.
+#[derive(Clone, Copy, Debug)]
+struct Tagged<T> {
+    item: T,
+    /// true if from input A (A wins key ties — algorithm 3 line 6).
+    from_a: bool,
+    /// 2-bit wrapping batch-order counter (algorithm 3: starts 0,
+    /// decrements per dequeue of the lane's bank).
+    order: u8,
+    /// port tag: `w-1-i` for A-lanes, `i` for B-lanes (algorithm 3
+    /// lines 7/11) — disambiguates order inside one batch.
+    port: u32,
+    real: bool,
+}
+
+/// Compare two wrapping 2-bit order tags for "earlier" (greater priority
+/// in descending output). Values decrement over time: 0,3,2,1,0,…
+/// Adjacent comparisons: 0>3 (special case "00 beats 11"), 3>2, 2>1, 1>0.
+#[inline]
+fn order_earlier(a: u8, b: u8) -> std::cmp::Ordering {
+    use std::cmp::Ordering::*;
+    if a == b {
+        return Equal;
+    }
+    // Special case from §4.2: "00" against "11" — 00 is earlier.
+    match (a, b) {
+        (0b00, 0b11) => Greater,
+        (0b11, 0b00) => Less,
+        // All other reachable pairs differ by one: larger = earlier.
+        _ => a.cmp(&b),
+    }
+}
+
+impl<T: Item> Tagged<T> {
+    /// Descending priority comparison with stability tags, matching the
+    /// augmented-key comparison of the modified CAS units.
+    #[inline]
+    fn beats(&self, other: &Tagged<T>) -> bool {
+        use std::cmp::Ordering::*;
+        match self.item.key().cmp(&other.item.key()) {
+            Greater => true,
+            Less => false,
+            Equal => match (self.real, other.real) {
+                (true, false) => true,
+                (false, true) => false,
+                (false, false) => false,
+                (true, true) => match (self.from_a, other.from_a) {
+                    (true, false) => true, // A-duplicates first
+                    (false, true) => false,
+                    _ => match order_earlier(self.order, other.order) {
+                        Greater => true,
+                        Less => false,
+                        // Same batch: higher port tag = earlier element.
+                        Equal => self.port > other.port,
+                    },
+                },
+            },
+        }
+    }
+}
+
+/// Stable merge of two descending-sorted (stably) slices — algorithm 3.
+pub fn merge_stable<T: Item>(a: &[T], b: &[T], w: usize) -> Vec<T> {
+    assert!(w.is_power_of_two());
+    let total = a.len() + b.len();
+    let mut out = Vec::with_capacity(total);
+    if total == 0 {
+        return out;
+    }
+
+    let fetch_a = |i: usize, t: usize| -> Option<T> { a.get(i + w * t).copied() };
+    let fetch_b = |i: usize, t: usize| -> Option<T> { b.get((w - 1 - i) + w * t).copied() };
+
+    let mut c_a: Vec<Tagged<T>> = (0..w)
+        .map(|i| Tagged {
+            item: fetch_a(i, 0).unwrap_or_else(T::sentinel),
+            from_a: true,
+            order: 0,
+            port: (w - 1 - i) as u32,
+            real: fetch_a(i, 0).is_some(),
+        })
+        .collect();
+    let mut c_b: Vec<Tagged<T>> = (0..w)
+        .map(|i| Tagged {
+            item: fetch_b(i, 0).unwrap_or_else(T::sentinel),
+            from_a: false,
+            order: 0,
+            port: i as u32,
+            real: fetch_b(i, 0).is_some(),
+        })
+        .collect();
+    let mut t_a = vec![0usize; w];
+    let mut t_b = vec![0usize; w];
+    // Per-lane 2-bit order counters (algorithm 3 lines 9/13: decrement).
+    let mut order_a = vec![0u8; w];
+    let mut order_b = vec![0u8; w];
+
+    let steps = total.div_ceil(w);
+    let mut chosen: Vec<Tagged<T>> = Vec::with_capacity(w);
+    for _ in 0..steps {
+        chosen.clear();
+        for i in 0..w {
+            // Algorithm 3 line 6: A wins ties.
+            let take_a = c_a[i].beats(&c_b[i]);
+            chosen.push(if take_a { c_a[i] } else { c_b[i] });
+            if take_a {
+                t_a[i] += 1;
+                order_a[i] = order_a[i].wrapping_sub(1) & 0b11;
+                let nxt = fetch_a(i, t_a[i]);
+                c_a[i] = Tagged {
+                    item: nxt.unwrap_or_else(T::sentinel),
+                    from_a: true,
+                    order: order_a[i],
+                    port: (w - 1 - i) as u32,
+                    real: nxt.is_some(),
+                };
+            } else {
+                t_b[i] += 1;
+                order_b[i] = order_b[i].wrapping_sub(1) & 0b11;
+                let nxt = fetch_b(i, t_b[i]);
+                c_b[i] = Tagged {
+                    item: nxt.unwrap_or_else(T::sentinel),
+                    from_a: false,
+                    order: order_b[i],
+                    port: i as u32,
+                    real: nxt.is_some(),
+                };
+            }
+        }
+        // CAS network with tag-aware comparisons.
+        let mut stride = w / 2;
+        while stride >= 1 {
+            let mut g = 0;
+            while g < w {
+                for i in g..g + stride {
+                    if chosen[i + stride].beats(&chosen[i]) {
+                        chosen.swap(i, i + stride);
+                    }
+                }
+                g += 2 * stride;
+            }
+            stride /= 2;
+        }
+        for s in chosen.iter().filter(|s| s.real) {
+            out.push(s.item);
+        }
+    }
+    debug_assert_eq!(out.len(), total);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_kv, Distribution};
+    use crate::key::Kv;
+    use crate::util::rng::Rng;
+
+    /// Stable descending oracle: A's records precede B's on ties, each
+    /// input keeps its own order.
+    fn oracle(a: &[Kv], b: &[Kv]) -> Vec<Kv> {
+        let mut v: Vec<(u32, usize, Kv)> = a
+            .iter()
+            .enumerate()
+            .map(|(i, &kv)| (0, i, kv))
+            .chain(b.iter().enumerate().map(|(i, &kv)| (1, i, kv)))
+            .map(|(src, i, kv)| (src, i, kv))
+            .collect();
+        v.sort_by(|x, y| {
+            y.2.key
+                .cmp(&x.2.key)
+                .then(x.0.cmp(&y.0))
+                .then(x.1.cmp(&y.1))
+        });
+        v.into_iter().map(|(_, _, kv)| kv).collect()
+    }
+
+    fn sorted_kv(rng: &mut Rng, n: usize, alphabet: u32) -> Vec<Kv> {
+        let mut v = gen_kv(rng, n, Distribution::DupHeavy { alphabet });
+        v.sort_by(|a, b| b.key.cmp(&a.key).then(a.val.cmp(&b.val)));
+        v
+    }
+
+    #[test]
+    fn a_duplicates_precede_b() {
+        let a = vec![Kv::new(5, 0), Kv::new(5, 1)];
+        let b = vec![Kv::new(5, 100), Kv::new(5, 101)];
+        let out = merge_stable(&a, &b, 4);
+        assert_eq!(out, vec![Kv::new(5, 0), Kv::new(5, 1), Kv::new(5, 100), Kv::new(5, 101)]);
+    }
+
+    #[test]
+    fn stable_on_duplicate_heavy_inputs() {
+        let mut rng = Rng::new(31);
+        for w in [2usize, 4, 8, 16] {
+            for _ in 0..10 {
+                let (na, nb) = (rng.range(0, 120), rng.range(0, 120));
+                let a = sorted_kv(&mut rng, na, 3);
+                let b = sorted_kv(&mut rng, nb, 3);
+                let out = merge_stable(&a, &b, w);
+                assert_eq!(out, oracle(&a, &b), "w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn stable_on_unique_keys_matches_plain_sort() {
+        let mut rng = Rng::new(32);
+        let mut a: Vec<Kv> = (0..64).map(|i| Kv::new(rng.next_u32() | 1, i)).collect();
+        let mut b: Vec<Kv> = (0..64).map(|i| Kv::new(rng.next_u32() | 1, 1000 + i)).collect();
+        a.sort_by(|x, y| y.key.cmp(&x.key));
+        b.sort_by(|x, y| y.key.cmp(&x.key));
+        let out = merge_stable(&a, &b, 8);
+        assert_eq!(out, oracle(&a, &b));
+    }
+
+    #[test]
+    fn all_equal_keys_keeps_input_order() {
+        // The hardest stability case: every key identical — output must
+        // be exactly A in order, then B in order.
+        for w in [2usize, 4, 8] {
+            let a: Vec<Kv> = (0..4 * w as u32).map(|i| Kv::new(9, i)).collect();
+            let b: Vec<Kv> = (0..4 * w as u32).map(|i| Kv::new(9, 500 + i)).collect();
+            let out = merge_stable(&a, &b, w);
+            let expect: Vec<Kv> = a.iter().chain(b.iter()).copied().collect();
+            assert_eq!(out, expect, "w={w}");
+        }
+    }
+
+    #[test]
+    fn order_tag_special_case() {
+        use std::cmp::Ordering::*;
+        assert_eq!(order_earlier(0b00, 0b11), Greater); // the §4.2 case
+        assert_eq!(order_earlier(0b11, 0b00), Less);
+        assert_eq!(order_earlier(0b11, 0b10), Greater);
+        assert_eq!(order_earlier(0b10, 0b01), Greater);
+        assert_eq!(order_earlier(0b01, 0b00), Greater);
+        assert_eq!(order_earlier(0b10, 0b10), Equal);
+    }
+
+    #[test]
+    fn unequal_lengths() {
+        let mut rng = Rng::new(33);
+        let a = sorted_kv(&mut rng, 5, 2);
+        let b = sorted_kv(&mut rng, 37, 2);
+        assert_eq!(merge_stable(&a, &b, 8), oracle(&a, &b));
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let a: Vec<Kv> = vec![];
+        let b = vec![Kv::new(1, 0)];
+        assert_eq!(merge_stable(&a, &b, 4), b);
+        assert_eq!(merge_stable(&b, &a, 4), b);
+        assert!(merge_stable(&a, &a, 4).is_empty());
+    }
+}

@@ -1,0 +1,202 @@
+//! Closed-form Table 2: feedback length, latency and comparator count
+//! for every high-throughput 2-way merger the paper compares. The
+//! structural generators in [`super::gen`] must agree with these — the
+//! same cross-check the paper performs between its formulas and yosys
+//! synthesis of the generated Verilog.
+
+/// The eight designs of Table 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Design {
+    /// Chhugani/Casper full bitonic-merger loop [12], [17]
+    Basic,
+    /// Song et al. parallel merge tree building block [3]
+    Pmt,
+    /// Saitoh et al. bitonic, two partial mergers + shift regs [4]
+    Mms,
+    /// Saitoh & Kise odd-even variant [5]
+    Vms,
+    /// Elsayed & Kise 3w-to-w odd-even [6], [7]
+    Wms,
+    /// Elsayed & Kise 2.5w-to-w odd-even [6], [7]
+    Ehms,
+    /// this paper
+    Flims,
+    /// §4.3 whole-row variant
+    Flimsj,
+}
+
+pub const ALL_DESIGNS: [Design; 8] = [
+    Design::Basic,
+    Design::Pmt,
+    Design::Mms,
+    Design::Vms,
+    Design::Wms,
+    Design::Ehms,
+    Design::Flims,
+    Design::Flimsj,
+];
+
+impl Design {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Design::Basic => "basic",
+            Design::Pmt => "PMT",
+            Design::Mms => "MMS",
+            Design::Vms => "VMS",
+            Design::Wms => "WMS",
+            Design::Ehms => "EHMS",
+            Design::Flims => "FLiMS",
+            Design::Flimsj => "FLiMSj",
+        }
+    }
+
+    /// Feedback datapath length in stages (Table 2).
+    pub fn feedback_len(&self, w: usize) -> usize {
+        let lg = log2(w);
+        match self {
+            Design::Basic => lg + 2,
+            Design::Pmt => lg + 1,
+            _ => 1,
+        }
+    }
+
+    /// Pipeline latency in cycles (Table 2).
+    pub fn latency(&self, w: usize) -> usize {
+        let lg = log2(w);
+        match self {
+            Design::Basic => lg + 2,
+            Design::Pmt => 2 * lg + 1,
+            Design::Mms | Design::Vms => 2 * lg + 3,
+            Design::Wms | Design::Ehms => lg + 3,
+            Design::Flims => lg + 1,
+            Design::Flimsj => lg + 2,
+        }
+    }
+
+    /// Comparator count (Table 2; the WMS/EHMS forms derive from Cullen
+    /// numbers per the paper).
+    pub fn comparators(&self, w: usize) -> usize {
+        let lg = log2(w);
+        match self {
+            Design::Basic => w + w * lg,
+            Design::Pmt => w + (w * lg) / 2,
+            Design::Mms | Design::Vms => 2 * w + w * lg + 1,
+            Design::Wms => 3 * w + (w * lg) / 2,
+            Design::Ehms => (5 * w) / 2 + (w * lg) / 2 + 2,
+            Design::Flims => w + (w * lg) / 2,
+            Design::Flimsj => w + (w * lg) / 2,
+        }
+    }
+
+    /// Does the design suffer the tie-record issue (Table 2)?
+    pub fn tie_record_unsafe(&self) -> bool {
+        matches!(self, Design::Mms | Design::Vms | Design::Wms | Design::Ehms)
+    }
+
+    /// Merger-topology family (Table 2).
+    pub fn topology(&self) -> &'static str {
+        match self {
+            Design::Basic | Design::Pmt | Design::Mms | Design::Flims | Design::Flimsj => {
+                "bitonic"
+            }
+            Design::Vms | Design::Wms | Design::Ehms => "odd-even",
+        }
+    }
+
+    /// Hardware-module summary string (Table 2 column 5).
+    pub fn modules(&self) -> &'static str {
+        match self {
+            Design::Basic => "1x 2w-to-2w merger",
+            Design::Pmt => "1x 2w-to-w merger + 2 barrel shifters",
+            Design::Mms | Design::Vms => "2x 2w-to-w mergers + shift registers",
+            Design::Wms => "1x 3w-to-w merger",
+            Design::Ehms => "1x 2.5w-to-w merger",
+            Design::Flims | Design::Flimsj => "1x 2w-to-w merger",
+        }
+    }
+}
+
+pub fn log2(w: usize) -> usize {
+    debug_assert!(w.is_power_of_two());
+    w.trailing_zeros() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_comparators_at_w4() {
+        // Spot-check the closed forms at w=4 (lg=2).
+        assert_eq!(Design::Basic.comparators(4), 12); // w + w lg = 4+8
+        assert_eq!(Design::Pmt.comparators(4), 8); // 4+4
+        assert_eq!(Design::Mms.comparators(4), 17); // 8+8+1
+        assert_eq!(Design::Vms.comparators(4), 17);
+        assert_eq!(Design::Wms.comparators(4), 16); // 12+4
+        assert_eq!(Design::Ehms.comparators(4), 16); // 10+4+2
+        assert_eq!(Design::Flims.comparators(4), 8);
+        assert_eq!(Design::Flimsj.comparators(4), 8);
+    }
+
+    #[test]
+    fn flims_has_fewest_comparators_everywhere() {
+        for wexp in 1..=9 {
+            let w = 1 << wexp;
+            let f = Design::Flims.comparators(w);
+            for d in ALL_DESIGNS {
+                assert!(
+                    d.comparators(w) >= f,
+                    "{} beats FLiMS at w={w}",
+                    d.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn flims_has_least_latency_everywhere() {
+        for wexp in 1..=9 {
+            let w = 1 << wexp;
+            let f = Design::Flims.latency(w);
+            for d in ALL_DESIGNS {
+                assert!(d.latency(w) >= f, "{} latency at w={w}", d.name());
+            }
+        }
+    }
+
+    #[test]
+    fn feedback_classes() {
+        // basic/PMT have growing feedback; the rest are feedback-less.
+        assert_eq!(Design::Basic.feedback_len(64), 8);
+        assert_eq!(Design::Pmt.feedback_len(64), 7);
+        for d in [Design::Mms, Design::Vms, Design::Wms, Design::Ehms, Design::Flims, Design::Flimsj]
+        {
+            assert_eq!(d.feedback_len(64), 1, "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn tie_record_column() {
+        assert!(!Design::Basic.tie_record_unsafe());
+        assert!(!Design::Pmt.tie_record_unsafe());
+        assert!(Design::Mms.tie_record_unsafe());
+        assert!(Design::Vms.tie_record_unsafe());
+        assert!(Design::Wms.tie_record_unsafe());
+        assert!(Design::Ehms.tie_record_unsafe());
+        assert!(!Design::Flims.tie_record_unsafe());
+        assert!(!Design::Flimsj.tie_record_unsafe());
+    }
+
+    #[test]
+    fn latencies_match_table2_at_w8() {
+        // lg = 3
+        assert_eq!(Design::Basic.latency(8), 5);
+        assert_eq!(Design::Pmt.latency(8), 7);
+        assert_eq!(Design::Mms.latency(8), 9);
+        assert_eq!(Design::Vms.latency(8), 9);
+        assert_eq!(Design::Wms.latency(8), 6);
+        assert_eq!(Design::Ehms.latency(8), 6);
+        assert_eq!(Design::Flims.latency(8), 4);
+        assert_eq!(Design::Flimsj.latency(8), 5);
+    }
+}

@@ -1,0 +1,451 @@
+//! Behavioural (cycle-level) merger models driven by [`super::engine`].
+//!
+//! * [`FlimsCycle`] — algorithms 1/2: per-bank dequeues through the
+//!   distributed MAX selector; stalls only when a *needed* bank head is
+//!   missing.
+//! * [`FlimsjCycle`] — algorithm 4 granularity: needs whole rows.
+//! * [`RowMergerCycle`] — the MMS/VMS/WMS feedback-less row-dequeue
+//!   class (figs. 6–7): one whole row per cycle from the side whose head
+//!   is larger, merged against the carried row. Its `tie_unsafe` mode
+//!   reproduces the *tie-record issue* mechanism (§6): output and carry
+//!   are computed by two independent unstable orders, so records with
+//!   duplicate keys can be duplicated or lost across the boundary.
+//! * [`BasicCycle`] — the Chhugani/Casper loop with its long feedback:
+//!   the engine charges `feedback_len` cycles per selection.
+
+use super::fifo::BankedFifo;
+use crate::key::Item;
+
+/// One merger selection step: either a produced chunk of up to `w`
+/// records, or a stall with a reason.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StepOut<T> {
+    Chunk(Vec<T>),
+    StallInput,
+    Done,
+}
+
+/// Cycle-level behaviour: one `select` per clock. The engine adds the
+/// pipeline latency and measures stalls/throughput.
+pub trait CycleMerger<T: Item> {
+    fn w(&self) -> usize;
+    /// pipeline latency in cycles (selection → output)
+    fn latency(&self) -> usize;
+    /// cycles consumed per selection (1 for the feedback-less designs;
+    /// `feedback_len` for basic/PMT whose loop cannot be pipelined)
+    fn cycles_per_select(&self) -> usize {
+        1
+    }
+    fn select(&mut self, qa: &mut BankedFifo<T>, qb: &mut BankedFifo<T>) -> StepOut<T>;
+}
+
+// ------------------------------------------------------------- FLiMS
+
+/// Lane state for the FLiMS selector.
+#[derive(Clone, Copy, Debug)]
+struct Slot<T> {
+    item: T,
+    real: bool,
+}
+
+/// FLiMS / FLiMS-skew cycle model (paper algorithms 1 & 2).
+pub struct FlimsCycle<T> {
+    w: usize,
+    latency: usize,
+    skew: bool,
+    c_a: Vec<Option<Slot<T>>>, // None = register empty, must load
+    c_b: Vec<Option<Slot<T>>>,
+    dir: Vec<bool>,
+    emitted: usize,
+    total_hint: Option<usize>,
+}
+
+impl<T: Item> FlimsCycle<T> {
+    pub fn new(w: usize, skew: bool) -> Self {
+        let latency = crate::hw::analytical::log2(w) + 1;
+        FlimsCycle {
+            w,
+            latency,
+            skew,
+            c_a: vec![None; w],
+            c_b: vec![None; w],
+            dir: vec![false; w],
+            emitted: 0,
+            total_hint: None,
+        }
+    }
+
+    /// Try to fill empty lane registers from the FIFOs / end-of-stream.
+    fn load(&mut self, qa: &mut BankedFifo<T>, qb: &mut BankedFifo<T>) -> bool {
+        let w = self.w;
+        let mut ok = true;
+        for i in 0..w {
+            if self.c_a[i].is_none() {
+                if let Some(x) = qa.pop(i) {
+                    self.c_a[i] = Some(Slot { item: x, real: true });
+                } else if qa.ended {
+                    self.c_a[i] = Some(Slot { item: T::sentinel(), real: false });
+                } else {
+                    ok = false;
+                }
+            }
+            if self.c_b[i].is_none() {
+                let bank = w - 1 - i;
+                if let Some(x) = qb.pop(bank) {
+                    self.c_b[i] = Some(Slot { item: x, real: true });
+                } else if qb.ended {
+                    self.c_b[i] = Some(Slot { item: T::sentinel(), real: false });
+                } else {
+                    ok = false;
+                }
+            }
+        }
+        ok
+    }
+}
+
+impl<T: Item> CycleMerger<T> for FlimsCycle<T> {
+    fn w(&self) -> usize {
+        self.w
+    }
+    fn latency(&self) -> usize {
+        self.latency
+    }
+
+    fn select(&mut self, qa: &mut BankedFifo<T>, qb: &mut BankedFifo<T>) -> StepOut<T> {
+        if !self.load(qa, qb) {
+            return StepOut::StallInput;
+        }
+        let w = self.w;
+        // All real work done and registers hold only pads → done.
+        if self.c_a.iter().chain(self.c_b.iter()).all(|s| !s.unwrap().real) {
+            return StepOut::Done;
+        }
+        let mut chosen: Vec<Slot<T>> = Vec::with_capacity(w);
+        for i in 0..w {
+            let (ca, cb) = (self.c_a[i].unwrap(), self.c_b[i].unwrap());
+            let gt = match ca.item.key().cmp(&cb.item.key()) {
+                std::cmp::Ordering::Greater => true,
+                std::cmp::Ordering::Less => false,
+                std::cmp::Ordering::Equal => {
+                    if ca.real != cb.real {
+                        ca.real
+                    } else if self.skew {
+                        self.dir[i] // algorithm 2 oscillation
+                    } else {
+                        false // algorithm 1: ties take B
+                    }
+                }
+            };
+            if gt {
+                chosen.push(ca);
+                self.c_a[i] = None; // dequeued: reload next cycle
+                self.dir[i] = false;
+            } else {
+                chosen.push(cb);
+                self.c_b[i] = None;
+                self.dir[i] = true;
+            }
+        }
+        // CAS network (combinational within the pipeline).
+        let mut stride = w / 2;
+        while stride >= 1 {
+            let mut g = 0;
+            while g < w {
+                for i in g..g + stride {
+                    let (a, b) = (chosen[i], chosen[i + stride]);
+                    let swap = match b.item.key().cmp(&a.item.key()) {
+                        std::cmp::Ordering::Greater => true,
+                        std::cmp::Ordering::Less => false,
+                        std::cmp::Ordering::Equal => b.real && !a.real,
+                    };
+                    if swap {
+                        chosen.swap(i, i + stride);
+                    }
+                }
+                g += 2 * stride;
+            }
+            stride /= 2;
+        }
+        let out: Vec<T> = chosen.iter().filter(|s| s.real).map(|s| s.item).collect();
+        self.emitted += out.len();
+        let _ = self.total_hint;
+        StepOut::Chunk(out)
+    }
+}
+
+// ---------------------------------------------------- row-dequeue class
+
+/// Which published design this row-merger instance stands for (affects
+/// latency and the tie-record behaviour flag only — the dequeue
+/// architecture is common to the class, figs. 6–7).
+#[derive(Clone, Copy, Debug)]
+pub enum RowClass {
+    Mms,
+    Vms,
+    Wms,
+}
+
+/// MMS/VMS/WMS-style feedback-less row merger.
+pub struct RowMergerCycle<T> {
+    w: usize,
+    latency: usize,
+    /// reproduce the §6 tie-record corruption (true = no workaround)
+    pub tie_unsafe: bool,
+    carry: Vec<T>,
+    carry_real: Vec<bool>,
+    primed_a: bool,
+    primed_b: bool,
+}
+
+impl<T: Item> RowMergerCycle<T> {
+    pub fn new(w: usize, class: RowClass) -> Self {
+        let lg = crate::hw::analytical::log2(w);
+        let latency = match class {
+            RowClass::Mms | RowClass::Vms => 2 * lg + 3,
+            RowClass::Wms => lg + 3,
+        };
+        RowMergerCycle {
+            w,
+            latency,
+            tie_unsafe: true,
+            carry: vec![T::sentinel(); w],
+            carry_real: vec![false; w],
+            primed_a: false,
+            primed_b: false,
+        }
+    }
+
+    fn take_row(q: &mut BankedFifo<T>, w: usize) -> Option<(Vec<T>, Vec<bool>)> {
+        if q.row_available() {
+            let row = q.pop_row().unwrap();
+            let real = vec![true; w];
+            Some((row, real))
+        } else if q.ended {
+            // Partial final row: drain what exists, pad the rest.
+            let mut row = Vec::with_capacity(w);
+            let mut real = Vec::with_capacity(w);
+            for i in 0..w {
+                match q.pop(i) {
+                    Some(x) => {
+                        row.push(x);
+                        real.push(true);
+                    }
+                    None => {
+                        row.push(T::sentinel());
+                        real.push(false);
+                    }
+                }
+            }
+            Some((row, real))
+        } else {
+            None
+        }
+    }
+}
+
+impl<T: Item> CycleMerger<T> for RowMergerCycle<T> {
+    fn w(&self) -> usize {
+        self.w
+    }
+    fn latency(&self) -> usize {
+        self.latency
+    }
+
+    fn select(&mut self, qa: &mut BankedFifo<T>, qb: &mut BankedFifo<T>) -> StepOut<T> {
+        let w = self.w;
+        // Prime the carry with the first row of A (fig. 6: the merger
+        // starts once both streams present a row).
+        if !self.primed_a {
+            match Self::take_row(qa, w) {
+                Some((row, real)) => {
+                    self.carry = row;
+                    self.carry_real = real;
+                    self.primed_a = true;
+                }
+                None => return StepOut::StallInput,
+            }
+        }
+        if !self.primed_b && !qb.row_available() && !qb.ended {
+            return StepOut::StallInput;
+        }
+        self.primed_b = true;
+
+        // Everything drained and carry empty → done.
+        let carry_live = self.carry_real.iter().any(|&r| r);
+        if qa.exhausted() && qb.exhausted() && !carry_live {
+            return StepOut::Done;
+        }
+
+        // Row choice: the side whose bank-0 head is larger feeds next
+        // (the single head comparison of figs. 4/6).
+        let head_a = qa.head(0).map(|x| x.key());
+        let head_b = qb.head(0).map(|x| x.key());
+        let from_a = match (head_a, head_b) {
+            (Some(a), Some(b)) => a > b,
+            (Some(_), None) => {
+                if !qb.ended {
+                    return StepOut::StallInput;
+                }
+                true
+            }
+            (None, Some(_)) => {
+                if !qa.ended {
+                    return StepOut::StallInput;
+                }
+                false
+            }
+            (None, None) => {
+                if !(qa.ended && qb.ended) {
+                    return StepOut::StallInput;
+                }
+                // Only the carry remains.
+                let mut pairs: Vec<(T, bool)> = self
+                    .carry
+                    .iter()
+                    .copied()
+                    .zip(self.carry_real.iter().copied())
+                    .collect();
+                pairs.sort_by(|x, y| y.0.key().cmp(&x.0.key()).then(y.1.cmp(&x.1)));
+                let out: Vec<T> =
+                    pairs.iter().filter(|(_, r)| *r).map(|(x, _)| *x).collect();
+                self.carry_real = vec![false; w];
+                return if out.is_empty() { StepOut::Done } else { StepOut::Chunk(out) };
+            }
+        };
+        let (row, row_real) = match Self::take_row(if from_a { qa } else { qb }, w) {
+            Some(r) => r,
+            None => return StepOut::StallInput,
+        };
+
+        // Candidate set: carry ∪ row (2w records). The published designs
+        // compute the OUTPUT (top w) and the NEW CARRY (bottom w) through
+        // two independent unstable merge networks. With unique keys both
+        // agree; with duplicate keys crossing the boundary they may not —
+        // the tie-record issue (§6). We reproduce exactly that: the top
+        // half is selected preferring carry-side on ties, the bottom half
+        // preferring row-side, so a tied record can be kept twice or
+        // dropped.
+        let mut cand: Vec<(T, bool, bool)> = Vec::with_capacity(2 * w); // (item, real, from_carry)
+        for i in 0..w {
+            cand.push((self.carry[i], self.carry_real[i], true));
+        }
+        for i in 0..w {
+            cand.push((row[i], row_real[i], false));
+        }
+
+        let top = {
+            let mut v = cand.clone();
+            // order 1: ties prefer carry
+            v.sort_by(|x, y| {
+                y.0.key()
+                    .cmp(&x.0.key())
+                    .then(y.1.cmp(&x.1))
+                    .then(y.2.cmp(&x.2))
+            });
+            v.truncate(w);
+            v
+        };
+        let bottom = if self.tie_unsafe {
+            let mut v = cand;
+            // order 2: ties prefer row — independent recomputation, the
+            // corruption source
+            v.sort_by(|x, y| {
+                y.0.key()
+                    .cmp(&x.0.key())
+                    .then(y.1.cmp(&x.1))
+                    .then(x.2.cmp(&y.2))
+            });
+            v.split_off(w)
+        } else {
+            // Workaround enabled: single consistent order.
+            let mut v = cand;
+            v.sort_by(|x, y| {
+                y.0.key()
+                    .cmp(&x.0.key())
+                    .then(y.1.cmp(&x.1))
+                    .then(y.2.cmp(&x.2))
+            });
+            v.split_off(w)
+        };
+
+        for (i, (item, real, _)) in bottom.into_iter().enumerate() {
+            self.carry[i] = item;
+            self.carry_real[i] = real;
+        }
+        let out: Vec<T> = top.iter().filter(|(_, r, _)| *r).map(|(x, _, _)| *x).collect();
+        StepOut::Chunk(out)
+    }
+}
+
+// ----------------------------------------------------------- basic loop
+
+/// Chhugani/Casper basic merger: functionally the row class with the
+/// consistent order (no tie issue), but its feedback spans the whole
+/// network — `cycles_per_select` = feedback length (Table 2 row 1).
+pub struct BasicCycle<T> {
+    inner: RowMergerCycle<T>,
+    feedback: usize,
+}
+
+impl<T: Item> BasicCycle<T> {
+    pub fn new(w: usize) -> Self {
+        let mut inner = RowMergerCycle::new(w, RowClass::Wms);
+        inner.tie_unsafe = false;
+        let lg = crate::hw::analytical::log2(w);
+        BasicCycle { inner, feedback: lg + 2 }
+    }
+}
+
+impl<T: Item> CycleMerger<T> for BasicCycle<T> {
+    fn w(&self) -> usize {
+        self.inner.w
+    }
+    fn latency(&self) -> usize {
+        self.feedback
+    }
+    fn cycles_per_select(&self) -> usize {
+        // The feedback loop cannot accept a new selection until the
+        // previous result returns: throughput = w / feedback_len.
+        self.feedback
+    }
+    fn select(&mut self, qa: &mut BankedFifo<T>, qb: &mut BankedFifo<T>) -> StepOut<T> {
+        self.inner.select(qa, qb)
+    }
+}
+
+// ----------------------------------------------------------- FLiMSj
+
+/// FLiMSj cycle model: FLiMS selection logic, whole-row input
+/// granularity (a lane stalls until its entire row is present), one
+/// extra pipeline stage.
+pub struct FlimsjCycle<T> {
+    inner: FlimsCycle<T>,
+}
+
+impl<T: Item> FlimsjCycle<T> {
+    pub fn new(w: usize) -> Self {
+        FlimsjCycle { inner: FlimsCycle::new(w, false) }
+    }
+}
+
+impl<T: Item> CycleMerger<T> for FlimsjCycle<T> {
+    fn w(&self) -> usize {
+        self.inner.w
+    }
+    fn latency(&self) -> usize {
+        self.inner.latency + 1
+    }
+    fn select(&mut self, qa: &mut BankedFifo<T>, qb: &mut BankedFifo<T>) -> StepOut<T> {
+        // Whole-row dequeue: refuse to start a cycle that would dequeue
+        // from a partially-filled row unless the stream has ended.
+        let needs_a = self.inner.c_a.iter().any(|s| s.is_none());
+        let needs_b = self.inner.c_b.iter().any(|s| s.is_none());
+        if (needs_a && !qa.row_available() && !qa.ended && qa.len() > 0)
+            || (needs_b && !qb.row_available() && !qb.ended && qb.len() > 0)
+        {
+            return StepOut::StallInput;
+        }
+        self.inner.select(qa, qb)
+    }
+}

@@ -1,0 +1,182 @@
+//! FPGA resource-cost model: LUT/FF estimates from structural netlist
+//! quantities — the stand-in for the paper's Vivado 2020.1 reports
+//! (Table 3 / fig. 12). See DESIGN.md §4 for the substitution argument.
+//!
+//! Calibration: the per-unit constants are fitted once against the
+//! paper's *FLiMS column* of Table 3 (64-bit, Alveo U280) and then
+//! applied uniformly to every design — so cross-design *ratios* (the
+//! paper's actual claim: FLiMS is ~1.5–2× more resource-efficient) are
+//! genuine predictions of the structural model, not fits.
+
+use super::types::{Netlist, Op};
+
+/// Estimated FPGA resources.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Resources {
+    pub luts: f64,
+    pub ffs: f64,
+}
+
+impl Resources {
+    pub fn kluts(&self) -> f64 {
+        self.luts / 1000.0
+    }
+    pub fn kffs(&self) -> f64 {
+        self.ffs / 1000.0
+    }
+}
+
+/// LUTs per data bit for a full CAS (comparator + two swap muxes,
+/// LUT6+carry packing).
+const LUT_PER_CAS_BIT: f64 = 2.2;
+/// LUTs per data bit for a MAX unit (comparator + one mux + dequeue ctl).
+const LUT_PER_MAX_BIT: f64 = 1.5;
+/// LUTs per data bit for a bare 2:1 mux (barrel shifters…).
+const LUT_PER_MUX2_BIT: f64 = 0.55;
+/// Fixed AXI-peripheral / control overhead, plus per-bank logic.
+const LUT_BASE: f64 = 600.0;
+const LUT_PER_BANK: f64 = 8.0;
+
+/// FF duplication factor for clock-enables/replication on wide columns.
+const FF_REG_FACTOR: f64 = 1.1;
+/// Control FFs (valids, cursors) per bank and fixed.
+const FF_PER_BANK: f64 = 10.0;
+const FF_BASE: f64 = 200.0;
+
+/// Estimate LUT/FF usage for one design instance (as an AXI peripheral,
+/// matching the §7 methodology).
+pub fn estimate(n: &Netlist) -> Resources {
+    let bits = n.data_bits as f64;
+    let mut cas = 0usize;
+    let mut max = 0usize;
+    let mut mux2 = n.extra_mux2;
+    for s in &n.stages {
+        for op in &s.ops {
+            match op {
+                Op::Cas(..) => cas += 1,
+                Op::Max(..) => max += 1,
+                Op::Mux2(..) => mux2 += 1,
+            }
+        }
+    }
+    let luts = bits * (cas as f64 * LUT_PER_CAS_BIT + max as f64 * LUT_PER_MAX_BIT
+        + mux2 as f64 * LUT_PER_MUX2_BIT)
+        + LUT_BASE
+        + LUT_PER_BANK * (2 * n.w) as f64;
+
+    let ffs = n.reg_bits() as f64 * FF_REG_FACTOR
+        + n.fifo_bits() as f64
+        + FF_PER_BANK * (2 * n.w) as f64
+        + FF_BASE;
+
+    Resources { luts, ffs }
+}
+
+/// Paper Table 3, FLiMS columns (kLUT, kFF) for 64-bit on Alveo U280 —
+/// the calibration/validation reference.
+pub const PAPER_FLIMS_TABLE3: [(usize, f64, f64); 8] = [
+    (4, 1.7, 2.9),
+    (8, 3.6, 6.3),
+    (16, 7.0, 14.0), // paper prints "1.4" kFF at w=16 — an obvious typo for ~14
+    (32, 15.4, 29.0),
+    (64, 33.7, 62.0),
+    (128, 73.4, 132.2),
+    (256, 158.6, 280.7),
+    (512, 345.3, 594.0),
+];
+
+/// Paper Table 3, WMS and EHMS columns, for ratio validation.
+pub const PAPER_WMS_TABLE3: [(usize, f64, f64); 8] = [
+    (4, 2.7, 5.3),
+    (8, 5.6, 11.0),
+    (16, 11.7, 23.1),
+    (32, 23.5, 48.3),
+    (64, 53.3, 100.8),
+    (128, 106.6, 209.8),
+    (256, 224.0, 436.0),
+    (512, 473.0, 904.7),
+];
+
+pub const PAPER_EHMS_TABLE3: [(usize, f64, f64); 8] = [
+    (4, 3.1, 4.8),
+    (8, 6.2, 10.3),
+    (16, 13.0, 21.6),
+    (32, 26.7, 45.3),
+    (64, 57.9, 94.6),
+    (128, 120.4, 197.5),
+    (256, 252.2, 411.4),
+    (512, 525.3, 855.6),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::analytical::Design;
+    use crate::hw::gen::netlist;
+
+    #[test]
+    fn flims_estimates_track_paper_table3() {
+        // Within ±30% of the Vivado numbers across the whole sweep —
+        // a structural model can't be exact, but must track the scaling.
+        for (w, kl, kf) in PAPER_FLIMS_TABLE3 {
+            let r = estimate(&netlist(Design::Flims, w, 64));
+            let lut_err = (r.kluts() - kl).abs() / kl;
+            let ff_err = (r.kffs() - kf).abs() / kf;
+            assert!(lut_err < 0.30, "w={w}: pred {:.1} vs paper {kl} kLUT", r.kluts());
+            assert!(ff_err < 0.30, "w={w}: pred {:.1} vs paper {kf} kFF", r.kffs());
+        }
+    }
+
+    #[test]
+    fn wms_ehms_ratio_bands_match_fig12() {
+        // Fig. 12 claim: FLiMS is "roughly about 1.5 to 2 times more
+        // hardware resource efficient". Check the predicted ratios stay
+        // in a generous band around that for w >= 16.
+        for w in [16usize, 32, 64, 128, 256, 512] {
+            let f = estimate(&netlist(Design::Flims, w, 64));
+            for d in [Design::Wms, Design::Ehms] {
+                let r = estimate(&netlist(d, w, 64));
+                let lut_ratio = r.luts / f.luts;
+                let ff_ratio = r.ffs / f.ffs;
+                assert!(
+                    (1.2..2.6).contains(&lut_ratio),
+                    "{} w={w} LUT ratio {lut_ratio:.2}",
+                    d.name()
+                );
+                assert!(
+                    (1.2..2.6).contains(&ff_ratio),
+                    "{} w={w} FF ratio {ff_ratio:.2}",
+                    d.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn flimsj_sits_between_flims_and_wms() {
+        // §7: FLiMSj ≈ FLiMS in FFs, ~1.3× in LUTs, always below WMS/EHMS.
+        for w in [16usize, 64, 256] {
+            let f = estimate(&netlist(Design::Flims, w, 64));
+            let j = estimate(&netlist(Design::Flimsj, w, 64));
+            let wm = estimate(&netlist(Design::Wms, w, 64));
+            assert!(j.luts > f.luts && j.luts < wm.luts, "w={w}");
+            assert!(j.ffs >= f.ffs * 0.98 && j.ffs < wm.ffs, "w={w}");
+        }
+    }
+
+    #[test]
+    fn resources_scale_roughly_linearly_in_w() {
+        let r64 = estimate(&netlist(Design::Flims, 64, 64));
+        let r128 = estimate(&netlist(Design::Flims, 128, 64));
+        let g = r128.luts / r64.luts;
+        assert!((1.8..2.6).contains(&g), "growth {g}");
+    }
+
+    #[test]
+    fn data_width_scales_costs() {
+        let r32 = estimate(&netlist(Design::Flims, 32, 32));
+        let r64 = estimate(&netlist(Design::Flims, 32, 64));
+        assert!(r64.luts > r32.luts * 1.6);
+        assert!(r64.ffs > r32.ffs * 1.6);
+    }
+}

@@ -1,0 +1,259 @@
+//! Cycle-accurate streaming harness: drives a [`CycleMerger`] with
+//! bandwidth-limited banked FIFOs, models the pipeline delay, and
+//! measures cycles / stalls / throughput — the simulator counterpart of
+//! the paper's FPGA testbench (§7), with the §4.1 rate-mismatch
+//! experiment expressible through the feed bandwidths.
+
+use super::behavior::{CycleMerger, StepOut};
+use super::fifo::BankedFifo;
+use crate::key::Item;
+use std::collections::VecDeque;
+
+/// Simulation parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    /// FIFO depth per bank (the §7 evaluation uses 2)
+    pub fifo_depth: usize,
+    /// elements deliverable per cycle into A's banks (the "fixed
+    /// bandwidth, less than w" of §4.1)
+    pub bw_a: usize,
+    /// same for B
+    pub bw_b: usize,
+    /// hard cycle cap (safety)
+    pub max_cycles: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { fifo_depth: 2, bw_a: usize::MAX, bw_b: usize::MAX, max_cycles: 100_000_000 }
+    }
+}
+
+/// Measured results of one streaming run.
+#[derive(Clone, Debug)]
+pub struct SimResult<T> {
+    pub output: Vec<T>,
+    /// total clock cycles from first input to last output
+    pub cycles: usize,
+    /// cycles the selector spent waiting on input
+    pub stall_cycles: usize,
+    /// elements per cycle over the whole run
+    pub throughput: f64,
+}
+
+/// Run `merger` over the two descending-sorted inputs until drained.
+pub fn run_stream<T: Item, M: CycleMerger<T>>(
+    merger: &mut M,
+    a: &[T],
+    b: &[T],
+    cfg: SimConfig,
+) -> SimResult<T> {
+    let w = merger.w();
+    let mut qa: BankedFifo<T> = BankedFifo::new(w, cfg.fifo_depth);
+    let mut qb: BankedFifo<T> = BankedFifo::new(w, cfg.fifo_depth);
+    let (mut pos_a, mut pos_b) = (0usize, 0usize);
+    if a.is_empty() {
+        qa.ended = true;
+    }
+    if b.is_empty() {
+        qb.ended = true;
+    }
+
+    let total = a.len() + b.len();
+    let mut output = Vec::with_capacity(total);
+    // Pipeline delay line: chunks age `latency` cycles before emerging.
+    let mut pipe: VecDeque<Vec<T>> = VecDeque::new();
+    let mut cycles = 0usize;
+    let mut stall_cycles = 0usize;
+    let mut done_selecting = false;
+    let cps = merger.cycles_per_select();
+
+    while output.len() < total && cycles < cfg.max_cycles {
+        // Producer side: feed both FIFOs this cycle.
+        qa.feed(a, &mut pos_a, cfg.bw_a);
+        qb.feed(b, &mut pos_b, cfg.bw_b);
+
+        if !done_selecting {
+            match merger.select(&mut qa, &mut qb) {
+                StepOut::Chunk(chunk) => {
+                    pipe.push_back(chunk);
+                    cycles += cps;
+                }
+                StepOut::StallInput => {
+                    pipe.push_back(Vec::new());
+                    stall_cycles += 1;
+                    cycles += 1;
+                }
+                StepOut::Done => {
+                    done_selecting = true;
+                    cycles += 1;
+                }
+            }
+        } else {
+            cycles += 1;
+        }
+
+        // Drain the pipeline with the modelled latency: one chunk
+        // emerges per cycle once the fill depth is reached, and the tail
+        // drains one per cycle after the last selection.
+        while pipe.len() > merger.latency() {
+            output.extend(pipe.pop_front().unwrap());
+        }
+        if done_selecting {
+            if let Some(chunk) = pipe.pop_front() {
+                output.extend(chunk);
+            }
+        }
+    }
+    // Flush any residue (e.g. cap hit exactly at the end).
+    while let Some(chunk) = pipe.pop_front() {
+        output.extend(chunk);
+    }
+
+    let throughput = if cycles > 0 { output.len() as f64 / cycles as f64 } else { 0.0 };
+    SimResult { output, cycles, stall_cycles, throughput }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_sorted_pair, gen_u32, Distribution};
+    use crate::hw::behavior::{BasicCycle, FlimsCycle, FlimsjCycle, RowClass, RowMergerCycle};
+    use crate::key::Kv;
+    use crate::util::rng::Rng;
+
+    fn oracle(a: &[u32], b: &[u32]) -> Vec<u32> {
+        let mut v: Vec<u32> = a.iter().chain(b.iter()).copied().collect();
+        v.sort_unstable_by(|x, y| y.cmp(x));
+        v
+    }
+
+    fn pair(seed: u64, na: usize, nb: usize, dist: Distribution) -> (Vec<u32>, Vec<u32>) {
+        let mut rng = Rng::new(seed);
+        gen_sorted_pair(&mut rng, na, nb, dist, gen_u32)
+    }
+
+    #[test]
+    fn flims_cycle_correct_all_w() {
+        for wexp in 1..=5 {
+            let w = 1 << wexp;
+            let (a, b) = pair(wexp as u64, 130, 190, Distribution::Uniform);
+            let mut m: FlimsCycle<u32> = FlimsCycle::new(w, false);
+            let r = run_stream(&mut m, &a, &b, SimConfig::default());
+            assert_eq!(r.output, oracle(&a, &b), "w={w}");
+        }
+    }
+
+    #[test]
+    fn flims_cycle_skew_correct() {
+        let (a, b) = pair(7, 200, 200, Distribution::DupHeavy { alphabet: 2 });
+        let mut m: FlimsCycle<u32> = FlimsCycle::new(8, true);
+        let r = run_stream(&mut m, &a, &b, SimConfig::default());
+        assert_eq!(r.output, oracle(&a, &b));
+    }
+
+    #[test]
+    fn flimsj_cycle_correct() {
+        let (a, b) = pair(8, 256, 128, Distribution::Uniform);
+        let mut m: FlimsjCycle<u32> = FlimsjCycle::new(8);
+        let r = run_stream(&mut m, &a, &b, SimConfig::default());
+        assert_eq!(r.output, oracle(&a, &b));
+    }
+
+    #[test]
+    fn row_merger_correct_unique_keys() {
+        for class in [RowClass::Mms, RowClass::Vms, RowClass::Wms] {
+            let (a, b) = pair(9, 160, 240, Distribution::Uniform);
+            let mut m: RowMergerCycle<u32> = RowMergerCycle::new(8, class);
+            let r = run_stream(&mut m, &a, &b, SimConfig::default());
+            assert_eq!(r.output, oracle(&a, &b), "{class:?}");
+        }
+    }
+
+    #[test]
+    fn basic_cycle_correct_but_slow() {
+        let (a, b) = pair(10, 128, 128, Distribution::Uniform);
+        let mut m: BasicCycle<u32> = BasicCycle::new(8);
+        let r = run_stream(&mut m, &a, &b, SimConfig::default());
+        assert_eq!(r.output, oracle(&a, &b));
+        // Feedback of lg(8)+2 = 5 cycles per selection: throughput well
+        // below w per cycle.
+        assert!(r.throughput < 8.0 / 4.0, "throughput {}", r.throughput);
+    }
+
+    #[test]
+    fn full_bandwidth_throughput_near_w() {
+        let (a, b) = pair(11, 4096, 4096, Distribution::Uniform);
+        let mut m: FlimsCycle<u32> = FlimsCycle::new(8, false);
+        let r = run_stream(&mut m, &a, &b, SimConfig { fifo_depth: 4, ..Default::default() });
+        assert_eq!(r.output, oracle(&a, &b));
+        assert!(r.throughput > 7.0, "throughput {}", r.throughput);
+    }
+
+    #[test]
+    fn skew_optimisation_reduces_stalls_on_duplicates() {
+        // §4.1's experiment: per-input bandwidth w/2 (aggregate w). On
+        // duplicate-heavy data algorithm 1 drains one side at rate w
+        // while refills arrive at w/2 → stalls; algorithm 2 balances.
+        let w = 8;
+        let a = vec![5u32; 2048];
+        let b = vec![5u32; 2048];
+        let cfg = SimConfig { fifo_depth: 4, bw_a: w / 2, bw_b: w / 2, ..Default::default() };
+
+        let mut basic: FlimsCycle<u32> = FlimsCycle::new(w, false);
+        let rb = run_stream(&mut basic, &a, &b, cfg);
+        let mut skew: FlimsCycle<u32> = FlimsCycle::new(w, true);
+        let rs = run_stream(&mut skew, &a, &b, cfg);
+
+        assert_eq!(rb.output.len(), 4096);
+        assert_eq!(rs.output.len(), 4096);
+        assert!(
+            rs.stall_cycles * 2 < rb.stall_cycles,
+            "skew {} vs basic {} stalls",
+            rs.stall_cycles,
+            rb.stall_cycles
+        );
+        assert!(rs.throughput > rb.throughput * 1.5);
+    }
+
+    #[test]
+    fn tie_record_issue_reproduced_and_flims_immune() {
+        // §6: duplicate keys with payloads. The row-dequeue class (no
+        // workaround) corrupts the payload multiset; FLiMS must not.
+        let mk = |base: u32, n: usize| -> Vec<Kv> {
+            (0..n).map(|i| Kv::new(7, base + i as u32)).collect()
+        };
+        let a = mk(0, 64);
+        let b = mk(1000, 64);
+
+        let mut flims: FlimsCycle<Kv> = FlimsCycle::new(8, false);
+        let rf = run_stream(&mut flims, &a, &b, SimConfig::default());
+        let mut vals: Vec<u32> = rf.output.iter().map(|kv| kv.val).collect();
+        vals.sort_unstable();
+        let mut expect: Vec<u32> = (0..64).chain(1000..1064).collect();
+        expect.sort_unstable();
+        assert_eq!(vals, expect, "FLiMS must preserve payloads");
+
+        let mut wms: RowMergerCycle<Kv> = RowMergerCycle::new(8, RowClass::Wms);
+        assert!(wms.tie_unsafe);
+        let rw = run_stream(&mut wms, &a, &b, SimConfig::default());
+        let mut wvals: Vec<u32> = rw.output.iter().map(|kv| kv.val).collect();
+        wvals.sort_unstable();
+        assert_ne!(wvals, expect, "tie-unsafe row merger should corrupt payloads");
+
+        // With the workaround the row class is clean again.
+        let mut wms_fixed: RowMergerCycle<Kv> = RowMergerCycle::new(8, RowClass::Wms);
+        wms_fixed.tie_unsafe = false;
+        let rfix = run_stream(&mut wms_fixed, &a, &b, SimConfig::default());
+        let mut fvals: Vec<u32> = rfix.output.iter().map(|kv| kv.val).collect();
+        fvals.sort_unstable();
+        assert_eq!(fvals, expect);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let mut m: FlimsCycle<u32> = FlimsCycle::new(4, false);
+        let r = run_stream(&mut m, &[], &[], SimConfig::default());
+        assert!(r.output.is_empty());
+    }
+}

@@ -1,0 +1,147 @@
+//! Banked FIFO queues — the input/output memory structure of every
+//! merger in the paper (§3.1: data written round-robin across `w` banks;
+//! §7: evaluation FIFOs are 2 elements deep per bank).
+
+use crate::key::Item;
+use std::collections::VecDeque;
+
+/// `w` banks, each a bounded FIFO. The producer writes round-robin; the
+/// merger dequeues per-bank (FLiMS) or whole rows (FLiMSj/WMS/…).
+#[derive(Clone, Debug)]
+pub struct BankedFifo<T> {
+    banks: Vec<VecDeque<T>>,
+    depth: usize,
+    /// next bank the producer writes (round-robin position)
+    write_bank: usize,
+    /// true once the producer has delivered the entire stream
+    pub ended: bool,
+}
+
+impl<T: Item> BankedFifo<T> {
+    pub fn new(w: usize, depth: usize) -> Self {
+        BankedFifo {
+            banks: (0..w).map(|_| VecDeque::with_capacity(depth)).collect(),
+            depth,
+            write_bank: 0,
+            ended: false,
+        }
+    }
+
+    pub fn w(&self) -> usize {
+        self.banks.len()
+    }
+
+    /// Producer side: push up to `budget` elements from `src[*pos..]`
+    /// round-robin; advances `pos`. Returns elements actually written
+    /// (stops at full banks — backpressure).
+    pub fn feed(&mut self, src: &[T], pos: &mut usize, budget: usize) -> usize {
+        let mut written = 0;
+        while written < budget && *pos < src.len() {
+            let bank = &mut self.banks[self.write_bank];
+            if bank.len() >= self.depth {
+                break; // round-robin order must be preserved: stop.
+            }
+            bank.push_back(src[*pos]);
+            *pos += 1;
+            self.write_bank = (self.write_bank + 1) % self.banks.len();
+            written += 1;
+        }
+        if *pos >= src.len() {
+            self.ended = true;
+        }
+        written
+    }
+
+    /// Peek the head of bank `i` (None = empty).
+    pub fn head(&self, i: usize) -> Option<&T> {
+        self.banks[i].front()
+    }
+
+    /// Dequeue from bank `i`.
+    pub fn pop(&mut self, i: usize) -> Option<T> {
+        self.banks[i].pop_front()
+    }
+
+    /// Is a whole aligned row available (one element in every bank)?
+    pub fn row_available(&self) -> bool {
+        self.banks.iter().all(|b| !b.is_empty())
+    }
+
+    /// Dequeue one element from every bank (a whole row).
+    pub fn pop_row(&mut self) -> Option<Vec<T>> {
+        if !self.row_available() {
+            return None;
+        }
+        Some(self.banks.iter_mut().map(|b| b.pop_front().unwrap()).collect())
+    }
+
+    /// Total buffered elements.
+    pub fn len(&self) -> usize {
+        self.banks.iter().map(|b| b.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stream fully consumed (producer done and banks drained)?
+    pub fn exhausted(&self) -> bool {
+        self.ended && self.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_feed() {
+        let mut f: BankedFifo<u32> = BankedFifo::new(4, 2);
+        let src: Vec<u32> = (0..8).collect();
+        let mut pos = 0;
+        let n = f.feed(&src, &mut pos, 100);
+        assert_eq!(n, 8);
+        assert!(f.ended);
+        // bank i holds src[i], src[i+4]
+        for i in 0..4 {
+            assert_eq!(*f.head(i).unwrap(), i as u32);
+        }
+        let row = f.pop_row().unwrap();
+        assert_eq!(row, vec![0, 1, 2, 3]);
+        assert_eq!(f.pop_row().unwrap(), vec![4, 5, 6, 7]);
+        assert!(f.exhausted());
+    }
+
+    #[test]
+    fn backpressure_stops_at_full_bank() {
+        let mut f: BankedFifo<u32> = BankedFifo::new(2, 1);
+        let src: Vec<u32> = (0..10).collect();
+        let mut pos = 0;
+        assert_eq!(f.feed(&src, &mut pos, 100), 2); // both banks full
+        assert_eq!(pos, 2);
+        assert!(!f.ended);
+        f.pop(0);
+        // Round-robin preserved: next write goes to bank 0.
+        assert_eq!(f.feed(&src, &mut pos, 100), 1);
+        assert_eq!(*f.head(0).unwrap(), 2);
+    }
+
+    #[test]
+    fn budget_respected() {
+        let mut f: BankedFifo<u32> = BankedFifo::new(4, 8);
+        let src: Vec<u32> = (0..100).collect();
+        let mut pos = 0;
+        assert_eq!(f.feed(&src, &mut pos, 3), 3);
+        assert_eq!(f.len(), 3);
+    }
+
+    #[test]
+    fn row_unavailable_when_a_bank_is_empty() {
+        let mut f: BankedFifo<u32> = BankedFifo::new(2, 4);
+        let src = vec![1u32];
+        let mut pos = 0;
+        f.feed(&src, &mut pos, 10);
+        assert!(!f.row_available());
+        assert!(f.pop_row().is_none());
+    }
+}

@@ -1,0 +1,263 @@
+//! Structural netlist generators for the eight mergers of Table 2.
+//!
+//! These play the role of the paper's Verilog generator scripts: given a
+//! degree of parallelism `w` and a data width, they emit the comparator/
+//! mux/register structure of each design. Comparator totals, latencies
+//! and feedback lengths are cross-checked against the closed forms in
+//! [`super::analytical`] (the paper's yosys validation analogue); the
+//! cost and timing models consume the structural quantities.
+//!
+//! Where a competitor's exact internal wiring is not fully specified by
+//! its paper (WMS/EHMS pruning details), stages are laid out to match
+//! the published comparator totals, stage counts and row widths — a
+//! resource-equivalent structural model (see DESIGN.md §4). Functional
+//! behaviour is modelled separately in [`super::behavior`].
+
+use super::analytical::{log2, Design};
+use super::types::{butterfly_stages, Netlist, Op, Stage};
+
+/// FIFO depth per bank used by the §7 evaluation (2 elements per bank,
+/// input and output ⇒ 4w total).
+pub const EVAL_FIFO_DEPTH: usize = 2;
+
+/// Build the netlist for a design instance.
+pub fn netlist(design: Design, w: usize, data_bits: usize) -> Netlist {
+    assert!(w.is_power_of_two() && w >= 2, "w must be a power of two >= 2");
+    match design {
+        Design::Flims => flims(w, data_bits),
+        Design::Flimsj => flimsj(w, data_bits),
+        Design::Basic => basic(w, data_bits),
+        Design::Pmt => pmt(w, data_bits),
+        Design::Mms => mms_vms(w, data_bits, Design::Mms),
+        Design::Vms => mms_vms(w, data_bits, Design::Vms),
+        Design::Wms => wms(w, data_bits),
+        Design::Ehms => ehms(w, data_bits),
+    }
+}
+
+fn base(design: Design, w: usize, data_bits: usize) -> Netlist {
+    Netlist {
+        name: design.name().to_string(),
+        w,
+        data_bits,
+        stages: Vec::new(),
+        feedback_len: design.feedback_len(w),
+        extra_reg_wires: 0,
+        extra_mux2: 0,
+        fifo_elems: 4 * w * EVAL_FIFO_DEPTH / 2, // 2w in + 2w out at depth 2
+        tie_record_unsafe: design.tie_record_unsafe(),
+        dequeue_granularity: 1,
+    }
+}
+
+/// FLiMS (fig. 9): MAX selector stage integrated as the first pipeline
+/// stage, then the butterfly. Head registers cA/cB (2w wires) stand in
+/// for the banked-BRAM read registers.
+fn flims(w: usize, data_bits: usize) -> Netlist {
+    let mut n = base(Design::Flims, w, data_bits);
+    let selector = Stage {
+        ops: (0..w).map(|i| Op::Max(i as u32, (2 * w - 1 - i) as u32)).collect(),
+        reg_wires: w,
+    };
+    n.stages.push(selector);
+    n.stages.extend(butterfly_stages(w));
+    n.extra_reg_wires = 2 * w; // cA + cB head registers
+    n.dequeue_granularity = 1; // per-bank dequeue signals
+    n
+}
+
+/// FLiMSj (§4.3): FLiMS plus the shared row buffer cR and one extra
+/// staging cycle; dequeues whole w-rows.
+fn flimsj(w: usize, data_bits: usize) -> Netlist {
+    let mut n = flims(w, data_bits);
+    n.name = Design::Flimsj.name().to_string();
+    // The src/dir staging consumes one extra cycle before the selector.
+    n.stages.insert(0, Stage { ops: vec![], reg_wires: w });
+    n.extra_reg_wires += w; // cR row
+    // Candidate steering muxes (src_i ? cA : cR etc.): 2 per lane.
+    n.extra_mux2 += 2 * w;
+    n.dequeue_granularity = w;
+    n
+}
+
+/// Basic Chhugani/Casper loop (fig. 4): a full 2w-to-2w bitonic merger;
+/// the feedback spans the whole network plus the select stage.
+fn basic(w: usize, data_bits: usize) -> Netlist {
+    let mut n = base(Design::Basic, w, data_bits);
+    let lg = log2(w);
+    // Full bitonic merger over 2w wires: lg(2w) = lg+1 stages of w CAS.
+    for s in 0..=lg {
+        let stride = w >> s; // 2w/2, …, 1
+        let mut ops = Vec::new();
+        let mut g = 0;
+        while g < 2 * w {
+            for i in g..g + stride {
+                ops.push(Op::Cas(i as u32, (i + stride) as u32));
+            }
+            g += 2 * stride;
+        }
+        n.stages.push(Stage { ops, reg_wires: 2 * w });
+    }
+    // Batch-select stage (single head comparison + row steering).
+    n.stages.push(Stage { ops: vec![Op::Cas(0, 1)], reg_wires: 2 * w });
+    // The Table-2 count excludes the select comparator bookkeeping:
+    // remove it from the comparator total by modelling it as muxes.
+    n.stages.last_mut().unwrap().ops = vec![Op::Mux2(0, 1)];
+    n.extra_mux2 += w; // input-batch steering
+    n.dequeue_granularity = w;
+    n
+}
+
+/// PMT building block (fig. 5): two barrel shifters (log2(w) mux stages
+/// each) feeding a 2w-to-w bitonic partial merger.
+fn pmt(w: usize, data_bits: usize) -> Netlist {
+    let mut n = base(Design::Pmt, w, data_bits);
+    let lg = log2(w);
+    // Barrel shifters: lg stages of 2w Mux2 (both inputs shift in
+    // parallel; they share pipeline columns).
+    for s in 0..lg {
+        let _ = s;
+        let ops = (0..2 * w).map(|i| Op::Mux2(i as u32, i as u32)).collect();
+        n.stages.push(Stage { ops, reg_wires: 2 * w });
+    }
+    // Half-cleaner + butterfly (the 2w-to-w partial merger).
+    let half = Stage {
+        ops: (0..w).map(|i| Op::Cas(i as u32, (2 * w - 1 - i) as u32)).collect(),
+        reg_wires: w,
+    };
+    n.stages.push(half);
+    n.stages.extend(butterfly_stages(w));
+    n.extra_reg_wires = 2 * w;
+    n.dequeue_granularity = 1;
+    n
+}
+
+/// MMS [4] / VMS [5]: a 1-cycle selector (one extra comparator plus row
+/// steering) followed by two 2w-to-w partial mergers back-to-back, with
+/// shift registers carrying candidate rows.
+fn mms_vms(w: usize, data_bits: usize, d: Design) -> Netlist {
+    let mut n = base(d, w, data_bits);
+    // Selector stage: the "extra comparator and multiplexer".
+    n.stages.push(Stage { ops: vec![Op::Cas(0, 1)], reg_wires: 2 * w });
+    for _ in 0..2 {
+        let half = Stage {
+            ops: (0..w).map(|i| Op::Cas(i as u32, (2 * w - 1 - i) as u32)).collect(),
+            reg_wires: w,
+        };
+        n.stages.push(half);
+        n.stages.extend(butterfly_stages(w));
+    }
+    // Shift registers carrying the two candidate rows alongside.
+    n.extra_reg_wires = 2 * w;
+    n.extra_mux2 += w;
+    n.dequeue_granularity = w;
+    n
+}
+
+/// WMS [6]: one 3w-to-w merger (pruned 4w odd-even network), one
+/// selector stage — lg+3 stages, 3w + ½w·lg comparators.
+fn wms(w: usize, data_bits: usize) -> Netlist {
+    let mut n = base(Design::Wms, w, data_bits);
+    let _lg = log2(w);
+    // Three w-wide comparator columns prune the 3w candidates…
+    let widths = [3 * w, 2 * w, w];
+    for (s, &row) in widths.iter().enumerate() {
+        let ops = (0..w).map(|i| Op::Cas(i as u32, (i + w) as u32)).collect();
+        n.stages.push(Stage {
+            ops,
+            reg_wires: if s + 1 < widths.len() { row.min(3 * w) } else { w },
+        });
+    }
+    // …then the w-wide butterfly cleanup.
+    n.stages.extend(butterfly_stages(w));
+    n.extra_reg_wires = 2 * w; // retained candidate rows
+    n.dequeue_granularity = w;
+    n
+}
+
+/// EHMS [6]: the 2.5w-to-w variant — same stage count as WMS, fewer
+/// comparators (the first w/2 inputs are unused), two extra comparators
+/// in the selector.
+fn ehms(w: usize, data_bits: usize) -> Netlist {
+    let mut n = base(Design::Ehms, w, data_bits);
+    let col = |c: usize| -> Vec<Op> {
+        (0..c).map(|i| Op::Cas(i as u32, (i + w) as u32)).collect()
+    };
+    n.stages.push(Stage { ops: col(w), reg_wires: 5 * w / 2 });
+    n.stages.push(Stage { ops: col(w), reg_wires: 3 * w / 2 });
+    n.stages.push(Stage { ops: col(w / 2 + 2), reg_wires: w });
+    n.stages.extend(butterfly_stages(w));
+    n.extra_reg_wires = 3 * w / 2;
+    n.dequeue_granularity = w / 2;
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::analytical::ALL_DESIGNS;
+
+    #[test]
+    fn structural_counts_match_closed_forms() {
+        // The paper validates Table 2 with yosys; we validate the
+        // generators against the closed forms for every design and w.
+        for d in ALL_DESIGNS {
+            for wexp in 1..=9 {
+                let w = 1 << wexp;
+                let n = netlist(d, w, 64);
+                assert_eq!(
+                    n.comparators(),
+                    d.comparators(w),
+                    "{} comparators at w={w}",
+                    d.name()
+                );
+                assert_eq!(n.latency(), d.latency(w), "{} latency at w={w}", d.name());
+                assert_eq!(n.feedback_len, d.feedback_len(w), "{} feedback", d.name());
+                assert_eq!(n.tie_record_unsafe, d.tie_record_unsafe());
+            }
+        }
+    }
+
+    #[test]
+    fn flims_minimal_resources() {
+        for wexp in 2..=8 {
+            let w = 1 << wexp;
+            let f = netlist(Design::Flims, w, 64);
+            for d in [Design::Wms, Design::Ehms, Design::Mms, Design::Vms] {
+                let n = netlist(d, w, 64);
+                assert!(n.cmp_bits() > f.cmp_bits(), "{} cmp at w={w}", d.name());
+                assert!(n.reg_bits() > f.reg_bits(), "{} regs at w={w}", d.name());
+            }
+        }
+    }
+
+    #[test]
+    fn dequeue_granularity_per_design() {
+        let w = 16;
+        assert_eq!(netlist(Design::Flims, w, 64).dequeue_granularity, 1);
+        assert_eq!(netlist(Design::Flimsj, w, 64).dequeue_granularity, w);
+        assert_eq!(netlist(Design::Wms, w, 64).dequeue_granularity, w);
+        assert_eq!(netlist(Design::Ehms, w, 64).dequeue_granularity, w / 2);
+    }
+
+    #[test]
+    fn pmt_has_barrel_shifter_muxes() {
+        let n = netlist(Design::Pmt, 16, 64);
+        let mux_ops: usize = n
+            .stages
+            .iter()
+            .flat_map(|s| &s.ops)
+            .filter(|o| matches!(o, Op::Mux2(..)))
+            .count();
+        // lg(16)=4 stages × 2w=32 muxes
+        assert_eq!(mux_ops, 128);
+    }
+
+    #[test]
+    fn w2_minimum_size_works() {
+        for d in ALL_DESIGNS {
+            let n = netlist(d, 2, 64);
+            assert!(n.comparators() > 0, "{}", d.name());
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! Hardware substrate: the FPGA-evaluation stand-in (DESIGN.md §4).
+//!
+//! * [`types`] / [`gen`] — structural netlists for all eight mergers of
+//!   Table 2 (comparator/mux/register counts, validated against the
+//!   closed forms in [`analytical`]).
+//! * [`behavior`] / [`fifo`] / [`engine`] — cycle-accurate streaming
+//!   simulation: throughput, stalls, the §4.1 skew experiment and the
+//!   §6 tie-record demonstration.
+//! * [`cost`] — LUT/FF model (Table 3, fig. 12).
+//! * [`timing`] — Fmax model (fig. 13).
+
+pub mod analytical;
+pub mod behavior;
+pub mod cost;
+pub mod engine;
+pub mod fifo;
+pub mod gen;
+pub mod timing;
+pub mod types;
+
+pub use analytical::{Design, ALL_DESIGNS};
+pub use behavior::{BasicCycle, CycleMerger, FlimsCycle, FlimsjCycle, RowClass, RowMergerCycle};
+pub use cost::{estimate, Resources};
+pub use engine::{run_stream, SimConfig, SimResult};
+pub use fifo::BankedFifo;
+pub use gen::netlist;
+pub use timing::fmax_mhz;

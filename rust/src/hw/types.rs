@@ -1,0 +1,180 @@
+//! Structural hardware model: comparator-network netlists.
+//!
+//! Each merger design (Table 2) is generated as a pipeline of stages of
+//! unit *ops* over `w`-lane wire columns, plus design-level attributes
+//! (feedback length, extra register rows, barrel shifters, FIFO
+//! geometry). The cost and timing models (`hw::cost`, `hw::timing`)
+//! consume only these structural quantities — the same way the paper
+//! derives Table 2 analytically and validates it "by using yosys through
+//! synthesising the Verilog implementations".
+
+/// A unit in one pipeline stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Compare-and-swap: two inputs, two outputs (a full comparator +
+    /// two data muxes).
+    Cas(u32, u32),
+    /// MAX unit (FLiMS selector): two inputs, one selected output plus a
+    /// dequeue decision (comparator + one data mux + control).
+    Max(u32, u32),
+    /// A 2:1 data multiplexer (no comparator) — barrel-shifter stages,
+    /// feedback selects.
+    Mux2(u32, u32),
+}
+
+impl Op {
+    pub fn is_comparator(&self) -> bool {
+        matches!(self, Op::Cas(..) | Op::Max(..))
+    }
+    /// Data-bit multiplexers implied by the op (per data bit).
+    pub fn mux_count(&self) -> usize {
+        match self {
+            Op::Cas(..) => 2, // both outputs select
+            Op::Max(..) => 1, // one selected output
+            Op::Mux2(..) => 1,
+        }
+    }
+}
+
+/// One pipeline stage: a column of ops plus the registered wires that
+/// cross it.
+#[derive(Clone, Debug, Default)]
+pub struct Stage {
+    pub ops: Vec<Op>,
+    /// wires registered at the end of this stage (usually `w`, more for
+    /// designs that carry candidate rows forward)
+    pub reg_wires: usize,
+}
+
+/// Structural description of one merger design instance.
+#[derive(Clone, Debug)]
+pub struct Netlist {
+    pub name: String,
+    pub w: usize,
+    /// key+payload width in bits (the paper's evaluation: 64)
+    pub data_bits: usize,
+    pub stages: Vec<Stage>,
+    /// feedback datapath length in stages (Table 2 column 2)
+    pub feedback_len: usize,
+    /// standalone register rows outside the pipeline (head registers
+    /// cA/cB, FLiMSj's cR, MMS/VMS shift registers…), in wires
+    pub extra_reg_wires: usize,
+    /// 2:1 mux count outside stages (barrel shifters etc.), per data bit
+    pub extra_mux2: usize,
+    /// input+output FIFO capacity in elements (the §7 evaluation uses
+    /// depth-2 FIFOs per bank: 4w elements total)
+    pub fifo_elems: usize,
+    /// does a key tie corrupt key-value payloads? (Table 2 last column)
+    pub tie_record_unsafe: bool,
+    /// dequeue granularity in elements (w for row-dequeue designs, 1 for
+    /// FLiMS's per-bank signals, w/2 for EHMS)
+    pub dequeue_granularity: usize,
+}
+
+impl Netlist {
+    /// Total comparators (Table 2 column 4).
+    pub fn comparators(&self) -> usize {
+        self.stages
+            .iter()
+            .map(|s| s.ops.iter().filter(|o| o.is_comparator()).count())
+            .sum()
+    }
+
+    /// Pipeline latency in cycles (Table 2 column 3).
+    pub fn latency(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Total registered data bits (pipeline + standalone rows).
+    pub fn reg_bits(&self) -> usize {
+        let pipeline: usize = self.stages.iter().map(|s| s.reg_wires).sum();
+        (pipeline + self.extra_reg_wires) * self.data_bits
+    }
+
+    /// Total 2:1 data-mux bit count (swap muxes inside ops + barrel
+    /// shifters etc.).
+    pub fn mux_bits(&self) -> usize {
+        let op_muxes: usize = self
+            .stages
+            .iter()
+            .map(|s| s.ops.iter().map(|o| o.mux_count()).sum::<usize>())
+            .sum();
+        (op_muxes + self.extra_mux2) * self.data_bits
+    }
+
+    /// Comparator bit count (each comparator compares `data_bits` keys —
+    /// the §7 evaluation compares full 64-bit values).
+    pub fn cmp_bits(&self) -> usize {
+        self.comparators() * self.data_bits
+    }
+
+    /// FIFO storage bits.
+    pub fn fifo_bits(&self) -> usize {
+        self.fifo_elems * self.data_bits
+    }
+
+    /// Worst-stage comparator count (a routing-pressure proxy for the
+    /// timing model).
+    pub fn worst_stage_ops(&self) -> usize {
+        self.stages.iter().map(|s| s.ops.len()).max().unwrap_or(0)
+    }
+}
+
+/// Convenience: build the butterfly stage columns (strides w/2 … 1) over
+/// wires `0..w` — shared by several generators.
+pub fn butterfly_stages(w: usize) -> Vec<Stage> {
+    let mut stages = Vec::new();
+    let mut stride = w / 2;
+    while stride >= 1 {
+        let mut ops = Vec::new();
+        let mut g = 0;
+        while g < w {
+            for i in g..g + stride {
+                ops.push(Op::Cas(i as u32, (i + stride) as u32));
+            }
+            g += 2 * stride;
+        }
+        stages.push(Stage { ops, reg_wires: w });
+        stride /= 2;
+    }
+    stages
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn butterfly_stage_counts() {
+        let s = butterfly_stages(8);
+        assert_eq!(s.len(), 3); // log2(8)
+        assert!(s.iter().all(|st| st.ops.len() == 4)); // w/2 per column
+        let total: usize = s.iter().map(|st| st.ops.len()).sum();
+        assert_eq!(total, 12); // ½ w log2 w
+    }
+
+    #[test]
+    fn op_counting() {
+        let n = Netlist {
+            name: "t".into(),
+            w: 4,
+            data_bits: 64,
+            stages: vec![
+                Stage { ops: vec![Op::Max(0, 1), Op::Max(2, 3)], reg_wires: 4 },
+                Stage { ops: vec![Op::Cas(0, 1), Op::Mux2(2, 3)], reg_wires: 4 },
+            ],
+            feedback_len: 1,
+            extra_reg_wires: 8,
+            extra_mux2: 0,
+            fifo_elems: 16,
+            tie_record_unsafe: false,
+            dequeue_granularity: 1,
+        };
+        assert_eq!(n.comparators(), 3); // Mux2 is not a comparator
+        assert_eq!(n.latency(), 2);
+        assert_eq!(n.reg_bits(), (4 + 4 + 8) * 64);
+        assert_eq!(n.mux_bits(), (1 + 1 + 2 + 1) * 64);
+        assert_eq!(n.fifo_bits(), 16 * 64);
+        assert_eq!(n.worst_stage_ops(), 2);
+    }
+}

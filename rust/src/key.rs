@@ -1,0 +1,244 @@
+//! Sort-item abstractions shared by every layer of the library.
+//!
+//! All FLiMS algorithms in this crate merge in **descending** order, like
+//! the paper's exposition (§3, Table 1). Items are compared by key only —
+//! the separation between key and payload is what makes the paper's
+//! *tie-record issue* (§6) expressible: competitor mergers may corrupt
+//! payloads when keys collide, FLiMS may not.
+
+use std::fmt::Debug;
+
+/// A totally ordered sort key with a "below everything" sentinel.
+///
+/// The sentinel plays the role of the paper's end-of-stream filler
+/// (§3.1: "the value 0 can be passed afterwards" for naturals — we use
+/// the type minimum so arbitrary data works).
+pub trait Key: Copy + Ord + Debug + Send + Sync + 'static {
+    /// Value that sorts below (or equal to) every payload key.
+    const SENTINEL: Self;
+}
+
+impl Key for u32 {
+    const SENTINEL: Self = 0;
+}
+impl Key for u64 {
+    const SENTINEL: Self = 0;
+}
+impl Key for i32 {
+    const SENTINEL: Self = i32::MIN;
+}
+impl Key for i64 {
+    const SENTINEL: Self = i64::MIN;
+}
+impl Key for u16 {
+    const SENTINEL: Self = 0;
+}
+
+/// Order-preserving total order over `f32` bit patterns.
+///
+/// Standard trick: flip the sign bit for non-negatives, flip all bits for
+/// negatives; the resulting `u32` order matches IEEE-754 numeric order
+/// (with -NaN lowest). This is how the PJRT runtime path and the native
+/// engines agree on float ordering.
+#[derive(Copy, Clone, PartialEq, Eq, PartialOrd, Ord, Debug, Hash)]
+pub struct F32Key(pub u32);
+
+impl F32Key {
+    #[inline]
+    pub fn from_f32(x: f32) -> Self {
+        let b = x.to_bits();
+        F32Key(if b & 0x8000_0000 != 0 { !b } else { b | 0x8000_0000 })
+    }
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        let b = self.0;
+        f32::from_bits(if b & 0x8000_0000 != 0 { b & 0x7fff_ffff } else { !b })
+    }
+}
+
+impl Key for F32Key {
+    const SENTINEL: Self = F32Key(0);
+}
+
+/// An element that can flow through the mergers: a copyable record
+/// exposing a [`Key`]. Payload (if any) rides along untouched — exactly
+/// the "satellite data" of the paper's key-value discussion.
+pub trait Item: Copy + Debug + Send + Sync + 'static {
+    type K: Key;
+    fn key(&self) -> Self::K;
+    /// The end-of-stream filler record.
+    fn sentinel() -> Self;
+}
+
+impl Item for u32 {
+    type K = u32;
+    #[inline]
+    fn key(&self) -> u32 {
+        *self
+    }
+    fn sentinel() -> Self {
+        0
+    }
+}
+
+impl Item for u64 {
+    type K = u64;
+    #[inline]
+    fn key(&self) -> u64 {
+        *self
+    }
+    fn sentinel() -> Self {
+        0
+    }
+}
+
+impl Item for i32 {
+    type K = i32;
+    #[inline]
+    fn key(&self) -> i32 {
+        *self
+    }
+    fn sentinel() -> Self {
+        i32::MIN
+    }
+}
+
+impl Item for i64 {
+    type K = i64;
+    #[inline]
+    fn key(&self) -> i64 {
+        *self
+    }
+    fn sentinel() -> Self {
+        i64::MIN
+    }
+}
+
+impl Item for u16 {
+    type K = u16;
+    #[inline]
+    fn key(&self) -> u16 {
+        *self
+    }
+    fn sentinel() -> Self {
+        0
+    }
+}
+
+impl Item for F32Key {
+    type K = F32Key;
+    #[inline]
+    fn key(&self) -> F32Key {
+        *self
+    }
+    fn sentinel() -> Self {
+        F32Key::SENTINEL
+    }
+}
+
+/// Key-value record: 32-bit key, 32-bit payload. The shape used by the
+/// paper's tie-record discussion (§6) and the stable-merge variant (§4.2).
+#[derive(Copy, Clone, PartialEq, Eq, Debug, Hash)]
+pub struct Kv {
+    pub key: u32,
+    pub val: u32,
+}
+
+impl Kv {
+    pub fn new(key: u32, val: u32) -> Self {
+        Kv { key, val }
+    }
+}
+
+impl Item for Kv {
+    type K = u32;
+    #[inline]
+    fn key(&self) -> u32 {
+        self.key
+    }
+    fn sentinel() -> Self {
+        Kv { key: 0, val: u32::MAX }
+    }
+}
+
+/// 64-bit key-value record (64-bit key + 64-bit payload), matching the
+/// paper's FPGA evaluation width ("64-bit mergers", §7).
+#[derive(Copy, Clone, PartialEq, Eq, Debug, Hash)]
+pub struct Kv64 {
+    pub key: u64,
+    pub val: u64,
+}
+
+impl Item for Kv64 {
+    type K = u64;
+    #[inline]
+    fn key(&self) -> u64 {
+        self.key
+    }
+    fn sentinel() -> Self {
+        Kv64 { key: 0, val: u64::MAX }
+    }
+}
+
+/// True iff `xs` is sorted descending by key (duplicates allowed).
+pub fn is_sorted_desc<T: Item>(xs: &[T]) -> bool {
+    xs.windows(2).all(|p| p[0].key() >= p[1].key())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32key_order_matches_float_order() {
+        let vals = [
+            f32::NEG_INFINITY,
+            -1e30,
+            -1.5,
+            -0.0,
+            0.0,
+            1e-30,
+            2.5,
+            1e30,
+            f32::INFINITY,
+        ];
+        for w in vals.windows(2) {
+            assert!(
+                F32Key::from_f32(w[0]) <= F32Key::from_f32(w[1]),
+                "{} vs {}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn f32key_roundtrips() {
+        for &x in &[0.0f32, -0.0, 1.25, -7.5, 1e20, -1e20, f32::INFINITY] {
+            let k = F32Key::from_f32(x);
+            assert_eq!(k.to_f32().to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn sentinels_are_minimal() {
+        assert!(u32::SENTINEL <= 1);
+        assert_eq!(i32::SENTINEL, i32::MIN);
+        assert!(F32Key::SENTINEL <= F32Key::from_f32(f32::NEG_INFINITY));
+    }
+
+    #[test]
+    fn kv_compares_by_key_only() {
+        let a = Kv::new(5, 1);
+        let b = Kv::new(5, 2);
+        assert_eq!(a.key(), b.key());
+    }
+
+    #[test]
+    fn is_sorted_desc_works() {
+        assert!(is_sorted_desc(&[5u32, 5, 3, 1]));
+        assert!(!is_sorted_desc(&[5u32, 6]));
+        assert!(is_sorted_desc(&[] as &[u32]));
+        assert!(is_sorted_desc(&[1u32]));
+    }
+}

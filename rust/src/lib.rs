@@ -1,0 +1,46 @@
+//! # FLiMS — Fast Lightweight 2-way Merge Sorter
+//!
+//! Full-system reproduction of *"FLiMS: a Fast Lightweight 2-way Merge
+//! Sorter"* (Papaphilippou, Luk, Brooks — IEEE Transactions on
+//! Computers, 2022; DOI 10.1109/TC.2022.3146509).
+//!
+//! The crate is the runtime (Layer-3) half of a three-layer stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`): the FLiMS merge step and
+//!   bitonic sort-in-chunks as Pallas kernels.
+//! * **Layer 2** (`python/compile/model.py`): JAX merge/sort graphs,
+//!   AOT-lowered to HLO-text artifacts.
+//! * **Layer 3** (this crate): the FLiMS algorithm family in rust, the
+//!   cycle-accurate hardware substrate, merge-tree coordination, a sort
+//!   service, and a PJRT runtime that executes the AOT artifacts —
+//!   Python never runs on the request path.
+//!
+//! Module tour:
+//!
+//! * [`key`] — sort-item traits (keys, records, sentinels).
+//! * [`flims`] — the paper's algorithms 1–4 plus complete sort
+//!   (sequential and parallel).
+//! * [`baselines`] — std-sort, LSD radix, samplesort, and the "basic"
+//!   bitonic merger the paper compares against.
+//! * [`hw`] — structural netlist generators + cycle-accurate simulator
+//!   for FLiMS/FLiMSj/PMT/MMS/VMS/WMS/EHMS/basic, with LUT/FF cost and
+//!   Fmax timing models (the FPGA-substrate substitute; DESIGN.md §4).
+//! * [`tree`] — PMT / HPMT merge-tree coordination (fig. 1–2).
+//! * [`coordinator`] — sorting-as-a-service: router + dynamic batcher.
+//! * [`runtime`] — PJRT client wrapper executing `artifacts/*.hlo.txt`.
+//! * [`config`] / [`metrics`] / [`data`] / [`util`] — framework glue.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod flims;
+pub mod hw;
+pub mod key;
+pub mod metrics;
+pub mod runtime;
+pub mod tree;
+pub mod util;
+
+pub use flims::{merge_desc, par_sort_desc, sort_desc, SortConfig};
+pub use key::{is_sorted_desc, F32Key, Item, Key, Kv, Kv64};

@@ -1,0 +1,423 @@
+//! `flims` — leader entrypoint and CLI.
+//!
+//! Subcommands:
+//!
+//! ```text
+//! flims sort     --n 1000000 [--dist uniform|zipf|dup] [--backend native|parallel|pjrt] [--w 16] [--chunk 128]
+//! flims merge    --n 65536 [--w 16]
+//! flims trace                              # the paper's Table 1 example
+//! flims simulate --design flims|flimsj|wms|mms|vms|basic --w 8 [--skew] [--dup]
+//! flims report   table2|table3|fig13 [--data-bits 64]
+//! flims serve    [--bind 127.0.0.1:7171] [--config flims.toml]
+//! flims artifacts [--dir artifacts]        # list + smoke-run the AOT artifacts
+//! ```
+//!
+//! (Argument parsing is in-tree: the build is offline, no clap.)
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+use std::sync::Arc;
+use std::time::Instant;
+
+use flims::baselines::{radix_sort_desc, samplesort_desc};
+use flims::config::{AppConfig, RawConfig};
+use flims::coordinator::{BatcherConfig, Router, Service};
+use flims::data::{gen_u32, Distribution};
+use flims::flims::scalar::{FlimsMerger, Variant};
+use flims::flims::{merge_desc, par_sort_desc, sort_desc, SortConfig};
+use flims::flims::parallel::ParSortConfig;
+use flims::hw::{self, Design, SimConfig};
+use flims::key::is_sorted_desc;
+use flims::runtime::RuntimeHandle;
+use flims::util::rng::Rng;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Parse `--key value` / `--flag` pairs after the subcommand.
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let key = a
+            .strip_prefix("--")
+            .ok_or_else(|| format!("expected --flag, got '{a}'"))?;
+        if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            flags.insert(key.to_string(), args[i + 1].clone());
+            i += 2;
+        } else {
+            flags.insert(key.to_string(), "true".to_string());
+            i += 1;
+        }
+    }
+    Ok(flags)
+}
+
+fn get_usize(f: &HashMap<String, String>, k: &str, default: usize) -> Result<usize, String> {
+    match f.get(k) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| format!("--{k}: '{v}' is not an integer")),
+    }
+}
+
+fn dist_of(f: &HashMap<String, String>) -> Result<Distribution, String> {
+    Ok(match f.get("dist").map(|s| s.as_str()).unwrap_or("uniform") {
+        "uniform" => Distribution::Uniform,
+        "dup" => Distribution::DupHeavy { alphabet: 4 },
+        "zipf" => Distribution::Zipf { s_x100: 120, n_ranks: 1 << 16 },
+        "sorted" => Distribution::SortedAsc,
+        "constant" => Distribution::Constant,
+        other => return Err(format!("unknown --dist '{other}'")),
+    })
+}
+
+fn load_config(f: &HashMap<String, String>) -> Result<AppConfig, String> {
+    let mut cfg = AppConfig::default();
+    if let Some(path) = f.get("config") {
+        let raw = RawConfig::load(std::path::Path::new(path))?;
+        cfg.apply(&raw)?;
+    }
+    if let Some(w) = f.get("w") {
+        cfg.w = w.parse().map_err(|_| "--w must be an integer".to_string())?;
+    }
+    if let Some(c) = f.get("chunk") {
+        cfg.chunk = c.parse().map_err(|_| "--chunk must be an integer".to_string())?;
+    }
+    if let Some(t) = f.get("threads") {
+        cfg.threads = t.parse().map_err(|_| "--threads must be an integer".to_string())?;
+    }
+    if let Some(d) = f.get("dir") {
+        cfg.artifacts_dir = d.clone();
+    }
+    if let Some(b) = f.get("bind") {
+        cfg.bind = b.clone();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn run(args: Vec<String>) -> Result<(), String> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    match cmd.as_str() {
+        "sort" => cmd_sort(&flags),
+        "merge" => cmd_merge(&flags),
+        "trace" => cmd_trace(),
+        "simulate" => cmd_simulate(&flags),
+        "report" => cmd_report(&args[1..], &flags),
+        "serve" => cmd_serve(&flags),
+        "artifacts" => cmd_artifacts(&flags),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}' (try `flims help`)")),
+    }
+}
+
+fn print_help() {
+    println!(
+        "flims — Fast Lightweight 2-way Merge Sorter (paper reproduction)\n\
+         \n\
+         commands:\n\
+           sort      --n N [--dist uniform|dup|zipf|sorted|constant]\n\
+                     [--backend native|parallel|pjrt|std|radix|samplesort]\n\
+                     [--w W] [--chunk C] [--threads T] [--config FILE]\n\
+           merge     --n N [--w W]\n\
+           trace     (replays the paper's Table 1 example, w=4)\n\
+           simulate  --design flims|flimsj|wms|mms|vms|basic --w W [--skew] [--dup] [--n N]\n\
+           report    table2|table3|fig13 [--data-bits B]\n\
+           serve     [--bind ADDR] [--config FILE] [--dir artifacts]\n\
+           artifacts [--dir artifacts]"
+    );
+}
+
+fn cmd_sort(f: &HashMap<String, String>) -> Result<(), String> {
+    let cfg = load_config(f)?;
+    let n = get_usize(f, "n", 1 << 20)?;
+    let dist = dist_of(f)?;
+    let backend = f.get("backend").map(|s| s.as_str()).unwrap_or("native");
+    let mut rng = Rng::new(get_usize(f, "seed", 42)? as u64);
+    let mut data = gen_u32(&mut rng, n, dist);
+
+    let t = Instant::now();
+    match backend {
+        "native" => sort_desc(&mut data, SortConfig { w: cfg.w, chunk: cfg.chunk }),
+        "parallel" => par_sort_desc(
+            &mut data,
+            ParSortConfig {
+                base: SortConfig { w: cfg.w, chunk: cfg.chunk },
+                threads: cfg.threads,
+                ..Default::default()
+            },
+        ),
+        "std" => data.sort_unstable_by(|a, b| b.cmp(a)),
+        "radix" => radix_sort_desc(&mut data),
+        "samplesort" => samplesort_desc(&mut data, cfg.threads),
+        "pjrt" => {
+            let rt = RuntimeHandle::load(std::path::Path::new(&cfg.artifacts_dir))
+                .map_err(|e| format!("{e:#}"))?;
+            let fdata: Vec<f32> = data.iter().map(|&x| (x >> 8) as f32).collect();
+            let out = rt.sort_padded(fdata).map_err(|e| format!("{e:#}"))?;
+            println!(
+                "pjrt sorted {} f32 values (platform {}), first 5: {:?}",
+                out.len(),
+                rt.platform().map_err(|e| format!("{e:#}"))?,
+                &out[..5.min(out.len())]
+            );
+            println!("elapsed: {:?}", t.elapsed());
+            return Ok(());
+        }
+        other => return Err(format!("unknown backend '{other}'")),
+    }
+    let dt = t.elapsed();
+    if !is_sorted_desc(&data) {
+        return Err("output is not sorted!".into());
+    }
+    println!(
+        "sorted {} u32 ({}) with {} in {:?} — {:.1} M elem/s",
+        n,
+        dist.name(),
+        backend,
+        dt,
+        n as f64 / dt.as_secs_f64() / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_merge(f: &HashMap<String, String>) -> Result<(), String> {
+    let cfg = load_config(f)?;
+    let n = get_usize(f, "n", 1 << 20)?;
+    let mut rng = Rng::new(7);
+    let mut a = gen_u32(&mut rng, n, Distribution::Uniform);
+    let mut b = gen_u32(&mut rng, n, Distribution::Uniform);
+    a.sort_unstable_by(|x, y| y.cmp(x));
+    b.sort_unstable_by(|x, y| y.cmp(x));
+    let t = Instant::now();
+    let out = merge_desc(&a, &b, cfg.w);
+    let dt = t.elapsed();
+    if !is_sorted_desc(&out) {
+        return Err("merge output not sorted!".into());
+    }
+    println!(
+        "merged 2x{} u32 at w={} in {:?} — {:.1} M elem/s",
+        n,
+        cfg.w,
+        dt,
+        (2 * n) as f64 / dt.as_secs_f64() / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_trace() -> Result<(), String> {
+    // The paper's Table 1 inputs (descending).
+    let a: Vec<u32> = vec![29, 26, 26, 17, 16, 11, 5, 4, 3, 3];
+    let b: Vec<u32> = vec![22, 21, 19, 18, 15, 12, 9, 8, 7, 0];
+    println!("FLiMS execution trace (paper Table 1, w=4)");
+    println!("A = {a:?}");
+    println!("B = {b:?}\n");
+    let (out, trace) = FlimsMerger::new(&a, &b, 4, Variant::Basic).run_traced();
+    print!("{}", trace.render());
+    println!("\nmerged: {out:?}");
+    Ok(())
+}
+
+fn parse_design(s: &str) -> Result<Design, String> {
+    Ok(match s.to_lowercase().as_str() {
+        "flims" => Design::Flims,
+        "flimsj" => Design::Flimsj,
+        "wms" => Design::Wms,
+        "ehms" => Design::Ehms,
+        "mms" => Design::Mms,
+        "vms" => Design::Vms,
+        "pmt" => Design::Pmt,
+        "basic" => Design::Basic,
+        other => return Err(format!("unknown design '{other}'")),
+    })
+}
+
+fn cmd_simulate(f: &HashMap<String, String>) -> Result<(), String> {
+    let w = get_usize(f, "w", 8)?;
+    let n = get_usize(f, "n", 1 << 14)?;
+    let design = parse_design(f.get("design").map(|s| s.as_str()).unwrap_or("flims"))?;
+    let skew = f.contains_key("skew");
+    let dup = f.contains_key("dup");
+    let mut rng = Rng::new(3);
+    let dist = if dup { Distribution::DupHeavy { alphabet: 2 } } else { Distribution::Uniform };
+    let mut a = gen_u32(&mut rng, n, dist);
+    let mut b = gen_u32(&mut rng, n, dist);
+    a.sort_unstable_by(|x, y| y.cmp(x));
+    b.sort_unstable_by(|x, y| y.cmp(x));
+
+    let sim = SimConfig { fifo_depth: 4, bw_a: w / 2, bw_b: w / 2, ..Default::default() };
+    let result = match design {
+        Design::Flims => {
+            let mut m: hw::FlimsCycle<u32> = hw::FlimsCycle::new(w, skew);
+            hw::run_stream(&mut m, &a, &b, sim)
+        }
+        Design::Flimsj => {
+            let mut m: hw::FlimsjCycle<u32> = hw::FlimsjCycle::new(w);
+            hw::run_stream(&mut m, &a, &b, sim)
+        }
+        Design::Wms => {
+            let mut m: hw::RowMergerCycle<u32> = hw::RowMergerCycle::new(w, hw::RowClass::Wms);
+            hw::run_stream(&mut m, &a, &b, sim)
+        }
+        Design::Mms => {
+            let mut m: hw::RowMergerCycle<u32> = hw::RowMergerCycle::new(w, hw::RowClass::Mms);
+            hw::run_stream(&mut m, &a, &b, sim)
+        }
+        Design::Vms => {
+            let mut m: hw::RowMergerCycle<u32> = hw::RowMergerCycle::new(w, hw::RowClass::Vms);
+            hw::run_stream(&mut m, &a, &b, sim)
+        }
+        Design::Basic => {
+            let mut m: hw::BasicCycle<u32> = hw::BasicCycle::new(w);
+            hw::run_stream(&mut m, &a, &b, sim)
+        }
+        other => return Err(format!("no cycle model for {} (structural only)", other.name())),
+    };
+    let mut expect: Vec<u32> = a.iter().chain(b.iter()).copied().collect();
+    expect.sort_unstable_by(|x, y| y.cmp(x));
+    println!(
+        "design={} w={} n=2x{} dist={} skew={}",
+        design.name(),
+        w,
+        n,
+        if dup { "dup" } else { "uniform" },
+        skew
+    );
+    println!(
+        "cycles={} stalls={} throughput={:.3} elem/cycle correct={}",
+        result.cycles,
+        result.stall_cycles,
+        result.throughput,
+        result.output == expect
+    );
+    Ok(())
+}
+
+fn cmd_report(args: &[String], f: &HashMap<String, String>) -> Result<(), String> {
+    let which = args
+        .iter()
+        .find(|a| !a.starts_with("--") && !matches!(a.as_str(), "64" | "32"))
+        .map(|s| s.as_str())
+        .unwrap_or("table2");
+    let bits = get_usize(f, "data-bits", 64)?;
+    let ws = [4usize, 8, 16, 32, 64, 128, 256, 512];
+    match which {
+        "table2" => {
+            println!("Table 2: high-throughput 2-way merger comparison (w=16 shown; formulas hold for all w)");
+            println!(
+                "{:<8} {:>9} {:>8} {:>12}  {:<38} {:<9} {}",
+                "design", "feedback", "latency", "comparators", "modules", "topology", "tie-record"
+            );
+            for d in hw::ALL_DESIGNS {
+                println!(
+                    "{:<8} {:>9} {:>8} {:>12}  {:<38} {:<9} {}",
+                    d.name(),
+                    d.feedback_len(16),
+                    d.latency(16),
+                    d.comparators(16),
+                    d.modules(),
+                    d.topology(),
+                    if d.tie_record_unsafe() { "yes" } else { "no" }
+                );
+            }
+        }
+        "table3" => {
+            println!("Table 3: estimated resources as AXI peripherals ({bits}-bit)");
+            println!("{:<6} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10}",
+                "w", "FLiMS kL", "kFF", "FLiMSj kL", "kFF", "WMS kL", "kFF", "EHMS kL", "kFF");
+            for w in ws {
+                let r = |d| hw::estimate(&hw::netlist(d, w, bits));
+                let (f_, j, wm, eh) = (
+                    r(Design::Flims),
+                    r(Design::Flimsj),
+                    r(Design::Wms),
+                    r(Design::Ehms),
+                );
+                println!(
+                    "{:<6} {:>10.1} {:>10.1} {:>10.1} {:>10.1} {:>10.1} {:>10.1} {:>10.1} {:>10.1}",
+                    w, f_.kluts(), f_.kffs(), j.kluts(), j.kffs(), wm.kluts(), wm.kffs(),
+                    eh.kluts(), eh.kffs()
+                );
+            }
+        }
+        "fig13" => {
+            println!("Fig 13: estimated maximal operating frequency (MHz, {bits}-bit)");
+            println!("{:<6} {:>8} {:>8} {:>8} {:>8}", "w", "FLiMS", "FLiMSj", "WMS", "EHMS");
+            for w in ws {
+                println!(
+                    "{:<6} {:>8.0} {:>8.0} {:>8.0} {:>8.0}",
+                    w,
+                    hw::fmax_mhz(Design::Flims, w, bits),
+                    hw::fmax_mhz(Design::Flimsj, w, bits),
+                    hw::fmax_mhz(Design::Wms, w, bits),
+                    hw::fmax_mhz(Design::Ehms, w, bits),
+                );
+            }
+        }
+        other => return Err(format!("unknown report '{other}' (table2|table3|fig13)")),
+    }
+    Ok(())
+}
+
+fn cmd_serve(f: &HashMap<String, String>) -> Result<(), String> {
+    let cfg = load_config(f)?;
+    let runtime = match RuntimeHandle::load(std::path::Path::new(&cfg.artifacts_dir)) {
+        Ok(rt) => {
+            eprintln!(
+                "pjrt runtime loaded ({} artifacts)",
+                rt.specs().map(|s| s.len()).unwrap_or(0)
+            );
+            Some(rt)
+        }
+        Err(e) => {
+            eprintln!("pjrt runtime unavailable ({e:#}); serving native only");
+            None
+        }
+    };
+    let router = Arc::new(Router::new(cfg.clone(), runtime));
+    let service = Arc::new(Service::new(
+        router,
+        BatcherConfig {
+            max_batch: cfg.batch_max,
+            window: std::time::Duration::from_micros(cfg.batch_window_us),
+        },
+    ));
+    service.serve(&cfg.bind).map_err(|e| format!("{e:#}"))
+}
+
+fn cmd_artifacts(f: &HashMap<String, String>) -> Result<(), String> {
+    let cfg = load_config(f)?;
+    let rt = RuntimeHandle::load(std::path::Path::new(&cfg.artifacts_dir))
+        .map_err(|e| format!("{e:#}"))?;
+    println!("platform: {}", rt.platform().map_err(|e| format!("{e:#}"))?);
+    for spec in rt.specs().map_err(|e| format!("{e:#}"))? {
+        println!(
+            "{:<28} kind={:?} n={} w={} chunk={} batch={}",
+            spec.name, spec.kind, spec.n, spec.w, spec.chunk, spec.batch
+        );
+    }
+    // Smoke-run the smallest sort artifact.
+    let mut rng = Rng::new(1);
+    let data: Vec<f32> = (0..1000).map(|_| rng.f64() as f32).collect();
+    let t = Instant::now();
+    let out = rt.sort_padded(data).map_err(|e| format!("{e:#}"))?;
+    let ok = out.windows(2).all(|p| p[0] >= p[1]);
+    println!("smoke sort: 1000 f32 in {:?}, sorted={ok}", t.elapsed());
+    Ok(())
+}

@@ -1,0 +1,172 @@
+//! Lightweight metrics: atomic counters and a latency histogram with
+//! percentile snapshots, used by the coordinator's data plane.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-bucketed latency histogram (1µs … ~64s, 2× buckets) — coarse but
+/// lock-free and allocation-free on the hot path.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+const NBUCKETS: usize = 27; // 2^0 .. 2^26 µs
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn observe(&self, d: Duration) {
+        let us = (d.as_nanos() / 1000).max(1) as u64;
+        let bucket = (63 - us.leading_zeros() as usize).min(NBUCKETS - 1);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency.
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed) / c)
+    }
+
+    /// Approximate percentile (upper bound of the bucket containing it).
+    pub fn percentile(&self, p: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((total as f64) * p / 100.0).ceil() as u64;
+        let mut acc = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        Duration::from_micros(1u64 << NBUCKETS)
+    }
+
+    pub fn snapshot(&self) -> String {
+        format!(
+            "count={} mean={:?} p50={:?} p99={:?}",
+            self.count(),
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(99.0)
+        )
+    }
+}
+
+/// The coordinator's metric set.
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    pub requests: Counter,
+    pub batches: Counter,
+    pub elements_sorted: Counter,
+    pub errors: Counter,
+    pub latency: LatencyHistogram,
+}
+
+impl ServiceMetrics {
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} batches={} elements={} errors={} latency[{}]",
+            self.requests.get(),
+            self.batches.get(),
+            self.elements_sorted.get(),
+            self.errors.get(),
+            self.latency.snapshot()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_basics() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = LatencyHistogram::default();
+        for us in [10u64, 20, 40, 80, 500, 1000, 5000] {
+            h.observe(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 7);
+        assert!(h.percentile(50.0) <= h.percentile(99.0));
+        assert!(h.mean() > Duration::ZERO);
+    }
+
+    #[test]
+    fn histogram_empty_is_zero() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.percentile(99.0), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn metrics_report_formats() {
+        let m = ServiceMetrics::default();
+        m.requests.inc();
+        let s = m.report();
+        assert!(s.contains("requests=1"));
+    }
+
+    #[test]
+    fn concurrent_counting() {
+        let m = std::sync::Arc::new(Counter::default());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        m.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(m.get(), 4000);
+    }
+}

@@ -1,0 +1,373 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the rust hot path.
+//! Python never runs at request time — the compiled executables are
+//! self-contained.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (jax ≥ 0.5 emits 64-bit ids the
+//! crate's xla_extension 0.5.1 rejects in proto form).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One artifact as listed in `artifacts/manifest.tsv`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub file: String,
+    pub n: usize,
+    pub w: usize,
+    pub chunk: usize,
+    pub batch: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Merge2,
+    FullSort,
+    BatchedSort,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "merge2" => ArtifactKind::Merge2,
+            "full_sort" => ArtifactKind::FullSort,
+            "batched_sort" => ArtifactKind::BatchedSort,
+            other => bail!("unknown artifact kind '{other}'"),
+        })
+    }
+}
+
+/// Parse `manifest.tsv` (name, kind, file, n, w, chunk, batch).
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactSpec>> {
+    let mut specs = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split('\t').collect();
+        if f.len() != 7 {
+            bail!("manifest line {}: expected 7 fields, got {}", ln + 1, f.len());
+        }
+        let num = |s: &str, what: &str| -> Result<usize> {
+            s.parse().map_err(|_| anyhow!("manifest line {}: bad {what} '{s}'", ln + 1))
+        };
+        specs.push(ArtifactSpec {
+            name: f[0].to_string(),
+            kind: ArtifactKind::parse(f[1])?,
+            file: f[2].to_string(),
+            n: num(f[3], "n")?,
+            w: num(f[4], "w")?,
+            chunk: num(f[5], "chunk")?,
+            batch: num(f[6], "batch")?,
+        });
+    }
+    Ok(specs)
+}
+
+/// The loaded runtime: a PJRT CPU client plus compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    specs: HashMap<String, ArtifactSpec>,
+}
+
+impl Runtime {
+    /// Load every artifact in `dir` (per its manifest) and compile.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = std::fs::read_to_string(dir.join("manifest.tsv"))
+            .with_context(|| format!("reading {}/manifest.tsv (run `make artifacts`)", dir.display()))?;
+        let specs = parse_manifest(&manifest)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        let mut by_name = HashMap::new();
+        for spec in specs {
+            let path: PathBuf = dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", spec.name))?;
+            exes.insert(spec.name.clone(), exe);
+            by_name.insert(spec.name.clone(), spec);
+        }
+        Ok(Runtime { client, exes, specs: by_name })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.specs.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    /// Pick the smallest artifact of `kind` that fits `n` elements.
+    pub fn best_for(&self, kind: ArtifactKind, n: usize) -> Option<&ArtifactSpec> {
+        self.specs
+            .values()
+            .filter(|s| s.kind == kind && s.n >= n)
+            .min_by_key(|s| s.n)
+    }
+
+    fn run1(&self, name: &str, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named '{name}'"))?;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        lit.to_tuple1().map_err(|e| anyhow!("untupling {name}: {e:?}"))
+    }
+
+    /// Execute a `merge2` artifact: two descending-sorted f32 arrays of
+    /// exactly the artifact's length → merged output.
+    pub fn merge2(&self, name: &str, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let spec = self.spec(name).ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        if spec.kind != ArtifactKind::Merge2 {
+            bail!("{name} is not a merge2 artifact");
+        }
+        if a.len() != spec.n || b.len() != spec.n {
+            bail!("{name} expects inputs of {}, got {} and {}", spec.n, a.len(), b.len());
+        }
+        let la = xla::Literal::vec1(a);
+        let lb = xla::Literal::vec1(b);
+        let out = self.run1(name, &[la, lb])?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Execute a `full_sort` artifact on exactly `spec.n` f32 values
+    /// (descending output).
+    pub fn sort(&self, name: &str, x: &[f32]) -> Result<Vec<f32>> {
+        let spec = self.spec(name).ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        if spec.kind != ArtifactKind::FullSort {
+            bail!("{name} is not a full_sort artifact");
+        }
+        if x.len() != spec.n {
+            bail!("{name} expects input of {}, got {}", spec.n, x.len());
+        }
+        let lx = xla::Literal::vec1(x);
+        let out = self.run1(name, &[lx])?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Sort arbitrary-length input by padding up to the artifact size
+    /// with -inf (descending order ⇒ pads sort to the tail).
+    pub fn sort_padded(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let spec = self
+            .best_for(ArtifactKind::FullSort, x.len())
+            .ok_or_else(|| anyhow!("no full_sort artifact fits n={}", x.len()))?
+            .clone();
+        let mut padded = x.to_vec();
+        padded.resize(spec.n, f32::NEG_INFINITY);
+        let mut out = self.sort(&spec.name, &padded)?;
+        out.truncate(x.len());
+        Ok(out)
+    }
+
+    /// Execute a `batched_sort` artifact: `batch` rows of `n` values.
+    pub fn batched_sort(&self, name: &str, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let spec = self.spec(name).ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        if spec.kind != ArtifactKind::BatchedSort {
+            bail!("{name} is not a batched_sort artifact");
+        }
+        if rows.len() != spec.batch || rows.iter().any(|r| r.len() != spec.n) {
+            bail!("{name} expects {}x{}", spec.batch, spec.n);
+        }
+        let flat: Vec<f32> = rows.iter().flatten().copied().collect();
+        let lit = xla::Literal::vec1(&flat)
+            .reshape(&[spec.batch as i64, spec.n as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let out = self.run1(name, &[lit])?;
+        let flat_out = out.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(flat_out.chunks(spec.n).map(|c| c.to_vec()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let text = "m\tmerge2\tm.hlo.txt\t4096\t8\t0\t0\n\
+                    s\tfull_sort\ts.hlo.txt\t1024\t8\t128\t0\n\
+                    b\tbatched_sort\tb.hlo.txt\t1024\t8\t128\t4\n";
+        let specs = parse_manifest(text).unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0].kind, ArtifactKind::Merge2);
+        assert_eq!(specs[1].chunk, 128);
+        assert_eq!(specs[2].batch, 4);
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(parse_manifest("too\tfew\tfields\n").is_err());
+        assert!(parse_manifest("a\tweird_kind\tf\t1\t2\t3\t4\n").is_err());
+        assert!(parse_manifest("a\tmerge2\tf\tNaN\t2\t3\t4\n").is_err());
+    }
+
+    #[test]
+    fn empty_manifest_is_empty() {
+        assert!(parse_manifest("").unwrap().is_empty());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Thread-confined runtime handle
+//
+// The xla crate's PJRT client is Rc-based (not Send/Sync), so the
+// Runtime lives on a dedicated executor thread; the rest of the
+// coordinator talks to it through this cloneable channel handle —
+// the standard actor pattern for thread-affine resources.
+
+use std::sync::mpsc::{channel, Sender};
+
+enum Req {
+    Merge2 {
+        name: String,
+        a: Vec<f32>,
+        b: Vec<f32>,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+    Sort {
+        name: String,
+        x: Vec<f32>,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+    SortPadded {
+        x: Vec<f32>,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+    BatchedSort {
+        name: String,
+        rows: Vec<Vec<f32>>,
+        reply: Sender<Result<Vec<Vec<f32>>>>,
+    },
+    Specs {
+        reply: Sender<Vec<ArtifactSpec>>,
+    },
+    Platform {
+        reply: Sender<String>,
+    },
+}
+
+/// Cloneable, Send handle to the executor thread owning the [`Runtime`].
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Sender<Req>,
+}
+
+impl RuntimeHandle {
+    /// Spawn the executor thread and load all artifacts in `dir`.
+    /// Returns once loading finished (or failed).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let dir = dir.to_path_buf();
+        let (tx, rx) = channel::<Req>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || {
+                let rt = match Runtime::load(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Merge2 { name, a, b, reply } => {
+                            let _ = reply.send(rt.merge2(&name, &a, &b));
+                        }
+                        Req::Sort { name, x, reply } => {
+                            let _ = reply.send(rt.sort(&name, &x));
+                        }
+                        Req::SortPadded { x, reply } => {
+                            let _ = reply.send(rt.sort_padded(&x));
+                        }
+                        Req::BatchedSort { name, rows, reply } => {
+                            let _ = reply.send(rt.batched_sort(&name, &rows));
+                        }
+                        Req::Specs { reply } => {
+                            let mut v: Vec<ArtifactSpec> =
+                                rt.specs.values().cloned().collect();
+                            v.sort_by(|a, b| a.name.cmp(&b.name));
+                            let _ = reply.send(v);
+                        }
+                        Req::Platform { reply } => {
+                            let _ = reply.send(rt.platform());
+                        }
+                    }
+                }
+            })
+            .expect("spawn pjrt-executor");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("pjrt-executor thread died during load"))??;
+        Ok(RuntimeHandle { tx })
+    }
+
+    fn call<R>(&self, mk: impl FnOnce(Sender<R>) -> Req) -> Result<R> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(mk(tx))
+            .map_err(|_| anyhow!("pjrt-executor gone"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt-executor dropped reply"))
+    }
+
+    pub fn merge2(&self, name: &str, a: Vec<f32>, b: Vec<f32>) -> Result<Vec<f32>> {
+        self.call(|reply| Req::Merge2 { name: name.into(), a, b, reply })?
+    }
+
+    pub fn sort(&self, name: &str, x: Vec<f32>) -> Result<Vec<f32>> {
+        self.call(|reply| Req::Sort { name: name.into(), x, reply })?
+    }
+
+    pub fn sort_padded(&self, x: Vec<f32>) -> Result<Vec<f32>> {
+        self.call(|reply| Req::SortPadded { x, reply })?
+    }
+
+    pub fn batched_sort(&self, name: &str, rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        self.call(|reply| Req::BatchedSort { name: name.into(), rows, reply })?
+    }
+
+    pub fn specs(&self) -> Result<Vec<ArtifactSpec>> {
+        self.call(|reply| Req::Specs { reply })
+    }
+
+    pub fn platform(&self) -> Result<String> {
+        self.call(|reply| Req::Platform { reply })
+    }
+
+    /// Pick the smallest artifact of `kind` that fits `n` elements.
+    pub fn best_for(&self, kind: ArtifactKind, n: usize) -> Result<Option<ArtifactSpec>> {
+        Ok(self
+            .specs()?
+            .into_iter()
+            .filter(|s| s.kind == kind && s.n >= n)
+            .min_by_key(|s| s.n))
+    }
+}

@@ -1,0 +1,99 @@
+//! Hybrid parallel merge tree (fig. 2): `g` many-leaf single-rate
+//! mergers (loser trees over `K` inputs each) feed a PMT of 2-way
+//! high-throughput mergers, giving `g·K` total inputs at an output rate
+//! of `g` — "the size of the HPMT can be easily adjusted to saturate the
+//! bandwidth of the target architecture, while eliminating the number of
+//! passes of the data by still using many-leaf merging" (§2.1).
+
+use super::loser::LoserTree;
+use super::pmt::{Pmt, PmtStats};
+use crate::flims::scalar::Variant;
+use crate::key::Item;
+
+/// HPMT configuration and execution.
+pub struct Hpmt;
+
+impl Hpmt {
+    /// Merge `lists` through `groups` many-leaf mergers + a PMT root of
+    /// rate `w`. `groups` must be a power of two ≥ 2 and divide the
+    /// list count evenly (pad with empty lists otherwise).
+    pub fn run<T: Item>(
+        lists: &[Vec<T>],
+        groups: usize,
+        w: usize,
+        variant: Variant,
+    ) -> (Vec<T>, PmtStats) {
+        assert!(groups.is_power_of_two() && groups >= 2);
+        let per = lists.len().div_ceil(groups);
+        // Stage 1: many-leaf single-rate mergers (the K-input blocks).
+        let merged_groups: Vec<Vec<T>> = (0..groups)
+            .map(|gi| {
+                let lo = gi * per;
+                let hi = ((gi + 1) * per).min(lists.len());
+                let refs: Vec<&[T]> =
+                    lists[lo.min(lists.len())..hi].iter().map(|l| l.as_slice()).collect();
+                if refs.is_empty() {
+                    Vec::new()
+                } else {
+                    LoserTree::new(refs).run()
+                }
+            })
+            .collect();
+        // Stage 2: the PMT over the group outputs.
+        let refs: Vec<&[T]> = merged_groups.iter().map(|l| l.as_slice()).collect();
+        Pmt::new(refs, w, variant).run()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_sorted_lists, Distribution};
+    use crate::util::rng::Rng;
+
+    fn oracle(lists: &[Vec<u32>]) -> Vec<u32> {
+        let mut v: Vec<u32> = lists.iter().flatten().copied().collect();
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        v
+    }
+
+    #[test]
+    fn fig2_shape_4_groups_of_k() {
+        // Fig. 2: 4 many-leaf mergers of K inputs → 4K lists, rate 4.
+        let mut rng = Rng::new(221);
+        for k_per_group in [4usize, 16, 64] {
+            let lists =
+                gen_sorted_lists(&mut rng, 4 * k_per_group, 40, Distribution::Uniform);
+            let (out, _) = Hpmt::run(&lists, 4, 4, Variant::Basic);
+            assert_eq!(out, oracle(&lists), "K={k_per_group}");
+        }
+    }
+
+    #[test]
+    fn uneven_group_split() {
+        let mut rng = Rng::new(222);
+        let lists = gen_sorted_lists(&mut rng, 13, 30, Distribution::Uniform);
+        let (out, _) = Hpmt::run(&lists, 4, 8, Variant::Basic);
+        assert_eq!(out, oracle(&lists));
+    }
+
+    #[test]
+    fn skewed_data_through_hpmt() {
+        let mut rng = Rng::new(223);
+        let lists = gen_sorted_lists(&mut rng, 32, 100, Distribution::DupHeavy { alphabet: 2 });
+        let (out, _) = Hpmt::run(&lists, 8, 8, Variant::Skew);
+        assert_eq!(out, oracle(&lists));
+    }
+
+    #[test]
+    fn single_pass_over_many_inputs() {
+        // The HPMT's purpose: merge many lists in ONE pass. 256 lists
+        // through 8 groups; every element moves through exactly one
+        // loser tree and one PMT.
+        let mut rng = Rng::new(224);
+        let lists = gen_sorted_lists(&mut rng, 256, 32, Distribution::Uniform);
+        let (out, stats) = Hpmt::run(&lists, 8, 16, Variant::Basic);
+        assert_eq!(out, oracle(&lists));
+        assert_eq!(stats.elements, 256 * 32);
+    }
+}

@@ -1,0 +1,148 @@
+//! Single-rate many-leaf merger: a loser (tournament) tree emitting one
+//! element per step — the "K-merger" leaf block of the HPMT (fig. 2).
+//! Many-leaf mergers support thousands of inputs but are single-rate,
+//! which is exactly the trade-off the HPMT combines away (§2.1).
+
+use crate::key::Item;
+
+/// Classic loser tree over `k` descending-sorted input cursors.
+pub struct LoserTree<'a, T: Item> {
+    inputs: Vec<&'a [T]>,
+    pos: Vec<usize>,
+    /// internal nodes hold the *loser* of the subtree match; `winner`
+    /// holds the overall winner's input index
+    losers: Vec<usize>,
+    winner: usize,
+    k: usize,
+}
+
+impl<'a, T: Item> LoserTree<'a, T> {
+    pub fn new(inputs: Vec<&'a [T]>) -> Self {
+        let k = inputs.len().next_power_of_two().max(1);
+        let mut t = LoserTree {
+            pos: vec![0; inputs.len()],
+            inputs,
+            losers: vec![usize::MAX; k],
+            winner: usize::MAX,
+            k,
+        };
+        t.rebuild();
+        t
+    }
+
+    fn key_at(&self, input: usize) -> Option<<T as Item>::K> {
+        if input >= self.inputs.len() {
+            return None; // padding leaf
+        }
+        self.inputs[input].get(self.pos[input]).map(|x| x.key())
+    }
+
+    /// `true` if input `a` currently beats input `b` (descending; an
+    /// exhausted input always loses; ties prefer the lower index for
+    /// stability across runs).
+    fn beats(&self, a: usize, b: usize) -> bool {
+        match (self.key_at(a), self.key_at(b)) {
+            (Some(x), Some(y)) => x > y || (x == y && a < b),
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => a < b,
+        }
+    }
+
+    fn rebuild(&mut self) {
+        // Play the full tournament bottom-up.
+        let k = self.k;
+        let mut winners = vec![usize::MAX; 2 * k];
+        for leaf in 0..k {
+            winners[k + leaf] = leaf;
+        }
+        for n in (1..k).rev() {
+            let (a, b) = (winners[2 * n], winners[2 * n + 1]);
+            let (w, l) = if self.beats(a, b) { (a, b) } else { (b, a) };
+            winners[n] = w;
+            self.losers[n] = l;
+        }
+        self.winner = if k > 0 { winners[1] } else { usize::MAX };
+    }
+
+    /// Pop the next (largest) element; None when all inputs drain.
+    pub fn pop(&mut self) -> Option<T> {
+        let w = self.winner;
+        if w == usize::MAX || w >= self.inputs.len() {
+            return None;
+        }
+        let item = *self.inputs[w].get(self.pos[w])?;
+        self.pos[w] += 1;
+        // Replay matches from the winner's leaf to the root.
+        let mut node = (self.k + w) / 2;
+        let mut cur = w;
+        while node >= 1 {
+            let other = self.losers[node];
+            if !self.beats(cur, other) {
+                self.losers[node] = cur;
+                cur = other;
+            }
+            node /= 2;
+        }
+        self.winner = cur;
+        Some(item)
+    }
+
+    /// Drain everything.
+    pub fn run(mut self) -> Vec<T> {
+        let total: usize = self.inputs.iter().map(|l| l.len()).sum();
+        let mut out = Vec::with_capacity(total);
+        while let Some(x) = self.pop() {
+            out.push(x);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_sorted_lists, Distribution};
+    use crate::util::rng::Rng;
+
+    fn oracle(lists: &[Vec<u32>]) -> Vec<u32> {
+        let mut v: Vec<u32> = lists.iter().flatten().copied().collect();
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        v
+    }
+
+    #[test]
+    fn merges_many_lists() {
+        let mut rng = Rng::new(211);
+        for k in [1usize, 2, 3, 5, 8, 16, 33, 100] {
+            let lists = gen_sorted_lists(&mut rng, k, 50, Distribution::Uniform);
+            let refs: Vec<&[u32]> = lists.iter().map(|l| l.as_slice()).collect();
+            let out = LoserTree::new(refs).run();
+            assert_eq!(out, oracle(&lists), "k={k}");
+        }
+    }
+
+    #[test]
+    fn handles_empty_lists() {
+        let lists: Vec<Vec<u32>> = vec![vec![], vec![5, 3], vec![], vec![4]];
+        let refs: Vec<&[u32]> = lists.iter().map(|l| l.as_slice()).collect();
+        assert_eq!(LoserTree::new(refs).run(), vec![5, 4, 3]);
+    }
+
+    #[test]
+    fn duplicates() {
+        let mut rng = Rng::new(212);
+        let lists = gen_sorted_lists(&mut rng, 7, 100, Distribution::DupHeavy { alphabet: 2 });
+        let refs: Vec<&[u32]> = lists.iter().map(|l| l.as_slice()).collect();
+        assert_eq!(LoserTree::new(refs).run(), oracle(&lists));
+    }
+
+    #[test]
+    fn thousand_leaves() {
+        // Many-leaf scale (§2.1: "up to a few thousands").
+        let mut rng = Rng::new(213);
+        let lists = gen_sorted_lists(&mut rng, 1024, 20, Distribution::Uniform);
+        let refs: Vec<&[u32]> = lists.iter().map(|l| l.as_slice()).collect();
+        assert_eq!(LoserTree::new(refs).run(), oracle(&lists));
+    }
+}

@@ -1,0 +1,18 @@
+//! Merge-tree coordination: the embedding context of the FLiMS merger.
+//!
+//! * [`pmt`] — the parallel merge tree of fig. 1: a binary tree of
+//!   2-way high-throughput mergers with bounded FIFO queues and
+//!   level-halving rates, plus stall accounting (the §4.1 rate-mismatch
+//!   observable).
+//! * [`loser`] — a single-rate many-leaf merger (tournament / loser
+//!   tree), the "K-merger" building block of fig. 2.
+//! * [`hpmt`] — the hybrid parallel merge tree of fig. 2: many-leaf
+//!   single-rate mergers at the leaves, a PMT above them.
+
+pub mod hpmt;
+pub mod loser;
+pub mod pmt;
+
+pub use hpmt::Hpmt;
+pub use loser::LoserTree;
+pub use pmt::{Pmt, PmtStats};

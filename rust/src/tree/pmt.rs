@@ -1,0 +1,292 @@
+//! Parallel merge tree (fig. 1): `k` sorted input lists merge through a
+//! binary tree of 2-way mergers with bounded FIFO queues between levels.
+//!
+//! Rates follow the paper: the root emits up to `w` elements per round,
+//! each level below half as many ("the 'merge rate' of the mergers in
+//! each level … directly contributes to the throughput … the difference
+//! in widths from level to level is managed by rate converters and the
+//! appropriate stall signals"). A node stalls when its output queue is
+//! full (backpressure) or its inputs cannot supply data yet; stall
+//! counts per level are the observable behind the §4.1 skew discussion.
+
+use crate::flims::scalar::Variant;
+use crate::key::Item;
+use std::collections::VecDeque;
+
+/// Per-run tree statistics.
+#[derive(Clone, Debug, Default)]
+pub struct PmtStats {
+    /// scheduler rounds until fully drained (root-cycle analogue)
+    pub rounds: usize,
+    /// per-level stall events (node could not meet its rate)
+    pub stalls_per_level: Vec<usize>,
+    /// total elements moved
+    pub elements: usize,
+}
+
+/// One internal 2-way merge node with bounded input queues.
+struct Node<T> {
+    q_in: [VecDeque<T>; 2],
+    in_done: [bool; 2],
+    /// skew-optimisation dir bit (algorithm 2) — per node, emulating the
+    /// MAX units' oscillation at element granularity
+    dir: bool,
+    variant: Variant,
+}
+
+impl<T: Item> Node<T> {
+    fn new(variant: Variant) -> Self {
+        Node {
+            q_in: [VecDeque::new(), VecDeque::new()],
+            in_done: [false, false],
+            dir: false,
+            variant,
+        }
+    }
+
+    /// Pop the next merged element if the decision is determined.
+    fn pop_next(&mut self) -> Option<T> {
+        let a = self.q_in[0].front();
+        let b = self.q_in[1].front();
+        match (a, b) {
+            (Some(x), Some(y)) => {
+                let take_a = match x.key().cmp(&y.key()) {
+                    std::cmp::Ordering::Greater => true,
+                    std::cmp::Ordering::Less => false,
+                    std::cmp::Ordering::Equal => match self.variant {
+                        Variant::Basic => false,
+                        // Algorithm 2: alternate sources on duplicates.
+                        Variant::Skew => self.dir,
+                    },
+                };
+                self.dir = !take_a;
+                if take_a {
+                    self.q_in[0].pop_front()
+                } else {
+                    self.q_in[1].pop_front()
+                }
+            }
+            (Some(_), None) if self.in_done[1] => self.q_in[0].pop_front(),
+            (None, Some(_)) if self.in_done[0] => self.q_in[1].pop_front(),
+            _ => None,
+        }
+    }
+
+    fn exhausted(&self) -> bool {
+        self.in_done[0]
+            && self.in_done[1]
+            && self.q_in[0].is_empty()
+            && self.q_in[1].is_empty()
+    }
+}
+
+/// The tree. Nodes are stored heap-style: node 0 is the root; node `i`
+/// has children `2i+1`, `2i+2`; leaves attach to the input lists.
+pub struct Pmt<'a, T: Item> {
+    k: usize,
+    w: usize,
+    nodes: Vec<Node<T>>,
+    inputs: Vec<&'a [T]>,
+    in_pos: Vec<usize>,
+    /// per-input feed bandwidth (elements per round) — fig. 1's leaves
+    /// are rate-1
+    leaf_rate: usize,
+    fifo_cap: usize,
+}
+
+impl<'a, T: Item> Pmt<'a, T> {
+    /// `inputs.len()` must be a power of two ≥ 2; `w` is the root rate.
+    pub fn new(inputs: Vec<&'a [T]>, w: usize, variant: Variant) -> Self {
+        let k = inputs.len();
+        assert!(k.is_power_of_two() && k >= 2, "k must be a power of two >= 2");
+        assert!(w.is_power_of_two());
+        let nodes = (0..k - 1).map(|_| Node::new(variant)).collect();
+        Pmt {
+            k,
+            w,
+            nodes,
+            in_pos: vec![0; k],
+            inputs,
+            leaf_rate: 1.max(2 * w / k),
+            fifo_cap: 4 * w.max(8),
+        }
+    }
+
+    pub fn levels(&self) -> usize {
+        self.k.trailing_zeros() as usize
+    }
+
+    /// Rate (elements per round) of a node at `depth` (root = 0).
+    fn rate(&self, depth: usize) -> usize {
+        (self.w >> depth).max(1)
+    }
+
+    fn depth_of(idx: usize) -> usize {
+        (usize::BITS - (idx + 1).leading_zeros() - 1) as usize
+    }
+
+    /// Run to completion, returning the merged output and statistics.
+    pub fn run(mut self) -> (Vec<T>, PmtStats) {
+        let total: usize = self.inputs.iter().map(|l| l.len()).sum();
+        let mut out = Vec::with_capacity(total);
+        let levels = self.levels();
+        let mut stats = PmtStats {
+            rounds: 0,
+            stalls_per_level: vec![0; levels],
+            elements: total,
+        };
+        let first_leaf_parent = (self.k - 1) / 2; // nodes whose children are inputs
+
+        while out.len() < total {
+            stats.rounds += 1;
+            // 1) feed leaves: each input list delivers up to leaf_rate
+            //    elements into its parent node's queue (bounded).
+            for input_idx in 0..self.k {
+                let parent = first_leaf_parent + input_idx / 2;
+                let side = input_idx % 2;
+                let pos = &mut self.in_pos[input_idx];
+                let src = self.inputs[input_idx];
+                let node = &mut self.nodes[parent];
+                let mut budget = self.leaf_rate;
+                while budget > 0 && *pos < src.len() && node.q_in[side].len() < self.fifo_cap
+                {
+                    node.q_in[side].push_back(src[*pos]);
+                    *pos += 1;
+                    budget -= 1;
+                }
+                if *pos >= src.len() {
+                    node.in_done[side] = true;
+                }
+            }
+            // 2) service internal nodes bottom-up so data flows one level
+            //    per round (pipeline), root last.
+            for idx in (0..self.nodes.len()).rev() {
+                let depth = Self::depth_of(idx);
+                let rate = self.rate(depth);
+                let is_root = idx == 0;
+                let mut moved = 0;
+                for _ in 0..rate {
+                    // Output backpressure (non-root): parent queue cap.
+                    if !is_root {
+                        let parent = (idx - 1) / 2;
+                        let side = (idx - 1) % 2;
+                        if self.nodes[parent].q_in[side].len() >= self.fifo_cap {
+                            break;
+                        }
+                        match self.nodes[idx].pop_next() {
+                            Some(x) => {
+                                let parent_node = &mut self.nodes[parent];
+                                parent_node.q_in[side].push_back(x);
+                                moved += 1;
+                            }
+                            None => break,
+                        }
+                    } else {
+                        match self.nodes[0].pop_next() {
+                            Some(x) => {
+                                out.push(x);
+                                moved += 1;
+                            }
+                            None => break,
+                        }
+                    }
+                }
+                if moved < rate && !self.nodes[idx].exhausted() {
+                    stats.stalls_per_level[depth] += 1;
+                }
+                // Propagate upstream completion.
+                if !is_root && self.nodes[idx].exhausted() {
+                    let parent = (idx - 1) / 2;
+                    let side = (idx - 1) % 2;
+                    self.nodes[parent].in_done[side] = true;
+                }
+            }
+            // Safety: a fully stalled tree would loop forever.
+            debug_assert!(stats.rounds < 100 * (total + self.k * self.fifo_cap).max(64));
+        }
+        (out, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_sorted_lists, Distribution};
+    use crate::key::is_sorted_desc;
+    use crate::util::rng::Rng;
+
+    fn oracle(lists: &[Vec<u32>]) -> Vec<u32> {
+        let mut v: Vec<u32> = lists.iter().flatten().copied().collect();
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        v
+    }
+
+    #[test]
+    fn merges_k_lists() {
+        let mut rng = Rng::new(201);
+        for k in [2usize, 4, 8, 16] {
+            let lists = gen_sorted_lists(&mut rng, k, 200, Distribution::Uniform);
+            let refs: Vec<&[u32]> = lists.iter().map(|l| l.as_slice()).collect();
+            let (out, _) = Pmt::new(refs, 8, Variant::Basic).run();
+            assert_eq!(out, oracle(&lists), "k={k}");
+        }
+    }
+
+    #[test]
+    fn uneven_list_lengths() {
+        let mut rng = Rng::new(202);
+        let mut lists = gen_sorted_lists(&mut rng, 8, 64, Distribution::Uniform);
+        lists[0] = Vec::new();
+        lists[3].truncate(5);
+        let refs: Vec<&[u32]> = lists.iter().map(|l| l.as_slice()).collect();
+        let (out, _) = Pmt::new(refs, 4, Variant::Basic).run();
+        assert_eq!(out, oracle(&lists));
+    }
+
+    #[test]
+    fn output_is_sorted_with_duplicates() {
+        let mut rng = Rng::new(203);
+        let lists = gen_sorted_lists(&mut rng, 8, 300, Distribution::DupHeavy { alphabet: 3 });
+        let refs: Vec<&[u32]> = lists.iter().map(|l| l.as_slice()).collect();
+        let (out, _) = Pmt::new(refs, 8, Variant::Skew).run();
+        assert!(is_sorted_desc(&out));
+        assert_eq!(out, oracle(&lists));
+    }
+
+    #[test]
+    fn skew_variant_reduces_stalls_on_duplicates() {
+        // §4.1: on duplicate-heavy data the basic tree starves interior
+        // mergers; the skew optimisation balances both inputs of every
+        // node and finishes in fewer rounds.
+        let k = 8;
+        let lists: Vec<Vec<u32>> = (0..k).map(|_| vec![9u32; 512]).collect();
+        let refs1: Vec<&[u32]> = lists.iter().map(|l| l.as_slice()).collect();
+        let refs2 = refs1.clone();
+        let (out1, s_basic) = Pmt::new(refs1, 8, Variant::Basic).run();
+        let (out2, s_skew) = Pmt::new(refs2, 8, Variant::Skew).run();
+        assert_eq!(out1.len(), k * 512);
+        assert_eq!(out2.len(), k * 512);
+        assert!(
+            s_skew.rounds < s_basic.rounds,
+            "skew {} rounds vs basic {}",
+            s_skew.rounds,
+            s_basic.rounds
+        );
+    }
+
+    #[test]
+    fn throughput_scales_with_root_rate() {
+        let mut rng = Rng::new(204);
+        let lists = gen_sorted_lists(&mut rng, 4, 4096, Distribution::Uniform);
+        let r1: Vec<&[u32]> = lists.iter().map(|l| l.as_slice()).collect();
+        let r2 = r1.clone();
+        let (_, s_w4) = Pmt::new(r1, 4, Variant::Basic).run();
+        let (_, s_w16) = Pmt::new(r2, 16, Variant::Basic).run();
+        assert!(
+            (s_w4.rounds as f64) > 2.5 * s_w16.rounds as f64,
+            "w=4 {} vs w=16 {} rounds",
+            s_w4.rounds,
+            s_w16.rounds
+        );
+    }
+}

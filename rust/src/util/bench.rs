@@ -1,0 +1,129 @@
+//! Minimal criterion-style micro-benchmark harness (criterion itself is
+//! not available offline). Warms up, runs timed batches until a wall
+//! budget is exhausted, and reports median / mean / min with MAD spread.
+//!
+//! Every `rust/benches/*.rs` target (declared `harness = false`) uses
+//! this; `cargo bench` therefore prints the paper-table rows directly.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// nanoseconds per iteration
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    /// median absolute deviation, ns
+    pub mad_ns: f64,
+    pub iters: u64,
+}
+
+impl BenchResult {
+    /// Throughput in items per second given items processed per iteration.
+    pub fn items_per_sec(&self, items_per_iter: usize) -> f64 {
+        items_per_iter as f64 / (self.median_ns * 1e-9)
+    }
+
+    /// Throughput in M items/s.
+    pub fn mitems_per_sec(&self, items_per_iter: usize) -> f64 {
+        self.items_per_sec(items_per_iter) / 1e6
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Benchmark `f`, returning per-iteration statistics.
+///
+/// `f` is run once for warmup, then in sample batches sized so each batch
+/// takes ≥ ~2ms, until `budget` elapses (or ≥ 15 samples collected).
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warmup + batch sizing.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_nanos().max(1) as u64;
+    let batch = (2_000_000 / once).clamp(1, 1_000_000);
+
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    let mut iters: u64 = 0;
+    while (start.elapsed() < budget || samples.len() < 15) && samples.len() < 2000 {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t.elapsed().as_nanos() as f64 / batch as f64;
+        samples.push(dt);
+        iters += batch;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples[0];
+    let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = devs[devs.len() / 2];
+    BenchResult {
+        name: name.to_string(),
+        median_ns: median,
+        mean_ns: mean,
+        min_ns: min,
+        mad_ns: mad,
+        iters,
+    }
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let mut x = 0u64;
+        let r = bench("noop-ish", Duration::from_millis(20), || {
+            x = black_box(x.wrapping_add(1));
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.min_ns <= r.median_ns * 1.5 + 1.0);
+        assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "t".into(),
+            median_ns: 1000.0,
+            mean_ns: 1000.0,
+            min_ns: 1000.0,
+            mad_ns: 0.0,
+            iters: 1,
+        };
+        // 1000 items in 1µs = 1e9 items/s
+        assert!((r.items_per_sec(1000) - 1e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5e3).ends_with("µs"));
+        assert!(fmt_ns(5e6).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with("s"));
+    }
+}

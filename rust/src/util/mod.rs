@@ -1,0 +1,10 @@
+//! In-tree utilities replacing unavailable external crates (the build is
+//! fully offline; see Cargo.toml): deterministic RNG, a criterion-style
+//! micro-benchmark harness, and a lightweight property-testing helper.
+
+pub mod bench;
+pub mod prop;
+pub mod rng;
+
+pub use bench::{bench, BenchResult};
+pub use rng::Rng;

@@ -1,0 +1,116 @@
+//! Lightweight property-testing helper (proptest is not available
+//! offline). Runs a property over many seeded random cases and, on
+//! failure, retries with progressively smaller size parameters to report
+//! a small counterexample.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// maximum "size" hint passed to the generator
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 256,
+            seed: 0xF11A5,
+            max_size: 256,
+        }
+    }
+}
+
+/// Run `prop(rng, size)` for `cfg.cases` seeded cases with sizes ramping
+/// up from tiny to `cfg.max_size`. On failure, re-runs smaller sizes with
+/// the failing seed to find a reduced case, then panics with both.
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        // Ramp sizes: early cases small, later cases up to max.
+        let size = 1 + (cfg.max_size - 1) * case / cfg.cases.max(1);
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // Shrink: try the same seed at smaller sizes.
+            let mut best = (size, msg.clone());
+            for s in 1..size {
+                let mut r2 = Rng::new(case_seed);
+                if let Err(m2) = prop(&mut r2, s) {
+                    best = (s, m2);
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {case_seed:#x}, \
+                 size {size}; smallest reproduced size {}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", Config { cases: 50, ..Default::default() }, |rng, _| {
+            let (a, b) = (rng.next_u32() as u64, rng.next_u32() as u64);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_context() {
+        check(
+            "always-fails",
+            Config { cases: 5, ..Default::default() },
+            |_, _| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn sizes_ramp_within_bounds() {
+        let mut seen_small = false;
+        let mut max_seen = 0;
+        check(
+            "size-ramp",
+            Config { cases: 100, max_size: 64, ..Default::default() },
+            |_, size| {
+                if size <= 4 {
+                    seen_small = true;
+                }
+                max_seen = max_seen.max(size);
+                if size <= 64 {
+                    Ok(())
+                } else {
+                    Err(format!("size {size} out of bounds"))
+                }
+            },
+        );
+        assert!(seen_small);
+        assert!(max_seen >= 32);
+    }
+}

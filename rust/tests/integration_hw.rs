@@ -1,0 +1,162 @@
+//! Integration: the hardware substrate — structural consistency across
+//! the generator/analytical/cost/timing layers, cycle-accurate runs of
+//! every behavioural model against the software oracle, the §4.1 skew
+//! experiment at bandwidth limits, and the §6 tie-record matrix.
+
+use flims::data::{gen_sorted_pair, gen_u32, Distribution};
+use flims::hw::{
+    estimate, fmax_mhz, netlist, run_stream, BasicCycle, Design, FlimsCycle, FlimsjCycle,
+    RowClass, RowMergerCycle, SimConfig, ALL_DESIGNS,
+};
+use flims::key::Kv;
+use flims::util::rng::Rng;
+
+fn oracle(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut v: Vec<u32> = a.iter().chain(b.iter()).copied().collect();
+    v.sort_unstable_by(|x, y| y.cmp(x));
+    v
+}
+
+#[test]
+fn structural_analytical_cost_timing_consistency() {
+    for d in ALL_DESIGNS {
+        for wexp in 1..=8 {
+            let w = 1 << wexp;
+            let n = netlist(d, w, 64);
+            assert_eq!(n.comparators(), d.comparators(w));
+            assert_eq!(n.latency(), d.latency(w));
+            let r = estimate(&n);
+            assert!(r.luts > 0.0 && r.ffs > 0.0);
+            let f = fmax_mhz(d, w, 64);
+            assert!(f > 30.0 && f < 1000.0, "{} w={w}: {f} MHz", d.name());
+        }
+    }
+}
+
+#[test]
+fn all_behavioural_models_merge_correctly() {
+    let mut rng = Rng::new(3001);
+    for w in [2usize, 4, 8, 16] {
+        for dist in [Distribution::Uniform, Distribution::DupHeavy { alphabet: 3 }] {
+            let (na, nb) = (rng.range(0, 500), rng.range(0, 500));
+            let (a, b) = gen_sorted_pair(&mut rng, na, nb, dist, gen_u32);
+            let expect = oracle(&a, &b);
+            let cfg = SimConfig { fifo_depth: 4, ..Default::default() };
+
+            let mut m: FlimsCycle<u32> = FlimsCycle::new(w, false);
+            assert_eq!(run_stream(&mut m, &a, &b, cfg).output, expect, "flims w={w}");
+            let mut m: FlimsCycle<u32> = FlimsCycle::new(w, true);
+            assert_eq!(run_stream(&mut m, &a, &b, cfg).output, expect, "skew w={w}");
+            let mut m: FlimsjCycle<u32> = FlimsjCycle::new(w);
+            assert_eq!(run_stream(&mut m, &a, &b, cfg).output, expect, "flimsj w={w}");
+            let mut m: BasicCycle<u32> = BasicCycle::new(w);
+            assert_eq!(run_stream(&mut m, &a, &b, cfg).output, expect, "basic w={w}");
+            for class in [RowClass::Mms, RowClass::Vms, RowClass::Wms] {
+                if matches!(dist, Distribution::Uniform) {
+                    let mut m: RowMergerCycle<u32> = RowMergerCycle::new(w, class);
+                    assert_eq!(
+                        run_stream(&mut m, &a, &b, cfg).output,
+                        expect,
+                        "{class:?} w={w}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn feedback_designs_have_lower_throughput() {
+    let mut rng = Rng::new(3002);
+    let (a, b) = gen_sorted_pair(&mut rng, 4096, 4096, Distribution::Uniform, gen_u32);
+    let cfg = SimConfig { fifo_depth: 8, ..Default::default() };
+    let mut f: FlimsCycle<u32> = FlimsCycle::new(8, false);
+    let rf = run_stream(&mut f, &a, &b, cfg);
+    let mut c: BasicCycle<u32> = BasicCycle::new(8);
+    let rc = run_stream(&mut c, &a, &b, cfg);
+    // The basic loop pays its feedback length per selection.
+    assert!(
+        rf.throughput > 2.0 * rc.throughput,
+        "flims {:.2} vs basic {:.2}",
+        rf.throughput,
+        rc.throughput
+    );
+}
+
+#[test]
+fn skew_stalls_reduced_at_limited_bandwidth() {
+    // §4.1 at per-input bandwidth w/2 on constant data.
+    let w = 8;
+    let a = vec![3u32; 4096];
+    let b = vec![3u32; 4096];
+    let cfg = SimConfig { fifo_depth: 4, bw_a: w / 2, bw_b: w / 2, ..Default::default() };
+    let mut basic: FlimsCycle<u32> = FlimsCycle::new(w, false);
+    let rb = run_stream(&mut basic, &a, &b, cfg);
+    let mut skew: FlimsCycle<u32> = FlimsCycle::new(w, true);
+    let rs = run_stream(&mut skew, &a, &b, cfg);
+    assert_eq!(rb.output.len(), 8192);
+    assert_eq!(rs.output.len(), 8192);
+    assert!(rs.throughput > 1.5 * rb.throughput);
+}
+
+#[test]
+fn tie_record_matrix() {
+    // Duplicate keys ACROSS rows; payload = identity.
+    let mk = |base: u32| -> Vec<Kv> { (0..64).map(|i| Kv::new(i / 8, base + i)).collect() };
+    let mut a = mk(0);
+    let mut b = mk(1000);
+    a.sort_by(|x, y| y.key.cmp(&x.key));
+    b.sort_by(|x, y| y.key.cmp(&x.key));
+    let expect: std::collections::BTreeSet<u32> =
+        a.iter().chain(b.iter()).map(|kv| kv.val).collect();
+    let payloads = |out: &[Kv]| -> std::collections::BTreeSet<u32> {
+        out.iter().map(|kv| kv.val).collect()
+    };
+    let cfg = SimConfig::default();
+
+    // Tie-safe designs preserve payloads.
+    let mut f: FlimsCycle<Kv> = FlimsCycle::new(8, false);
+    assert_eq!(payloads(&run_stream(&mut f, &a, &b, cfg).output), expect);
+    let mut j: FlimsjCycle<Kv> = FlimsjCycle::new(8);
+    assert_eq!(payloads(&run_stream(&mut j, &a, &b, cfg).output), expect);
+
+    // The unsafe row class (without the workaround) corrupts them.
+    let mut wms: RowMergerCycle<Kv> = RowMergerCycle::new(8, RowClass::Wms);
+    assert!(wms.tie_unsafe);
+    let got = payloads(&run_stream(&mut wms, &a, &b, cfg).output);
+    assert_ne!(got, expect, "expected tie-record corruption");
+
+    // And with the workaround it is clean again.
+    let mut fixed: RowMergerCycle<Kv> = RowMergerCycle::new(8, RowClass::Wms);
+    fixed.tie_unsafe = false;
+    assert_eq!(payloads(&run_stream(&mut fixed, &a, &b, cfg).output), expect);
+}
+
+#[test]
+fn latency_is_respected_by_engine() {
+    // With ample bandwidth the total cycle count is ~steps + latency.
+    let mut rng = Rng::new(3003);
+    let (a, b) = gen_sorted_pair(&mut rng, 1024, 1024, Distribution::Uniform, gen_u32);
+    let w = 8;
+    let mut m: FlimsCycle<u32> = FlimsCycle::new(w, false);
+    let lat = flims::hw::CycleMerger::<u32>::latency(&m);
+    let r = run_stream(&mut m, &a, &b, SimConfig { fifo_depth: 8, ..Default::default() });
+    let steps = (a.len() + b.len()) / w;
+    assert!(r.cycles >= steps + lat - 1, "cycles {} < steps {}", r.cycles, steps);
+    assert!(r.cycles <= steps + lat + 8, "cycles {} too many", r.cycles);
+}
+
+#[test]
+fn fifo_depth_throttles_throughput() {
+    let mut rng = Rng::new(3004);
+    let (a, b) = gen_sorted_pair(&mut rng, 8192, 8192, Distribution::Uniform, gen_u32);
+    // Bandwidth below w with a shallow FIFO: stalls; deep FIFO: fewer.
+    let shallow = SimConfig { fifo_depth: 1, bw_a: 6, bw_b: 6, ..Default::default() };
+    let deep = SimConfig { fifo_depth: 64, bw_a: 6, bw_b: 6, ..Default::default() };
+    let mut m1: FlimsCycle<u32> = FlimsCycle::new(8, false);
+    let r1 = run_stream(&mut m1, &a, &b, shallow);
+    let mut m2: FlimsCycle<u32> = FlimsCycle::new(8, false);
+    let r2 = run_stream(&mut m2, &a, &b, deep);
+    assert_eq!(r1.output, r2.output);
+    assert!(r2.throughput >= r1.throughput);
+}

@@ -1,0 +1,128 @@
+//! Integration: every merge implementation (scalar algorithms 1–4, the
+//! lane-parallel tiers, the basic-bitonic baseline) agrees with the
+//! oracle and with each other across distributions, widths and lengths —
+//! plus the paper's Table 1 replay.
+
+use flims::baselines::merge_basic_bitonic;
+use flims::data::{gen_sorted_pair, gen_u32, Distribution};
+use flims::flims::flimsj::merge_flimsj;
+use flims::flims::lanes::{merge_desc, merge_desc_fast};
+use flims::flims::scalar::{merge_basic, merge_skew, FlimsMerger, Variant};
+use flims::key::is_sorted_desc;
+use flims::util::rng::Rng;
+
+fn oracle(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut v: Vec<u32> = a.iter().chain(b.iter()).copied().collect();
+    v.sort_unstable_by(|x, y| y.cmp(x));
+    v
+}
+
+#[test]
+fn all_implementations_agree() {
+    let mut rng = Rng::new(1001);
+    let dists = [
+        Distribution::Uniform,
+        Distribution::DupHeavy { alphabet: 2 },
+        Distribution::DupHeavy { alphabet: 16 },
+        Distribution::Zipf { s_x100: 150, n_ranks: 64 },
+    ];
+    for dist in dists {
+        for w in [2usize, 4, 8, 16, 32] {
+            for _ in 0..5 {
+                let (na, nb) = (rng.range(0, 600), rng.range(0, 600));
+                let (a, b) = gen_sorted_pair(&mut rng, na, nb, dist, gen_u32);
+                let expect = oracle(&a, &b);
+
+                assert_eq!(merge_basic(&a, &b, w), expect, "scalar w={w} {dist:?}");
+                assert_eq!(merge_skew(&a, &b, w).0, expect, "skew w={w} {dist:?}");
+                assert_eq!(merge_flimsj(&a, &b, w).0, expect, "flimsj w={w} {dist:?}");
+                assert_eq!(merge_desc(&a, &b, w), expect, "lanes w={w} {dist:?}");
+                let mut fast = Vec::new();
+                merge_desc_fast(&a, &b, w, &mut fast);
+                assert_eq!(fast, expect, "fast w={w} {dist:?}");
+                assert_eq!(
+                    merge_basic_bitonic(&a, &b, w),
+                    expect,
+                    "basic-bitonic w={w} {dist:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn table1_trace_replay() {
+    // The exact example of paper Table 1 (w = 4).
+    let a: Vec<u32> = vec![29, 26, 26, 17, 16, 11, 5, 4, 3, 3];
+    let b: Vec<u32> = vec![22, 21, 19, 18, 15, 12, 9, 8, 7, 0];
+    let (out, trace) = FlimsMerger::new(&a, &b, 4, Variant::Basic).run_traced();
+    // Paper's final row: 0 3 3 4 5 7 8 9 11 12 15 16 17 18 19 21 22 26 26 29
+    // (ascending print of the descending output).
+    let mut asc = out.clone();
+    asc.reverse();
+    assert_eq!(
+        asc,
+        vec![0, 3, 3, 4, 5, 7, 8, 9, 11, 12, 15, 16, 17, 18, 19, 21, 22, 26, 26, 29]
+    );
+    // 5 cycles for 20 elements at w=4, exactly as the paper's table.
+    assert_eq!(trace.cycles.len(), 5);
+    // First output chunk: {29, 26, 26, 22} (paper row 1).
+    assert_eq!(trace.cycles[0].output, vec!["29", "26", "26", "22"]);
+}
+
+#[test]
+fn extreme_lengths_and_values() {
+    // Degenerate and adversarial shapes.
+    for w in [2usize, 8, 64] {
+        assert_eq!(merge_basic::<u32>(&[], &[], w), Vec::<u32>::new());
+        assert_eq!(merge_basic(&[5], &[], w), vec![5]);
+        assert_eq!(merge_basic(&[], &[5], w), vec![5]);
+        assert_eq!(merge_basic(&[u32::MAX], &[0], w), vec![u32::MAX, 0]);
+        // 1 vs many
+        let big: Vec<u32> = (0..1000u32).rev().collect();
+        let out = merge_basic(&big, &[500], w);
+        assert!(is_sorted_desc(&out));
+        assert_eq!(out.len(), 1001);
+    }
+}
+
+#[test]
+fn chunks_stream_globally_descending() {
+    // The defining streaming property: each emitted chunk is the top-w
+    // of everything remaining — so chunk boundaries never interleave.
+    let mut rng = Rng::new(1002);
+    let (a, b) = gen_sorted_pair(&mut rng, 256, 256, Distribution::Uniform, gen_u32);
+    let mut m = FlimsMerger::new(&a, &b, 8, Variant::Basic);
+    let mut all = Vec::new();
+    for _ in 0..m.total_cycles() {
+        let chunk = m.step();
+        if let Some(&last) = all.last() {
+            assert!(chunk.first().map(|&f| f <= last).unwrap_or(true));
+        }
+        all.extend(chunk);
+    }
+    assert_eq!(all, oracle(&a, &b));
+}
+
+#[test]
+fn i64_and_kv64_types() {
+    use flims::key::Kv64;
+    let mut rng = Rng::new(1003);
+    let mut a: Vec<i64> = (0..300).map(|_| rng.next_u64() as i64).collect();
+    let mut b: Vec<i64> = (0..200).map(|_| rng.next_u64() as i64).collect();
+    a.sort_unstable_by(|x, y| y.cmp(x));
+    b.sort_unstable_by(|x, y| y.cmp(x));
+    let out = merge_desc(&a, &b, 8);
+    let mut expect: Vec<i64> = a.iter().chain(b.iter()).copied().collect();
+    expect.sort_unstable_by(|x, y| y.cmp(x));
+    assert_eq!(out, expect);
+
+    // 64-bit KV records (the paper's evaluation width).
+    let mut ka: Vec<Kv64> = (0..100)
+        .map(|i| Kv64 { key: rng.next_u64() >> 8, val: i })
+        .collect();
+    ka.sort_by(|x, y| y.key.cmp(&x.key));
+    let kb: Vec<Kv64> = vec![];
+    let out = merge_desc(&ka, &kb, 16);
+    assert_eq!(out, ka);
+}

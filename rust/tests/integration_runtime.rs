@@ -1,0 +1,126 @@
+//! Integration: the PJRT runtime executing the AOT artifacts — the
+//! Layer-1/2 → Layer-3 seam. These tests require `make artifacts` to
+//! have run; they are skipped (with a notice) when artifacts are absent
+//! so `cargo test` works on a fresh checkout.
+
+use std::path::Path;
+
+use flims::data::{gen_u32, Distribution};
+use flims::flims::sort::{sort_desc, SortConfig};
+use flims::key::F32Key;
+use flims::runtime::{parse_manifest, ArtifactKind, RuntimeHandle};
+use flims::util::rng::Rng;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.tsv").exists() {
+        Some(p)
+    } else {
+        eprintln!("NOTE: artifacts/ missing — run `make artifacts`; skipping runtime test");
+        None
+    }
+}
+
+fn gen_f32(rng: &mut Rng, n: usize) -> Vec<f32> {
+    gen_u32(rng, n, Distribution::Uniform)
+        .into_iter()
+        .map(|x| (x >> 8) as f32)
+        .collect()
+}
+
+fn native_sort(x: &[f32]) -> Vec<f32> {
+    let mut keys: Vec<F32Key> = x.iter().map(|&v| F32Key::from_f32(v)).collect();
+    sort_desc(&mut keys, SortConfig::default());
+    keys.into_iter().map(|k| k.to_f32()).collect()
+}
+
+#[test]
+fn manifest_round_trip() {
+    let Some(dir) = artifacts_dir() else { return };
+    let text = std::fs::read_to_string(dir.join("manifest.tsv")).unwrap();
+    let specs = parse_manifest(&text).unwrap();
+    assert!(specs.iter().any(|s| s.kind == ArtifactKind::Merge2));
+    assert!(specs.iter().any(|s| s.kind == ArtifactKind::FullSort));
+    assert!(specs.iter().any(|s| s.kind == ArtifactKind::BatchedSort));
+    for s in &specs {
+        assert!(dir.join(&s.file).exists(), "missing {}", s.file);
+    }
+}
+
+#[test]
+fn pjrt_sort_matches_native_exactly() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = RuntimeHandle::load(dir).expect("runtime load");
+    let mut rng = Rng::new(5001);
+    for n in [100usize, 4096, 10_000] {
+        let data = gen_f32(&mut rng, n);
+        let got = rt.sort_padded(data.clone()).expect("pjrt sort");
+        assert_eq!(got, native_sort(&data), "n={n}");
+    }
+}
+
+#[test]
+fn pjrt_merge_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = RuntimeHandle::load(dir).expect("runtime load");
+    let spec = rt
+        .best_for(ArtifactKind::Merge2, 4096)
+        .unwrap()
+        .expect("merge2 artifact");
+    let mut rng = Rng::new(5002);
+    let mut a = gen_f32(&mut rng, spec.n);
+    let mut b = gen_f32(&mut rng, spec.n);
+    a.sort_unstable_by(|x, y| y.partial_cmp(x).unwrap());
+    b.sort_unstable_by(|x, y| y.partial_cmp(x).unwrap());
+    let got = rt.merge2(&spec.name, a.clone(), b.clone()).expect("merge2");
+    let mut expect: Vec<f32> = a.into_iter().chain(b).collect();
+    expect.sort_unstable_by(|x, y| y.partial_cmp(x).unwrap());
+    assert_eq!(got, expect);
+}
+
+#[test]
+fn pjrt_batched_sort_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = RuntimeHandle::load(dir).expect("runtime load");
+    let spec = rt
+        .specs()
+        .unwrap()
+        .into_iter()
+        .find(|s| s.kind == ArtifactKind::BatchedSort)
+        .expect("batched artifact");
+    let mut rng = Rng::new(5003);
+    let rows: Vec<Vec<f32>> = (0..spec.batch).map(|_| gen_f32(&mut rng, spec.n)).collect();
+    let got = rt.batched_sort(&spec.name, rows.clone()).expect("batched");
+    for (inp, out) in rows.iter().zip(&got) {
+        assert_eq!(*out, native_sort(inp));
+    }
+}
+
+#[test]
+fn pjrt_shape_errors_are_reported() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = RuntimeHandle::load(dir).expect("runtime load");
+    let spec = rt.best_for(ArtifactKind::Merge2, 1).unwrap().unwrap();
+    // Wrong input length must error, not crash.
+    assert!(rt.merge2(&spec.name, vec![1.0; 3], vec![2.0; 3]).is_err());
+    assert!(rt.sort("nonexistent", vec![1.0]).is_err());
+}
+
+#[test]
+fn runtime_handle_is_send_and_usable_from_threads() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = RuntimeHandle::load(dir).expect("runtime load");
+    let mut handles = Vec::new();
+    for t in 0..3u64 {
+        let rt = rt.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(t);
+            let data = gen_f32(&mut rng, 500);
+            let got = rt.sort_padded(data.clone()).unwrap();
+            assert_eq!(got, native_sort(&data));
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,146 @@
+//! Integration: the coordinator service over real TCP — concurrent
+//! clients, batching, error handling, metrics.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use flims::config::AppConfig;
+use flims::coordinator::{BatcherConfig, Router, Service};
+use flims::util::rng::Rng;
+
+fn start_service(max_batch: usize) -> (Arc<Service>, std::net::SocketAddr) {
+    let router = Arc::new(Router::new(AppConfig::default(), None));
+    let service = Arc::new(Service::new(
+        router,
+        BatcherConfig { max_batch, window: Duration::from_micros(200) },
+    ));
+    let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap();
+    drop(probe);
+    let svc = service.clone();
+    let bind = addr.to_string();
+    std::thread::spawn(move || {
+        let _ = svc.serve(&bind);
+    });
+    std::thread::sleep(Duration::from_millis(80));
+    (service, addr)
+}
+
+fn roundtrip(conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str) -> String {
+    writeln!(conn, "{req}").unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    resp.trim().to_string()
+}
+
+#[test]
+fn concurrent_clients_mixed_commands() {
+    let (service, addr) = start_service(4);
+    let mut handles = Vec::new();
+    for client in 0..6u64 {
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(client);
+            let mut conn = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            for i in 0..10 {
+                let n = 4 + rng.range(0, 60);
+                let vals: Vec<String> =
+                    (0..n).map(|_| rng.below(10_000).to_string()).collect();
+                let resp = match i % 3 {
+                    0 => roundtrip(&mut conn, &mut reader, &format!("sort native {}", vals.join(" "))),
+                    1 => roundtrip(&mut conn, &mut reader, &format!("batch {}", vals.join(" "))),
+                    _ => {
+                        let half = n / 2;
+                        let mut a: Vec<u32> =
+                            vals[..half].iter().map(|s| s.parse().unwrap()).collect();
+                        let mut b: Vec<u32> =
+                            vals[half..].iter().map(|s| s.parse().unwrap()).collect();
+                        a.sort_unstable_by(|x, y| y.cmp(x));
+                        b.sort_unstable_by(|x, y| y.cmp(x));
+                        let fmt = |v: &[u32]| {
+                            v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(" ")
+                        };
+                        roundtrip(
+                            &mut conn,
+                            &mut reader,
+                            &format!("merge {} | {}", fmt(&a), fmt(&b)),
+                        )
+                    }
+                };
+                assert!(resp.starts_with("ok "), "client {client} got: {resp}");
+                let nums: Vec<f64> = resp[3..]
+                    .split_whitespace()
+                    .map(|t| t.parse().unwrap())
+                    .collect();
+                assert_eq!(nums.len(), n);
+                assert!(nums.windows(2).all(|p| p[0] >= p[1]), "not sorted: {resp}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(service.router.metrics.requests.get() >= 40);
+    service.shutdown();
+    let _ = TcpStream::connect(addr);
+}
+
+#[test]
+fn protocol_errors_do_not_kill_connection() {
+    let (service, addr) = start_service(8);
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    assert!(roundtrip(&mut conn, &mut reader, "bogus command").starts_with("err "));
+    assert!(roundtrip(&mut conn, &mut reader, "sort nope 1 2").starts_with("err "));
+    assert!(roundtrip(&mut conn, &mut reader, "sort native 1 x").starts_with("err "));
+    // The connection is still usable afterwards.
+    assert_eq!(roundtrip(&mut conn, &mut reader, "sort native 2 9 5"), "ok 9 5 2");
+    assert!(service.router.metrics.errors.get() >= 3);
+    service.shutdown();
+    let _ = TcpStream::connect(addr);
+}
+
+#[test]
+fn stats_reflect_traffic() {
+    let (service, addr) = start_service(8);
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    for _ in 0..5 {
+        roundtrip(&mut conn, &mut reader, "sort native 3 1 2");
+    }
+    let stats = roundtrip(&mut conn, &mut reader, "stats");
+    assert!(stats.contains("requests=5"), "{stats}");
+    assert!(stats.contains("elements=15"), "{stats}");
+    service.shutdown();
+    let _ = TcpStream::connect(addr);
+}
+
+#[test]
+fn batch_coalescing_under_burst() {
+    let (service, addr) = start_service(4);
+    let mut handles = Vec::new();
+    for t in 0..8u64 {
+        handles.push(std::thread::spawn(move || {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let resp = roundtrip(
+                &mut conn,
+                &mut reader,
+                &format!("batch {} {} {}", t * 3 + 2, t * 3, t * 3 + 1),
+            );
+            assert!(resp.starts_with("ok "), "{resp}");
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    // 8 requests through a max-batch-4 batcher: at least 2 batches, and
+    // strictly fewer batches than requests (coalescing happened).
+    let batches = service.batcher.metrics.batches.get();
+    assert!(batches >= 2, "batches={batches}");
+    assert!(batches <= 8);
+    service.shutdown();
+    let _ = TcpStream::connect(addr);
+}

@@ -1,0 +1,107 @@
+//! Integration: the complete-sort pipeline (§8.2) against every baseline
+//! across sizes, distributions and configurations.
+
+use flims::baselines::{radix_sort_desc, samplesort_desc, std_sort_desc};
+use flims::data::{gen_u32, Distribution};
+use flims::flims::parallel::{par_sort_desc, ParSortConfig};
+use flims::flims::sort::{sort_asc, sort_desc, SortConfig};
+use flims::util::rng::Rng;
+
+fn expect_desc(v: &[u32]) -> Vec<u32> {
+    let mut e = v.to_vec();
+    e.sort_unstable_by(|a, b| b.cmp(a));
+    e
+}
+
+#[test]
+fn sort_matrix() {
+    let mut rng = Rng::new(2001);
+    let dists = [
+        Distribution::Uniform,
+        Distribution::DupHeavy { alphabet: 2 },
+        Distribution::SortedAsc,
+        Distribution::SortedDesc,
+        Distribution::Runs { run: 100 },
+        Distribution::Constant,
+    ];
+    for dist in dists {
+        for n in [0usize, 1, 255, 256, 4095, 30_000] {
+            let v = gen_u32(&mut rng, n, dist);
+            let expect = expect_desc(&v);
+
+            let mut s1 = v.clone();
+            sort_desc(&mut s1, SortConfig::default());
+            assert_eq!(s1, expect, "flims n={n} {dist:?}");
+
+            let mut s2 = v.clone();
+            par_sort_desc(
+                &mut s2,
+                ParSortConfig { threads: 3, seq_cutoff: 1 << 10, ..Default::default() },
+            );
+            assert_eq!(s2, expect, "parallel n={n} {dist:?}");
+
+            let mut s3 = v.clone();
+            radix_sort_desc(&mut s3);
+            assert_eq!(s3, expect, "radix n={n} {dist:?}");
+
+            let mut s4 = v.clone();
+            samplesort_desc(&mut s4, 2);
+            assert_eq!(s4, expect, "samplesort n={n} {dist:?}");
+
+            let mut s5 = v.clone();
+            std_sort_desc(&mut s5);
+            assert_eq!(s5, expect, "std n={n} {dist:?}");
+        }
+    }
+}
+
+#[test]
+fn ascending_round_trip() {
+    let mut rng = Rng::new(2002);
+    let v = gen_u32(&mut rng, 10_000, Distribution::Uniform);
+    let mut asc = v.clone();
+    sort_asc(&mut asc, SortConfig::default());
+    let mut expect = v;
+    expect.sort_unstable();
+    assert_eq!(asc, expect);
+}
+
+#[test]
+fn sort_configs_sweep() {
+    let mut rng = Rng::new(2003);
+    let v = gen_u32(&mut rng, 50_000, Distribution::Uniform);
+    let expect = expect_desc(&v);
+    for w in [4usize, 16, 64, 256] {
+        for chunk in [256usize, 1024] {
+            let mut s = v.clone();
+            sort_desc(&mut s, SortConfig { w, chunk });
+            assert_eq!(s, expect, "w={w} chunk={chunk}");
+        }
+    }
+}
+
+#[test]
+fn non_power_of_two_tails() {
+    // The tail path (insertion sort + unbalanced merge) over many odd n.
+    let mut rng = Rng::new(2004);
+    for n in [129usize, 1000, 4097, 12_345, 99_999] {
+        let v = gen_u32(&mut rng, n, Distribution::Uniform);
+        let expect = expect_desc(&v);
+        let mut s = v;
+        sort_desc(&mut s, SortConfig { w: 8, chunk: 64 });
+        assert_eq!(s, expect, "n={n}");
+    }
+}
+
+#[test]
+fn large_sort_smoke() {
+    let mut rng = Rng::new(2005);
+    let v = gen_u32(&mut rng, 1 << 20, Distribution::Uniform);
+    let mut s = v.clone();
+    sort_desc(&mut s, SortConfig { w: 16, chunk: 128 });
+    assert!(flims::is_sorted_desc(&s));
+    // permutation check via sum (u64 to avoid overflow) + length
+    let sum_in: u64 = v.iter().map(|&x| x as u64).sum();
+    let sum_out: u64 = s.iter().map(|&x| x as u64).sum();
+    assert_eq!(sum_in, sum_out);
+}

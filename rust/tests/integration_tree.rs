@@ -1,0 +1,101 @@
+//! Integration: merge trees (PMT / HPMT / loser) end-to-end, including
+//! rate scaling, skew balancing, and degenerate shapes.
+
+use flims::data::{gen_sorted_lists, Distribution};
+use flims::flims::scalar::Variant;
+use flims::tree::{Hpmt, LoserTree, Pmt};
+use flims::util::rng::Rng;
+
+fn oracle(lists: &[Vec<u32>]) -> Vec<u32> {
+    let mut v: Vec<u32> = lists.iter().flatten().copied().collect();
+    v.sort_unstable_by(|a, b| b.cmp(a));
+    v
+}
+
+#[test]
+fn pmt_and_hpmt_and_loser_agree() {
+    let mut rng = Rng::new(4001);
+    for k in [4usize, 16, 64] {
+        for dist in [Distribution::Uniform, Distribution::DupHeavy { alphabet: 4 }] {
+            let lists = gen_sorted_lists(&mut rng, k, 500, dist);
+            let expect = oracle(&lists);
+            let refs: Vec<&[u32]> = lists.iter().map(|l| l.as_slice()).collect();
+            assert_eq!(Pmt::new(refs.clone(), 8, Variant::Basic).run().0, expect);
+            assert_eq!(LoserTree::new(refs).run(), expect);
+            if k >= 4 {
+                assert_eq!(Hpmt::run(&lists, 4, 8, Variant::Basic).0, expect);
+            }
+        }
+    }
+}
+
+#[test]
+fn fig1_shape_8_inputs_rate_8() {
+    // The paper's fig. 1: 8 rate-1 inputs → rate-8 output.
+    let mut rng = Rng::new(4002);
+    let lists = gen_sorted_lists(&mut rng, 8, 10_000, Distribution::Uniform);
+    let refs: Vec<&[u32]> = lists.iter().map(|l| l.as_slice()).collect();
+    let (out, stats) = Pmt::new(refs, 8, Variant::Basic).run();
+    assert_eq!(out, oracle(&lists));
+    // With root rate 8 and 80k elements, rounds should be within a small
+    // factor of 80k/8 (pipeline fill + leaf-rate limits).
+    let ideal = 80_000 / 8;
+    assert!(stats.rounds >= ideal);
+    assert!(stats.rounds < ideal * 4, "rounds {} vs ideal {}", stats.rounds, ideal);
+}
+
+#[test]
+fn deep_tree_64_inputs() {
+    let mut rng = Rng::new(4003);
+    let lists = gen_sorted_lists(&mut rng, 64, 300, Distribution::Uniform);
+    let refs: Vec<&[u32]> = lists.iter().map(|l| l.as_slice()).collect();
+    let (out, stats) = Pmt::new(refs, 16, Variant::Basic).run();
+    assert_eq!(out, oracle(&lists));
+    assert_eq!(stats.stalls_per_level.len(), 6); // log2(64)
+}
+
+#[test]
+fn empty_and_tiny_lists() {
+    let lists: Vec<Vec<u32>> = vec![
+        vec![],
+        vec![9],
+        vec![8, 3],
+        vec![],
+        vec![100, 50, 2, 1],
+        vec![7],
+        vec![],
+        vec![4, 4, 4],
+    ];
+    let refs: Vec<&[u32]> = lists.iter().map(|l| l.as_slice()).collect();
+    let (out, _) = Pmt::new(refs, 4, Variant::Basic).run();
+    assert_eq!(out, oracle(&lists));
+}
+
+#[test]
+fn skew_balances_whole_tree() {
+    // All-duplicate inputs: the skew variant's alternation keeps every
+    // level fed; the basic variant drains one side per node.
+    let lists: Vec<Vec<u32>> = (0..16).map(|_| vec![5u32; 2000]).collect();
+    let r1: Vec<&[u32]> = lists.iter().map(|l| l.as_slice()).collect();
+    let r2 = r1.clone();
+    let (o1, basic) = Pmt::new(r1, 8, Variant::Basic).run();
+    let (o2, skew) = Pmt::new(r2, 8, Variant::Skew).run();
+    assert_eq!(o1.len(), 32_000);
+    assert_eq!(o1, o2);
+    assert!(
+        skew.rounds as f64 <= basic.rounds as f64 * 0.8,
+        "skew {} vs basic {}",
+        skew.rounds,
+        basic.rounds
+    );
+}
+
+#[test]
+fn hpmt_many_groups() {
+    let mut rng = Rng::new(4004);
+    let lists = gen_sorted_lists(&mut rng, 128, 200, Distribution::Uniform);
+    for groups in [2usize, 4, 8, 16] {
+        let (out, _) = Hpmt::run(&lists, groups, 8, Variant::Basic);
+        assert_eq!(out, oracle(&lists), "groups={groups}");
+    }
+}

@@ -1,0 +1,160 @@
+//! Property tests over the hardware substrate: cycle models equal the
+//! oracle under random bandwidth/FIFO configurations (failure-injection
+//! style: starved inputs, shallow FIFOs, asymmetric bandwidth), and the
+//! structural models stay consistent under sweeps.
+
+use flims::hw::{
+    estimate, netlist, run_stream, Design, FlimsCycle, FlimsjCycle, RowClass, RowMergerCycle,
+    SimConfig, ALL_DESIGNS,
+};
+use flims::key::is_sorted_desc;
+use flims::util::prop::{check, Config};
+use flims::util::rng::Rng;
+
+fn gen_sorted(rng: &mut Rng, n: usize, hi: u64) -> Vec<u32> {
+    let mut v: Vec<u32> = (0..n).map(|_| rng.below(hi) as u32).collect();
+    v.sort_unstable_by(|a, b| b.cmp(a));
+    v
+}
+
+fn oracle(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut v: Vec<u32> = a.iter().chain(b.iter()).copied().collect();
+    v.sort_unstable_by(|x, y| y.cmp(x));
+    v
+}
+
+#[test]
+fn prop_flims_cycle_correct_under_any_bandwidth() {
+    check("hw: flims any bw", Config { cases: 120, ..Default::default() }, |rng, size| {
+        let w = 1 << rng.range(1, 5);
+        let (na, nb) = (rng.range(0, 4 * size + 1), rng.range(0, 4 * size + 1));
+        let a = gen_sorted(rng, na, 200);
+        let b = gen_sorted(rng, nb, 200);
+        let cfg = SimConfig {
+            fifo_depth: 1 + rng.range(0, 8),
+            bw_a: 1 + rng.range(0, 2 * w),
+            bw_b: 1 + rng.range(0, 2 * w),
+            max_cycles: 10_000_000,
+        };
+        let skew = rng.below(2) == 1;
+        let mut m: FlimsCycle<u32> = FlimsCycle::new(w, skew);
+        let r = run_stream(&mut m, &a, &b, cfg);
+        if r.output != oracle(&a, &b) {
+            return Err(format!(
+                "wrong output w={w} skew={skew} cfg={cfg:?} |a|={} |b|={}",
+                a.len(),
+                b.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flimsj_cycle_correct_under_any_bandwidth() {
+    check("hw: flimsj any bw", Config { cases: 100, ..Default::default() }, |rng, size| {
+        let w = 1 << rng.range(1, 5);
+        let (na, nb) = (rng.range(0, 4 * size + 1), rng.range(0, 4 * size + 1));
+        let a = gen_sorted(rng, na, 500);
+        let b = gen_sorted(rng, nb, 500);
+        let cfg = SimConfig {
+            fifo_depth: 1 + rng.range(0, 6),
+            bw_a: 1 + rng.range(0, 2 * w),
+            bw_b: 1 + rng.range(0, 2 * w),
+            max_cycles: 10_000_000,
+        };
+        let mut m: FlimsjCycle<u32> = FlimsjCycle::new(w);
+        let r = run_stream(&mut m, &a, &b, cfg);
+        if r.output != oracle(&a, &b) {
+            return Err(format!("flimsj wrong w={w} cfg={cfg:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_row_class_correct_on_unique_keys() {
+    check("hw: row class unique keys", Config { cases: 100, ..Default::default() }, |rng, size| {
+        let w = 1 << rng.range(1, 5);
+        // Unique keys: draw then dedupe.
+        let mut pool: Vec<u32> = (0..8 * size + 16).map(|_| rng.next_u32()).collect();
+        pool.sort_unstable();
+        pool.dedup();
+        let split = rng.range(0, pool.len());
+        let mut a: Vec<u32> = pool[..split].to_vec();
+        let mut b: Vec<u32> = pool[split..].to_vec();
+        a.sort_unstable_by(|x, y| y.cmp(x));
+        b.sort_unstable_by(|x, y| y.cmp(x));
+        let class = *rng.choose(&[RowClass::Mms, RowClass::Vms, RowClass::Wms]);
+        let cfg = SimConfig {
+            fifo_depth: 2 + rng.range(0, 6),
+            bw_a: w.max(2),
+            bw_b: w.max(2),
+            max_cycles: 10_000_000,
+        };
+        let mut m: RowMergerCycle<u32> = RowMergerCycle::new(w, class);
+        let r = run_stream(&mut m, &a, &b, cfg);
+        if r.output != oracle(&a, &b) {
+            return Err(format!("{class:?} wrong at w={w}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_outputs_always_sorted_even_on_constant_streams() {
+    check("hw: constant streams", Config { cases: 60, ..Default::default() }, |rng, size| {
+        let w = 1 << rng.range(1, 4);
+        let a = vec![rng.next_u32() % 3; rng.range(0, 2 * size + 1)];
+        let b = vec![rng.next_u32() % 3; rng.range(0, 2 * size + 1)];
+        let mut a = a;
+        let mut b = b;
+        a.sort_unstable_by(|x, y| y.cmp(x));
+        b.sort_unstable_by(|x, y| y.cmp(x));
+        let mut m: FlimsCycle<u32> = FlimsCycle::new(w, true);
+        let r = run_stream(&mut m, &a, &b, SimConfig::default());
+        if !is_sorted_desc(&r.output) || r.output.len() != a.len() + b.len() {
+            return Err(format!("constant-stream failure w={w}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_structural_monotonicity() {
+    // Resources must be monotone in w and in data width for every design.
+    check("hw: cost monotone", Config { cases: 40, ..Default::default() }, |rng, _| {
+        let d = *rng.choose(&ALL_DESIGNS);
+        let wexp = rng.range(1, 8);
+        let (w1, w2) = (1 << wexp, 1 << (wexp + 1));
+        let r1 = estimate(&netlist(d, w1, 64));
+        let r2 = estimate(&netlist(d, w2, 64));
+        if r2.luts <= r1.luts || r2.ffs <= r1.ffs {
+            return Err(format!("{} not monotone in w: {w1}->{w2}", d.name()));
+        }
+        let n32 = estimate(&netlist(d, w1, 32));
+        if n32.luts >= r1.luts {
+            return Err(format!("{} not monotone in data width", d.name()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flims_dominates_row_designs_structurally() {
+    check("hw: flims dominance", Config { cases: 40, ..Default::default() }, |rng, _| {
+        let wexp = rng.range(2, 9);
+        let w = 1 << wexp;
+        let f = netlist(Design::Flims, w, 64);
+        for d in [Design::Wms, Design::Ehms, Design::Mms, Design::Vms] {
+            let n = netlist(d, w, 64);
+            if n.comparators() <= f.comparators() {
+                return Err(format!("{} fewer comparators at w={w}", d.name()));
+            }
+            if n.latency() <= f.latency() {
+                return Err(format!("{} lower latency at w={w}", d.name()));
+            }
+        }
+        Ok(())
+    });
+}

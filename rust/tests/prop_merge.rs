@@ -1,0 +1,178 @@
+//! Property tests over the merge family (in-tree prop harness — see
+//! `flims::util::prop`): sortedness, permutation, the paper's §5
+//! invariants (k from A + w−k from B per step; `l_A + l_B ≡ 0 mod w`),
+//! stability of algorithm 3, and cross-implementation equivalence.
+
+use flims::data::sort_desc as data_sort_desc;
+use flims::flims::flimsj::merge_flimsj;
+use flims::flims::lanes::{merge_desc, merge_desc_fast};
+use flims::flims::scalar::{merge_basic, merge_skew, FlimsMerger, Variant};
+use flims::flims::stable::merge_stable;
+use flims::key::{is_sorted_desc, Kv};
+use flims::util::prop::{check, Config};
+use flims::util::rng::Rng;
+
+fn gen_sorted(rng: &mut Rng, n: usize, hi: u64) -> Vec<u32> {
+    let mut v: Vec<u32> = (0..n).map(|_| rng.below(hi) as u32).collect();
+    v.sort_unstable_by(|a, b| b.cmp(a));
+    v
+}
+
+fn oracle(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut v: Vec<u32> = a.iter().chain(b.iter()).copied().collect();
+    v.sort_unstable_by(|x, y| y.cmp(x));
+    v
+}
+
+fn rand_w(rng: &mut Rng) -> usize {
+    1 << rng.range(0, 7) // w in 1..64
+}
+
+#[test]
+fn prop_output_sorted_and_permutation() {
+    check("merge: sorted+permutation", Config { cases: 300, ..Default::default() }, |rng, size| {
+        let w = rand_w(rng).max(2);
+        let hi = [4u64, 100, u32::MAX as u64].as_slice()[rng.range(0, 3)];
+        let (na, nb) = (rng.range(0, size + 1), rng.range(0, size + 1));
+        let a = gen_sorted(rng, na, hi);
+        let b = gen_sorted(rng, nb, hi);
+        let out = merge_basic(&a, &b, w);
+        if !is_sorted_desc(&out) {
+            return Err(format!("not sorted: w={w} a={a:?} b={b:?}"));
+        }
+        if out != oracle(&a, &b) {
+            return Err(format!("not a merge: w={w} a={a:?} b={b:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_tiers_equal() {
+    check("merge: tiers agree", Config { cases: 250, ..Default::default() }, |rng, size| {
+        let w = rand_w(rng).max(2);
+        let (na, nb) = (rng.range(0, size + 1), rng.range(0, size + 1));
+        let a = gen_sorted(rng, na, 1000);
+        let b = gen_sorted(rng, nb, 1000);
+        let expect = oracle(&a, &b);
+        let lanes = merge_desc(&a, &b, w);
+        let mut fast = Vec::new();
+        merge_desc_fast(&a, &b, w, &mut fast);
+        let (flimsj, _) = merge_flimsj(&a, &b, w);
+        let (skew, _) = merge_skew(&a, &b, w);
+        if lanes != expect || fast != expect || flimsj != expect || skew != expect {
+            return Err(format!("tier mismatch at w={w}, |a|={}, |b|={}", a.len(), b.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_selector_invariant_k_per_step() {
+    // §5.1: each cycle dequeues k from A and w−k from B, k∈[0,w], and
+    // every emitted chunk is exactly the top-w of what remained.
+    check("selector: top-w per step", Config { cases: 150, ..Default::default() }, |rng, size| {
+        let w = 1 << rng.range(1, 5);
+        let n = ((size / w) + 1) * w;
+        let a = gen_sorted(rng, n, 500);
+        let b = gen_sorted(rng, n, 500);
+        let mut m = FlimsMerger::new(&a, &b, w, Variant::Basic);
+        let mut remaining = oracle(&a, &b);
+        for _ in 0..m.total_cycles() {
+            let before_a = m.stats.dequeued_a;
+            let chunk = m.step();
+            let k = m.stats.dequeued_a - before_a;
+            if k > w {
+                return Err(format!("k={k} > w={w}"));
+            }
+            let top: Vec<u32> = remaining.drain(..chunk.len()).collect();
+            if chunk != top {
+                return Err(format!("chunk is not the top-w: {chunk:?} vs {top:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stable_merge_is_stable() {
+    check("stable: order preserved", Config { cases: 200, ..Default::default() }, |rng, size| {
+        let w = 1 << rng.range(1, 5);
+        let alphabet = 1 + rng.range(0, 4) as u32;
+        let mk = |rng: &mut Rng, n: usize, base: u32| -> Vec<Kv> {
+            let mut v: Vec<Kv> = (0..n)
+                .map(|i| Kv::new(rng.below(alphabet as u64) as u32, base + i as u32))
+                .collect();
+            // stable descending pre-sort keeps payload order within keys
+            v.sort_by(|a, b| b.key.cmp(&a.key));
+            v
+        };
+        let (na, nb) = (rng.range(0, size + 1), rng.range(0, size + 1));
+        let a = mk(rng, na, 0);
+        let b = mk(rng, nb, 10_000);
+        let out = merge_stable(&a, &b, w);
+        // Oracle: stable sort of (src, idx)-tagged records.
+        let mut tagged: Vec<(u32, usize, Kv)> = a
+            .iter()
+            .enumerate()
+            .map(|(i, &kv)| (0, i, kv))
+            .chain(b.iter().enumerate().map(|(i, &kv)| (1, i, kv)))
+            .collect();
+        tagged.sort_by(|x, y| y.2.key.cmp(&x.2.key).then(x.0.cmp(&y.0)).then(x.1.cmp(&y.1)));
+        let expect: Vec<Kv> = tagged.into_iter().map(|t| t.2).collect();
+        if out != expect {
+            return Err(format!(
+                "instability at w={w} alphabet={alphabet} |a|={} |b|={}",
+                a.len(),
+                b.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_skew_balances_on_equal_streams() {
+    check("skew: balanced dequeues", Config { cases: 80, ..Default::default() }, |rng, size| {
+        let w = 1 << rng.range(1, 5);
+        let n = ((size / w) + 2) * w;
+        let val = rng.next_u32();
+        let a = vec![val; n];
+        let b = vec![val; n];
+        let (_, stats) = merge_skew(&a, &b, w);
+        if stats.dequeued_a.abs_diff(stats.dequeued_b) > w {
+            return Err(format!(
+                "imbalance {} at w={w} n={n}",
+                stats.dequeued_a.abs_diff(stats.dequeued_b)
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kv_payload_multiset_preserved() {
+    check("merge: payload integrity", Config { cases: 150, ..Default::default() }, |rng, size| {
+        let w = 1 << rng.range(1, 5);
+        let mk = |rng: &mut Rng, n: usize, base: u32| -> Vec<Kv> {
+            let mut v: Vec<Kv> = (0..n)
+                .map(|i| Kv::new(rng.below(3) as u32, base + i as u32))
+                .collect();
+            data_sort_desc(&mut v);
+            v
+        };
+        let (na, nb) = (rng.range(0, size + 1), rng.range(0, size + 1));
+        let a = mk(rng, na, 0);
+        let b = mk(rng, nb, 50_000);
+        let out = merge_desc(&a, &b, w);
+        let mut got: Vec<u32> = out.iter().map(|kv| kv.val).collect();
+        let mut expect: Vec<u32> =
+            a.iter().chain(b.iter()).map(|kv| kv.val).collect();
+        got.sort_unstable();
+        expect.sort_unstable();
+        if got != expect {
+            return Err(format!("payload loss at w={w}"));
+        }
+        Ok(())
+    });
+}

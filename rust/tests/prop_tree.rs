@@ -1,0 +1,89 @@
+//! Property tests over the merge-tree coordination layer: arbitrary
+//! list counts/lengths/distributions through PMT, HPMT and the loser
+//! tree always produce the oracle merge; routing invariants hold.
+
+use flims::flims::scalar::Variant;
+use flims::tree::{Hpmt, LoserTree, Pmt};
+use flims::util::prop::{check, Config};
+use flims::util::rng::Rng;
+
+fn gen_lists(rng: &mut Rng, k: usize, max_len: usize, hi: u64) -> Vec<Vec<u32>> {
+    (0..k)
+        .map(|_| {
+            let n = rng.range(0, max_len + 1);
+            let mut v: Vec<u32> = (0..n).map(|_| rng.below(hi) as u32).collect();
+            v.sort_unstable_by(|a, b| b.cmp(a));
+            v
+        })
+        .collect()
+}
+
+fn oracle(lists: &[Vec<u32>]) -> Vec<u32> {
+    let mut v: Vec<u32> = lists.iter().flatten().copied().collect();
+    v.sort_unstable_by(|a, b| b.cmp(a));
+    v
+}
+
+#[test]
+fn prop_pmt_always_merges() {
+    check("tree: pmt", Config { cases: 120, ..Default::default() }, |rng, size| {
+        let k = 1 << rng.range(1, 6); // 2..32 lists
+        let w = 1 << rng.range(0, 6);
+        let hi = [2u64, 50, 1 << 30].as_slice()[rng.range(0, 3)];
+        let lists = gen_lists(rng, k, size, hi);
+        let refs: Vec<&[u32]> = lists.iter().map(|l| l.as_slice()).collect();
+        let variant = if rng.below(2) == 1 { Variant::Skew } else { Variant::Basic };
+        let (out, stats) = Pmt::new(refs, w, variant).run();
+        if out != oracle(&lists) {
+            return Err(format!("pmt wrong k={k} w={w} {variant:?}"));
+        }
+        if stats.stalls_per_level.len() != k.trailing_zeros() as usize {
+            return Err("level accounting broken".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_loser_tree_any_k() {
+    check("tree: loser", Config { cases: 120, ..Default::default() }, |rng, size| {
+        let k = 1 + rng.range(0, 40); // any k, not only powers of two
+        let lists = gen_lists(rng, k, size, 100);
+        let refs: Vec<&[u32]> = lists.iter().map(|l| l.as_slice()).collect();
+        let out = LoserTree::new(refs).run();
+        if out != oracle(&lists) {
+            return Err(format!("loser wrong k={k}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hpmt_matches_flat_merge() {
+    check("tree: hpmt", Config { cases: 80, ..Default::default() }, |rng, size| {
+        let k = 4 + rng.range(0, 60);
+        let groups = 1 << rng.range(1, 4); // 2..8
+        let w = 1 << rng.range(1, 5);
+        let lists = gen_lists(rng, k, size, 1000);
+        let (out, _) = Hpmt::run(&lists, groups, w, Variant::Basic);
+        if out != oracle(&lists) {
+            return Err(format!("hpmt wrong k={k} groups={groups} w={w}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tree_total_elements_conserved() {
+    check("tree: conservation", Config { cases: 60, ..Default::default() }, |rng, size| {
+        let k = 1 << rng.range(1, 5);
+        let lists = gen_lists(rng, k, size, 10); // heavy duplicates
+        let total: usize = lists.iter().map(|l| l.len()).sum();
+        let refs: Vec<&[u32]> = lists.iter().map(|l| l.as_slice()).collect();
+        let (out, stats) = Pmt::new(refs, 8, Variant::Skew).run();
+        if out.len() != total || stats.elements != total {
+            return Err(format!("lost elements: {} vs {total}", out.len()));
+        }
+        Ok(())
+    });
+}
