@@ -1,0 +1,75 @@
+//! External-sort bench: memory budget vs. throughput on a fixed
+//! disk-resident dataset, plus the in-memory std-sort reference (load →
+//! sort → store) as the upper bound.
+//!
+//! Smaller budgets mean more, shorter runs and (below
+//! dataset/budget > fan_in) extra merge passes — this sweep shows the
+//! throughput cliff each extra pass costs and where the FLiMS merge
+//! trees hold the line.
+//!
+//! Run: `cargo bench --bench external_sort`
+
+use std::time::Instant;
+
+use flims::baselines::std_sort_desc;
+use flims::data::{gen_u32, Distribution};
+use flims::external::format::{read_raw, write_raw};
+use flims::external::{sort_file, ExternalConfig};
+use flims::util::rng::Rng;
+
+fn main() {
+    let n = 1usize << 22; // 4M elements = 16 MiB on disk
+    let dir = std::env::temp_dir().join(format!("flims-bench-ext-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let input = dir.join("bench.u32");
+    let output = dir.join("bench.sorted");
+
+    let mut rng = Rng::new(777);
+    let data = gen_u32(&mut rng, n, Distribution::Uniform);
+    write_raw(&input, &data).unwrap();
+    let dataset_mb = (n * 4) as f64 / (1 << 20) as f64;
+
+    println!("== external sort: {n} u32 ({dataset_mb:.0} MiB), fan-in 8 ==\n");
+    println!(
+        "{:<14} {:>10} {:>8} {:>12} {:>14}",
+        "budget", "M elem/s", "runs", "merge passes", "spilled MiB"
+    );
+
+    for budget_kib in [256usize, 1024, 4096, 16384, 65536] {
+        let cfg = ExternalConfig {
+            mem_budget_bytes: budget_kib << 10,
+            fan_in: 8,
+            tmp_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let t = Instant::now();
+        let stats = sort_file(&input, &output, &cfg).unwrap();
+        let dt = t.elapsed();
+        assert_eq!(stats.elements, n as u64);
+        println!(
+            "{:<14} {:>10.1} {:>8} {:>12} {:>14.1}",
+            format!("{} KiB", budget_kib),
+            n as f64 / dt.as_secs_f64() / 1e6,
+            stats.runs_spilled,
+            stats.merge_passes,
+            stats.bytes_spilled as f64 / (1 << 20) as f64,
+        );
+    }
+
+    // Reference: load whole file, std-sort in RAM, write back.
+    let t = Instant::now();
+    let mut all = read_raw(&input).unwrap();
+    std_sort_desc(&mut all);
+    write_raw(&output, &all).unwrap();
+    let dt = t.elapsed();
+    println!(
+        "{:<14} {:>10.1} {:>8} {:>12} {:>14}",
+        "std (in-RAM)",
+        n as f64 / dt.as_secs_f64() / 1e6,
+        "-",
+        "-",
+        "-"
+    );
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -6,6 +6,8 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
+use crate::external::ExternalConfig;
+
 /// Parsed configuration: section → key → raw value string.
 #[derive(Clone, Debug, Default)]
 pub struct RawConfig {
@@ -94,6 +96,10 @@ pub struct AppConfig {
     pub batch_max: usize,
     /// dynamic-batcher window in microseconds
     pub batch_window_us: u64,
+    /// external (out-of-core) sort tuning; `w`/`chunk` here are
+    /// placeholders — [`AppConfig::external_config`] substitutes the
+    /// engine's values so one pair of knobs tunes both pipelines.
+    pub external: ExternalConfig,
 }
 
 impl Default for AppConfig {
@@ -107,6 +113,7 @@ impl Default for AppConfig {
             bind: "127.0.0.1:7171".into(),
             batch_max: 8,
             batch_window_us: 500,
+            external: ExternalConfig::default(),
         }
     }
 }
@@ -138,6 +145,18 @@ impl AppConfig {
         if let Some(v) = raw.get_usize("service", "batch_window_us")? {
             self.batch_window_us = v as u64;
         }
+        if let Some(v) = raw.get_usize("external", "mem_budget_mb")? {
+            self.external.mem_budget_bytes = v << 20;
+        }
+        if let Some(v) = raw.get_usize("external", "fan_in")? {
+            self.external.fan_in = v;
+        }
+        if let Some(v) = raw.get("external", "tmp_dir") {
+            self.external.tmp_dir = Some(std::path::PathBuf::from(v));
+        }
+        if let Some(v) = raw.get_usize("external", "disk_budget_mb")? {
+            self.external.disk_budget_bytes = Some((v as u64) << 20);
+        }
         self.validate()
     }
 
@@ -154,7 +173,14 @@ impl AppConfig {
         if self.batch_max == 0 {
             return Err("service.batch_max must be > 0".into());
         }
-        Ok(())
+        self.external_config().validate()
+    }
+
+    /// The external-sort configuration with the engine's `w`/`chunk`
+    /// substituted in (the `[external]` section tunes only the
+    /// out-of-core knobs).
+    pub fn external_config(&self) -> ExternalConfig {
+        ExternalConfig { w: self.w, chunk: self.chunk, ..self.external.clone() }
     }
 }
 
@@ -234,6 +260,36 @@ batch_max = 16
     #[test]
     fn chunk_must_cover_w() {
         let raw = RawConfig::parse("[engine]\nw = 64\nchunk = 32\n").unwrap();
+        let mut cfg = AppConfig::default();
+        assert!(cfg.apply(&raw).is_err());
+    }
+
+    #[test]
+    fn external_section_applies() {
+        let raw = RawConfig::parse(
+            "[engine]\nw = 32\nchunk = 256\n\
+             [external]\nmem_budget_mb = 16\nfan_in = 4\n\
+             tmp_dir = \"/tmp/spills\"\ndisk_budget_mb = 512\n",
+        )
+        .unwrap();
+        let mut cfg = AppConfig::default();
+        cfg.apply(&raw).unwrap();
+        let ext = cfg.external_config();
+        assert_eq!(ext.mem_budget_bytes, 16 << 20);
+        assert_eq!(ext.fan_in, 4);
+        assert_eq!(ext.tmp_dir, Some(std::path::PathBuf::from("/tmp/spills")));
+        assert_eq!(ext.disk_budget_bytes, Some(512 << 20));
+        // The engine's lane/chunk tuning flows into the external sort.
+        assert_eq!(ext.w, 32);
+        assert_eq!(ext.chunk, 256);
+    }
+
+    #[test]
+    fn bad_external_values_rejected() {
+        let raw = RawConfig::parse("[external]\nfan_in = 1\n").unwrap();
+        let mut cfg = AppConfig::default();
+        assert!(cfg.apply(&raw).is_err());
+        let raw = RawConfig::parse("[external]\nmem_budget_mb = banana\n").unwrap();
         let mut cfg = AppConfig::default();
         assert!(cfg.apply(&raw).is_err());
     }

@@ -4,12 +4,17 @@
 //! Pjrt = the AOT-compiled Pallas/JAX artifacts (f32, artifact shapes,
 //! padded as needed) — the path that proves the three-layer stack
 //! composes, with Python absent at request time.
+//! External = the out-of-core pipeline: data round-trips through spill
+//! files and FLiMS merge trees, so memory stays bounded regardless of
+//! request size (and `sort_file_external` sorts whole datasets on disk).
 
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::config::AppConfig;
+use crate::external::{self, SpillStats};
 use crate::flims::parallel::{par_sort_desc, ParSortConfig};
 use crate::flims::sort::{sort_desc, SortConfig};
 use crate::flims::lanes::merge_desc_fast;
@@ -23,6 +28,7 @@ pub enum Backend {
     Native,
     NativeParallel,
     Pjrt,
+    External,
 }
 
 impl Backend {
@@ -31,6 +37,7 @@ impl Backend {
             "native" => Backend::Native,
             "parallel" => Backend::NativeParallel,
             "pjrt" => Backend::Pjrt,
+            "external" => Backend::External,
             other => return Err(anyhow!("unknown backend '{other}'")),
         })
     }
@@ -86,9 +93,37 @@ impl Router {
                 // the native engine and reserve PJRT for f32 payloads.
                 return Err(anyhow!("pjrt backend sorts f32 only (use 'sortf')"));
             }
+            Backend::External => {
+                let (out, stats) = external::sort_vec(&data, &self.cfg.external_config())?;
+                self.record_spill(&stats);
+                out
+            }
         };
         self.metrics.latency.observe(t.elapsed());
         Ok(out)
+    }
+
+    /// Sort the raw-u32 dataset at `input` with the external pipeline,
+    /// writing `<input>.sorted` (descending). Memory stays within the
+    /// configured budget however large the file is.
+    pub fn sort_file_external(&self, input: &Path) -> Result<(PathBuf, SpillStats)> {
+        self.metrics.requests.inc();
+        let t = std::time::Instant::now();
+        let mut name = input.as_os_str().to_owned();
+        name.push(".sorted");
+        let output = PathBuf::from(name);
+        let stats = external::sort_file(input, &output, &self.cfg.external_config())?;
+        self.metrics.elements_sorted.add(stats.elements);
+        self.record_spill(&stats);
+        self.metrics.latency.observe(t.elapsed());
+        Ok((output, stats))
+    }
+
+    fn record_spill(&self, stats: &SpillStats) {
+        self.metrics.external_sorts.inc();
+        self.metrics.runs_spilled.add(stats.runs_spilled);
+        self.metrics.bytes_spilled.add(stats.bytes_spilled);
+        self.metrics.merge_passes.add(stats.merge_passes);
     }
 
     /// Sort f32 values descending on the requested backend.
@@ -119,6 +154,9 @@ impl Router {
                     .as_ref()
                     .ok_or_else(|| anyhow!("pjrt runtime not loaded (run `make artifacts`)"))?;
                 rt.sort_padded(data.clone())?
+            }
+            Backend::External => {
+                return Err(anyhow!("external backend sorts u32 datasets (use 'sort external' or 'sortfile')"));
             }
         };
         self.metrics.latency.observe(t.elapsed());
@@ -219,7 +257,52 @@ mod tests {
         assert_eq!(Backend::parse("native").unwrap(), Backend::Native);
         assert_eq!(Backend::parse("parallel").unwrap(), Backend::NativeParallel);
         assert_eq!(Backend::parse("pjrt").unwrap(), Backend::Pjrt);
+        assert_eq!(Backend::parse("external").unwrap(), Backend::External);
         assert!(Backend::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn external_sort_u32_spills_and_sorts() {
+        let mut cfg = AppConfig::default();
+        cfg.external.mem_budget_bytes = 4096; // force multiple runs
+        cfg.external.fan_in = 4;
+        let r = Router::new(cfg, None);
+        let mut rng = Rng::new(303);
+        let v = gen_u32(&mut rng, 10_000, Distribution::Uniform);
+        let mut expect = v.clone();
+        expect.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(r.sort_u32(v, Backend::External).unwrap(), expect);
+        assert_eq!(r.metrics.external_sorts.get(), 1);
+        assert!(r.metrics.runs_spilled.get() >= 10, "10k elems / 1k runs");
+        assert!(r.metrics.merge_passes.get() >= 2);
+        assert!(r.metrics.bytes_spilled.get() >= 40_000);
+    }
+
+    #[test]
+    fn external_backend_rejects_f32() {
+        assert!(router().sort_f32(vec![1.0], Backend::External).is_err());
+    }
+
+    #[test]
+    fn sort_file_external_round_trip() {
+        let dir = std::env::temp_dir().join(format!("flims-router-ext-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("data.u32");
+        let mut rng = Rng::new(304);
+        let v = gen_u32(&mut rng, 5000, Distribution::Uniform);
+        crate::external::format::write_raw(&input, &v).unwrap();
+
+        let mut cfg = AppConfig::default();
+        cfg.external.mem_budget_bytes = 4096;
+        let r = Router::new(cfg, None);
+        let (out_path, stats) = r.sort_file_external(&input).unwrap();
+        assert_eq!(out_path, dir.join("data.u32.sorted"));
+        assert_eq!(stats.elements, 5000);
+
+        let mut expect = v;
+        expect.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(crate::external::format::read_raw(&out_path).unwrap(), expect);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

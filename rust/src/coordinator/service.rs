@@ -9,17 +9,24 @@
 //! sortf <backend> <f1> <f2> …   →  ok <sorted descending>   (f32)
 //! batch <f1> <f2> …             →  ok <sorted>  (goes through the batcher)
 //! merge <a...> | <b...>         →  ok <merged>  (desc-sorted u32 inputs)
+//! sortfile external <path>      →  ok <n> <output-path>  (raw-u32 file,
+//!                                   sorted descending to <path>.sorted)
 //! stats                         →  ok <metrics summary>
 //! quit                          →  (closes the connection)
 //! ```
+//!
+//! Malformed requests (empty value lists, a missing `|` in `merge`,
+//! unknown backends or commands, bad numbers) always produce a one-line
+//! `err …` response — protocol errors never tear down the connection.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::router::{Backend, Router};
@@ -36,9 +43,24 @@ impl Service {
         Service { router, batcher, stop: Arc::new(AtomicBool::new(false)) }
     }
 
-    /// Handle one protocol line (exposed for unit tests — the network
-    /// layer is a thin shell over this).
-    pub fn handle_line(&self, line: &str) -> Result<String> {
+    /// Handle one protocol line, always producing exactly one response
+    /// line: `ok …`, `bye`, or `err …`. Errors are rendered here (and
+    /// counted) rather than propagated, so a malformed request can
+    /// never tear down the connection thread.
+    pub fn handle_line(&self, line: &str) -> String {
+        match self.dispatch(line) {
+            Ok(resp) => resp,
+            Err(e) => {
+                self.router.metrics.errors.inc();
+                // Keep the protocol line-oriented whatever the error
+                // message contains.
+                let msg = format!("{e:#}").replace(['\n', '\r'], " ");
+                format!("err {msg}")
+            }
+        }
+    }
+
+    fn dispatch(&self, line: &str) -> Result<String> {
         let line = line.trim();
         let (cmd, rest) = line.split_once(' ').unwrap_or((line, ""));
         match cmd {
@@ -48,6 +70,9 @@ impl Service {
                     .ok_or_else(|| anyhow!("usage: sort <backend> <values…>"))?;
                 let backend = Backend::parse(backend)?;
                 let data: Vec<u32> = parse_nums(nums)?;
+                if data.is_empty() {
+                    bail!("empty value list");
+                }
                 let out = self.router.sort_u32(data, backend)?;
                 Ok(format!("ok {}", join(&out)))
             }
@@ -57,11 +82,17 @@ impl Service {
                     .ok_or_else(|| anyhow!("usage: sortf <backend> <values…>"))?;
                 let backend = Backend::parse(backend)?;
                 let data: Vec<f32> = parse_nums(nums)?;
+                if data.is_empty() {
+                    bail!("empty value list");
+                }
                 let out = self.router.sort_f32(data, backend)?;
                 Ok(format!("ok {}", join(&out)))
             }
             "batch" => {
                 let data: Vec<f32> = parse_nums(rest)?;
+                if data.is_empty() {
+                    bail!("empty value list");
+                }
                 let rx = self.batcher.submit(data);
                 // Ensure progress even if the batch never fills.
                 self.batcher.flush_if_due();
@@ -80,8 +111,26 @@ impl Service {
                     .ok_or_else(|| anyhow!("usage: merge <a…> | <b…>"))?;
                 let a: Vec<u32> = parse_nums(a.trim())?;
                 let b: Vec<u32> = parse_nums(b.trim())?;
+                if a.is_empty() && b.is_empty() {
+                    bail!("empty value list");
+                }
                 let out = self.router.merge_u32(&a, &b);
                 Ok(format!("ok {}", join(&out)))
+            }
+            "sortfile" => {
+                let (backend, path) = rest
+                    .split_once(' ')
+                    .ok_or_else(|| anyhow!("usage: sortfile external <path>"))?;
+                let backend = Backend::parse(backend)?;
+                if backend != Backend::External {
+                    bail!("sortfile requires the 'external' backend");
+                }
+                let path = path.trim();
+                if path.is_empty() {
+                    bail!("usage: sortfile external <path>");
+                }
+                let (output, stats) = self.router.sort_file_external(Path::new(path))?;
+                Ok(format!("ok {} {}", stats.elements, output.display()))
             }
             "stats" => Ok(format!("ok {}", self.router.metrics.report())),
             "quit" => Ok("bye".into()),
@@ -140,13 +189,7 @@ impl Service {
                 let _ = writeln!(writer, "bye");
                 break;
             }
-            let resp = match self.handle_line(&line) {
-                Ok(r) => r,
-                Err(e) => {
-                    self.router.metrics.errors.inc();
-                    format!("err {e:#}")
-                }
-            };
+            let resp = self.handle_line(&line);
             if writeln!(writer, "{resp}").is_err() {
                 break;
             }
@@ -178,46 +221,106 @@ mod tests {
     #[test]
     fn sort_command() {
         let s = svc();
-        assert_eq!(s.handle_line("sort native 3 1 2").unwrap(), "ok 3 2 1");
+        assert_eq!(s.handle_line("sort native 3 1 2"), "ok 3 2 1");
     }
 
     #[test]
     fn sortf_command() {
         let s = svc();
-        assert_eq!(
-            s.handle_line("sortf native 1.5 -2 0").unwrap(),
-            "ok 1.5 0 -2"
-        );
+        assert_eq!(s.handle_line("sortf native 1.5 -2 0"), "ok 1.5 0 -2");
     }
 
     #[test]
     fn merge_command() {
         let s = svc();
-        assert_eq!(s.handle_line("merge 9 5 | 7 3").unwrap(), "ok 9 7 5 3");
+        assert_eq!(s.handle_line("merge 9 5 | 7 3"), "ok 9 7 5 3");
     }
 
     #[test]
     fn batch_command_completes_via_window() {
         let s = svc();
         // Single request: window flush path must answer it.
-        assert_eq!(s.handle_line("batch 4 8 6").unwrap(), "ok 8 6 4");
+        assert_eq!(s.handle_line("batch 4 8 6"), "ok 8 6 4");
     }
 
     #[test]
     fn stats_command() {
         let s = svc();
         let _ = s.handle_line("sort native 2 1");
-        let out = s.handle_line("stats").unwrap();
+        let out = s.handle_line("stats");
         assert!(out.starts_with("ok requests="));
+        assert!(out.contains("external[sorts="), "{out}");
     }
 
     #[test]
-    fn errors_are_reported() {
+    fn errors_are_one_line_err_responses() {
         let s = svc();
-        assert!(s.handle_line("sort martian 1 2").is_err());
-        assert!(s.handle_line("frobnicate").is_err());
-        assert!(s.handle_line("sort native 1 banana").is_err());
-        assert!(s.handle_line("merge 1 2 3").is_err()); // no separator
+        for (req, expect) in [
+            ("sort martian 1 2", "unknown backend"),
+            ("frobnicate", "unknown command"),
+            ("sort native 1 banana", "bad number"),
+            ("sortfile native /tmp/x", "external"),
+        ] {
+            let resp = s.handle_line(req);
+            assert!(resp.starts_with("err "), "{req} → {resp}");
+            assert!(resp.contains(expect), "{req} → {resp}");
+            assert!(!resp.contains('\n'), "response must stay one line");
+        }
+        assert_eq!(s.router.metrics.errors.get(), 4);
+    }
+
+    #[test]
+    fn empty_value_lists_are_errors() {
+        let s = svc();
+        for req in ["sort native", "sort native ", "sortf parallel ", "batch", "batch ", "merge |"] {
+            let resp = s.handle_line(req);
+            assert!(resp.starts_with("err "), "{req:?} → {resp}");
+        }
+        // One-sided merge is legal — only both-empty is rejected.
+        assert_eq!(s.handle_line("merge 5 2 |"), "ok 5 2");
+        assert_eq!(s.handle_line("merge | 4 1"), "ok 4 1");
+    }
+
+    #[test]
+    fn merge_without_separator_is_an_error() {
+        let s = svc();
+        let resp = s.handle_line("merge 1 2 3");
+        assert!(resp.starts_with("err "), "{resp}");
+        assert!(resp.contains("usage: merge"), "{resp}");
+    }
+
+    #[test]
+    fn unknown_backend_in_every_command() {
+        let s = svc();
+        for req in ["sort gpu 1", "sortf gpu 1.0", "sortfile gpu /tmp/x"] {
+            let resp = s.handle_line(req);
+            assert!(resp.starts_with("err "), "{req} → {resp}");
+            assert!(resp.contains("unknown backend"), "{req} → {resp}");
+        }
+    }
+
+    #[test]
+    fn sortfile_round_trip() {
+        use crate::external::format::{read_raw, write_raw};
+        let dir = std::env::temp_dir().join(format!("flims-svc-ext-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("req.u32");
+        let data: Vec<u32> = (0..5000u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        write_raw(&input, &data).unwrap();
+
+        let s = svc();
+        let resp = s.handle_line(&format!("sortfile external {}", input.display()));
+        let expect_path = format!("{}.sorted", input.display());
+        assert_eq!(resp, format!("ok 5000 {expect_path}"));
+
+        let mut expect = data;
+        expect.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(read_raw(Path::new(&expect_path)).unwrap(), expect);
+
+        // Missing file: still a one-line err, connection-safe.
+        let resp = s.handle_line("sortfile external /nonexistent/nope.u32");
+        assert!(resp.starts_with("err "), "{resp}");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -1,0 +1,338 @@
+//! On-disk formats for the external-sort subsystem.
+//!
+//! Two layouts, both little-endian u32 payloads with buffered I/O:
+//!
+//! * **Run files** ([`RunWriter`] / [`RunReader`]) — length-prefixed:
+//!   a 4-byte magic (`FLR1`) and a u64 element count, then the payload.
+//!   The count is patched into the header on [`RunWriter::finish`], so a
+//!   truncated or crashed spill is detectable on open.
+//! * **Raw datasets** ([`RawReader`] / [`RawWriter`]) — headerless u32
+//!   little-endian, the input/output format of `sort_file` (and what the
+//!   `sortfile` CLI/service commands operate on).
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Magic prefix of a spilled run file.
+pub const RUN_MAGIC: [u8; 4] = *b"FLR1";
+/// Header size: magic + u64 element count.
+pub const RUN_HEADER_BYTES: u64 = 12;
+/// Bytes per element (u32 keys).
+pub const ELEM_BYTES: usize = 4;
+
+/// A finished spilled run: its path and sizes, as tracked by the
+/// `SpillManager`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RunFile {
+    pub path: PathBuf,
+    /// Payload element count.
+    pub elems: u64,
+    /// Total file size (header + payload).
+    pub bytes: u64,
+}
+
+/// Streaming writer for one run file.
+pub struct RunWriter {
+    out: BufWriter<File>,
+    path: PathBuf,
+    count: u64,
+    byte_buf: Vec<u8>,
+}
+
+impl RunWriter {
+    /// Create `path`, writing a header with a zero count placeholder.
+    pub fn create(path: &Path) -> Result<Self> {
+        let f = File::create(path)
+            .with_context(|| format!("creating run file {}", path.display()))?;
+        let mut out = BufWriter::new(f);
+        out.write_all(&RUN_MAGIC)?;
+        out.write_all(&0u64.to_le_bytes())?;
+        Ok(RunWriter { out, path: path.to_path_buf(), count: 0, byte_buf: Vec::new() })
+    }
+
+    /// Append a block of elements (need not be the whole run).
+    pub fn write_block(&mut self, xs: &[u32]) -> Result<()> {
+        self.byte_buf.clear();
+        self.byte_buf.reserve(xs.len() * ELEM_BYTES);
+        for &x in xs {
+            self.byte_buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self.out.write_all(&self.byte_buf)?;
+        self.count += xs.len() as u64;
+        Ok(())
+    }
+
+    /// Flush, patch the element count into the header, and return the
+    /// finished run's metadata.
+    pub fn finish(mut self) -> Result<RunFile> {
+        self.out.flush()?;
+        let f = self.out.get_mut();
+        f.seek(SeekFrom::Start(RUN_MAGIC.len() as u64))?;
+        f.write_all(&self.count.to_le_bytes())?;
+        Ok(RunFile {
+            bytes: RUN_HEADER_BYTES + self.count * ELEM_BYTES as u64,
+            path: self.path,
+            elems: self.count,
+        })
+    }
+}
+
+/// Streaming reader for one run file.
+pub struct RunReader {
+    inp: BufReader<File>,
+    remaining: u64,
+    byte_buf: Vec<u8>,
+}
+
+impl RunReader {
+    pub fn open(path: &Path) -> Result<Self> {
+        let f = File::open(path)
+            .with_context(|| format!("opening run file {}", path.display()))?;
+        let len = f.metadata()?.len();
+        let mut inp = BufReader::new(f);
+        let mut magic = [0u8; 4];
+        inp.read_exact(&mut magic)
+            .map_err(|e| anyhow!("{}: reading run header: {e}", path.display()))?;
+        if magic != RUN_MAGIC {
+            bail!("{}: not a run file (bad magic {magic:?})", path.display());
+        }
+        let mut cnt = [0u8; 8];
+        inp.read_exact(&mut cnt)?;
+        let remaining = u64::from_le_bytes(cnt);
+        // The count is untrusted input: checked math so a corrupt
+        // header reports "truncated run" instead of overflowing.
+        let expect = remaining
+            .checked_mul(ELEM_BYTES as u64)
+            .and_then(|payload| payload.checked_add(RUN_HEADER_BYTES));
+        if expect != Some(len) {
+            bail!(
+                "{}: truncated run (header claims {} elements, file is {} bytes)",
+                path.display(),
+                remaining,
+                len
+            );
+        }
+        Ok(RunReader { inp, remaining, byte_buf: Vec::new() })
+    }
+
+    /// Elements not yet read.
+    pub fn remaining(&self) -> u64 {
+        self.remaining
+    }
+
+    /// Append up to `max` elements to `out`; returns how many were read
+    /// (0 = exhausted).
+    pub fn read_block(&mut self, out: &mut Vec<u32>, max: usize) -> Result<usize> {
+        read_u32_block(&mut self.inp, &mut self.remaining, &mut self.byte_buf, out, max)
+    }
+}
+
+fn read_u32_block(
+    inp: &mut BufReader<File>,
+    remaining: &mut u64,
+    byte_buf: &mut Vec<u8>,
+    out: &mut Vec<u32>,
+    max: usize,
+) -> Result<usize> {
+    let take = (*remaining).min(max as u64) as usize;
+    if take == 0 {
+        return Ok(0);
+    }
+    byte_buf.resize(take * ELEM_BYTES, 0);
+    inp.read_exact(byte_buf)?;
+    out.reserve(take);
+    for c in byte_buf.chunks_exact(ELEM_BYTES) {
+        out.push(u32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    *remaining -= take as u64;
+    Ok(take)
+}
+
+/// Streaming reader for a headerless little-endian u32 dataset.
+pub struct RawReader {
+    inp: BufReader<File>,
+    total: u64,
+    remaining: u64,
+    byte_buf: Vec<u8>,
+}
+
+impl RawReader {
+    pub fn open(path: &Path) -> Result<Self> {
+        let f = File::open(path)
+            .with_context(|| format!("opening dataset {}", path.display()))?;
+        let len = f.metadata()?.len();
+        if len % ELEM_BYTES as u64 != 0 {
+            bail!(
+                "{}: size {} is not a multiple of {} (raw little-endian u32 expected)",
+                path.display(),
+                len,
+                ELEM_BYTES
+            );
+        }
+        let total = len / ELEM_BYTES as u64;
+        Ok(RawReader { inp: BufReader::new(f), total, remaining: total, byte_buf: Vec::new() })
+    }
+
+    /// Total elements in the file.
+    pub fn elems(&self) -> u64 {
+        self.total
+    }
+
+    /// Append up to `max` elements to `out`; 0 = exhausted.
+    pub fn read_block(&mut self, out: &mut Vec<u32>, max: usize) -> Result<usize> {
+        read_u32_block(&mut self.inp, &mut self.remaining, &mut self.byte_buf, out, max)
+    }
+}
+
+/// Streaming writer for a headerless little-endian u32 dataset.
+pub struct RawWriter {
+    out: BufWriter<File>,
+    count: u64,
+    byte_buf: Vec<u8>,
+}
+
+impl RawWriter {
+    pub fn create(path: &Path) -> Result<Self> {
+        let f = File::create(path)
+            .with_context(|| format!("creating output {}", path.display()))?;
+        Ok(RawWriter { out: BufWriter::new(f), count: 0, byte_buf: Vec::new() })
+    }
+
+    pub fn write_block(&mut self, xs: &[u32]) -> Result<()> {
+        self.byte_buf.clear();
+        self.byte_buf.reserve(xs.len() * ELEM_BYTES);
+        for &x in xs {
+            self.byte_buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self.out.write_all(&self.byte_buf)?;
+        self.count += xs.len() as u64;
+        Ok(())
+    }
+
+    /// Flush and return the element count written.
+    pub fn finish(mut self) -> Result<u64> {
+        self.out.flush()?;
+        Ok(self.count)
+    }
+}
+
+/// Write a whole dataset in one call (tests, CLI `--gen`).
+pub fn write_raw(path: &Path, xs: &[u32]) -> Result<u64> {
+    let mut w = RawWriter::create(path)?;
+    w.write_block(xs)?;
+    w.finish()
+}
+
+/// Read a whole dataset into memory (verification only — the point of
+/// this subsystem is that the sort itself never does this).
+pub fn read_raw(path: &Path) -> Result<Vec<u32>> {
+    let mut r = RawReader::open(path)?;
+    let mut out = Vec::with_capacity(r.elems() as usize);
+    while r.read_block(&mut out, 1 << 16)? > 0 {}
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("flims-fmt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn run_round_trip_in_blocks() {
+        let path = tmp("rt.flr");
+        let mut w = RunWriter::create(&path).unwrap();
+        w.write_block(&[9, 8, 7]).unwrap();
+        w.write_block(&[]).unwrap();
+        w.write_block(&[6, 5]).unwrap();
+        let run = w.finish().unwrap();
+        assert_eq!(run.elems, 5);
+        assert_eq!(run.bytes, RUN_HEADER_BYTES + 20);
+
+        let mut r = RunReader::open(&path).unwrap();
+        assert_eq!(r.remaining(), 5);
+        let mut out = Vec::new();
+        assert_eq!(r.read_block(&mut out, 2).unwrap(), 2);
+        assert_eq!(r.read_block(&mut out, 100).unwrap(), 3);
+        assert_eq!(r.read_block(&mut out, 100).unwrap(), 0);
+        assert_eq!(out, vec![9, 8, 7, 6, 5]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn run_reader_rejects_bad_magic_and_truncation() {
+        let path = tmp("bad.flr");
+        std::fs::write(&path, b"NOPE\x05\x00\x00\x00\x00\x00\x00\x00").unwrap();
+        let err = format!("{:#}", RunReader::open(&path).unwrap_err());
+        assert!(err.contains("bad magic"), "{err}");
+
+        // Valid magic, count claims more data than present.
+        let mut bytes = RUN_MAGIC.to_vec();
+        bytes.extend_from_slice(&10u64.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        std::fs::write(&path, bytes).unwrap();
+        let err = format!("{:#}", RunReader::open(&path).unwrap_err());
+        assert!(err.contains("truncated run"), "{err}");
+
+        // Corrupt header whose count would overflow count*4: must be a
+        // clean "truncated run" error, never a wrap/panic.
+        let mut bytes = RUN_MAGIC.to_vec();
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        std::fs::write(&path, bytes).unwrap();
+        let err = format!("{:#}", RunReader::open(&path).unwrap_err());
+        assert!(err.contains("truncated run"), "{err}");
+
+        // Wrapping check: count = 2^62 wraps to 12 bytes in unchecked
+        // math, which would exactly match a header-only file.
+        let mut bytes = RUN_MAGIC.to_vec();
+        bytes.extend_from_slice(&(1u64 << 62).to_le_bytes());
+        std::fs::write(&path, bytes).unwrap();
+        let err = format!("{:#}", RunReader::open(&path).unwrap_err());
+        assert!(err.contains("truncated run"), "{err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn raw_round_trip_and_size_check() {
+        let path = tmp("data.u32");
+        let data: Vec<u32> = (0..1000).rev().collect();
+        assert_eq!(write_raw(&path, &data).unwrap(), 1000);
+        let back = read_raw(&path).unwrap();
+        assert_eq!(back, data);
+
+        let mut r = RawReader::open(&path).unwrap();
+        assert_eq!(r.elems(), 1000);
+        let mut out = Vec::new();
+        assert_eq!(r.read_block(&mut out, 64).unwrap(), 64);
+        assert_eq!(out, data[..64]);
+
+        std::fs::write(&path, [1u8, 2, 3]).unwrap();
+        let err = format!("{:#}", RawReader::open(&path).unwrap_err());
+        assert!(err.contains("not a multiple of 4"), "{err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_run_and_empty_raw() {
+        let path = tmp("empty.flr");
+        let run = RunWriter::create(&path).unwrap().finish().unwrap();
+        assert_eq!(run.elems, 0);
+        let mut r = RunReader::open(&path).unwrap();
+        let mut out = Vec::new();
+        assert_eq!(r.read_block(&mut out, 10).unwrap(), 0);
+        std::fs::remove_file(&path).unwrap();
+
+        let path = tmp("empty.u32");
+        write_raw(&path, &[]).unwrap();
+        assert_eq!(read_raw(&path).unwrap(), Vec::<u32>::new());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

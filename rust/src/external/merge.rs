@@ -1,0 +1,194 @@
+//! Phase 2: arrange spilled runs into FLiMS merge trees and execute the
+//! (possibly multi-pass) k-way merge.
+//!
+//! A [`MergePlan`] caps every tree at the configured fan-in: while more
+//! runs exist than the fan-in allows, a pass merges balanced groups of
+//! runs into fresh (larger) spilled runs; the final pass streams the
+//! surviving ≤ fan-in runs straight into the caller's sink. Consumed
+//! runs are deleted eagerly after each group, so live spill stays near
+//! the dataset size rather than growing with the pass count.
+
+use anyhow::{bail, Result};
+
+use super::format::{RunFile, RunReader};
+use super::spill::SpillManager;
+use super::stream::{build_tree, pump, ReaderStream, RunStream};
+use super::ExternalConfig;
+
+/// The pass/group structure for merging `k` runs at a given fan-in.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MergePlan {
+    pub fan_in: usize,
+    /// Group sizes for each intermediate (spilling) pass.
+    pub intermediate: Vec<Vec<usize>>,
+    /// Number of runs entering the final (streaming) pass.
+    pub final_width: usize,
+}
+
+impl MergePlan {
+    pub fn new(k: usize, fan_in: usize) -> Self {
+        assert!(fan_in >= 2, "fan_in must be at least 2");
+        let mut intermediate = Vec::new();
+        let mut k = k;
+        while k > fan_in {
+            intermediate.push(group_sizes(k, fan_in));
+            k = k.div_ceil(fan_in);
+        }
+        MergePlan { fan_in, intermediate, final_width: k }
+    }
+
+    /// Total passes over the data, counting the final streaming pass.
+    pub fn passes(&self) -> u64 {
+        self.intermediate.len() as u64 + u64::from(self.final_width > 0)
+    }
+}
+
+/// Split `k` runs into `ceil(k / fan_in)` balanced groups (sizes differ
+/// by at most one), avoiding the degenerate 1-run groups a plain
+/// chunks-of-fan-in split produces when `k % fan_in == 1`.
+fn group_sizes(k: usize, fan_in: usize) -> Vec<usize> {
+    let groups = k.div_ceil(fan_in);
+    let base = k / groups;
+    let extra = k % groups;
+    (0..groups).map(|i| base + usize::from(i < extra)).collect()
+}
+
+/// Where the merged output goes: the final dataset file, a fresh run, or
+/// an in-memory buffer (service-path small sorts, tests).
+pub trait U32Sink {
+    fn write_block(&mut self, xs: &[u32]) -> Result<()>;
+}
+
+impl U32Sink for Vec<u32> {
+    fn write_block(&mut self, xs: &[u32]) -> Result<()> {
+        self.extend_from_slice(xs);
+        Ok(())
+    }
+}
+
+impl U32Sink for super::format::RawWriter {
+    fn write_block(&mut self, xs: &[u32]) -> Result<()> {
+        self.write_block(xs)
+    }
+}
+
+/// Result of executing a merge plan.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MergeOutcome {
+    /// Elements streamed into the sink by the final pass.
+    pub elements: u64,
+    /// Passes over the data (intermediate + final).
+    pub merge_passes: u64,
+}
+
+fn open_group(group: &[RunFile], cfg: &ExternalConfig) -> Result<Box<dyn RunStream>> {
+    let block = cfg.block_elems();
+    let mut streams: Vec<Box<dyn RunStream>> = Vec::with_capacity(group.len());
+    for run in group {
+        streams.push(Box::new(ReaderStream::new(RunReader::open(&run.path)?, block)));
+    }
+    Ok(build_tree(streams, block, cfg.w))
+}
+
+/// Merge `runs` into `sink` per `MergePlan::new(runs.len(), fan_in)`,
+/// spilling intermediate passes through `spill` and deleting consumed
+/// runs eagerly.
+pub fn merge_runs(
+    mut runs: Vec<RunFile>,
+    cfg: &ExternalConfig,
+    spill: &mut SpillManager,
+    sink: &mut dyn U32Sink,
+) -> Result<MergeOutcome> {
+    let plan = MergePlan::new(runs.len(), cfg.fan_in);
+    for sizes in &plan.intermediate {
+        let mut next = Vec::with_capacity(sizes.len());
+        let mut idx = 0;
+        for &sz in sizes {
+            let group = &runs[idx..idx + sz];
+            idx += sz;
+            if sz == 1 {
+                // A lone run needs no merging; carry it forward as-is.
+                next.push(group[0].clone());
+                continue;
+            }
+            // Enforce the disk budget before the merged run is written,
+            // not after the disk has already filled.
+            let expect: u64 = group.iter().map(|r| r.elems).sum();
+            spill.check_headroom(crate::external::format::RUN_HEADER_BYTES + expect * 4)?;
+            let mut tree = open_group(group, cfg)?;
+            let mut writer = spill.create_run()?;
+            let written = pump(tree.as_mut(), |chunk| writer.write_block(chunk))?;
+            let merged = writer.finish()?;
+            if written != expect {
+                bail!("merge pass lost data: wrote {written} of {expect} elements");
+            }
+            spill.register(&merged)?;
+            for run in group {
+                spill.consume(run)?;
+            }
+            next.push(merged);
+        }
+        runs = next;
+    }
+
+    debug_assert_eq!(runs.len(), plan.final_width);
+    let mut elements = 0u64;
+    if !runs.is_empty() {
+        let mut tree = open_group(&runs, cfg)?;
+        elements = pump(tree.as_mut(), |chunk| sink.write_block(chunk))?;
+        for run in &runs {
+            spill.consume(run)?;
+        }
+    }
+    Ok(MergeOutcome { elements, merge_passes: plan.passes() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_single_pass_when_k_fits() {
+        let p = MergePlan::new(6, 8);
+        assert!(p.intermediate.is_empty());
+        assert_eq!(p.final_width, 6);
+        assert_eq!(p.passes(), 1);
+    }
+
+    #[test]
+    fn plan_multi_pass_shapes() {
+        // 20 runs at fan-in 4: pass 1 → 5 groups of 4, pass 2 → 5 runs
+        // still > 4 → groups [3, 2], final over 2.
+        let p = MergePlan::new(20, 4);
+        assert_eq!(p.intermediate, vec![vec![4, 4, 4, 4, 4], vec![3, 2]]);
+        assert_eq!(p.final_width, 2);
+        assert_eq!(p.passes(), 3);
+    }
+
+    #[test]
+    fn plan_avoids_degenerate_groups() {
+        // 9 runs at fan-in 8: a naive split is [8, 1]; balanced is [5, 4].
+        let p = MergePlan::new(9, 8);
+        assert_eq!(p.intermediate, vec![vec![5, 4]]);
+        assert_eq!(p.final_width, 2);
+    }
+
+    #[test]
+    fn plan_zero_runs() {
+        let p = MergePlan::new(0, 8);
+        assert_eq!(p.final_width, 0);
+        assert_eq!(p.passes(), 0);
+    }
+
+    #[test]
+    fn group_sizes_cover_and_cap() {
+        for k in 1..200usize {
+            for fan in [2usize, 3, 4, 8, 16] {
+                let sizes = group_sizes(k, fan);
+                assert_eq!(sizes.iter().sum::<usize>(), k, "k={k} fan={fan}");
+                assert!(sizes.iter().all(|&s| s <= fan), "k={k} fan={fan} {sizes:?}");
+                assert_eq!(sizes.len(), k.div_ceil(fan));
+            }
+        }
+    }
+}

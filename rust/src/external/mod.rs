@@ -1,0 +1,301 @@
+//! Out-of-core external sort: spill runs to disk, then k-way merge them
+//! with trees of FLiMS 2-way mergers.
+//!
+//! The paper positions FLiMS inside "parallel merge trees to achieve
+//! high-throughput sorting, where the resource utilisation of the merger
+//! is critical for building large trees and internalising the workload"
+//! (§1). This module is that use case for datasets larger than RAM,
+//! in the classic two-phase external-sort shape (TopSort's phase
+//! structure, Merge-Path-style safe splits at the nodes):
+//!
+//! 1. **Run generation** ([`run_gen`]): the input streams through a
+//!    bounded buffer; each chunk is sorted by the in-memory FLiMS
+//!    pipeline and spilled as a descending run ([`format::RunWriter`]).
+//! 2. **k-way streaming merge** ([`merge`], [`stream`]): runs feed an
+//!    HPMT-style binary tree of block-buffered FLiMS mergers
+//!    (`flims::lanes::merge_desc_into` at every node). When the run
+//!    count exceeds the configured fan-in, intermediate passes re-spill
+//!    merged runs; the [`spill::SpillManager`] deletes consumed runs
+//!    eagerly and enforces the disk budget.
+//!
+//! Datasets are headerless little-endian u32 files ([`format::RawReader`]);
+//! output is the same format, descending. Resident memory stays within a
+//! small constant factor of `mem_budget_bytes` regardless of input size.
+
+pub mod format;
+pub mod merge;
+pub mod run_gen;
+pub mod spill;
+pub mod stream;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+pub use format::{RawReader, RawWriter, RunFile, RunReader, RunWriter};
+pub use merge::{merge_runs, MergeOutcome, MergePlan, U32Sink};
+pub use run_gen::{generate_runs, SliceSource, U32Source};
+pub use spill::SpillManager;
+pub use stream::{build_tree, MergeStream, ReaderStream, RunStream};
+
+use crate::flims::sort::SortConfig;
+
+/// Tuning for the external sort.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ExternalConfig {
+    /// Target resident memory for the sort (run buffer in phase 1, the
+    /// merge-tree buffers in phase 2). Actual peak stays within a small
+    /// constant factor.
+    pub mem_budget_bytes: usize,
+    /// Maximum runs merged by one tree; more runs ⇒ extra spill passes.
+    pub fan_in: usize,
+    /// FLiMS lane width for the in-memory sort and every tree node.
+    pub w: usize,
+    /// Sort-in-chunks run length for the in-memory sort.
+    pub chunk: usize,
+    /// Spill directory (`None` = fresh dir under the system temp dir).
+    pub tmp_dir: Option<PathBuf>,
+    /// Cap on live spill bytes (`None` = unlimited).
+    pub disk_budget_bytes: Option<u64>,
+}
+
+impl Default for ExternalConfig {
+    fn default() -> Self {
+        ExternalConfig {
+            mem_budget_bytes: 64 << 20,
+            fan_in: 8,
+            w: 16,
+            chunk: 128,
+            tmp_dir: None,
+            disk_budget_bytes: None,
+        }
+    }
+}
+
+impl ExternalConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.mem_budget_bytes < 4096 {
+            return Err(format!(
+                "external.mem_budget_bytes = {} must be at least 4096",
+                self.mem_budget_bytes
+            ));
+        }
+        if self.fan_in < 2 {
+            return Err(format!("external.fan_in = {} must be at least 2", self.fan_in));
+        }
+        SortConfig { w: self.w, chunk: self.chunk }.validate()
+    }
+
+    /// Elements per phase-1 run (the whole budget is one run buffer).
+    pub fn run_elems(&self) -> usize {
+        self.mem_budget_bytes / format::ELEM_BYTES
+    }
+
+    /// Elements per merge-tree block buffer: the budget divided across
+    /// the tree's buffers (≈ 3 per node, ≤ 2·fan_in nodes, plus slack).
+    pub fn block_elems(&self) -> usize {
+        (self.run_elems() / (8 * self.fan_in)).max(64)
+    }
+
+    pub fn sort_config(&self) -> SortConfig {
+        SortConfig { w: self.w, chunk: self.chunk }
+    }
+}
+
+/// What an external sort did — surfaced through `metrics` by the
+/// coordinator and printed by the CLI.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpillStats {
+    /// Elements sorted (== input length).
+    pub elements: u64,
+    /// Runs written to disk (phase 1 + intermediate passes).
+    pub runs_spilled: u64,
+    /// Total bytes written to spill files.
+    pub bytes_spilled: u64,
+    /// Merge passes over the data (intermediate + final).
+    pub merge_passes: u64,
+    /// High-water mark of live spill bytes.
+    pub peak_spill_bytes: u64,
+}
+
+/// Sort any [`U32Source`] into any [`U32Sink`] with bounded memory.
+pub fn sort_stream(
+    src: &mut dyn U32Source,
+    sink: &mut dyn U32Sink,
+    cfg: &ExternalConfig,
+) -> Result<SpillStats> {
+    cfg.validate().map_err(|e| anyhow!("{e}"))?;
+    let mut spill = SpillManager::new(cfg.tmp_dir.clone(), cfg.disk_budget_bytes)?;
+    let runs = generate_runs(src, cfg, &mut spill)?;
+    let input_elems: u64 = runs.iter().map(|r| r.elems).sum();
+    let outcome = merge_runs(runs, cfg, &mut spill, sink)?;
+    if outcome.elements != input_elems {
+        return Err(anyhow!(
+            "external sort corrupted: {} elements in, {} out",
+            input_elems,
+            outcome.elements
+        ));
+    }
+    Ok(SpillStats {
+        elements: outcome.elements,
+        runs_spilled: spill.runs_created(),
+        bytes_spilled: spill.bytes_written(),
+        merge_passes: outcome.merge_passes,
+        peak_spill_bytes: spill.peak_live_bytes(),
+    })
+}
+
+/// Sort the raw-u32 dataset at `input` into `output` (descending),
+/// spilling through temp files; resident memory is bounded by the
+/// configured budget, not the dataset size. `output` must be a
+/// different file — creating it truncates, so sorting in place would
+/// destroy the input before it was read.
+pub fn sort_file(input: &Path, output: &Path, cfg: &ExternalConfig) -> Result<SpillStats> {
+    let same_file = input == output
+        || match (input.canonicalize(), output.canonicalize()) {
+            (Ok(a), Ok(b)) => a == b,
+            _ => false, // output usually doesn't exist yet
+        };
+    if same_file {
+        return Err(anyhow!(
+            "refusing to sort {} in place: output would truncate the input (pick a different --output)",
+            input.display()
+        ));
+    }
+    let mut src = RawReader::open(input)?;
+    let mut sink = RawWriter::create(output)?;
+    let stats = sort_stream(&mut src, &mut sink, cfg)?;
+    let written = sink.finish()?;
+    debug_assert_eq!(written, stats.elements);
+    Ok(stats)
+}
+
+/// Sort an in-memory vector through the external pipeline (descending).
+/// Exists for the service's `Backend::External` route and for tests —
+/// the data still round-trips through spill files.
+pub fn sort_vec(data: &[u32], cfg: &ExternalConfig) -> Result<(Vec<u32>, SpillStats)> {
+    let mut src = SliceSource::new(data);
+    let mut out = Vec::with_capacity(data.len());
+    let stats = sort_stream(&mut src, &mut out, cfg)?;
+    Ok((out, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_u32, Distribution};
+    use crate::key::is_sorted_desc;
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg() -> ExternalConfig {
+        ExternalConfig {
+            mem_budget_bytes: 4096, // 1024-element runs
+            fan_in: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sort_vec_multi_pass_matches_std() {
+        // 20k elements / 1024-run budget → 20 runs → multiple passes at
+        // fan-in 4.
+        let mut rng = Rng::new(101);
+        let data = gen_u32(&mut rng, 20_000, Distribution::Uniform);
+        let (got, stats) = sort_vec(&data, &tiny_cfg()).unwrap();
+        let mut expect = data.clone();
+        expect.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(got, expect);
+        assert_eq!(stats.elements, 20_000);
+        assert_eq!(stats.runs_spilled, 20 + 5 + 2); // 20 → 5 → 2 → sink
+        assert_eq!(stats.merge_passes, 3);
+        assert!(stats.bytes_spilled >= 20_000 * 4);
+    }
+
+    #[test]
+    fn sort_vec_single_run() {
+        let mut rng = Rng::new(102);
+        let data = gen_u32(&mut rng, 500, Distribution::Uniform);
+        let (got, stats) = sort_vec(&data, &tiny_cfg()).unwrap();
+        assert!(is_sorted_desc(&got));
+        assert_eq!(got.len(), 500);
+        assert_eq!(stats.runs_spilled, 1);
+        assert_eq!(stats.merge_passes, 1);
+    }
+
+    #[test]
+    fn sort_vec_empty() {
+        let (got, stats) = sort_vec(&[], &tiny_cfg()).unwrap();
+        assert!(got.is_empty());
+        assert_eq!(stats.runs_spilled, 0);
+        assert_eq!(stats.merge_passes, 0);
+    }
+
+    #[test]
+    fn config_validation() {
+        let mut cfg = ExternalConfig::default();
+        assert!(cfg.validate().is_ok());
+        cfg.fan_in = 1;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExternalConfig { mem_budget_bytes: 100, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        cfg = ExternalConfig { w: 3, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        cfg = ExternalConfig { chunk: 8, w: 16, ..Default::default() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn spill_files_are_cleaned_up() {
+        let dir = std::env::temp_dir().join(format!("flims-ext-clean-{}", std::process::id()));
+        let cfg = ExternalConfig { tmp_dir: Some(dir.clone()), ..tiny_cfg() };
+        let mut rng = Rng::new(103);
+        let data = gen_u32(&mut rng, 10_000, Distribution::Uniform);
+        let (got, _) = sort_vec(&data, &cfg).unwrap();
+        assert!(is_sorted_desc(&got));
+        let leftovers: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert!(leftovers.is_empty(), "spill files leaked: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn in_place_sort_is_refused_and_input_survives() {
+        let dir = std::env::temp_dir().join(format!("flims-inplace-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("data.u32");
+        let data: Vec<u32> = (0..2000).collect();
+        format::write_raw(&path, &data).unwrap();
+
+        let err = format!("{:#}", sort_file(&path, &path, &tiny_cfg()).unwrap_err());
+        assert!(err.contains("in place"), "{err}");
+        assert_eq!(format::read_raw(&path).unwrap(), data, "input must be untouched");
+
+        // Same file through a non-identical path spelling.
+        let alias = dir.join(".").join("data.u32");
+        let err = format!("{:#}", sort_file(&path, &alias, &tiny_cfg()).unwrap_err());
+        assert!(err.contains("in place"), "{err}");
+        assert_eq!(format::read_raw(&path).unwrap(), data);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn disk_budget_violation_errors_cleanly() {
+        let cfg = ExternalConfig {
+            disk_budget_bytes: Some(1024), // far below the dataset
+            ..tiny_cfg()
+        };
+        let mut rng = Rng::new(104);
+        let data = gen_u32(&mut rng, 10_000, Distribution::Uniform);
+        let err = format!("{:#}", sort_vec(&data, &cfg).unwrap_err());
+        assert!(err.contains("disk budget exceeded"), "{err}");
+    }
+
+    #[test]
+    fn derived_sizes_are_sane() {
+        let cfg = tiny_cfg();
+        assert_eq!(cfg.run_elems(), 1024);
+        assert_eq!(cfg.block_elems(), 64); // clamped to the minimum
+        let big = ExternalConfig::default();
+        assert_eq!(big.run_elems(), 16 << 20);
+        assert_eq!(big.block_elems(), (16 << 20) / 64);
+    }
+}

@@ -1,0 +1,161 @@
+//! Phase 1: run generation. Stream the unsorted input in bounded-memory
+//! chunks, sort each chunk with the in-memory FLiMS pipeline
+//! (`flims::sort::sort_desc`), and spill it as one descending run.
+
+use anyhow::Result;
+
+use crate::flims::sort::sort_desc;
+
+use super::format::{RawReader, RunFile};
+use super::spill::SpillManager;
+use super::ExternalConfig;
+
+/// Source of unsorted u32 blocks — a dataset file, an in-memory slice,
+/// or anything else that can feed the run generator.
+pub trait U32Source {
+    /// Append up to `max` elements to `out`; `Ok(0)` means exhausted.
+    fn read_block(&mut self, out: &mut Vec<u32>, max: usize) -> Result<usize>;
+}
+
+impl U32Source for RawReader {
+    fn read_block(&mut self, out: &mut Vec<u32>, max: usize) -> Result<usize> {
+        RawReader::read_block(self, out, max)
+    }
+}
+
+/// In-memory source (service-path sorts, tests).
+pub struct SliceSource<'a> {
+    data: &'a [u32],
+    pos: usize,
+}
+
+impl<'a> SliceSource<'a> {
+    pub fn new(data: &'a [u32]) -> Self {
+        SliceSource { data, pos: 0 }
+    }
+}
+
+impl U32Source for SliceSource<'_> {
+    fn read_block(&mut self, out: &mut Vec<u32>, max: usize) -> Result<usize> {
+        let take = max.min(self.data.len() - self.pos);
+        out.extend_from_slice(&self.data[self.pos..self.pos + take]);
+        self.pos += take;
+        Ok(take)
+    }
+}
+
+/// Consume `src`, spilling sorted runs of at most `cfg.run_elems()`
+/// elements each. The run buffer is the only O(budget) allocation.
+pub fn generate_runs(
+    src: &mut dyn U32Source,
+    cfg: &ExternalConfig,
+    spill: &mut SpillManager,
+) -> Result<Vec<RunFile>> {
+    let run_elems = cfg.run_elems();
+    let mut runs = Vec::new();
+    let mut buf: Vec<u32> = Vec::with_capacity(run_elems);
+    loop {
+        buf.clear();
+        while buf.len() < run_elems {
+            if src.read_block(&mut buf, run_elems - buf.len())? == 0 {
+                break;
+            }
+        }
+        if buf.is_empty() {
+            break;
+        }
+        sort_desc(&mut buf, cfg.sort_config());
+        // Budget check up front: fail before the disk fills, not after.
+        spill.check_headroom(
+            crate::external::format::RUN_HEADER_BYTES + (buf.len() * 4) as u64,
+        )?;
+        let mut writer = spill.create_run()?;
+        writer.write_block(&buf)?;
+        let run = writer.finish()?;
+        spill.register(&run)?;
+        runs.push(run);
+    }
+    Ok(runs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_u32, Distribution};
+    use crate::external::format::RunReader;
+    use crate::key::is_sorted_desc;
+    use crate::util::rng::Rng;
+
+    fn small_cfg() -> ExternalConfig {
+        ExternalConfig {
+            mem_budget_bytes: 4096, // 1024-element runs
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn runs_cover_input_and_are_sorted() {
+        let cfg = small_cfg();
+        let mut rng = Rng::new(91);
+        let data = gen_u32(&mut rng, 5000, Distribution::Uniform);
+        let mut spill = SpillManager::new(None, None).unwrap();
+        let mut src = SliceSource::new(&data);
+        let runs = generate_runs(&mut src, &cfg, &mut spill).unwrap();
+
+        // 5000 elements at 1024/run → 5 runs; sizes sum to the input.
+        assert_eq!(runs.len(), 5);
+        assert_eq!(runs.iter().map(|r| r.elems).sum::<u64>(), 5000);
+
+        let mut all = Vec::new();
+        for run in &runs {
+            let mut r = RunReader::open(&run.path).unwrap();
+            let mut v = Vec::new();
+            while r.read_block(&mut v, 512).unwrap() > 0 {}
+            assert_eq!(v.len() as u64, run.elems);
+            assert!(is_sorted_desc(&v), "run {} not sorted", run.path.display());
+            all.extend(v);
+        }
+        all.sort_unstable();
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        assert_eq!(all, expect, "runs must hold exactly the input multiset");
+    }
+
+    #[test]
+    fn empty_input_spills_nothing() {
+        let cfg = small_cfg();
+        let mut spill = SpillManager::new(None, None).unwrap();
+        let mut src = SliceSource::new(&[]);
+        let runs = generate_runs(&mut src, &cfg, &mut spill).unwrap();
+        assert!(runs.is_empty());
+        assert_eq!(spill.runs_created(), 0);
+    }
+
+    #[test]
+    fn dribbling_source_still_fills_runs() {
+        // A source that yields 7 elements at a time must still produce
+        // full-size runs (the generator loops until the buffer fills).
+        struct Dribble {
+            left: usize,
+            next: u32,
+        }
+        impl U32Source for Dribble {
+            fn read_block(&mut self, out: &mut Vec<u32>, max: usize) -> Result<usize> {
+                let take = self.left.min(max).min(7);
+                for _ in 0..take {
+                    out.push(self.next);
+                    self.next = self.next.wrapping_mul(1664525).wrapping_add(1013904223);
+                }
+                self.left -= take;
+                Ok(take)
+            }
+        }
+        let cfg = small_cfg();
+        let mut spill = SpillManager::new(None, None).unwrap();
+        let mut src = Dribble { left: 3000, next: 1 };
+        let runs = generate_runs(&mut src, &cfg, &mut spill).unwrap();
+        assert_eq!(runs.len(), 3);
+        assert_eq!(runs[0].elems, 1024);
+        assert_eq!(runs[2].elems, 3000 - 2048);
+    }
+}

@@ -1,0 +1,251 @@
+//! Spill-file lifecycle: temp-dir ownership, run naming, disk-budget
+//! enforcement, and eager deletion of consumed runs.
+//!
+//! Every run file the external sort creates flows through one
+//! [`SpillManager`]: `create_run` names the file, `register` starts
+//! tracking a finished run (and enforces the disk budget), `consume`
+//! deletes it the moment the merge has drained it. `Drop` removes any
+//! stragglers (and the temp dir, when the manager created it), so an
+//! aborted sort never leaks disk.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+use super::format::{RunFile, RunWriter};
+
+/// Distinguishes concurrent spill dirs within one process.
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Tracks live spill files and enforces the disk byte budget.
+pub struct SpillManager {
+    dir: PathBuf,
+    /// We created the directory, so we remove it on drop.
+    own_dir: bool,
+    next_run: u64,
+    live: Vec<RunFile>,
+    live_bytes: u64,
+    disk_budget: Option<u64>,
+    /// Lifetime counters (monotonic, survive consume()).
+    runs_created: u64,
+    runs_deleted: u64,
+    bytes_written: u64,
+    peak_live_bytes: u64,
+}
+
+impl SpillManager {
+    /// `dir = None` creates (and owns) a fresh directory under the
+    /// system temp dir; `Some(d)` spills into `d` without owning it.
+    pub fn new(dir: Option<PathBuf>, disk_budget: Option<u64>) -> Result<Self> {
+        let (dir, own_dir) = match dir {
+            Some(d) => {
+                std::fs::create_dir_all(&d)
+                    .with_context(|| format!("creating spill dir {}", d.display()))?;
+                (d, false)
+            }
+            None => {
+                let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
+                let d = std::env::temp_dir()
+                    .join(format!("flims-spill-{}-{}", std::process::id(), seq));
+                std::fs::create_dir_all(&d)
+                    .with_context(|| format!("creating spill dir {}", d.display()))?;
+                (d, true)
+            }
+        };
+        Ok(SpillManager {
+            dir,
+            own_dir,
+            next_run: 0,
+            live: Vec::new(),
+            live_bytes: 0,
+            disk_budget,
+            runs_created: 0,
+            runs_deleted: 0,
+            bytes_written: 0,
+            peak_live_bytes: 0,
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Open a writer for the next run file.
+    pub fn create_run(&mut self) -> Result<RunWriter> {
+        let path = self.dir.join(format!("run-{:06}.flr", self.next_run));
+        self.next_run += 1;
+        RunWriter::create(&path)
+    }
+
+    /// Check that `upcoming_bytes` more spill fits the disk budget —
+    /// called *before* writing a run, so the budget is enforced ahead
+    /// of the disk filling, not after.
+    pub fn check_headroom(&self, upcoming_bytes: u64) -> Result<()> {
+        if let Some(budget) = self.disk_budget {
+            let projected = self.live_bytes + upcoming_bytes;
+            if projected > budget {
+                bail!(
+                    "spill disk budget exceeded: {} bytes live + {} upcoming > {} budget",
+                    self.live_bytes,
+                    upcoming_bytes,
+                    budget
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Start tracking a finished run; errors if it pushes live spill
+    /// bytes past the disk budget (the run stays registered so Drop
+    /// still cleans it up).
+    pub fn register(&mut self, run: &RunFile) -> Result<()> {
+        self.live.push(run.clone());
+        self.live_bytes += run.bytes;
+        self.bytes_written += run.bytes;
+        self.runs_created += 1;
+        self.peak_live_bytes = self.peak_live_bytes.max(self.live_bytes);
+        if let Some(budget) = self.disk_budget {
+            if self.live_bytes > budget {
+                bail!(
+                    "spill disk budget exceeded: {} bytes live > {} budget ({} runs)",
+                    self.live_bytes,
+                    budget,
+                    self.live.len()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Delete a fully-consumed run eagerly, reclaiming its disk.
+    pub fn consume(&mut self, run: &RunFile) -> Result<()> {
+        std::fs::remove_file(&run.path)
+            .with_context(|| format!("deleting consumed run {}", run.path.display()))?;
+        self.live.retain(|r| r.path != run.path);
+        self.live_bytes = self.live_bytes.saturating_sub(run.bytes);
+        self.runs_deleted += 1;
+        Ok(())
+    }
+
+    pub fn live_bytes(&self) -> u64 {
+        self.live_bytes
+    }
+
+    pub fn peak_live_bytes(&self) -> u64 {
+        self.peak_live_bytes
+    }
+
+    pub fn runs_created(&self) -> u64 {
+        self.runs_created
+    }
+
+    pub fn runs_deleted(&self) -> u64 {
+        self.runs_deleted
+    }
+
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes_written
+    }
+}
+
+impl Drop for SpillManager {
+    fn drop(&mut self) {
+        for run in &self.live {
+            let _ = std::fs::remove_file(&run.path);
+        }
+        if self.own_dir {
+            let _ = std::fs::remove_dir(&self.dir);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spill_run(sm: &mut SpillManager, data: &[u32]) -> RunFile {
+        let mut w = sm.create_run().unwrap();
+        w.write_block(data).unwrap();
+        let run = w.finish().unwrap();
+        sm.register(&run).unwrap();
+        run
+    }
+
+    #[test]
+    fn create_register_consume_cycle() {
+        let mut sm = SpillManager::new(None, None).unwrap();
+        let dir = sm.dir().to_path_buf();
+        let r1 = spill_run(&mut sm, &[3, 2, 1]);
+        let r2 = spill_run(&mut sm, &[9, 9]);
+        assert!(r1.path.exists() && r2.path.exists());
+        assert_eq!(sm.runs_created(), 2);
+        assert_eq!(sm.live_bytes(), r1.bytes + r2.bytes);
+
+        sm.consume(&r1).unwrap();
+        assert!(!r1.path.exists(), "consumed run must be deleted eagerly");
+        assert_eq!(sm.live_bytes(), r2.bytes);
+        assert_eq!(sm.runs_deleted(), 1);
+
+        drop(sm);
+        assert!(!r2.path.exists(), "drop must clean leftover runs");
+        assert!(!dir.exists(), "drop must remove the owned temp dir");
+    }
+
+    #[test]
+    fn disk_budget_enforced() {
+        // Budget fits one 3-element run (12 bytes header + 12 payload)
+        // but not two.
+        let mut sm = SpillManager::new(None, Some(30)).unwrap();
+        let mut w = sm.create_run().unwrap();
+        w.write_block(&[5, 4, 3]).unwrap();
+        let r1 = w.finish().unwrap();
+        sm.register(&r1).unwrap();
+
+        let mut w = sm.create_run().unwrap();
+        w.write_block(&[2, 1, 0]).unwrap();
+        let r2 = w.finish().unwrap();
+        let err = format!("{:#}", sm.register(&r2).unwrap_err());
+        assert!(err.contains("disk budget exceeded"), "{err}");
+
+        // Consuming reclaims budget headroom.
+        sm.consume(&r1).unwrap();
+        assert!(sm.live_bytes() <= 30);
+    }
+
+    #[test]
+    fn headroom_is_checked_before_writing() {
+        let mut sm = SpillManager::new(None, Some(100)).unwrap();
+        assert!(sm.check_headroom(100).is_ok());
+        let err = format!("{:#}", sm.check_headroom(101).unwrap_err());
+        assert!(err.contains("disk budget exceeded"), "{err}");
+        // Live bytes count against the headroom.
+        let r = spill_run(&mut sm, &[1, 2, 3]); // 12 + 12 = 24 bytes
+        assert!(sm.check_headroom(76).is_ok());
+        assert!(sm.check_headroom(77).is_err());
+        sm.consume(&r).unwrap();
+        assert!(sm.check_headroom(100).is_ok());
+    }
+
+    #[test]
+    fn external_dir_is_not_removed() {
+        let dir = std::env::temp_dir().join(format!("flims-keep-{}", std::process::id()));
+        let mut sm = SpillManager::new(Some(dir.clone()), None).unwrap();
+        let run = spill_run(&mut sm, &[1]);
+        drop(sm);
+        assert!(!run.path.exists(), "runs are still cleaned");
+        assert!(dir.exists(), "caller-provided dir must survive");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn peak_tracks_high_water_mark() {
+        let mut sm = SpillManager::new(None, None).unwrap();
+        let r1 = spill_run(&mut sm, &[1, 2, 3, 4]);
+        let peak_after_one = sm.peak_live_bytes();
+        sm.consume(&r1).unwrap();
+        let _r2 = spill_run(&mut sm, &[1]);
+        assert!(sm.peak_live_bytes() >= peak_after_one);
+        assert!(sm.live_bytes() < sm.peak_live_bytes());
+    }
+}

@@ -1,0 +1,330 @@
+//! Streaming merge nodes: an HPMT-style binary tree of FLiMS 2-way
+//! mergers over block-buffered inputs.
+//!
+//! Each [`MergeStream`] holds a bounded buffer per child and repeatedly
+//! emits the *safe prefix* of the two buffers — every element ≥ the
+//! larger of the two buffer minima, which no future element from either
+//! child can exceed (keys are compared as a multiset, so ties with
+//! unseen equal keys are harmless). The safe prefixes are merged with
+//! [`merge_desc_into`], the same `w`-lane FLiMS primitive the in-memory
+//! sort uses — the Merge-Path-style split just decides *how much* of
+//! each buffer the merger may consume this round.
+
+use anyhow::{bail, Result};
+
+use crate::flims::lanes::merge_desc_into;
+
+use super::format::RunReader;
+
+/// A stream of descending-sorted u32 blocks.
+pub trait RunStream {
+    /// Append the next descending-sorted block to `out`. Returns the
+    /// number of elements appended; `Ok(0)` means exhausted for good.
+    fn next_block(&mut self, out: &mut Vec<u32>) -> Result<usize>;
+}
+
+/// Leaf: a spilled run file, surfaced `block` elements at a time.
+pub struct ReaderStream {
+    reader: RunReader,
+    block: usize,
+}
+
+impl ReaderStream {
+    pub fn new(reader: RunReader, block: usize) -> Self {
+        ReaderStream { reader, block: block.max(1) }
+    }
+}
+
+impl RunStream for ReaderStream {
+    fn next_block(&mut self, out: &mut Vec<u32>) -> Result<usize> {
+        self.reader.read_block(out, self.block)
+    }
+}
+
+/// One buffered input side of a merge node.
+struct Side {
+    buf: Vec<u32>,
+    /// Consumed prefix of `buf`.
+    pos: usize,
+    /// The child returned 0 — no future elements exist.
+    done: bool,
+}
+
+impl Side {
+    fn new() -> Self {
+        Side { buf: Vec::new(), pos: 0, done: false }
+    }
+
+    fn avail(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Top up to at least `target` available elements (unless the child
+    /// runs dry first). Invariant afterwards: `avail() == 0 ⇒ done`.
+    fn refill(&mut self, child: &mut dyn RunStream, target: usize) -> Result<()> {
+        if self.done || self.avail() >= target {
+            return Ok(());
+        }
+        self.buf.drain(..self.pos);
+        self.pos = 0;
+        while self.buf.len() < target {
+            if child.next_block(&mut self.buf)? == 0 {
+                self.done = true;
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Minimum key still buffered — a bound on nothing: every *future*
+    /// element from this side is ≤ this value (descending input).
+    fn min_bound(&self) -> Option<u32> {
+        if self.done {
+            None // no future elements; no constraint
+        } else {
+            self.buf.last().copied()
+        }
+    }
+}
+
+/// Internal node: FLiMS 2-way merge of two child streams.
+pub struct MergeStream {
+    a: Box<dyn RunStream>,
+    b: Box<dyn RunStream>,
+    sa: Side,
+    sb: Side,
+    block: usize,
+    w: usize,
+    scratch: Vec<u32>,
+}
+
+impl MergeStream {
+    pub fn new(a: Box<dyn RunStream>, b: Box<dyn RunStream>, block: usize, w: usize) -> Self {
+        assert!(w.is_power_of_two());
+        MergeStream {
+            a,
+            b,
+            sa: Side::new(),
+            sb: Side::new(),
+            block: block.max(1),
+            w,
+            scratch: Vec::new(),
+        }
+    }
+}
+
+impl RunStream for MergeStream {
+    fn next_block(&mut self, out: &mut Vec<u32>) -> Result<usize> {
+        self.sa.refill(self.a.as_mut(), self.block)?;
+        self.sb.refill(self.b.as_mut(), self.block)?;
+        let (av, bv) = (self.sa.avail(), self.sb.avail());
+        if av == 0 && bv == 0 {
+            return Ok(0);
+        }
+        // One side exhausted entirely: pass the other buffer through
+        // (refill guarantees avail()==0 implies done).
+        if av == 0 {
+            out.extend_from_slice(&self.sb.buf[self.sb.pos..]);
+            self.sb.pos = self.sb.buf.len();
+            return Ok(bv);
+        }
+        if bv == 0 {
+            out.extend_from_slice(&self.sa.buf[self.sa.pos..]);
+            self.sa.pos = self.sa.buf.len();
+            return Ok(av);
+        }
+        // Safe-prefix split: elements ≥ t cannot be preceded by anything
+        // still unseen, so they may be merged and emitted now.
+        let threshold = match (self.sa.min_bound(), self.sb.min_bound()) {
+            (Some(x), Some(y)) => Some(x.max(y)),
+            (Some(x), None) => Some(x),
+            (None, Some(y)) => Some(y),
+            (None, None) => None, // both fully buffered: merge everything
+        };
+        let a_avail = &self.sa.buf[self.sa.pos..];
+        let b_avail = &self.sb.buf[self.sb.pos..];
+        let (ka, kb) = match threshold {
+            None => (av, bv),
+            Some(t) => (
+                a_avail.partition_point(|&x| x >= t),
+                b_avail.partition_point(|&x| x >= t),
+            ),
+        };
+        if ka + kb == 0 {
+            // Unreachable: the threshold equals the buffer minimum of a
+            // non-exhausted side, so that side's whole buffer qualifies.
+            bail!("merge stream stalled (threshold {threshold:?}, avail {av}/{bv})");
+        }
+        merge_desc_into(&a_avail[..ka], &b_avail[..kb], self.w, &mut self.scratch);
+        out.extend_from_slice(&self.scratch);
+        self.sa.pos += ka;
+        self.sb.pos += kb;
+        Ok(ka + kb)
+    }
+}
+
+/// Fold `streams` into a balanced binary tree of [`MergeStream`] nodes.
+/// Panics on an empty input (callers handle the zero-run case).
+pub fn build_tree(mut streams: Vec<Box<dyn RunStream>>, block: usize, w: usize) -> Box<dyn RunStream> {
+    assert!(!streams.is_empty(), "build_tree needs at least one stream");
+    while streams.len() > 1 {
+        let mut next: Vec<Box<dyn RunStream>> = Vec::with_capacity(streams.len().div_ceil(2));
+        let mut it = streams.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(Box::new(MergeStream::new(a, b, block, w))),
+                None => next.push(a),
+            }
+        }
+        streams = next;
+    }
+    streams.pop().unwrap()
+}
+
+/// Drain a stream into `emit` block-by-block; returns total elements.
+pub fn pump(stream: &mut dyn RunStream, mut emit: impl FnMut(&[u32]) -> Result<()>) -> Result<u64> {
+    let mut chunk = Vec::new();
+    let mut total = 0u64;
+    loop {
+        chunk.clear();
+        let n = stream.next_block(&mut chunk)?;
+        if n == 0 {
+            return Ok(total);
+        }
+        emit(&chunk)?;
+        total += n as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_u32, Distribution};
+    use crate::key::is_sorted_desc;
+    use crate::util::rng::Rng;
+
+    /// In-memory descending stream with configurable emission sizes.
+    struct VecStream {
+        data: Vec<u32>,
+        pos: usize,
+        step: usize,
+    }
+
+    impl VecStream {
+        fn new(mut data: Vec<u32>, step: usize) -> Self {
+            data.sort_unstable_by(|a, b| b.cmp(a));
+            VecStream { data, pos: 0, step }
+        }
+    }
+
+    impl RunStream for VecStream {
+        fn next_block(&mut self, out: &mut Vec<u32>) -> Result<usize> {
+            let take = self.step.min(self.data.len() - self.pos);
+            out.extend_from_slice(&self.data[self.pos..self.pos + take]);
+            self.pos += take;
+            Ok(take)
+        }
+    }
+
+    fn drain(stream: &mut dyn RunStream) -> Vec<u32> {
+        let mut out = Vec::new();
+        pump(stream, |c| {
+            out.extend_from_slice(c);
+            Ok(())
+        })
+        .unwrap();
+        out
+    }
+
+    fn oracle(lists: &[Vec<u32>]) -> Vec<u32> {
+        let mut v: Vec<u32> = lists.iter().flatten().copied().collect();
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        v
+    }
+
+    #[test]
+    fn two_way_matches_oracle_across_shapes() {
+        let mut rng = Rng::new(81);
+        for (na, nb) in [(0, 0), (0, 500), (500, 0), (1, 1), (1000, 37), (512, 512)] {
+            for block in [1usize, 7, 64] {
+                let a = gen_u32(&mut rng, na, Distribution::Uniform);
+                let b = gen_u32(&mut rng, nb, Distribution::Uniform);
+                let expect = oracle(&[a.clone(), b.clone()]);
+                let mut m = MergeStream::new(
+                    Box::new(VecStream::new(a, 13)),
+                    Box::new(VecStream::new(b, 5)),
+                    block,
+                    8,
+                );
+                assert_eq!(drain(&mut m), expect, "na={na} nb={nb} block={block}");
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_heavy_and_constant_streams() {
+        let mut rng = Rng::new(82);
+        for dist in [
+            Distribution::DupHeavy { alphabet: 2 },
+            Distribution::Constant,
+            Distribution::Zipf { s_x100: 150, n_ranks: 16 },
+        ] {
+            let a = gen_u32(&mut rng, 700, dist);
+            let b = gen_u32(&mut rng, 300, dist);
+            let expect = oracle(&[a.clone(), b.clone()]);
+            let mut m = MergeStream::new(
+                Box::new(VecStream::new(a, 11)),
+                Box::new(VecStream::new(b, 23)),
+                32,
+                16,
+            );
+            assert_eq!(drain(&mut m), expect, "{dist:?}");
+        }
+    }
+
+    #[test]
+    fn tree_merges_many_streams() {
+        let mut rng = Rng::new(83);
+        for k in [1usize, 2, 3, 5, 8, 13] {
+            let lists: Vec<Vec<u32>> =
+                (0..k).map(|i| gen_u32(&mut rng, 50 + i * 37, Distribution::Uniform)).collect();
+            let expect = oracle(&lists);
+            let streams: Vec<Box<dyn RunStream>> = lists
+                .iter()
+                .map(|l| Box::new(VecStream::new(l.clone(), 9)) as Box<dyn RunStream>)
+                .collect();
+            let mut tree = build_tree(streams, 16, 8);
+            let got = drain(tree.as_mut());
+            assert!(is_sorted_desc(&got));
+            assert_eq!(got, expect, "k={k}");
+        }
+    }
+
+    #[test]
+    fn blocks_are_individually_sorted() {
+        let mut rng = Rng::new(84);
+        let a = gen_u32(&mut rng, 400, Distribution::Uniform);
+        let b = gen_u32(&mut rng, 400, Distribution::Uniform);
+        let mut m = MergeStream::new(
+            Box::new(VecStream::new(a, 17)),
+            Box::new(VecStream::new(b, 29)),
+            32,
+            8,
+        );
+        let mut chunk = Vec::new();
+        let mut last: Option<u32> = None;
+        loop {
+            chunk.clear();
+            if m.next_block(&mut chunk).unwrap() == 0 {
+                break;
+            }
+            assert!(is_sorted_desc(&chunk));
+            // Blocks are globally ordered too: each starts no higher
+            // than the previous block's tail.
+            if let Some(prev_min) = last {
+                assert!(chunk[0] <= prev_min);
+            }
+            last = chunk.last().copied();
+        }
+    }
+}

@@ -25,6 +25,19 @@ pub fn merge_desc<T: Item>(a: &[T], b: &[T], w: usize) -> Vec<T> {
     out
 }
 
+/// Merge two **ascending**-sorted slices into a new ascending vector —
+/// the convenience wrapper for callers outside the paper's descending
+/// convention. Internally the inputs are viewed reversed (an ascending
+/// slice read backwards is descending), merged by the same lanes, and
+/// the output reversed back.
+pub fn merge_asc<T: Item>(a: &[T], b: &[T], w: usize) -> Vec<T> {
+    let ra: Vec<T> = a.iter().rev().copied().collect();
+    let rb: Vec<T> = b.iter().rev().copied().collect();
+    let mut out = merge_desc(&ra, &rb, w);
+    out.reverse();
+    out
+}
+
 /// Merge two descending-sorted slices into `out` (cleared first).
 ///
 /// Pad-aware: safe for payload records whose key equals the sentinel.
@@ -481,6 +494,23 @@ mod tests {
         let mut dst = vec![0u32; 100];
         merge_flimsj_fast_slice(&[], &a, 16, &mut dst);
         assert_eq!(dst, a);
+    }
+
+    #[test]
+    fn merge_asc_matches_sorted_union() {
+        let mut rng = Rng::new(28);
+        for _ in 0..20 {
+            let (na, nb) = (rng.range(0, 200), rng.range(0, 200));
+            let mut a: Vec<u32> = (0..na).map(|_| rng.next_u32()).collect();
+            let mut b: Vec<u32> = (0..nb).map(|_| rng.next_u32()).collect();
+            a.sort_unstable();
+            b.sort_unstable();
+            let mut expect: Vec<u32> = a.iter().chain(b.iter()).copied().collect();
+            expect.sort_unstable();
+            assert_eq!(merge_asc(&a, &b, 8), expect);
+        }
+        assert_eq!(merge_asc::<u32>(&[], &[], 4), Vec::<u32>::new());
+        assert_eq!(merge_asc(&[1u32, 5], &[], 4), vec![1, 5]);
     }
 
     #[test]

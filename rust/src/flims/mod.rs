@@ -25,8 +25,8 @@ pub mod sort;
 pub mod stable;
 
 pub use butterfly::butterfly_desc;
-pub use lanes::merge_desc;
+pub use lanes::{merge_asc, merge_desc};
 pub use parallel::par_sort_desc;
 pub use scalar::{merge_basic, merge_skew, FlimsMerger, MergeTrace, Variant};
-pub use sort::{sort_desc, SortConfig};
+pub use sort::{sort_asc, sort_desc, SortConfig};
 pub use stable::merge_stable;

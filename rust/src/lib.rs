@@ -26,14 +26,19 @@
 //!   for FLiMS/FLiMSj/PMT/MMS/VMS/WMS/EHMS/basic, with LUT/FF cost and
 //!   Fmax timing models (the FPGA-substrate substitute; DESIGN.md §4).
 //! * [`tree`] — PMT / HPMT merge-tree coordination (fig. 1–2).
+//! * [`external`] — out-of-core external sort: bounded-memory run
+//!   generation spilled to disk, then a k-way streaming merge through
+//!   trees of FLiMS 2-way mergers (multi-pass above the fan-in).
 //! * [`coordinator`] — sorting-as-a-service: router + dynamic batcher.
-//! * [`runtime`] — PJRT client wrapper executing `artifacts/*.hlo.txt`.
+//! * [`runtime`] — PJRT client wrapper executing `artifacts/*.hlo.txt`
+//!   (a stub unless built with the `pjrt` feature).
 //! * [`config`] / [`metrics`] / [`data`] / [`util`] — framework glue.
 
 pub mod baselines;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod external;
 pub mod flims;
 pub mod hw;
 pub mod key;
@@ -42,5 +47,6 @@ pub mod runtime;
 pub mod tree;
 pub mod util;
 
-pub use flims::{merge_desc, par_sort_desc, sort_desc, SortConfig};
+pub use external::{sort_file, ExternalConfig, SpillStats};
+pub use flims::{merge_asc, merge_desc, par_sort_desc, sort_asc, sort_desc, SortConfig};
 pub use key::{is_sorted_desc, F32Key, Item, Key, Kv, Kv64};

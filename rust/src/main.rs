@@ -3,8 +3,9 @@
 //! Subcommands:
 //!
 //! ```text
-//! flims sort     --n 1000000 [--dist uniform|zipf|dup] [--backend native|parallel|pjrt] [--w 16] [--chunk 128]
+//! flims sort     --n 1000000 [--dist uniform|zipf|dup] [--backend native|parallel|pjrt|external] [--w 16] [--chunk 128]
 //! flims merge    --n 65536 [--w 16]
+//! flims sortfile --input data.u32 [--output out.u32] [--budget-mb 64] [--fan-in 8] [--gen N]
 //! flims trace                              # the paper's Table 1 example
 //! flims simulate --design flims|flimsj|wms|mms|vms|basic --w 8 [--skew] [--dup]
 //! flims report   table2|table3|fig13 [--data-bits 64]
@@ -15,11 +16,13 @@
 //! (Argument parsing is in-tree: the build is offline, no clap.)
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::process::ExitCode;
 use std::sync::Arc;
 use std::time::Instant;
 
 use flims::baselines::{radix_sort_desc, samplesort_desc};
+use flims::external;
 use flims::config::{AppConfig, RawConfig};
 use flims::coordinator::{BatcherConfig, Router, Service};
 use flims::data::{gen_u32, Distribution};
@@ -114,6 +117,7 @@ fn run(args: Vec<String>) -> Result<(), String> {
     match cmd.as_str() {
         "sort" => cmd_sort(&flags),
         "merge" => cmd_merge(&flags),
+        "sortfile" => cmd_sortfile(&flags),
         "trace" => cmd_trace(),
         "simulate" => cmd_simulate(&flags),
         "report" => cmd_report(&args[1..], &flags),
@@ -133,9 +137,11 @@ fn print_help() {
          \n\
          commands:\n\
            sort      --n N [--dist uniform|dup|zipf|sorted|constant]\n\
-                     [--backend native|parallel|pjrt|std|radix|samplesort]\n\
+                     [--backend native|parallel|pjrt|external|std|radix|samplesort]\n\
                      [--w W] [--chunk C] [--threads T] [--config FILE]\n\
            merge     --n N [--w W]\n\
+           sortfile  --input F [--output F] [--budget-mb M] [--fan-in K]\n\
+                     [--gen N [--dist D] [--seed S]]   (raw u32 LE datasets)\n\
            trace     (replays the paper's Table 1 example, w=4)\n\
            simulate  --design flims|flimsj|wms|mms|vms|basic --w W [--skew] [--dup] [--n N]\n\
            report    table2|table3|fig13 [--data-bits B]\n\
@@ -166,6 +172,17 @@ fn cmd_sort(f: &HashMap<String, String>) -> Result<(), String> {
         "std" => data.sort_unstable_by(|a, b| b.cmp(a)),
         "radix" => radix_sort_desc(&mut data),
         "samplesort" => samplesort_desc(&mut data, cfg.threads),
+        "external" => {
+            let (out, stats) =
+                external::sort_vec(&data, &cfg.external_config()).map_err(|e| format!("{e:#}"))?;
+            data = out;
+            println!(
+                "  (spilled {} runs / {:.1} MB, {} merge passes)",
+                stats.runs_spilled,
+                stats.bytes_spilled as f64 / (1 << 20) as f64,
+                stats.merge_passes
+            );
+        }
         "pjrt" => {
             let rt = RuntimeHandle::load(std::path::Path::new(&cfg.artifacts_dir))
                 .map_err(|e| format!("{e:#}"))?;
@@ -217,6 +234,80 @@ fn cmd_merge(f: &HashMap<String, String>) -> Result<(), String> {
         cfg.w,
         dt,
         (2 * n) as f64 / dt.as_secs_f64() / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_sortfile(f: &HashMap<String, String>) -> Result<(), String> {
+    let cfg = load_config(f)?;
+    let mut ext = cfg.external_config();
+    if let Some(mb) = f.get("budget-mb") {
+        let mb: usize = mb.parse().map_err(|_| "--budget-mb must be an integer".to_string())?;
+        ext.mem_budget_bytes = mb << 20;
+    }
+    if let Some(fan) = f.get("fan-in") {
+        ext.fan_in = fan.parse().map_err(|_| "--fan-in must be an integer".to_string())?;
+    }
+    ext.validate()?;
+    let input = PathBuf::from(
+        f.get("input").ok_or_else(|| "sortfile: --input <path> required".to_string())?,
+    );
+    let output = f
+        .get("output")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(format!("{}.sorted", input.display())));
+
+    if let Some(n) = f.get("gen") {
+        let n: usize = n.parse().map_err(|_| "--gen must be an integer".to_string())?;
+        let dist = dist_of(f)?;
+        let mut rng = Rng::new(get_usize(f, "seed", 42)? as u64);
+        let mut w = external::RawWriter::create(&input).map_err(|e| format!("{e:#}"))?;
+        let mut left = n;
+        while left > 0 {
+            let take = left.min(1 << 20);
+            let block = gen_u32(&mut rng, take, dist);
+            w.write_block(&block).map_err(|e| format!("{e:#}"))?;
+            left -= take;
+        }
+        w.finish().map_err(|e| format!("{e:#}"))?;
+        println!("generated {} u32 ({}) into {}", n, dist.name(), input.display());
+    }
+
+    let t = Instant::now();
+    let stats = external::sort_file(&input, &output, &ext).map_err(|e| format!("{e:#}"))?;
+    let dt = t.elapsed();
+
+    // Streaming verification — never loads the dataset whole.
+    let mut r = external::RawReader::open(&output).map_err(|e| format!("{e:#}"))?;
+    let mut buf: Vec<u32> = Vec::new();
+    let mut prev: Option<u32> = None;
+    loop {
+        buf.clear();
+        if r.read_block(&mut buf, 1 << 16).map_err(|e| format!("{e:#}"))? == 0 {
+            break;
+        }
+        if !is_sorted_desc(&buf) || prev.is_some_and(|p| buf[0] > p) {
+            return Err("output is not sorted!".into());
+        }
+        prev = buf.last().copied();
+    }
+
+    let mb = |bytes: u64| bytes as f64 / (1 << 20) as f64;
+    println!(
+        "externally sorted {} u32 ({:.1} MB) in {:?} — {:.1} M elem/s",
+        stats.elements,
+        mb(stats.elements * 4),
+        dt,
+        stats.elements as f64 / dt.as_secs_f64() / 1e6
+    );
+    println!(
+        "  budget {:.1} MB | {} runs spilled ({:.1} MB written, peak {:.1} MB live) | {} merge passes → {}",
+        mb(ext.mem_budget_bytes as u64),
+        stats.runs_spilled,
+        mb(stats.bytes_spilled),
+        mb(stats.peak_spill_bytes),
+        stats.merge_passes,
+        output.display()
     );
     Ok(())
 }

@@ -101,17 +101,31 @@ pub struct ServiceMetrics {
     pub elements_sorted: Counter,
     pub errors: Counter,
     pub latency: LatencyHistogram,
+    /// External (out-of-core) sort activity.
+    pub external_sorts: Counter,
+    /// Spilled runs written (initial + intermediate merge passes).
+    pub runs_spilled: Counter,
+    /// Bytes written to spill files.
+    pub bytes_spilled: Counter,
+    /// Merge passes executed over spilled data.
+    pub merge_passes: Counter,
 }
 
 impl ServiceMetrics {
+    /// One-line snapshot of every counter — the `stats` protocol reply.
     pub fn report(&self) -> String {
         format!(
-            "requests={} batches={} elements={} errors={} latency[{}]",
+            "requests={} batches={} elements={} errors={} latency[{}] \
+             external[sorts={} runs={} spilled_bytes={} passes={}]",
             self.requests.get(),
             self.batches.get(),
             self.elements_sorted.get(),
             self.errors.get(),
-            self.latency.snapshot()
+            self.latency.snapshot(),
+            self.external_sorts.get(),
+            self.runs_spilled.get(),
+            self.bytes_spilled.get(),
+            self.merge_passes.get(),
         )
     }
 }
@@ -152,6 +166,17 @@ mod tests {
         m.requests.inc();
         let s = m.report();
         assert!(s.contains("requests=1"));
+    }
+
+    #[test]
+    fn report_includes_spill_counters() {
+        let m = ServiceMetrics::default();
+        m.external_sorts.inc();
+        m.runs_spilled.add(7);
+        m.bytes_spilled.add(4096);
+        m.merge_passes.add(2);
+        let s = m.report();
+        assert!(s.contains("external[sorts=1 runs=7 spilled_bytes=4096 passes=2]"), "{s}");
     }
 
     #[test]

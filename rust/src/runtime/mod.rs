@@ -8,10 +8,15 @@
 //! HLO *text* is the interchange format (jax ≥ 0.5 emits 64-bit ids the
 //! crate's xla_extension 0.5.1 rejects in proto form).
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::{anyhow, bail, Result};
 
 /// One artifact as listed in `artifacts/manifest.tsv`.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -71,12 +76,14 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactSpec>> {
 }
 
 /// The loaded runtime: a PJRT CPU client plus compiled executables.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     exes: HashMap<String, xla::PjRtLoadedExecutable>,
     specs: HashMap<String, ArtifactSpec>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Load every artifact in `dir` (per its manifest) and compile.
     pub fn load(dir: &Path) -> Result<Self> {
@@ -230,6 +237,41 @@ mod tests {
     fn empty_manifest_is_empty() {
         assert!(parse_manifest("").unwrap().is_empty());
     }
+
+    #[test]
+    fn wrong_field_count_reports_line_number() {
+        // Line 1 is valid; line 2 has 6 fields. The error must name the
+        // offending line (1-based) and both the expected and actual count.
+        let text = "ok\tmerge2\tok.hlo.txt\t64\t8\t0\t0\nshort\tmerge2\tf\t1\t2\t3\n";
+        let err = format!("{:#}", parse_manifest(text).unwrap_err());
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("expected 7 fields"), "{err}");
+        assert!(err.contains("got 6"), "{err}");
+    }
+
+    #[test]
+    fn bad_number_reports_line_field_and_value() {
+        // Blank lines are skipped but still counted for the line number.
+        let text = "\na\tfull_sort\ta.hlo.txt\t12x\t8\t128\t0\n";
+        let err = format!("{:#}", parse_manifest(text).unwrap_err());
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("bad n"), "{err}");
+        assert!(err.contains("'12x'"), "{err}");
+
+        let text = "a\tbatched_sort\ta.hlo.txt\t128\t8\t16\t-3\n";
+        let err = format!("{:#}", parse_manifest(text).unwrap_err());
+        assert!(err.contains("line 1"), "{err}");
+        assert!(err.contains("bad batch"), "{err}");
+        assert!(err.contains("'-3'"), "{err}");
+    }
+
+    #[test]
+    fn unknown_kind_reports_kind_name() {
+        let text = "ok\tmerge2\tok.hlo.txt\t64\t8\t0\t0\n\
+                    bad\tquantum_sort\tb.hlo.txt\t64\t8\t0\t0\n";
+        let err = format!("{:#}", parse_manifest(text).unwrap_err());
+        assert!(err.contains("unknown artifact kind 'quantum_sort'"), "{err}");
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -240,8 +282,10 @@ mod tests {
 // coordinator talks to it through this cloneable channel handle —
 // the standard actor pattern for thread-affine resources.
 
+#[cfg(feature = "pjrt")]
 use std::sync::mpsc::{channel, Sender};
 
+#[cfg(feature = "pjrt")]
 enum Req {
     Merge2 {
         name: String,
@@ -272,11 +316,13 @@ enum Req {
 }
 
 /// Cloneable, Send handle to the executor thread owning the [`Runtime`].
+#[cfg(feature = "pjrt")]
 #[derive(Clone)]
 pub struct RuntimeHandle {
     tx: Sender<Req>,
 }
 
+#[cfg(feature = "pjrt")]
 impl RuntimeHandle {
     /// Spawn the executor thread and load all artifacts in `dir`.
     /// Returns once loading finished (or failed).
@@ -369,5 +415,62 @@ impl RuntimeHandle {
             .into_iter()
             .filter(|s| s.kind == kind && s.n >= n)
             .min_by_key(|s| s.n))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stub runtime — the offline default.
+//
+// The real runtime needs the external `xla` crate (feature `pjrt`),
+// which the offline image cannot provide. This stub exposes the same
+// surface with every entry point reporting the runtime as unavailable;
+// `load()` erroring means the service and CLI fall back to native-only
+// serving, which is exactly how a missing artifacts/ dir is handled.
+
+/// Cloneable handle matching the PJRT runtime surface; always reports
+/// the runtime as not compiled in (build with the `pjrt` feature).
+#[cfg(not(feature = "pjrt"))]
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    _priv: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl RuntimeHandle {
+    fn unavailable<T>() -> Result<T> {
+        bail!("pjrt runtime not compiled in (rebuild with --features pjrt and a vendored xla crate)")
+    }
+
+    /// Always errors: the `pjrt` feature is off in this build.
+    pub fn load(_dir: &Path) -> Result<Self> {
+        Self::unavailable()
+    }
+
+    pub fn merge2(&self, _name: &str, _a: Vec<f32>, _b: Vec<f32>) -> Result<Vec<f32>> {
+        Self::unavailable()
+    }
+
+    pub fn sort(&self, _name: &str, _x: Vec<f32>) -> Result<Vec<f32>> {
+        Self::unavailable()
+    }
+
+    pub fn sort_padded(&self, _x: Vec<f32>) -> Result<Vec<f32>> {
+        Self::unavailable()
+    }
+
+    pub fn batched_sort(&self, _name: &str, _rows: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        Self::unavailable()
+    }
+
+    pub fn specs(&self) -> Result<Vec<ArtifactSpec>> {
+        Self::unavailable()
+    }
+
+    pub fn platform(&self) -> Result<String> {
+        Self::unavailable()
+    }
+
+    pub fn best_for(&self, _kind: ArtifactKind, _n: usize) -> Result<Option<ArtifactSpec>> {
+        Self::unavailable()
     }
 }

@@ -1,0 +1,202 @@
+//! Integration: the out-of-core external sort — datasets several times
+//! the memory budget, every distribution, verified element-for-element
+//! against the std-sort baseline; plus the `sortfile` service command
+//! end-to-end over real TCP.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use flims::baselines::std_sort_desc;
+use flims::config::AppConfig;
+use flims::coordinator::{BatcherConfig, Router, Service};
+use flims::data::{gen_u32, Distribution};
+use flims::external::format::{read_raw, write_raw};
+use flims::external::{sort_file, sort_vec, ExternalConfig};
+use flims::key::is_sorted_desc;
+use flims::util::rng::Rng;
+
+fn test_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("flims-itext-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// 64 KiB budget → 16384-element runs; small enough that a ~1M-element
+/// dataset is ≥ 16× the budget while the test stays fast.
+fn tight_cfg(tmp: &Path) -> ExternalConfig {
+    ExternalConfig {
+        mem_budget_bytes: 64 << 10,
+        fan_in: 4,
+        tmp_dir: Some(tmp.to_path_buf()),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn sort_file_4x_budget_all_distributions() {
+    let dir = test_dir("dists");
+    let cfg = tight_cfg(&dir);
+    let mut rng = Rng::new(9001);
+    // ≥ 4× the 64 KiB budget: 262144 elements = 1 MiB per dataset.
+    let n = 1 << 18;
+    for dist in [
+        Distribution::Uniform,
+        Distribution::Zipf { s_x100: 120, n_ranks: 1 << 14 },
+        Distribution::DupHeavy { alphabet: 3 },
+        Distribution::Runs { run: 1000 }, // nearly sorted: long presorted runs
+        Distribution::SortedAsc,          // fully sorted, adversarial order
+    ] {
+        let data = gen_u32(&mut rng, n, dist);
+        let input = dir.join(format!("{}.u32", dist.name()));
+        let output = dir.join(format!("{}.sorted", dist.name()));
+        write_raw(&input, &data).unwrap();
+
+        let stats = sort_file(&input, &output, &cfg).unwrap();
+        assert_eq!(stats.elements, n as u64, "{dist:?}");
+        // 2^18 elements / 2^14-element runs = 16 initial runs; fan-in 4
+        // forces at least one intermediate pass.
+        assert!(stats.runs_spilled >= 16, "{dist:?}: {}", stats.runs_spilled);
+        assert!(stats.merge_passes >= 2, "{dist:?}: {}", stats.merge_passes);
+
+        let mut expect = data;
+        std_sort_desc(&mut expect);
+        assert_eq!(read_raw(&output).unwrap(), expect, "{dist:?}");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn spill_disk_stays_bounded_and_cleaned() {
+    let dir = test_dir("bounds");
+    let cfg = tight_cfg(&dir);
+    let mut rng = Rng::new(9002);
+    let n = 1 << 18;
+    let data = gen_u32(&mut rng, n, Distribution::Uniform);
+    let (out, stats) = sort_vec(&data, &cfg).unwrap();
+    assert!(is_sorted_desc(&out));
+
+    // Eager deletion keeps live spill near the dataset size (one extra
+    // in-flight merged run), never pass-count multiples of it.
+    let dataset_bytes = (n * 4) as u64;
+    assert!(
+        stats.peak_spill_bytes <= 2 * dataset_bytes + 4096,
+        "peak live spill {} vs dataset {}",
+        stats.peak_spill_bytes,
+        dataset_bytes
+    );
+    // Total written grows with passes (here: initial + 2 merge passes).
+    assert!(stats.bytes_spilled > stats.peak_spill_bytes);
+
+    // Everything is deleted afterwards.
+    let leftovers: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+    assert!(leftovers.is_empty(), "leaked spill files: {leftovers:?}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn extreme_fan_in_values() {
+    let dir = test_dir("fan");
+    let mut rng = Rng::new(9003);
+    let data = gen_u32(&mut rng, 100_000, Distribution::Uniform);
+    let mut expect = data.clone();
+    std_sort_desc(&mut expect);
+    for fan_in in [2usize, 3, 16, 64] {
+        let cfg = ExternalConfig {
+            mem_budget_bytes: 16 << 10, // 4096-element runs → 25 runs
+            fan_in,
+            tmp_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let (out, stats) = sort_vec(&data, &cfg).unwrap();
+        assert_eq!(out, expect, "fan_in={fan_in}");
+        if fan_in == 2 {
+            assert!(stats.merge_passes >= 5, "binary merge needs log2(25) passes");
+        }
+        if fan_in == 64 {
+            assert_eq!(stats.merge_passes, 1, "all 25 runs fit one tree");
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn sortfile_service_round_trip_over_tcp() {
+    let dir = test_dir("tcp");
+    let input = dir.join("req.u32");
+    let mut rng = Rng::new(9004);
+    let data = gen_u32(&mut rng, 200_000, Distribution::Uniform);
+    write_raw(&input, &data).unwrap();
+
+    // Service with a tight external budget so the request really spills.
+    let mut app = AppConfig::default();
+    app.external.mem_budget_bytes = 64 << 10;
+    app.external.tmp_dir = Some(dir.clone());
+    let router = Arc::new(Router::new(app, None));
+    let service = Arc::new(Service::new(
+        router,
+        BatcherConfig { max_batch: 4, window: Duration::from_micros(200) },
+    ));
+    let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap();
+    drop(probe);
+    let svc = service.clone();
+    let bind = addr.to_string();
+    std::thread::spawn(move || {
+        let _ = svc.serve(&bind);
+    });
+    std::thread::sleep(Duration::from_millis(80));
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    writeln!(conn, "sortfile external {}", input.display()).unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let resp = resp.trim();
+    let expect_path = format!("{}.sorted", input.display());
+    assert_eq!(resp, format!("ok 200000 {expect_path}"));
+
+    let mut expect = data;
+    std_sort_desc(&mut expect);
+    assert_eq!(read_raw(Path::new(&expect_path)).unwrap(), expect);
+
+    // The spill counters are visible over the protocol.
+    writeln!(conn, "stats").unwrap();
+    let mut stats_line = String::new();
+    reader.read_line(&mut stats_line).unwrap();
+    assert!(stats_line.contains("external[sorts=1"), "{stats_line}");
+    assert!(!stats_line.contains("runs=0"), "{stats_line}");
+
+    // Errors come back on the same connection, which stays usable.
+    writeln!(conn, "sortfile external {}/missing.u32", dir.display()).unwrap();
+    let mut err_line = String::new();
+    reader.read_line(&mut err_line).unwrap();
+    assert!(err_line.starts_with("err "), "{err_line}");
+    writeln!(conn, "sort native 3 1 2").unwrap();
+    let mut ok_line = String::new();
+    reader.read_line(&mut ok_line).unwrap();
+    assert_eq!(ok_line.trim(), "ok 3 2 1");
+
+    service.shutdown();
+    let _ = TcpStream::connect(addr);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn external_backend_through_sort_command() {
+    let mut app = AppConfig::default();
+    app.external.mem_budget_bytes = 4096; // 1024-element runs
+    let router = Arc::new(Router::new(app, None));
+    let service = Arc::new(Service::new(router, BatcherConfig::default()));
+    // 3000 values: 3 runs through the spill path, answered inline.
+    let mut rng = Rng::new(9005);
+    let vals: Vec<String> = (0..3000).map(|_| rng.below(1 << 20).to_string()).collect();
+    let resp = service.handle_line(&format!("sort external {}", vals.join(" ")));
+    assert!(resp.starts_with("ok "), "{}", &resp[..40.min(resp.len())]);
+    let nums: Vec<u32> = resp[3..].split_whitespace().map(|t| t.parse().unwrap()).collect();
+    assert_eq!(nums.len(), 3000);
+    assert!(is_sorted_desc(&nums));
+    assert_eq!(service.router.metrics.external_sorts.get(), 1);
+}

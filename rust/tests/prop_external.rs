@@ -1,0 +1,86 @@
+//! Property tests over the external-sort subsystem (in-tree prop
+//! harness): arbitrary sizes, key ranges, budgets and fan-ins must all
+//! produce exactly the std-sorted multiset, via both the in-memory
+//! round-trip (`sort_vec`) and the on-disk path (`sort_file`).
+
+use std::path::PathBuf;
+
+use flims::external::{sort_file, sort_vec, ExternalConfig};
+use flims::external::format::{read_raw, write_raw};
+use flims::key::is_sorted_desc;
+use flims::util::prop::{check, Config};
+use flims::util::rng::Rng;
+
+fn rand_cfg(rng: &mut Rng) -> ExternalConfig {
+    ExternalConfig {
+        // 4–16 KiB budgets → 1024–4096-element runs, so even small
+        // cases spill several runs.
+        mem_budget_bytes: 4096 << rng.range(0, 3),
+        fan_in: 2 + rng.range(0, 5),
+        w: 1 << (2 + rng.range(0, 4)), // 4..32
+        chunk: 128,
+        tmp_dir: None,
+        disk_budget_bytes: None,
+    }
+}
+
+fn gen_data(rng: &mut Rng, size: usize) -> Vec<u32> {
+    // size ramps to 256 via the harness; scale to a few runs' worth.
+    let n = size * 24 + rng.range(0, 97);
+    let hi = [2u64, 16, 1 << 20, u32::MAX as u64][rng.range(0, 4)];
+    (0..n).map(|_| rng.below(hi) as u32).collect()
+}
+
+#[test]
+fn prop_sort_vec_matches_std() {
+    check(
+        "external: sort_vec == std",
+        Config { cases: 60, max_size: 256, ..Default::default() },
+        |rng, size| {
+            let cfg = rand_cfg(rng);
+            let data = gen_data(rng, size);
+            let (out, stats) = sort_vec(&data, &cfg).map_err(|e| format!("{e:#}"))?;
+            if !is_sorted_desc(&out) {
+                return Err(format!("not sorted (n={}, cfg={cfg:?})", data.len()));
+            }
+            let mut expect = data.clone();
+            expect.sort_unstable_by(|a, b| b.cmp(a));
+            if out != expect {
+                return Err(format!("wrong multiset (n={}, cfg={cfg:?})", data.len()));
+            }
+            if stats.elements != data.len() as u64 {
+                return Err(format!("stats.elements {} != {}", stats.elements, data.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sort_file_round_trips() {
+    let dir = std::env::temp_dir().join(format!("flims-propext-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let input: PathBuf = dir.join("in.u32");
+    let output: PathBuf = dir.join("out.u32");
+    check(
+        "external: sort_file == std",
+        Config { cases: 25, max_size: 200, ..Default::default() },
+        |rng, size| {
+            let cfg = rand_cfg(rng);
+            let data = gen_data(rng, size);
+            write_raw(&input, &data).map_err(|e| format!("{e:#}"))?;
+            let stats = sort_file(&input, &output, &cfg).map_err(|e| format!("{e:#}"))?;
+            let out = read_raw(&output).map_err(|e| format!("{e:#}"))?;
+            let mut expect = data.clone();
+            expect.sort_unstable_by(|a, b| b.cmp(a));
+            if out != expect {
+                return Err(format!("file round-trip mismatch (n={})", data.len()));
+            }
+            if stats.merge_passes == 0 && !data.is_empty() {
+                return Err("no merge pass on nonempty input".into());
+            }
+            Ok(())
+        },
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,220 @@
+//! Offline in-tree stand-in for the `anyhow` crate.
+//!
+//! The build image has no registry access, so this shim provides the
+//! subset of anyhow the workspace actually uses: [`Error`], [`Result`],
+//! the [`anyhow!`] / [`bail!`] macros, and the [`Context`] extension
+//! trait for `Result` and `Option`. Semantics match the real crate where
+//! it matters here:
+//!
+//! * `Error` does **not** implement `std::error::Error`, so the blanket
+//!   `From<E: std::error::Error>` conversion coexists with the reflexive
+//!   `From<Error>` used by `?`.
+//! * `Display` shows the outermost message; `{:#}` (alternate) shows the
+//!   whole context chain `outer: ...: root`, like anyhow's `{:#}`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: a root message (or wrapped `std::error::Error`) plus
+/// a stack of human-readable context layers.
+pub struct Error {
+    /// Rendered root cause.
+    msg: String,
+    /// The wrapped source error, when constructed via `From`.
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+    /// Context layers, innermost first (pushed outward).
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None, context: Vec::new() }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.context.push(context.to_string());
+        self
+    }
+
+    /// The root-cause message.
+    pub fn root_cause_msg(&self) -> &str {
+        &self.msg
+    }
+
+    /// Reference to the wrapped source error, if any.
+    pub fn source(&self) -> Option<&(dyn StdError + Send + Sync + 'static)> {
+        self.source.as_deref()
+    }
+
+    fn write_chain(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for ctx in self.context.iter().rev() {
+            write!(f, "{ctx}: ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            self.write_chain(f)
+        } else {
+            match self.context.last() {
+                Some(outer) => write!(f, "{outer}"),
+                None => write!(f, "{}", self.msg),
+            }
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.write_chain(f)
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string(), source: Some(Box::new(e)), context: Vec::new() }
+    }
+}
+
+/// Context extension for `Result` and `Option`, mirroring anyhow's.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// `return Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let n = 3;
+        let e = anyhow!("value {} and {n}", 7);
+        assert_eq!(e.to_string(), "value 7 and 3");
+    }
+
+    #[test]
+    fn from_std_error() {
+        let e: Error = io_err().into();
+        assert!(e.to_string().contains("gone"));
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn context_chain_renders_alternate() {
+        let e: Result<(), Error> = Err(io_err().into());
+        let e = e.context("reading file").unwrap_err();
+        assert_eq!(format!("{e}"), "reading file");
+        assert_eq!(format!("{e:#}"), "reading file: gone");
+    }
+
+    #[test]
+    fn with_context_on_option() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| "missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+        let v: Option<u32> = Some(5);
+        assert_eq!(v.context("unused").unwrap(), 5);
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("boom {}", 1);
+            }
+            Ok(9)
+        }
+        assert_eq!(f(false).unwrap(), 9);
+        assert_eq!(f(true).unwrap_err().to_string(), "boom 1");
+    }
+
+    #[test]
+    fn question_mark_interop() {
+        fn io() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        fn nested() -> Result<()> {
+            io()?;
+            Ok(())
+        }
+        assert!(nested().is_err());
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}
