@@ -1,11 +1,17 @@
 //! External-sort bench: memory budget vs. throughput on a fixed
-//! disk-resident dataset, plus the in-memory std-sort reference (load →
-//! sort → store) as the upper bound.
+//! disk-resident dataset, the parallel-vs-serial worker sweep, and the
+//! in-memory std-sort reference (load → sort → store) as the upper bound.
 //!
-//! Smaller budgets mean more, shorter runs and (below
-//! dataset/budget > fan_in) extra merge passes — this sweep shows the
-//! throughput cliff each extra pass costs and where the FLiMS merge
-//! trees hold the line.
+//! Part 1 sweeps the budget: smaller budgets mean more, shorter runs and
+//! (below dataset/budget > fan_in) extra merge passes — the throughput
+//! cliff each extra pass costs, and where the FLiMS merge trees hold the
+//! line.
+//!
+//! Part 2 fixes a budget at dataset/16 (well past the ≥ 4× spill regime)
+//! and sweeps the worker count with prefetch on and off: phase-1 chunk
+//! sorts fan out over the pool, phase-2 group merges run concurrently,
+//! and double-buffered leaves overlap disk reads with merging. The
+//! parallel rows should beat `threads = 1` from 2 workers up.
 //!
 //! Run: `cargo bench --bench external_sort`
 
@@ -29,7 +35,7 @@ fn main() {
     write_raw(&input, &data).unwrap();
     let dataset_mb = (n * 4) as f64 / (1 << 20) as f64;
 
-    println!("== external sort: {n} u32 ({dataset_mb:.0} MiB), fan-in 8 ==\n");
+    println!("== external sort: {n} u32 ({dataset_mb:.0} MiB), fan-in 8, serial ==\n");
     println!(
         "{:<14} {:>10} {:>8} {:>12} {:>14}",
         "budget", "M elem/s", "runs", "merge passes", "spilled MiB"
@@ -43,7 +49,7 @@ fn main() {
             ..Default::default()
         };
         let t = Instant::now();
-        let stats = sort_file(&input, &output, &cfg).unwrap();
+        let stats = sort_file::<u32>(&input, &output, &cfg).unwrap();
         let dt = t.elapsed();
         assert_eq!(stats.elements, n as u64);
         println!(
@@ -56,19 +62,55 @@ fn main() {
         );
     }
 
+    // Worker sweep at dataset/16 budget (16 initial runs — ≥ 4× the run
+    // budget as the acceptance regime demands), prefetch on and off.
+    let budget = (n * 4) / 16;
+    println!(
+        "\n== parallel vs serial: budget {} KiB (dataset/16), fan-in 8 ==\n",
+        budget >> 10
+    );
+    println!(
+        "{:<22} {:>10} {:>10} {:>12} {:>12}",
+        "workers", "M elem/s", "speedup", "phase1 ms", "phase2 ms"
+    );
+    let mut serial_rate = 0.0f64;
+    for (threads, prefetch) in [(1usize, 0usize), (1, 2), (2, 2), (4, 2), (8, 2)] {
+        let cfg = ExternalConfig {
+            mem_budget_bytes: budget,
+            fan_in: 8,
+            threads,
+            prefetch_blocks: prefetch,
+            tmp_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let t = Instant::now();
+        let stats = sort_file::<u32>(&input, &output, &cfg).unwrap();
+        let dt = t.elapsed();
+        assert_eq!(stats.elements, n as u64);
+        let rate = n as f64 / dt.as_secs_f64() / 1e6;
+        if threads == 1 && prefetch == 0 {
+            serial_rate = rate;
+        }
+        println!(
+            "{:<22} {:>10.1} {:>9.2}x {:>12.1} {:>12.1}",
+            format!("threads={threads} prefetch={prefetch}"),
+            rate,
+            rate / serial_rate,
+            stats.phase1_us as f64 / 1000.0,
+            stats.phase2_us as f64 / 1000.0,
+        );
+    }
+
     // Reference: load whole file, std-sort in RAM, write back.
     let t = Instant::now();
-    let mut all = read_raw(&input).unwrap();
+    let mut all = read_raw::<u32>(&input).unwrap();
     std_sort_desc(&mut all);
     write_raw(&output, &all).unwrap();
     let dt = t.elapsed();
     println!(
-        "{:<14} {:>10.1} {:>8} {:>12} {:>14}",
+        "\n{:<14} {:>10.1} M elem/s",
         "std (in-RAM)",
         n as f64 / dt.as_secs_f64() / 1e6,
-        "-",
-        "-",
-        "-"
     );
 
     std::fs::remove_dir_all(&dir).unwrap();

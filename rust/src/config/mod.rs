@@ -6,7 +6,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::external::ExternalConfig;
+use crate::external::{Dtype, ExternalConfig};
 
 /// Parsed configuration: section → key → raw value string.
 #[derive(Clone, Debug, Default)]
@@ -157,6 +157,15 @@ impl AppConfig {
         if let Some(v) = raw.get_usize("external", "disk_budget_mb")? {
             self.external.disk_budget_bytes = Some((v as u64) << 20);
         }
+        if let Some(v) = raw.get_usize("external", "threads")? {
+            self.external.threads = v;
+        }
+        if let Some(v) = raw.get_usize("external", "prefetch_blocks")? {
+            self.external.prefetch_blocks = v;
+        }
+        if let Some(v) = raw.get("external", "dtype") {
+            self.external.dtype = Dtype::parse(v)?;
+        }
         self.validate()
     }
 
@@ -269,7 +278,8 @@ batch_max = 16
         let raw = RawConfig::parse(
             "[engine]\nw = 32\nchunk = 256\n\
              [external]\nmem_budget_mb = 16\nfan_in = 4\n\
-             tmp_dir = \"/tmp/spills\"\ndisk_budget_mb = 512\n",
+             tmp_dir = \"/tmp/spills\"\ndisk_budget_mb = 512\n\
+             threads = 4\nprefetch_blocks = 3\ndtype = \"kv\"\n",
         )
         .unwrap();
         let mut cfg = AppConfig::default();
@@ -279,9 +289,20 @@ batch_max = 16
         assert_eq!(ext.fan_in, 4);
         assert_eq!(ext.tmp_dir, Some(std::path::PathBuf::from("/tmp/spills")));
         assert_eq!(ext.disk_budget_bytes, Some(512 << 20));
+        assert_eq!(ext.threads, 4);
+        assert_eq!(ext.prefetch_blocks, 3);
+        assert_eq!(ext.dtype, Dtype::Kv);
         // The engine's lane/chunk tuning flows into the external sort.
         assert_eq!(ext.w, 32);
         assert_eq!(ext.chunk, 256);
+    }
+
+    #[test]
+    fn external_defaults_are_serial_u32() {
+        let cfg = AppConfig::default();
+        assert_eq!(cfg.external.threads, 1);
+        assert_eq!(cfg.external.prefetch_blocks, 2);
+        assert_eq!(cfg.external.dtype, Dtype::U32);
     }
 
     #[test]
@@ -290,6 +311,13 @@ batch_max = 16
         let mut cfg = AppConfig::default();
         assert!(cfg.apply(&raw).is_err());
         let raw = RawConfig::parse("[external]\nmem_budget_mb = banana\n").unwrap();
+        let mut cfg = AppConfig::default();
+        assert!(cfg.apply(&raw).is_err());
+        let raw = RawConfig::parse("[external]\ndtype = \"f64\"\n").unwrap();
+        let mut cfg = AppConfig::default();
+        let err = cfg.apply(&raw).unwrap_err();
+        assert!(err.contains("unknown dtype"), "{err}");
+        let raw = RawConfig::parse("[external]\nthreads = 5000\n").unwrap();
         let mut cfg = AppConfig::default();
         assert!(cfg.apply(&raw).is_err());
     }

@@ -14,7 +14,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use crate::config::AppConfig;
-use crate::external::{self, SpillStats};
+use crate::external::{self, Dtype, SpillStats};
 use crate::flims::parallel::{par_sort_desc, ParSortConfig};
 use crate::flims::sort::{sort_desc, SortConfig};
 use crate::flims::lanes::merge_desc_fast;
@@ -103,16 +103,23 @@ impl Router {
         Ok(out)
     }
 
-    /// Sort the raw-u32 dataset at `input` with the external pipeline,
-    /// writing `<input>.sorted` (descending). Memory stays within the
-    /// configured budget however large the file is.
-    pub fn sort_file_external(&self, input: &Path) -> Result<(PathBuf, SpillStats)> {
+    /// Sort the raw dataset at `input` with the external pipeline,
+    /// writing `<input>.sorted` (descending). `dtype` selects the record
+    /// type (`None` = the `[external] dtype` config default). Memory
+    /// stays within the configured budget however large the file is.
+    pub fn sort_file_external(
+        &self,
+        input: &Path,
+        dtype: Option<Dtype>,
+    ) -> Result<(PathBuf, SpillStats)> {
         self.metrics.requests.inc();
+        let dtype = dtype.unwrap_or(self.cfg.external.dtype);
         let t = std::time::Instant::now();
         let mut name = input.as_os_str().to_owned();
         name.push(".sorted");
         let output = PathBuf::from(name);
-        let stats = external::sort_file(input, &output, &self.cfg.external_config())?;
+        let stats =
+            external::sort_file_dtype(input, &output, &self.cfg.external_config(), dtype)?;
         self.metrics.elements_sorted.add(stats.elements);
         self.record_spill(&stats);
         self.metrics.latency.observe(t.elapsed());
@@ -124,6 +131,10 @@ impl Router {
         self.metrics.runs_spilled.add(stats.runs_spilled);
         self.metrics.bytes_spilled.add(stats.bytes_spilled);
         self.metrics.merge_passes.add(stats.merge_passes);
+        self.metrics.phase1_us.add(stats.phase1_us);
+        self.metrics.phase2_us.add(stats.phase2_us);
+        self.metrics.prefetch_hits.add(stats.prefetch_hits);
+        self.metrics.prefetch_misses.add(stats.prefetch_misses);
     }
 
     /// Sort f32 values descending on the requested backend.
@@ -295,13 +306,39 @@ mod tests {
         let mut cfg = AppConfig::default();
         cfg.external.mem_budget_bytes = 4096;
         let r = Router::new(cfg, None);
-        let (out_path, stats) = r.sort_file_external(&input).unwrap();
+        let (out_path, stats) = r.sort_file_external(&input, None).unwrap();
         assert_eq!(out_path, dir.join("data.u32.sorted"));
         assert_eq!(stats.elements, 5000);
 
         let mut expect = v;
         expect.sort_unstable_by(|a, b| b.cmp(a));
-        assert_eq!(crate::external::format::read_raw(&out_path).unwrap(), expect);
+        assert_eq!(crate::external::format::read_raw::<u32>(&out_path).unwrap(), expect);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sort_file_external_kv_dtype() {
+        use crate::key::Kv;
+        let dir = std::env::temp_dir().join(format!("flims-router-kv-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("data.kv");
+        let mut rng = Rng::new(305);
+        let recs: Vec<Kv> = (0..4000)
+            .map(|i| Kv::new(rng.below(16) as u32, i as u32))
+            .collect();
+        crate::external::format::write_raw(&input, &recs).unwrap();
+
+        let mut cfg = AppConfig::default();
+        cfg.external.mem_budget_bytes = 8192; // 1024-record Kv runs
+        let r = Router::new(cfg, None);
+        let (out_path, stats) =
+            r.sort_file_external(&input, Some(crate::external::Dtype::Kv)).unwrap();
+        assert_eq!(stats.elements, 4000);
+
+        // Stable: equal keys keep input (payload) order.
+        let mut expect = recs;
+        expect.sort_by(|a, b| b.key.cmp(&a.key));
+        assert_eq!(crate::external::format::read_raw::<Kv>(&out_path).unwrap(), expect);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -9,8 +9,14 @@
 //! sortf <backend> <f1> <f2> …   →  ok <sorted descending>   (f32)
 //! batch <f1> <f2> …             →  ok <sorted>  (goes through the batcher)
 //! merge <a...> | <b...>         →  ok <merged>  (desc-sorted u32 inputs)
-//! sortfile external <path>      →  ok <n> <output-path>  (raw-u32 file,
-//!                                   sorted descending to <path>.sorted)
+//! sortfile external <path> [dtype=<d>]
+//!                               →  ok <n> <output-path>  (raw record file,
+//!                                   sorted descending to <path>.sorted;
+//!                                   d = u32|u64|kv|kv64|f32, default from
+//!                                   `[external] dtype`; only a trailing
+//!                                   `dtype=`-prefixed token is treated as
+//!                                   an option, so paths containing spaces
+//!                                   keep working)
 //! stats                         →  ok <metrics summary>
 //! quit                          →  (closes the connection)
 //! ```
@@ -118,18 +124,30 @@ impl Service {
                 Ok(format!("ok {}", join(&out)))
             }
             "sortfile" => {
-                let (backend, path) = rest
+                let (backend, rest) = rest
                     .split_once(' ')
-                    .ok_or_else(|| anyhow!("usage: sortfile external <path>"))?;
+                    .ok_or_else(|| anyhow!("usage: sortfile external <path> [dtype=<d>]"))?;
                 let backend = Backend::parse(backend)?;
                 if backend != Backend::External {
                     bail!("sortfile requires the 'external' backend");
                 }
-                let path = path.trim();
-                if path.is_empty() {
-                    bail!("usage: sortfile external <path>");
+                let rest = rest.trim();
+                if rest.is_empty() {
+                    bail!("usage: sortfile external <path> [dtype=<d>]");
                 }
-                let (output, stats) = self.router.sort_file_external(Path::new(path))?;
+                // Only an explicit trailing `dtype=<d>` token is an
+                // option — a bad value there is a loud error, and paths
+                // containing spaces are untouched (PR 1 grammar).
+                let (path, dtype) = match rest.rsplit_once(' ') {
+                    Some((head, tail)) if tail.trim().starts_with("dtype=") => {
+                        let name = &tail.trim()["dtype=".len()..];
+                        let d = crate::external::Dtype::parse(name)
+                            .map_err(|e| anyhow!("{e}"))?;
+                        (head.trim(), Some(d))
+                    }
+                    _ => (rest, None),
+                };
+                let (output, stats) = self.router.sort_file_external(Path::new(path), dtype)?;
                 Ok(format!("ok {} {}", stats.elements, output.display()))
             }
             "stats" => Ok(format!("ok {}", self.router.metrics.report())),
@@ -315,11 +333,41 @@ mod tests {
 
         let mut expect = data;
         expect.sort_unstable_by(|a, b| b.cmp(a));
-        assert_eq!(read_raw(Path::new(&expect_path)).unwrap(), expect);
+        assert_eq!(read_raw::<u32>(Path::new(&expect_path)).unwrap(), expect);
 
         // Missing file: still a one-line err, connection-safe.
         let resp = s.handle_line("sortfile external /nonexistent/nope.u32");
         assert!(resp.starts_with("err "), "{resp}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sortfile_with_dtype_argument() {
+        use crate::external::format::{read_raw, write_raw};
+        use crate::key::Kv;
+        let dir = std::env::temp_dir().join(format!("flims-svc-dtype-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("req.kv");
+        let recs: Vec<Kv> = (0..2000).map(|i| Kv::new(i % 5, i)).collect();
+        write_raw(&input, &recs).unwrap();
+
+        let s = svc();
+        let resp = s.handle_line(&format!("sortfile external {} dtype=kv", input.display()));
+        let expect_path = format!("{}.sorted", input.display());
+        assert_eq!(resp, format!("ok 2000 {expect_path}"));
+        let mut expect = recs;
+        expect.sort_by(|a, b| b.key.cmp(&a.key)); // stable: ties keep order
+        assert_eq!(read_raw::<Kv>(Path::new(&expect_path)).unwrap(), expect);
+
+        // The same file read as the default dtype (u32) still sorts —
+        // it is just 4000 u32 words — so dtype actually changes behavior.
+        let resp = s.handle_line(&format!("sortfile external {} dtype=u32", input.display()));
+        assert!(resp.starts_with("ok 4000 "), "{resp}");
+
+        // A bad dtype value is a loud one-line error, not a path guess.
+        let resp = s.handle_line(&format!("sortfile external {} dtype=f64", input.display()));
+        assert!(resp.starts_with("err "), "{resp}");
+        assert!(resp.contains("unknown dtype"), "{resp}");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

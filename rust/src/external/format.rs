@@ -1,27 +1,206 @@
-//! On-disk formats for the external-sort subsystem.
+//! On-disk formats for the external-sort subsystem, generic over the
+//! record type.
 //!
-//! Two layouts, both little-endian u32 payloads with buffered I/O:
+//! Every supported dataset type implements [`ExtItem`]: a fixed-width
+//! little-endian wire encoding plus the in-memory sort used for phase-1
+//! runs (stable for payload records — the paper's §6 tie-record
+//! guarantee holds out-of-core, not just in RAM). Two layouts share the
+//! encoding:
 //!
 //! * **Run files** ([`RunWriter`] / [`RunReader`]) — length-prefixed:
 //!   a 4-byte magic (`FLR1`) and a u64 element count, then the payload.
 //!   The count is patched into the header on [`RunWriter::finish`], so a
 //!   truncated or crashed spill is detectable on open.
-//! * **Raw datasets** ([`RawReader`] / [`RawWriter`]) — headerless u32
-//!   little-endian, the input/output format of `sort_file` (and what the
-//!   `sortfile` CLI/service commands operate on).
+//! * **Raw datasets** ([`RawReader`] / [`RawWriter`]) — headerless
+//!   little-endian records, the input/output format of `sort_file` (and
+//!   what the `sortfile` CLI/service commands operate on). For `f32`
+//!   datasets the wire format is plain IEEE-754 bits; the in-memory
+//!   representation is the order-preserving [`F32Key`].
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::marker::PhantomData;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
+
+use crate::flims::lanes::merge_desc_fast;
+use crate::flims::sort::{sort_desc, SortConfig};
+use crate::flims::stable::{merge_stable_into, sort_stable_desc};
+use crate::key::{F32Key, Item, Kv, Kv64};
 
 /// Magic prefix of a spilled run file.
 pub const RUN_MAGIC: [u8; 4] = *b"FLR1";
 /// Header size: magic + u64 element count.
 pub const RUN_HEADER_BYTES: u64 = 12;
-/// Bytes per element (u32 keys).
-pub const ELEM_BYTES: usize = 4;
+
+/// Dataset element type selector — the `dtype` argument of `sortfile`
+/// and the `[external] dtype` config knob, mapping onto the [`ExtItem`]
+/// implementations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    U32,
+    U64,
+    Kv,
+    Kv64,
+    F32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        Ok(match s {
+            "u32" => Dtype::U32,
+            "u64" => Dtype::U64,
+            "kv" => Dtype::Kv,
+            "kv64" => Dtype::Kv64,
+            "f32" => Dtype::F32,
+            other => {
+                return Err(format!(
+                    "unknown dtype '{other}' (expected u32|u64|kv|kv64|f32)"
+                ))
+            }
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::U32 => "u32",
+            Dtype::U64 => "u64",
+            Dtype::Kv => "kv",
+            Dtype::Kv64 => "kv64",
+            Dtype::F32 => "f32",
+        }
+    }
+
+    /// Bytes per record on disk.
+    pub fn wire_bytes(self) -> usize {
+        match self {
+            Dtype::U32 | Dtype::F32 => 4,
+            Dtype::U64 | Dtype::Kv => 8,
+            Dtype::Kv64 => 16,
+        }
+    }
+}
+
+/// A record the external sort can spill, merge, and stream: an [`Item`]
+/// with a fixed-width little-endian wire format, a phase-1 in-memory
+/// sort, and the 2-way merge the tree nodes run. Both `sort_run` and
+/// `merge_into` must be **stable** (A/earlier-input wins ties) for types
+/// with payloads distinct from their key (`Kv`, `Kv64`); plain keys use
+/// the faster untagged FLiMS lanes because equal keys are
+/// indistinguishable, so the descending value sequence is unique.
+pub trait ExtItem: Item {
+    /// Bytes per record on disk.
+    const WIRE_BYTES: usize;
+    /// The dtype tag this implementation answers to.
+    const DTYPE: Dtype;
+    /// Encode into exactly `WIRE_BYTES` bytes.
+    fn encode(self, out: &mut [u8]);
+    /// Decode from exactly `WIRE_BYTES` bytes.
+    fn decode(b: &[u8]) -> Self;
+    /// Sort a phase-1 run descending in memory.
+    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig);
+    /// Merge two descending-sorted slices, appending to `out` — the
+    /// per-block merge of every tree node.
+    fn merge_into(a: &[Self], b: &[Self], w: usize, out: &mut Vec<Self>);
+}
+
+impl ExtItem for u32 {
+    const WIRE_BYTES: usize = 4;
+    const DTYPE: Dtype = Dtype::U32;
+    fn encode(self, out: &mut [u8]) {
+        out.copy_from_slice(&self.to_le_bytes());
+    }
+    fn decode(b: &[u8]) -> Self {
+        u32::from_le_bytes(b.try_into().expect("4-byte record"))
+    }
+    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig) {
+        sort_desc(buf, cfg);
+    }
+    fn merge_into(a: &[Self], b: &[Self], w: usize, out: &mut Vec<Self>) {
+        merge_desc_fast(a, b, w, out);
+    }
+}
+
+impl ExtItem for u64 {
+    const WIRE_BYTES: usize = 8;
+    const DTYPE: Dtype = Dtype::U64;
+    fn encode(self, out: &mut [u8]) {
+        out.copy_from_slice(&self.to_le_bytes());
+    }
+    fn decode(b: &[u8]) -> Self {
+        u64::from_le_bytes(b.try_into().expect("8-byte record"))
+    }
+    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig) {
+        sort_desc(buf, cfg);
+    }
+    fn merge_into(a: &[Self], b: &[Self], w: usize, out: &mut Vec<Self>) {
+        merge_desc_fast(a, b, w, out);
+    }
+}
+
+impl ExtItem for F32Key {
+    const WIRE_BYTES: usize = 4;
+    const DTYPE: Dtype = Dtype::F32;
+    fn encode(self, out: &mut [u8]) {
+        // On disk: the plain IEEE-754 bits, so datasets interoperate
+        // with anything that writes little-endian f32.
+        out.copy_from_slice(&self.to_f32().to_bits().to_le_bytes());
+    }
+    fn decode(b: &[u8]) -> Self {
+        F32Key::from_f32(f32::from_bits(u32::from_le_bytes(
+            b.try_into().expect("4-byte record"),
+        )))
+    }
+    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig) {
+        sort_desc(buf, cfg);
+    }
+    fn merge_into(a: &[Self], b: &[Self], w: usize, out: &mut Vec<Self>) {
+        merge_desc_fast(a, b, w, out);
+    }
+}
+
+impl ExtItem for Kv {
+    const WIRE_BYTES: usize = 8;
+    const DTYPE: Dtype = Dtype::Kv;
+    fn encode(self, out: &mut [u8]) {
+        out[..4].copy_from_slice(&self.key.to_le_bytes());
+        out[4..].copy_from_slice(&self.val.to_le_bytes());
+    }
+    fn decode(b: &[u8]) -> Self {
+        Kv {
+            key: u32::from_le_bytes(b[..4].try_into().expect("8-byte record")),
+            val: u32::from_le_bytes(b[4..].try_into().expect("8-byte record")),
+        }
+    }
+    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig) {
+        sort_stable_desc(buf, cfg);
+    }
+    fn merge_into(a: &[Self], b: &[Self], w: usize, out: &mut Vec<Self>) {
+        merge_stable_into(a, b, w, out);
+    }
+}
+
+impl ExtItem for Kv64 {
+    const WIRE_BYTES: usize = 16;
+    const DTYPE: Dtype = Dtype::Kv64;
+    fn encode(self, out: &mut [u8]) {
+        out[..8].copy_from_slice(&self.key.to_le_bytes());
+        out[8..].copy_from_slice(&self.val.to_le_bytes());
+    }
+    fn decode(b: &[u8]) -> Self {
+        Kv64 {
+            key: u64::from_le_bytes(b[..8].try_into().expect("16-byte record")),
+            val: u64::from_le_bytes(b[8..].try_into().expect("16-byte record")),
+        }
+    }
+    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig) {
+        sort_stable_desc(buf, cfg);
+    }
+    fn merge_into(a: &[Self], b: &[Self], w: usize, out: &mut Vec<Self>) {
+        merge_stable_into(a, b, w, out);
+    }
+}
 
 /// A finished spilled run: its path and sizes, as tracked by the
 /// `SpillManager`.
@@ -34,15 +213,46 @@ pub struct RunFile {
     pub bytes: u64,
 }
 
+fn encode_block<T: ExtItem>(xs: &[T], byte_buf: &mut Vec<u8>) {
+    // resize without clear(): only growth is zero-filled, so the
+    // steady-state (same-sized blocks) never memsets before encoding.
+    byte_buf.resize(xs.len() * T::WIRE_BYTES, 0);
+    for (x, chunk) in xs.iter().zip(byte_buf.chunks_exact_mut(T::WIRE_BYTES)) {
+        x.encode(chunk);
+    }
+}
+
+fn read_record_block<T: ExtItem>(
+    inp: &mut BufReader<File>,
+    remaining: &mut u64,
+    byte_buf: &mut Vec<u8>,
+    out: &mut Vec<T>,
+    max: usize,
+) -> Result<usize> {
+    let take = (*remaining).min(max as u64) as usize;
+    if take == 0 {
+        return Ok(0);
+    }
+    byte_buf.resize(take * T::WIRE_BYTES, 0);
+    inp.read_exact(byte_buf)?;
+    out.reserve(take);
+    for c in byte_buf.chunks_exact(T::WIRE_BYTES) {
+        out.push(T::decode(c));
+    }
+    *remaining -= take as u64;
+    Ok(take)
+}
+
 /// Streaming writer for one run file.
-pub struct RunWriter {
+pub struct RunWriter<T: ExtItem> {
     out: BufWriter<File>,
     path: PathBuf,
     count: u64,
     byte_buf: Vec<u8>,
+    _elem: PhantomData<T>,
 }
 
-impl RunWriter {
+impl<T: ExtItem> RunWriter<T> {
     /// Create `path`, writing a header with a zero count placeholder.
     pub fn create(path: &Path) -> Result<Self> {
         let f = File::create(path)
@@ -50,16 +260,23 @@ impl RunWriter {
         let mut out = BufWriter::new(f);
         out.write_all(&RUN_MAGIC)?;
         out.write_all(&0u64.to_le_bytes())?;
-        Ok(RunWriter { out, path: path.to_path_buf(), count: 0, byte_buf: Vec::new() })
+        Ok(RunWriter {
+            out,
+            path: path.to_path_buf(),
+            count: 0,
+            byte_buf: Vec::new(),
+            _elem: PhantomData,
+        })
+    }
+
+    /// The file this writer is producing.
+    pub fn path(&self) -> &Path {
+        &self.path
     }
 
     /// Append a block of elements (need not be the whole run).
-    pub fn write_block(&mut self, xs: &[u32]) -> Result<()> {
-        self.byte_buf.clear();
-        self.byte_buf.reserve(xs.len() * ELEM_BYTES);
-        for &x in xs {
-            self.byte_buf.extend_from_slice(&x.to_le_bytes());
-        }
+    pub fn write_block(&mut self, xs: &[T]) -> Result<()> {
+        encode_block(xs, &mut self.byte_buf);
         self.out.write_all(&self.byte_buf)?;
         self.count += xs.len() as u64;
         Ok(())
@@ -73,7 +290,7 @@ impl RunWriter {
         f.seek(SeekFrom::Start(RUN_MAGIC.len() as u64))?;
         f.write_all(&self.count.to_le_bytes())?;
         Ok(RunFile {
-            bytes: RUN_HEADER_BYTES + self.count * ELEM_BYTES as u64,
+            bytes: RUN_HEADER_BYTES + self.count * T::WIRE_BYTES as u64,
             path: self.path,
             elems: self.count,
         })
@@ -81,13 +298,14 @@ impl RunWriter {
 }
 
 /// Streaming reader for one run file.
-pub struct RunReader {
+pub struct RunReader<T: ExtItem> {
     inp: BufReader<File>,
     remaining: u64,
     byte_buf: Vec<u8>,
+    _elem: PhantomData<T>,
 }
 
-impl RunReader {
+impl<T: ExtItem> RunReader<T> {
     pub fn open(path: &Path) -> Result<Self> {
         let f = File::open(path)
             .with_context(|| format!("opening run file {}", path.display()))?;
@@ -100,22 +318,24 @@ impl RunReader {
             bail!("{}: not a run file (bad magic {magic:?})", path.display());
         }
         let mut cnt = [0u8; 8];
-        inp.read_exact(&mut cnt)?;
+        inp.read_exact(&mut cnt)
+            .map_err(|e| anyhow!("{}: reading run header: {e}", path.display()))?;
         let remaining = u64::from_le_bytes(cnt);
         // The count is untrusted input: checked math so a corrupt
         // header reports "truncated run" instead of overflowing.
         let expect = remaining
-            .checked_mul(ELEM_BYTES as u64)
+            .checked_mul(T::WIRE_BYTES as u64)
             .and_then(|payload| payload.checked_add(RUN_HEADER_BYTES));
         if expect != Some(len) {
             bail!(
-                "{}: truncated run (header claims {} elements, file is {} bytes)",
+                "{}: truncated run (header claims {} {} elements, file is {} bytes)",
                 path.display(),
                 remaining,
+                T::DTYPE.name(),
                 len
             );
         }
-        Ok(RunReader { inp, remaining, byte_buf: Vec::new() })
+        Ok(RunReader { inp, remaining, byte_buf: Vec::new(), _elem: PhantomData })
     }
 
     /// Elements not yet read.
@@ -125,55 +345,42 @@ impl RunReader {
 
     /// Append up to `max` elements to `out`; returns how many were read
     /// (0 = exhausted).
-    pub fn read_block(&mut self, out: &mut Vec<u32>, max: usize) -> Result<usize> {
-        read_u32_block(&mut self.inp, &mut self.remaining, &mut self.byte_buf, out, max)
+    pub fn read_block(&mut self, out: &mut Vec<T>, max: usize) -> Result<usize> {
+        read_record_block(&mut self.inp, &mut self.remaining, &mut self.byte_buf, out, max)
     }
 }
 
-fn read_u32_block(
-    inp: &mut BufReader<File>,
-    remaining: &mut u64,
-    byte_buf: &mut Vec<u8>,
-    out: &mut Vec<u32>,
-    max: usize,
-) -> Result<usize> {
-    let take = (*remaining).min(max as u64) as usize;
-    if take == 0 {
-        return Ok(0);
-    }
-    byte_buf.resize(take * ELEM_BYTES, 0);
-    inp.read_exact(byte_buf)?;
-    out.reserve(take);
-    for c in byte_buf.chunks_exact(ELEM_BYTES) {
-        out.push(u32::from_le_bytes([c[0], c[1], c[2], c[3]]));
-    }
-    *remaining -= take as u64;
-    Ok(take)
-}
-
-/// Streaming reader for a headerless little-endian u32 dataset.
-pub struct RawReader {
+/// Streaming reader for a headerless little-endian dataset.
+pub struct RawReader<T: ExtItem> {
     inp: BufReader<File>,
     total: u64,
     remaining: u64,
     byte_buf: Vec<u8>,
+    _elem: PhantomData<T>,
 }
 
-impl RawReader {
+impl<T: ExtItem> RawReader<T> {
     pub fn open(path: &Path) -> Result<Self> {
         let f = File::open(path)
             .with_context(|| format!("opening dataset {}", path.display()))?;
         let len = f.metadata()?.len();
-        if len % ELEM_BYTES as u64 != 0 {
+        if len % T::WIRE_BYTES as u64 != 0 {
             bail!(
-                "{}: size {} is not a multiple of {} (raw little-endian u32 expected)",
+                "{}: size {} is not a multiple of {} (raw little-endian {} expected)",
                 path.display(),
                 len,
-                ELEM_BYTES
+                T::WIRE_BYTES,
+                T::DTYPE.name()
             );
         }
-        let total = len / ELEM_BYTES as u64;
-        Ok(RawReader { inp: BufReader::new(f), total, remaining: total, byte_buf: Vec::new() })
+        let total = len / T::WIRE_BYTES as u64;
+        Ok(RawReader {
+            inp: BufReader::new(f),
+            total,
+            remaining: total,
+            byte_buf: Vec::new(),
+            _elem: PhantomData,
+        })
     }
 
     /// Total elements in the file.
@@ -182,31 +389,28 @@ impl RawReader {
     }
 
     /// Append up to `max` elements to `out`; 0 = exhausted.
-    pub fn read_block(&mut self, out: &mut Vec<u32>, max: usize) -> Result<usize> {
-        read_u32_block(&mut self.inp, &mut self.remaining, &mut self.byte_buf, out, max)
+    pub fn read_block(&mut self, out: &mut Vec<T>, max: usize) -> Result<usize> {
+        read_record_block(&mut self.inp, &mut self.remaining, &mut self.byte_buf, out, max)
     }
 }
 
-/// Streaming writer for a headerless little-endian u32 dataset.
-pub struct RawWriter {
+/// Streaming writer for a headerless little-endian dataset.
+pub struct RawWriter<T: ExtItem> {
     out: BufWriter<File>,
     count: u64,
     byte_buf: Vec<u8>,
+    _elem: PhantomData<T>,
 }
 
-impl RawWriter {
+impl<T: ExtItem> RawWriter<T> {
     pub fn create(path: &Path) -> Result<Self> {
         let f = File::create(path)
             .with_context(|| format!("creating output {}", path.display()))?;
-        Ok(RawWriter { out: BufWriter::new(f), count: 0, byte_buf: Vec::new() })
+        Ok(RawWriter { out: BufWriter::new(f), count: 0, byte_buf: Vec::new(), _elem: PhantomData })
     }
 
-    pub fn write_block(&mut self, xs: &[u32]) -> Result<()> {
-        self.byte_buf.clear();
-        self.byte_buf.reserve(xs.len() * ELEM_BYTES);
-        for &x in xs {
-            self.byte_buf.extend_from_slice(&x.to_le_bytes());
-        }
+    pub fn write_block(&mut self, xs: &[T]) -> Result<()> {
+        encode_block(xs, &mut self.byte_buf);
         self.out.write_all(&self.byte_buf)?;
         self.count += xs.len() as u64;
         Ok(())
@@ -220,7 +424,7 @@ impl RawWriter {
 }
 
 /// Write a whole dataset in one call (tests, CLI `--gen`).
-pub fn write_raw(path: &Path, xs: &[u32]) -> Result<u64> {
+pub fn write_raw<T: ExtItem>(path: &Path, xs: &[T]) -> Result<u64> {
     let mut w = RawWriter::create(path)?;
     w.write_block(xs)?;
     w.finish()
@@ -228,8 +432,8 @@ pub fn write_raw(path: &Path, xs: &[u32]) -> Result<u64> {
 
 /// Read a whole dataset into memory (verification only — the point of
 /// this subsystem is that the sort itself never does this).
-pub fn read_raw(path: &Path) -> Result<Vec<u32>> {
-    let mut r = RawReader::open(path)?;
+pub fn read_raw<T: ExtItem>(path: &Path) -> Result<Vec<T>> {
+    let mut r = RawReader::<T>::open(path)?;
     let mut out = Vec::with_capacity(r.elems() as usize);
     while r.read_block(&mut out, 1 << 16)? > 0 {}
     Ok(out)
@@ -249,14 +453,14 @@ mod tests {
     fn run_round_trip_in_blocks() {
         let path = tmp("rt.flr");
         let mut w = RunWriter::create(&path).unwrap();
-        w.write_block(&[9, 8, 7]).unwrap();
+        w.write_block(&[9u32, 8, 7]).unwrap();
         w.write_block(&[]).unwrap();
         w.write_block(&[6, 5]).unwrap();
         let run = w.finish().unwrap();
         assert_eq!(run.elems, 5);
         assert_eq!(run.bytes, RUN_HEADER_BYTES + 20);
 
-        let mut r = RunReader::open(&path).unwrap();
+        let mut r = RunReader::<u32>::open(&path).unwrap();
         assert_eq!(r.remaining(), 5);
         let mut out = Vec::new();
         assert_eq!(r.read_block(&mut out, 2).unwrap(), 2);
@@ -267,10 +471,44 @@ mod tests {
     }
 
     #[test]
+    fn run_round_trip_kv_and_kv64() {
+        let path = tmp("rt-kv.flr");
+        let recs = vec![Kv::new(9, 100), Kv::new(9, 101), Kv::new(3, 102)];
+        let mut w = RunWriter::create(&path).unwrap();
+        w.write_block(&recs).unwrap();
+        let run = w.finish().unwrap();
+        assert_eq!(run.elems, 3);
+        assert_eq!(run.bytes, RUN_HEADER_BYTES + 3 * 8);
+        let mut r = RunReader::<Kv>::open(&path).unwrap();
+        let mut out = Vec::new();
+        assert_eq!(r.read_block(&mut out, 100).unwrap(), 3);
+        assert_eq!(out, recs, "payloads must survive the wire byte-exactly");
+        // The same bytes do NOT open as a Kv64 run (size mismatch).
+        let err = format!("{:#}", RunReader::<Kv64>::open(&path).unwrap_err());
+        assert!(err.contains("truncated run"), "{err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn f32_wire_format_is_plain_ieee_bits() {
+        let path = tmp("rt.f32");
+        let vals = [1.5f32, -2.25, 0.0, -0.0, f32::INFINITY, f32::NEG_INFINITY];
+        let keys: Vec<F32Key> = vals.iter().map(|&x| F32Key::from_f32(x)).collect();
+        write_raw(&path, &keys).unwrap();
+        // Bytes on disk are the raw little-endian f32 values.
+        let bytes = std::fs::read(&path).unwrap();
+        let expect: Vec<u8> = vals.iter().flat_map(|x| x.to_bits().to_le_bytes()).collect();
+        assert_eq!(bytes, expect);
+        // And they decode back to the identical keys (bit-exact).
+        assert_eq!(read_raw::<F32Key>(&path).unwrap(), keys);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
     fn run_reader_rejects_bad_magic_and_truncation() {
         let path = tmp("bad.flr");
         std::fs::write(&path, b"NOPE\x05\x00\x00\x00\x00\x00\x00\x00").unwrap();
-        let err = format!("{:#}", RunReader::open(&path).unwrap_err());
+        let err = format!("{:#}", RunReader::<u32>::open(&path).unwrap_err());
         assert!(err.contains("bad magic"), "{err}");
 
         // Valid magic, count claims more data than present.
@@ -278,16 +516,16 @@ mod tests {
         bytes.extend_from_slice(&10u64.to_le_bytes());
         bytes.extend_from_slice(&1u32.to_le_bytes());
         std::fs::write(&path, bytes).unwrap();
-        let err = format!("{:#}", RunReader::open(&path).unwrap_err());
+        let err = format!("{:#}", RunReader::<u32>::open(&path).unwrap_err());
         assert!(err.contains("truncated run"), "{err}");
 
-        // Corrupt header whose count would overflow count*4: must be a
-        // clean "truncated run" error, never a wrap/panic.
+        // Corrupt header whose count would overflow count*WIRE_BYTES:
+        // must be a clean "truncated run" error, never a wrap/panic.
         let mut bytes = RUN_MAGIC.to_vec();
         bytes.extend_from_slice(&u64::MAX.to_le_bytes());
         bytes.extend_from_slice(&1u32.to_le_bytes());
         std::fs::write(&path, bytes).unwrap();
-        let err = format!("{:#}", RunReader::open(&path).unwrap_err());
+        let err = format!("{:#}", RunReader::<u32>::open(&path).unwrap_err());
         assert!(err.contains("truncated run"), "{err}");
 
         // Wrapping check: count = 2^62 wraps to 12 bytes in unchecked
@@ -295,7 +533,7 @@ mod tests {
         let mut bytes = RUN_MAGIC.to_vec();
         bytes.extend_from_slice(&(1u64 << 62).to_le_bytes());
         std::fs::write(&path, bytes).unwrap();
-        let err = format!("{:#}", RunReader::open(&path).unwrap_err());
+        let err = format!("{:#}", RunReader::<u32>::open(&path).unwrap_err());
         assert!(err.contains("truncated run"), "{err}");
         std::fs::remove_file(&path).unwrap();
     }
@@ -305,34 +543,50 @@ mod tests {
         let path = tmp("data.u32");
         let data: Vec<u32> = (0..1000).rev().collect();
         assert_eq!(write_raw(&path, &data).unwrap(), 1000);
-        let back = read_raw(&path).unwrap();
+        let back = read_raw::<u32>(&path).unwrap();
         assert_eq!(back, data);
 
-        let mut r = RawReader::open(&path).unwrap();
+        let mut r = RawReader::<u32>::open(&path).unwrap();
         assert_eq!(r.elems(), 1000);
         let mut out = Vec::new();
         assert_eq!(r.read_block(&mut out, 64).unwrap(), 64);
         assert_eq!(out, data[..64]);
 
         std::fs::write(&path, [1u8, 2, 3]).unwrap();
-        let err = format!("{:#}", RawReader::open(&path).unwrap_err());
+        let err = format!("{:#}", RawReader::<u32>::open(&path).unwrap_err());
         assert!(err.contains("not a multiple of 4"), "{err}");
+        // 4 bytes are one u32 but not one Kv (8-byte records).
+        std::fs::write(&path, [1u8, 2, 3, 4]).unwrap();
+        assert!(RawReader::<u32>::open(&path).is_ok());
+        let err = format!("{:#}", RawReader::<Kv>::open(&path).unwrap_err());
+        assert!(err.contains("not a multiple of 8"), "{err}");
         std::fs::remove_file(&path).unwrap();
     }
 
     #[test]
     fn empty_run_and_empty_raw() {
         let path = tmp("empty.flr");
-        let run = RunWriter::create(&path).unwrap().finish().unwrap();
+        let run = RunWriter::<u32>::create(&path).unwrap().finish().unwrap();
         assert_eq!(run.elems, 0);
-        let mut r = RunReader::open(&path).unwrap();
+        let mut r = RunReader::<u32>::open(&path).unwrap();
         let mut out = Vec::new();
         assert_eq!(r.read_block(&mut out, 10).unwrap(), 0);
         std::fs::remove_file(&path).unwrap();
 
         let path = tmp("empty.u32");
-        write_raw(&path, &[]).unwrap();
-        assert_eq!(read_raw(&path).unwrap(), Vec::<u32>::new());
+        write_raw::<u32>(&path, &[]).unwrap();
+        assert_eq!(read_raw::<u32>(&path).unwrap(), Vec::<u32>::new());
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn dtype_parse_and_names() {
+        for d in [Dtype::U32, Dtype::U64, Dtype::Kv, Dtype::Kv64, Dtype::F32] {
+            assert_eq!(Dtype::parse(d.name()).unwrap(), d);
+        }
+        assert_eq!(Dtype::Kv64.wire_bytes(), 16);
+        assert_eq!(Dtype::F32.wire_bytes(), 4);
+        let err = Dtype::parse("f64").unwrap_err();
+        assert!(err.contains("unknown dtype"), "{err}");
     }
 }

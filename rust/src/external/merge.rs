@@ -1,18 +1,30 @@
 //! Phase 2: arrange spilled runs into FLiMS merge trees and execute the
-//! (possibly multi-pass) k-way merge.
+//! (possibly multi-pass) k-way merge, generic over the record type.
 //!
 //! A [`MergePlan`] caps every tree at the configured fan-in: while more
 //! runs exist than the fan-in allows, a pass merges balanced groups of
 //! runs into fresh (larger) spilled runs; the final pass streams the
-//! surviving ≤ fan-in runs straight into the caller's sink. Consumed
-//! runs are deleted eagerly after each group, so live spill stays near
-//! the dataset size rather than growing with the pass count.
+//! surviving ≤ fan-in runs straight into the caller's sink. Group merges
+//! within a pass are independent, so they run concurrently in batches of
+//! `cfg.effective_threads()` — the HPMT replication argument (§5) at the
+//! tree-of-trees level. Consumed runs are deleted as each group's result
+//! lands, so live spill stays near the dataset size rather than growing
+//! with the pass count. Tree leaves are double-buffered
+//! ([`PrefetchStream`](super::stream::PrefetchStream)) when
+//! `cfg.prefetch_blocks > 0`, overlapping disk reads with merging.
+//!
+//! Runs enter and leave every pass in input order and each tree keeps
+//! earlier runs on A sides, so key ties resolve to input order end to
+//! end (the §6 stability guarantee).
 
-use anyhow::{bail, Result};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
 
-use super::format::{RunFile, RunReader};
+use anyhow::{anyhow, Error, Result};
+
+use super::format::{ExtItem, RawWriter, RunFile, RunReader, RUN_HEADER_BYTES};
 use super::spill::SpillManager;
-use super::stream::{build_tree, pump, ReaderStream, RunStream};
+use super::stream::{build_tree, pump, PrefetchCounters, PrefetchStream, ReaderStream, RunStream};
 use super::ExternalConfig;
 
 /// The pass/group structure for merging `k` runs at a given fan-in.
@@ -55,20 +67,20 @@ fn group_sizes(k: usize, fan_in: usize) -> Vec<usize> {
 
 /// Where the merged output goes: the final dataset file, a fresh run, or
 /// an in-memory buffer (service-path small sorts, tests).
-pub trait U32Sink {
-    fn write_block(&mut self, xs: &[u32]) -> Result<()>;
+pub trait RecordSink<T: ExtItem> {
+    fn write_block(&mut self, xs: &[T]) -> Result<()>;
 }
 
-impl U32Sink for Vec<u32> {
-    fn write_block(&mut self, xs: &[u32]) -> Result<()> {
+impl<T: ExtItem> RecordSink<T> for Vec<T> {
+    fn write_block(&mut self, xs: &[T]) -> Result<()> {
         self.extend_from_slice(xs);
         Ok(())
     }
 }
 
-impl U32Sink for super::format::RawWriter {
-    fn write_block(&mut self, xs: &[u32]) -> Result<()> {
-        self.write_block(xs)
+impl<T: ExtItem> RecordSink<T> for RawWriter<T> {
+    fn write_block(&mut self, xs: &[T]) -> Result<()> {
+        RawWriter::write_block(self, xs)
     }
 }
 
@@ -79,68 +91,176 @@ pub struct MergeOutcome {
     pub elements: u64,
     /// Passes over the data (intermediate + final).
     pub merge_passes: u64,
+    /// Leaf blocks served without blocking (prefetch already had them).
+    pub prefetch_hits: u64,
+    /// Leaf blocks the merger had to wait for.
+    pub prefetch_misses: u64,
 }
 
-fn open_group(group: &[RunFile], cfg: &ExternalConfig) -> Result<Box<dyn RunStream>> {
-    let block = cfg.block_elems();
-    let mut streams: Vec<Box<dyn RunStream>> = Vec::with_capacity(group.len());
+fn open_group<T: ExtItem>(
+    group: &[RunFile],
+    cfg: &ExternalConfig,
+    counters: &Arc<PrefetchCounters>,
+) -> Result<Box<dyn RunStream<T>>> {
+    let block = cfg.block_elems_for(T::WIRE_BYTES);
+    let mut streams: Vec<Box<dyn RunStream<T>>> = Vec::with_capacity(group.len());
     for run in group {
-        streams.push(Box::new(ReaderStream::new(RunReader::open(&run.path)?, block)));
+        let reader = RunReader::<T>::open(&run.path)?;
+        if cfg.prefetch_blocks > 0 {
+            streams.push(Box::new(PrefetchStream::spawn(
+                reader,
+                block,
+                cfg.prefetch_blocks,
+                Arc::clone(counters),
+            )?));
+        } else {
+            streams.push(Box::new(ReaderStream::new(reader, block)));
+        }
     }
     Ok(build_tree(streams, block, cfg.w))
 }
 
+/// Merge one group of runs into a pre-created run writer. Runs on a
+/// worker thread during intermediate passes; touches no shared state
+/// beyond the prefetch counters.
+fn merge_group<T: ExtItem>(
+    group: &[RunFile],
+    cfg: &ExternalConfig,
+    counters: &Arc<PrefetchCounters>,
+    mut writer: super::format::RunWriter<T>,
+) -> Result<(RunFile, u64)> {
+    let mut tree = open_group::<T>(group, cfg, counters)?;
+    let written = pump(tree.as_mut(), |chunk| writer.write_block(chunk))?;
+    Ok((writer.finish()?, written))
+}
+
 /// Merge `runs` into `sink` per `MergePlan::new(runs.len(), fan_in)`,
-/// spilling intermediate passes through `spill` and deleting consumed
-/// runs eagerly.
-pub fn merge_runs(
+/// spilling intermediate passes through `spill` (group merges of a pass
+/// run concurrently) and deleting consumed runs as results land.
+pub fn merge_runs<T: ExtItem>(
     mut runs: Vec<RunFile>,
     cfg: &ExternalConfig,
     spill: &mut SpillManager,
-    sink: &mut dyn U32Sink,
+    sink: &mut dyn RecordSink<T>,
 ) -> Result<MergeOutcome> {
     let plan = MergePlan::new(runs.len(), cfg.fan_in);
+    let counters = Arc::new(PrefetchCounters::default());
+    let threads = cfg.effective_threads().max(1);
+
     for sizes in &plan.intermediate {
-        let mut next = Vec::with_capacity(sizes.len());
+        let mut next: Vec<Option<RunFile>> = vec![None; sizes.len()];
+        let mut jobs: Vec<(usize, Vec<RunFile>)> = Vec::new();
         let mut idx = 0;
-        for &sz in sizes {
-            let group = &runs[idx..idx + sz];
+        for (gi, &sz) in sizes.iter().enumerate() {
+            let group = runs[idx..idx + sz].to_vec();
             idx += sz;
             if sz == 1 {
                 // A lone run needs no merging; carry it forward as-is.
-                next.push(group[0].clone());
-                continue;
+                next[gi] = Some(group.into_iter().next().unwrap());
+            } else {
+                jobs.push((gi, group));
             }
-            // Enforce the disk budget before the merged run is written,
-            // not after the disk has already filled.
-            let expect: u64 = group.iter().map(|r| r.elems).sum();
-            spill.check_headroom(crate::external::format::RUN_HEADER_BYTES + expect * 4)?;
-            let mut tree = open_group(group, cfg)?;
-            let mut writer = spill.create_run()?;
-            let written = pump(tree.as_mut(), |chunk| writer.write_block(chunk))?;
-            let merged = writer.finish()?;
-            if written != expect {
-                bail!("merge pass lost data: wrote {written} of {expect} elements");
-            }
-            spill.register(&merged)?;
-            for run in group {
-                spill.consume(run)?;
-            }
-            next.push(merged);
         }
-        runs = next;
+
+        for batch in jobs.chunks(threads) {
+            // Enforce the disk budget for the whole batch before any
+            // merged run is written, not after the disk has filled.
+            let upcoming: u64 = batch
+                .iter()
+                .map(|(_, g)| {
+                    RUN_HEADER_BYTES
+                        + g.iter().map(|r| r.elems).sum::<u64>() * T::WIRE_BYTES as u64
+                })
+                .sum();
+            spill.check_headroom(upcoming)?;
+            // Writers are created in group order on this thread, so run
+            // numbering stays deterministic for any worker count.
+            let mut writers = Vec::with_capacity(batch.len());
+            for _ in batch {
+                writers.push(spill.create_run::<T>()?);
+            }
+            let out_paths: Vec<std::path::PathBuf> =
+                writers.iter().map(|w| w.path().to_path_buf()).collect();
+
+            let results: Vec<Result<(RunFile, u64)>> = std::thread::scope(|s| {
+                let mut handles = Vec::with_capacity(batch.len());
+                for ((_, group), writer) in batch.iter().zip(writers) {
+                    let counters = Arc::clone(&counters);
+                    handles.push(s.spawn(move || merge_group::<T>(group, cfg, &counters, writer)));
+                }
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("merge worker panicked"))
+                    .collect()
+            });
+
+            // Register outputs / delete inputs in group order; on error,
+            // sweep the batch's remaining outputs so nothing leaks.
+            let mut first_err: Option<Error> = None;
+            for (((gi, group), res), out_path) in batch.iter().zip(results).zip(&out_paths) {
+                match res {
+                    Err(e) => {
+                        let _ = std::fs::remove_file(out_path);
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                    Ok((merged, written)) => {
+                        if first_err.is_some() {
+                            let _ = std::fs::remove_file(&merged.path);
+                            continue;
+                        }
+                        let expect: u64 = group.iter().map(|r| r.elems).sum();
+                        if written != expect {
+                            first_err = Some(anyhow!(
+                                "merge pass lost data: wrote {written} of {expect} elements"
+                            ));
+                            let _ = std::fs::remove_file(&merged.path);
+                            continue;
+                        }
+                        // register() keeps the run tracked even when it
+                        // reports a budget breach, so Drop still cleans it.
+                        if let Err(e) = spill.register(&merged) {
+                            first_err = Some(e);
+                            continue;
+                        }
+                        for run in group {
+                            if let Err(e) = spill.consume(run) {
+                                if first_err.is_none() {
+                                    first_err = Some(e);
+                                }
+                            }
+                        }
+                        next[*gi] = Some(merged);
+                    }
+                }
+            }
+            if let Some(e) = first_err {
+                return Err(e);
+            }
+        }
+        runs = next
+            .into_iter()
+            .map(|r| r.expect("every group produced a run"))
+            .collect();
     }
 
     debug_assert_eq!(runs.len(), plan.final_width);
     let mut elements = 0u64;
     if !runs.is_empty() {
-        let mut tree = open_group(&runs, cfg)?;
+        let mut tree = open_group::<T>(&runs, cfg, &counters)?;
         elements = pump(tree.as_mut(), |chunk| sink.write_block(chunk))?;
+        drop(tree); // joins prefetch threads before the files go away
         for run in &runs {
             spill.consume(run)?;
         }
     }
-    Ok(MergeOutcome { elements, merge_passes: plan.passes() })
+    Ok(MergeOutcome {
+        elements,
+        merge_passes: plan.passes(),
+        prefetch_hits: counters.hits.load(Ordering::Relaxed),
+        prefetch_misses: counters.misses.load(Ordering::Relaxed),
+    })
 }
 
 #[cfg(test)]

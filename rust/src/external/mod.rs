@@ -1,5 +1,6 @@
 //! Out-of-core external sort: spill runs to disk, then k-way merge them
-//! with trees of FLiMS 2-way mergers.
+//! with trees of FLiMS 2-way mergers — parallel in both phases and
+//! generic over the dataset type.
 //!
 //! The paper positions FLiMS inside "parallel merge trees to achieve
 //! high-throughput sorting, where the resource utilisation of the merger
@@ -9,18 +10,26 @@
 //! structure, Merge-Path-style safe splits at the nodes):
 //!
 //! 1. **Run generation** ([`run_gen`]): the input streams through a
-//!    bounded buffer; each chunk is sorted by the in-memory FLiMS
-//!    pipeline and spilled as a descending run ([`format::RunWriter`]).
+//!    bounded work queue to a pool of `threads` sort workers; each chunk
+//!    is sorted by the in-memory FLiMS pipeline ([`format::ExtItem::sort_run`]
+//!    — stable for payload records) and spilled in input order as a
+//!    descending run ([`format::RunWriter`]).
 //! 2. **k-way streaming merge** ([`merge`], [`stream`]): runs feed an
-//!    HPMT-style binary tree of block-buffered FLiMS mergers
-//!    (`flims::lanes::merge_desc_into` at every node). When the run
-//!    count exceeds the configured fan-in, intermediate passes re-spill
-//!    merged runs; the [`spill::SpillManager`] deletes consumed runs
-//!    eagerly and enforces the disk budget.
+//!    HPMT-style binary tree of block-buffered *stable* FLiMS mergers.
+//!    When the run count exceeds the configured fan-in, intermediate
+//!    passes re-spill merged runs, with the independent group merges of
+//!    a pass running concurrently; the [`spill::SpillManager`] deletes
+//!    consumed runs eagerly and enforces the disk budget. Tree leaves
+//!    are double-buffered ([`stream::PrefetchStream`]): a prefetch
+//!    thread fills the next blocks while the merger drains the current
+//!    one, so the hot path never blocks on `read_block`.
 //!
-//! Datasets are headerless little-endian u32 files ([`format::RawReader`]);
-//! output is the same format, descending. Resident memory stays within a
-//! small constant factor of `mem_budget_bytes` regardless of input size.
+//! Datasets are headerless little-endian record files ([`format::RawReader`])
+//! in any supported [`Dtype`] (`u32`, `u64`, `kv`, `kv64`, `f32`);
+//! output is the same format, descending, with key ties keeping input
+//! order (the §6 tie-record guarantee — see the stability property
+//! tests). Resident memory stays within a small constant factor of
+//! `mem_budget_bytes` (× `2·threads` when phase 1 runs parallel).
 
 pub mod format;
 pub mod merge;
@@ -29,23 +38,28 @@ pub mod spill;
 pub mod stream;
 
 use std::path::{Path, PathBuf};
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-pub use format::{RawReader, RawWriter, RunFile, RunReader, RunWriter};
-pub use merge::{merge_runs, MergeOutcome, MergePlan, U32Sink};
-pub use run_gen::{generate_runs, SliceSource, U32Source};
+pub use format::{
+    read_raw, write_raw, Dtype, ExtItem, RawReader, RawWriter, RunFile, RunReader, RunWriter,
+};
+pub use merge::{merge_runs, MergeOutcome, MergePlan, RecordSink};
+pub use run_gen::{generate_runs, RecordSource, SliceSource};
 pub use spill::SpillManager;
-pub use stream::{build_tree, MergeStream, ReaderStream, RunStream};
+pub use stream::{build_tree, MergeStream, PrefetchCounters, PrefetchStream, ReaderStream, RunStream};
 
 use crate::flims::sort::SortConfig;
+use crate::key::{F32Key, Kv, Kv64};
 
 /// Tuning for the external sort.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ExternalConfig {
     /// Target resident memory for the sort (run buffer in phase 1, the
     /// merge-tree buffers in phase 2). Actual peak stays within a small
-    /// constant factor.
+    /// constant factor — `2 × threads` run buffers when phase 1 runs
+    /// parallel, since sorted chunks queue for in-order spilling.
     pub mem_budget_bytes: usize,
     /// Maximum runs merged by one tree; more runs ⇒ extra spill passes.
     pub fan_in: usize,
@@ -53,6 +67,16 @@ pub struct ExternalConfig {
     pub w: usize,
     /// Sort-in-chunks run length for the in-memory sort.
     pub chunk: usize,
+    /// Worker threads for phase-1 chunk sorting and phase-2 group
+    /// merges. `1` = fully serial (the default); `0` = one per core.
+    /// The sorted output is byte-identical for every value.
+    pub threads: usize,
+    /// Blocks each tree leaf reads ahead on its prefetch thread;
+    /// `0` disables double-buffering (leaves block on `read_block`).
+    pub prefetch_blocks: usize,
+    /// Default dataset element type for file sorts when the request
+    /// does not name one.
+    pub dtype: Dtype,
     /// Spill directory (`None` = fresh dir under the system temp dir).
     pub tmp_dir: Option<PathBuf>,
     /// Cap on live spill bytes (`None` = unlimited).
@@ -66,6 +90,9 @@ impl Default for ExternalConfig {
             fan_in: 8,
             w: 16,
             chunk: 128,
+            threads: 1,
+            prefetch_blocks: 2,
+            dtype: Dtype::U32,
             tmp_dir: None,
             disk_budget_bytes: None,
         }
@@ -83,18 +110,35 @@ impl ExternalConfig {
         if self.fan_in < 2 {
             return Err(format!("external.fan_in = {} must be at least 2", self.fan_in));
         }
+        if self.threads > 1024 {
+            return Err(format!(
+                "external.threads = {} is absurd (max 1024, 0 = one per core)",
+                self.threads
+            ));
+        }
         SortConfig { w: self.w, chunk: self.chunk }.validate()
     }
 
-    /// Elements per phase-1 run (the whole budget is one run buffer).
-    pub fn run_elems(&self) -> usize {
-        self.mem_budget_bytes / format::ELEM_BYTES
+    /// Elements per phase-1 run for records of `wire_bytes` each (the
+    /// whole budget is one run buffer; independent of the thread count
+    /// so the spill layout is too).
+    pub fn run_elems_for(&self, wire_bytes: usize) -> usize {
+        (self.mem_budget_bytes / wire_bytes).max(1)
     }
 
     /// Elements per merge-tree block buffer: the budget divided across
     /// the tree's buffers (≈ 3 per node, ≤ 2·fan_in nodes, plus slack).
-    pub fn block_elems(&self) -> usize {
-        (self.run_elems() / (8 * self.fan_in)).max(64)
+    pub fn block_elems_for(&self, wire_bytes: usize) -> usize {
+        (self.run_elems_for(wire_bytes) / (8 * self.fan_in)).max(64)
+    }
+
+    /// Resolved worker count (`0` = one per core).
+    pub fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
     }
 
     pub fn sort_config(&self) -> SortConfig {
@@ -116,19 +160,32 @@ pub struct SpillStats {
     pub merge_passes: u64,
     /// High-water mark of live spill bytes.
     pub peak_spill_bytes: u64,
+    /// Wall-clock of phase 1 (run generation), microseconds.
+    pub phase1_us: u64,
+    /// Wall-clock of phase 2 (k-way merge), microseconds.
+    pub phase2_us: u64,
+    /// Leaf blocks the prefetch threads had ready before the merger
+    /// asked (the disk read was fully overlapped with merging).
+    pub prefetch_hits: u64,
+    /// Leaf blocks the merger had to wait for.
+    pub prefetch_misses: u64,
 }
 
-/// Sort any [`U32Source`] into any [`U32Sink`] with bounded memory.
-pub fn sort_stream(
-    src: &mut dyn U32Source,
-    sink: &mut dyn U32Sink,
+/// Sort any [`RecordSource`] into any [`RecordSink`] with bounded memory.
+pub fn sort_stream<T: ExtItem>(
+    src: &mut dyn RecordSource<T>,
+    sink: &mut dyn RecordSink<T>,
     cfg: &ExternalConfig,
 ) -> Result<SpillStats> {
     cfg.validate().map_err(|e| anyhow!("{e}"))?;
     let mut spill = SpillManager::new(cfg.tmp_dir.clone(), cfg.disk_budget_bytes)?;
+    let t1 = Instant::now();
     let runs = generate_runs(src, cfg, &mut spill)?;
+    let phase1_us = t1.elapsed().as_micros() as u64;
     let input_elems: u64 = runs.iter().map(|r| r.elems).sum();
+    let t2 = Instant::now();
     let outcome = merge_runs(runs, cfg, &mut spill, sink)?;
+    let phase2_us = t2.elapsed().as_micros() as u64;
     if outcome.elements != input_elems {
         return Err(anyhow!(
             "external sort corrupted: {} elements in, {} out",
@@ -142,15 +199,23 @@ pub fn sort_stream(
         bytes_spilled: spill.bytes_written(),
         merge_passes: outcome.merge_passes,
         peak_spill_bytes: spill.peak_live_bytes(),
+        phase1_us,
+        phase2_us,
+        prefetch_hits: outcome.prefetch_hits,
+        prefetch_misses: outcome.prefetch_misses,
     })
 }
 
-/// Sort the raw-u32 dataset at `input` into `output` (descending),
+/// Sort the raw dataset at `input` into `output` (descending),
 /// spilling through temp files; resident memory is bounded by the
 /// configured budget, not the dataset size. `output` must be a
 /// different file — creating it truncates, so sorting in place would
 /// destroy the input before it was read.
-pub fn sort_file(input: &Path, output: &Path, cfg: &ExternalConfig) -> Result<SpillStats> {
+pub fn sort_file<T: ExtItem>(
+    input: &Path,
+    output: &Path,
+    cfg: &ExternalConfig,
+) -> Result<SpillStats> {
     let same_file = input == output
         || match (input.canonicalize(), output.canonicalize()) {
             (Ok(a), Ok(b)) => a == b,
@@ -162,18 +227,48 @@ pub fn sort_file(input: &Path, output: &Path, cfg: &ExternalConfig) -> Result<Sp
             input.display()
         ));
     }
-    let mut src = RawReader::open(input)?;
-    let mut sink = RawWriter::create(output)?;
+    let mut src = RawReader::<T>::open(input)?;
+    let mut sink = RawWriter::<T>::create(output)?;
     let stats = sort_stream(&mut src, &mut sink, cfg)?;
     let written = sink.finish()?;
     debug_assert_eq!(written, stats.elements);
     Ok(stats)
 }
 
+/// [`sort_file`] dispatched over a runtime [`Dtype`] — the entry point
+/// the router and CLI use for `sortfile <path> [dtype]`.
+pub fn sort_file_dtype(
+    input: &Path,
+    output: &Path,
+    cfg: &ExternalConfig,
+    dtype: Dtype,
+) -> Result<SpillStats> {
+    match dtype {
+        Dtype::U32 => sort_file::<u32>(input, output, cfg),
+        Dtype::U64 => sort_file::<u64>(input, output, cfg),
+        Dtype::Kv => sort_file::<Kv>(input, output, cfg),
+        Dtype::Kv64 => sort_file::<Kv64>(input, output, cfg),
+        Dtype::F32 => sort_file::<F32Key>(input, output, cfg),
+    }
+}
+
 /// Sort an in-memory vector through the external pipeline (descending).
-/// Exists for the service's `Backend::External` route and for tests —
-/// the data still round-trips through spill files.
-pub fn sort_vec(data: &[u32], cfg: &ExternalConfig) -> Result<(Vec<u32>, SpillStats)> {
+/// Exists for the service's `Backend::External` route and for tests.
+/// Inputs that fit a single run skip the spill machinery entirely — one
+/// in-memory sort, no run file round-trip — and report `runs_spilled = 0`.
+pub fn sort_vec<T: ExtItem>(data: &[T], cfg: &ExternalConfig) -> Result<(Vec<T>, SpillStats)> {
+    cfg.validate().map_err(|e| anyhow!("{e}"))?;
+    if data.len() <= cfg.run_elems_for(T::WIRE_BYTES) {
+        let t = Instant::now();
+        let mut out = data.to_vec();
+        T::sort_run(&mut out, cfg.sort_config());
+        let stats = SpillStats {
+            elements: data.len() as u64,
+            phase1_us: t.elapsed().as_micros() as u64,
+            ..Default::default()
+        };
+        return Ok((out, stats));
+    }
     let mut src = SliceSource::new(data);
     let mut out = Vec::with_capacity(data.len());
     let stats = sort_stream(&mut src, &mut out, cfg)?;
@@ -183,13 +278,13 @@ pub fn sort_vec(data: &[u32], cfg: &ExternalConfig) -> Result<(Vec<u32>, SpillSt
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::{gen_u32, Distribution};
+    use crate::data::{gen_kv, gen_u32, Distribution};
     use crate::key::is_sorted_desc;
     use crate::util::rng::Rng;
 
     fn tiny_cfg() -> ExternalConfig {
         ExternalConfig {
-            mem_budget_bytes: 4096, // 1024-element runs
+            mem_budget_bytes: 4096, // 1024-element u32 runs
             fan_in: 4,
             ..Default::default()
         }
@@ -212,19 +307,68 @@ mod tests {
     }
 
     #[test]
-    fn sort_vec_single_run() {
+    fn parallel_sort_vec_matches_serial_exactly() {
+        let mut rng = Rng::new(105);
+        let data = gen_u32(&mut rng, 30_000, Distribution::Uniform);
+        let (serial, serial_stats) = sort_vec(&data, &tiny_cfg()).unwrap();
+        for threads in [2usize, 8] {
+            for prefetch in [0usize, 3] {
+                let cfg = ExternalConfig { threads, prefetch_blocks: prefetch, ..tiny_cfg() };
+                let (got, stats) = sort_vec(&data, &cfg).unwrap();
+                assert_eq!(got, serial, "threads={threads} prefetch={prefetch}");
+                assert_eq!(stats.runs_spilled, serial_stats.runs_spilled);
+                assert_eq!(stats.merge_passes, serial_stats.merge_passes);
+                assert_eq!(stats.bytes_spilled, serial_stats.bytes_spilled);
+            }
+        }
+    }
+
+    #[test]
+    fn prefetch_counters_account_for_leaf_blocks() {
+        let mut rng = Rng::new(106);
+        let data = gen_u32(&mut rng, 20_000, Distribution::Uniform);
+        let cfg = ExternalConfig { prefetch_blocks: 2, ..tiny_cfg() };
+        let (_, stats) = sort_vec(&data, &cfg).unwrap();
+        assert!(
+            stats.prefetch_hits + stats.prefetch_misses > 0,
+            "prefetch leaves must serve blocks: {stats:?}"
+        );
+        let cfg = ExternalConfig { prefetch_blocks: 0, ..tiny_cfg() };
+        let (_, stats) = sort_vec(&data, &cfg).unwrap();
+        assert_eq!(stats.prefetch_hits + stats.prefetch_misses, 0, "prefetch disabled");
+    }
+
+    #[test]
+    fn sort_vec_single_run_skips_spilling() {
         let mut rng = Rng::new(102);
         let data = gen_u32(&mut rng, 500, Distribution::Uniform);
         let (got, stats) = sort_vec(&data, &tiny_cfg()).unwrap();
         assert!(is_sorted_desc(&got));
         assert_eq!(got.len(), 500);
-        assert_eq!(stats.runs_spilled, 1);
-        assert_eq!(stats.merge_passes, 1);
+        let mut expect = data.clone();
+        expect.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(got, expect);
+        // Fast path: no run files, no merge passes, nothing spilled.
+        assert_eq!(stats.runs_spilled, 0);
+        assert_eq!(stats.merge_passes, 0);
+        assert_eq!(stats.bytes_spilled, 0);
+        assert_eq!(stats.elements, 500);
+    }
+
+    #[test]
+    fn sort_vec_fast_path_is_stable_for_kv() {
+        let mut rng = Rng::new(107);
+        let data = gen_kv(&mut rng, 400, Distribution::DupHeavy { alphabet: 3 });
+        let (got, stats) = sort_vec(&data, &tiny_cfg()).unwrap();
+        assert_eq!(stats.runs_spilled, 0);
+        let mut expect = data.clone();
+        expect.sort_by(|a, b| b.key.cmp(&a.key)); // std stable sort
+        assert_eq!(got, expect);
     }
 
     #[test]
     fn sort_vec_empty() {
-        let (got, stats) = sort_vec(&[], &tiny_cfg()).unwrap();
+        let (got, stats) = sort_vec::<u32>(&[], &tiny_cfg()).unwrap();
         assert!(got.is_empty());
         assert_eq!(stats.runs_spilled, 0);
         assert_eq!(stats.merge_passes, 0);
@@ -242,12 +386,16 @@ mod tests {
         assert!(cfg.validate().is_err());
         cfg = ExternalConfig { chunk: 8, w: 16, ..Default::default() };
         assert!(cfg.validate().is_err());
+        cfg = ExternalConfig { threads: 5000, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        cfg = ExternalConfig { threads: 0, prefetch_blocks: 0, ..Default::default() };
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]
     fn spill_files_are_cleaned_up() {
         let dir = std::env::temp_dir().join(format!("flims-ext-clean-{}", std::process::id()));
-        let cfg = ExternalConfig { tmp_dir: Some(dir.clone()), ..tiny_cfg() };
+        let cfg = ExternalConfig { tmp_dir: Some(dir.clone()), threads: 4, ..tiny_cfg() };
         let mut rng = Rng::new(103);
         let data = gen_u32(&mut rng, 10_000, Distribution::Uniform);
         let (got, _) = sort_vec(&data, &cfg).unwrap();
@@ -265,37 +413,67 @@ mod tests {
         let data: Vec<u32> = (0..2000).collect();
         format::write_raw(&path, &data).unwrap();
 
-        let err = format!("{:#}", sort_file(&path, &path, &tiny_cfg()).unwrap_err());
+        let err = format!("{:#}", sort_file::<u32>(&path, &path, &tiny_cfg()).unwrap_err());
         assert!(err.contains("in place"), "{err}");
-        assert_eq!(format::read_raw(&path).unwrap(), data, "input must be untouched");
+        assert_eq!(format::read_raw::<u32>(&path).unwrap(), data, "input must be untouched");
 
         // Same file through a non-identical path spelling.
         let alias = dir.join(".").join("data.u32");
-        let err = format!("{:#}", sort_file(&path, &alias, &tiny_cfg()).unwrap_err());
+        let err = format!("{:#}", sort_file::<u32>(&path, &alias, &tiny_cfg()).unwrap_err());
         assert!(err.contains("in place"), "{err}");
-        assert_eq!(format::read_raw(&path).unwrap(), data);
+        assert_eq!(format::read_raw::<u32>(&path).unwrap(), data);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]
     fn disk_budget_violation_errors_cleanly() {
-        let cfg = ExternalConfig {
-            disk_budget_bytes: Some(1024), // far below the dataset
-            ..tiny_cfg()
-        };
-        let mut rng = Rng::new(104);
-        let data = gen_u32(&mut rng, 10_000, Distribution::Uniform);
-        let err = format!("{:#}", sort_vec(&data, &cfg).unwrap_err());
-        assert!(err.contains("disk budget exceeded"), "{err}");
+        for threads in [1usize, 4] {
+            let cfg = ExternalConfig {
+                disk_budget_bytes: Some(1024), // far below the dataset
+                threads,
+                ..tiny_cfg()
+            };
+            let mut rng = Rng::new(104);
+            let data = gen_u32(&mut rng, 10_000, Distribution::Uniform);
+            let err = format!("{:#}", sort_vec(&data, &cfg).unwrap_err());
+            assert!(err.contains("disk budget exceeded"), "threads={threads}: {err}");
+        }
     }
 
     #[test]
     fn derived_sizes_are_sane() {
         let cfg = tiny_cfg();
-        assert_eq!(cfg.run_elems(), 1024);
-        assert_eq!(cfg.block_elems(), 64); // clamped to the minimum
+        assert_eq!(cfg.run_elems_for(4), 1024);
+        assert_eq!(cfg.run_elems_for(8), 512); // Kv records are twice as wide
+        assert_eq!(cfg.block_elems_for(4), 64); // clamped to the minimum
         let big = ExternalConfig::default();
-        assert_eq!(big.run_elems(), 16 << 20);
-        assert_eq!(big.block_elems(), (16 << 20) / 64);
+        assert_eq!(big.run_elems_for(4), 16 << 20);
+        assert_eq!(big.block_elems_for(4), (16 << 20) / 64);
+        assert_eq!(big.run_elems_for(16), 4 << 20);
+        assert!(big.effective_threads() >= 1);
+    }
+
+    #[test]
+    fn sort_file_dtype_dispatches_every_dtype() {
+        let dir = std::env::temp_dir().join(format!("flims-dtype-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = ExternalConfig { tmp_dir: Some(dir.clone()), ..tiny_cfg() };
+        for dtype in [Dtype::U32, Dtype::U64, Dtype::Kv, Dtype::Kv64, Dtype::F32] {
+            let input = dir.join(format!("in.{}", dtype.name()));
+            let output = dir.join(format!("out.{}", dtype.name()));
+            // 600 records of `wire_bytes` each, from a shared byte soup.
+            let n = 600usize;
+            let bytes: Vec<u8> =
+                (0..n * dtype.wire_bytes()).map(|i| (i as u32).wrapping_mul(2654435761) as u8).collect();
+            std::fs::write(&input, &bytes).unwrap();
+            let stats = sort_file_dtype(&input, &output, &cfg, dtype).unwrap();
+            assert_eq!(stats.elements, n as u64, "{dtype:?}");
+            assert_eq!(
+                std::fs::metadata(&output).unwrap().len() as usize,
+                n * dtype.wire_bytes(),
+                "{dtype:?}"
+            );
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

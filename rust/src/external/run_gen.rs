@@ -1,42 +1,53 @@
 //! Phase 1: run generation. Stream the unsorted input in bounded-memory
 //! chunks, sort each chunk with the in-memory FLiMS pipeline
-//! (`flims::sort::sort_desc`), and spill it as one descending run.
+//! (per-dtype via [`ExtItem::sort_run`] — stable for payload records),
+//! and spill it as one descending run.
+//!
+//! With `threads > 1` the chunks flow through a bounded work queue: the
+//! coordinating thread reads chunks in input order and feeds a pool of
+//! sort workers; sorted chunks come back on a completion channel and are
+//! spilled strictly in sequence, so the run layout on disk is identical
+//! for every worker count (the determinism the concurrency tests pin
+//! down). In-flight chunks are capped at `2 × threads`, bounding resident
+//! memory at ≈ `2 × threads × mem_budget_bytes` in parallel mode.
 
-use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
 
-use crate::flims::sort::sort_desc;
+use anyhow::{anyhow, Result};
 
-use super::format::{RawReader, RunFile};
+use super::format::{ExtItem, RawReader, RunFile, RUN_HEADER_BYTES};
 use super::spill::SpillManager;
 use super::ExternalConfig;
 
-/// Source of unsorted u32 blocks — a dataset file, an in-memory slice,
-/// or anything else that can feed the run generator.
-pub trait U32Source {
+/// Source of unsorted record blocks — a dataset file, an in-memory
+/// slice, or anything else that can feed the run generator.
+pub trait RecordSource<T: ExtItem> {
     /// Append up to `max` elements to `out`; `Ok(0)` means exhausted.
-    fn read_block(&mut self, out: &mut Vec<u32>, max: usize) -> Result<usize>;
+    fn read_block(&mut self, out: &mut Vec<T>, max: usize) -> Result<usize>;
 }
 
-impl U32Source for RawReader {
-    fn read_block(&mut self, out: &mut Vec<u32>, max: usize) -> Result<usize> {
+impl<T: ExtItem> RecordSource<T> for RawReader<T> {
+    fn read_block(&mut self, out: &mut Vec<T>, max: usize) -> Result<usize> {
         RawReader::read_block(self, out, max)
     }
 }
 
 /// In-memory source (service-path sorts, tests).
-pub struct SliceSource<'a> {
-    data: &'a [u32],
+pub struct SliceSource<'a, T> {
+    data: &'a [T],
     pos: usize,
 }
 
-impl<'a> SliceSource<'a> {
-    pub fn new(data: &'a [u32]) -> Self {
+impl<'a, T> SliceSource<'a, T> {
+    pub fn new(data: &'a [T]) -> Self {
         SliceSource { data, pos: 0 }
     }
 }
 
-impl U32Source for SliceSource<'_> {
-    fn read_block(&mut self, out: &mut Vec<u32>, max: usize) -> Result<usize> {
+impl<T: ExtItem> RecordSource<T> for SliceSource<'_, T> {
+    fn read_block(&mut self, out: &mut Vec<T>, max: usize) -> Result<usize> {
         let take = max.min(self.data.len() - self.pos);
         out.extend_from_slice(&self.data[self.pos..self.pos + take]);
         self.pos += take;
@@ -44,53 +55,181 @@ impl U32Source for SliceSource<'_> {
     }
 }
 
-/// Consume `src`, spilling sorted runs of at most `cfg.run_elems()`
-/// elements each. The run buffer is the only O(budget) allocation.
-pub fn generate_runs(
-    src: &mut dyn U32Source,
+/// Read one run-sized chunk (or whatever is left) from the source into
+/// a caller-owned buffer (cleared first), so the serial path reuses one
+/// allocation across every run.
+fn read_chunk_into<T: ExtItem>(
+    src: &mut dyn RecordSource<T>,
+    buf: &mut Vec<T>,
+    run_elems: usize,
+) -> Result<()> {
+    buf.clear();
+    while buf.len() < run_elems {
+        if src.read_block(buf, run_elems - buf.len())? == 0 {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// [`read_chunk_into`] with a fresh buffer — the parallel path needs an
+/// owned chunk per work item anyway.
+fn read_chunk<T: ExtItem>(
+    src: &mut dyn RecordSource<T>,
+    run_elems: usize,
+) -> Result<Vec<T>> {
+    let mut buf = Vec::with_capacity(run_elems);
+    read_chunk_into(src, &mut buf, run_elems)?;
+    Ok(buf)
+}
+
+/// Spill one sorted buffer as the next run (budget check up front: fail
+/// before the disk fills, not after).
+fn spill_sorted_run<T: ExtItem>(
+    spill: &mut SpillManager,
+    buf: &[T],
+    runs: &mut Vec<RunFile>,
+) -> Result<()> {
+    spill.check_headroom(RUN_HEADER_BYTES + (buf.len() * T::WIRE_BYTES) as u64)?;
+    let mut writer = spill.create_run::<T>()?;
+    writer.write_block(buf)?;
+    let run = writer.finish()?;
+    spill.register(&run)?;
+    runs.push(run);
+    Ok(())
+}
+
+/// Consume `src`, spilling sorted runs of at most
+/// `cfg.run_elems_for::<T>()` elements each, on `cfg.effective_threads()`
+/// workers. Runs are numbered and returned in input order regardless of
+/// the worker count.
+pub fn generate_runs<T: ExtItem>(
+    src: &mut dyn RecordSource<T>,
     cfg: &ExternalConfig,
     spill: &mut SpillManager,
 ) -> Result<Vec<RunFile>> {
-    let run_elems = cfg.run_elems();
+    let threads = cfg.effective_threads();
+    if threads <= 1 {
+        generate_runs_serial(src, cfg, spill)
+    } else {
+        generate_runs_parallel(src, cfg, spill, threads)
+    }
+}
+
+fn generate_runs_serial<T: ExtItem>(
+    src: &mut dyn RecordSource<T>,
+    cfg: &ExternalConfig,
+    spill: &mut SpillManager,
+) -> Result<Vec<RunFile>> {
+    let run_elems = cfg.run_elems_for(T::WIRE_BYTES);
     let mut runs = Vec::new();
-    let mut buf: Vec<u32> = Vec::with_capacity(run_elems);
+    let mut buf: Vec<T> = Vec::with_capacity(run_elems);
     loop {
-        buf.clear();
-        while buf.len() < run_elems {
-            if src.read_block(&mut buf, run_elems - buf.len())? == 0 {
-                break;
-            }
-        }
+        read_chunk_into(src, &mut buf, run_elems)?;
         if buf.is_empty() {
             break;
         }
-        sort_desc(&mut buf, cfg.sort_config());
-        // Budget check up front: fail before the disk fills, not after.
-        spill.check_headroom(
-            crate::external::format::RUN_HEADER_BYTES + (buf.len() * 4) as u64,
-        )?;
-        let mut writer = spill.create_run()?;
-        writer.write_block(&buf)?;
-        let run = writer.finish()?;
-        spill.register(&run)?;
-        runs.push(run);
+        T::sort_run(&mut buf, cfg.sort_config());
+        spill_sorted_run(spill, &buf, &mut runs)?;
     }
     Ok(runs)
+}
+
+fn generate_runs_parallel<T: ExtItem>(
+    src: &mut dyn RecordSource<T>,
+    cfg: &ExternalConfig,
+    spill: &mut SpillManager,
+    threads: usize,
+) -> Result<Vec<RunFile>> {
+    let run_elems = cfg.run_elems_for(T::WIRE_BYTES);
+    let sort_cfg = cfg.sort_config();
+    // Cap on chunks that are queued, being sorted, or sorted-but-not-yet
+    // spilled: bounds both memory and the reorder window.
+    let max_in_flight = 2 * threads as u64;
+
+    std::thread::scope(|s| {
+        let (work_tx, work_rx) = mpsc::sync_channel::<(u64, Vec<T>)>(threads);
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let (done_tx, done_rx) = mpsc::channel::<(u64, Vec<T>)>();
+        for _ in 0..threads {
+            let rx = Arc::clone(&work_rx);
+            let tx = done_tx.clone();
+            s.spawn(move || loop {
+                let job = rx.lock().unwrap().recv();
+                let Ok((seq, mut buf)) = job else { break };
+                T::sort_run(&mut buf, sort_cfg);
+                if tx.send((seq, buf)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(done_tx);
+
+        let mut runs = Vec::new();
+        let mut pending: BTreeMap<u64, Vec<T>> = BTreeMap::new();
+        let mut next_read = 0u64; // next chunk sequence number to hand out
+        let mut next_write = 0u64; // next sequence number to spill
+        let mut eof = false;
+        let result = (|| -> Result<()> {
+            while !eof || next_write < next_read {
+                // Keep the queue fed up to the in-flight cap.
+                while !eof && next_read - next_write < max_in_flight {
+                    let buf = read_chunk(src, run_elems)?;
+                    if buf.is_empty() {
+                        eof = true;
+                        break;
+                    }
+                    if buf.len() < run_elems {
+                        eof = true; // short chunk: source exhausted
+                    }
+                    work_tx
+                        .send((next_read, buf))
+                        .map_err(|_| anyhow!("run-gen workers exited early"))?;
+                    next_read += 1;
+                }
+                if next_write >= next_read {
+                    break; // eof and everything spilled
+                }
+                // Collect a sorted chunk, then spill every chunk that is
+                // now contiguous with the write frontier.
+                let (seq, buf) = done_rx
+                    .recv()
+                    .map_err(|_| anyhow!("run-gen workers exited early"))?;
+                pending.insert(seq, buf);
+                while let Some(buf) = pending.remove(&next_write) {
+                    spill_sorted_run(spill, &buf, &mut runs)?;
+                    next_write += 1;
+                }
+            }
+            Ok(())
+        })();
+        // Closing the work queue releases the pool; the scope joins the
+        // workers after the channels (and any queued buffers) drop.
+        drop(work_tx);
+        result.map(|()| runs)
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::{gen_u32, Distribution};
+    use crate::data::{gen_kv, gen_u32, Distribution};
     use crate::external::format::RunReader;
-    use crate::key::is_sorted_desc;
+    use crate::key::{is_sorted_desc, Kv};
     use crate::util::rng::Rng;
 
     fn small_cfg() -> ExternalConfig {
         ExternalConfig {
-            mem_budget_bytes: 4096, // 1024-element runs
+            mem_budget_bytes: 4096, // 1024-element u32 runs
             ..Default::default()
         }
+    }
+
+    fn read_run<T: ExtItem>(run: &RunFile) -> Vec<T> {
+        let mut r = RunReader::<T>::open(&run.path).unwrap();
+        let mut v = Vec::new();
+        while r.read_block(&mut v, 512).unwrap() > 0 {}
+        v
     }
 
     #[test]
@@ -108,9 +247,7 @@ mod tests {
 
         let mut all = Vec::new();
         for run in &runs {
-            let mut r = RunReader::open(&run.path).unwrap();
-            let mut v = Vec::new();
-            while r.read_block(&mut v, 512).unwrap() > 0 {}
+            let v = read_run::<u32>(run);
             assert_eq!(v.len() as u64, run.elems);
             assert!(is_sorted_desc(&v), "run {} not sorted", run.path.display());
             all.extend(v);
@@ -122,13 +259,66 @@ mod tests {
     }
 
     #[test]
-    fn empty_input_spills_nothing() {
-        let cfg = small_cfg();
+    fn parallel_run_layout_matches_serial() {
+        // The same input must produce byte-identical, identically-named
+        // runs whatever the worker count.
+        let mut rng = Rng::new(92);
+        let data = gen_u32(&mut rng, 10_000, Distribution::Uniform);
+        let mut layouts: Vec<Vec<(String, Vec<u32>)>> = Vec::new();
+        for threads in [1usize, 2, 8] {
+            let cfg = ExternalConfig { threads, ..small_cfg() };
+            let mut spill = SpillManager::new(None, None).unwrap();
+            let mut src = SliceSource::new(&data);
+            let runs = generate_runs(&mut src, &cfg, &mut spill).unwrap();
+            layouts.push(
+                runs.iter()
+                    .map(|r| {
+                        let name =
+                            r.path.file_name().unwrap().to_string_lossy().into_owned();
+                        (name, read_run::<u32>(r))
+                    })
+                    .collect(),
+            );
+        }
+        assert_eq!(layouts[0], layouts[1], "threads=2 differs from serial");
+        assert_eq!(layouts[0], layouts[2], "threads=8 differs from serial");
+    }
+
+    #[test]
+    fn kv_runs_are_stably_sorted() {
+        // Duplicate-heavy Kv input: within each run, equal keys must keep
+        // input order (payload = input index makes this checkable).
+        let mut rng = Rng::new(93);
+        let data = gen_kv(&mut rng, 3000, Distribution::DupHeavy { alphabet: 3 });
+        let cfg = ExternalConfig {
+            mem_budget_bytes: 8192, // 1024-element Kv runs
+            threads: 2,
+            ..Default::default()
+        };
         let mut spill = SpillManager::new(None, None).unwrap();
-        let mut src = SliceSource::new(&[]);
+        let mut src = SliceSource::new(&data);
         let runs = generate_runs(&mut src, &cfg, &mut spill).unwrap();
-        assert!(runs.is_empty());
-        assert_eq!(spill.runs_created(), 0);
+        assert_eq!(runs.len(), 3);
+        let run_elems = cfg.run_elems_for(Kv::WIRE_BYTES);
+        assert_eq!(run_elems, 1024);
+        for (i, run) in runs.iter().enumerate() {
+            let got = read_run::<Kv>(run);
+            let mut expect = data[i * run_elems..(i * run_elems + got.len())].to_vec();
+            expect.sort_by(|a, b| b.key.cmp(&a.key)); // std stable sort
+            assert_eq!(got, expect, "run {i} not stably sorted");
+        }
+    }
+
+    #[test]
+    fn empty_input_spills_nothing() {
+        for threads in [1usize, 4] {
+            let cfg = ExternalConfig { threads, ..small_cfg() };
+            let mut spill = SpillManager::new(None, None).unwrap();
+            let mut src = SliceSource::new(&[] as &[u32]);
+            let runs = generate_runs(&mut src, &cfg, &mut spill).unwrap();
+            assert!(runs.is_empty());
+            assert_eq!(spill.runs_created(), 0);
+        }
     }
 
     #[test]
@@ -139,7 +329,7 @@ mod tests {
             left: usize,
             next: u32,
         }
-        impl U32Source for Dribble {
+        impl RecordSource<u32> for Dribble {
             fn read_block(&mut self, out: &mut Vec<u32>, max: usize) -> Result<usize> {
                 let take = self.left.min(max).min(7);
                 for _ in 0..take {
@@ -157,5 +347,28 @@ mod tests {
         assert_eq!(runs.len(), 3);
         assert_eq!(runs[0].elems, 1024);
         assert_eq!(runs[2].elems, 3000 - 2048);
+    }
+
+    #[test]
+    fn source_errors_propagate_in_parallel_mode() {
+        struct Failing {
+            fed: usize,
+        }
+        impl RecordSource<u32> for Failing {
+            fn read_block(&mut self, out: &mut Vec<u32>, max: usize) -> Result<usize> {
+                if self.fed >= 2500 {
+                    anyhow::bail!("simulated I/O failure");
+                }
+                let take = max.min(500);
+                out.extend(std::iter::repeat(7u32).take(take));
+                self.fed += take;
+                Ok(take)
+            }
+        }
+        let cfg = ExternalConfig { threads: 4, ..small_cfg() };
+        let mut spill = SpillManager::new(None, None).unwrap();
+        let mut src = Failing { fed: 0 };
+        let err = format!("{:#}", generate_runs(&mut src, &cfg, &mut spill).unwrap_err());
+        assert!(err.contains("simulated I/O failure"), "{err}");
     }
 }

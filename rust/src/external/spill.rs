@@ -13,7 +13,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Context, Result};
 
-use super::format::{RunFile, RunWriter};
+use super::format::{ExtItem, RunFile, RunWriter};
 
 /// Distinguishes concurrent spill dirs within one process.
 static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
@@ -71,8 +71,11 @@ impl SpillManager {
         &self.dir
     }
 
-    /// Open a writer for the next run file.
-    pub fn create_run(&mut self) -> Result<RunWriter> {
+    /// Open a writer for the next run file. Naming is sequential in call
+    /// order, which the parallel phases rely on for deterministic run
+    /// layouts: writers are always created on the coordinating thread in
+    /// input order, only the merging/sorting work fans out.
+    pub fn create_run<T: ExtItem>(&mut self) -> Result<RunWriter<T>> {
         let path = self.dir.join(format!("run-{:06}.flr", self.next_run));
         self.next_run += 1;
         RunWriter::create(&path)
@@ -198,12 +201,12 @@ mod tests {
         // but not two.
         let mut sm = SpillManager::new(None, Some(30)).unwrap();
         let mut w = sm.create_run().unwrap();
-        w.write_block(&[5, 4, 3]).unwrap();
+        w.write_block(&[5u32, 4, 3]).unwrap();
         let r1 = w.finish().unwrap();
         sm.register(&r1).unwrap();
 
         let mut w = sm.create_run().unwrap();
-        w.write_block(&[2, 1, 0]).unwrap();
+        w.write_block(&[2u32, 1, 0]).unwrap();
         let r2 = w.finish().unwrap();
         let err = format!("{:#}", sm.register(&r2).unwrap_err());
         assert!(err.contains("disk budget exceeded"), "{err}");

@@ -1,56 +1,170 @@
 //! Streaming merge nodes: an HPMT-style binary tree of FLiMS 2-way
-//! mergers over block-buffered inputs.
+//! mergers over block-buffered inputs, generic over the record type.
 //!
 //! Each [`MergeStream`] holds a bounded buffer per child and repeatedly
-//! emits the *safe prefix* of the two buffers — every element ≥ the
-//! larger of the two buffer minima, which no future element from either
-//! child can exceed (keys are compared as a multiset, so ties with
-//! unseen equal keys are harmless). The safe prefixes are merged with
-//! [`merge_desc_into`], the same `w`-lane FLiMS primitive the in-memory
-//! sort uses — the Merge-Path-style split just decides *how much* of
-//! each buffer the merger may consume this round.
+//! emits the *safe prefix* of the two buffers. The split is
+//! Merge-Path-style but additionally **stability-safe**: side A may
+//! emit keys `>=` B's future bound (an equal key arriving later from B
+//! belongs after A's copy anyway), while side B may only emit keys
+//! *strictly above* A's future bound (an equal future key from A must
+//! precede it). The prefixes are merged by [`ExtItem::merge_into`] —
+//! the paper's stable §4.2 FLiMS variant for payload records, the fast
+//! untagged lanes for plain keys (where ties are unobservable) — so the
+//! whole tree preserves input order on ties: the §6 tie-record
+//! guarantee, out-of-core.
+//!
+//! Leaves come in two flavours: [`ReaderStream`] (synchronous
+//! `read_block` on the hot path) and [`PrefetchStream`] (a
+//! double-buffered reader: a prefetch thread fills the next blocks into
+//! a bounded channel while the merger drains the current one, so disk
+//! latency overlaps with merge compute — TopSort's phase-overlap idea
+//! applied at the leaf).
 
-use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
 
-use crate::flims::lanes::merge_desc_into;
+use anyhow::{anyhow, bail, Result};
 
-use super::format::RunReader;
+use crate::key::Item;
 
-/// A stream of descending-sorted u32 blocks.
-pub trait RunStream {
+use super::format::{ExtItem, RunReader};
+
+/// A stream of descending-sorted blocks of `T`.
+pub trait RunStream<T> {
     /// Append the next descending-sorted block to `out`. Returns the
     /// number of elements appended; `Ok(0)` means exhausted for good.
-    fn next_block(&mut self, out: &mut Vec<u32>) -> Result<usize>;
+    fn next_block(&mut self, out: &mut Vec<T>) -> Result<usize>;
 }
 
-/// Leaf: a spilled run file, surfaced `block` elements at a time.
-pub struct ReaderStream {
-    reader: RunReader,
+/// Leaf: a spilled run file, surfaced `block` elements at a time with a
+/// blocking read on the calling thread.
+pub struct ReaderStream<T: ExtItem> {
+    reader: RunReader<T>,
     block: usize,
 }
 
-impl ReaderStream {
-    pub fn new(reader: RunReader, block: usize) -> Self {
+impl<T: ExtItem> ReaderStream<T> {
+    pub fn new(reader: RunReader<T>, block: usize) -> Self {
         ReaderStream { reader, block: block.max(1) }
     }
 }
 
-impl RunStream for ReaderStream {
-    fn next_block(&mut self, out: &mut Vec<u32>) -> Result<usize> {
+impl<T: ExtItem> RunStream<T> for ReaderStream<T> {
+    fn next_block(&mut self, out: &mut Vec<T>) -> Result<usize> {
         self.reader.read_block(out, self.block)
     }
 }
 
+/// Shared hit/miss counters for the prefetch leaves of one sort:
+/// a *hit* is a block that was already buffered when the merger asked
+/// (the disk read was fully overlapped); a *miss* had to block.
+#[derive(Debug, Default)]
+pub struct PrefetchCounters {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+}
+
+/// Leaf: a double-buffered run reader. A dedicated thread reads ahead up
+/// to `depth` blocks into a bounded channel; `next_block` usually just
+/// receives an already-filled buffer, removing the blocking `read_block`
+/// from the merge hot path.
+pub struct PrefetchStream<T: ExtItem> {
+    rx: Option<mpsc::Receiver<Result<Vec<T>>>>,
+    handle: Option<JoinHandle<()>>,
+    counters: Arc<PrefetchCounters>,
+}
+
+impl<T: ExtItem> PrefetchStream<T> {
+    /// Errors (instead of aborting the process) when the OS refuses
+    /// another thread — large `fan_in × threads` products can ask for a
+    /// lot of leaves.
+    pub fn spawn(
+        mut reader: RunReader<T>,
+        block: usize,
+        depth: usize,
+        counters: Arc<PrefetchCounters>,
+    ) -> Result<Self> {
+        let block = block.max(1);
+        let (tx, rx) = mpsc::sync_channel::<Result<Vec<T>>>(depth.max(1));
+        let handle = std::thread::Builder::new()
+            .name("flims-prefetch".into())
+            .spawn(move || loop {
+                let mut buf = Vec::with_capacity(block);
+                match reader.read_block(&mut buf, block) {
+                    Ok(0) => break, // EOF: closing the channel signals it
+                    Ok(_) => {
+                        if tx.send(Ok(buf)).is_err() {
+                            break; // consumer dropped mid-stream
+                        }
+                    }
+                    Err(e) => {
+                        let _ = tx.send(Err(e));
+                        break;
+                    }
+                }
+            })
+            .map_err(|e| anyhow!("spawning prefetch reader thread: {e}"))?;
+        Ok(PrefetchStream { rx: Some(rx), handle: Some(handle), counters })
+    }
+
+    fn shut_down(&mut self) {
+        // Dropping the receiver unblocks any in-flight send; then the
+        // reader thread exits and join cannot deadlock.
+        self.rx = None;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl<T: ExtItem> RunStream<T> for PrefetchStream<T> {
+    fn next_block(&mut self, out: &mut Vec<T>) -> Result<usize> {
+        let Some(rx) = self.rx.take() else { return Ok(0) };
+        let received = match rx.try_recv() {
+            Ok(b) => {
+                self.counters.hits.fetch_add(1, Ordering::Relaxed);
+                Some(b)
+            }
+            Err(TryRecvError::Empty) => match rx.recv() {
+                Ok(b) => {
+                    self.counters.misses.fetch_add(1, Ordering::Relaxed);
+                    Some(b)
+                }
+                Err(_) => None,
+            },
+            Err(TryRecvError::Disconnected) => None,
+        };
+        let Some(block) = received else {
+            // Channel closed = reader finished (EOF or after an error it
+            // already reported); reap the thread.
+            self.shut_down();
+            return Ok(0);
+        };
+        self.rx = Some(rx);
+        let buf = block?;
+        out.extend_from_slice(&buf);
+        Ok(buf.len())
+    }
+}
+
+impl<T: ExtItem> Drop for PrefetchStream<T> {
+    fn drop(&mut self) {
+        self.shut_down();
+    }
+}
+
 /// One buffered input side of a merge node.
-struct Side {
-    buf: Vec<u32>,
+struct Side<T> {
+    buf: Vec<T>,
     /// Consumed prefix of `buf`.
     pos: usize,
     /// The child returned 0 — no future elements exist.
     done: bool,
 }
 
-impl Side {
+impl<T: Item> Side<T> {
     fn new() -> Self {
         Side { buf: Vec::new(), pos: 0, done: false }
     }
@@ -61,7 +175,7 @@ impl Side {
 
     /// Top up to at least `target` available elements (unless the child
     /// runs dry first). Invariant afterwards: `avail() == 0 ⇒ done`.
-    fn refill(&mut self, child: &mut dyn RunStream, target: usize) -> Result<()> {
+    fn refill(&mut self, child: &mut dyn RunStream<T>, target: usize) -> Result<()> {
         if self.done || self.avail() >= target {
             return Ok(());
         }
@@ -76,45 +190,44 @@ impl Side {
         Ok(())
     }
 
-    /// Minimum key still buffered — a bound on nothing: every *future*
-    /// element from this side is ≤ this value (descending input).
-    fn min_bound(&self) -> Option<u32> {
+    /// Minimum buffered key — every *future* element from this side has
+    /// a key ≤ this value (descending input). `None` = exhausted, no
+    /// constraint.
+    fn min_bound(&self) -> Option<T::K> {
         if self.done {
-            None // no future elements; no constraint
+            None
         } else {
-            self.buf.last().copied()
+            self.buf.last().map(|x| x.key())
         }
     }
 }
 
-/// Internal node: FLiMS 2-way merge of two child streams.
-pub struct MergeStream {
-    a: Box<dyn RunStream>,
-    b: Box<dyn RunStream>,
-    sa: Side,
-    sb: Side,
+/// Internal node: FLiMS 2-way merge of two child streams via
+/// [`ExtItem::merge_into`]. Side A must carry the earlier input runs —
+/// the stable split and merger give its records priority on key ties.
+pub struct MergeStream<T: ExtItem> {
+    a: Box<dyn RunStream<T>>,
+    b: Box<dyn RunStream<T>>,
+    sa: Side<T>,
+    sb: Side<T>,
     block: usize,
     w: usize,
-    scratch: Vec<u32>,
 }
 
-impl MergeStream {
-    pub fn new(a: Box<dyn RunStream>, b: Box<dyn RunStream>, block: usize, w: usize) -> Self {
+impl<T: ExtItem> MergeStream<T> {
+    pub fn new(
+        a: Box<dyn RunStream<T>>,
+        b: Box<dyn RunStream<T>>,
+        block: usize,
+        w: usize,
+    ) -> Self {
         assert!(w.is_power_of_two());
-        MergeStream {
-            a,
-            b,
-            sa: Side::new(),
-            sb: Side::new(),
-            block: block.max(1),
-            w,
-            scratch: Vec::new(),
-        }
+        MergeStream { a, b, sa: Side::new(), sb: Side::new(), block: block.max(1), w }
     }
 }
 
-impl RunStream for MergeStream {
-    fn next_block(&mut self, out: &mut Vec<u32>) -> Result<usize> {
+impl<T: ExtItem> RunStream<T> for MergeStream<T> {
+    fn next_block(&mut self, out: &mut Vec<T>) -> Result<usize> {
         self.sa.refill(self.a.as_mut(), self.block)?;
         self.sb.refill(self.b.as_mut(), self.block)?;
         let (av, bv) = (self.sa.avail(), self.sb.avail());
@@ -133,30 +246,27 @@ impl RunStream for MergeStream {
             self.sa.pos = self.sa.buf.len();
             return Ok(av);
         }
-        // Safe-prefix split: elements ≥ t cannot be preceded by anything
-        // still unseen, so they may be merged and emitted now.
-        let threshold = match (self.sa.min_bound(), self.sb.min_bound()) {
-            (Some(x), Some(y)) => Some(x.max(y)),
-            (Some(x), None) => Some(x),
-            (None, Some(y)) => Some(y),
-            (None, None) => None, // both fully buffered: merge everything
-        };
+        // Stability-safe prefix split. Future B keys are ≤ B's bound, so
+        // an A record ≥ that bound can never be preceded by unseen B data
+        // (an equal future B key sorts after it: A wins ties). A B record
+        // needs its key strictly above A's bound — an equal future A key
+        // would have to come first.
         let a_avail = &self.sa.buf[self.sa.pos..];
         let b_avail = &self.sb.buf[self.sb.pos..];
-        let (ka, kb) = match threshold {
-            None => (av, bv),
-            Some(t) => (
-                a_avail.partition_point(|&x| x >= t),
-                b_avail.partition_point(|&x| x >= t),
-            ),
+        let ka = match self.sb.min_bound() {
+            None => av,
+            Some(tb) => a_avail.partition_point(|x| x.key() >= tb),
+        };
+        let kb = match self.sa.min_bound() {
+            None => bv,
+            Some(ta) => b_avail.partition_point(|x| x.key() > ta),
         };
         if ka + kb == 0 {
-            // Unreachable: the threshold equals the buffer minimum of a
-            // non-exhausted side, so that side's whole buffer qualifies.
-            bail!("merge stream stalled (threshold {threshold:?}, avail {av}/{bv})");
+            // Unreachable: if every B key ≤ A's minimum then every A key
+            // ≥ B's bound, so the whole A buffer qualifies.
+            bail!("merge stream stalled (avail {av}/{bv})");
         }
-        merge_desc_into(&a_avail[..ka], &b_avail[..kb], self.w, &mut self.scratch);
-        out.extend_from_slice(&self.scratch);
+        T::merge_into(&a_avail[..ka], &b_avail[..kb], self.w, out);
         self.sa.pos += ka;
         self.sb.pos += kb;
         Ok(ka + kb)
@@ -164,11 +274,17 @@ impl RunStream for MergeStream {
 }
 
 /// Fold `streams` into a balanced binary tree of [`MergeStream`] nodes.
+/// Input order is preserved left-to-right (earlier streams become A
+/// sides), so a run list ordered by input position merges stably.
 /// Panics on an empty input (callers handle the zero-run case).
-pub fn build_tree(mut streams: Vec<Box<dyn RunStream>>, block: usize, w: usize) -> Box<dyn RunStream> {
+pub fn build_tree<T: ExtItem>(
+    mut streams: Vec<Box<dyn RunStream<T>>>,
+    block: usize,
+    w: usize,
+) -> Box<dyn RunStream<T>> {
     assert!(!streams.is_empty(), "build_tree needs at least one stream");
     while streams.len() > 1 {
-        let mut next: Vec<Box<dyn RunStream>> = Vec::with_capacity(streams.len().div_ceil(2));
+        let mut next: Vec<Box<dyn RunStream<T>>> = Vec::with_capacity(streams.len().div_ceil(2));
         let mut it = streams.into_iter();
         while let Some(a) = it.next() {
             match it.next() {
@@ -182,7 +298,10 @@ pub fn build_tree(mut streams: Vec<Box<dyn RunStream>>, block: usize, w: usize) 
 }
 
 /// Drain a stream into `emit` block-by-block; returns total elements.
-pub fn pump(stream: &mut dyn RunStream, mut emit: impl FnMut(&[u32]) -> Result<()>) -> Result<u64> {
+pub fn pump<T>(
+    stream: &mut dyn RunStream<T>,
+    mut emit: impl FnMut(&[T]) -> Result<()>,
+) -> Result<u64> {
     let mut chunk = Vec::new();
     let mut total = 0u64;
     loop {
@@ -199,8 +318,8 @@ pub fn pump(stream: &mut dyn RunStream, mut emit: impl FnMut(&[u32]) -> Result<(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::{gen_u32, Distribution};
-    use crate::key::is_sorted_desc;
+    use crate::data::{gen_kv, gen_u32, Distribution};
+    use crate::key::{is_sorted_desc, Kv};
     use crate::util::rng::Rng;
 
     /// In-memory descending stream with configurable emission sizes.
@@ -217,7 +336,7 @@ mod tests {
         }
     }
 
-    impl RunStream for VecStream {
+    impl RunStream<u32> for VecStream {
         fn next_block(&mut self, out: &mut Vec<u32>) -> Result<usize> {
             let take = self.step.min(self.data.len() - self.pos);
             out.extend_from_slice(&self.data[self.pos..self.pos + take]);
@@ -226,7 +345,7 @@ mod tests {
         }
     }
 
-    fn drain(stream: &mut dyn RunStream) -> Vec<u32> {
+    fn drain(stream: &mut dyn RunStream<u32>) -> Vec<u32> {
         let mut out = Vec::new();
         pump(stream, |c| {
             out.extend_from_slice(c);
@@ -250,7 +369,7 @@ mod tests {
                 let a = gen_u32(&mut rng, na, Distribution::Uniform);
                 let b = gen_u32(&mut rng, nb, Distribution::Uniform);
                 let expect = oracle(&[a.clone(), b.clone()]);
-                let mut m = MergeStream::new(
+                let mut m: MergeStream<u32> = MergeStream::new(
                     Box::new(VecStream::new(a, 13)),
                     Box::new(VecStream::new(b, 5)),
                     block,
@@ -272,7 +391,7 @@ mod tests {
             let a = gen_u32(&mut rng, 700, dist);
             let b = gen_u32(&mut rng, 300, dist);
             let expect = oracle(&[a.clone(), b.clone()]);
-            let mut m = MergeStream::new(
+            let mut m: MergeStream<u32> = MergeStream::new(
                 Box::new(VecStream::new(a, 11)),
                 Box::new(VecStream::new(b, 23)),
                 32,
@@ -289,9 +408,9 @@ mod tests {
             let lists: Vec<Vec<u32>> =
                 (0..k).map(|i| gen_u32(&mut rng, 50 + i * 37, Distribution::Uniform)).collect();
             let expect = oracle(&lists);
-            let streams: Vec<Box<dyn RunStream>> = lists
+            let streams: Vec<Box<dyn RunStream<u32>>> = lists
                 .iter()
-                .map(|l| Box::new(VecStream::new(l.clone(), 9)) as Box<dyn RunStream>)
+                .map(|l| Box::new(VecStream::new(l.clone(), 9)) as Box<dyn RunStream<u32>>)
                 .collect();
             let mut tree = build_tree(streams, 16, 8);
             let got = drain(tree.as_mut());
@@ -305,7 +424,7 @@ mod tests {
         let mut rng = Rng::new(84);
         let a = gen_u32(&mut rng, 400, Distribution::Uniform);
         let b = gen_u32(&mut rng, 400, Distribution::Uniform);
-        let mut m = MergeStream::new(
+        let mut m: MergeStream<u32> = MergeStream::new(
             Box::new(VecStream::new(a, 17)),
             Box::new(VecStream::new(b, 29)),
             32,
@@ -326,5 +445,112 @@ mod tests {
             }
             last = chunk.last().copied();
         }
+    }
+
+    /// Kv stream over pre-sorted records, for stability checks.
+    struct KvStream {
+        data: Vec<Kv>,
+        pos: usize,
+        step: usize,
+    }
+
+    impl RunStream<Kv> for KvStream {
+        fn next_block(&mut self, out: &mut Vec<Kv>) -> Result<usize> {
+            let take = self.step.min(self.data.len() - self.pos);
+            out.extend_from_slice(&self.data[self.pos..self.pos + take]);
+            self.pos += take;
+            Ok(take)
+        }
+    }
+
+    #[test]
+    fn merge_stream_is_stable_on_ties() {
+        // Duplicate-heavy inputs: A's records must precede B's on equal
+        // keys, each input keeping its own order — across block splits.
+        let mut rng = Rng::new(85);
+        for (step_a, step_b, block) in [(3usize, 5usize, 4usize), (16, 7, 32), (1, 1, 1)] {
+            let mut a = gen_kv(&mut rng, 300, Distribution::DupHeavy { alphabet: 4 });
+            let mut b = gen_kv(&mut rng, 200, Distribution::DupHeavy { alphabet: 4 });
+            // B payloads offset so provenance is visible.
+            for kv in &mut b {
+                kv.val += 10_000;
+            }
+            a.sort_by(|x, y| y.key.cmp(&x.key)); // std stable sort
+            b.sort_by(|x, y| y.key.cmp(&x.key));
+            let mut expect: Vec<Kv> = a.iter().chain(b.iter()).copied().collect();
+            // Stable oracle: by key desc; ties keep A-then-B order
+            // because sort_by is stable and A precedes B in the input.
+            expect.sort_by(|x, y| y.key.cmp(&x.key));
+            let mut m: MergeStream<Kv> = MergeStream::new(
+                Box::new(KvStream { data: a, pos: 0, step: step_a }),
+                Box::new(KvStream { data: b, pos: 0, step: step_b }),
+                block,
+                8,
+            );
+            let mut got = Vec::new();
+            pump(&mut m, |c| {
+                got.extend_from_slice(c);
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(got, expect, "step_a={step_a} step_b={step_b} block={block}");
+        }
+    }
+
+    #[test]
+    fn prefetch_stream_matches_reader_stream() {
+        use super::super::format::{RunReader, RunWriter};
+        let dir = std::env::temp_dir().join(format!("flims-prefetch-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pf.flr");
+        let mut rng = Rng::new(86);
+        let mut data = gen_u32(&mut rng, 10_000, Distribution::Uniform);
+        data.sort_unstable_by(|a, b| b.cmp(a));
+        let mut w = RunWriter::create(&path).unwrap();
+        w.write_block(&data).unwrap();
+        w.finish().unwrap();
+
+        for depth in [1usize, 2, 8] {
+            let counters = Arc::new(PrefetchCounters::default());
+            let mut s: PrefetchStream<u32> = PrefetchStream::spawn(
+                RunReader::open(&path).unwrap(),
+                257,
+                depth,
+                Arc::clone(&counters),
+            )
+            .unwrap();
+            let mut got = Vec::new();
+            pump(&mut s, |c| {
+                got.extend_from_slice(c);
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(got, data, "depth={depth}");
+            let served = counters.hits.load(Ordering::Relaxed)
+                + counters.misses.load(Ordering::Relaxed);
+            assert_eq!(served, (10_000u64).div_ceil(257), "depth={depth}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn prefetch_stream_drops_cleanly_mid_stream() {
+        use super::super::format::{RunReader, RunWriter};
+        let dir = std::env::temp_dir().join(format!("flims-prefetch-drop-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pf.flr");
+        let data: Vec<u32> = (0..50_000u32).rev().collect();
+        let mut w = RunWriter::create(&path).unwrap();
+        w.write_block(&data).unwrap();
+        w.finish().unwrap();
+
+        let counters = Arc::new(PrefetchCounters::default());
+        let mut s: PrefetchStream<u32> =
+            PrefetchStream::spawn(RunReader::open(&path).unwrap(), 64, 2, counters).unwrap();
+        let mut out = Vec::new();
+        s.next_block(&mut out).unwrap();
+        assert!(!out.is_empty());
+        drop(s); // must join the reader thread without deadlocking
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

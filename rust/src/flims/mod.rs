@@ -29,4 +29,4 @@ pub use lanes::{merge_asc, merge_desc};
 pub use parallel::par_sort_desc;
 pub use scalar::{merge_basic, merge_skew, FlimsMerger, MergeTrace, Variant};
 pub use sort::{sort_asc, sort_desc, SortConfig};
-pub use stable::merge_stable;
+pub use stable::{merge_stable, merge_stable_into, sort_stable_desc};

@@ -76,12 +76,22 @@ impl<T: Item> Tagged<T> {
 
 /// Stable merge of two descending-sorted (stably) slices — algorithm 3.
 pub fn merge_stable<T: Item>(a: &[T], b: &[T], w: usize) -> Vec<T> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    merge_stable_into(a, b, w, &mut out);
+    out
+}
+
+/// [`merge_stable`] appending into a caller-owned buffer (`out` is not
+/// cleared) — the allocation-reusing form the external merge trees use
+/// on every block.
+pub fn merge_stable_into<T: Item>(a: &[T], b: &[T], w: usize, out: &mut Vec<T>) {
     assert!(w.is_power_of_two());
     let total = a.len() + b.len();
-    let mut out = Vec::with_capacity(total);
+    out.reserve(total);
     if total == 0 {
-        return out;
+        return;
     }
+    let base = out.len();
 
     let fetch_a = |i: usize, t: usize| -> Option<T> { a.get(i + w * t).copied() };
     let fetch_b = |i: usize, t: usize| -> Option<T> { b.get((w - 1 - i) + w * t).copied() };
@@ -160,8 +170,49 @@ pub fn merge_stable<T: Item>(a: &[T], b: &[T], w: usize) -> Vec<T> {
             out.push(s.item);
         }
     }
-    debug_assert_eq!(out.len(), total);
-    out
+    debug_assert_eq!(out.len() - base, total);
+}
+
+/// Stable descending sort of arbitrary [`Item`] records: insertion-sorted
+/// base runs of `cfg.chunk` (insertion sort is stable), then bottom-up
+/// [`merge_stable_into`] passes. This is the phase-1 pipeline the external
+/// sort uses for payload records (`Kv`/`Kv64`), where the paper's §6
+/// tie-record guarantee — ties keep input order, payloads ride untouched —
+/// must hold end to end; plain keys take the faster unstable
+/// [`crate::flims::sort::sort_desc`] instead.
+pub fn sort_stable_desc<T: Item>(x: &mut Vec<T>, cfg: crate::flims::sort::SortConfig) {
+    use crate::flims::chunk_sort::insertion_sort_desc;
+    let n = x.len();
+    let chunk = cfg.chunk.max(2);
+    for c in x.chunks_mut(chunk) {
+        insertion_sort_desc(c);
+    }
+    if n <= chunk {
+        return;
+    }
+    // Ping-pong between the input buffer and a scratch vector; merging
+    // adjacent runs keeps earlier-input records on the A side, so every
+    // pass (and hence the whole sort) is stable.
+    let mut src = std::mem::take(x);
+    let mut dst: Vec<T> = Vec::with_capacity(n);
+    let mut run = chunk;
+    while run < n {
+        dst.clear();
+        let mut pos = 0;
+        while pos < n {
+            let end = (pos + 2 * run).min(n);
+            let mid = (pos + run).min(end);
+            if mid == end {
+                dst.extend_from_slice(&src[pos..end]);
+            } else {
+                merge_stable_into(&src[pos..mid], &src[mid..end], cfg.w, &mut dst);
+            }
+            pos = end;
+        }
+        std::mem::swap(&mut src, &mut dst);
+        run *= 2;
+    }
+    *x = src;
 }
 
 #[cfg(test)]
@@ -268,5 +319,36 @@ mod tests {
         assert_eq!(merge_stable(&a, &b, 4), b);
         assert_eq!(merge_stable(&b, &a, 4), b);
         assert!(merge_stable(&a, &a, 4).is_empty());
+    }
+
+    #[test]
+    fn merge_stable_into_appends() {
+        let mut out = vec![Kv::new(99, 99)];
+        merge_stable_into(&[Kv::new(5, 0)], &[Kv::new(7, 1)], 4, &mut out);
+        assert_eq!(out, vec![Kv::new(99, 99), Kv::new(7, 1), Kv::new(5, 0)]);
+    }
+
+    #[test]
+    fn sort_stable_desc_matches_std_stable_sort() {
+        use crate::flims::sort::SortConfig;
+        let mut rng = Rng::new(34);
+        for n in [0usize, 1, 2, 100, 129, 1000, 5000] {
+            for alphabet in [2u32, 16, 1 << 20] {
+                let mut v = gen_kv(&mut rng, n, Distribution::DupHeavy { alphabet });
+                let mut expect = v.clone();
+                expect.sort_by(|a, b| b.key.cmp(&a.key)); // std stable sort
+                sort_stable_desc(&mut v, SortConfig { w: 8, chunk: 64 });
+                assert_eq!(v, expect, "n={n} alphabet={alphabet}");
+            }
+        }
+    }
+
+    #[test]
+    fn sort_stable_desc_all_equal_keeps_order() {
+        use crate::flims::sort::SortConfig;
+        let mut v: Vec<Kv> = (0..3000).map(|i| Kv::new(7, i)).collect();
+        let expect = v.clone();
+        sort_stable_desc(&mut v, SortConfig::default());
+        assert_eq!(v, expect);
     }
 }

@@ -26,9 +26,16 @@
 //!   for FLiMS/FLiMSj/PMT/MMS/VMS/WMS/EHMS/basic, with LUT/FF cost and
 //!   Fmax timing models (the FPGA-substrate substitute; DESIGN.md §4).
 //! * [`tree`] — PMT / HPMT merge-tree coordination (fig. 1–2).
-//! * [`external`] — out-of-core external sort: bounded-memory run
-//!   generation spilled to disk, then a k-way streaming merge through
-//!   trees of FLiMS 2-way mergers (multi-pass above the fan-in).
+//! * [`external`] — out-of-core external sort, parallel in both phases
+//!   and generic over the dataset type (`u32`/`u64`/`kv`/`kv64`/`f32`):
+//!   phase 1 spills bounded-memory runs from a pool of sort workers fed
+//!   by a bounded work queue; phase 2 is a k-way streaming merge through
+//!   trees of FLiMS 2-way mergers — the stable §4.2 variant for payload
+//!   records, the fast untagged lanes for plain keys (multi-pass above
+//!   the fan-in,
+//!   independent group merges of a pass running concurrently), with
+//!   double-buffered leaves — a prefetch thread per run overlaps disk
+//!   reads with merging. Key ties keep input order end to end (§6).
 //! * [`coordinator`] — sorting-as-a-service: router + dynamic batcher.
 //! * [`runtime`] — PJRT client wrapper executing `artifacts/*.hlo.txt`
 //!   (a stub unless built with the `pjrt` feature).
@@ -47,6 +54,6 @@ pub mod runtime;
 pub mod tree;
 pub mod util;
 
-pub use external::{sort_file, ExternalConfig, SpillStats};
+pub use external::{sort_file, sort_file_dtype, Dtype, ExtItem, ExternalConfig, SpillStats};
 pub use flims::{merge_asc, merge_desc, par_sort_desc, sort_asc, sort_desc, SortConfig};
 pub use key::{is_sorted_desc, F32Key, Item, Key, Kv, Kv64};

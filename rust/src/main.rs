@@ -5,7 +5,8 @@
 //! ```text
 //! flims sort     --n 1000000 [--dist uniform|zipf|dup] [--backend native|parallel|pjrt|external] [--w 16] [--chunk 128]
 //! flims merge    --n 65536 [--w 16]
-//! flims sortfile --input data.u32 [--output out.u32] [--budget-mb 64] [--fan-in 8] [--gen N]
+//! flims sortfile --input data.u32 [--output out.u32] [--dtype u32|u64|kv|kv64|f32]
+//!                [--budget-mb 64] [--fan-in 8] [--threads T] [--prefetch B] [--gen N]
 //! flims trace                              # the paper's Table 1 example
 //! flims simulate --design flims|flimsj|wms|mms|vms|basic --w 8 [--skew] [--dup]
 //! flims report   table2|table3|fig13 [--data-bits 64]
@@ -23,9 +24,11 @@ use std::time::Instant;
 
 use flims::baselines::{radix_sort_desc, samplesort_desc};
 use flims::external;
+use flims::external::{Dtype, ExtItem, ExternalConfig};
 use flims::config::{AppConfig, RawConfig};
 use flims::coordinator::{BatcherConfig, Router, Service};
-use flims::data::{gen_u32, Distribution};
+use flims::data::{gen_u32, gen_u64, Distribution};
+use flims::key::{F32Key, Item, Kv, Kv64};
 use flims::flims::scalar::{FlimsMerger, Variant};
 use flims::flims::{merge_desc, par_sort_desc, sort_desc, SortConfig};
 use flims::flims::parallel::ParSortConfig;
@@ -140,8 +143,9 @@ fn print_help() {
                      [--backend native|parallel|pjrt|external|std|radix|samplesort]\n\
                      [--w W] [--chunk C] [--threads T] [--config FILE]\n\
            merge     --n N [--w W]\n\
-           sortfile  --input F [--output F] [--budget-mb M] [--fan-in K]\n\
-                     [--gen N [--dist D] [--seed S]]   (raw u32 LE datasets)\n\
+           sortfile  --input F [--output F] [--dtype u32|u64|kv|kv64|f32]\n\
+                     [--budget-mb M] [--fan-in K] [--threads T] [--prefetch B]\n\
+                     [--gen N [--dist D] [--seed S]]   (raw LE record datasets)\n\
            trace     (replays the paper's Table 1 example, w=4)\n\
            simulate  --design flims|flimsj|wms|mms|vms|basic --w W [--skew] [--dup] [--n N]\n\
            report    table2|table3|fig13 [--data-bits B]\n\
@@ -238,6 +242,53 @@ fn cmd_merge(f: &HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+/// Dataset generation for `sortfile --gen`, per dtype. Payload records
+/// carry the input index so stability is visible in the output.
+trait GenRecord: ExtItem {
+    fn gen_block(rng: &mut Rng, n: usize, dist: Distribution, base_idx: u64) -> Vec<Self>;
+}
+
+impl GenRecord for u32 {
+    fn gen_block(rng: &mut Rng, n: usize, dist: Distribution, _base: u64) -> Vec<Self> {
+        gen_u32(rng, n, dist)
+    }
+}
+
+impl GenRecord for u64 {
+    fn gen_block(rng: &mut Rng, n: usize, dist: Distribution, _base: u64) -> Vec<Self> {
+        gen_u64(rng, n, dist)
+    }
+}
+
+impl GenRecord for Kv {
+    fn gen_block(rng: &mut Rng, n: usize, dist: Distribution, base: u64) -> Vec<Self> {
+        gen_u32(rng, n, dist)
+            .into_iter()
+            .enumerate()
+            .map(|(i, key)| Kv::new(key, (base + i as u64) as u32))
+            .collect()
+    }
+}
+
+impl GenRecord for Kv64 {
+    fn gen_block(rng: &mut Rng, n: usize, dist: Distribution, base: u64) -> Vec<Self> {
+        gen_u64(rng, n, dist)
+            .into_iter()
+            .enumerate()
+            .map(|(i, key)| Kv64 { key, val: base + i as u64 })
+            .collect()
+    }
+}
+
+impl GenRecord for F32Key {
+    fn gen_block(rng: &mut Rng, n: usize, dist: Distribution, _base: u64) -> Vec<Self> {
+        gen_u32(rng, n, dist)
+            .into_iter()
+            .map(|x| F32Key::from_f32(x as f32 - (u32::MAX / 2) as f32))
+            .collect()
+    }
+}
+
 fn cmd_sortfile(f: &HashMap<String, String>) -> Result<(), String> {
     let cfg = load_config(f)?;
     let mut ext = cfg.external_config();
@@ -248,6 +299,16 @@ fn cmd_sortfile(f: &HashMap<String, String>) -> Result<(), String> {
     if let Some(fan) = f.get("fan-in") {
         ext.fan_in = fan.parse().map_err(|_| "--fan-in must be an integer".to_string())?;
     }
+    if let Some(t) = f.get("threads") {
+        ext.threads = t.parse().map_err(|_| "--threads must be an integer".to_string())?;
+    }
+    if let Some(p) = f.get("prefetch") {
+        ext.prefetch_blocks =
+            p.parse().map_err(|_| "--prefetch must be an integer".to_string())?;
+    }
+    if let Some(d) = f.get("dtype") {
+        ext.dtype = Dtype::parse(d)?;
+    }
     ext.validate()?;
     let input = PathBuf::from(
         f.get("input").ok_or_else(|| "sortfile: --input <path> required".to_string())?,
@@ -257,48 +318,72 @@ fn cmd_sortfile(f: &HashMap<String, String>) -> Result<(), String> {
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from(format!("{}.sorted", input.display())));
 
+    match ext.dtype {
+        Dtype::U32 => sortfile_typed::<u32>(f, &ext, &input, &output),
+        Dtype::U64 => sortfile_typed::<u64>(f, &ext, &input, &output),
+        Dtype::Kv => sortfile_typed::<Kv>(f, &ext, &input, &output),
+        Dtype::Kv64 => sortfile_typed::<Kv64>(f, &ext, &input, &output),
+        Dtype::F32 => sortfile_typed::<F32Key>(f, &ext, &input, &output),
+    }
+}
+
+fn sortfile_typed<T: GenRecord>(
+    f: &HashMap<String, String>,
+    ext: &ExternalConfig,
+    input: &std::path::Path,
+    output: &std::path::Path,
+) -> Result<(), String> {
     if let Some(n) = f.get("gen") {
         let n: usize = n.parse().map_err(|_| "--gen must be an integer".to_string())?;
         let dist = dist_of(f)?;
         let mut rng = Rng::new(get_usize(f, "seed", 42)? as u64);
-        let mut w = external::RawWriter::create(&input).map_err(|e| format!("{e:#}"))?;
-        let mut left = n;
-        while left > 0 {
-            let take = left.min(1 << 20);
-            let block = gen_u32(&mut rng, take, dist);
+        let mut w = external::RawWriter::<T>::create(input).map_err(|e| format!("{e:#}"))?;
+        let mut written = 0usize;
+        while written < n {
+            let take = (n - written).min(1 << 20);
+            let block = T::gen_block(&mut rng, take, dist, written as u64);
             w.write_block(&block).map_err(|e| format!("{e:#}"))?;
-            left -= take;
+            written += take;
         }
         w.finish().map_err(|e| format!("{e:#}"))?;
-        println!("generated {} u32 ({}) into {}", n, dist.name(), input.display());
+        println!(
+            "generated {} {} ({}) into {}",
+            n,
+            T::DTYPE.name(),
+            dist.name(),
+            input.display()
+        );
     }
 
     let t = Instant::now();
-    let stats = external::sort_file(&input, &output, &ext).map_err(|e| format!("{e:#}"))?;
+    let stats = external::sort_file::<T>(input, output, ext).map_err(|e| format!("{e:#}"))?;
     let dt = t.elapsed();
 
     // Streaming verification — never loads the dataset whole.
-    let mut r = external::RawReader::open(&output).map_err(|e| format!("{e:#}"))?;
-    let mut buf: Vec<u32> = Vec::new();
-    let mut prev: Option<u32> = None;
+    let mut r = external::RawReader::<T>::open(output).map_err(|e| format!("{e:#}"))?;
+    let mut buf: Vec<T> = Vec::new();
+    let mut prev: Option<T::K> = None;
     loop {
         buf.clear();
         if r.read_block(&mut buf, 1 << 16).map_err(|e| format!("{e:#}"))? == 0 {
             break;
         }
-        if !is_sorted_desc(&buf) || prev.is_some_and(|p| buf[0] > p) {
+        if !is_sorted_desc(&buf) || prev.is_some_and(|p| buf[0].key() > p) {
             return Err("output is not sorted!".into());
         }
-        prev = buf.last().copied();
+        prev = buf.last().map(|x| x.key());
     }
 
     let mb = |bytes: u64| bytes as f64 / (1 << 20) as f64;
     println!(
-        "externally sorted {} u32 ({:.1} MB) in {:?} — {:.1} M elem/s",
+        "externally sorted {} {} ({:.1} MB) in {:?} — {:.1} M elem/s ({} threads, prefetch {})",
         stats.elements,
-        mb(stats.elements * 4),
+        T::DTYPE.name(),
+        mb(stats.elements * T::WIRE_BYTES as u64),
         dt,
-        stats.elements as f64 / dt.as_secs_f64() / 1e6
+        stats.elements as f64 / dt.as_secs_f64() / 1e6,
+        ext.effective_threads(),
+        ext.prefetch_blocks,
     );
     println!(
         "  budget {:.1} MB | {} runs spilled ({:.1} MB written, peak {:.1} MB live) | {} merge passes → {}",
@@ -308,6 +393,13 @@ fn cmd_sortfile(f: &HashMap<String, String>) -> Result<(), String> {
         mb(stats.peak_spill_bytes),
         stats.merge_passes,
         output.display()
+    );
+    println!(
+        "  phase1 {:.1} ms | phase2 {:.1} ms | prefetch {} hits / {} misses",
+        stats.phase1_us as f64 / 1000.0,
+        stats.phase2_us as f64 / 1000.0,
+        stats.prefetch_hits,
+        stats.prefetch_misses,
     );
     Ok(())
 }

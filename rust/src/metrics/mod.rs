@@ -109,6 +109,15 @@ pub struct ServiceMetrics {
     pub bytes_spilled: Counter,
     /// Merge passes executed over spilled data.
     pub merge_passes: Counter,
+    /// Cumulative phase-1 (run generation) wall-clock, microseconds.
+    pub phase1_us: Counter,
+    /// Cumulative phase-2 (k-way merge) wall-clock, microseconds.
+    pub phase2_us: Counter,
+    /// Leaf blocks the prefetch threads had ready before the merge
+    /// asked (disk read fully overlapped with merging).
+    pub prefetch_hits: Counter,
+    /// Leaf blocks the merge had to wait for.
+    pub prefetch_misses: Counter,
 }
 
 impl ServiceMetrics {
@@ -116,7 +125,8 @@ impl ServiceMetrics {
     pub fn report(&self) -> String {
         format!(
             "requests={} batches={} elements={} errors={} latency[{}] \
-             external[sorts={} runs={} spilled_bytes={} passes={}]",
+             external[sorts={} runs={} spilled_bytes={} passes={} \
+             phase1_us={} phase2_us={} prefetch_hits={} prefetch_misses={}]",
             self.requests.get(),
             self.batches.get(),
             self.elements_sorted.get(),
@@ -126,6 +136,10 @@ impl ServiceMetrics {
             self.runs_spilled.get(),
             self.bytes_spilled.get(),
             self.merge_passes.get(),
+            self.phase1_us.get(),
+            self.phase2_us.get(),
+            self.prefetch_hits.get(),
+            self.prefetch_misses.get(),
         )
     }
 }
@@ -175,8 +189,14 @@ mod tests {
         m.runs_spilled.add(7);
         m.bytes_spilled.add(4096);
         m.merge_passes.add(2);
+        m.phase1_us.add(1500);
+        m.phase2_us.add(2500);
+        m.prefetch_hits.add(40);
+        m.prefetch_misses.add(2);
         let s = m.report();
-        assert!(s.contains("external[sorts=1 runs=7 spilled_bytes=4096 passes=2]"), "{s}");
+        assert!(s.contains("external[sorts=1 runs=7 spilled_bytes=4096 passes=2"), "{s}");
+        assert!(s.contains("phase1_us=1500 phase2_us=2500"), "{s}");
+        assert!(s.contains("prefetch_hits=40 prefetch_misses=2]"), "{s}");
     }
 
     #[test]

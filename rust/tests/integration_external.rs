@@ -1,7 +1,8 @@
 //! Integration: the out-of-core external sort — datasets several times
-//! the memory budget, every distribution, verified element-for-element
-//! against the std-sort baseline; plus the `sortfile` service command
-//! end-to-end over real TCP.
+//! the memory budget, every distribution and dtype, parallel and serial,
+//! verified element-for-element against the std-sort baseline; plus the
+//! `sortfile` service command end-to-end over real TCP and its error
+//! paths.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -12,10 +13,10 @@ use std::time::Duration;
 use flims::baselines::std_sort_desc;
 use flims::config::AppConfig;
 use flims::coordinator::{BatcherConfig, Router, Service};
-use flims::data::{gen_u32, Distribution};
+use flims::data::{gen_u32, gen_u64, Distribution};
 use flims::external::format::{read_raw, write_raw};
 use flims::external::{sort_file, sort_vec, ExternalConfig};
-use flims::key::is_sorted_desc;
+use flims::key::{is_sorted_desc, F32Key, Kv, Kv64};
 use flims::util::rng::Rng;
 
 fn test_dir(tag: &str) -> PathBuf {
@@ -24,8 +25,8 @@ fn test_dir(tag: &str) -> PathBuf {
     d
 }
 
-/// 64 KiB budget → 16384-element runs; small enough that a ~1M-element
-/// dataset is ≥ 16× the budget while the test stays fast.
+/// 64 KiB budget → 16384-element u32 runs; small enough that a
+/// ~1M-element dataset is ≥ 16× the budget while the test stays fast.
 fn tight_cfg(tmp: &Path) -> ExternalConfig {
     ExternalConfig {
         mem_budget_bytes: 64 << 10,
@@ -54,7 +55,7 @@ fn sort_file_4x_budget_all_distributions() {
         let output = dir.join(format!("{}.sorted", dist.name()));
         write_raw(&input, &data).unwrap();
 
-        let stats = sort_file(&input, &output, &cfg).unwrap();
+        let stats = sort_file::<u32>(&input, &output, &cfg).unwrap();
         assert_eq!(stats.elements, n as u64, "{dist:?}");
         // 2^18 elements / 2^14-element runs = 16 initial runs; fan-in 4
         // forces at least one intermediate pass.
@@ -63,8 +64,121 @@ fn sort_file_4x_budget_all_distributions() {
 
         let mut expect = data;
         std_sort_desc(&mut expect);
-        assert_eq!(read_raw(&output).unwrap(), expect, "{dist:?}");
+        assert_eq!(read_raw::<u32>(&output).unwrap(), expect, "{dist:?}");
     }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn parallel_sort_file_is_deterministic_across_thread_counts() {
+    // The same seeded input must produce byte-identical output files for
+    // threads = 1, 2, 8 — worker count may change scheduling, never the
+    // result.
+    let dir = test_dir("determinism");
+    let mut rng = Rng::new(9010);
+    let n = 1 << 18;
+    let data = gen_u32(&mut rng, n, Distribution::Uniform);
+    let input = dir.join("det.u32");
+    write_raw(&input, &data).unwrap();
+
+    let mut outputs: Vec<Vec<u8>> = Vec::new();
+    for threads in [1usize, 2, 8] {
+        let output = dir.join(format!("det.sorted.t{threads}"));
+        let cfg = ExternalConfig { threads, prefetch_blocks: 2, ..tight_cfg(&dir) };
+        let stats = sort_file::<u32>(&input, &output, &cfg).unwrap();
+        assert_eq!(stats.elements, n as u64, "threads={threads}");
+        outputs.push(std::fs::read(&output).unwrap());
+    }
+    assert_eq!(outputs[0], outputs[1], "threads=2 output differs from serial");
+    assert_eq!(outputs[0], outputs[2], "threads=8 output differs from serial");
+
+    // And the bytes actually are the descending std sort.
+    let mut expect = data;
+    std_sort_desc(&mut expect);
+    let expect_bytes: Vec<u8> = expect.iter().flat_map(|x| x.to_le_bytes()).collect();
+    assert_eq!(outputs[0], expect_bytes);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn kv_dataset_round_trips_stably() {
+    // Kv out-of-core: sorted descending by key, ties keeping input order
+    // (payload = input index), matching std's stable sort exactly.
+    let dir = test_dir("kv");
+    let mut rng = Rng::new(9011);
+    let n = 200_000usize;
+    let recs: Vec<Kv> = (0..n)
+        .map(|i| Kv::new(rng.below(1 << 10) as u32, i as u32))
+        .collect();
+    let input = dir.join("data.kv");
+    let output = dir.join("data.kv.sorted");
+    write_raw(&input, &recs).unwrap();
+
+    let cfg = ExternalConfig { threads: 4, ..tight_cfg(&dir) }; // 8192-record Kv runs
+    let stats = sort_file::<Kv>(&input, &output, &cfg).unwrap();
+    assert_eq!(stats.elements, n as u64);
+    assert!(stats.runs_spilled >= 24, "{}", stats.runs_spilled);
+
+    let mut expect = recs;
+    expect.sort_by(|a, b| b.key.cmp(&a.key)); // std stable sort
+    assert_eq!(read_raw::<Kv>(&output).unwrap(), expect);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn kv64_dataset_round_trips() {
+    let dir = test_dir("kv64");
+    let mut rng = Rng::new(9013);
+    let n = 100_000usize;
+    let recs: Vec<Kv64> = gen_u64(&mut rng, n, Distribution::DupHeavy { alphabet: 64 })
+        .into_iter()
+        .enumerate()
+        .map(|(i, key)| Kv64 { key, val: i as u64 })
+        .collect();
+    let input = dir.join("data.kv64");
+    let output = dir.join("data.kv64.sorted");
+    write_raw(&input, &recs).unwrap();
+
+    let stats = sort_file::<Kv64>(&input, &output, &tight_cfg(&dir)).unwrap();
+    assert_eq!(stats.elements, n as u64);
+    let mut expect = recs;
+    expect.sort_by(|a, b| b.key.cmp(&a.key));
+    assert_eq!(read_raw::<Kv64>(&output).unwrap(), expect);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn f32_dataset_round_trips() {
+    // f32 out-of-core, negatives and infinities included: the on-disk
+    // format is plain IEEE bits, the order is true numeric order.
+    let dir = test_dir("f32");
+    let mut rng = Rng::new(9012);
+    let n = 300_000usize;
+    let mut vals: Vec<f32> = (0..n)
+        .map(|_| (rng.next_u32() as f32 / 1e6) - 2000.0)
+        .collect();
+    vals[0] = f32::INFINITY;
+    vals[1] = f32::NEG_INFINITY;
+    vals[2] = 0.0;
+    vals[3] = -0.0;
+    let keys: Vec<F32Key> = vals.iter().map(|&x| F32Key::from_f32(x)).collect();
+    let input = dir.join("data.f32");
+    let output = dir.join("data.f32.sorted");
+    write_raw(&input, &keys).unwrap();
+
+    let cfg = ExternalConfig { threads: 2, ..tight_cfg(&dir) };
+    let stats = sort_file::<F32Key>(&input, &output, &cfg).unwrap();
+    assert_eq!(stats.elements, n as u64);
+
+    let got = read_raw::<F32Key>(&output).unwrap();
+    let mut expect = keys;
+    expect.sort_unstable_by(|a, b| b.cmp(a));
+    assert_eq!(got, expect);
+    // Spot-check true float order on the decoded values.
+    let floats: Vec<f32> = got.iter().map(|k| k.to_f32()).collect();
+    assert_eq!(floats[0], f32::INFINITY);
+    assert_eq!(*floats.last().unwrap(), f32::NEG_INFINITY);
+    assert!(floats.windows(2).all(|p| p[0] >= p[1]));
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
@@ -130,10 +244,13 @@ fn sortfile_service_round_trip_over_tcp() {
     let data = gen_u32(&mut rng, 200_000, Distribution::Uniform);
     write_raw(&input, &data).unwrap();
 
-    // Service with a tight external budget so the request really spills.
+    // Service with a tight external budget so the request really spills,
+    // on multiple workers with prefetching leaves.
     let mut app = AppConfig::default();
     app.external.mem_budget_bytes = 64 << 10;
     app.external.tmp_dir = Some(dir.clone());
+    app.external.threads = 2;
+    app.external.prefetch_blocks = 2;
     let router = Arc::new(Router::new(app, None));
     let service = Arc::new(Service::new(
         router,
@@ -160,14 +277,14 @@ fn sortfile_service_round_trip_over_tcp() {
 
     let mut expect = data;
     std_sort_desc(&mut expect);
-    assert_eq!(read_raw(Path::new(&expect_path)).unwrap(), expect);
+    assert_eq!(read_raw::<u32>(Path::new(&expect_path)).unwrap(), expect);
 
     // The spill counters are visible over the protocol.
     writeln!(conn, "stats").unwrap();
     let mut stats_line = String::new();
     reader.read_line(&mut stats_line).unwrap();
     assert!(stats_line.contains("external[sorts=1"), "{stats_line}");
-    assert!(!stats_line.contains("runs=0"), "{stats_line}");
+    assert!(!stats_line.contains(" runs=0"), "{stats_line}");
 
     // Errors come back on the same connection, which stays usable.
     writeln!(conn, "sortfile external {}/missing.u32", dir.display()).unwrap();
@@ -181,6 +298,49 @@ fn sortfile_service_round_trip_over_tcp() {
 
     service.shutdown();
     let _ = TcpStream::connect(addr);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn sortfile_service_error_paths_stay_one_line() {
+    let dir = test_dir("errs");
+    let router = Arc::new(Router::new(AppConfig::default(), None));
+    let service = Service::new(router, BatcherConfig::default());
+
+    // 1. Missing input file.
+    let resp = service.handle_line("sortfile external /nonexistent/nope.u32");
+    assert!(resp.starts_with("err "), "{resp}");
+    assert!(!resp.contains('\n'));
+
+    // 2. Output location unwritable: a directory squatting on
+    //    `<input>.sorted` makes the output uncreatable even for root.
+    let input = dir.join("blocked.u32");
+    write_raw(&input, &[3u32, 1, 2]).unwrap();
+    std::fs::create_dir_all(dir.join("blocked.u32.sorted")).unwrap();
+    let resp = service.handle_line(&format!("sortfile external {}", input.display()));
+    assert!(resp.starts_with("err "), "{resp}");
+    assert!(resp.contains("creating output"), "{resp}");
+    assert!(!resp.contains('\n'));
+
+    // 3. Dtype argument: valid dtype on a file of the wrong width.
+    let odd = dir.join("odd.u32");
+    std::fs::write(&odd, [0u8; 12]).unwrap(); // 12 bytes: 3×u32, not 16-byte kv64 records
+    let resp = service.handle_line(&format!("sortfile external {} dtype=kv64", odd.display()));
+    assert!(resp.starts_with("err "), "{resp}");
+    assert!(resp.contains("not a multiple of 16"), "{resp}");
+
+    // 4. An unknown dtype value errors loudly; a bare trailing word is
+    //    part of the path (missing file) — one line either way.
+    let resp = service.handle_line("sortfile external /tmp/whatever.u32 dtype=f64");
+    assert!(resp.starts_with("err "), "{resp}");
+    assert!(resp.contains("unknown dtype"), "{resp}");
+    let resp = service.handle_line("sortfile external /tmp/whatever.u32 f64");
+    assert!(resp.starts_with("err "), "{resp}");
+    assert!(!resp.contains('\n'));
+
+    // The service still answers afterwards.
+    assert_eq!(service.handle_line("sort native 2 1 3"), "ok 3 2 1");
+    assert_eq!(service.router.metrics.errors.get(), 5);
     std::fs::remove_dir_all(&dir).unwrap();
 }
 

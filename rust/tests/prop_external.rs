@@ -1,26 +1,30 @@
 //! Property tests over the external-sort subsystem (in-tree prop
-//! harness): arbitrary sizes, key ranges, budgets and fan-ins must all
-//! produce exactly the std-sorted multiset, via both the in-memory
-//! round-trip (`sort_vec`) and the on-disk path (`sort_file`).
+//! harness): arbitrary sizes, key ranges, budgets, fan-ins, worker
+//! counts and prefetch depths must all produce exactly the std-sorted
+//! multiset, via both the in-memory round-trip (`sort_vec`) and the
+//! on-disk path (`sort_file`) — and for `Kv` records the sort must be
+//! **stable** (the paper's §6 tie-record guarantee): equal keys keep
+//! input order and payloads ride through untouched.
 
 use std::path::PathBuf;
 
-use flims::external::{sort_file, sort_vec, ExternalConfig};
 use flims::external::format::{read_raw, write_raw};
-use flims::key::is_sorted_desc;
+use flims::external::{sort_file, sort_vec, ExternalConfig};
+use flims::key::{is_sorted_desc, Kv};
 use flims::util::prop::{check, Config};
 use flims::util::rng::Rng;
 
 fn rand_cfg(rng: &mut Rng) -> ExternalConfig {
     ExternalConfig {
-        // 4–16 KiB budgets → 1024–4096-element runs, so even small
+        // 4–16 KiB budgets → 1024–4096-element u32 runs, so even small
         // cases spill several runs.
         mem_budget_bytes: 4096 << rng.range(0, 3),
         fan_in: 2 + rng.range(0, 5),
         w: 1 << (2 + rng.range(0, 4)), // 4..32
         chunk: 128,
-        tmp_dir: None,
-        disk_budget_bytes: None,
+        threads: 1 + rng.range(0, 3),      // 1..3 workers
+        prefetch_blocks: rng.range(0, 3),  // 0 = synchronous leaves
+        ..Default::default()
     }
 }
 
@@ -69,8 +73,8 @@ fn prop_sort_file_round_trips() {
             let cfg = rand_cfg(rng);
             let data = gen_data(rng, size);
             write_raw(&input, &data).map_err(|e| format!("{e:#}"))?;
-            let stats = sort_file(&input, &output, &cfg).map_err(|e| format!("{e:#}"))?;
-            let out = read_raw(&output).map_err(|e| format!("{e:#}"))?;
+            let stats = sort_file::<u32>(&input, &output, &cfg).map_err(|e| format!("{e:#}"))?;
+            let out = read_raw::<u32>(&output).map_err(|e| format!("{e:#}"))?;
             let mut expect = data.clone();
             expect.sort_unstable_by(|a, b| b.cmp(a));
             if out != expect {
@@ -78,6 +82,94 @@ fn prop_sort_file_round_trips() {
             }
             if stats.merge_passes == 0 && !data.is_empty() {
                 return Err("no merge pass on nonempty input".into());
+            }
+            Ok(())
+        },
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Key shapes for the stability property — the §6 tie-record sweep the
+/// issue calls out: random, already sorted, reverse sorted, all equal.
+#[derive(Clone, Copy, Debug)]
+enum KeyShape {
+    Random,
+    Sorted,
+    Reverse,
+    AllEqual,
+}
+
+fn gen_kv_shaped(rng: &mut Rng, size: usize, shape: KeyShape) -> Vec<Kv> {
+    let n = size * 24 + rng.range(0, 97);
+    // A tight alphabet forces masses of ties whatever the shape.
+    let mut keys: Vec<u32> = (0..n).map(|_| rng.below(7) as u32).collect();
+    match shape {
+        KeyShape::Random => {}
+        KeyShape::Sorted => keys.sort_unstable(),
+        KeyShape::Reverse => keys.sort_unstable_by(|a, b| b.cmp(a)),
+        KeyShape::AllEqual => keys.iter_mut().for_each(|k| *k = 5),
+    }
+    // Payload = input index: any reordering of ties is detectable.
+    keys.into_iter()
+        .enumerate()
+        .map(|(i, key)| Kv::new(key, i as u32))
+        .collect()
+}
+
+#[test]
+fn prop_external_kv_sort_is_stable() {
+    for shape in [KeyShape::Random, KeyShape::Sorted, KeyShape::Reverse, KeyShape::AllEqual] {
+        check(
+            &format!("external: Kv sort stable ({shape:?})"),
+            Config { cases: 25, max_size: 220, ..Default::default() },
+            |rng, size| {
+                let cfg = rand_cfg(rng);
+                let data = gen_kv_shaped(rng, size, shape);
+                let (out, _) = sort_vec(&data, &cfg).map_err(|e| format!("{e:#}"))?;
+                // std's sort_by is stable: the exact expected answer.
+                let mut expect = data.clone();
+                expect.sort_by(|a, b| b.key.cmp(&a.key));
+                if out != expect {
+                    let bad = out
+                        .iter()
+                        .zip(&expect)
+                        .position(|(g, e)| g != e)
+                        .unwrap_or(out.len().min(expect.len()));
+                    return Err(format!(
+                        "instability at index {bad} (n={}, shape={shape:?}, cfg={cfg:?}): \
+                         got {:?}, want {:?}",
+                        data.len(),
+                        out.get(bad),
+                        expect.get(bad),
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_external_kv_file_sort_is_stable() {
+    // The on-disk path too: spill format + merge trees must both keep
+    // payloads attached and ties ordered.
+    let dir = std::env::temp_dir().join(format!("flims-propkv-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let input: PathBuf = dir.join("in.kv");
+    let output: PathBuf = dir.join("out.kv");
+    check(
+        "external: Kv sort_file stable",
+        Config { cases: 20, max_size: 200, ..Default::default() },
+        |rng, size| {
+            let cfg = rand_cfg(rng);
+            let data = gen_kv_shaped(rng, size, KeyShape::Random);
+            write_raw(&input, &data).map_err(|e| format!("{e:#}"))?;
+            sort_file::<Kv>(&input, &output, &cfg).map_err(|e| format!("{e:#}"))?;
+            let out = read_raw::<Kv>(&output).map_err(|e| format!("{e:#}"))?;
+            let mut expect = data.clone();
+            expect.sort_by(|a, b| b.key.cmp(&a.key));
+            if out != expect {
+                return Err(format!("unstable file round-trip (n={}, cfg={cfg:?})", data.len()));
             }
             Ok(())
         },
