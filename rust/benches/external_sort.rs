@@ -13,6 +13,12 @@
 //! and double-buffered leaves overlap disk reads with merging. The
 //! parallel rows should beat `threads = 1` from 2 workers up.
 //!
+//! Part 3 sweeps the run codec (raw vs delta) over input distributions:
+//! uniform (worst case for delta), nearly-sorted, and skewed (zipf +
+//! dup-heavy). Delta must report `spilled encoded < spilled raw` on the
+//! sorted/skewed rows — the ~2-4× spill-bandwidth cut the ROADMAP
+//! promised — while the uniform row shows the codec's floor.
+//!
 //! Run: `cargo bench --bench external_sort`
 
 use std::time::Instant;
@@ -20,7 +26,7 @@ use std::time::Instant;
 use flims::baselines::std_sort_desc;
 use flims::data::{gen_u32, Distribution};
 use flims::external::format::{read_raw, write_raw};
-use flims::external::{sort_file, ExternalConfig};
+use flims::external::{sort_file, Codec, ExternalConfig};
 use flims::util::rng::Rng;
 
 fn main() {
@@ -101,7 +107,67 @@ fn main() {
         );
     }
 
-    // Reference: load whole file, std-sort in RAM, write back.
+    // Codec sweep: raw vs delta across input distributions, serial, at
+    // dataset/16 budget. Spill bandwidth is the dominant cost here, so
+    // every byte the codec removes is a byte phase 1 + phase 2 never
+    // wait on.
+    println!("\n== run codec: raw vs delta, budget {} KiB, fan-in 8 ==\n", budget >> 10);
+    println!(
+        "{:<24} {:>10} {:>12} {:>12} {:>8} {:>10} {:>10}",
+        "input / codec", "M elem/s", "enc MiB", "raw MiB", "ratio", "enc ms", "dec ms"
+    );
+    for (label, dist) in [
+        ("uniform", Distribution::Uniform),
+        ("sorted", Distribution::SortedAsc),
+        ("zipf", Distribution::Zipf { s_x100: 150, n_ranks: 1 << 10 }),
+        ("dup-heavy", Distribution::DupHeavy { alphabet: 8 }),
+    ] {
+        let mut rng = Rng::new(778);
+        let data = gen_u32(&mut rng, n, dist);
+        write_raw(&input, &data).unwrap();
+        let mut sizes = (0u64, 0u64); // (delta encoded, raw encoded)
+        for codec in [Codec::Raw, Codec::Delta] {
+            let cfg = ExternalConfig {
+                mem_budget_bytes: budget,
+                fan_in: 8,
+                codec,
+                tmp_dir: Some(dir.clone()),
+                ..Default::default()
+            };
+            let t = Instant::now();
+            let stats = sort_file::<u32>(&input, &output, &cfg).unwrap();
+            let dt = t.elapsed();
+            assert_eq!(stats.elements, n as u64);
+            match codec {
+                Codec::Raw => sizes.1 = stats.bytes_spilled,
+                Codec::Delta => sizes.0 = stats.bytes_spilled,
+            }
+            println!(
+                "{:<24} {:>10.1} {:>12.1} {:>12.1} {:>7.2}x {:>10.1} {:>10.1}",
+                format!("{label} / {}", codec.name()),
+                n as f64 / dt.as_secs_f64() / 1e6,
+                stats.bytes_spilled as f64 / (1 << 20) as f64,
+                stats.bytes_spilled_raw as f64 / (1 << 20) as f64,
+                stats.bytes_spilled_raw as f64 / stats.bytes_spilled.max(1) as f64,
+                stats.codec_encode_us as f64 / 1000.0,
+                stats.codec_decode_us as f64 / 1000.0,
+            );
+        }
+        // The acceptance bar: compression on non-uniform keys.
+        if label != "uniform" {
+            assert!(
+                sizes.0 < sizes.1,
+                "{label}: delta ({}) must spill fewer bytes than raw ({})",
+                sizes.0,
+                sizes.1
+            );
+        }
+    }
+
+    // Reference: load whole file, std-sort in RAM, write back (restore
+    // the original uniform dataset first — the codec sweep reused the
+    // input path).
+    write_raw(&input, &data).unwrap();
     let t = Instant::now();
     let mut all = read_raw::<u32>(&input).unwrap();
     std_sort_desc(&mut all);

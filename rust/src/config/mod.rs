@@ -6,7 +6,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::external::{Dtype, ExternalConfig};
+use crate::external::{Codec, Dtype, ExternalConfig};
 
 /// Parsed configuration: section → key → raw value string.
 #[derive(Clone, Debug, Default)]
@@ -15,6 +15,8 @@ pub struct RawConfig {
 }
 
 impl RawConfig {
+    /// Parse config text (`[section]` headers, `key = value` lines,
+    /// `#` comments).
     pub fn parse(text: &str) -> Result<Self, String> {
         let mut cfg = RawConfig::default();
         let mut section = String::new();
@@ -40,16 +42,19 @@ impl RawConfig {
         Ok(cfg)
     }
 
+    /// [`parse`](RawConfig::parse) the file at `path`.
     pub fn load(path: &Path) -> Result<Self, String> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| format!("reading {}: {e}", path.display()))?;
         Self::parse(&text)
     }
 
+    /// Raw string value of `section.key`, if present.
     pub fn get(&self, section: &str, key: &str) -> Option<&str> {
         self.sections.get(section)?.get(key).map(|s| s.as_str())
     }
 
+    /// Set `section.key` (tests and programmatic overrides).
     pub fn set(&mut self, section: &str, key: &str, value: &str) {
         self.sections
             .entry(section.to_string())
@@ -57,6 +62,7 @@ impl RawConfig {
             .insert(key.to_string(), value.to_string());
     }
 
+    /// `section.key` parsed as an integer (`None` when absent).
     pub fn get_usize(&self, section: &str, key: &str) -> Result<Option<usize>, String> {
         match self.get(section, key) {
             None => Ok(None),
@@ -67,6 +73,7 @@ impl RawConfig {
         }
     }
 
+    /// `section.key` parsed as a bool (`None` when absent).
     pub fn get_bool(&self, section: &str, key: &str) -> Result<Option<bool>, String> {
         match self.get(section, key) {
             None => Ok(None),
@@ -166,9 +173,13 @@ impl AppConfig {
         if let Some(v) = raw.get("external", "dtype") {
             self.external.dtype = Dtype::parse(v)?;
         }
+        if let Some(v) = raw.get("external", "codec") {
+            self.external.codec = Codec::parse(v)?;
+        }
         self.validate()
     }
 
+    /// Reject configurations the engines cannot run with.
     pub fn validate(&self) -> Result<(), String> {
         if !self.w.is_power_of_two() {
             return Err(format!("engine.w = {} must be a power of two", self.w));
@@ -279,7 +290,7 @@ batch_max = 16
             "[engine]\nw = 32\nchunk = 256\n\
              [external]\nmem_budget_mb = 16\nfan_in = 4\n\
              tmp_dir = \"/tmp/spills\"\ndisk_budget_mb = 512\n\
-             threads = 4\nprefetch_blocks = 3\ndtype = \"kv\"\n",
+             threads = 4\nprefetch_blocks = 3\ndtype = \"kv\"\ncodec = \"delta\"\n",
         )
         .unwrap();
         let mut cfg = AppConfig::default();
@@ -292,6 +303,7 @@ batch_max = 16
         assert_eq!(ext.threads, 4);
         assert_eq!(ext.prefetch_blocks, 3);
         assert_eq!(ext.dtype, Dtype::Kv);
+        assert_eq!(ext.codec, Codec::Delta);
         // The engine's lane/chunk tuning flows into the external sort.
         assert_eq!(ext.w, 32);
         assert_eq!(ext.chunk, 256);
@@ -303,6 +315,7 @@ batch_max = 16
         assert_eq!(cfg.external.threads, 1);
         assert_eq!(cfg.external.prefetch_blocks, 2);
         assert_eq!(cfg.external.dtype, Dtype::U32);
+        assert_eq!(cfg.external.codec, Codec::Raw);
     }
 
     #[test]
@@ -317,6 +330,10 @@ batch_max = 16
         let mut cfg = AppConfig::default();
         let err = cfg.apply(&raw).unwrap_err();
         assert!(err.contains("unknown dtype"), "{err}");
+        let raw = RawConfig::parse("[external]\ncodec = \"lz4\"\n").unwrap();
+        let mut cfg = AppConfig::default();
+        let err = cfg.apply(&raw).unwrap_err();
+        assert!(err.contains("unknown codec"), "{err}");
         let raw = RawConfig::parse("[external]\nthreads = 5000\n").unwrap();
         let mut cfg = AppConfig::default();
         assert!(cfg.apply(&raw).is_err());

@@ -40,10 +40,12 @@ pub struct Batcher {
     router: Arc<Router>,
     cfg: BatcherConfig,
     queue: Mutex<Vec<Pending>>,
+    /// Shared service metrics (same set the router updates).
     pub metrics: Arc<ServiceMetrics>,
 }
 
 impl Batcher {
+    /// Build a batcher over `router` with the given policy.
     pub fn new(router: Arc<Router>, cfg: BatcherConfig) -> Self {
         let metrics = router.metrics.clone();
         Batcher { router, cfg, queue: Mutex::new(Vec::new()), metrics }

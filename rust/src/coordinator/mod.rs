@@ -1,8 +1,10 @@
 //! Layer-3 coordinator: sorting-as-a-service.
 //!
 //! * [`router`] — backend dispatch: every request routes to the native
-//!   rust engine (FLiMS sort / merge / parallel sort) or to the PJRT
-//!   runtime executing the AOT Pallas artifacts.
+//!   rust engine (FLiMS sort / merge / parallel sort), the PJRT
+//!   runtime executing the AOT Pallas artifacts, or the out-of-core
+//!   external pipeline (`sortfile`, with per-request `dtype`/`codec`
+//!   overrides).
 //! * [`batcher`] — dynamic batching: concurrent sort requests of the
 //!   same shape coalesce into one `batched_sort` artifact execution
 //!   (vLLM-router-style window + max-batch policy).

@@ -14,7 +14,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use crate::config::AppConfig;
-use crate::external::{self, Dtype, SpillStats};
+use crate::external::{self, Codec, Dtype, SpillStats};
 use crate::flims::parallel::{par_sort_desc, ParSortConfig};
 use crate::flims::sort::{sort_desc, SortConfig};
 use crate::flims::lanes::merge_desc_fast;
@@ -25,13 +25,18 @@ use crate::runtime::RuntimeHandle;
 /// Execution backend for a request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
+    /// The sequential rust FLiMS engine.
     Native,
+    /// The multi-threaded rust FLiMS engine.
     NativeParallel,
+    /// AOT-compiled Pallas/JAX artifacts through the PJRT runtime.
     Pjrt,
+    /// The out-of-core external sort (bounded memory, spill files).
     External,
 }
 
 impl Backend {
+    /// Parse a backend name (`native` | `parallel` | `pjrt` | `external`).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "native" => Backend::Native,
@@ -47,18 +52,22 @@ impl Backend {
 pub struct Router {
     cfg: AppConfig,
     runtime: Option<RuntimeHandle>,
+    /// Shared service metrics, updated on every routed request.
     pub metrics: Arc<ServiceMetrics>,
 }
 
 impl Router {
+    /// Build a router over the given config and (optional) PJRT runtime.
     pub fn new(cfg: AppConfig, runtime: Option<RuntimeHandle>) -> Self {
         Router { cfg, runtime, metrics: Arc::new(ServiceMetrics::default()) }
     }
 
+    /// Whether the PJRT runtime loaded (the `pjrt` backend is servable).
     pub fn has_pjrt(&self) -> bool {
         self.runtime.is_some()
     }
 
+    /// The PJRT runtime handle, when loaded.
     pub fn runtime(&self) -> Option<&RuntimeHandle> {
         self.runtime.as_ref()
     }
@@ -105,12 +114,14 @@ impl Router {
 
     /// Sort the raw dataset at `input` with the external pipeline,
     /// writing `<input>.sorted` (descending). `dtype` selects the record
-    /// type (`None` = the `[external] dtype` config default). Memory
-    /// stays within the configured budget however large the file is.
+    /// type and `codec` the spill-run codec (`None` = the `[external]`
+    /// config defaults). Memory stays within the configured budget
+    /// however large the file is.
     pub fn sort_file_external(
         &self,
         input: &Path,
         dtype: Option<Dtype>,
+        codec: Option<Codec>,
     ) -> Result<(PathBuf, SpillStats)> {
         self.metrics.requests.inc();
         let dtype = dtype.unwrap_or(self.cfg.external.dtype);
@@ -118,8 +129,11 @@ impl Router {
         let mut name = input.as_os_str().to_owned();
         name.push(".sorted");
         let output = PathBuf::from(name);
-        let stats =
-            external::sort_file_dtype(input, &output, &self.cfg.external_config(), dtype)?;
+        let mut ext = self.cfg.external_config();
+        if let Some(codec) = codec {
+            ext.codec = codec;
+        }
+        let stats = external::sort_file_dtype(input, &output, &ext, dtype)?;
         self.metrics.elements_sorted.add(stats.elements);
         self.record_spill(&stats);
         self.metrics.latency.observe(t.elapsed());
@@ -130,11 +144,14 @@ impl Router {
         self.metrics.external_sorts.inc();
         self.metrics.runs_spilled.add(stats.runs_spilled);
         self.metrics.bytes_spilled.add(stats.bytes_spilled);
+        self.metrics.bytes_spilled_raw.add(stats.bytes_spilled_raw);
         self.metrics.merge_passes.add(stats.merge_passes);
         self.metrics.phase1_us.add(stats.phase1_us);
         self.metrics.phase2_us.add(stats.phase2_us);
         self.metrics.prefetch_hits.add(stats.prefetch_hits);
         self.metrics.prefetch_misses.add(stats.prefetch_misses);
+        self.metrics.codec_encode_us.add(stats.codec_encode_us);
+        self.metrics.codec_decode_us.add(stats.codec_decode_us);
     }
 
     /// Sort f32 values descending on the requested backend.
@@ -306,9 +323,39 @@ mod tests {
         let mut cfg = AppConfig::default();
         cfg.external.mem_budget_bytes = 4096;
         let r = Router::new(cfg, None);
-        let (out_path, stats) = r.sort_file_external(&input, None).unwrap();
+        let (out_path, stats) = r.sort_file_external(&input, None, None).unwrap();
         assert_eq!(out_path, dir.join("data.u32.sorted"));
         assert_eq!(stats.elements, 5000);
+
+        let mut expect = v;
+        expect.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(crate::external::format::read_raw::<u32>(&out_path).unwrap(), expect);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sort_file_external_with_delta_codec() {
+        let dir = std::env::temp_dir().join(format!("flims-router-codec-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("data.u32");
+        // Nearly sorted data: the delta codec must shrink the spill.
+        let v: Vec<u32> = (0..20_000u32).map(|i| i ^ 7).collect();
+        crate::external::format::write_raw(&input, &v).unwrap();
+
+        let mut cfg = AppConfig::default();
+        cfg.external.mem_budget_bytes = 4096;
+        let r = Router::new(cfg, None);
+        let (out_path, stats) =
+            r.sort_file_external(&input, None, Some(Codec::Delta)).unwrap();
+        assert_eq!(stats.elements, 20_000);
+        assert!(
+            stats.bytes_spilled < stats.bytes_spilled_raw,
+            "sorted u32 data must compress: {} vs {}",
+            stats.bytes_spilled,
+            stats.bytes_spilled_raw
+        );
+        assert_eq!(r.metrics.bytes_spilled.get(), stats.bytes_spilled);
+        assert_eq!(r.metrics.bytes_spilled_raw.get(), stats.bytes_spilled_raw);
 
         let mut expect = v;
         expect.sort_unstable_by(|a, b| b.cmp(a));
@@ -332,7 +379,7 @@ mod tests {
         cfg.external.mem_budget_bytes = 8192; // 1024-record Kv runs
         let r = Router::new(cfg, None);
         let (out_path, stats) =
-            r.sort_file_external(&input, Some(crate::external::Dtype::Kv)).unwrap();
+            r.sort_file_external(&input, Some(crate::external::Dtype::Kv), None).unwrap();
         assert_eq!(stats.elements, 4000);
 
         // Stable: equal keys keep input (payload) order.

@@ -9,14 +9,17 @@
 //! sortf <backend> <f1> <f2> …   →  ok <sorted descending>   (f32)
 //! batch <f1> <f2> …             →  ok <sorted>  (goes through the batcher)
 //! merge <a...> | <b...>         →  ok <merged>  (desc-sorted u32 inputs)
-//! sortfile external <path> [dtype=<d>]
+//! sortfile external <path> [dtype=<d>] [codec=<c>]
 //!                               →  ok <n> <output-path>  (raw record file,
 //!                                   sorted descending to <path>.sorted;
-//!                                   d = u32|u64|kv|kv64|f32, default from
-//!                                   `[external] dtype`; only a trailing
-//!                                   `dtype=`-prefixed token is treated as
-//!                                   an option, so paths containing spaces
-//!                                   keep working)
+//!                                   d = u32|u64|kv|kv64|f32 and
+//!                                   c = raw|delta, defaults from the
+//!                                   `[external]` config section; only
+//!                                   trailing `dtype=`/`codec=`-prefixed
+//!                                   tokens are treated as options, so
+//!                                   paths containing spaces keep working.
+//!                                   A bad value is a one-line `err`
+//!                                   naming the offending argument)
 //! stats                         →  ok <metrics summary>
 //! quit                          →  (closes the connection)
 //! ```
@@ -37,13 +40,18 @@ use anyhow::{anyhow, bail, Result};
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::router::{Backend, Router};
 
+/// The TCP front end: owns the router + batcher and serves the
+/// line-oriented protocol documented in this module's header.
 pub struct Service {
+    /// Backend dispatch (shared with the batcher).
     pub router: Arc<Router>,
+    /// Dynamic batcher for the `batch` command.
     pub batcher: Arc<Batcher>,
     stop: Arc<AtomicBool>,
 }
 
 impl Service {
+    /// Build a service over `router` with the given batching policy.
     pub fn new(router: Arc<Router>, bcfg: BatcherConfig) -> Self {
         let batcher = Arc::new(Batcher::new(router.clone(), bcfg));
         Service { router, batcher, stop: Arc::new(AtomicBool::new(false)) }
@@ -124,30 +132,49 @@ impl Service {
                 Ok(format!("ok {}", join(&out)))
             }
             "sortfile" => {
-                let (backend, rest) = rest
-                    .split_once(' ')
-                    .ok_or_else(|| anyhow!("usage: sortfile external <path> [dtype=<d>]"))?;
+                let usage = "usage: sortfile external <path> [dtype=<d>] [codec=<c>]";
+                let (backend, rest) =
+                    rest.split_once(' ').ok_or_else(|| anyhow!("{usage}"))?;
                 let backend = Backend::parse(backend)?;
                 if backend != Backend::External {
                     bail!("sortfile requires the 'external' backend");
                 }
-                let rest = rest.trim();
-                if rest.is_empty() {
-                    bail!("usage: sortfile external <path> [dtype=<d>]");
-                }
-                // Only an explicit trailing `dtype=<d>` token is an
-                // option — a bad value there is a loud error, and paths
-                // containing spaces are untouched (PR 1 grammar).
-                let (path, dtype) = match rest.rsplit_once(' ') {
-                    Some((head, tail)) if tail.trim().starts_with("dtype=") => {
-                        let name = &tail.trim()["dtype=".len()..];
+                // Only explicit trailing `dtype=<d>` / `codec=<c>`
+                // tokens are options — a bad value is a loud error
+                // *naming the argument*, and paths containing spaces
+                // are untouched (PR 1 grammar, extended).
+                let mut path = rest.trim();
+                let mut dtype = None;
+                let mut codec = None;
+                while !path.is_empty() {
+                    // The last whitespace-separated token; the whole
+                    // string when no space remains.
+                    let (head, tail) = match path.rsplit_once(' ') {
+                        Some((h, t)) => (h.trim_end(), t.trim()),
+                        None => ("", path),
+                    };
+                    if let Some(name) = tail.strip_prefix("dtype=") {
                         let d = crate::external::Dtype::parse(name)
-                            .map_err(|e| anyhow!("{e}"))?;
-                        (head.trim(), Some(d))
+                            .map_err(|e| anyhow!("dtype argument: {e}"))?;
+                        if dtype.replace(d).is_some() {
+                            bail!("dtype argument: given more than once");
+                        }
+                    } else if let Some(name) = tail.strip_prefix("codec=") {
+                        let c = crate::external::Codec::parse(name)
+                            .map_err(|e| anyhow!("codec argument: {e}"))?;
+                        if codec.replace(c).is_some() {
+                            bail!("codec argument: given more than once");
+                        }
+                    } else {
+                        break;
                     }
-                    _ => (rest, None),
-                };
-                let (output, stats) = self.router.sort_file_external(Path::new(path), dtype)?;
+                    path = head;
+                }
+                if path.is_empty() {
+                    bail!("{usage}");
+                }
+                let (output, stats) =
+                    self.router.sort_file_external(Path::new(path), dtype, codec)?;
                 Ok(format!("ok {} {}", stats.elements, output.display()))
             }
             "stats" => Ok(format!("ok {}", self.router.metrics.report())),
@@ -187,6 +214,8 @@ impl Service {
         Ok(())
     }
 
+    /// Ask the accept loop and timer thread to exit (takes effect on
+    /// their next iteration).
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::Relaxed);
     }
@@ -364,10 +393,64 @@ mod tests {
         let resp = s.handle_line(&format!("sortfile external {} dtype=u32", input.display()));
         assert!(resp.starts_with("ok 4000 "), "{resp}");
 
-        // A bad dtype value is a loud one-line error, not a path guess.
+        // A bad dtype value is a loud one-line error, not a path guess —
+        // and it names the offending argument.
         let resp = s.handle_line(&format!("sortfile external {} dtype=f64", input.display()));
         assert!(resp.starts_with("err "), "{resp}");
-        assert!(resp.contains("unknown dtype"), "{resp}");
+        assert!(resp.contains("dtype argument: unknown dtype"), "{resp}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sortfile_with_codec_argument() {
+        use crate::external::format::{read_raw, write_raw};
+        let dir = std::env::temp_dir().join(format!("flims-svc-codec-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("req.u32");
+        let data: Vec<u32> = (0..3000u32).collect();
+        write_raw(&input, &data).unwrap();
+
+        // Tight budget so the request really spills through the codec.
+        let mut app = crate::config::AppConfig::default();
+        app.external.mem_budget_bytes = 4096;
+        let router = Arc::new(Router::new(app, None));
+        let s = Service::new(
+            router,
+            BatcherConfig { max_batch: 2, window: Duration::from_micros(1) },
+        );
+
+        // codec + dtype combine, in either order.
+        for req in [
+            format!("sortfile external {} codec=delta", input.display()),
+            format!("sortfile external {} dtype=u32 codec=delta", input.display()),
+            format!("sortfile external {} codec=delta dtype=u32", input.display()),
+        ] {
+            let resp = s.handle_line(&req);
+            let expect_path = format!("{}.sorted", input.display());
+            assert_eq!(resp, format!("ok 3000 {expect_path}"), "{req}");
+            let mut expect = data.clone();
+            expect.sort_unstable_by(|a, b| b.cmp(a));
+            assert_eq!(read_raw::<u32>(Path::new(&expect_path)).unwrap(), expect);
+        }
+        // The compressed spill shows in the service metrics.
+        assert!(
+            s.router.metrics.bytes_spilled.get() < s.router.metrics.bytes_spilled_raw.get(),
+            "sorted input under codec=delta must spill fewer bytes"
+        );
+
+        // Bad values are one-line errors naming the offending argument.
+        let resp = s.handle_line(&format!("sortfile external {} codec=lz4", input.display()));
+        assert!(resp.starts_with("err "), "{resp}");
+        assert!(resp.contains("codec argument: unknown codec"), "{resp}");
+        let resp = s.handle_line(&format!(
+            "sortfile external {} codec=delta codec=raw",
+            input.display()
+        ));
+        assert!(resp.starts_with("err "), "{resp}");
+        assert!(resp.contains("codec argument: given more than once"), "{resp}");
+        let resp = s.handle_line("sortfile external codec=delta");
+        assert!(resp.starts_with("err "), "{resp}");
+        assert!(resp.contains("usage: sortfile"), "path-less request → usage: {resp}");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -1,0 +1,332 @@
+//! Run codecs: how spilled-run payload bytes are laid out on disk.
+//!
+//! Two codecs exist (see `docs/FORMATS.md` for the byte-level spec):
+//!
+//! * [`Codec::Raw`] — fixed-width little-endian records, the `FLR1`
+//!   format the external sort has always spilled. Zero CPU cost, one
+//!   `WIRE_BYTES` per record.
+//! * [`Codec::Delta`] — the `FLR2` format: each block stores its first
+//!   key full-width, then every following key as a zigzag-encoded
+//!   LEB128 varint of the delta to its predecessor; payloads (for
+//!   key-value dtypes) ride alongside fixed-width. Spilled runs are
+//!   always sorted, so deltas are small and skewed/sorted datasets
+//!   compress 2–4×, cutting the spill-disk bandwidth that dominates
+//!   out-of-core sorts — the same "internalise the bandwidth" argument
+//!   FLiMS makes for merge trees, applied to the spill boundary.
+//!
+//! The codec is chosen per sort via `[external] codec` (CLI
+//! `--codec`, protocol `codec=<c>`), with a dtype-aware fallback:
+//! `f32` keys have no integer delta domain that is worth encoding, so
+//! [`Codec::effective_for`] silently drops them back to `Raw`.
+//!
+//! Encoding runs on the spill writer's double-buffer thread
+//! ([`DoubleBufWriter`](super::stream::DoubleBufWriter)) and decoding
+//! on the leaf prefetch threads
+//! ([`PrefetchStream`](super::stream::PrefetchStream)), so codec CPU
+//! overlaps the merge instead of stalling it.
+
+use anyhow::{bail, Result};
+
+use super::format::{Dtype, ExtItem};
+
+/// Maximum records per encoded delta block. Bounds the decode buffer a
+/// reader must hold (4096 × 16-byte `kv64` records = 64 KiB) and keeps
+/// the per-block framing overhead (8 bytes) negligible.
+pub const DELTA_BLOCK_MAX: usize = 4096;
+
+/// Bytes of one delta-block frame header: `u32` record count + `u32`
+/// encoded-key-section length.
+pub const DELTA_FRAME_BYTES: usize = 8;
+
+/// Longest LEB128 encoding of a `u64` (10 × 7 bits ≥ 64 bits).
+pub const MAX_VARINT_BYTES: usize = 10;
+
+/// Spill-run codec selector — the `[external] codec` knob.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Codec {
+    /// Fixed-width records (`FLR1`), byte-identical to what the
+    /// external sort has always written.
+    #[default]
+    Raw,
+    /// Base key + zigzag-delta LEB128 varints per block (`FLR2`),
+    /// payloads fixed-width alongside.
+    Delta,
+}
+
+impl Codec {
+    /// Parse a codec name (`raw` | `delta`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        Ok(match s {
+            "raw" => Codec::Raw,
+            "delta" => Codec::Delta,
+            other => return Err(format!("unknown codec '{other}' (expected raw|delta)")),
+        })
+    }
+
+    /// The knob spelling of this codec.
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::Raw => "raw",
+            Codec::Delta => "delta",
+        }
+    }
+
+    /// The codec actually used for `dtype`: `f32` keys stay raw (their
+    /// bit patterns have no delta structure worth varint-encoding), the
+    /// integer-keyed dtypes honour the request.
+    pub fn effective_for(self, dtype: Dtype) -> Codec {
+        match (self, dtype) {
+            (Codec::Delta, Dtype::F32) => Codec::Raw,
+            (c, _) => c,
+        }
+    }
+}
+
+/// Zigzag-map a signed delta onto the unsigned varint domain
+/// (0 → 0, -1 → 1, 1 → 2, -2 → 3, …) so small negatives — the common
+/// case in descending runs — stay one byte.
+#[inline]
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+#[inline]
+pub fn unzigzag(u: u64) -> i64 {
+    ((u >> 1) as i64) ^ -((u & 1) as i64)
+}
+
+/// Append the LEB128 encoding of `v` (7 bits per byte, high bit =
+/// continuation) to `out`.
+#[inline]
+pub fn write_varint(mut v: u64, out: &mut Vec<u8>) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Decode one LEB128 varint from `buf[*pos..]`, advancing `pos`.
+/// Rejects truncated input and encodings longer than a `u64`.
+#[inline]
+pub fn read_varint(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let Some(&byte) = buf.get(*pos) else {
+            bail!("truncated varint");
+        };
+        *pos += 1;
+        if shift == 63 && byte > 1 {
+            bail!("varint overflows u64");
+        }
+        v |= u64::from(byte & 0x7f) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift > 63 {
+            bail!("varint longer than 10 bytes");
+        }
+    }
+}
+
+/// Append the `FLR2` encoding of `xs` to `out`: one framed block per
+/// [`DELTA_BLOCK_MAX`] records. Block layout (see `docs/FORMATS.md`):
+///
+/// ```text
+/// u32 n | u32 key_bytes | key section (key_bytes) | n × PAYLOAD_BYTES
+/// ```
+///
+/// where the key section is the first key full-width little-endian
+/// followed by `n - 1` zigzag-delta varints. Deltas are computed with
+/// wrapping `u64` arithmetic, so every key sequence round-trips —
+/// sortedness only buys compression, never correctness.
+pub fn encode_delta<T: ExtItem>(xs: &[T], out: &mut Vec<u8>) {
+    let payload_bytes = T::WIRE_BYTES - T::KEY_BYTES;
+    for block in xs.chunks(DELTA_BLOCK_MAX) {
+        out.extend_from_slice(&(block.len() as u32).to_le_bytes());
+        let len_at = out.len();
+        out.extend_from_slice(&0u32.to_le_bytes()); // key_bytes, patched below
+        let keys_at = out.len();
+
+        let mut prev = block[0].key_bits();
+        out.extend_from_slice(&prev.to_le_bytes()[..T::KEY_BYTES]);
+        for x in &block[1..] {
+            let k = x.key_bits();
+            write_varint(zigzag(k.wrapping_sub(prev) as i64), out);
+            prev = k;
+        }
+        let key_bytes = (out.len() - keys_at) as u32;
+        out[len_at..len_at + 4].copy_from_slice(&key_bytes.to_le_bytes());
+
+        if payload_bytes > 0 {
+            let payload_at = out.len();
+            out.resize(payload_at + block.len() * payload_bytes, 0);
+            for (x, chunk) in
+                block.iter().zip(out[payload_at..].chunks_exact_mut(payload_bytes))
+            {
+                x.encode_payload(chunk);
+            }
+        }
+    }
+}
+
+/// Decode the key section of one delta block (`n` keys from `buf`,
+/// which must be consumed exactly) into key bit patterns.
+pub fn decode_delta_keys<T: ExtItem>(buf: &[u8], n: usize, keys: &mut Vec<u64>) -> Result<()> {
+    if buf.len() < T::KEY_BYTES {
+        bail!("key section shorter than one full-width key");
+    }
+    let mut first = [0u8; 8];
+    first[..T::KEY_BYTES].copy_from_slice(&buf[..T::KEY_BYTES]);
+    let mut prev = u64::from_le_bytes(first);
+    // Keep arithmetic inside the key width (shift amount is 0 for
+    // 8-byte keys, so this never overflows).
+    let mask = u64::MAX >> (64 - 8 * T::KEY_BYTES as u32);
+    keys.push(prev);
+    let mut pos = T::KEY_BYTES;
+    for _ in 1..n {
+        let delta = unzigzag(read_varint(buf, &mut pos)?);
+        prev = prev.wrapping_add(delta as u64) & mask;
+        keys.push(prev);
+    }
+    if pos != buf.len() {
+        bail!("key section has {} trailing bytes", buf.len() - pos);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::key::{Kv, Kv64};
+
+    #[test]
+    fn zigzag_round_trips_and_orders_small() {
+        for v in [0i64, 1, -1, 2, -2, 63, -64, i64::MAX, i64::MIN] {
+            assert_eq!(unzigzag(zigzag(v)), v, "{v}");
+        }
+        // Small magnitudes map to small codes (the compression premise).
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+        assert!(zigzag(-63) < 127);
+    }
+
+    #[test]
+    fn varint_round_trips_and_sizes() {
+        let mut buf = Vec::new();
+        for v in [0u64, 1, 127, 128, 16_383, 16_384, u32::MAX as u64, u64::MAX] {
+            buf.clear();
+            write_varint(v, &mut buf);
+            assert!(buf.len() <= MAX_VARINT_BYTES);
+            let mut pos = 0;
+            assert_eq!(read_varint(&buf, &mut pos).unwrap(), v, "{v}");
+            assert_eq!(pos, buf.len());
+        }
+        // One byte per value below 128.
+        buf.clear();
+        write_varint(127, &mut buf);
+        assert_eq!(buf.len(), 1);
+        write_varint(128, &mut buf);
+        assert_eq!(buf.len(), 3);
+    }
+
+    #[test]
+    fn varint_rejects_truncation_and_overflow() {
+        assert!(read_varint(&[0x80], &mut 0).is_err());
+        assert!(read_varint(&[], &mut 0).is_err());
+        // 11 continuation bytes can't be a u64.
+        let long = [0x80u8; 11];
+        assert!(read_varint(&long, &mut 0).is_err());
+        // 10 bytes whose top byte spills past bit 63.
+        let mut spill = [0x80u8; 10];
+        spill[9] = 0x02;
+        assert!(read_varint(&spill, &mut 0).is_err());
+    }
+
+    fn round_trip_keys<T: ExtItem>(xs: &[T]) -> Vec<u64> {
+        let mut bytes = Vec::new();
+        encode_delta(xs, &mut bytes);
+        let mut keys = Vec::new();
+        let mut pos = 0;
+        while pos < bytes.len() {
+            let n = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+            let kb = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap()) as usize;
+            pos += DELTA_FRAME_BYTES;
+            decode_delta_keys::<T>(&bytes[pos..pos + kb], n, &mut keys).unwrap();
+            pos += kb + n * (T::WIRE_BYTES - T::KEY_BYTES);
+        }
+        keys
+    }
+
+    #[test]
+    fn delta_blocks_round_trip_u32_extremes() {
+        let xs = [u32::MAX, u32::MAX, 0, 1, u32::MAX - 1, 7, 7, 0];
+        assert_eq!(round_trip_keys(&xs), xs.iter().map(|&x| x as u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn delta_blocks_round_trip_u64_extremes() {
+        let xs = [u64::MAX, 0, u64::MAX / 2 + 3, 1, u64::MAX];
+        assert_eq!(round_trip_keys(&xs), xs.to_vec());
+    }
+
+    #[test]
+    fn delta_blocks_split_at_block_max() {
+        let xs: Vec<u32> = (0..(DELTA_BLOCK_MAX as u32 * 2 + 5)).rev().collect();
+        assert_eq!(round_trip_keys(&xs), xs.iter().map(|&x| x as u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn kv_payload_bytes_are_fixed_width() {
+        let xs = [Kv::new(9, 100), Kv::new(9, 101), Kv::new(3, 102)];
+        let mut bytes = Vec::new();
+        encode_delta(&xs, &mut bytes);
+        // One block: frame + key section + 3 × 4 payload bytes at the tail.
+        let tail = &bytes[bytes.len() - 12..];
+        assert_eq!(tail, [100, 0, 0, 0, 101, 0, 0, 0, 102, 0, 0, 0]);
+        assert_eq!(round_trip_keys(&xs), vec![9, 9, 3]);
+        // Kv64 carries 8-byte payloads.
+        let xs = [Kv64 { key: 5, val: u64::MAX }];
+        bytes.clear();
+        encode_delta(&xs, &mut bytes);
+        assert_eq!(&bytes[bytes.len() - 8..], [0xff; 8]);
+    }
+
+    #[test]
+    fn sorted_descending_runs_compress() {
+        // A dense descending run: every delta is -1 → 1 varint byte per
+        // key vs 4 raw bytes.
+        let xs: Vec<u32> = (0..1000u32).rev().collect();
+        let mut bytes = Vec::new();
+        encode_delta(&xs, &mut bytes);
+        assert!(
+            bytes.len() < xs.len() * 2,
+            "dense descending u32 must compress ≥ 2×: {} bytes for {} keys",
+            bytes.len(),
+            xs.len()
+        );
+    }
+
+    #[test]
+    fn codec_parse_name_and_fallback() {
+        assert_eq!(Codec::parse("raw").unwrap(), Codec::Raw);
+        assert_eq!(Codec::parse("delta").unwrap(), Codec::Delta);
+        assert!(Codec::parse("lz4").unwrap_err().contains("unknown codec"));
+        for c in [Codec::Raw, Codec::Delta] {
+            assert_eq!(Codec::parse(c.name()).unwrap(), c);
+        }
+        assert_eq!(Codec::Delta.effective_for(Dtype::F32), Codec::Raw);
+        assert_eq!(Codec::Delta.effective_for(Dtype::U32), Codec::Delta);
+        assert_eq!(Codec::Delta.effective_for(Dtype::Kv64), Codec::Delta);
+        assert_eq!(Codec::Raw.effective_for(Dtype::U32), Codec::Raw);
+        assert_eq!(Codec::default(), Codec::Raw);
+    }
+}

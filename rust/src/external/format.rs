@@ -4,23 +4,35 @@
 //! Every supported dataset type implements [`ExtItem`]: a fixed-width
 //! little-endian wire encoding plus the in-memory sort used for phase-1
 //! runs (stable for payload records — the paper's §6 tie-record
-//! guarantee holds out-of-core, not just in RAM). Two layouts share the
-//! encoding:
+//! guarantee holds out-of-core, not just in RAM). Three layouts share
+//! the encoding (byte-level spec with worked hex examples in
+//! `docs/FORMATS.md`):
 //!
-//! * **Run files** ([`RunWriter`] / [`RunReader`]) — length-prefixed:
-//!   a 4-byte magic (`FLR1`) and a u64 element count, then the payload.
-//!   The count is patched into the header on [`RunWriter::finish`], so a
-//!   truncated or crashed spill is detectable on open.
+//! * **`FLR1` run files** — length-prefixed fixed-width records: a
+//!   4-byte magic, a u64 element count, then `count × WIRE_BYTES`
+//!   payload bytes. What [`RunWriter`] produces under [`Codec::Raw`].
+//! * **`FLR2` run files** — the same 12-byte header shape (magic
+//!   `FLR2`), then a sequence of delta blocks: keys stored as a
+//!   full-width base plus zigzag-delta LEB128 varints, payloads
+//!   fixed-width alongside ([`Codec::Delta`], [`codec`](super::codec)).
 //! * **Raw datasets** ([`RawReader`] / [`RawWriter`]) — headerless
 //!   little-endian records, the input/output format of `sort_file` (and
 //!   what the `sortfile` CLI/service commands operate on). For `f32`
 //!   datasets the wire format is plain IEEE-754 bits; the in-memory
 //!   representation is the order-preserving [`F32Key`].
+//!
+//! [`RunReader::open`] negotiates the version from the magic, so `FLR1`
+//! files written before the codec layer existed still load; the element
+//! count is patched into the header on [`RunWriter::finish`], so a
+//! truncated or crashed spill is detectable on open.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::marker::PhantomData;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -29,9 +41,15 @@ use crate::flims::sort::{sort_desc, SortConfig};
 use crate::flims::stable::{merge_stable_into, sort_stable_desc};
 use crate::key::{F32Key, Item, Kv, Kv64};
 
-/// Magic prefix of a spilled run file.
+use super::codec::{
+    decode_delta_keys, encode_delta, Codec, DELTA_BLOCK_MAX, DELTA_FRAME_BYTES, MAX_VARINT_BYTES,
+};
+
+/// Magic prefix of an `FLR1` (raw fixed-width) run file.
 pub const RUN_MAGIC: [u8; 4] = *b"FLR1";
-/// Header size: magic + u64 element count.
+/// Magic prefix of an `FLR2` (delta + varint) run file.
+pub const RUN_MAGIC_V2: [u8; 4] = *b"FLR2";
+/// Header size shared by both run versions: magic + u64 element count.
 pub const RUN_HEADER_BYTES: u64 = 12;
 
 /// Dataset element type selector — the `dtype` argument of `sortfile`
@@ -39,14 +57,20 @@ pub const RUN_HEADER_BYTES: u64 = 12;
 /// implementations.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dtype {
+    /// Plain 32-bit keys.
     U32,
+    /// Plain 64-bit keys.
     U64,
+    /// 32-bit key + 32-bit payload records.
     Kv,
+    /// 64-bit key + 64-bit payload records.
     Kv64,
+    /// IEEE-754 single floats (order-preserving in memory).
     F32,
 }
 
 impl Dtype {
+    /// Parse a dtype name (`u32` | `u64` | `kv` | `kv64` | `f32`).
     pub fn parse(s: &str) -> Result<Self, String> {
         Ok(match s {
             "u32" => Dtype::U32,
@@ -62,6 +86,7 @@ impl Dtype {
         })
     }
 
+    /// The knob spelling of this dtype.
     pub fn name(self) -> &'static str {
         match self {
             Dtype::U32 => "u32",
@@ -89,15 +114,31 @@ impl Dtype {
 /// with payloads distinct from their key (`Kv`, `Kv64`); plain keys use
 /// the faster untagged FLiMS lanes because equal keys are
 /// indistinguishable, so the descending value sequence is unique.
+///
+/// The key/payload split (`KEY_BYTES`, [`key_bits`](ExtItem::key_bits),
+/// [`from_parts`](ExtItem::from_parts)) is what the `FLR2` delta codec
+/// encodes: keys travel as varint deltas, payloads stay fixed-width.
 pub trait ExtItem: Item {
     /// Bytes per record on disk.
     const WIRE_BYTES: usize;
+    /// Bytes of the key prefix within the record; `WIRE_BYTES -
+    /// KEY_BYTES` payload bytes follow it in the delta layout.
+    const KEY_BYTES: usize;
     /// The dtype tag this implementation answers to.
     const DTYPE: Dtype;
     /// Encode into exactly `WIRE_BYTES` bytes.
     fn encode(self, out: &mut [u8]);
     /// Decode from exactly `WIRE_BYTES` bytes.
     fn decode(b: &[u8]) -> Self;
+    /// The key as a zero-extended `u64` bit pattern — the delta codec's
+    /// arithmetic domain. Must be injective over `KEY_BYTES × 8` bits.
+    fn key_bits(self) -> u64;
+    /// Rebuild a record from [`key_bits`](ExtItem::key_bits) output and
+    /// the `WIRE_BYTES - KEY_BYTES` payload bytes.
+    fn from_parts(key: u64, payload: &[u8]) -> Self;
+    /// Encode the payload tail into exactly `WIRE_BYTES - KEY_BYTES`
+    /// bytes (no-op for plain keys).
+    fn encode_payload(self, out: &mut [u8]);
     /// Sort a phase-1 run descending in memory.
     fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig);
     /// Merge two descending-sorted slices, appending to `out` — the
@@ -107,6 +148,7 @@ pub trait ExtItem: Item {
 
 impl ExtItem for u32 {
     const WIRE_BYTES: usize = 4;
+    const KEY_BYTES: usize = 4;
     const DTYPE: Dtype = Dtype::U32;
     fn encode(self, out: &mut [u8]) {
         out.copy_from_slice(&self.to_le_bytes());
@@ -114,6 +156,13 @@ impl ExtItem for u32 {
     fn decode(b: &[u8]) -> Self {
         u32::from_le_bytes(b.try_into().expect("4-byte record"))
     }
+    fn key_bits(self) -> u64 {
+        self as u64
+    }
+    fn from_parts(key: u64, _payload: &[u8]) -> Self {
+        key as u32
+    }
+    fn encode_payload(self, _out: &mut [u8]) {}
     fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig) {
         sort_desc(buf, cfg);
     }
@@ -124,6 +173,7 @@ impl ExtItem for u32 {
 
 impl ExtItem for u64 {
     const WIRE_BYTES: usize = 8;
+    const KEY_BYTES: usize = 8;
     const DTYPE: Dtype = Dtype::U64;
     fn encode(self, out: &mut [u8]) {
         out.copy_from_slice(&self.to_le_bytes());
@@ -131,6 +181,13 @@ impl ExtItem for u64 {
     fn decode(b: &[u8]) -> Self {
         u64::from_le_bytes(b.try_into().expect("8-byte record"))
     }
+    fn key_bits(self) -> u64 {
+        self
+    }
+    fn from_parts(key: u64, _payload: &[u8]) -> Self {
+        key
+    }
+    fn encode_payload(self, _out: &mut [u8]) {}
     fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig) {
         sort_desc(buf, cfg);
     }
@@ -141,6 +198,7 @@ impl ExtItem for u64 {
 
 impl ExtItem for F32Key {
     const WIRE_BYTES: usize = 4;
+    const KEY_BYTES: usize = 4;
     const DTYPE: Dtype = Dtype::F32;
     fn encode(self, out: &mut [u8]) {
         // On disk: the plain IEEE-754 bits, so datasets interoperate
@@ -152,6 +210,15 @@ impl ExtItem for F32Key {
             b.try_into().expect("4-byte record"),
         )))
     }
+    fn key_bits(self) -> u64 {
+        // The order-preserving mapped bits — only ever exercised by
+        // tests: `Codec::effective_for` keeps f32 runs on the raw codec.
+        self.0 as u64
+    }
+    fn from_parts(key: u64, _payload: &[u8]) -> Self {
+        F32Key(key as u32)
+    }
+    fn encode_payload(self, _out: &mut [u8]) {}
     fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig) {
         sort_desc(buf, cfg);
     }
@@ -162,6 +229,7 @@ impl ExtItem for F32Key {
 
 impl ExtItem for Kv {
     const WIRE_BYTES: usize = 8;
+    const KEY_BYTES: usize = 4;
     const DTYPE: Dtype = Dtype::Kv;
     fn encode(self, out: &mut [u8]) {
         out[..4].copy_from_slice(&self.key.to_le_bytes());
@@ -173,6 +241,18 @@ impl ExtItem for Kv {
             val: u32::from_le_bytes(b[4..].try_into().expect("8-byte record")),
         }
     }
+    fn key_bits(self) -> u64 {
+        self.key as u64
+    }
+    fn from_parts(key: u64, payload: &[u8]) -> Self {
+        Kv {
+            key: key as u32,
+            val: u32::from_le_bytes(payload.try_into().expect("4-byte payload")),
+        }
+    }
+    fn encode_payload(self, out: &mut [u8]) {
+        out.copy_from_slice(&self.val.to_le_bytes());
+    }
     fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig) {
         sort_stable_desc(buf, cfg);
     }
@@ -183,6 +263,7 @@ impl ExtItem for Kv {
 
 impl ExtItem for Kv64 {
     const WIRE_BYTES: usize = 16;
+    const KEY_BYTES: usize = 8;
     const DTYPE: Dtype = Dtype::Kv64;
     fn encode(self, out: &mut [u8]) {
         out[..8].copy_from_slice(&self.key.to_le_bytes());
@@ -193,6 +274,15 @@ impl ExtItem for Kv64 {
             key: u64::from_le_bytes(b[..8].try_into().expect("16-byte record")),
             val: u64::from_le_bytes(b[8..].try_into().expect("16-byte record")),
         }
+    }
+    fn key_bits(self) -> u64 {
+        self.key
+    }
+    fn from_parts(key: u64, payload: &[u8]) -> Self {
+        Kv64 { key, val: u64::from_le_bytes(payload.try_into().expect("8-byte payload")) }
+    }
+    fn encode_payload(self, out: &mut [u8]) {
+        out.copy_from_slice(&self.val.to_le_bytes());
     }
     fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig) {
         sort_stable_desc(buf, cfg);
@@ -206,11 +296,19 @@ impl ExtItem for Kv64 {
 /// `SpillManager`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct RunFile {
+    /// Location of the run on disk.
     pub path: PathBuf,
     /// Payload element count.
     pub elems: u64,
-    /// Total file size (header + payload).
+    /// Total file size on disk (header + encoded payload).
     pub bytes: u64,
+    /// What the file would occupy under [`Codec::Raw`] (header +
+    /// `elems × WIRE_BYTES`) — the numerator of the compression ratio.
+    pub raw_bytes: u64,
+    /// Wall-clock the writer spent inside the codec, nanoseconds
+    /// (summed — not truncated — across runs; the stats layer divides
+    /// to µs once at the end).
+    pub encode_ns: u64,
 }
 
 fn encode_block<T: ExtItem>(xs: &[T], byte_buf: &mut Vec<u8>) {
@@ -243,27 +341,45 @@ fn read_record_block<T: ExtItem>(
     Ok(take)
 }
 
-/// Streaming writer for one run file.
+/// Streaming writer for one run file (`FLR1` under [`Codec::Raw`],
+/// `FLR2` under [`Codec::Delta`]).
 pub struct RunWriter<T: ExtItem> {
     out: BufWriter<File>,
     path: PathBuf,
+    codec: Codec,
     count: u64,
+    payload_bytes: u64,
+    encode_ns: u64,
     byte_buf: Vec<u8>,
     _elem: PhantomData<T>,
 }
 
 impl<T: ExtItem> RunWriter<T> {
-    /// Create `path`, writing a header with a zero count placeholder.
+    /// Create `path` as a raw (`FLR1`) run — the historical format.
     pub fn create(path: &Path) -> Result<Self> {
+        Self::create_with(path, Codec::Raw)
+    }
+
+    /// Create `path` with the given codec, writing the matching magic
+    /// and a zero count placeholder. Callers pass the *effective* codec
+    /// ([`Codec::effective_for`]); this writer encodes whatever it is
+    /// told to.
+    pub fn create_with(path: &Path, codec: Codec) -> Result<Self> {
         let f = File::create(path)
             .with_context(|| format!("creating run file {}", path.display()))?;
         let mut out = BufWriter::new(f);
-        out.write_all(&RUN_MAGIC)?;
+        match codec {
+            Codec::Raw => out.write_all(&RUN_MAGIC)?,
+            Codec::Delta => out.write_all(&RUN_MAGIC_V2)?,
+        }
         out.write_all(&0u64.to_le_bytes())?;
         Ok(RunWriter {
             out,
             path: path.to_path_buf(),
+            codec,
             count: 0,
+            payload_bytes: 0,
+            encode_ns: 0,
             byte_buf: Vec::new(),
             _elem: PhantomData,
         })
@@ -274,10 +390,30 @@ impl<T: ExtItem> RunWriter<T> {
         &self.path
     }
 
-    /// Append a block of elements (need not be the whole run).
+    /// The codec this writer encodes with.
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    /// Append a block of elements (need not be the whole run). Under
+    /// [`Codec::Delta`] each call frames its own delta blocks, so block
+    /// boundaries — hence output bytes — depend only on the call
+    /// sequence, never on thread timing.
     pub fn write_block(&mut self, xs: &[T]) -> Result<()> {
-        encode_block(xs, &mut self.byte_buf);
+        if xs.is_empty() {
+            return Ok(());
+        }
+        let t = Instant::now();
+        match self.codec {
+            Codec::Raw => encode_block(xs, &mut self.byte_buf),
+            Codec::Delta => {
+                self.byte_buf.clear();
+                encode_delta(xs, &mut self.byte_buf);
+            }
+        }
+        self.encode_ns += t.elapsed().as_nanos() as u64;
         self.out.write_all(&self.byte_buf)?;
+        self.payload_bytes += self.byte_buf.len() as u64;
         self.count += xs.len() as u64;
         Ok(())
     }
@@ -290,23 +426,47 @@ impl<T: ExtItem> RunWriter<T> {
         f.seek(SeekFrom::Start(RUN_MAGIC.len() as u64))?;
         f.write_all(&self.count.to_le_bytes())?;
         Ok(RunFile {
-            bytes: RUN_HEADER_BYTES + self.count * T::WIRE_BYTES as u64,
+            bytes: RUN_HEADER_BYTES + self.payload_bytes,
+            raw_bytes: RUN_HEADER_BYTES + self.count * T::WIRE_BYTES as u64,
+            encode_ns: self.encode_ns,
             path: self.path,
             elems: self.count,
         })
     }
 }
 
-/// Streaming reader for one run file.
+/// Streaming reader for one run file. [`RunReader::open`] sniffs the
+/// magic, so it reads both `FLR1` (raw) and `FLR2` (delta) runs; delta
+/// decoding happens inside `read_block`, which is exactly what the
+/// prefetch threads call — decompression overlaps the merge.
 pub struct RunReader<T: ExtItem> {
     inp: BufReader<File>,
+    path: PathBuf,
+    codec: Codec,
     remaining: u64,
+    file_len: u64,
+    /// Bytes consumed from the file so far (delta path only) — lets EOF
+    /// detect trailing garbage that the header count cannot.
+    consumed: u64,
+    /// Decoded-but-unserved records (delta path only).
+    pending: Vec<T>,
+    pending_pos: usize,
     byte_buf: Vec<u8>,
+    key_buf: Vec<u64>,
+    decode_ns: Option<Arc<AtomicU64>>,
     _elem: PhantomData<T>,
 }
 
 impl<T: ExtItem> RunReader<T> {
+    /// Open a run file, negotiating the format version from its magic.
     pub fn open(path: &Path) -> Result<Self> {
+        Self::open_with(path, None)
+    }
+
+    /// [`open`](RunReader::open), additionally accumulating decode
+    /// wall-clock (nanoseconds) into `decode_ns` — how the merge
+    /// surfaces codec CPU time in its stats.
+    pub fn open_with(path: &Path, decode_ns: Option<Arc<AtomicU64>>) -> Result<Self> {
         let f = File::open(path)
             .with_context(|| format!("opening run file {}", path.display()))?;
         let len = f.metadata()?.len();
@@ -314,39 +474,180 @@ impl<T: ExtItem> RunReader<T> {
         let mut magic = [0u8; 4];
         inp.read_exact(&mut magic)
             .map_err(|e| anyhow!("{}: reading run header: {e}", path.display()))?;
-        if magic != RUN_MAGIC {
-            bail!("{}: not a run file (bad magic {magic:?})", path.display());
-        }
+        let codec = match magic {
+            RUN_MAGIC => Codec::Raw,
+            RUN_MAGIC_V2 => Codec::Delta,
+            _ => bail!("{}: not a run file (bad magic {magic:?})", path.display()),
+        };
         let mut cnt = [0u8; 8];
         inp.read_exact(&mut cnt)
             .map_err(|e| anyhow!("{}: reading run header: {e}", path.display()))?;
         let remaining = u64::from_le_bytes(cnt);
-        // The count is untrusted input: checked math so a corrupt
-        // header reports "truncated run" instead of overflowing.
-        let expect = remaining
-            .checked_mul(T::WIRE_BYTES as u64)
-            .and_then(|payload| payload.checked_add(RUN_HEADER_BYTES));
-        if expect != Some(len) {
-            bail!(
-                "{}: truncated run (header claims {} {} elements, file is {} bytes)",
-                path.display(),
-                remaining,
-                T::DTYPE.name(),
-                len
-            );
+        match codec {
+            Codec::Raw => {
+                // The count is untrusted input: checked math so a corrupt
+                // header reports "truncated run" instead of overflowing.
+                let expect = remaining
+                    .checked_mul(T::WIRE_BYTES as u64)
+                    .and_then(|payload| payload.checked_add(RUN_HEADER_BYTES));
+                if expect != Some(len) {
+                    bail!(
+                        "{}: truncated run (header claims {} {} elements, file is {} bytes)",
+                        path.display(),
+                        remaining,
+                        T::DTYPE.name(),
+                        len
+                    );
+                }
+            }
+            Codec::Delta => {
+                // Delta payloads are variable-length: full validation is
+                // per-block during streaming plus a trailing-bytes check
+                // at EOF. Only the cheap lower bound is checkable here.
+                let min = if remaining == 0 {
+                    RUN_HEADER_BYTES
+                } else {
+                    RUN_HEADER_BYTES + DELTA_FRAME_BYTES as u64 + T::KEY_BYTES as u64
+                };
+                if len < min {
+                    bail!(
+                        "{}: truncated run (header claims {} {} elements, file is {} bytes)",
+                        path.display(),
+                        remaining,
+                        T::DTYPE.name(),
+                        len
+                    );
+                }
+            }
         }
-        Ok(RunReader { inp, remaining, byte_buf: Vec::new(), _elem: PhantomData })
+        Ok(RunReader {
+            inp,
+            path: path.to_path_buf(),
+            codec,
+            remaining,
+            file_len: len,
+            consumed: RUN_HEADER_BYTES,
+            pending: Vec::new(),
+            pending_pos: 0,
+            byte_buf: Vec::new(),
+            key_buf: Vec::new(),
+            decode_ns,
+            _elem: PhantomData,
+        })
     }
 
-    /// Elements not yet read.
+    /// Elements not yet read (not yet *decoded*, for delta runs).
     pub fn remaining(&self) -> u64 {
         self.remaining
+    }
+
+    /// The codec this file was written with.
+    pub fn codec(&self) -> Codec {
+        self.codec
     }
 
     /// Append up to `max` elements to `out`; returns how many were read
     /// (0 = exhausted).
     pub fn read_block(&mut self, out: &mut Vec<T>, max: usize) -> Result<usize> {
-        read_record_block(&mut self.inp, &mut self.remaining, &mut self.byte_buf, out, max)
+        match self.codec {
+            Codec::Raw => read_record_block(
+                &mut self.inp,
+                &mut self.remaining,
+                &mut self.byte_buf,
+                out,
+                max,
+            ),
+            Codec::Delta => {
+                // Loop across delta blocks so one call fills up to
+                // `max` records whatever the on-disk block granularity
+                // — prefetch lookahead and merge-tree call counts stay
+                // identical to the raw codec's.
+                let mut total = 0usize;
+                while total < max {
+                    if self.pending_pos == self.pending.len() {
+                        if self.remaining == 0 {
+                            if self.consumed != self.file_len {
+                                bail!(
+                                    "{}: corrupt run ({} trailing bytes after the last block)",
+                                    self.path.display(),
+                                    self.file_len - self.consumed
+                                );
+                            }
+                            break;
+                        }
+                        self.fill_pending()?;
+                    }
+                    let avail = self.pending.len() - self.pending_pos;
+                    let take = avail.min(max - total);
+                    out.extend_from_slice(
+                        &self.pending[self.pending_pos..self.pending_pos + take],
+                    );
+                    self.pending_pos += take;
+                    total += take;
+                }
+                Ok(total)
+            }
+        }
+    }
+
+    /// Read + decode the next delta block into `pending`.
+    fn fill_pending(&mut self) -> Result<()> {
+        let path = &self.path;
+        let mut hdr = [0u8; DELTA_FRAME_BYTES];
+        self.inp.read_exact(&mut hdr).map_err(|e| {
+            anyhow!("{}: truncated run (mid block header): {e}", path.display())
+        })?;
+        let n = u32::from_le_bytes(hdr[..4].try_into().unwrap()) as usize;
+        let key_bytes = u32::from_le_bytes(hdr[4..].try_into().unwrap()) as u64;
+        if n == 0 || n > DELTA_BLOCK_MAX {
+            bail!("{}: corrupt run (block claims {n} records)", path.display());
+        }
+        if n as u64 > self.remaining {
+            bail!(
+                "{}: corrupt run (block claims {n} records, only {} remain)",
+                path.display(),
+                self.remaining
+            );
+        }
+        let max_key_bytes = (T::KEY_BYTES + (n - 1) * MAX_VARINT_BYTES) as u64;
+        let left_in_file = self.file_len - self.consumed - DELTA_FRAME_BYTES as u64;
+        let key_range = T::KEY_BYTES as u64..=max_key_bytes.min(left_in_file);
+        if !key_range.contains(&key_bytes) {
+            bail!(
+                "{}: corrupt run (block claims {key_bytes} key bytes for {n} records)",
+                path.display()
+            );
+        }
+        self.byte_buf.resize(key_bytes as usize, 0);
+        self.inp
+            .read_exact(&mut self.byte_buf)
+            .map_err(|e| anyhow!("{}: truncated run (mid key section): {e}", path.display()))?;
+        let t = Instant::now();
+        self.key_buf.clear();
+        decode_delta_keys::<T>(&self.byte_buf, n, &mut self.key_buf)
+            .map_err(|e| anyhow!("{}: corrupt run ({e})", path.display()))?;
+        let decode_keys_ns = t.elapsed().as_nanos() as u64;
+
+        let payload_bytes = T::WIRE_BYTES - T::KEY_BYTES;
+        self.byte_buf.resize(n * payload_bytes, 0);
+        self.inp
+            .read_exact(&mut self.byte_buf)
+            .map_err(|e| anyhow!("{}: truncated run (mid payload): {e}", path.display()))?;
+
+        let t = Instant::now();
+        self.pending.clear();
+        self.pending_pos = 0;
+        self.pending.reserve(n);
+        for (i, &k) in self.key_buf.iter().enumerate() {
+            let p = &self.byte_buf[i * payload_bytes..(i + 1) * payload_bytes];
+            self.pending.push(T::from_parts(k, p));
+        }
+        if let Some(c) = &self.decode_ns {
+            c.fetch_add(decode_keys_ns + t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+        self.consumed += DELTA_FRAME_BYTES as u64 + key_bytes + (n * payload_bytes) as u64;
+        self.remaining -= n as u64;
+        Ok(())
     }
 }
 
@@ -360,6 +661,8 @@ pub struct RawReader<T: ExtItem> {
 }
 
 impl<T: ExtItem> RawReader<T> {
+    /// Open a raw dataset, validating that its size is a whole number
+    /// of records.
     pub fn open(path: &Path) -> Result<Self> {
         let f = File::open(path)
             .with_context(|| format!("opening dataset {}", path.display()))?;
@@ -403,12 +706,14 @@ pub struct RawWriter<T: ExtItem> {
 }
 
 impl<T: ExtItem> RawWriter<T> {
+    /// Create (truncate) the dataset at `path`.
     pub fn create(path: &Path) -> Result<Self> {
         let f = File::create(path)
             .with_context(|| format!("creating output {}", path.display()))?;
         Ok(RawWriter { out: BufWriter::new(f), count: 0, byte_buf: Vec::new(), _elem: PhantomData })
     }
 
+    /// Append a block of records.
     pub fn write_block(&mut self, xs: &[T]) -> Result<()> {
         encode_block(xs, &mut self.byte_buf);
         self.out.write_all(&self.byte_buf)?;
@@ -459,14 +764,74 @@ mod tests {
         let run = w.finish().unwrap();
         assert_eq!(run.elems, 5);
         assert_eq!(run.bytes, RUN_HEADER_BYTES + 20);
+        assert_eq!(run.raw_bytes, run.bytes, "raw codec: encoded == raw");
 
         let mut r = RunReader::<u32>::open(&path).unwrap();
         assert_eq!(r.remaining(), 5);
+        assert_eq!(r.codec(), Codec::Raw);
         let mut out = Vec::new();
         assert_eq!(r.read_block(&mut out, 2).unwrap(), 2);
         assert_eq!(r.read_block(&mut out, 100).unwrap(), 3);
         assert_eq!(r.read_block(&mut out, 100).unwrap(), 0);
         assert_eq!(out, vec![9, 8, 7, 6, 5]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn delta_run_round_trip_in_blocks() {
+        let path = tmp("rt.flr2");
+        let mut w = RunWriter::create_with(&path, Codec::Delta).unwrap();
+        w.write_block(&[9u32, 8, 7]).unwrap();
+        w.write_block(&[]).unwrap();
+        w.write_block(&[6, 5]).unwrap();
+        let run = w.finish().unwrap();
+        assert_eq!(run.elems, 5);
+        assert_eq!(run.raw_bytes, RUN_HEADER_BYTES + 20);
+        assert_eq!(run.bytes, std::fs::metadata(&path).unwrap().len());
+        // Two write calls → two framed blocks: 2 × (8 + 4 + deltas).
+        assert_eq!(run.bytes, RUN_HEADER_BYTES + (8 + 4 + 2) + (8 + 4 + 1));
+
+        let mut r = RunReader::<u32>::open(&path).unwrap();
+        assert_eq!(r.remaining(), 5);
+        assert_eq!(r.codec(), Codec::Delta);
+        let mut out = Vec::new();
+        assert_eq!(r.read_block(&mut out, 2).unwrap(), 2);
+        while r.read_block(&mut out, 2).unwrap() > 0 {}
+        assert_eq!(out, vec![9, 8, 7, 6, 5]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn delta_run_round_trip_kv_payloads() {
+        let path = tmp("rt-kv.flr2");
+        let recs = vec![Kv::new(9, 100), Kv::new(9, 101), Kv::new(3, 102), Kv::new(3, 103)];
+        let mut w = RunWriter::create_with(&path, Codec::Delta).unwrap();
+        w.write_block(&recs).unwrap();
+        let run = w.finish().unwrap();
+        assert_eq!(run.elems, 4);
+        assert_eq!(run.raw_bytes, RUN_HEADER_BYTES + 32);
+        let mut r = RunReader::<Kv>::open(&path).unwrap();
+        let mut out = Vec::new();
+        while r.read_block(&mut out, 3).unwrap() > 0 {}
+        assert_eq!(out, recs, "payloads must survive the delta wire byte-exactly");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn delta_run_decode_counter_accumulates() {
+        let path = tmp("rt-ctr.flr2");
+        let data: Vec<u64> = (0..5000u64).rev().collect();
+        let mut w = RunWriter::create_with(&path, Codec::Delta).unwrap();
+        w.write_block(&data).unwrap();
+        let run = w.finish().unwrap();
+        assert!(run.bytes < run.raw_bytes, "dense u64 run must compress");
+
+        let ctr = Arc::new(AtomicU64::new(0));
+        let mut r = RunReader::<u64>::open_with(&path, Some(Arc::clone(&ctr))).unwrap();
+        let mut out = Vec::new();
+        while r.read_block(&mut out, 512).unwrap() > 0 {}
+        assert_eq!(out, data);
+        assert!(ctr.load(Ordering::Relaxed) > 0, "decode time must be counted");
         std::fs::remove_file(&path).unwrap();
     }
 
@@ -502,6 +867,25 @@ mod tests {
         // And they decode back to the identical keys (bit-exact).
         assert_eq!(read_raw::<F32Key>(&path).unwrap(), keys);
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn key_payload_split_round_trips_every_dtype() {
+        // from_parts(key_bits, encode_payload bytes) must be the
+        // identity for every ExtItem — the delta codec's correctness
+        // precondition.
+        fn check<T: ExtItem + PartialEq>(xs: &[T]) {
+            for &x in xs {
+                let mut payload = vec![0u8; T::WIRE_BYTES - T::KEY_BYTES];
+                x.encode_payload(&mut payload);
+                assert!(T::from_parts(x.key_bits(), &payload) == x, "{x:?}");
+            }
+        }
+        check(&[0u32, 1, u32::MAX, 0x8000_0001]);
+        check(&[0u64, 1, u64::MAX]);
+        check(&[Kv::new(7, 9), Kv::new(u32::MAX, 0), Kv::new(0, u32::MAX)]);
+        check(&[Kv64 { key: u64::MAX, val: 1 }, Kv64 { key: 0, val: u64::MAX }]);
+        check(&[F32Key::from_f32(-1.5), F32Key::from_f32(f32::INFINITY)]);
     }
 
     #[test]
@@ -568,6 +952,16 @@ mod tests {
         let path = tmp("empty.flr");
         let run = RunWriter::<u32>::create(&path).unwrap().finish().unwrap();
         assert_eq!(run.elems, 0);
+        let mut r = RunReader::<u32>::open(&path).unwrap();
+        let mut out = Vec::new();
+        assert_eq!(r.read_block(&mut out, 10).unwrap(), 0);
+        std::fs::remove_file(&path).unwrap();
+
+        // An empty delta run is just a header too.
+        let path = tmp("empty.flr2");
+        let run = RunWriter::<u32>::create_with(&path, Codec::Delta).unwrap().finish().unwrap();
+        assert_eq!(run.elems, 0);
+        assert_eq!(run.bytes, RUN_HEADER_BYTES);
         let mut r = RunReader::<u32>::open(&path).unwrap();
         let mut out = Vec::new();
         assert_eq!(r.read_block(&mut out, 10).unwrap(), 0);

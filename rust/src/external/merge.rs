@@ -22,14 +22,17 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Error, Result};
 
-use super::format::{ExtItem, RawWriter, RunFile, RunReader, RUN_HEADER_BYTES};
+use super::format::{ExtItem, RawWriter, RunFile, RunReader, RunWriter, RUN_HEADER_BYTES};
 use super::spill::SpillManager;
-use super::stream::{build_tree, pump, PrefetchCounters, PrefetchStream, ReaderStream, RunStream};
+use super::stream::{
+    build_tree, pump, DoubleBufWriter, PrefetchCounters, PrefetchStream, ReaderStream, RunStream,
+};
 use super::ExternalConfig;
 
 /// The pass/group structure for merging `k` runs at a given fan-in.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct MergePlan {
+    /// Maximum runs per tree.
     pub fan_in: usize,
     /// Group sizes for each intermediate (spilling) pass.
     pub intermediate: Vec<Vec<usize>>,
@@ -38,6 +41,7 @@ pub struct MergePlan {
 }
 
 impl MergePlan {
+    /// Plan the merge of `k` runs at `fan_in` (≥ 2).
     pub fn new(k: usize, fan_in: usize) -> Self {
         assert!(fan_in >= 2, "fan_in must be at least 2");
         let mut intermediate = Vec::new();
@@ -68,6 +72,7 @@ fn group_sizes(k: usize, fan_in: usize) -> Vec<usize> {
 /// Where the merged output goes: the final dataset file, a fresh run, or
 /// an in-memory buffer (service-path small sorts, tests).
 pub trait RecordSink<T: ExtItem> {
+    /// Append one block of merged records.
     fn write_block(&mut self, xs: &[T]) -> Result<()>;
 }
 
@@ -84,6 +89,22 @@ impl<T: ExtItem> RecordSink<T> for RawWriter<T> {
     }
 }
 
+impl<T: ExtItem> RecordSink<T> for RunWriter<T> {
+    fn write_block(&mut self, xs: &[T]) -> Result<()> {
+        RunWriter::write_block(self, xs)
+    }
+}
+
+// A double-buffered writer is a sink too: `sort_file` wraps its output
+// `RawWriter` in one (so the final pass's merge never blocks on the
+// output disk — the ROADMAP's write-side-buffering follow-on) and the
+// spill paths wrap `RunWriter`s.
+impl<T: ExtItem, W: RecordSink<T> + Send + 'static> RecordSink<T> for DoubleBufWriter<T, W> {
+    fn write_block(&mut self, xs: &[T]) -> Result<()> {
+        DoubleBufWriter::write_block(self, xs)
+    }
+}
+
 /// Result of executing a merge plan.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct MergeOutcome {
@@ -95,6 +116,9 @@ pub struct MergeOutcome {
     pub prefetch_hits: u64,
     /// Leaf blocks the merger had to wait for.
     pub prefetch_misses: u64,
+    /// Wall-clock the leaf readers spent decoding `FLR2` blocks, µs
+    /// (overlapped with merging whenever prefetch is on).
+    pub codec_decode_us: u64,
 }
 
 fn open_group<T: ExtItem>(
@@ -105,7 +129,8 @@ fn open_group<T: ExtItem>(
     let block = cfg.block_elems_for(T::WIRE_BYTES);
     let mut streams: Vec<Box<dyn RunStream<T>>> = Vec::with_capacity(group.len());
     for run in group {
-        let reader = RunReader::<T>::open(&run.path)?;
+        let reader =
+            RunReader::<T>::open_with(&run.path, Some(Arc::clone(&counters.decode_ns)))?;
         if cfg.prefetch_blocks > 0 {
             streams.push(Box::new(PrefetchStream::spawn(
                 reader,
@@ -122,16 +147,19 @@ fn open_group<T: ExtItem>(
 
 /// Merge one group of runs into a pre-created run writer. Runs on a
 /// worker thread during intermediate passes; touches no shared state
-/// beyond the prefetch counters.
+/// beyond the prefetch counters. The writer is double-buffered so
+/// re-encoding + writing the merged run overlaps with merging the next
+/// block instead of stalling it.
 fn merge_group<T: ExtItem>(
     group: &[RunFile],
     cfg: &ExternalConfig,
     counters: &Arc<PrefetchCounters>,
-    mut writer: super::format::RunWriter<T>,
+    writer: RunWriter<T>,
 ) -> Result<(RunFile, u64)> {
     let mut tree = open_group::<T>(group, cfg, counters)?;
-    let written = pump(tree.as_mut(), |chunk| writer.write_block(chunk))?;
-    Ok((writer.finish()?, written))
+    let mut dbw = DoubleBufWriter::spawn(writer, 1)?;
+    let written = pump(tree.as_mut(), |chunk| dbw.write_block(chunk))?;
+    Ok((dbw.finish()?.finish()?, written))
 }
 
 /// Merge `runs` into `sink` per `MergePlan::new(runs.len(), fan_in)`,
@@ -146,6 +174,7 @@ pub fn merge_runs<T: ExtItem>(
     let plan = MergePlan::new(runs.len(), cfg.fan_in);
     let counters = Arc::new(PrefetchCounters::default());
     let threads = cfg.effective_threads().max(1);
+    let codec = cfg.codec_for(T::DTYPE);
 
     for sizes in &plan.intermediate {
         let mut next: Vec<Option<RunFile>> = vec![None; sizes.len()];
@@ -164,7 +193,9 @@ pub fn merge_runs<T: ExtItem>(
 
         for batch in jobs.chunks(threads) {
             // Enforce the disk budget for the whole batch before any
-            // merged run is written, not after the disk has filled.
+            // merged run is written, not after the disk has filled. The
+            // projection is the uncompressed size — conservative when
+            // the codec compresses.
             let upcoming: u64 = batch
                 .iter()
                 .map(|(_, g)| {
@@ -175,9 +206,12 @@ pub fn merge_runs<T: ExtItem>(
             spill.check_headroom(upcoming)?;
             // Writers are created in group order on this thread, so run
             // numbering stays deterministic for any worker count.
+            // Intermediate runs re-encode through the same codec as
+            // phase 1 — every byte crossing the spill boundary flows
+            // through the codec layer in both phases.
             let mut writers = Vec::with_capacity(batch.len());
             for _ in batch {
-                writers.push(spill.create_run::<T>()?);
+                writers.push(spill.create_run::<T>(codec)?);
             }
             let out_paths: Vec<std::path::PathBuf> =
                 writers.iter().map(|w| w.path().to_path_buf()).collect();
@@ -260,6 +294,7 @@ pub fn merge_runs<T: ExtItem>(
         merge_passes: plan.passes(),
         prefetch_hits: counters.hits.load(Ordering::Relaxed),
         prefetch_misses: counters.misses.load(Ordering::Relaxed),
+        codec_decode_us: counters.decode_ns.load(Ordering::Relaxed) / 1000,
     })
 }
 

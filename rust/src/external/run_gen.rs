@@ -10,15 +10,27 @@
 //! for every worker count (the determinism the concurrency tests pin
 //! down). In-flight chunks are capped at `2 × threads`, bounding resident
 //! memory at ≈ `2 × threads × mem_budget_bytes` in parallel mode.
+//!
+//! Spills are double-buffered
+//! ([`DoubleBufWriter`](super::stream::DoubleBufWriter)): each run's
+//! encode + disk write happens on a writer thread while the coordinator
+//! reads (and, serially, sorts) the next chunk, so the producer never
+//! blocks on the spill — at the cost of at most one extra run buffer in
+//! flight. Runs are encoded with the effective codec
+//! ([`ExternalConfig::codec_for`]): `FLR2` delta blocks compress the
+//! sorted runs' small key deltas, cutting phase-1 spill bandwidth.
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
-use super::format::{ExtItem, RawReader, RunFile, RUN_HEADER_BYTES};
+use super::codec::Codec;
+use super::format::{ExtItem, RawReader, RunFile, RunWriter, RUN_HEADER_BYTES};
 use super::spill::SpillManager;
+use super::stream::DoubleBufWriter;
 use super::ExternalConfig;
 
 /// Source of unsorted record blocks — a dataset file, an in-memory
@@ -41,6 +53,7 @@ pub struct SliceSource<'a, T> {
 }
 
 impl<'a, T> SliceSource<'a, T> {
+    /// Source over `data`, read from the front.
     pub fn new(data: &'a [T]) -> Self {
         SliceSource { data, pos: 0 }
     }
@@ -56,47 +69,74 @@ impl<T: ExtItem> RecordSource<T> for SliceSource<'_, T> {
 }
 
 /// Read one run-sized chunk (or whatever is left) from the source into
-/// a caller-owned buffer (cleared first), so the serial path reuses one
-/// allocation across every run.
-fn read_chunk_into<T: ExtItem>(
-    src: &mut dyn RecordSource<T>,
-    buf: &mut Vec<T>,
-    run_elems: usize,
-) -> Result<()> {
-    buf.clear();
-    while buf.len() < run_elems {
-        if src.read_block(buf, run_elems - buf.len())? == 0 {
-            break;
-        }
-    }
-    Ok(())
-}
-
-/// [`read_chunk_into`] with a fresh buffer — the parallel path needs an
-/// owned chunk per work item anyway.
+/// a fresh owned buffer. Both phases hand the buffer off whole — to a
+/// sort worker and then the spill writer thread — so per-run ownership
+/// is the point, not an allocation to optimise away.
 fn read_chunk<T: ExtItem>(
     src: &mut dyn RecordSource<T>,
     run_elems: usize,
 ) -> Result<Vec<T>> {
     let mut buf = Vec::with_capacity(run_elems);
-    read_chunk_into(src, &mut buf, run_elems)?;
+    while buf.len() < run_elems {
+        if src.read_block(&mut buf, run_elems - buf.len())? == 0 {
+            break;
+        }
+    }
     Ok(buf)
 }
 
-/// Spill one sorted buffer as the next run (budget check up front: fail
-/// before the disk fills, not after).
-fn spill_sorted_run<T: ExtItem>(
-    spill: &mut SpillManager,
-    buf: &[T],
-    runs: &mut Vec<RunFile>,
-) -> Result<()> {
-    spill.check_headroom(RUN_HEADER_BYTES + (buf.len() * T::WIRE_BYTES) as u64)?;
-    let mut writer = spill.create_run::<T>()?;
-    writer.write_block(buf)?;
-    let run = writer.finish()?;
-    spill.register(&run)?;
-    runs.push(run);
-    Ok(())
+/// One spill in flight: a writer thread encodes + writes the run while
+/// the coordinator reads (and sorts) the next chunk. At most one run is
+/// pending at a time — classic double buffering — and it is finished
+/// (joined, registered) before the next spill starts, so the budget
+/// checks and run accounting stay exactly as strict as the synchronous
+/// path.
+struct PendingSpill<T: ExtItem> {
+    path: PathBuf,
+    dbw: DoubleBufWriter<T, RunWriter<T>>,
+}
+
+impl<T: ExtItem> PendingSpill<T> {
+    /// Budget-check, create the next run file, and hand the sorted
+    /// buffer to the writer thread (budget check up front: fail before
+    /// the disk fills, not after). The headroom projection uses the
+    /// uncompressed size — conservative when the codec compresses.
+    fn start(spill: &mut SpillManager, codec: Codec, buf: Vec<T>) -> Result<Self> {
+        spill.check_headroom(RUN_HEADER_BYTES + (buf.len() * T::WIRE_BYTES) as u64)?;
+        let writer = spill.create_run::<T>(codec)?;
+        let path = writer.path().to_path_buf();
+        let mut dbw = DoubleBufWriter::spawn(writer, 1)?;
+        if let Err(e) = dbw.send(buf) {
+            drop(dbw);
+            let _ = std::fs::remove_file(&path);
+            return Err(e);
+        }
+        Ok(PendingSpill { path, dbw })
+    }
+
+    /// Wait for the write to land, then register the finished run.
+    fn finish(self, spill: &mut SpillManager, runs: &mut Vec<RunFile>) -> Result<()> {
+        match self.dbw.finish().and_then(|w| w.finish()) {
+            Ok(run) => {
+                // register() keeps the run tracked even when it reports
+                // a budget breach, so SpillManager::drop still cleans it.
+                spill.register(&run)?;
+                runs.push(run);
+                Ok(())
+            }
+            Err(e) => {
+                let _ = std::fs::remove_file(&self.path);
+                Err(e)
+            }
+        }
+    }
+
+    /// Error-path cleanup: stop the writer and delete the partial file
+    /// (it was never registered, so the manager won't).
+    fn abandon(self) {
+        drop(self.dbw);
+        let _ = std::fs::remove_file(&self.path);
+    }
 }
 
 /// Consume `src`, spilling sorted runs of at most
@@ -121,18 +161,34 @@ fn generate_runs_serial<T: ExtItem>(
     cfg: &ExternalConfig,
     spill: &mut SpillManager,
 ) -> Result<Vec<RunFile>> {
+    let codec = cfg.codec_for(T::DTYPE);
     let run_elems = cfg.run_elems_for(T::WIRE_BYTES);
     let mut runs = Vec::new();
-    let mut buf: Vec<T> = Vec::with_capacity(run_elems);
-    loop {
-        read_chunk_into(src, &mut buf, run_elems)?;
-        if buf.is_empty() {
-            break;
+    let mut in_flight: Option<PendingSpill<T>> = None;
+    let result = (|| -> Result<()> {
+        loop {
+            // Owned buffer per run: it is handed to the writer thread,
+            // which encodes and writes while we read + sort the next
+            // chunk here.
+            let mut buf = read_chunk(src, run_elems)?;
+            if buf.is_empty() {
+                break;
+            }
+            T::sort_run(&mut buf, cfg.sort_config());
+            if let Some(prev) = in_flight.take() {
+                prev.finish(spill, &mut runs)?;
+            }
+            in_flight = Some(PendingSpill::start(spill, codec, buf)?);
         }
-        T::sort_run(&mut buf, cfg.sort_config());
-        spill_sorted_run(spill, &buf, &mut runs)?;
+        if let Some(prev) = in_flight.take() {
+            prev.finish(spill, &mut runs)?;
+        }
+        Ok(())
+    })();
+    if let Some(pending) = in_flight.take() {
+        pending.abandon(); // only reachable on error
     }
-    Ok(runs)
+    result.map(|()| runs)
 }
 
 fn generate_runs_parallel<T: ExtItem>(
@@ -146,6 +202,8 @@ fn generate_runs_parallel<T: ExtItem>(
     // Cap on chunks that are queued, being sorted, or sorted-but-not-yet
     // spilled: bounds both memory and the reorder window.
     let max_in_flight = 2 * threads as u64;
+
+    let codec = cfg.codec_for(T::DTYPE);
 
     std::thread::scope(|s| {
         let (work_tx, work_rx) = mpsc::sync_channel::<(u64, Vec<T>)>(threads);
@@ -167,6 +225,7 @@ fn generate_runs_parallel<T: ExtItem>(
 
         let mut runs = Vec::new();
         let mut pending: BTreeMap<u64, Vec<T>> = BTreeMap::new();
+        let mut in_flight: Option<PendingSpill<T>> = None;
         let mut next_read = 0u64; // next chunk sequence number to hand out
         let mut next_write = 0u64; // next sequence number to spill
         let mut eof = false;
@@ -190,19 +249,30 @@ fn generate_runs_parallel<T: ExtItem>(
                 if next_write >= next_read {
                     break; // eof and everything spilled
                 }
-                // Collect a sorted chunk, then spill every chunk that is
-                // now contiguous with the write frontier.
+                // Collect a sorted chunk, then start spilling every
+                // chunk now contiguous with the write frontier — each on
+                // the double-buffered writer, finishing its predecessor
+                // first so runs register strictly in input order.
                 let (seq, buf) = done_rx
                     .recv()
                     .map_err(|_| anyhow!("run-gen workers exited early"))?;
                 pending.insert(seq, buf);
                 while let Some(buf) = pending.remove(&next_write) {
-                    spill_sorted_run(spill, &buf, &mut runs)?;
+                    if let Some(prev) = in_flight.take() {
+                        prev.finish(spill, &mut runs)?;
+                    }
+                    in_flight = Some(PendingSpill::start(spill, codec, buf)?);
                     next_write += 1;
                 }
             }
+            if let Some(prev) = in_flight.take() {
+                prev.finish(spill, &mut runs)?;
+            }
             Ok(())
         })();
+        if let Some(p) = in_flight.take() {
+            p.abandon(); // only reachable on error
+        }
         // Closing the work queue releases the pool; the scope joins the
         // workers after the channels (and any queued buffers) drop.
         drop(work_tx);

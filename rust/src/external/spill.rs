@@ -13,6 +13,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Context, Result};
 
+use super::codec::Codec;
 use super::format::{ExtItem, RunFile, RunWriter};
 
 /// Distinguishes concurrent spill dirs within one process.
@@ -31,6 +32,8 @@ pub struct SpillManager {
     runs_created: u64,
     runs_deleted: u64,
     bytes_written: u64,
+    raw_bytes_written: u64,
+    encode_ns: u64,
     peak_live_bytes: u64,
 }
 
@@ -63,22 +66,28 @@ impl SpillManager {
             runs_created: 0,
             runs_deleted: 0,
             bytes_written: 0,
+            raw_bytes_written: 0,
+            encode_ns: 0,
             peak_live_bytes: 0,
         })
     }
 
+    /// The directory runs spill into.
     pub fn dir(&self) -> &Path {
         &self.dir
     }
 
-    /// Open a writer for the next run file. Naming is sequential in call
-    /// order, which the parallel phases rely on for deterministic run
-    /// layouts: writers are always created on the coordinating thread in
-    /// input order, only the merging/sorting work fans out.
-    pub fn create_run<T: ExtItem>(&mut self) -> Result<RunWriter<T>> {
+    /// Open a writer for the next run file, encoding with `codec`
+    /// (callers pass the *effective* codec —
+    /// [`Codec::effective_for`] already applied). Naming is sequential
+    /// in call order, which the parallel phases rely on for
+    /// deterministic run layouts: writers are always created on the
+    /// coordinating thread in input order, only the merging/sorting
+    /// work fans out.
+    pub fn create_run<T: ExtItem>(&mut self, codec: Codec) -> Result<RunWriter<T>> {
         let path = self.dir.join(format!("run-{:06}.flr", self.next_run));
         self.next_run += 1;
-        RunWriter::create(&path)
+        RunWriter::create_with(&path, codec)
     }
 
     /// Check that `upcoming_bytes` more spill fits the disk budget —
@@ -106,6 +115,8 @@ impl SpillManager {
         self.live.push(run.clone());
         self.live_bytes += run.bytes;
         self.bytes_written += run.bytes;
+        self.raw_bytes_written += run.raw_bytes;
+        self.encode_ns += run.encode_ns;
         self.runs_created += 1;
         self.peak_live_bytes = self.peak_live_bytes.max(self.live_bytes);
         if let Some(budget) = self.disk_budget {
@@ -131,24 +142,43 @@ impl SpillManager {
         Ok(())
     }
 
+    /// Bytes currently occupied by live (not yet consumed) runs.
     pub fn live_bytes(&self) -> u64 {
         self.live_bytes
     }
 
+    /// High-water mark of [`live_bytes`](SpillManager::live_bytes).
     pub fn peak_live_bytes(&self) -> u64 {
         self.peak_live_bytes
     }
 
+    /// Runs registered over this manager's lifetime.
     pub fn runs_created(&self) -> u64 {
         self.runs_created
     }
 
+    /// Runs consumed (deleted) over this manager's lifetime.
     pub fn runs_deleted(&self) -> u64 {
         self.runs_deleted
     }
 
+    /// Encoded bytes written across every registered run.
     pub fn bytes_written(&self) -> u64 {
         self.bytes_written
+    }
+
+    /// What the same spill traffic would have occupied uncompressed
+    /// (`elems × WIRE_BYTES` + headers) — `bytes_written /
+    /// raw_bytes_written` is the achieved compression ratio.
+    pub fn raw_bytes_written(&self) -> u64 {
+        self.raw_bytes_written
+    }
+
+    /// Cumulative wall-clock the run writers spent encoding, µs
+    /// (nanosecond-accumulated, divided once here so sub-µs runs are
+    /// not truncated away).
+    pub fn encode_us(&self) -> u64 {
+        self.encode_ns / 1000
     }
 }
 
@@ -168,7 +198,7 @@ mod tests {
     use super::*;
 
     fn spill_run(sm: &mut SpillManager, data: &[u32]) -> RunFile {
-        let mut w = sm.create_run().unwrap();
+        let mut w = sm.create_run(Codec::Raw).unwrap();
         w.write_block(data).unwrap();
         let run = w.finish().unwrap();
         sm.register(&run).unwrap();
@@ -200,12 +230,12 @@ mod tests {
         // Budget fits one 3-element run (12 bytes header + 12 payload)
         // but not two.
         let mut sm = SpillManager::new(None, Some(30)).unwrap();
-        let mut w = sm.create_run().unwrap();
+        let mut w = sm.create_run(Codec::Raw).unwrap();
         w.write_block(&[5u32, 4, 3]).unwrap();
         let r1 = w.finish().unwrap();
         sm.register(&r1).unwrap();
 
-        let mut w = sm.create_run().unwrap();
+        let mut w = sm.create_run(Codec::Raw).unwrap();
         w.write_block(&[2u32, 1, 0]).unwrap();
         let r2 = w.finish().unwrap();
         let err = format!("{:#}", sm.register(&r2).unwrap_err());
@@ -239,6 +269,29 @@ mod tests {
         assert!(!run.path.exists(), "runs are still cleaned");
         assert!(dir.exists(), "caller-provided dir must survive");
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn raw_vs_encoded_accounting() {
+        let mut sm = SpillManager::new(None, None).unwrap();
+        // A dense descending run compresses well under the delta codec.
+        let data: Vec<u32> = (0..2000u32).rev().collect();
+        let mut w = sm.create_run::<u32>(Codec::Delta).unwrap();
+        w.write_block(&data).unwrap();
+        let run = w.finish().unwrap();
+        sm.register(&run).unwrap();
+        assert_eq!(sm.raw_bytes_written(), 12 + 2000 * 4);
+        assert_eq!(sm.bytes_written(), run.bytes);
+        assert!(
+            sm.bytes_written() < sm.raw_bytes_written() / 2,
+            "dense delta run must compress ≥ 2×: {} vs {}",
+            sm.bytes_written(),
+            sm.raw_bytes_written()
+        );
+        // Budget + live accounting use the *encoded* (actual) size.
+        assert_eq!(sm.live_bytes(), run.bytes);
+        sm.consume(&run).unwrap();
+        assert_eq!(sm.live_bytes(), 0);
     }
 
     #[test]

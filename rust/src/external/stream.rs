@@ -18,7 +18,14 @@
 //! double-buffered reader: a prefetch thread fills the next blocks into
 //! a bounded channel while the merger drains the current one, so disk
 //! latency overlaps with merge compute — TopSort's phase-overlap idea
-//! applied at the leaf).
+//! applied at the leaf). Because `FLR2` decoding happens inside
+//! [`RunReader::read_block`], prefetch leaves decompress on their own
+//! thread too — codec CPU never lands on the merge hot path.
+//!
+//! The write side mirrors the leaf: [`DoubleBufWriter`] hands encoded
+//! spill writes to a dedicated thread through a bounded channel, so the
+//! producer (the phase-1 coordinator, a phase-2 group merge) keeps
+//! sorting/merging while the previous block encodes and hits the disk.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, TryRecvError};
@@ -30,6 +37,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::key::Item;
 
 use super::format::{ExtItem, RunReader};
+use super::merge::RecordSink;
 
 /// A stream of descending-sorted blocks of `T`.
 pub trait RunStream<T> {
@@ -46,6 +54,7 @@ pub struct ReaderStream<T: ExtItem> {
 }
 
 impl<T: ExtItem> ReaderStream<T> {
+    /// Stream `reader` in blocks of `block` elements (clamped to ≥ 1).
     pub fn new(reader: RunReader<T>, block: usize) -> Self {
         ReaderStream { reader, block: block.max(1) }
     }
@@ -57,13 +66,19 @@ impl<T: ExtItem> RunStream<T> for ReaderStream<T> {
     }
 }
 
-/// Shared hit/miss counters for the prefetch leaves of one sort:
-/// a *hit* is a block that was already buffered when the merger asked
-/// (the disk read was fully overlapped); a *miss* had to block.
+/// Shared counters for the leaves of one sort: a *hit* is a block that
+/// was already buffered when the merger asked (the disk read was fully
+/// overlapped); a *miss* had to block. `decode_ns` accumulates the
+/// wall-clock the leaf readers spent decoding `FLR2` delta blocks.
 #[derive(Debug, Default)]
 pub struct PrefetchCounters {
+    /// Blocks served without blocking the merge.
     pub hits: AtomicU64,
+    /// Blocks the merge had to wait for.
     pub misses: AtomicU64,
+    /// Nanoseconds spent in codec decode across all leaves (shared with
+    /// each [`RunReader`] via [`RunReader::open_with`]).
+    pub decode_ns: Arc<AtomicU64>,
 }
 
 /// Leaf: a double-buffered run reader. A dedicated thread reads ahead up
@@ -155,6 +170,114 @@ impl<T: ExtItem> Drop for PrefetchStream<T> {
     }
 }
 
+/// Write-side double buffering: a dedicated thread owns the inner
+/// [`RecordSink`] and drains a bounded channel of blocks, so encode +
+/// disk write overlap with the producer's next chunk of work instead of
+/// blocking it (the mirror image of [`PrefetchStream`]). Blocks arrive
+/// in send order from a single producer, so the bytes on disk are
+/// identical to the synchronous path — determinism is untouched.
+pub struct DoubleBufWriter<T, W> {
+    tx: Option<mpsc::SyncSender<Vec<T>>>,
+    /// Drained buffers coming back from the writer thread, so the
+    /// steady state recycles `depth + 1` allocations instead of
+    /// allocating per block.
+    recycle: mpsc::Receiver<Vec<T>>,
+    handle: Option<JoinHandle<(W, Result<()>)>>,
+}
+
+impl<T: ExtItem, W: RecordSink<T> + Send + 'static> DoubleBufWriter<T, W> {
+    /// Move `inner` onto a writer thread buffering up to `depth` blocks
+    /// (clamped to ≥ 1; `1` is classic double buffering — one block in
+    /// flight while the producer fills the next). Errors (instead of
+    /// aborting) when the OS refuses another thread.
+    pub fn spawn(mut inner: W, depth: usize) -> Result<Self> {
+        let (tx, rx) = mpsc::sync_channel::<Vec<T>>(depth.max(1));
+        let (recycle_tx, recycle) = mpsc::channel::<Vec<T>>();
+        let handle = std::thread::Builder::new()
+            .name("flims-spill-write".into())
+            .spawn(move || {
+                let mut res = Ok(());
+                while let Ok(mut buf) = rx.recv() {
+                    if let Err(e) = RecordSink::write_block(&mut inner, &buf) {
+                        // Breaking drops the receiver; the producer's
+                        // next send fails and surfaces this error.
+                        res = Err(e);
+                        break;
+                    }
+                    // Hand the drained buffer back for reuse; the
+                    // producer may be gone already (send-and-finish).
+                    buf.clear();
+                    let _ = recycle_tx.send(buf);
+                }
+                (inner, res)
+            })
+            .map_err(|e| anyhow!("spawning spill writer thread: {e}"))?;
+        Ok(DoubleBufWriter { tx: Some(tx), recycle, handle: Some(handle) })
+    }
+
+    /// Queue an owned block (no copy). Blocks only when `depth` blocks
+    /// are already in flight.
+    pub fn send(&mut self, buf: Vec<T>) -> Result<()> {
+        if buf.is_empty() {
+            return Ok(());
+        }
+        let sent = match &self.tx {
+            Some(tx) => tx.send(buf).is_ok(),
+            None => bail!("spill writer already finished"),
+        };
+        if !sent {
+            // The writer thread exited early: report its real error.
+            return Err(match self.shut_down() {
+                Err(e) => e,
+                Ok(_) => anyhow!("spill writer thread exited unexpectedly"),
+            });
+        }
+        Ok(())
+    }
+
+    /// Queue a copy of `xs` (the streaming-merge path, whose block
+    /// buffer is reused). The copy lands in a recycled buffer when one
+    /// is available, so the steady state allocates nothing.
+    pub fn write_block(&mut self, xs: &[T]) -> Result<()> {
+        let mut buf = self.recycle.try_recv().unwrap_or_default();
+        buf.clear();
+        buf.extend_from_slice(xs);
+        self.send(buf)
+    }
+
+    /// Close the queue, wait for every block to hit the inner writer,
+    /// and hand the inner writer back (for `finish()` etc). Any write
+    /// error from the thread surfaces here.
+    pub fn finish(mut self) -> Result<W> {
+        self.shut_down()
+    }
+
+    fn shut_down(&mut self) -> Result<W> {
+        self.tx = None; // closing the channel lets the thread drain + exit
+        let handle = self
+            .handle
+            .take()
+            .ok_or_else(|| anyhow!("spill writer already finished"))?;
+        let (inner, res) = handle
+            .join()
+            .map_err(|_| anyhow!("spill writer thread panicked"))?;
+        res?;
+        Ok(inner)
+    }
+}
+
+impl<T, W> Drop for DoubleBufWriter<T, W> {
+    fn drop(&mut self) {
+        // Error-path cleanup: stop the thread and reap it so no writes
+        // race the caller's file cleanup. join cannot deadlock — the
+        // channel is already closed.
+        self.tx = None;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 /// One buffered input side of a merge node.
 struct Side<T> {
     buf: Vec<T>,
@@ -215,6 +338,8 @@ pub struct MergeStream<T: ExtItem> {
 }
 
 impl<T: ExtItem> MergeStream<T> {
+    /// Merge node over children `a` (earlier input — wins key ties) and
+    /// `b`, buffering `block` elements per side, FLiMS lane width `w`.
     pub fn new(
         a: Box<dyn RunStream<T>>,
         b: Box<dyn RunStream<T>>,
@@ -552,5 +677,73 @@ mod tests {
         assert!(!out.is_empty());
         drop(s); // must join the reader thread without deadlocking
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn double_buf_writer_matches_sync_writer_bytes() {
+        use super::super::codec::Codec;
+        use super::super::format::RunWriter;
+        let dir = std::env::temp_dir().join(format!("flims-dbw-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = Rng::new(87);
+        let mut data = gen_u32(&mut rng, 20_000, Distribution::Uniform);
+        data.sort_unstable_by(|a, b| b.cmp(a));
+
+        for codec in [Codec::Raw, Codec::Delta] {
+            let sync_path = dir.join(format!("sync.{}", codec.name()));
+            let mut w = RunWriter::create_with(&sync_path, codec).unwrap();
+            for chunk in data.chunks(777) {
+                w.write_block(chunk).unwrap();
+            }
+            let sync_run = w.finish().unwrap();
+
+            let async_path = dir.join(format!("async.{}", codec.name()));
+            let inner = RunWriter::create_with(&async_path, codec).unwrap();
+            let mut dbw = DoubleBufWriter::spawn(inner, 2).unwrap();
+            for chunk in data.chunks(777) {
+                dbw.write_block(chunk).unwrap();
+            }
+            let async_run = dbw.finish().unwrap().finish().unwrap();
+
+            assert_eq!(async_run.elems, sync_run.elems, "{codec:?}");
+            assert_eq!(async_run.bytes, sync_run.bytes, "{codec:?}");
+            assert_eq!(
+                std::fs::read(&sync_path).unwrap(),
+                std::fs::read(&async_path).unwrap(),
+                "double-buffered bytes must be identical ({codec:?})"
+            );
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn double_buf_writer_surfaces_inner_errors() {
+        struct Failing {
+            after: usize,
+        }
+        impl RecordSink<u32> for Failing {
+            fn write_block(&mut self, xs: &[u32]) -> Result<()> {
+                if self.after < xs.len() {
+                    anyhow::bail!("simulated disk full");
+                }
+                self.after -= xs.len();
+                Ok(())
+            }
+        }
+        let mut dbw = DoubleBufWriter::spawn(Failing { after: 100 }, 1).unwrap();
+        // Keep feeding until the failure propagates back through send
+        // (the channel disconnect) or finish.
+        let mut failed = None;
+        for _ in 0..100 {
+            if let Err(e) = dbw.write_block(&[1u32; 64]) {
+                failed = Some(format!("{e:#}"));
+                break;
+            }
+        }
+        let msg = match failed {
+            Some(m) => m,
+            None => format!("{:#}", dbw.finish().map(|_| ()).unwrap_err()),
+        };
+        assert!(msg.contains("simulated disk full"), "{msg}");
     }
 }

@@ -2,7 +2,9 @@
 //!
 //! Full-system reproduction of *"FLiMS: a Fast Lightweight 2-way Merge
 //! Sorter"* (Papaphilippou, Luk, Brooks — IEEE Transactions on
-//! Computers, 2022; DOI 10.1109/TC.2022.3146509).
+//! Computers, 2022; DOI 10.1109/TC.2022.3146509). See the repository
+//! `README.md` for the architecture map and quickstart, and
+//! `docs/FORMATS.md` for the on-disk formats.
 //!
 //! The crate is the runtime (Layer-3) half of a three-layer stack:
 //!
@@ -15,7 +17,26 @@
 //!   service, and a PJRT runtime that executes the AOT artifacts —
 //!   Python never runs on the request path.
 //!
-//! Module tour:
+//! ## Example
+//!
+//! Sort a vector through the external pipeline and merge two sorted
+//! lists with the paper's 2-way merger:
+//!
+//! ```
+//! use flims::{merge_asc, sort_vec, ExternalConfig};
+//!
+//! // Bounded-memory sort (descending). Inputs that fit one run skip
+//! // the spill machinery entirely.
+//! let (sorted, stats) = sort_vec(&[5u32, 1, 9, 3], &ExternalConfig::default()).unwrap();
+//! assert_eq!(sorted, vec![9, 5, 3, 1]);
+//! assert_eq!(stats.runs_spilled, 0); // fits in memory: no disk involved
+//!
+//! // The FLiMS 2-way merge (ascending wrapper), lane width w = 4.
+//! let merged = merge_asc(&[1u32, 4, 7], &[2, 3, 9], 4);
+//! assert_eq!(merged, vec![1, 2, 3, 4, 7, 9]);
+//! ```
+//!
+//! ## Module tour
 //!
 //! * [`key`] — sort-item traits (keys, records, sentinels).
 //! * [`flims`] — the paper's algorithms 1–4 plus complete sort
@@ -32,28 +53,46 @@
 //!   by a bounded work queue; phase 2 is a k-way streaming merge through
 //!   trees of FLiMS 2-way mergers — the stable §4.2 variant for payload
 //!   records, the fast untagged lanes for plain keys (multi-pass above
-//!   the fan-in,
-//!   independent group merges of a pass running concurrently), with
-//!   double-buffered leaves — a prefetch thread per run overlaps disk
-//!   reads with merging. Key ties keep input order end to end (§6).
+//!   the fan-in, independent group merges of a pass running
+//!   concurrently). Both spill boundaries flow through the run-codec
+//!   layer ([`external::codec`]): raw `FLR1` or delta+varint `FLR2`
+//!   runs, encoded on double-buffered writer threads and decoded on the
+//!   prefetch threads, so codec CPU and disk I/O overlap the merge. Key
+//!   ties keep input order end to end (§6).
 //! * [`coordinator`] — sorting-as-a-service: router + dynamic batcher.
 //! * [`runtime`] — PJRT client wrapper executing `artifacts/*.hlo.txt`
 //!   (a stub unless built with the `pjrt` feature).
 //! * [`config`] / [`metrics`] / [`data`] / [`util`] — framework glue.
 
+#![warn(missing_docs)]
+
+// The documentation gate (`missing_docs` + `cargo doc -D warnings` in
+// CI) is enforced module-by-module as the rustdoc pass spreads. These
+// pre-codec modules are grandfathered; new modules must not be added
+// here.
+#[allow(missing_docs)]
 pub mod baselines;
 pub mod config;
 pub mod coordinator;
+#[allow(missing_docs)]
 pub mod data;
 pub mod external;
+#[allow(missing_docs)]
 pub mod flims;
+#[allow(missing_docs)]
 pub mod hw;
+#[allow(missing_docs)]
 pub mod key;
 pub mod metrics;
+#[allow(missing_docs)]
 pub mod runtime;
+#[allow(missing_docs)]
 pub mod tree;
+#[allow(missing_docs)]
 pub mod util;
 
-pub use external::{sort_file, sort_file_dtype, Dtype, ExtItem, ExternalConfig, SpillStats};
+pub use external::{
+    sort_file, sort_file_dtype, sort_vec, Codec, Dtype, ExtItem, ExternalConfig, SpillStats,
+};
 pub use flims::{merge_asc, merge_desc, par_sort_desc, sort_asc, sort_desc, SortConfig};
 pub use key::{is_sorted_desc, F32Key, Item, Key, Kv, Kv64};

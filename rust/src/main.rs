@@ -6,7 +6,8 @@
 //! flims sort     --n 1000000 [--dist uniform|zipf|dup] [--backend native|parallel|pjrt|external] [--w 16] [--chunk 128]
 //! flims merge    --n 65536 [--w 16]
 //! flims sortfile --input data.u32 [--output out.u32] [--dtype u32|u64|kv|kv64|f32]
-//!                [--budget-mb 64] [--fan-in 8] [--threads T] [--prefetch B] [--gen N]
+//!                [--codec raw|delta] [--budget-mb 64] [--fan-in 8] [--threads T]
+//!                [--prefetch B] [--gen N]
 //! flims trace                              # the paper's Table 1 example
 //! flims simulate --design flims|flimsj|wms|mms|vms|basic --w 8 [--skew] [--dup]
 //! flims report   table2|table3|fig13 [--data-bits 64]
@@ -24,7 +25,7 @@ use std::time::Instant;
 
 use flims::baselines::{radix_sort_desc, samplesort_desc};
 use flims::external;
-use flims::external::{Dtype, ExtItem, ExternalConfig};
+use flims::external::{Codec, Dtype, ExtItem, ExternalConfig};
 use flims::config::{AppConfig, RawConfig};
 use flims::coordinator::{BatcherConfig, Router, Service};
 use flims::data::{gen_u32, gen_u64, Distribution};
@@ -144,7 +145,8 @@ fn print_help() {
                      [--w W] [--chunk C] [--threads T] [--config FILE]\n\
            merge     --n N [--w W]\n\
            sortfile  --input F [--output F] [--dtype u32|u64|kv|kv64|f32]\n\
-                     [--budget-mb M] [--fan-in K] [--threads T] [--prefetch B]\n\
+                     [--codec raw|delta] [--budget-mb M] [--fan-in K]\n\
+                     [--threads T] [--prefetch B]\n\
                      [--gen N [--dist D] [--seed S]]   (raw LE record datasets)\n\
            trace     (replays the paper's Table 1 example, w=4)\n\
            simulate  --design flims|flimsj|wms|mms|vms|basic --w W [--skew] [--dup] [--n N]\n\
@@ -309,6 +311,9 @@ fn cmd_sortfile(f: &HashMap<String, String>) -> Result<(), String> {
     if let Some(d) = f.get("dtype") {
         ext.dtype = Dtype::parse(d)?;
     }
+    if let Some(c) = f.get("codec") {
+        ext.codec = Codec::parse(c)?;
+    }
     ext.validate()?;
     let input = PathBuf::from(
         f.get("input").ok_or_else(|| "sortfile: --input <path> required".to_string())?,
@@ -393,6 +398,19 @@ fn sortfile_typed<T: GenRecord>(
         mb(stats.peak_spill_bytes),
         stats.merge_passes,
         output.display()
+    );
+    println!(
+        "  codec {} | spilled {:.1} MB encoded vs {:.1} MB raw ({:.2}x) | encode {:.1} ms / decode {:.1} ms",
+        ext.codec_for(T::DTYPE).name(),
+        mb(stats.bytes_spilled),
+        mb(stats.bytes_spilled_raw),
+        if stats.bytes_spilled > 0 {
+            stats.bytes_spilled_raw as f64 / stats.bytes_spilled as f64
+        } else {
+            1.0
+        },
+        stats.codec_encode_us as f64 / 1000.0,
+        stats.codec_decode_us as f64 / 1000.0,
     );
     println!(
         "  phase1 {:.1} ms | phase2 {:.1} ms | prefetch {} hits / {} misses",

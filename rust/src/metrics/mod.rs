@@ -11,12 +11,15 @@ pub struct Counter {
 }
 
 impl Counter {
+    /// Add one.
     pub fn inc(&self) {
         self.v.fetch_add(1, Ordering::Relaxed);
     }
+    /// Add `n`.
     pub fn add(&self, n: u64) {
         self.v.fetch_add(n, Ordering::Relaxed);
     }
+    /// Current value.
     pub fn get(&self) -> u64 {
         self.v.load(Ordering::Relaxed)
     }
@@ -44,6 +47,7 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// Record one latency sample.
     pub fn observe(&self, d: Duration) {
         let us = (d.as_nanos() / 1000).max(1) as u64;
         let bucket = (63 - us.leading_zeros() as usize).min(NBUCKETS - 1);
@@ -52,6 +56,7 @@ impl LatencyHistogram {
         self.sum_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
     }
 
+    /// Samples recorded so far.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
@@ -82,6 +87,7 @@ impl LatencyHistogram {
         Duration::from_micros(1u64 << NBUCKETS)
     }
 
+    /// One-line count/mean/percentile summary.
     pub fn snapshot(&self) -> String {
         format!(
             "count={} mean={:?} p50={:?} p99={:?}",
@@ -96,19 +102,31 @@ impl LatencyHistogram {
 /// The coordinator's metric set.
 #[derive(Debug, Default)]
 pub struct ServiceMetrics {
+    /// Requests routed (all commands).
     pub requests: Counter,
+    /// Batches the dynamic batcher flushed.
     pub batches: Counter,
+    /// Elements across every sorted/merged request.
     pub elements_sorted: Counter,
+    /// Requests answered with an `err` line.
     pub errors: Counter,
+    /// End-to-end request latency.
     pub latency: LatencyHistogram,
     /// External (out-of-core) sort activity.
     pub external_sorts: Counter,
     /// Spilled runs written (initial + intermediate merge passes).
     pub runs_spilled: Counter,
-    /// Bytes written to spill files.
+    /// Encoded bytes written to spill files (what hit the disk).
     pub bytes_spilled: Counter,
+    /// What the same spill traffic would occupy uncompressed — the
+    /// denominator of the spill compression ratio.
+    pub bytes_spilled_raw: Counter,
     /// Merge passes executed over spilled data.
     pub merge_passes: Counter,
+    /// Cumulative run-codec encode wall-clock, microseconds.
+    pub codec_encode_us: Counter,
+    /// Cumulative run-codec decode wall-clock, microseconds.
+    pub codec_decode_us: Counter,
     /// Cumulative phase-1 (run generation) wall-clock, microseconds.
     pub phase1_us: Counter,
     /// Cumulative phase-2 (k-way merge) wall-clock, microseconds.
@@ -125,7 +143,8 @@ impl ServiceMetrics {
     pub fn report(&self) -> String {
         format!(
             "requests={} batches={} elements={} errors={} latency[{}] \
-             external[sorts={} runs={} spilled_bytes={} passes={} \
+             external[sorts={} runs={} spilled_bytes={} spilled_raw={} \
+             codec_enc_us={} codec_dec_us={} passes={} \
              phase1_us={} phase2_us={} prefetch_hits={} prefetch_misses={}]",
             self.requests.get(),
             self.batches.get(),
@@ -135,6 +154,9 @@ impl ServiceMetrics {
             self.external_sorts.get(),
             self.runs_spilled.get(),
             self.bytes_spilled.get(),
+            self.bytes_spilled_raw.get(),
+            self.codec_encode_us.get(),
+            self.codec_decode_us.get(),
             self.merge_passes.get(),
             self.phase1_us.get(),
             self.phase2_us.get(),
@@ -187,14 +209,18 @@ mod tests {
         let m = ServiceMetrics::default();
         m.external_sorts.inc();
         m.runs_spilled.add(7);
-        m.bytes_spilled.add(4096);
+        m.bytes_spilled.add(1024);
+        m.bytes_spilled_raw.add(4096);
+        m.codec_encode_us.add(300);
+        m.codec_decode_us.add(200);
         m.merge_passes.add(2);
         m.phase1_us.add(1500);
         m.phase2_us.add(2500);
         m.prefetch_hits.add(40);
         m.prefetch_misses.add(2);
         let s = m.report();
-        assert!(s.contains("external[sorts=1 runs=7 spilled_bytes=4096 passes=2"), "{s}");
+        assert!(s.contains("external[sorts=1 runs=7 spilled_bytes=1024 spilled_raw=4096"), "{s}");
+        assert!(s.contains("codec_enc_us=300 codec_dec_us=200 passes=2"), "{s}");
         assert!(s.contains("phase1_us=1500 phase2_us=2500"), "{s}");
         assert!(s.contains("prefetch_hits=40 prefetch_misses=2]"), "{s}");
     }

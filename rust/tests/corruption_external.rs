@@ -1,13 +1,16 @@
-//! Corruption hardening for the `FLR1` spill-run format: every byte-level
-//! mutation of a valid run file must surface as a clean `Err` on open or
-//! read — never a panic, never an infinite loop, never silently wrong
-//! data. Exercised exactly as the issue prescribes: write a valid run,
-//! then mutate its bytes on disk.
+//! Corruption hardening for the `FLR1` (raw) and `FLR2` (delta+varint)
+//! spill-run formats: every byte-level mutation of a valid run file must
+//! surface as a clean `Err` on open or read — never a panic, never an
+//! infinite loop, never silently wrong data. Exercised exactly as the
+//! issue prescribes: write a valid run, then mutate its bytes on disk.
+//! (Byte layouts: `docs/FORMATS.md`.)
 
 use std::path::PathBuf;
 
+use flims::external::codec::Codec;
 use flims::external::format::{
     read_raw, write_raw, ExtItem, RunReader, RunWriter, RUN_HEADER_BYTES, RUN_MAGIC,
+    RUN_MAGIC_V2,
 };
 use flims::key::{Kv, Kv64};
 
@@ -166,6 +169,179 @@ fn wide_record_truncation_is_caught_per_dtype() {
     std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
     let err = format!("{:#}", RunReader::<Kv>::open(&path).unwrap_err());
     assert!(err.contains("truncated run"), "{err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Write a valid 100-element `FLR2` (delta) u32 run and return
+/// (path, its bytes). Written in two blocks so mid-stream framing is
+/// exercised too.
+fn valid_delta_run(dir: &PathBuf) -> (PathBuf, Vec<u8>) {
+    let path = dir.join("valid.flr2");
+    let data: Vec<u32> = (0..100u32).rev().map(|x| x * 3).collect();
+    let mut w = RunWriter::create_with(&path, Codec::Delta).unwrap();
+    w.write_block(&data[..60]).unwrap();
+    w.write_block(&data[60..]).unwrap();
+    let run = w.finish().unwrap();
+    assert_eq!(run.elems, 100);
+    assert!(run.bytes < run.raw_bytes, "a dense run must compress");
+    let bytes = std::fs::read(&path).unwrap();
+    assert_eq!(bytes.len() as u64, run.bytes);
+    (path, bytes)
+}
+
+/// Fully drain a delta reader, mapping any step error out; capped so a
+/// looping decode bug fails the test instead of hanging it.
+fn drain_delta(path: &PathBuf) -> anyhow::Result<Vec<u32>> {
+    let mut r = RunReader::<u32>::open(path)?;
+    let mut out = Vec::new();
+    for _ in 0..10_000 {
+        if r.read_block(&mut out, 64)? == 0 {
+            return Ok(out);
+        }
+    }
+    panic!("delta reader looped past any plausible block count");
+}
+
+#[test]
+fn flr2_sanity_and_version_negotiation() {
+    let dir = test_dir("flr2-sane");
+    let (path, bytes) = valid_delta_run(&dir);
+    assert_eq!(&bytes[..4], &RUN_MAGIC_V2);
+    let out = drain_delta(&path).unwrap();
+    assert_eq!(out.len(), 100);
+    assert_eq!(out[0], 99 * 3);
+    assert_eq!(out[99], 0);
+    // An FLR1 run with identical content still opens (version sniffing).
+    let flr1 = dir.join("v1.flr");
+    let mut w = RunWriter::create(&flr1).unwrap();
+    w.write_block(&out).unwrap();
+    w.finish().unwrap();
+    let mut r = RunReader::<u32>::open(&flr1).unwrap();
+    let mut v1 = Vec::new();
+    while r.read_block(&mut v1, 64).unwrap() > 0 {}
+    assert_eq!(v1, out);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn flr2_truncated_header_and_magic_flips() {
+    let dir = test_dir("flr2-hdr");
+    let (path, bytes) = valid_delta_run(&dir);
+    for keep in 0..RUN_HEADER_BYTES as usize {
+        std::fs::write(&path, &bytes[..keep]).unwrap();
+        assert!(RunReader::<u32>::open(&path).is_err(), "header cut to {keep} must not open");
+    }
+    // Flipping magic bytes gives "bad magic" — except byte 3, where
+    // FLR2 ^ 0xFF is no known version either.
+    for flip in 0..4 {
+        let mut mutated = bytes.clone();
+        mutated[flip] ^= 0xFF;
+        std::fs::write(&path, &mutated).unwrap();
+        let err = format!("{:#}", RunReader::<u32>::open(&path).unwrap_err());
+        assert!(err.contains("bad magic"), "flip={flip}: {err}");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn flr2_count_lies_are_errors() {
+    let dir = test_dir("flr2-count");
+    let (path, bytes) = valid_delta_run(&dir);
+    for claim in [0u64, 1, 59, 99, 101, 1 << 62, u64::MAX] {
+        let mut mutated = bytes.clone();
+        mutated[4..12].copy_from_slice(&claim.to_le_bytes());
+        std::fs::write(&path, &mutated).unwrap();
+        let res = drain_delta(&path);
+        assert!(res.is_err(), "count={claim} must error, got {:?}", res.map(|v| v.len()));
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn flr2_truncated_payload_is_an_error() {
+    let dir = test_dir("flr2-cut");
+    let (path, bytes) = valid_delta_run(&dir);
+    // Cut anywhere in the body: mid key section, mid payload, to the
+    // exact block boundary (count then can't be satisfied).
+    for cut in [1usize, 2, 5, 17, bytes.len() - 13] {
+        std::fs::write(&path, &bytes[..bytes.len() - cut]).unwrap();
+        let err = format!("{:#}", drain_delta(&path).unwrap_err());
+        assert!(
+            err.contains("truncated run") || err.contains("corrupt run"),
+            "cut={cut}: {err}"
+        );
+    }
+    // Trailing garbage after the last block is caught at EOF.
+    let mut grown = bytes.clone();
+    grown.extend_from_slice(&[0xAB; 3]);
+    std::fs::write(&path, &grown).unwrap();
+    let err = format!("{:#}", drain_delta(&path).unwrap_err());
+    assert!(err.contains("trailing"), "{err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn flr2_block_header_mutations_are_errors() {
+    let dir = test_dir("flr2-blk");
+    let (path, bytes) = valid_delta_run(&dir);
+    let hdr = RUN_HEADER_BYTES as usize; // first block header offset
+    // Record count n: zero, over the remaining count, over DELTA_BLOCK_MAX.
+    for n in [0u32, 101, 5000, u32::MAX] {
+        let mut mutated = bytes.clone();
+        mutated[hdr..hdr + 4].copy_from_slice(&n.to_le_bytes());
+        std::fs::write(&path, &mutated).unwrap();
+        let err = format!("{:#}", drain_delta(&path).unwrap_err());
+        assert!(err.contains("corrupt run"), "n={n}: {err}");
+    }
+    // key_bytes: zero, too small for one full key, absurdly large.
+    for kb in [0u32, 3, 10_000, u32::MAX] {
+        let mut mutated = bytes.clone();
+        mutated[hdr + 4..hdr + 8].copy_from_slice(&kb.to_le_bytes());
+        std::fs::write(&path, &mutated).unwrap();
+        let err = format!("{:#}", drain_delta(&path).unwrap_err());
+        assert!(
+            err.contains("corrupt run") || err.contains("truncated run"),
+            "key_bytes={kb}: {err}"
+        );
+    }
+    // Chopping one byte off key_bytes leaves a varint mismatch: the key
+    // section no longer decodes to exactly n keys.
+    let mut mutated = bytes.clone();
+    let kb = u32::from_le_bytes(mutated[hdr + 4..hdr + 8].try_into().unwrap());
+    mutated[hdr + 4..hdr + 8].copy_from_slice(&(kb - 1).to_le_bytes());
+    std::fs::write(&path, &mutated).unwrap();
+    assert!(drain_delta(&path).is_err(), "shrunken key section must not decode");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn flr2_wrong_dtype_is_an_error_not_garbage() {
+    // A Kv delta run has 4-byte payload tails; reading it as u32 (no
+    // payload) or Kv64 (different key width) must fail loudly.
+    let dir = test_dir("flr2-width");
+    let path = dir.join("kv.flr2");
+    let recs: Vec<Kv> = (0..50).map(|i| Kv::new(100 - i, i)).collect();
+    let mut w = RunWriter::create_with(&path, Codec::Delta).unwrap();
+    w.write_block(&recs).unwrap();
+    w.finish().unwrap();
+
+    let mut r = RunReader::<Kv>::open(&path).unwrap();
+    let mut back = Vec::new();
+    while r.read_block(&mut back, 16).unwrap() > 0 {}
+    assert_eq!(back, recs);
+
+    let mut out = Vec::new();
+    let res = RunReader::<u32>::open(&path).and_then(|mut r| {
+        while r.read_block(&mut out, 16)? > 0 {}
+        Ok(())
+    });
+    assert!(res.is_err(), "Kv delta run must not decode as u32");
+    let mut out64 = Vec::new();
+    let res = RunReader::<Kv64>::open(&path).and_then(|mut r| {
+        while r.read_block(&mut out64, 16)? > 0 {}
+        Ok(())
+    });
+    assert!(res.is_err(), "Kv delta run must not decode as Kv64");
     std::fs::remove_dir_all(&dir).unwrap();
 }
 

@@ -15,7 +15,7 @@ use flims::config::AppConfig;
 use flims::coordinator::{BatcherConfig, Router, Service};
 use flims::data::{gen_u32, gen_u64, Distribution};
 use flims::external::format::{read_raw, write_raw};
-use flims::external::{sort_file, sort_vec, ExternalConfig};
+use flims::external::{sort_file, sort_vec, Codec, ExternalConfig};
 use flims::key::{is_sorted_desc, F32Key, Kv, Kv64};
 use flims::util::rng::Rng;
 
@@ -97,6 +97,74 @@ fn parallel_sort_file_is_deterministic_across_thread_counts() {
     std_sort_desc(&mut expect);
     let expect_bytes: Vec<u8> = expect.iter().flat_map(|x| x.to_le_bytes()).collect();
     assert_eq!(outputs[0], expect_bytes);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn raw_and_delta_codecs_produce_byte_identical_output() {
+    // The codec only changes what the *spill* bytes look like; the
+    // sorted dataset must come out byte-for-byte identical — per dtype,
+    // serial and parallel, across distributions including the skewed
+    // ones where delta compresses hardest.
+    let dir = test_dir("codec-det");
+    let mut rng = Rng::new(9020);
+    let n = 1 << 18;
+    for dist in [
+        Distribution::Uniform,
+        Distribution::SortedAsc,
+        Distribution::Zipf { s_x100: 150, n_ranks: 1 << 10 },
+    ] {
+        let data = gen_u32(&mut rng, n, dist);
+        let input = dir.join(format!("{}.u32", dist.name()));
+        write_raw(&input, &data).unwrap();
+
+        let mut outputs: Vec<Vec<u8>> = Vec::new();
+        let mut spilled = (0u64, 0u64); // (raw codec, delta codec)
+        for codec in [Codec::Raw, Codec::Delta] {
+            for threads in [1usize, 4] {
+                let output = dir.join(format!("{}.{}.t{threads}", dist.name(), codec.name()));
+                let cfg = ExternalConfig { codec, threads, ..tight_cfg(&dir) };
+                let stats = sort_file::<u32>(&input, &output, &cfg).unwrap();
+                assert_eq!(stats.elements, n as u64);
+                match codec {
+                    Codec::Raw => assert_eq!(
+                        stats.bytes_spilled, stats.bytes_spilled_raw,
+                        "{dist:?}: raw codec must write exactly the raw bytes"
+                    ),
+                    Codec::Delta => assert!(
+                        stats.bytes_spilled > 0 && stats.bytes_spilled_raw > 0,
+                        "{dist:?}: spill accounting missing"
+                    ),
+                }
+                if threads == 1 {
+                    match codec {
+                        Codec::Raw => spilled.0 = stats.bytes_spilled,
+                        Codec::Delta => spilled.1 = stats.bytes_spilled,
+                    }
+                }
+                outputs.push(std::fs::read(&output).unwrap());
+            }
+        }
+        for o in &outputs[1..] {
+            assert_eq!(&outputs[0], o, "{dist:?}: output bytes differ across codec/threads");
+        }
+        // And they are the actual sort.
+        let mut expect = data;
+        std_sort_desc(&mut expect);
+        let expect_bytes: Vec<u8> = expect.iter().flat_map(|x| x.to_le_bytes()).collect();
+        assert_eq!(outputs[0], expect_bytes, "{dist:?}");
+        // The acceptance bar: sorted/skewed u32 data spills fewer bytes
+        // under delta (uniform over the full u32 range is the one case
+        // with too little delta structure to guarantee a win).
+        if dist != Distribution::Uniform {
+            assert!(
+                spilled.1 < spilled.0,
+                "{dist:?}: delta spilled {} vs raw {}",
+                spilled.1,
+                spilled.0
+            );
+        }
+    }
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
@@ -329,18 +397,27 @@ fn sortfile_service_error_paths_stay_one_line() {
     assert!(resp.starts_with("err "), "{resp}");
     assert!(resp.contains("not a multiple of 16"), "{resp}");
 
-    // 4. An unknown dtype value errors loudly; a bare trailing word is
-    //    part of the path (missing file) — one line either way.
+    // 4. Unknown dtype/codec values error loudly *naming the offending
+    //    argument*; a bare trailing word is part of the path (missing
+    //    file) — one line either way.
     let resp = service.handle_line("sortfile external /tmp/whatever.u32 dtype=f64");
     assert!(resp.starts_with("err "), "{resp}");
-    assert!(resp.contains("unknown dtype"), "{resp}");
+    assert!(resp.contains("dtype argument: unknown dtype"), "{resp}");
+    let resp = service.handle_line("sortfile external /tmp/whatever.u32 codec=zstd");
+    assert!(resp.starts_with("err "), "{resp}");
+    assert!(resp.contains("codec argument: unknown codec"), "{resp}");
     let resp = service.handle_line("sortfile external /tmp/whatever.u32 f64");
     assert!(resp.starts_with("err "), "{resp}");
     assert!(!resp.contains('\n'));
 
+    // 5. Both options with one bad: the error still names the culprit.
+    let resp = service.handle_line("sortfile external /tmp/x.u32 dtype=kv codec=gzip");
+    assert!(resp.contains("codec argument"), "{resp}");
+    assert!(!resp.contains("dtype argument"), "{resp}");
+
     // The service still answers afterwards.
     assert_eq!(service.handle_line("sort native 2 1 3"), "ok 3 2 1");
-    assert_eq!(service.router.metrics.errors.get(), 5);
+    assert_eq!(service.router.metrics.errors.get(), 7);
     std::fs::remove_dir_all(&dir).unwrap();
 }
 

@@ -1,16 +1,19 @@
 //! Property tests over the external-sort subsystem (in-tree prop
 //! harness): arbitrary sizes, key ranges, budgets, fan-ins, worker
-//! counts and prefetch depths must all produce exactly the std-sorted
-//! multiset, via both the in-memory round-trip (`sort_vec`) and the
-//! on-disk path (`sort_file`) — and for `Kv` records the sort must be
-//! **stable** (the paper's §6 tie-record guarantee): equal keys keep
-//! input order and payloads ride through untouched.
+//! counts, prefetch depths and run codecs must all produce exactly the
+//! std-sorted multiset, via both the in-memory round-trip (`sort_vec`)
+//! and the on-disk path (`sort_file`) — and for `Kv` records the sort
+//! must be **stable** (the paper's §6 tie-record guarantee): equal keys
+//! keep input order and payloads ride through untouched. The run-codec
+//! round-trip property sweeps every dtype over random / sorted /
+//! reverse / all-equal key shapes.
 
 use std::path::PathBuf;
 
-use flims::external::format::{read_raw, write_raw};
+use flims::external::codec::Codec;
+use flims::external::format::{read_raw, write_raw, ExtItem, RunReader, RunWriter};
 use flims::external::{sort_file, sort_vec, ExternalConfig};
-use flims::key::{is_sorted_desc, Kv};
+use flims::key::{is_sorted_desc, F32Key, Kv, Kv64};
 use flims::util::prop::{check, Config};
 use flims::util::rng::Rng;
 
@@ -24,6 +27,7 @@ fn rand_cfg(rng: &mut Rng) -> ExternalConfig {
         chunk: 128,
         threads: 1 + rng.range(0, 3),      // 1..3 workers
         prefetch_blocks: rng.range(0, 3),  // 0 = synchronous leaves
+        codec: if rng.range(0, 2) == 0 { Codec::Raw } else { Codec::Delta },
         ..Default::default()
     }
 }
@@ -147,6 +151,114 @@ fn prop_external_kv_sort_is_stable() {
             },
         );
     }
+}
+
+/// Run-codec round-trip: whatever record sequence is written (the
+/// encoder never assumes sortedness — wrapping deltas round-trip any
+/// keys), both codecs must read back the identical records, across all
+/// dtypes × key shapes × write-block granularities.
+fn codec_roundtrip_case<T: ExtItem + PartialEq>(
+    dir: &std::path::Path,
+    rng: &mut Rng,
+    recs: &[T],
+) -> Result<(), String> {
+    for codec in [Codec::Raw, Codec::Delta] {
+        let path = dir.join(format!("rt-{}.run", codec.name()));
+        let mut w =
+            RunWriter::<T>::create_with(&path, codec).map_err(|e| format!("{e:#}"))?;
+        let mut pos = 0;
+        while pos < recs.len() {
+            let take = (1 + rng.range(0, 600)).min(recs.len() - pos);
+            w.write_block(&recs[pos..pos + take]).map_err(|e| format!("{e:#}"))?;
+            pos += take;
+        }
+        let run = w.finish().map_err(|e| format!("{e:#}"))?;
+        if run.elems != recs.len() as u64 {
+            return Err(format!("{codec:?}: wrote {} of {}", run.elems, recs.len()));
+        }
+        let mut r = RunReader::<T>::open(&path).map_err(|e| format!("{e:#}"))?;
+        let mut back = Vec::new();
+        loop {
+            let max = 1 + rng.range(0, 700);
+            if r.read_block(&mut back, max).map_err(|e| format!("{e:#}"))? == 0 {
+                break;
+            }
+        }
+        std::fs::remove_file(&path).ok();
+        if back != recs {
+            let bad = back
+                .iter()
+                .zip(recs)
+                .position(|(g, e)| g != e)
+                .unwrap_or(back.len().min(recs.len()));
+            return Err(format!(
+                "{codec:?}: record {bad} of {} corrupted: got {:?}, want {:?}",
+                recs.len(),
+                back.get(bad),
+                recs.get(bad)
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Shape the key sequence: random, ascending, descending, constant.
+fn shape_keys(keys: &mut [u64], shape: usize) {
+    match shape {
+        0 => {}
+        1 => keys.sort_unstable(),
+        2 => keys.sort_unstable_by(|a, b| b.cmp(a)),
+        _ => {
+            let k = keys.first().copied().unwrap_or(7);
+            keys.iter_mut().for_each(|x| *x = k);
+        }
+    }
+}
+
+#[test]
+fn prop_run_codec_roundtrip_all_dtypes() {
+    let dir = std::env::temp_dir().join(format!("flims-propcodec-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for shape in 0..4usize {
+        let dir = dir.clone();
+        check(
+            &format!("codec: run round-trip (shape {shape})"),
+            Config { cases: 20, max_size: 200, ..Default::default() },
+            move |rng, size| {
+                let n = size * 10 + rng.range(0, 33);
+                // Key extremes included so wrap-around deltas are hit.
+                let mut keys: Vec<u64> = (0..n)
+                    .map(|_| match rng.range(0, 8) {
+                        0 => 0,
+                        1 => u64::MAX,
+                        2 => u32::MAX as u64,
+                        _ => rng.next_u64() >> rng.range(0, 60),
+                    })
+                    .collect();
+                shape_keys(&mut keys, shape);
+                let u32s: Vec<u32> = keys.iter().map(|&k| k as u32).collect();
+                codec_roundtrip_case::<u32>(&dir, rng, &u32s)?;
+                codec_roundtrip_case::<u64>(&dir, rng, &keys)?;
+                let kvs: Vec<Kv> = keys
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &k)| Kv::new(k as u32, i as u32))
+                    .collect();
+                codec_roundtrip_case::<Kv>(&dir, rng, &kvs)?;
+                let kv64s: Vec<Kv64> = keys
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &k)| Kv64 { key: k, val: !(i as u64) })
+                    .collect();
+                codec_roundtrip_case::<Kv64>(&dir, rng, &kv64s)?;
+                let f32s: Vec<F32Key> =
+                    u32s.iter().map(|&k| F32Key::from_f32(k as f32 - 1e9)).collect();
+                codec_roundtrip_case::<F32Key>(&dir, rng, &f32s)?;
+                Ok(())
+            },
+        );
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
 }
 
 #[test]
