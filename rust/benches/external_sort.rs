@@ -19,6 +19,11 @@
 //! sorted/skewed rows — the ~2-4× spill-bandwidth cut the ROADMAP
 //! promised — while the uniform row shows the codec's floor.
 //!
+//! Part 4 sweeps the schedule (serial vs pipelined/overlapped) on
+//! deep multi-pass workloads (k ≫ fan_in), uniform + zipf, reporting
+//! wall-clock and `overlap_us` and asserting the overlapped schedule
+//! never costs wall time.
+//!
 //! Run: `cargo bench --bench external_sort`
 
 use std::time::Instant;
@@ -162,6 +167,81 @@ fn main() {
                 sizes.1
             );
         }
+    }
+
+    // Overlap sweep: the pipelined schedule vs the serial one on
+    // multi-pass workloads (k ≫ fan_in: 64 initial runs at dataset/64,
+    // fan-in 4 → 3 intermediate passes), uniform + zipf, 4 workers.
+    // Phase 1 keeps spilling while fan-in groups already merge, so the
+    // overlapped wall-clock must not exceed serial (small tolerance for
+    // machine noise — the phase sums are within it equal).
+    let ovl_budget = (n * 4) / 64;
+    println!(
+        "\n== overlap vs serial: budget {} KiB (dataset/64), fan-in 4, threads 4 ==\n",
+        ovl_budget >> 10
+    );
+    println!(
+        "{:<22} {:>10} {:>10} {:>10} {:>12} {:>12}",
+        "input / schedule", "M elem/s", "wall ms", "overlap ms", "phase1 ms", "phase2 ms"
+    );
+    for (label, dist) in [
+        ("uniform", Distribution::Uniform),
+        ("zipf", Distribution::Zipf { s_x100: 150, n_ranks: 1 << 10 }),
+    ] {
+        let mut rng = Rng::new(779);
+        let data = gen_u32(&mut rng, n, dist);
+        write_raw(&input, &data).unwrap();
+        let mut walls = (u64::MAX, u64::MAX); // best-of-two (serial, overlapped)
+        for overlap in [false, true] {
+            let cfg = ExternalConfig {
+                mem_budget_bytes: ovl_budget,
+                fan_in: 4,
+                threads: 4,
+                overlap,
+                tmp_dir: Some(dir.clone()),
+                ..Default::default()
+            };
+            // Best of two runs per schedule: these sorts are tens of
+            // milliseconds, where one OS-scheduler hiccup would swamp
+            // the comparison.
+            let mut best: Option<flims::SpillStats> = None;
+            for _ in 0..2 {
+                let stats = sort_file::<u32>(&input, &output, &cfg).unwrap();
+                assert_eq!(stats.elements, n as u64);
+                assert!(stats.merge_passes >= 3, "{label}: want a multi-pass workload");
+                if overlap {
+                    assert!(stats.overlap_us > 0, "{label}: pipeline never overlapped");
+                } else {
+                    assert_eq!(stats.overlap_us, 0, "{label}: serial cannot overlap");
+                }
+                if best.as_ref().is_none_or(|b| stats.wall_us < b.wall_us) {
+                    best = Some(stats);
+                }
+            }
+            let stats = best.unwrap();
+            if overlap {
+                walls.1 = stats.wall_us;
+            } else {
+                walls.0 = stats.wall_us;
+            }
+            println!(
+                "{:<22} {:>10.1} {:>10.1} {:>10.1} {:>12.1} {:>12.1}",
+                format!("{label} / {}", if overlap { "pipelined" } else { "serial" }),
+                n as f64 / (stats.wall_us as f64 / 1e6) / 1e6,
+                stats.wall_us as f64 / 1000.0,
+                stats.overlap_us as f64 / 1000.0,
+                stats.phase1_us as f64 / 1000.0,
+                stats.phase2_us as f64 / 1000.0,
+            );
+        }
+        // The acceptance bar: overlapping phases must not cost wall
+        // time (best-of-two + 15% head-room absorb machine noise).
+        assert!(
+            walls.1 as f64 <= walls.0 as f64 * 1.15,
+            "{label}: overlapped wall {}µs vs serial {}µs",
+            walls.1,
+            walls.0
+        );
     }
 
     // Reference: load whole file, std-sort in RAM, write back (restore

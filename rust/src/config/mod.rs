@@ -170,6 +170,10 @@ impl AppConfig {
         if let Some(v) = raw.get_usize("external", "prefetch_blocks")? {
             self.external.prefetch_blocks = v;
         }
+        if let Some(v) = raw.get("external", "overlap") {
+            self.external.overlap = crate::external::parse_overlap(v)
+                .map_err(|e| format!("external.overlap: {e}"))?;
+        }
         if let Some(v) = raw.get("external", "dtype") {
             self.external.dtype = Dtype::parse(v)?;
         }
@@ -290,7 +294,8 @@ batch_max = 16
             "[engine]\nw = 32\nchunk = 256\n\
              [external]\nmem_budget_mb = 16\nfan_in = 4\n\
              tmp_dir = \"/tmp/spills\"\ndisk_budget_mb = 512\n\
-             threads = 4\nprefetch_blocks = 3\ndtype = \"kv\"\ncodec = \"delta\"\n",
+             threads = 4\nprefetch_blocks = 3\noverlap = \"on\"\n\
+             dtype = \"kv\"\ncodec = \"delta\"\n",
         )
         .unwrap();
         let mut cfg = AppConfig::default();
@@ -302,11 +307,19 @@ batch_max = 16
         assert_eq!(ext.disk_budget_bytes, Some(512 << 20));
         assert_eq!(ext.threads, 4);
         assert_eq!(ext.prefetch_blocks, 3);
+        assert!(ext.overlap);
         assert_eq!(ext.dtype, Dtype::Kv);
         assert_eq!(ext.codec, Codec::Delta);
         // The engine's lane/chunk tuning flows into the external sort.
         assert_eq!(ext.w, 32);
         assert_eq!(ext.chunk, 256);
+
+        // And overlap switches back off explicitly, whatever the env
+        // default was.
+        let raw = RawConfig::parse("[external]\noverlap = off\n").unwrap();
+        let mut cfg = AppConfig::default();
+        cfg.apply(&raw).unwrap();
+        assert!(!cfg.external.overlap);
     }
 
     #[test]
@@ -337,5 +350,15 @@ batch_max = 16
         let raw = RawConfig::parse("[external]\nthreads = 5000\n").unwrap();
         let mut cfg = AppConfig::default();
         assert!(cfg.apply(&raw).is_err());
+        // prefetch_blocks is bounded like threads — absurd values are
+        // config errors, not silent thread storms.
+        let raw = RawConfig::parse("[external]\nprefetch_blocks = 100000\n").unwrap();
+        let mut cfg = AppConfig::default();
+        let err = cfg.apply(&raw).unwrap_err();
+        assert!(err.contains("prefetch_blocks"), "{err}");
+        let raw = RawConfig::parse("[external]\noverlap = \"sideways\"\n").unwrap();
+        let mut cfg = AppConfig::default();
+        let err = cfg.apply(&raw).unwrap_err();
+        assert!(err.contains("external.overlap: unknown overlap value"), "{err}");
     }
 }

@@ -114,14 +114,16 @@ impl Router {
 
     /// Sort the raw dataset at `input` with the external pipeline,
     /// writing `<input>.sorted` (descending). `dtype` selects the record
-    /// type and `codec` the spill-run codec (`None` = the `[external]`
-    /// config defaults). Memory stays within the configured budget
-    /// however large the file is.
+    /// type, `codec` the spill-run codec, and `overlap` the schedule
+    /// (pipelined vs serial — same output bytes; `None` = the
+    /// `[external]` config defaults). Memory stays within the
+    /// configured budget however large the file is.
     pub fn sort_file_external(
         &self,
         input: &Path,
         dtype: Option<Dtype>,
         codec: Option<Codec>,
+        overlap: Option<bool>,
     ) -> Result<(PathBuf, SpillStats)> {
         self.metrics.requests.inc();
         let dtype = dtype.unwrap_or(self.cfg.external.dtype);
@@ -132,6 +134,9 @@ impl Router {
         let mut ext = self.cfg.external_config();
         if let Some(codec) = codec {
             ext.codec = codec;
+        }
+        if let Some(overlap) = overlap {
+            ext.overlap = overlap;
         }
         let stats = external::sort_file_dtype(input, &output, &ext, dtype)?;
         self.metrics.elements_sorted.add(stats.elements);
@@ -148,6 +153,8 @@ impl Router {
         self.metrics.merge_passes.add(stats.merge_passes);
         self.metrics.phase1_us.add(stats.phase1_us);
         self.metrics.phase2_us.add(stats.phase2_us);
+        self.metrics.wall_us.add(stats.wall_us);
+        self.metrics.overlap_us.add(stats.overlap_us);
         self.metrics.prefetch_hits.add(stats.prefetch_hits);
         self.metrics.prefetch_misses.add(stats.prefetch_misses);
         self.metrics.codec_encode_us.add(stats.codec_encode_us);
@@ -323,7 +330,7 @@ mod tests {
         let mut cfg = AppConfig::default();
         cfg.external.mem_budget_bytes = 4096;
         let r = Router::new(cfg, None);
-        let (out_path, stats) = r.sort_file_external(&input, None, None).unwrap();
+        let (out_path, stats) = r.sort_file_external(&input, None, None, None).unwrap();
         assert_eq!(out_path, dir.join("data.u32.sorted"));
         assert_eq!(stats.elements, 5000);
 
@@ -346,7 +353,7 @@ mod tests {
         cfg.external.mem_budget_bytes = 4096;
         let r = Router::new(cfg, None);
         let (out_path, stats) =
-            r.sort_file_external(&input, None, Some(Codec::Delta)).unwrap();
+            r.sort_file_external(&input, None, Some(Codec::Delta), None).unwrap();
         assert_eq!(stats.elements, 20_000);
         assert!(
             stats.bytes_spilled < stats.bytes_spilled_raw,
@@ -378,14 +385,46 @@ mod tests {
         let mut cfg = AppConfig::default();
         cfg.external.mem_budget_bytes = 8192; // 1024-record Kv runs
         let r = Router::new(cfg, None);
-        let (out_path, stats) =
-            r.sort_file_external(&input, Some(crate::external::Dtype::Kv), None).unwrap();
+        let (out_path, stats) = r
+            .sort_file_external(&input, Some(crate::external::Dtype::Kv), None, None)
+            .unwrap();
         assert_eq!(stats.elements, 4000);
 
         // Stable: equal keys keep input (payload) order.
         let mut expect = recs;
         expect.sort_by(|a, b| b.key.cmp(&a.key));
         assert_eq!(crate::external::format::read_raw::<Kv>(&out_path).unwrap(), expect);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sort_file_external_overlap_override_matches_serial() {
+        let dir =
+            std::env::temp_dir().join(format!("flims-router-ovl-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = Rng::new(306);
+        let v = gen_u32(&mut rng, 20_000, Distribution::Uniform);
+
+        let mut cfg = AppConfig::default();
+        cfg.external.mem_budget_bytes = 4096; // 20 runs, fan-in 8 → 2 passes
+        cfg.external.fan_in = 4;
+        let r = Router::new(cfg, None);
+        let mut outputs = Vec::new();
+        for overlap in [false, true] {
+            let input = dir.join(format!("data-{overlap}.u32"));
+            crate::external::format::write_raw(&input, &v).unwrap();
+            let (out_path, stats) =
+                r.sort_file_external(&input, None, None, Some(overlap)).unwrap();
+            assert_eq!(stats.elements, 20_000);
+            assert!(stats.merge_passes >= 2, "multi-pass workload expected");
+            if !overlap {
+                assert_eq!(stats.overlap_us, 0, "serial schedule cannot overlap");
+            }
+            outputs.push(std::fs::read(&out_path).unwrap());
+        }
+        assert_eq!(outputs[0], outputs[1], "overlap must not change output bytes");
+        // Both runs fed the cumulative wall/overlap counters.
+        assert!(r.metrics.wall_us.get() > 0);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

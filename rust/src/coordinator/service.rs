@@ -9,17 +9,20 @@
 //! sortf <backend> <f1> <f2> …   →  ok <sorted descending>   (f32)
 //! batch <f1> <f2> …             →  ok <sorted>  (goes through the batcher)
 //! merge <a...> | <b...>         →  ok <merged>  (desc-sorted u32 inputs)
-//! sortfile external <path> [dtype=<d>] [codec=<c>]
+//! sortfile external <path> [dtype=<d>] [codec=<c>] [overlap=<o>]
 //!                               →  ok <n> <output-path>  (raw record file,
 //!                                   sorted descending to <path>.sorted;
-//!                                   d = u32|u64|kv|kv64|f32 and
-//!                                   c = raw|delta, defaults from the
+//!                                   d = u32|u64|kv|kv64|f32,
+//!                                   c = raw|delta and o = on|off (the
+//!                                   pipelined vs serial schedule — same
+//!                                   output bytes), defaults from the
 //!                                   `[external]` config section; only
-//!                                   trailing `dtype=`/`codec=`-prefixed
-//!                                   tokens are treated as options, so
-//!                                   paths containing spaces keep working.
-//!                                   A bad value is a one-line `err`
-//!                                   naming the offending argument)
+//!                                   trailing `dtype=`/`codec=`/`overlap=`-
+//!                                   prefixed tokens are treated as
+//!                                   options, so paths containing spaces
+//!                                   keep working. A bad value is a
+//!                                   one-line `err` naming the offending
+//!                                   argument)
 //! stats                         →  ok <metrics summary>
 //! quit                          →  (closes the connection)
 //! ```
@@ -132,20 +135,22 @@ impl Service {
                 Ok(format!("ok {}", join(&out)))
             }
             "sortfile" => {
-                let usage = "usage: sortfile external <path> [dtype=<d>] [codec=<c>]";
+                let usage =
+                    "usage: sortfile external <path> [dtype=<d>] [codec=<c>] [overlap=<o>]";
                 let (backend, rest) =
                     rest.split_once(' ').ok_or_else(|| anyhow!("{usage}"))?;
                 let backend = Backend::parse(backend)?;
                 if backend != Backend::External {
                     bail!("sortfile requires the 'external' backend");
                 }
-                // Only explicit trailing `dtype=<d>` / `codec=<c>`
-                // tokens are options — a bad value is a loud error
-                // *naming the argument*, and paths containing spaces
-                // are untouched (PR 1 grammar, extended).
+                // Only explicit trailing `dtype=` / `codec=` /
+                // `overlap=` tokens are options — a bad value is a loud
+                // error *naming the argument*, and paths containing
+                // spaces are untouched (PR 1 grammar, extended).
                 let mut path = rest.trim();
                 let mut dtype = None;
                 let mut codec = None;
+                let mut overlap = None;
                 while !path.is_empty() {
                     // The last whitespace-separated token; the whole
                     // string when no space remains.
@@ -165,6 +170,12 @@ impl Service {
                         if codec.replace(c).is_some() {
                             bail!("codec argument: given more than once");
                         }
+                    } else if let Some(name) = tail.strip_prefix("overlap=") {
+                        let o = crate::external::parse_overlap(name)
+                            .map_err(|e| anyhow!("overlap argument: {e}"))?;
+                        if overlap.replace(o).is_some() {
+                            bail!("overlap argument: given more than once");
+                        }
                     } else {
                         break;
                     }
@@ -174,7 +185,8 @@ impl Service {
                     bail!("{usage}");
                 }
                 let (output, stats) =
-                    self.router.sort_file_external(Path::new(path), dtype, codec)?;
+                    self.router
+                        .sort_file_external(Path::new(path), dtype, codec, overlap)?;
                 Ok(format!("ok {} {}", stats.elements, output.display()))
             }
             "stats" => Ok(format!("ok {}", self.router.metrics.report())),
@@ -451,6 +463,54 @@ mod tests {
         let resp = s.handle_line("sortfile external codec=delta");
         assert!(resp.starts_with("err "), "{resp}");
         assert!(resp.contains("usage: sortfile"), "path-less request → usage: {resp}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sortfile_with_overlap_argument() {
+        use crate::external::format::{read_raw, write_raw};
+        let dir = std::env::temp_dir().join(format!("flims-svc-ovl-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("req.u32");
+        let data: Vec<u32> = (0..20_000u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        write_raw(&input, &data).unwrap();
+
+        // Tight budget so both schedules really spill multi-pass.
+        let mut app = crate::config::AppConfig::default();
+        app.external.mem_budget_bytes = 4096;
+        app.external.fan_in = 4;
+        let router = Arc::new(Router::new(app, None));
+        let s = Service::new(
+            router,
+            BatcherConfig { max_batch: 2, window: Duration::from_micros(1) },
+        );
+
+        let mut expect = data;
+        expect.sort_unstable_by(|a, b| b.cmp(a));
+        let expect_path = format!("{}.sorted", input.display());
+        for arg in ["overlap=on", "overlap=off", "overlap=on dtype=u32 codec=delta"] {
+            let resp = s.handle_line(&format!("sortfile external {} {arg}", input.display()));
+            assert_eq!(resp, format!("ok 20000 {expect_path}"), "{arg}");
+            assert_eq!(
+                read_raw::<u32>(Path::new(&expect_path)).unwrap(),
+                expect,
+                "{arg}: overlap must not change the sorted bytes"
+            );
+        }
+
+        // Bad values are one-line errors naming the offending argument.
+        let resp =
+            s.handle_line(&format!("sortfile external {} overlap=sideways", input.display()));
+        assert!(resp.starts_with("err "), "{resp}");
+        assert!(resp.contains("overlap argument: unknown overlap value"), "{resp}");
+        let resp = s.handle_line(&format!(
+            "sortfile external {} overlap=on overlap=off",
+            input.display()
+        ));
+        assert!(resp.starts_with("err "), "{resp}");
+        assert!(resp.contains("overlap argument: given more than once"), "{resp}");
+        // The overlapped runs show up in the wall/overlap counters.
+        assert!(s.router.metrics.wall_us.get() > 0);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

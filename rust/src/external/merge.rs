@@ -1,31 +1,50 @@
 //! Phase 2: arrange spilled runs into FLiMS merge trees and execute the
-//! (possibly multi-pass) k-way merge, generic over the record type.
+//! (possibly multi-pass) k-way merge, generic over the record type —
+//! either as the classic batch schedule ([`merge_runs`]: every run
+//! exists before the first tree opens) or as the overlapped pipeline
+//! ([`sort_pipelined`]: groups start merging while phase 1 is still
+//! spilling, the TopSort observation that the two-phase shape otherwise
+//! leaves half the machine idle).
 //!
-//! A [`MergePlan`] caps every tree at the configured fan-in: while more
-//! runs exist than the fan-in allows, a pass merges balanced groups of
-//! runs into fresh (larger) spilled runs; the final pass streams the
-//! surviving ≤ fan-in runs straight into the caller's sink. Group merges
-//! within a pass are independent, so they run concurrently in batches of
-//! `cfg.effective_threads()` — the HPMT replication argument (§5) at the
-//! tree-of-trees level. Consumed runs are deleted as each group's result
-//! lands, so live spill stays near the dataset size rather than growing
-//! with the pass count. Tree leaves are double-buffered
-//! ([`PrefetchStream`](super::stream::PrefetchStream)) when
-//! `cfg.prefetch_blocks > 0`, overlapping disk reads with merging.
+//! A [`MergePlan`] caps every tree at the configured fan-in. Group
+//! shapes are **prefix-stable**: pass groups are consecutive chunks of
+//! exactly `fan_in` runs, so group `j` depends only on runs
+//! `[j·fan_in, (j+1)·fan_in)` and can be scheduled the moment those
+//! runs exist — no knowledge of the final run count needed. A lone
+//! trailing run (`k % fan_in == 1`) is carried into the next pass
+//! as-is, unmerged, which costs nothing (no copy pass) and keeps the
+//! shapes identical between the batch and pipelined schedules — that,
+//! plus runs entering and leaving every pass in input order with
+//! earlier runs on tree A sides (the §6 stability guarantee), is why
+//! the sorted output is byte-identical with overlap on or off. The
+//! final pass streams the surviving ≤ fan-in runs straight into the
+//! caller's sink.
 //!
-//! Runs enter and leave every pass in input order and each tree keeps
-//! earlier runs on A sides, so key ties resolve to input order end to
-//! end (the §6 stability guarantee).
+//! Group merges within a pass are independent, so they run concurrently
+//! on `cfg.effective_threads()` workers — the HPMT replication argument
+//! (§5) at the tree-of-trees level; under the pipeline the workers also
+//! run concurrently with late phase-1 spills *and* with groups of later
+//! passes. Consumed runs are deleted as each group's result lands, so
+//! live spill stays near the dataset size rather than growing with the
+//! pass count, and the disk budget is enforced before each group is
+//! scheduled (in-flight outputs reserved). Tree leaves are
+//! double-buffered ([`PrefetchStream`](super::stream::PrefetchStream))
+//! when `cfg.prefetch_blocks > 0`, overlapping disk reads with merging.
 
-use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
 
-use anyhow::{anyhow, Error, Result};
+use anyhow::{anyhow, bail, Error, Result};
 
 use super::format::{ExtItem, RawWriter, RunFile, RunReader, RunWriter, RUN_HEADER_BYTES};
+use super::run_gen::{generate_runs_streaming, RecordSource};
 use super::spill::SpillManager;
 use super::stream::{
     build_tree, pump, DoubleBufWriter, PrefetchCounters, PrefetchStream, ReaderStream, RunStream,
+    WriterPool,
 };
 use super::ExternalConfig;
 
@@ -34,7 +53,8 @@ use super::ExternalConfig;
 pub struct MergePlan {
     /// Maximum runs per tree.
     pub fan_in: usize,
-    /// Group sizes for each intermediate (spilling) pass.
+    /// Group sizes for each intermediate (spilling) pass. A trailing
+    /// size-1 group is carried into the next pass unmerged.
     pub intermediate: Vec<Vec<usize>>,
     /// Number of runs entering the final (streaming) pass.
     pub final_width: usize,
@@ -59,14 +79,15 @@ impl MergePlan {
     }
 }
 
-/// Split `k` runs into `ceil(k / fan_in)` balanced groups (sizes differ
-/// by at most one), avoiding the degenerate 1-run groups a plain
-/// chunks-of-fan-in split produces when `k % fan_in == 1`.
+/// Split `k` runs into consecutive chunks of `fan_in` (the last chunk
+/// holds the remainder). Prefix-stable by construction: chunk `j` is
+/// fixed once runs `j·fan_in .. (j+1)·fan_in` exist, which is what lets
+/// the pipelined scheduler fire groups mid-stream; a trailing 1-run
+/// chunk is not a copy pass — the executor carries it forward as-is.
 fn group_sizes(k: usize, fan_in: usize) -> Vec<usize> {
-    let groups = k.div_ceil(fan_in);
-    let base = k / groups;
-    let extra = k % groups;
-    (0..groups).map(|i| base + usize::from(i < extra)).collect()
+    (0..k.div_ceil(fan_in))
+        .map(|i| fan_in.min(k - i * fan_in))
+        .collect()
 }
 
 /// Where the merged output goes: the final dataset file, a fresh run, or
@@ -97,8 +118,7 @@ impl<T: ExtItem> RecordSink<T> for RunWriter<T> {
 
 // A double-buffered writer is a sink too: `sort_file` wraps its output
 // `RawWriter` in one (so the final pass's merge never blocks on the
-// output disk — the ROADMAP's write-side-buffering follow-on) and the
-// spill paths wrap `RunWriter`s.
+// output disk) and the spill paths wrap `RunWriter`s.
 impl<T: ExtItem, W: RecordSink<T> + Send + 'static> RecordSink<T> for DoubleBufWriter<T, W> {
     fn write_block(&mut self, xs: &[T]) -> Result<()> {
         DoubleBufWriter::write_block(self, xs)
@@ -147,28 +167,33 @@ fn open_group<T: ExtItem>(
 
 /// Merge one group of runs into a pre-created run writer. Runs on a
 /// worker thread during intermediate passes; touches no shared state
-/// beyond the prefetch counters. The writer is double-buffered so
-/// re-encoding + writing the merged run overlaps with merging the next
-/// block instead of stalling it.
+/// beyond the prefetch counters. The writer is double-buffered (via the
+/// per-sort writer pool when one is given) so re-encoding + writing the
+/// merged run overlaps with merging the next block instead of stalling
+/// it.
 fn merge_group<T: ExtItem>(
     group: &[RunFile],
     cfg: &ExternalConfig,
     counters: &Arc<PrefetchCounters>,
     writer: RunWriter<T>,
+    pool: Option<&WriterPool>,
 ) -> Result<(RunFile, u64)> {
     let mut tree = open_group::<T>(group, cfg, counters)?;
-    let mut dbw = DoubleBufWriter::spawn(writer, 1)?;
+    let mut dbw = DoubleBufWriter::spawn_with(writer, 1, pool)?;
     let written = pump(tree.as_mut(), |chunk| dbw.write_block(chunk))?;
     Ok((dbw.finish()?.finish()?, written))
 }
 
-/// Merge `runs` into `sink` per `MergePlan::new(runs.len(), fan_in)`,
-/// spilling intermediate passes through `spill` (group merges of a pass
-/// run concurrently) and deleting consumed runs as results land.
+/// Merge `runs` into `sink` per `MergePlan::new(runs.len(), fan_in)` —
+/// the batch schedule: all runs exist up front, passes execute one
+/// after another, spilling intermediate passes through `spill` (group
+/// merges of a pass run concurrently) and deleting consumed runs as
+/// results land.
 pub fn merge_runs<T: ExtItem>(
     mut runs: Vec<RunFile>,
     cfg: &ExternalConfig,
-    spill: &mut SpillManager,
+    spill: &SpillManager,
+    pool: Option<&WriterPool>,
     sink: &mut dyn RecordSink<T>,
 ) -> Result<MergeOutcome> {
     let plan = MergePlan::new(runs.len(), cfg.fan_in);
@@ -220,7 +245,9 @@ pub fn merge_runs<T: ExtItem>(
                 let mut handles = Vec::with_capacity(batch.len());
                 for ((_, group), writer) in batch.iter().zip(writers) {
                     let counters = Arc::clone(&counters);
-                    handles.push(s.spawn(move || merge_group::<T>(group, cfg, &counters, writer)));
+                    handles.push(
+                        s.spawn(move || merge_group::<T>(group, cfg, &counters, writer, pool)),
+                    );
                 }
                 handles
                     .into_iter()
@@ -298,6 +325,453 @@ pub fn merge_runs<T: ExtItem>(
     })
 }
 
+/// What [`sort_pipelined`] hands back: the merge outcome plus the phase
+/// spans the batch path would otherwise measure around its two calls
+/// (they overlap here — that is the point).
+#[derive(Debug)]
+pub struct PipelineOutcome {
+    /// The merge result (elements, passes, prefetch/codec counters).
+    pub outcome: MergeOutcome,
+    /// Elements phase 1 spilled — checked against `outcome.elements`.
+    pub input_elems: u64,
+    /// Wall-clock of the phase-1 producer (first read → last run
+    /// sealed), microseconds.
+    pub phase1_us: u64,
+    /// Wall-clock of the merge side (first group scheduled, or the
+    /// final pass when nothing spilled past one tree → sink complete),
+    /// microseconds.
+    pub phase2_us: u64,
+}
+
+/// Scheduler messages: sealed phase-1 runs, the producer's completion,
+/// and finished group merges.
+enum Event {
+    Run(RunFile),
+    ProducerDone { result: Result<()>, elapsed_us: u64 },
+    Merged { stage: usize, group: usize, result: Result<(RunFile, u64)> },
+}
+
+/// One group merge handed to the worker pool.
+struct MergeJob<T: ExtItem> {
+    stage: usize,
+    group: usize,
+    inputs: Vec<RunFile>,
+    writer: RunWriter<T>,
+}
+
+/// Per-pass bookkeeping inside the pipeline scheduler. Stage `s`
+/// consumes the in-order output stream of stage `s-1` (stage 0 consumes
+/// phase-1 runs) and emits its own in-order stream of merged/carried
+/// runs.
+#[derive(Default)]
+struct StageState {
+    /// Received, not yet grouped (≤ fan_in by construction).
+    buf: Vec<RunFile>,
+    /// Completed outputs waiting for earlier siblings (out-of-order
+    /// merge completions reorder here).
+    done: BTreeMap<usize, RunFile>,
+    /// Next output slot to forward downstream.
+    next_deliver: usize,
+    /// Output slots allotted so far (submitted merges + carried runs).
+    groups_out: usize,
+    /// The stage merged at least one group — i.e. it is an intermediate
+    /// pass, not the final one.
+    merged_any: bool,
+    /// Upstream finished and every remainder was flushed: `groups_out`
+    /// is final.
+    input_closed: bool,
+}
+
+/// A submitted-but-unfinished group: what the scheduler needs to
+/// register/consume on success and to sweep on failure.
+struct InFlightGroup {
+    inputs: Vec<RunFile>,
+    out_path: PathBuf,
+    expect: u64,
+    projected: u64,
+}
+
+/// The pipeline scheduler's mutable state (driven by the event loop in
+/// [`sort_pipelined`]).
+struct Scheduler<'a, T: ExtItem> {
+    cfg: &'a ExternalConfig,
+    spill: &'a SpillManager,
+    codec: super::codec::Codec,
+    job_tx: mpsc::Sender<MergeJob<T>>,
+    stages: Vec<StageState>,
+    inflight: HashMap<(usize, usize), InFlightGroup>,
+    /// Submitted merge jobs not yet reported back.
+    outstanding: usize,
+    /// Set once the final stage closes: the ≤ fan_in survivors.
+    final_runs: Option<Vec<RunFile>>,
+    /// First merge activity (phase 2 begins here).
+    phase2_start: Option<Instant>,
+}
+
+impl<T: ExtItem> Scheduler<'_, T> {
+    /// Feed one run into `stage`, firing a group merge the moment a
+    /// full fan-in chunk *plus one more run* exists — the extra run
+    /// proves the stage's input exceeds the fan-in, i.e. this cannot be
+    /// the final pass.
+    fn arrive(&mut self, stage: usize, run: RunFile) -> Result<()> {
+        while self.stages.len() <= stage {
+            self.stages.push(StageState::default());
+        }
+        let fan = self.cfg.fan_in;
+        self.stages[stage].buf.push(run);
+        if self.stages[stage].buf.len() > fan {
+            let group: Vec<RunFile> = self.stages[stage].buf.drain(..fan).collect();
+            self.submit(stage, group)?;
+        }
+        Ok(())
+    }
+
+    /// Budget-check, allot the next output slot, and hand the group to
+    /// a merge worker.
+    fn submit(&mut self, stage: usize, inputs: Vec<RunFile>) -> Result<()> {
+        let group = {
+            let st = &mut self.stages[stage];
+            let g = st.groups_out;
+            st.groups_out += 1;
+            st.merged_any = true;
+            g
+        };
+        let expect: u64 = inputs.iter().map(|r| r.elems).sum();
+        let projected = RUN_HEADER_BYTES + expect * T::WIRE_BYTES as u64;
+        // Reserve every in-flight output with the SpillManager itself:
+        // several groups merge at once (and, overlapped, phase 1 spills
+        // concurrently), none registered until it completes — a plain
+        // headroom check here would be blind to the others, and theirs
+        // to ours.
+        self.spill.reserve(projected)?;
+        let writer = match self.spill.create_run::<T>(self.codec) {
+            Ok(w) => w,
+            Err(e) => {
+                self.spill.release(projected);
+                return Err(e);
+            }
+        };
+        let out_path = writer.path().to_path_buf();
+        self.inflight.insert(
+            (stage, group),
+            InFlightGroup { inputs: inputs.clone(), out_path, expect, projected },
+        );
+        self.phase2_start.get_or_insert_with(Instant::now);
+        self.outstanding += 1;
+        if self.job_tx.send(MergeJob { stage, group, inputs, writer }).is_err() {
+            self.spill.release(projected);
+            return Err(anyhow!("merge workers exited early"));
+        }
+        Ok(())
+    }
+
+    /// A completed group merge came back: account for it, delete its
+    /// inputs (eager reclaim), and forward it downstream in order.
+    fn on_merged(
+        &mut self,
+        stage: usize,
+        group: usize,
+        merged: RunFile,
+        written: u64,
+    ) -> Result<()> {
+        let info = self
+            .inflight
+            .remove(&(stage, group))
+            .ok_or_else(|| anyhow!("merge result for unknown group"))?;
+        if written != info.expect {
+            self.spill.release(info.projected);
+            let _ = std::fs::remove_file(&merged.path);
+            bail!("merge pass lost data: wrote {written} of {} elements", info.expect);
+        }
+        // Swap the reservation for the registration atomically;
+        // register keeps the run tracked even when it reports a budget
+        // breach, so SpillManager::drop still cleans it.
+        self.spill.register_reserved(&merged, info.projected)?;
+        for run in &info.inputs {
+            self.spill.consume(run)?;
+        }
+        self.deliver(stage, group, merged)
+    }
+
+    /// Slot a finished output into `stage`'s reorder window and forward
+    /// everything now contiguous to the next stage, in order.
+    fn deliver(&mut self, stage: usize, group: usize, run: RunFile) -> Result<()> {
+        self.stages[stage].done.insert(group, run);
+        loop {
+            let next = {
+                let st = &mut self.stages[stage];
+                match st.done.remove(&st.next_deliver) {
+                    Some(r) => {
+                        st.next_deliver += 1;
+                        r
+                    }
+                    None => break,
+                }
+            };
+            self.arrive(stage + 1, next)?;
+        }
+        self.maybe_close_downstream(stage)
+    }
+
+    /// Once `stage` is closed and fully delivered, its successor's
+    /// input is complete too.
+    fn maybe_close_downstream(&mut self, stage: usize) -> Result<()> {
+        let ready = {
+            let st = &self.stages[stage];
+            st.input_closed && st.merged_any && st.next_deliver == st.groups_out
+        };
+        if ready {
+            self.close_input(stage + 1)?;
+        }
+        Ok(())
+    }
+
+    /// `stage`'s input stream ended: either this is the final pass
+    /// (nothing was merged — ≤ fan_in runs total) or flush the
+    /// remainder group / carry a lone trailing run.
+    fn close_input(&mut self, stage: usize) -> Result<()> {
+        while self.stages.len() <= stage {
+            self.stages.push(StageState::default()); // zero-run input
+        }
+        if self.stages[stage].input_closed {
+            return Ok(());
+        }
+        self.stages[stage].input_closed = true;
+        if !self.stages[stage].merged_any {
+            // Never exceeded the fan-in: these runs feed the sink.
+            self.final_runs = Some(std::mem::take(&mut self.stages[stage].buf));
+            return Ok(());
+        }
+        let rest = std::mem::take(&mut self.stages[stage].buf);
+        match rest.len() {
+            0 => {}
+            1 => {
+                // A lone trailing run needs no merging; forward it
+                // as-is in its positional slot.
+                let group = {
+                    let st = &mut self.stages[stage];
+                    let g = st.groups_out;
+                    st.groups_out += 1;
+                    g
+                };
+                let run = rest.into_iter().next().unwrap();
+                return self.deliver(stage, group, run);
+            }
+            _ => self.submit(stage, rest)?,
+        }
+        self.maybe_close_downstream(stage)
+    }
+}
+
+/// The overlapped (TopSort-style) schedule: run phase 1 as a producer
+/// on its own thread, announce each sealed run over a bounded channel,
+/// and start merging a group the moment its fan-in chunk is complete —
+/// so intermediate passes execute concurrently with late phase-1
+/// spills, and by the time the producer finishes only the final
+/// streaming pass (and whatever merges are still in flight) remains.
+/// Group shapes, run order, and therefore the output bytes are
+/// identical to [`merge_runs`] after [`generate_runs`]; only the
+/// wall-clock schedule differs.
+///
+/// On any error — a phase-1 source failure, a merge failure, a budget
+/// breach — the producer is cancelled, in-flight merges drain, every
+/// unregistered output file is swept here, and the registered runs die
+/// with the `SpillManager`: no spill files outlive the sort.
+///
+/// [`generate_runs`]: super::run_gen::generate_runs
+pub fn sort_pipelined<T: ExtItem>(
+    src: &mut (dyn RecordSource<T> + Send),
+    cfg: &ExternalConfig,
+    spill: &SpillManager,
+    pool: Option<&WriterPool>,
+    sink: &mut dyn RecordSink<T>,
+) -> Result<PipelineOutcome> {
+    let threads = cfg.effective_threads().max(1);
+    let counters = Arc::new(PrefetchCounters::default());
+    let cancel = AtomicBool::new(false);
+
+    std::thread::scope(|scope| -> Result<PipelineOutcome> {
+        // Bounded hand-off: phase 1 runs at most a few sealed runs
+        // ahead of the scheduler's bookkeeping (the real pacing is the
+        // disk and the merge workers, not this channel).
+        let (event_tx, event_rx) = mpsc::sync_channel::<Event>(cfg.fan_in + threads);
+        let (job_tx, job_rx) = mpsc::channel::<MergeJob<T>>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        for _ in 0..threads {
+            let rx = Arc::clone(&job_rx);
+            let tx = event_tx.clone();
+            let counters = Arc::clone(&counters);
+            let cancel = &cancel;
+            scope.spawn(move || loop {
+                let job = rx.lock().unwrap().recv();
+                let Ok(job) = job else { break };
+                let MergeJob { stage, group, inputs, writer } = job;
+                let result = if cancel.load(Ordering::Relaxed) {
+                    Err(anyhow!("merge cancelled")) // writer dropped; file swept below
+                } else {
+                    // A panicking group merge must still report, or the
+                    // scheduler waits on `outstanding` forever (the
+                    // batch path surfaces this via join().expect()).
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        merge_group::<T>(&inputs, cfg, &counters, writer, pool)
+                    }))
+                    .unwrap_or_else(|_| Err(anyhow!("merge worker panicked")))
+                };
+                if tx.send(Event::Merged { stage, group, result }).is_err() {
+                    break;
+                }
+            });
+        }
+
+        let producer_tx = event_tx.clone();
+        let cancel_ref = &cancel;
+        scope.spawn(move || {
+            let t = Instant::now();
+            let result = generate_runs_streaming::<T>(src, cfg, spill, pool, &mut |run| {
+                if cancel_ref.load(Ordering::Relaxed) {
+                    anyhow::bail!("sort aborted");
+                }
+                producer_tx
+                    .send(Event::Run(run))
+                    .map_err(|_| anyhow!("pipeline scheduler exited early"))
+            });
+            let elapsed_us = t.elapsed().as_micros() as u64;
+            let _ = producer_tx.send(Event::ProducerDone { result, elapsed_us });
+        });
+        drop(event_tx);
+
+        let mut sched = Scheduler::<T> {
+            cfg,
+            spill,
+            codec: cfg.codec_for(T::DTYPE),
+            job_tx,
+            stages: Vec::new(),
+            inflight: HashMap::new(),
+            outstanding: 0,
+            final_runs: None,
+            phase2_start: None,
+        };
+        let mut first_err: Option<Error> = None;
+        let abort = |err: Error, slot: &mut Option<Error>| {
+            if slot.is_none() {
+                *slot = Some(err);
+            }
+            cancel.store(true, Ordering::Relaxed);
+        };
+        let mut producer_done = false;
+        let mut phase1_us = 0u64;
+        let mut input_elems = 0u64;
+
+        // Drain events until the producer has finished AND every
+        // submitted merge has reported — true on the error path too, so
+        // nothing still writes when cleanup starts.
+        while !(producer_done && sched.outstanding == 0) {
+            let event = match event_rx.recv() {
+                Ok(ev) => ev,
+                Err(_) => {
+                    abort(anyhow!("pipeline threads exited early"), &mut first_err);
+                    break;
+                }
+            };
+            match event {
+                Event::Run(run) => {
+                    input_elems += run.elems;
+                    if first_err.is_none() {
+                        if let Err(e) = sched.arrive(0, run) {
+                            abort(e, &mut first_err);
+                        }
+                    }
+                    // After an error the run is already registered; the
+                    // SpillManager deletes it when the sort unwinds.
+                }
+                Event::ProducerDone { result, elapsed_us } => {
+                    producer_done = true;
+                    phase1_us = elapsed_us;
+                    match result {
+                        Ok(()) if first_err.is_none() => {
+                            if let Err(e) = sched.close_input(0) {
+                                abort(e, &mut first_err);
+                            }
+                        }
+                        Err(e) if first_err.is_none() => abort(e, &mut first_err),
+                        _ => {}
+                    }
+                }
+                Event::Merged { stage, group, result } => {
+                    sched.outstanding -= 1;
+                    match result {
+                        Ok((merged, written)) => {
+                            if first_err.is_some() {
+                                let _ = std::fs::remove_file(&merged.path);
+                                if let Some(info) = sched.inflight.remove(&(stage, group)) {
+                                    spill.release(info.projected);
+                                }
+                            } else if let Err(e) = sched.on_merged(stage, group, merged, written)
+                            {
+                                abort(e, &mut first_err);
+                            }
+                        }
+                        Err(e) => {
+                            if let Some(info) = sched.inflight.remove(&(stage, group)) {
+                                let _ = std::fs::remove_file(&info.out_path);
+                                spill.release(info.projected);
+                            }
+                            if first_err.is_none() {
+                                abort(e, &mut first_err);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        let Scheduler { job_tx, final_runs, stages, mut phase2_start, inflight, .. } = sched;
+        drop(job_tx); // releases the merge workers; the scope joins them
+        if let Some(e) = first_err {
+            // Normally every in-flight group has reported (and been
+            // swept) by now; entries remain only if a worker died
+            // without reporting — remove their never-registered
+            // outputs and return their reservations. Registered runs
+            // die with the SpillManager.
+            for info in inflight.values() {
+                let _ = std::fs::remove_file(&info.out_path);
+                spill.release(info.projected);
+            }
+            return Err(e);
+        }
+
+        // Final streaming pass: the ≤ fan_in survivors of every earlier
+        // stage, all sealed by now.
+        let final_runs =
+            final_runs.ok_or_else(|| anyhow!("pipeline ended without a final pass"))?;
+        let mut elements = 0u64;
+        if !final_runs.is_empty() {
+            phase2_start.get_or_insert_with(Instant::now);
+            let mut tree = open_group::<T>(&final_runs, cfg, &counters)?;
+            elements = pump(tree.as_mut(), |chunk| sink.write_block(chunk))?;
+            drop(tree); // joins prefetch threads before the files go away
+            for run in &final_runs {
+                spill.consume(run)?;
+            }
+        }
+        let phase2_us = phase2_start.map(|t| t.elapsed().as_micros() as u64).unwrap_or(0);
+        let merge_passes = stages.iter().filter(|s| s.merged_any).count() as u64
+            + u64::from(!final_runs.is_empty());
+        Ok(PipelineOutcome {
+            outcome: MergeOutcome {
+                elements,
+                merge_passes,
+                prefetch_hits: counters.hits.load(Ordering::Relaxed),
+                prefetch_misses: counters.misses.load(Ordering::Relaxed),
+                codec_decode_us: counters.decode_ns.load(Ordering::Relaxed) / 1000,
+            },
+            input_elems,
+            phase1_us,
+            phase2_us,
+        })
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -312,19 +786,36 @@ mod tests {
 
     #[test]
     fn plan_multi_pass_shapes() {
-        // 20 runs at fan-in 4: pass 1 → 5 groups of 4, pass 2 → 5 runs
-        // still > 4 → groups [3, 2], final over 2.
+        // 20 runs at fan-in 4: pass 1 → 5 chunks of 4, pass 2 → 5 runs
+        // still > 4 → [4, 1] (the 1 carries forward free), final over 2.
         let p = MergePlan::new(20, 4);
-        assert_eq!(p.intermediate, vec![vec![4, 4, 4, 4, 4], vec![3, 2]]);
+        assert_eq!(p.intermediate, vec![vec![4, 4, 4, 4, 4], vec![4, 1]]);
         assert_eq!(p.final_width, 2);
         assert_eq!(p.passes(), 3);
     }
 
     #[test]
-    fn plan_avoids_degenerate_groups() {
-        // 9 runs at fan-in 8: a naive split is [8, 1]; balanced is [5, 4].
+    fn plan_groups_are_prefix_stable() {
+        // The pipelined scheduler fires group j as soon as runs
+        // j·fan .. (j+1)·fan exist — legal only because adding more
+        // runs never reshapes the groups already planned.
+        for fan in [2usize, 4, 8] {
+            for k in fan + 1..100 {
+                let prev = MergePlan::new(k, fan);
+                let next = MergePlan::new(k + 1, fan);
+                let full_prev = prev.intermediate[0].iter().filter(|&&s| s == fan).count();
+                assert!(
+                    next.intermediate[0][..full_prev]
+                        .iter()
+                        .all(|&s| s == fan),
+                    "k={k} fan={fan}: full groups reshaped by one more run"
+                );
+            }
+        }
+        // A lone trailing run is carried, not copy-merged: 9 runs at
+        // fan-in 8 plan as [8, 1] (the 1 re-enters the next pass as-is).
         let p = MergePlan::new(9, 8);
-        assert_eq!(p.intermediate, vec![vec![5, 4]]);
+        assert_eq!(p.intermediate, vec![vec![8, 1]]);
         assert_eq!(p.final_width, 2);
     }
 
@@ -343,6 +834,9 @@ mod tests {
                 assert_eq!(sizes.iter().sum::<usize>(), k, "k={k} fan={fan}");
                 assert!(sizes.iter().all(|&s| s <= fan), "k={k} fan={fan} {sizes:?}");
                 assert_eq!(sizes.len(), k.div_ceil(fan));
+                // Every group but the last is exactly fan_in — the
+                // prefix-stability invariant.
+                assert!(sizes[..sizes.len() - 1].iter().all(|&s| s == fan));
             }
         }
     }

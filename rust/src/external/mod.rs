@@ -1,6 +1,7 @@
 //! Out-of-core external sort: spill runs to disk, then k-way merge them
-//! with trees of FLiMS 2-way mergers — parallel in both phases and
-//! generic over the dataset type.
+//! with trees of FLiMS 2-way mergers — parallel in both phases, generic
+//! over the dataset type, and (with `[external] overlap = on`) running
+//! the two phases as one pipeline.
 //!
 //! The paper positions FLiMS inside "parallel merge trees to achieve
 //! high-throughput sorting, where the resource utilisation of the merger
@@ -23,6 +24,33 @@
 //!    are double-buffered ([`stream::PrefetchStream`]): a prefetch
 //!    thread fills the next blocks while the merger drains the current
 //!    one, so the hot path never blocks on `read_block`.
+//!
+//! # The pipelined (overlapped) schedule
+//!
+//! With `overlap = off` the phases run back to back: every run exists
+//! before the first merge tree opens, which leaves the merge hardware
+//! idle all through phase 1 and the sort/spill hardware idle all
+//! through phase 2 — TopSort's half-idle-machine observation. With
+//! `overlap = on`, [`sort_stream`] instead runs phase 1 as a
+//! **producer** ([`run_gen::generate_runs_streaming`]) that announces
+//! each run over a bounded channel the moment it seals, and a pipeline
+//! scheduler ([`merge::sort_pipelined`]) fires a group merge as soon as
+//! a full fan-in chunk of runs (plus proof that more input exists)
+//! is available — so intermediate passes, of every depth, execute
+//! concurrently with late phase-1 spills, and when the producer
+//! finishes only the final streaming pass (plus whatever groups are
+//! still in flight) remains. Group shapes are prefix-stable chunks of
+//! `fan_in` ([`merge::MergePlan`]), identical under both schedules, and
+//! runs flow through every pass in input order — which is why the
+//! sorted output is **byte-identical** with overlap on or off, for
+//! every thread count, codec, and dtype (the overlap determinism
+//! suite pins this). One shared [`spill::SpillManager`] serves both
+//! concurrently-running phases; the disk budget (with in-flight merge
+//! outputs reserved) and eager run deletion hold throughout, and
+//! [`SpillStats::wall_us`] / [`SpillStats::overlap_us`] report how much
+//! of the two phase spans actually ran concurrently. Spill writers on
+//! both sides draw their threads from one long-lived per-sort
+//! [`stream::WriterPool`] instead of spawning per run.
 //!
 //! Datasets are headerless little-endian record files ([`format::RawReader`])
 //! in any supported [`Dtype`] (`u32`, `u64`, `kv`, `kv64`, `f32`);
@@ -56,12 +84,16 @@ pub use codec::Codec;
 pub use format::{
     read_raw, write_raw, Dtype, ExtItem, RawReader, RawWriter, RunFile, RunReader, RunWriter,
 };
-pub use merge::{merge_runs, MergeOutcome, MergePlan, RecordSink};
-pub use run_gen::{generate_runs, RecordSource, SliceSource};
+pub use merge::{
+    merge_runs, sort_pipelined, MergeOutcome, MergePlan, PipelineOutcome, RecordSink,
+};
+pub use run_gen::{
+    generate_runs, generate_runs_streaming, RecordSource, RunEmit, SliceSource,
+};
 pub use spill::SpillManager;
 pub use stream::{
-    build_tree, DoubleBufWriter, MergeStream, PrefetchCounters, PrefetchStream, ReaderStream,
-    RunStream,
+    build_tree, DoubleBufWriter, MergeStream, PoolJob, PrefetchCounters, PrefetchStream,
+    ReaderStream, RunStream, WriterPool,
 };
 
 use crate::flims::sort::SortConfig;
@@ -88,6 +120,13 @@ pub struct ExternalConfig {
     /// Blocks each tree leaf reads ahead on its prefetch thread;
     /// `0` disables double-buffering (leaves block on `read_block`).
     pub prefetch_blocks: usize,
+    /// Overlap phase 1 with phase 2 (the TopSort-style pipelined
+    /// schedule): group merges start while later runs still spill.
+    /// `false` preserves the serial back-to-back schedule; the sorted
+    /// output is byte-identical either way. Defaults from the
+    /// `FLIMS_EXTERNAL_OVERLAP` environment variable (`on`/`off`,
+    /// unset = off) so CI can run the whole suite pipelined.
+    pub overlap: bool,
     /// Default dataset element type for file sorts when the request
     /// does not name one.
     pub dtype: Dtype,
@@ -110,11 +149,38 @@ impl Default for ExternalConfig {
             chunk: 128,
             threads: 1,
             prefetch_blocks: 2,
+            overlap: overlap_default(),
             dtype: Dtype::U32,
             codec: Codec::Raw,
             tmp_dir: None,
             disk_budget_bytes: None,
         }
+    }
+}
+
+/// Parse an overlap knob value: `on`/`off` (the documented spellings),
+/// with `true`/`false`/`1`/`0` accepted as aliases, case-insensitive.
+pub fn parse_overlap(s: &str) -> Result<bool, String> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        _ => Err(format!("unknown overlap value '{s}' (expected on|off)")),
+    }
+}
+
+/// The `overlap` default: the `FLIMS_EXTERNAL_OVERLAP` environment
+/// variable when set, else off. This is how CI runs the full
+/// integration suite under the pipelined schedule without touching
+/// every test's config. An unparseable value warns on stderr instead
+/// of silently meaning "off" — otherwise a typo would quietly turn the
+/// overlap CI job into a second serial run.
+fn overlap_default() -> bool {
+    match std::env::var("FLIMS_EXTERNAL_OVERLAP") {
+        Err(_) => false,
+        Ok(v) => parse_overlap(&v).unwrap_or_else(|e| {
+            eprintln!("warning: FLIMS_EXTERNAL_OVERLAP ignored: {e}");
+            false
+        }),
     }
 }
 
@@ -134,6 +200,12 @@ impl ExternalConfig {
             return Err(format!(
                 "external.threads = {} is absurd (max 1024, 0 = one per core)",
                 self.threads
+            ));
+        }
+        if self.prefetch_blocks > 1024 {
+            return Err(format!(
+                "external.prefetch_blocks = {} is absurd (max 1024, 0 disables prefetch)",
+                self.prefetch_blocks
             ));
         }
         SortConfig { w: self.w, chunk: self.chunk }.validate()
@@ -193,10 +265,20 @@ pub struct SpillStats {
     pub merge_passes: u64,
     /// High-water mark of live spill bytes.
     pub peak_spill_bytes: u64,
-    /// Wall-clock of phase 1 (run generation), microseconds.
+    /// Wall-clock of phase 1 (run generation), microseconds. Under the
+    /// overlapped schedule this span runs concurrently with `phase2_us`
+    /// rather than before it.
     pub phase1_us: u64,
-    /// Wall-clock of phase 2 (k-way merge), microseconds.
+    /// Wall-clock of phase 2 (k-way merge: first group merge → sink
+    /// complete), microseconds.
     pub phase2_us: u64,
+    /// End-to-end wall-clock of the whole sort, microseconds. Serially
+    /// this is ≈ `phase1_us + phase2_us`; overlapped it is less — the
+    /// saving the pipeline buys.
+    pub wall_us: u64,
+    /// Time both phases ran concurrently: `phase1_us + phase2_us −
+    /// wall_us`, clamped at 0 (always 0 under the serial schedule).
+    pub overlap_us: u64,
     /// Leaf blocks the prefetch threads had ready before the merger
     /// asked (the disk read was fully overlapped with merging).
     pub prefetch_hits: u64,
@@ -210,21 +292,37 @@ pub struct SpillStats {
     pub codec_decode_us: u64,
 }
 
-/// Sort any [`RecordSource`] into any [`RecordSink`] with bounded memory.
+/// Sort any [`RecordSource`] into any [`RecordSink`] with bounded
+/// memory. `cfg.overlap` picks the schedule: serial back-to-back
+/// phases, or the pipelined schedule that merges fan-in groups while
+/// later runs still spill — same output bytes either way. (The source
+/// must be `Send` because the pipelined producer runs on its own
+/// thread; every in-tree source is.)
 pub fn sort_stream<T: ExtItem>(
-    src: &mut dyn RecordSource<T>,
+    src: &mut (dyn RecordSource<T> + Send),
     sink: &mut dyn RecordSink<T>,
     cfg: &ExternalConfig,
 ) -> Result<SpillStats> {
     cfg.validate().map_err(|e| anyhow!("{e}"))?;
-    let mut spill = SpillManager::new(cfg.tmp_dir.clone(), cfg.disk_budget_bytes)?;
-    let t1 = Instant::now();
-    let runs = generate_runs(src, cfg, &mut spill)?;
-    let phase1_us = t1.elapsed().as_micros() as u64;
-    let input_elems: u64 = runs.iter().map(|r| r.elems).sum();
-    let t2 = Instant::now();
-    let outcome = merge_runs(runs, cfg, &mut spill, sink)?;
-    let phase2_us = t2.elapsed().as_micros() as u64;
+    let spill = SpillManager::new(cfg.tmp_dir.clone(), cfg.disk_budget_bytes)?;
+    // One long-lived writer thread per concurrent spill writer (the
+    // phase-1 producer + up to `threads` group merges, plus slack) —
+    // thousand-run sorts reuse these instead of spawning per run.
+    let pool = WriterPool::new(cfg.effective_threads() + 2)?;
+    let wall = Instant::now();
+    let (outcome, input_elems, phase1_us, phase2_us) = if cfg.overlap {
+        let p = sort_pipelined(src, cfg, &spill, Some(&pool), sink)?;
+        (p.outcome, p.input_elems, p.phase1_us, p.phase2_us)
+    } else {
+        let t1 = Instant::now();
+        let runs = generate_runs(src, cfg, &spill, Some(&pool))?;
+        let phase1_us = t1.elapsed().as_micros() as u64;
+        let input_elems: u64 = runs.iter().map(|r| r.elems).sum();
+        let t2 = Instant::now();
+        let outcome = merge_runs(runs, cfg, &spill, Some(&pool), sink)?;
+        (outcome, input_elems, phase1_us, t2.elapsed().as_micros() as u64)
+    };
+    let wall_us = wall.elapsed().as_micros() as u64;
     if outcome.elements != input_elems {
         return Err(anyhow!(
             "external sort corrupted: {} elements in, {} out",
@@ -241,6 +339,8 @@ pub fn sort_stream<T: ExtItem>(
         peak_spill_bytes: spill.peak_live_bytes(),
         phase1_us,
         phase2_us,
+        wall_us,
+        overlap_us: (phase1_us + phase2_us).saturating_sub(wall_us),
         prefetch_hits: outcome.prefetch_hits,
         prefetch_misses: outcome.prefetch_misses,
         codec_encode_us: spill.encode_us(),
@@ -307,9 +407,11 @@ pub fn sort_vec<T: ExtItem>(data: &[T], cfg: &ExternalConfig) -> Result<(Vec<T>,
         let t = Instant::now();
         let mut out = data.to_vec();
         T::sort_run(&mut out, cfg.sort_config());
+        let us = t.elapsed().as_micros() as u64;
         let stats = SpillStats {
             elements: data.len() as u64,
-            phase1_us: t.elapsed().as_micros() as u64,
+            phase1_us: us,
+            wall_us: us,
             ..Default::default()
         };
         return Ok((out, stats));
@@ -346,9 +448,67 @@ mod tests {
         expect.sort_unstable_by(|a, b| b.cmp(a));
         assert_eq!(got, expect);
         assert_eq!(stats.elements, 20_000);
-        assert_eq!(stats.runs_spilled, 20 + 5 + 2); // 20 → 5 → 2 → sink
+        // 20 → 5 → 2 → sink; pass 2 merges one chunk of 4 and carries
+        // the fifth run forward free (prefix-stable chunked plan).
+        assert_eq!(stats.runs_spilled, 20 + 5 + 1);
         assert_eq!(stats.merge_passes, 3);
         assert!(stats.bytes_spilled >= 20_000 * 4);
+        assert!(stats.wall_us > 0);
+    }
+
+    #[test]
+    fn overlap_schedule_matches_serial_exactly() {
+        // Same input, same config, overlap on vs off: identical sorted
+        // output AND identical spill layout (runs, passes, bytes) —
+        // only the wall-clock schedule may differ. Multi-pass workload
+        // (20 runs ≫ fan-in 4), serial and parallel, both codecs.
+        let mut rng = Rng::new(109);
+        let data = gen_u32(&mut rng, 20_000, Distribution::Uniform);
+        for threads in [1usize, 4] {
+            for codec in [Codec::Raw, Codec::Delta] {
+                let off = ExternalConfig {
+                    overlap: false,
+                    threads,
+                    codec,
+                    ..tiny_cfg()
+                };
+                let on = ExternalConfig { overlap: true, ..off.clone() };
+                let (serial, serial_stats) = sort_vec(&data, &off).unwrap();
+                let (piped, piped_stats) = sort_vec(&data, &on).unwrap();
+                assert_eq!(piped, serial, "threads={threads} {codec:?}");
+                assert_eq!(piped_stats.elements, serial_stats.elements);
+                assert_eq!(piped_stats.runs_spilled, serial_stats.runs_spilled);
+                assert_eq!(piped_stats.merge_passes, serial_stats.merge_passes);
+                assert_eq!(piped_stats.bytes_spilled, serial_stats.bytes_spilled);
+                assert_eq!(
+                    piped_stats.bytes_spilled_raw,
+                    serial_stats.bytes_spilled_raw
+                );
+                // The serial schedule by definition has no overlap.
+                assert_eq!(serial_stats.overlap_us, 0, "threads={threads} {codec:?}");
+                assert!(piped_stats.wall_us > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_parse_spellings() {
+        for (s, v) in [
+            ("on", true),
+            ("off", false),
+            ("true", true),
+            ("false", false),
+            // Env vars get typed by humans: case and whitespace forgiven.
+            ("ON", true),
+            ("Off", false),
+            (" on ", true),
+            ("1", true),
+            ("0", false),
+        ] {
+            assert_eq!(parse_overlap(s).unwrap(), v, "{s:?}");
+        }
+        let err = parse_overlap("sideways").unwrap_err();
+        assert!(err.contains("unknown overlap value"), "{err}");
     }
 
     #[test]
@@ -521,6 +681,12 @@ mod tests {
         assert!(cfg.validate().is_err());
         cfg = ExternalConfig { threads: 5000, ..Default::default() };
         assert!(cfg.validate().is_err());
+        let err = ExternalConfig { prefetch_blocks: 4096, ..Default::default() }
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("external.prefetch_blocks = 4096 is absurd"), "{err}");
+        cfg = ExternalConfig { prefetch_blocks: 1024, ..Default::default() };
+        assert!(cfg.validate().is_ok(), "1024 is the inclusive bound");
         cfg = ExternalConfig { threads: 0, prefetch_blocks: 0, ..Default::default() };
         assert!(cfg.validate().is_ok());
     }

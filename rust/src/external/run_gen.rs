@@ -3,6 +3,15 @@
 //! (per-dtype via [`ExtItem::sort_run`] — stable for payload records),
 //! and spill it as one descending run.
 //!
+//! Since the pipelined schedule landed, phase 1 is a **producer**: the
+//! core entry point is [`generate_runs_streaming`], which hands every
+//! run to an `emit` callback *the moment it seals* (written, finished,
+//! registered) instead of hoarding the whole list. The overlapped
+//! scheduler's callback pushes the run over a bounded channel so the
+//! merge tree starts absorbing it immediately; the batch schedule (and
+//! [`generate_runs`], kept for it and for tests) just collects a `Vec`.
+//! Runs are emitted strictly in input order in both modes.
+//!
 //! With `threads > 1` the chunks flow through a bounded work queue: the
 //! coordinating thread reads chunks in input order and feeds a pool of
 //! sort workers; sorted chunks come back on a completion channel and are
@@ -13,12 +22,14 @@
 //!
 //! Spills are double-buffered
 //! ([`DoubleBufWriter`](super::stream::DoubleBufWriter)): each run's
-//! encode + disk write happens on a writer thread while the coordinator
-//! reads (and, serially, sorts) the next chunk, so the producer never
-//! blocks on the spill — at the cost of at most one extra run buffer in
-//! flight. Runs are encoded with the effective codec
-//! ([`ExternalConfig::codec_for`]): `FLR2` delta blocks compress the
-//! sorted runs' small key deltas, cutting phase-1 spill bandwidth.
+//! encode + disk write happens on a writer thread — drawn from the
+//! per-sort [`WriterPool`](super::stream::WriterPool) rather than
+//! spawned per run — while the coordinator reads (and, serially, sorts)
+//! the next chunk, so the producer never blocks on the spill — at the
+//! cost of at most one extra run buffer in flight. Runs are encoded
+//! with the effective codec ([`ExternalConfig::codec_for`]): `FLR2`
+//! delta blocks compress the sorted runs' small key deltas, cutting
+//! phase-1 spill bandwidth.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -30,7 +41,7 @@ use anyhow::{anyhow, Result};
 use super::codec::Codec;
 use super::format::{ExtItem, RawReader, RunFile, RunWriter, RUN_HEADER_BYTES};
 use super::spill::SpillManager;
-use super::stream::DoubleBufWriter;
+use super::stream::{DoubleBufWriter, WriterPool};
 use super::ExternalConfig;
 
 /// Source of unsorted record blocks — a dataset file, an in-memory
@@ -68,6 +79,10 @@ impl<T: ExtItem> RecordSource<T> for SliceSource<'_, T> {
     }
 }
 
+/// The run hand-off callback of [`generate_runs_streaming`]: called once
+/// per sealed, registered run, strictly in input order.
+pub type RunEmit<'a> = dyn FnMut(RunFile) -> Result<()> + 'a;
+
 /// Read one run-sized chunk (or whatever is left) from the source into
 /// a fresh owned buffer. Both phases hand the buffer off whole — to a
 /// sort worker and then the spill writer thread — so per-run ownership
@@ -88,82 +103,124 @@ fn read_chunk<T: ExtItem>(
 /// One spill in flight: a writer thread encodes + writes the run while
 /// the coordinator reads (and sorts) the next chunk. At most one run is
 /// pending at a time — classic double buffering — and it is finished
-/// (joined, registered) before the next spill starts, so the budget
-/// checks and run accounting stay exactly as strict as the synchronous
-/// path.
+/// (joined, registered, emitted) before the next spill starts, so the
+/// budget checks and run accounting stay exactly as strict as the
+/// synchronous path.
 struct PendingSpill<T: ExtItem> {
     path: PathBuf,
+    /// Budget bytes claimed for this write until it registers.
+    reserved: u64,
     dbw: DoubleBufWriter<T, RunWriter<T>>,
 }
 
 impl<T: ExtItem> PendingSpill<T> {
-    /// Budget-check, create the next run file, and hand the sorted
-    /// buffer to the writer thread (budget check up front: fail before
-    /// the disk fills, not after). The headroom projection uses the
-    /// uncompressed size — conservative when the codec compresses.
-    fn start(spill: &mut SpillManager, codec: Codec, buf: Vec<T>) -> Result<Self> {
-        spill.check_headroom(RUN_HEADER_BYTES + (buf.len() * T::WIRE_BYTES) as u64)?;
-        let writer = spill.create_run::<T>(codec)?;
-        let path = writer.path().to_path_buf();
-        let mut dbw = DoubleBufWriter::spawn(writer, 1)?;
-        if let Err(e) = dbw.send(buf) {
-            drop(dbw);
-            let _ = std::fs::remove_file(&path);
-            return Err(e);
+    /// Reserve budget headroom, create the next run file, and hand the
+    /// sorted buffer to the writer thread (reservation up front: fail
+    /// before the disk fills, not after — and visibly to the merge
+    /// scheduler's own checks when the schedules overlap). The
+    /// projection uses the uncompressed size — conservative when the
+    /// codec compresses.
+    fn start(
+        spill: &SpillManager,
+        pool: Option<&WriterPool>,
+        codec: Codec,
+        buf: Vec<T>,
+    ) -> Result<Self> {
+        let reserved = RUN_HEADER_BYTES + (buf.len() * T::WIRE_BYTES) as u64;
+        spill.reserve(reserved)?;
+        let started = (|| {
+            let writer = spill.create_run::<T>(codec)?;
+            let path = writer.path().to_path_buf();
+            let mut dbw = DoubleBufWriter::spawn_with(writer, 1, pool)?;
+            if let Err(e) = dbw.send(buf) {
+                drop(dbw);
+                let _ = std::fs::remove_file(&path);
+                return Err(e);
+            }
+            Ok(PendingSpill { path, reserved, dbw })
+        })();
+        if started.is_err() {
+            spill.release(reserved);
         }
-        Ok(PendingSpill { path, dbw })
+        started
     }
 
-    /// Wait for the write to land, then register the finished run.
-    fn finish(self, spill: &mut SpillManager, runs: &mut Vec<RunFile>) -> Result<()> {
+    /// Wait for the write to land, swap the reservation for the
+    /// finished run's registration, then hand it to `emit` (the
+    /// collector's push, or the pipeline channel).
+    fn finish(self, spill: &SpillManager, emit: &mut RunEmit<'_>) -> Result<()> {
         match self.dbw.finish().and_then(|w| w.finish()) {
             Ok(run) => {
-                // register() keeps the run tracked even when it reports
+                // register keeps the run tracked even when it reports
                 // a budget breach, so SpillManager::drop still cleans it.
-                spill.register(&run)?;
-                runs.push(run);
-                Ok(())
+                spill.register_reserved(&run, self.reserved)?;
+                emit(run)
             }
             Err(e) => {
                 let _ = std::fs::remove_file(&self.path);
+                spill.release(self.reserved);
                 Err(e)
             }
         }
     }
 
-    /// Error-path cleanup: stop the writer and delete the partial file
-    /// (it was never registered, so the manager won't).
-    fn abandon(self) {
+    /// Error-path cleanup: stop the writer, delete the partial file
+    /// (it was never registered, so the manager won't), and return the
+    /// reserved headroom.
+    fn abandon(self, spill: &SpillManager) {
         drop(self.dbw);
         let _ = std::fs::remove_file(&self.path);
+        spill.release(self.reserved);
     }
+}
+
+/// [`generate_runs_streaming`] collecting the emitted runs into a `Vec`
+/// — the batch (non-overlapped) schedule's phase 1.
+pub fn generate_runs<T: ExtItem>(
+    src: &mut dyn RecordSource<T>,
+    cfg: &ExternalConfig,
+    spill: &SpillManager,
+    pool: Option<&WriterPool>,
+) -> Result<Vec<RunFile>> {
+    let mut runs = Vec::new();
+    generate_runs_streaming(src, cfg, spill, pool, &mut |run| {
+        runs.push(run);
+        Ok(())
+    })?;
+    Ok(runs)
 }
 
 /// Consume `src`, spilling sorted runs of at most
 /// `cfg.run_elems_for::<T>()` elements each, on `cfg.effective_threads()`
-/// workers. Runs are numbered and returned in input order regardless of
-/// the worker count.
-pub fn generate_runs<T: ExtItem>(
+/// workers. Each run is passed to `emit` the moment it seals —
+/// numbered and emitted in input order regardless of the worker count —
+/// so a downstream merge scheduler can start absorbing runs while later
+/// chunks are still being read, sorted, and spilled. An `emit` error
+/// aborts the producer (the overlapped scheduler cancels it this way).
+pub fn generate_runs_streaming<T: ExtItem>(
     src: &mut dyn RecordSource<T>,
     cfg: &ExternalConfig,
-    spill: &mut SpillManager,
-) -> Result<Vec<RunFile>> {
+    spill: &SpillManager,
+    pool: Option<&WriterPool>,
+    emit: &mut RunEmit<'_>,
+) -> Result<()> {
     let threads = cfg.effective_threads();
     if threads <= 1 {
-        generate_runs_serial(src, cfg, spill)
+        generate_runs_serial(src, cfg, spill, pool, emit)
     } else {
-        generate_runs_parallel(src, cfg, spill, threads)
+        generate_runs_parallel(src, cfg, spill, pool, emit, threads)
     }
 }
 
 fn generate_runs_serial<T: ExtItem>(
     src: &mut dyn RecordSource<T>,
     cfg: &ExternalConfig,
-    spill: &mut SpillManager,
-) -> Result<Vec<RunFile>> {
+    spill: &SpillManager,
+    pool: Option<&WriterPool>,
+    emit: &mut RunEmit<'_>,
+) -> Result<()> {
     let codec = cfg.codec_for(T::DTYPE);
     let run_elems = cfg.run_elems_for(T::WIRE_BYTES);
-    let mut runs = Vec::new();
     let mut in_flight: Option<PendingSpill<T>> = None;
     let result = (|| -> Result<()> {
         loop {
@@ -176,27 +233,29 @@ fn generate_runs_serial<T: ExtItem>(
             }
             T::sort_run(&mut buf, cfg.sort_config());
             if let Some(prev) = in_flight.take() {
-                prev.finish(spill, &mut runs)?;
+                prev.finish(spill, emit)?;
             }
-            in_flight = Some(PendingSpill::start(spill, codec, buf)?);
+            in_flight = Some(PendingSpill::start(spill, pool, codec, buf)?);
         }
         if let Some(prev) = in_flight.take() {
-            prev.finish(spill, &mut runs)?;
+            prev.finish(spill, emit)?;
         }
         Ok(())
     })();
     if let Some(pending) = in_flight.take() {
-        pending.abandon(); // only reachable on error
+        pending.abandon(spill); // only reachable on error
     }
-    result.map(|()| runs)
+    result
 }
 
 fn generate_runs_parallel<T: ExtItem>(
     src: &mut dyn RecordSource<T>,
     cfg: &ExternalConfig,
-    spill: &mut SpillManager,
+    spill: &SpillManager,
+    pool: Option<&WriterPool>,
+    emit: &mut RunEmit<'_>,
     threads: usize,
-) -> Result<Vec<RunFile>> {
+) -> Result<()> {
     let run_elems = cfg.run_elems_for(T::WIRE_BYTES);
     let sort_cfg = cfg.sort_config();
     // Cap on chunks that are queued, being sorted, or sorted-but-not-yet
@@ -223,7 +282,6 @@ fn generate_runs_parallel<T: ExtItem>(
         }
         drop(done_tx);
 
-        let mut runs = Vec::new();
         let mut pending: BTreeMap<u64, Vec<T>> = BTreeMap::new();
         let mut in_flight: Option<PendingSpill<T>> = None;
         let mut next_read = 0u64; // next chunk sequence number to hand out
@@ -251,32 +309,33 @@ fn generate_runs_parallel<T: ExtItem>(
                 }
                 // Collect a sorted chunk, then start spilling every
                 // chunk now contiguous with the write frontier — each on
-                // the double-buffered writer, finishing its predecessor
-                // first so runs register strictly in input order.
+                // the double-buffered writer, finishing (and emitting)
+                // its predecessor first so runs leave strictly in input
+                // order.
                 let (seq, buf) = done_rx
                     .recv()
                     .map_err(|_| anyhow!("run-gen workers exited early"))?;
                 pending.insert(seq, buf);
                 while let Some(buf) = pending.remove(&next_write) {
                     if let Some(prev) = in_flight.take() {
-                        prev.finish(spill, &mut runs)?;
+                        prev.finish(spill, emit)?;
                     }
-                    in_flight = Some(PendingSpill::start(spill, codec, buf)?);
+                    in_flight = Some(PendingSpill::start(spill, pool, codec, buf)?);
                     next_write += 1;
                 }
             }
             if let Some(prev) = in_flight.take() {
-                prev.finish(spill, &mut runs)?;
+                prev.finish(spill, emit)?;
             }
             Ok(())
         })();
         if let Some(p) = in_flight.take() {
-            p.abandon(); // only reachable on error
+            p.abandon(spill); // only reachable on error
         }
         // Closing the work queue releases the pool; the scope joins the
         // workers after the channels (and any queued buffers) drop.
         drop(work_tx);
-        result.map(|()| runs)
+        result
     })
 }
 
@@ -307,9 +366,9 @@ mod tests {
         let cfg = small_cfg();
         let mut rng = Rng::new(91);
         let data = gen_u32(&mut rng, 5000, Distribution::Uniform);
-        let mut spill = SpillManager::new(None, None).unwrap();
+        let spill = SpillManager::new(None, None).unwrap();
         let mut src = SliceSource::new(&data);
-        let runs = generate_runs(&mut src, &cfg, &mut spill).unwrap();
+        let runs = generate_runs(&mut src, &cfg, &spill, None).unwrap();
 
         // 5000 elements at 1024/run → 5 runs; sizes sum to the input.
         assert_eq!(runs.len(), 5);
@@ -337,9 +396,9 @@ mod tests {
         let mut layouts: Vec<Vec<(String, Vec<u32>)>> = Vec::new();
         for threads in [1usize, 2, 8] {
             let cfg = ExternalConfig { threads, ..small_cfg() };
-            let mut spill = SpillManager::new(None, None).unwrap();
+            let spill = SpillManager::new(None, None).unwrap();
             let mut src = SliceSource::new(&data);
-            let runs = generate_runs(&mut src, &cfg, &mut spill).unwrap();
+            let runs = generate_runs(&mut src, &cfg, &spill, None).unwrap();
             layouts.push(
                 runs.iter()
                     .map(|r| {
@@ -355,6 +414,64 @@ mod tests {
     }
 
     #[test]
+    fn streaming_emission_is_in_order_and_eager() {
+        // The producer must hand run i to the callback before run i+2
+        // even starts spilling (double buffering allows exactly one
+        // successor in flight) — and strictly in input order, serial
+        // and parallel.
+        for threads in [1usize, 4] {
+            let cfg = ExternalConfig { threads, ..small_cfg() };
+            let mut rng = Rng::new(94);
+            let data = gen_u32(&mut rng, 6000, Distribution::Uniform);
+            let spill = SpillManager::new(None, None).unwrap();
+            let mut src = SliceSource::new(&data);
+            let mut seen: Vec<RunFile> = Vec::new();
+            generate_runs_streaming(&mut src, &cfg, &spill, None, &mut |run| {
+                // Emitted runs are already registered and on disk.
+                assert!(run.path.exists(), "emitted run must be sealed");
+                seen.push(run);
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(seen.len(), 6, "threads={threads}");
+            let mut names: Vec<String> = seen
+                .iter()
+                .map(|r| r.path.file_name().unwrap().to_string_lossy().into_owned())
+                .collect();
+            let sorted = {
+                let mut s = names.clone();
+                s.sort();
+                s
+            };
+            assert_eq!(names, sorted, "threads={threads}: emission out of input order");
+            names.dedup();
+            assert_eq!(names.len(), 6);
+        }
+    }
+
+    #[test]
+    fn emit_errors_abort_the_producer() {
+        // The overlapped scheduler cancels phase 1 by failing the emit
+        // callback; the producer must stop promptly and surface it.
+        let cfg = ExternalConfig { threads: 4, ..small_cfg() };
+        let mut rng = Rng::new(95);
+        let data = gen_u32(&mut rng, 20_000, Distribution::Uniform);
+        let spill = SpillManager::new(None, None).unwrap();
+        let mut src = SliceSource::new(&data);
+        let mut emitted = 0usize;
+        let err = generate_runs_streaming::<u32>(&mut src, &cfg, &spill, None, &mut |_| {
+            emitted += 1;
+            if emitted == 3 {
+                anyhow::bail!("downstream gave up");
+            }
+            Ok(())
+        })
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("downstream gave up"));
+        assert_eq!(emitted, 3);
+    }
+
+    #[test]
     fn kv_runs_are_stably_sorted() {
         // Duplicate-heavy Kv input: within each run, equal keys must keep
         // input order (payload = input index makes this checkable).
@@ -365,9 +482,9 @@ mod tests {
             threads: 2,
             ..Default::default()
         };
-        let mut spill = SpillManager::new(None, None).unwrap();
+        let spill = SpillManager::new(None, None).unwrap();
         let mut src = SliceSource::new(&data);
-        let runs = generate_runs(&mut src, &cfg, &mut spill).unwrap();
+        let runs = generate_runs(&mut src, &cfg, &spill, None).unwrap();
         assert_eq!(runs.len(), 3);
         let run_elems = cfg.run_elems_for(Kv::WIRE_BYTES);
         assert_eq!(run_elems, 1024);
@@ -383,9 +500,9 @@ mod tests {
     fn empty_input_spills_nothing() {
         for threads in [1usize, 4] {
             let cfg = ExternalConfig { threads, ..small_cfg() };
-            let mut spill = SpillManager::new(None, None).unwrap();
+            let spill = SpillManager::new(None, None).unwrap();
             let mut src = SliceSource::new(&[] as &[u32]);
-            let runs = generate_runs(&mut src, &cfg, &mut spill).unwrap();
+            let runs = generate_runs(&mut src, &cfg, &spill, None).unwrap();
             assert!(runs.is_empty());
             assert_eq!(spill.runs_created(), 0);
         }
@@ -411,9 +528,9 @@ mod tests {
             }
         }
         let cfg = small_cfg();
-        let mut spill = SpillManager::new(None, None).unwrap();
+        let spill = SpillManager::new(None, None).unwrap();
         let mut src = Dribble { left: 3000, next: 1 };
-        let runs = generate_runs(&mut src, &cfg, &mut spill).unwrap();
+        let runs = generate_runs(&mut src, &cfg, &spill, None).unwrap();
         assert_eq!(runs.len(), 3);
         assert_eq!(runs[0].elems, 1024);
         assert_eq!(runs[2].elems, 3000 - 2048);
@@ -436,9 +553,10 @@ mod tests {
             }
         }
         let cfg = ExternalConfig { threads: 4, ..small_cfg() };
-        let mut spill = SpillManager::new(None, None).unwrap();
+        let spill = SpillManager::new(None, None).unwrap();
         let mut src = Failing { fed: 0 };
-        let err = format!("{:#}", generate_runs(&mut src, &cfg, &mut spill).unwrap_err());
+        let err =
+            format!("{:#}", generate_runs(&mut src, &cfg, &spill, None).unwrap_err());
         assert!(err.contains("simulated I/O failure"), "{err}");
     }
 }

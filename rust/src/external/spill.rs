@@ -7,9 +7,19 @@
 //! deletes it the moment the merge has drained it. `Drop` removes any
 //! stragglers (and the temp dir, when the manager created it), so an
 //! aborted sort never leaks disk.
+//!
+//! Since the overlapped schedule landed, one manager is **shared by
+//! both phases running concurrently**: every method takes `&self`, with
+//! the mutable bookkeeping behind an internal mutex, so the phase-1
+//! producer thread can register fresh runs while the merge scheduler
+//! registers merged outputs and consumes drained inputs. The budget and
+//! eager-delete semantics are unchanged — `register` still hard-fails
+//! the moment live bytes cross the budget, whichever thread gets there
+//! first.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
@@ -19,15 +29,16 @@ use super::format::{ExtItem, RunFile, RunWriter};
 /// Distinguishes concurrent spill dirs within one process.
 static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
 
-/// Tracks live spill files and enforces the disk byte budget.
-pub struct SpillManager {
-    dir: PathBuf,
-    /// We created the directory, so we remove it on drop.
-    own_dir: bool,
+/// The mutable bookkeeping, behind [`SpillManager`]'s mutex.
+#[derive(Default)]
+struct SpillState {
     next_run: u64,
     live: Vec<RunFile>,
     live_bytes: u64,
-    disk_budget: Option<u64>,
+    /// Projected bytes of writes in flight ([`SpillManager::reserve`])
+    /// — not yet on disk, but already claimed against the budget so
+    /// concurrent writers' pre-write checks see each other.
+    reserved_bytes: u64,
     /// Lifetime counters (monotonic, survive consume()).
     runs_created: u64,
     runs_deleted: u64,
@@ -35,6 +46,17 @@ pub struct SpillManager {
     raw_bytes_written: u64,
     encode_ns: u64,
     peak_live_bytes: u64,
+}
+
+/// Tracks live spill files and enforces the disk byte budget. Shareable
+/// across threads (`&self` everywhere): the two phases of an overlapped
+/// sort hold one reference each.
+pub struct SpillManager {
+    dir: PathBuf,
+    /// We created the directory, so we remove it on drop.
+    own_dir: bool,
+    disk_budget: Option<u64>,
+    state: Mutex<SpillState>,
 }
 
 impl SpillManager {
@@ -56,20 +78,11 @@ impl SpillManager {
                 (d, true)
             }
         };
-        Ok(SpillManager {
-            dir,
-            own_dir,
-            next_run: 0,
-            live: Vec::new(),
-            live_bytes: 0,
-            disk_budget,
-            runs_created: 0,
-            runs_deleted: 0,
-            bytes_written: 0,
-            raw_bytes_written: 0,
-            encode_ns: 0,
-            peak_live_bytes: 0,
-        })
+        Ok(SpillManager { dir, own_dir, disk_budget, state: Mutex::new(SpillState::default()) })
+    }
+
+    fn state(&self) -> std::sync::MutexGuard<'_, SpillState> {
+        self.state.lock().unwrap()
     }
 
     /// The directory runs spill into.
@@ -80,26 +93,31 @@ impl SpillManager {
     /// Open a writer for the next run file, encoding with `codec`
     /// (callers pass the *effective* codec —
     /// [`Codec::effective_for`] already applied). Naming is sequential
-    /// in call order, which the parallel phases rely on for
-    /// deterministic run layouts: writers are always created on the
-    /// coordinating thread in input order, only the merging/sorting
-    /// work fans out.
-    pub fn create_run<T: ExtItem>(&mut self, codec: Codec) -> Result<RunWriter<T>> {
-        let path = self.dir.join(format!("run-{:06}.flr", self.next_run));
-        self.next_run += 1;
+    /// in call order. Within each phase, writers are created on one
+    /// coordinating thread in input order, so a phase's run layout is
+    /// deterministic for any worker count; under the overlapped
+    /// schedule the two phases' `create_run` calls interleave, so only
+    /// the *names* vary run-to-run — never the sorted output bytes,
+    /// which depend on run order and contents alone.
+    pub fn create_run<T: ExtItem>(&self, codec: Codec) -> Result<RunWriter<T>> {
+        let seq = {
+            let mut st = self.state();
+            let seq = st.next_run;
+            st.next_run += 1;
+            seq
+        };
+        let path = self.dir.join(format!("run-{seq:06}.flr"));
         RunWriter::create_with(&path, codec)
     }
 
-    /// Check that `upcoming_bytes` more spill fits the disk budget —
-    /// called *before* writing a run, so the budget is enforced ahead
-    /// of the disk filling, not after.
-    pub fn check_headroom(&self, upcoming_bytes: u64) -> Result<()> {
+    fn headroom_locked(&self, st: &SpillState, upcoming_bytes: u64) -> Result<()> {
         if let Some(budget) = self.disk_budget {
-            let projected = self.live_bytes + upcoming_bytes;
+            let projected = st.live_bytes + st.reserved_bytes + upcoming_bytes;
             if projected > budget {
                 bail!(
-                    "spill disk budget exceeded: {} bytes live + {} upcoming > {} budget",
-                    self.live_bytes,
+                    "spill disk budget exceeded: {} bytes live + {} reserved + {} upcoming > {} budget",
+                    st.live_bytes,
+                    st.reserved_bytes,
                     upcoming_bytes,
                     budget
                 );
@@ -108,24 +126,75 @@ impl SpillManager {
         Ok(())
     }
 
+    /// Check that `upcoming_bytes` more spill fits the disk budget —
+    /// called *before* writing, so the budget is enforced ahead of the
+    /// disk filling, not after. The projection counts live bytes *and*
+    /// every outstanding [`reserve`](SpillManager::reserve), so a
+    /// checker sees other writers' in-flight output too.
+    pub fn check_headroom(&self, upcoming_bytes: u64) -> Result<()> {
+        self.headroom_locked(&self.state(), upcoming_bytes)
+    }
+
+    /// Claim budget headroom for a write about to start (a phase-1 run
+    /// spilling, a merge output being produced): the headroom check,
+    /// plus holding `upcoming_bytes` reserved until
+    /// [`release`](SpillManager::release) or
+    /// [`register_reserved`](SpillManager::register_reserved). This is
+    /// what keeps the pre-write check meaningful when both phases write
+    /// concurrently — neither side's check is blind to the other's
+    /// in-flight bytes.
+    pub fn reserve(&self, upcoming_bytes: u64) -> Result<()> {
+        let mut st = self.state();
+        self.headroom_locked(&st, upcoming_bytes)?;
+        st.reserved_bytes += upcoming_bytes;
+        Ok(())
+    }
+
+    /// Drop a reservation made with [`reserve`](SpillManager::reserve)
+    /// (the write was abandoned or failed). Saturating, so error-path
+    /// cleanup can never underflow the count.
+    pub fn release(&self, reserved_bytes: u64) {
+        let mut st = self.state();
+        st.reserved_bytes = st.reserved_bytes.saturating_sub(reserved_bytes);
+    }
+
+    /// Bytes currently reserved by in-flight writes.
+    pub fn reserved_bytes(&self) -> u64 {
+        self.state().reserved_bytes
+    }
+
     /// Start tracking a finished run; errors if it pushes live spill
     /// bytes past the disk budget (the run stays registered so Drop
     /// still cleans it up).
-    pub fn register(&mut self, run: &RunFile) -> Result<()> {
-        self.live.push(run.clone());
-        self.live_bytes += run.bytes;
-        self.bytes_written += run.bytes;
-        self.raw_bytes_written += run.raw_bytes;
-        self.encode_ns += run.encode_ns;
-        self.runs_created += 1;
-        self.peak_live_bytes = self.peak_live_bytes.max(self.live_bytes);
+    pub fn register(&self, run: &RunFile) -> Result<()> {
+        self.register_locked(&mut self.state(), run)
+    }
+
+    /// Atomically swap a [`reserve`](SpillManager::reserve) for the
+    /// finished run's actual bytes — release + register under one
+    /// lock, so concurrent checks never see the write double-counted
+    /// or momentarily uncounted.
+    pub fn register_reserved(&self, run: &RunFile, reserved_bytes: u64) -> Result<()> {
+        let mut st = self.state();
+        st.reserved_bytes = st.reserved_bytes.saturating_sub(reserved_bytes);
+        self.register_locked(&mut st, run)
+    }
+
+    fn register_locked(&self, st: &mut SpillState, run: &RunFile) -> Result<()> {
+        st.live.push(run.clone());
+        st.live_bytes += run.bytes;
+        st.bytes_written += run.bytes;
+        st.raw_bytes_written += run.raw_bytes;
+        st.encode_ns += run.encode_ns;
+        st.runs_created += 1;
+        st.peak_live_bytes = st.peak_live_bytes.max(st.live_bytes);
         if let Some(budget) = self.disk_budget {
-            if self.live_bytes > budget {
+            if st.live_bytes > budget {
                 bail!(
                     "spill disk budget exceeded: {} bytes live > {} budget ({} runs)",
-                    self.live_bytes,
+                    st.live_bytes,
                     budget,
-                    self.live.len()
+                    st.live.len()
                 );
             }
         }
@@ -133,58 +202,60 @@ impl SpillManager {
     }
 
     /// Delete a fully-consumed run eagerly, reclaiming its disk.
-    pub fn consume(&mut self, run: &RunFile) -> Result<()> {
+    pub fn consume(&self, run: &RunFile) -> Result<()> {
         std::fs::remove_file(&run.path)
             .with_context(|| format!("deleting consumed run {}", run.path.display()))?;
-        self.live.retain(|r| r.path != run.path);
-        self.live_bytes = self.live_bytes.saturating_sub(run.bytes);
-        self.runs_deleted += 1;
+        let mut st = self.state();
+        st.live.retain(|r| r.path != run.path);
+        st.live_bytes = st.live_bytes.saturating_sub(run.bytes);
+        st.runs_deleted += 1;
         Ok(())
     }
 
     /// Bytes currently occupied by live (not yet consumed) runs.
     pub fn live_bytes(&self) -> u64 {
-        self.live_bytes
+        self.state().live_bytes
     }
 
     /// High-water mark of [`live_bytes`](SpillManager::live_bytes).
     pub fn peak_live_bytes(&self) -> u64 {
-        self.peak_live_bytes
+        self.state().peak_live_bytes
     }
 
     /// Runs registered over this manager's lifetime.
     pub fn runs_created(&self) -> u64 {
-        self.runs_created
+        self.state().runs_created
     }
 
     /// Runs consumed (deleted) over this manager's lifetime.
     pub fn runs_deleted(&self) -> u64 {
-        self.runs_deleted
+        self.state().runs_deleted
     }
 
     /// Encoded bytes written across every registered run.
     pub fn bytes_written(&self) -> u64 {
-        self.bytes_written
+        self.state().bytes_written
     }
 
     /// What the same spill traffic would have occupied uncompressed
     /// (`elems × WIRE_BYTES` + headers) — `bytes_written /
     /// raw_bytes_written` is the achieved compression ratio.
     pub fn raw_bytes_written(&self) -> u64 {
-        self.raw_bytes_written
+        self.state().raw_bytes_written
     }
 
     /// Cumulative wall-clock the run writers spent encoding, µs
     /// (nanosecond-accumulated, divided once here so sub-µs runs are
     /// not truncated away).
     pub fn encode_us(&self) -> u64 {
-        self.encode_ns / 1000
+        self.state().encode_ns / 1000
     }
 }
 
 impl Drop for SpillManager {
     fn drop(&mut self) {
-        for run in &self.live {
+        let st = self.state.get_mut().unwrap();
+        for run in &st.live {
             let _ = std::fs::remove_file(&run.path);
         }
         if self.own_dir {
@@ -197,7 +268,7 @@ impl Drop for SpillManager {
 mod tests {
     use super::*;
 
-    fn spill_run(sm: &mut SpillManager, data: &[u32]) -> RunFile {
+    fn spill_run(sm: &SpillManager, data: &[u32]) -> RunFile {
         let mut w = sm.create_run(Codec::Raw).unwrap();
         w.write_block(data).unwrap();
         let run = w.finish().unwrap();
@@ -207,10 +278,10 @@ mod tests {
 
     #[test]
     fn create_register_consume_cycle() {
-        let mut sm = SpillManager::new(None, None).unwrap();
+        let sm = SpillManager::new(None, None).unwrap();
         let dir = sm.dir().to_path_buf();
-        let r1 = spill_run(&mut sm, &[3, 2, 1]);
-        let r2 = spill_run(&mut sm, &[9, 9]);
+        let r1 = spill_run(&sm, &[3, 2, 1]);
+        let r2 = spill_run(&sm, &[9, 9]);
         assert!(r1.path.exists() && r2.path.exists());
         assert_eq!(sm.runs_created(), 2);
         assert_eq!(sm.live_bytes(), r1.bytes + r2.bytes);
@@ -229,7 +300,7 @@ mod tests {
     fn disk_budget_enforced() {
         // Budget fits one 3-element run (12 bytes header + 12 payload)
         // but not two.
-        let mut sm = SpillManager::new(None, Some(30)).unwrap();
+        let sm = SpillManager::new(None, Some(30)).unwrap();
         let mut w = sm.create_run(Codec::Raw).unwrap();
         w.write_block(&[5u32, 4, 3]).unwrap();
         let r1 = w.finish().unwrap();
@@ -248,12 +319,12 @@ mod tests {
 
     #[test]
     fn headroom_is_checked_before_writing() {
-        let mut sm = SpillManager::new(None, Some(100)).unwrap();
+        let sm = SpillManager::new(None, Some(100)).unwrap();
         assert!(sm.check_headroom(100).is_ok());
         let err = format!("{:#}", sm.check_headroom(101).unwrap_err());
         assert!(err.contains("disk budget exceeded"), "{err}");
         // Live bytes count against the headroom.
-        let r = spill_run(&mut sm, &[1, 2, 3]); // 12 + 12 = 24 bytes
+        let r = spill_run(&sm, &[1, 2, 3]); // 12 + 12 = 24 bytes
         assert!(sm.check_headroom(76).is_ok());
         assert!(sm.check_headroom(77).is_err());
         sm.consume(&r).unwrap();
@@ -261,10 +332,37 @@ mod tests {
     }
 
     #[test]
+    fn reservations_gate_concurrent_writers() {
+        let sm = SpillManager::new(None, Some(100)).unwrap();
+        sm.reserve(60).unwrap();
+        assert_eq!(sm.reserved_bytes(), 60);
+        // A second writer's pre-write check sees the first's in-flight
+        // bytes — the overlapped-schedule guarantee.
+        let err = format!("{:#}", sm.reserve(60).unwrap_err());
+        assert!(err.contains("disk budget exceeded"), "{err}");
+        assert!(err.contains("60 reserved"), "{err}");
+        assert!(sm.check_headroom(41).is_err());
+        assert!(sm.check_headroom(40).is_ok());
+        // Swapping the reservation for the real (smaller) run frees the
+        // difference atomically.
+        let mut w = sm.create_run(Codec::Raw).unwrap();
+        w.write_block(&[1u32, 2, 3]).unwrap(); // 12 header + 12 payload
+        let run = w.finish().unwrap();
+        sm.register_reserved(&run, 60).unwrap();
+        assert_eq!(sm.reserved_bytes(), 0);
+        assert_eq!(sm.live_bytes(), 24);
+        assert!(sm.check_headroom(76).is_ok());
+        // A stray release saturates instead of underflowing.
+        sm.release(999);
+        assert_eq!(sm.reserved_bytes(), 0);
+        sm.consume(&run).unwrap();
+    }
+
+    #[test]
     fn external_dir_is_not_removed() {
         let dir = std::env::temp_dir().join(format!("flims-keep-{}", std::process::id()));
-        let mut sm = SpillManager::new(Some(dir.clone()), None).unwrap();
-        let run = spill_run(&mut sm, &[1]);
+        let sm = SpillManager::new(Some(dir.clone()), None).unwrap();
+        let run = spill_run(&sm, &[1]);
         drop(sm);
         assert!(!run.path.exists(), "runs are still cleaned");
         assert!(dir.exists(), "caller-provided dir must survive");
@@ -273,7 +371,7 @@ mod tests {
 
     #[test]
     fn raw_vs_encoded_accounting() {
-        let mut sm = SpillManager::new(None, None).unwrap();
+        let sm = SpillManager::new(None, None).unwrap();
         // A dense descending run compresses well under the delta codec.
         let data: Vec<u32> = (0..2000u32).rev().collect();
         let mut w = sm.create_run::<u32>(Codec::Delta).unwrap();
@@ -296,12 +394,38 @@ mod tests {
 
     #[test]
     fn peak_tracks_high_water_mark() {
-        let mut sm = SpillManager::new(None, None).unwrap();
-        let r1 = spill_run(&mut sm, &[1, 2, 3, 4]);
+        let sm = SpillManager::new(None, None).unwrap();
+        let r1 = spill_run(&sm, &[1, 2, 3, 4]);
         let peak_after_one = sm.peak_live_bytes();
         sm.consume(&r1).unwrap();
-        let _r2 = spill_run(&mut sm, &[1]);
+        let _r2 = spill_run(&sm, &[1]);
         assert!(sm.peak_live_bytes() >= peak_after_one);
         assert!(sm.live_bytes() < sm.peak_live_bytes());
+    }
+
+    #[test]
+    fn concurrent_registration_from_two_threads() {
+        // The overlapped schedule registers phase-1 and merged runs from
+        // different threads at once; counters must not lose updates and
+        // every run must stay tracked (drop cleans them all).
+        let sm = SpillManager::new(None, None).unwrap();
+        std::thread::scope(|s| {
+            for t in 0..4u32 {
+                let sm = &sm;
+                s.spawn(move || {
+                    for i in 0..16u32 {
+                        let mut w = sm.create_run(Codec::Raw).unwrap();
+                        w.write_block(&[t * 100 + i]).unwrap();
+                        let run = w.finish().unwrap();
+                        sm.register(&run).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(sm.runs_created(), 64);
+        assert_eq!(sm.live_bytes(), 64 * (12 + 4));
+        let dir = sm.dir().to_path_buf();
+        drop(sm);
+        assert!(!dir.exists(), "drop must clean every registered run");
     }
 }

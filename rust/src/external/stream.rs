@@ -23,13 +23,18 @@
 //! thread too — codec CPU never lands on the merge hot path.
 //!
 //! The write side mirrors the leaf: [`DoubleBufWriter`] hands encoded
-//! spill writes to a dedicated thread through a bounded channel, so the
+//! spill writes to a writer thread through a bounded channel, so the
 //! producer (the phase-1 coordinator, a phase-2 group merge) keeps
 //! sorting/merging while the previous block encodes and hits the disk.
+//! Writer threads come from a per-sort [`WriterPool`] of long-lived
+//! workers: a thousand-run workload reuses the same few threads instead
+//! of paying a thread spawn/teardown per run (the ROADMAP's
+//! writer-pooling follow-on), with a dedicated-thread fallback whenever
+//! every pool worker is busy.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, TryRecvError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, bail, Result};
@@ -170,49 +175,182 @@ impl<T: ExtItem> Drop for PrefetchStream<T> {
     }
 }
 
-/// Write-side double buffering: a dedicated thread owns the inner
+/// A boxed writer-loop job, runnable on a pool worker or a fallback
+/// dedicated thread.
+pub type PoolJob = Box<dyn FnOnce() + Send + 'static>;
+
+/// A small set of long-lived writer threads shared by every
+/// [`DoubleBufWriter`] of one sort. Each writer *occupies* a worker for
+/// its whole lifetime (the loop runs until the producer finishes), so
+/// the pool is sized to the sort's peak writer concurrency; when every
+/// worker is busy, [`try_execute`](WriterPool::try_execute) hands the
+/// job back and the caller spawns a dedicated thread — the pre-pool
+/// behaviour — instead of risking a wait.
+pub struct WriterPool {
+    /// `None` after teardown begins (drop closes the queue).
+    jobs: Mutex<Option<mpsc::Sender<PoolJob>>>,
+    /// Unoccupied workers; claimed at submit, released as a job ends.
+    available: Arc<AtomicUsize>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WriterPool {
+    /// Spawn a pool of `workers` threads (clamped to ≥ 1). Errors
+    /// (instead of aborting) when the OS refuses a thread.
+    pub fn new(workers: usize) -> Result<Self> {
+        let n = workers.max(1);
+        let (tx, rx) = mpsc::channel::<PoolJob>();
+        let rx = Arc::new(Mutex::new(rx));
+        let available = Arc::new(AtomicUsize::new(n));
+        let mut handles = Vec::with_capacity(n);
+        for _ in 0..n {
+            let rx = Arc::clone(&rx);
+            let handle = std::thread::Builder::new()
+                .name("flims-writer-pool".into())
+                .spawn(move || loop {
+                    let job = rx.lock().unwrap().recv();
+                    let Ok(job) = job else { break };
+                    job();
+                })
+                .map_err(|e| anyhow!("spawning writer-pool thread: {e}"))?;
+            handles.push(handle);
+        }
+        Ok(WriterPool { jobs: Mutex::new(Some(tx)), available, workers: handles })
+    }
+
+    /// Number of pool workers.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run `job` on an idle pool worker, or hand it back when every
+    /// worker is occupied (the caller then runs it on a dedicated
+    /// thread). Never blocks, so a caller that outnumbers the pool
+    /// cannot deadlock it.
+    pub fn try_execute(&self, job: PoolJob) -> std::result::Result<(), PoolJob> {
+        let claimed = self
+            .available
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| n.checked_sub(1));
+        if claimed.is_err() {
+            return Err(job);
+        }
+        let guard = self.jobs.lock().unwrap();
+        let Some(tx) = guard.as_ref() else {
+            // Teardown already began: release the claim, hand the job back.
+            self.available.fetch_add(1, Ordering::AcqRel);
+            return Err(job);
+        };
+        let avail = Arc::clone(&self.available);
+        let wrapped: PoolJob = Box::new(move || {
+            job();
+            avail.fetch_add(1, Ordering::AcqRel);
+        });
+        match tx.send(wrapped) {
+            Ok(()) => Ok(()),
+            // Unreachable while `tx` lives (workers only exit once the
+            // queue closes), but stay safe: the returned wrapped job
+            // releases the claim when the caller runs it on a fallback
+            // thread, so the count still balances.
+            Err(e) => Err(e.0),
+        }
+    }
+}
+
+impl Drop for WriterPool {
+    fn drop(&mut self) {
+        // Closing the queue releases idle workers; busy ones exit after
+        // their current writer finishes (every writer is finished or
+        // dropped before the pool goes away in normal flow).
+        *self.jobs.lock().unwrap() = None;
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Write-side double buffering: a writer thread owns the inner
 /// [`RecordSink`] and drains a bounded channel of blocks, so encode +
 /// disk write overlap with the producer's next chunk of work instead of
 /// blocking it (the mirror image of [`PrefetchStream`]). Blocks arrive
 /// in send order from a single producer, so the bytes on disk are
-/// identical to the synchronous path — determinism is untouched.
+/// identical to the synchronous path — determinism is untouched. The
+/// thread is borrowed from a [`WriterPool`] when one is supplied and has
+/// an idle worker; otherwise it is a dedicated spawn.
 pub struct DoubleBufWriter<T, W> {
     tx: Option<mpsc::SyncSender<Vec<T>>>,
     /// Drained buffers coming back from the writer thread, so the
     /// steady state recycles `depth + 1` allocations instead of
     /// allocating per block.
     recycle: mpsc::Receiver<Vec<T>>,
-    handle: Option<JoinHandle<(W, Result<()>)>>,
+    /// Resolves once the writer loop ends, handing the inner sink (and
+    /// its first error) back — works identically for pooled and
+    /// dedicated threads.
+    done: Option<mpsc::Receiver<(W, Result<()>)>>,
+    /// Present only on the dedicated-thread fallback; joined after
+    /// `done` resolves so the thread is reaped.
+    handle: Option<JoinHandle<()>>,
+}
+
+/// The writer-thread body: drain blocks into `inner` until the channel
+/// closes (or the first write error), recycling drained buffers.
+fn writer_loop<T: ExtItem, W: RecordSink<T>>(
+    mut inner: W,
+    rx: mpsc::Receiver<Vec<T>>,
+    recycle_tx: mpsc::Sender<Vec<T>>,
+) -> (W, Result<()>) {
+    let mut res = Ok(());
+    while let Ok(mut buf) = rx.recv() {
+        if let Err(e) = RecordSink::write_block(&mut inner, &buf) {
+            // Breaking drops the receiver; the producer's next send
+            // fails and surfaces this error.
+            res = Err(e);
+            break;
+        }
+        // Hand the drained buffer back for reuse; the producer may be
+        // gone already (send-and-finish).
+        buf.clear();
+        let _ = recycle_tx.send(buf);
+    }
+    (inner, res)
 }
 
 impl<T: ExtItem, W: RecordSink<T> + Send + 'static> DoubleBufWriter<T, W> {
+    /// [`spawn_with`](DoubleBufWriter::spawn_with) on a dedicated
+    /// thread (no pool).
+    pub fn spawn(inner: W, depth: usize) -> Result<Self> {
+        Self::spawn_with(inner, depth, None)
+    }
+
     /// Move `inner` onto a writer thread buffering up to `depth` blocks
     /// (clamped to ≥ 1; `1` is classic double buffering — one block in
-    /// flight while the producer fills the next). Errors (instead of
-    /// aborting) when the OS refuses another thread.
-    pub fn spawn(mut inner: W, depth: usize) -> Result<Self> {
+    /// flight while the producer fills the next). The thread comes from
+    /// `pool` when given and idle, else a dedicated spawn. Errors
+    /// (instead of aborting) when the OS refuses another thread.
+    pub fn spawn_with(inner: W, depth: usize, pool: Option<&WriterPool>) -> Result<Self> {
         let (tx, rx) = mpsc::sync_channel::<Vec<T>>(depth.max(1));
         let (recycle_tx, recycle) = mpsc::channel::<Vec<T>>();
+        let (done_tx, done) = mpsc::channel::<(W, Result<()>)>();
+        let mut job: PoolJob = Box::new(move || {
+            let _ = done_tx.send(writer_loop(inner, rx, recycle_tx));
+        });
+        if let Some(pool) = pool {
+            match pool.try_execute(job) {
+                Ok(()) => {
+                    return Ok(DoubleBufWriter {
+                        tx: Some(tx),
+                        recycle,
+                        done: Some(done),
+                        handle: None,
+                    })
+                }
+                Err(back) => job = back, // pool saturated: dedicated fallback
+            }
+        }
         let handle = std::thread::Builder::new()
             .name("flims-spill-write".into())
-            .spawn(move || {
-                let mut res = Ok(());
-                while let Ok(mut buf) = rx.recv() {
-                    if let Err(e) = RecordSink::write_block(&mut inner, &buf) {
-                        // Breaking drops the receiver; the producer's
-                        // next send fails and surfaces this error.
-                        res = Err(e);
-                        break;
-                    }
-                    // Hand the drained buffer back for reuse; the
-                    // producer may be gone already (send-and-finish).
-                    buf.clear();
-                    let _ = recycle_tx.send(buf);
-                }
-                (inner, res)
-            })
+            .spawn(job)
             .map_err(|e| anyhow!("spawning spill writer thread: {e}"))?;
-        Ok(DoubleBufWriter { tx: Some(tx), recycle, handle: Some(handle) })
+        Ok(DoubleBufWriter { tx: Some(tx), recycle, done: Some(done), handle: Some(handle) })
     }
 
     /// Queue an owned block (no copy). Blocks only when `depth` blocks
@@ -253,14 +391,16 @@ impl<T: ExtItem, W: RecordSink<T> + Send + 'static> DoubleBufWriter<T, W> {
     }
 
     fn shut_down(&mut self) -> Result<W> {
-        self.tx = None; // closing the channel lets the thread drain + exit
-        let handle = self
-            .handle
+        self.tx = None; // closing the channel lets the writer drain + exit
+        let done = self
+            .done
             .take()
             .ok_or_else(|| anyhow!("spill writer already finished"))?;
-        let (inner, res) = handle
-            .join()
-            .map_err(|_| anyhow!("spill writer thread panicked"))?;
+        let got = done.recv().map_err(|_| anyhow!("spill writer thread panicked"));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join(); // reap the dedicated fallback thread
+        }
+        let (inner, res) = got?;
         res?;
         Ok(inner)
     }
@@ -268,10 +408,14 @@ impl<T: ExtItem, W: RecordSink<T> + Send + 'static> DoubleBufWriter<T, W> {
 
 impl<T, W> Drop for DoubleBufWriter<T, W> {
     fn drop(&mut self) {
-        // Error-path cleanup: stop the thread and reap it so no writes
-        // race the caller's file cleanup. join cannot deadlock — the
-        // channel is already closed.
+        // Error-path cleanup: stop the writer and wait it out so no
+        // writes race the caller's file cleanup. The wait cannot
+        // deadlock — the block channel is already closed, so the loop
+        // (pooled or dedicated) drains and reports promptly.
         self.tx = None;
+        if let Some(done) = self.done.take() {
+            let _ = done.recv();
+        }
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -745,5 +889,87 @@ mod tests {
             None => format!("{:#}", dbw.finish().map(|_| ()).unwrap_err()),
         };
         assert!(msg.contains("simulated disk full"), "{msg}");
+    }
+
+    #[test]
+    fn pooled_writer_matches_dedicated_bytes() {
+        use super::super::codec::Codec;
+        use super::super::format::RunWriter;
+        let dir = std::env::temp_dir().join(format!("flims-pool-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = Rng::new(88);
+        let mut data = gen_u32(&mut rng, 20_000, Distribution::Uniform);
+        data.sort_unstable_by(|a, b| b.cmp(a));
+
+        let pool = WriterPool::new(2);
+        let pool = pool.unwrap();
+        // Many sequential runs through the same 2-worker pool: the whole
+        // point of pooling — no per-run thread spawn — and the bytes
+        // must match the dedicated-thread writer exactly.
+        for (i, codec) in [Codec::Raw, Codec::Delta, Codec::Raw, Codec::Delta]
+            .into_iter()
+            .enumerate()
+        {
+            let ded_path = dir.join(format!("ded-{i}.flr"));
+            let mut ded = DoubleBufWriter::spawn(
+                RunWriter::<u32>::create_with(&ded_path, codec).unwrap(),
+                1,
+            )
+            .unwrap();
+            let pooled_path = dir.join(format!("pooled-{i}.flr"));
+            let mut pooled = DoubleBufWriter::spawn_with(
+                RunWriter::<u32>::create_with(&pooled_path, codec).unwrap(),
+                1,
+                Some(&pool),
+            )
+            .unwrap();
+            for chunk in data.chunks(997) {
+                ded.write_block(chunk).unwrap();
+                pooled.write_block(chunk).unwrap();
+            }
+            let d = ded.finish().unwrap().finish().unwrap();
+            let p = pooled.finish().unwrap().finish().unwrap();
+            assert_eq!(d.bytes, p.bytes, "run {i}");
+            assert_eq!(
+                std::fs::read(&ded_path).unwrap(),
+                std::fs::read(&pooled_path).unwrap(),
+                "pooled bytes must be identical (run {i})"
+            );
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn saturated_pool_falls_back_to_dedicated_threads() {
+        use super::super::format::RunWriter;
+        let dir = std::env::temp_dir().join(format!("flims-poolsat-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let pool = WriterPool::new(1);
+        let pool = pool.unwrap();
+        assert_eq!(pool.workers(), 1);
+        // Three *concurrently live* writers against a 1-worker pool: the
+        // extra two ride the dedicated-thread fallback, and all three
+        // land their data.
+        let mut writers = Vec::new();
+        for i in 0..3 {
+            let path = dir.join(format!("w{i}.flr"));
+            let inner = RunWriter::<u32>::create(&path).unwrap();
+            writers.push((path, DoubleBufWriter::spawn_with(inner, 1, Some(&pool)).unwrap()));
+        }
+        for (i, (_, w)) in writers.iter_mut().enumerate() {
+            w.write_block(&[i as u32, 100 + i as u32]).unwrap();
+        }
+        for (i, (path, w)) in writers.into_iter().enumerate() {
+            let run = w.finish().unwrap().finish().unwrap();
+            assert_eq!(run.elems, 2, "writer {i}");
+            assert!(path.exists());
+        }
+        // The pool worker is idle again: a fresh job goes through it.
+        let ran = Arc::new(AtomicU64::new(0));
+        let flag = Arc::clone(&ran);
+        assert!(pool.try_execute(Box::new(move || { flag.fetch_add(1, Ordering::SeqCst); })).is_ok());
+        drop(pool); // drop joins workers, so the job has run
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

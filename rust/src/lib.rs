@@ -54,11 +54,15 @@
 //!   trees of FLiMS 2-way mergers — the stable §4.2 variant for payload
 //!   records, the fast untagged lanes for plain keys (multi-pass above
 //!   the fan-in, independent group merges of a pass running
-//!   concurrently). Both spill boundaries flow through the run-codec
-//!   layer ([`external::codec`]): raw `FLR1` or delta+varint `FLR2`
-//!   runs, encoded on double-buffered writer threads and decoded on the
-//!   prefetch threads, so codec CPU and disk I/O overlap the merge. Key
-//!   ties keep input order end to end (§6).
+//!   concurrently). With `[external] overlap = on` the two phases run
+//!   as one pipeline (TopSort-style): phase 1 announces each sealed run
+//!   over a bounded channel and fan-in groups start merging while later
+//!   runs still spill — byte-identical output, overlapping wall-clock.
+//!   Both spill boundaries flow through the run-codec layer
+//!   ([`external::codec`]): raw `FLR1` or delta+varint `FLR2` runs,
+//!   encoded on pooled double-buffered writer threads and decoded on
+//!   the prefetch threads, so codec CPU and disk I/O overlap the merge.
+//!   Key ties keep input order end to end (§6).
 //! * [`coordinator`] — sorting-as-a-service: router + dynamic batcher.
 //! * [`runtime`] — PJRT client wrapper executing `artifacts/*.hlo.txt`
 //!   (a stub unless built with the `pjrt` feature).

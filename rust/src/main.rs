@@ -6,8 +6,8 @@
 //! flims sort     --n 1000000 [--dist uniform|zipf|dup] [--backend native|parallel|pjrt|external] [--w 16] [--chunk 128]
 //! flims merge    --n 65536 [--w 16]
 //! flims sortfile --input data.u32 [--output out.u32] [--dtype u32|u64|kv|kv64|f32]
-//!                [--codec raw|delta] [--budget-mb 64] [--fan-in 8] [--threads T]
-//!                [--prefetch B] [--gen N]
+//!                [--codec raw|delta] [--overlap on|off] [--budget-mb 64]
+//!                [--fan-in 8] [--threads T] [--prefetch B] [--gen N]
 //! flims trace                              # the paper's Table 1 example
 //! flims simulate --design flims|flimsj|wms|mms|vms|basic --w 8 [--skew] [--dup]
 //! flims report   table2|table3|fig13 [--data-bits 64]
@@ -145,8 +145,8 @@ fn print_help() {
                      [--w W] [--chunk C] [--threads T] [--config FILE]\n\
            merge     --n N [--w W]\n\
            sortfile  --input F [--output F] [--dtype u32|u64|kv|kv64|f32]\n\
-                     [--codec raw|delta] [--budget-mb M] [--fan-in K]\n\
-                     [--threads T] [--prefetch B]\n\
+                     [--codec raw|delta] [--overlap on|off] [--budget-mb M]\n\
+                     [--fan-in K] [--threads T] [--prefetch B]\n\
                      [--gen N [--dist D] [--seed S]]   (raw LE record datasets)\n\
            trace     (replays the paper's Table 1 example, w=4)\n\
            simulate  --design flims|flimsj|wms|mms|vms|basic --w W [--skew] [--dup] [--n N]\n\
@@ -314,6 +314,9 @@ fn cmd_sortfile(f: &HashMap<String, String>) -> Result<(), String> {
     if let Some(c) = f.get("codec") {
         ext.codec = Codec::parse(c)?;
     }
+    if let Some(o) = f.get("overlap") {
+        ext.overlap = external::parse_overlap(o)?;
+    }
     ext.validate()?;
     let input = PathBuf::from(
         f.get("input").ok_or_else(|| "sortfile: --input <path> required".to_string())?,
@@ -413,11 +416,16 @@ fn sortfile_typed<T: GenRecord>(
         stats.codec_decode_us as f64 / 1000.0,
     );
     println!(
-        "  phase1 {:.1} ms | phase2 {:.1} ms | prefetch {} hits / {} misses",
+        "  schedule {} | phase1 {:.1} ms | phase2 {:.1} ms | wall {:.1} ms | overlapped {:.1} ms",
+        if ext.overlap { "pipelined" } else { "serial" },
         stats.phase1_us as f64 / 1000.0,
         stats.phase2_us as f64 / 1000.0,
-        stats.prefetch_hits,
-        stats.prefetch_misses,
+        stats.wall_us as f64 / 1000.0,
+        stats.overlap_us as f64 / 1000.0,
+    );
+    println!(
+        "  prefetch {} hits / {} misses",
+        stats.prefetch_hits, stats.prefetch_misses,
     );
     Ok(())
 }

@@ -131,6 +131,12 @@ pub struct ServiceMetrics {
     pub phase1_us: Counter,
     /// Cumulative phase-2 (k-way merge) wall-clock, microseconds.
     pub phase2_us: Counter,
+    /// Cumulative end-to-end external-sort wall-clock, microseconds
+    /// (under the overlapped schedule, less than phase1 + phase2).
+    pub wall_us: Counter,
+    /// Cumulative time the two phases ran concurrently, microseconds
+    /// (0 for every serial-schedule sort).
+    pub overlap_us: Counter,
     /// Leaf blocks the prefetch threads had ready before the merge
     /// asked (disk read fully overlapped with merging).
     pub prefetch_hits: Counter,
@@ -145,7 +151,8 @@ impl ServiceMetrics {
             "requests={} batches={} elements={} errors={} latency[{}] \
              external[sorts={} runs={} spilled_bytes={} spilled_raw={} \
              codec_enc_us={} codec_dec_us={} passes={} \
-             phase1_us={} phase2_us={} prefetch_hits={} prefetch_misses={}]",
+             phase1_us={} phase2_us={} wall_us={} overlap_us={} \
+             prefetch_hits={} prefetch_misses={}]",
             self.requests.get(),
             self.batches.get(),
             self.elements_sorted.get(),
@@ -160,6 +167,8 @@ impl ServiceMetrics {
             self.merge_passes.get(),
             self.phase1_us.get(),
             self.phase2_us.get(),
+            self.wall_us.get(),
+            self.overlap_us.get(),
             self.prefetch_hits.get(),
             self.prefetch_misses.get(),
         )
@@ -216,12 +225,14 @@ mod tests {
         m.merge_passes.add(2);
         m.phase1_us.add(1500);
         m.phase2_us.add(2500);
+        m.wall_us.add(3000);
+        m.overlap_us.add(1000);
         m.prefetch_hits.add(40);
         m.prefetch_misses.add(2);
         let s = m.report();
         assert!(s.contains("external[sorts=1 runs=7 spilled_bytes=1024 spilled_raw=4096"), "{s}");
         assert!(s.contains("codec_enc_us=300 codec_dec_us=200 passes=2"), "{s}");
-        assert!(s.contains("phase1_us=1500 phase2_us=2500"), "{s}");
+        assert!(s.contains("phase1_us=1500 phase2_us=2500 wall_us=3000 overlap_us=1000"), "{s}");
         assert!(s.contains("prefetch_hits=40 prefetch_misses=2]"), "{s}");
     }
 
