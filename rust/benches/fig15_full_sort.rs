@@ -51,7 +51,7 @@ fn main() {
             let mut v = data.clone();
             par_sort_desc(
                 &mut v,
-                ParSortConfig { base: cfg, threads: 0, seq_cutoff: 1 << 15 },
+                ParSortConfig { base: cfg, threads: 0, seq_cutoff: 1 << 15, ..Default::default() },
             );
             black_box(v.len());
         });

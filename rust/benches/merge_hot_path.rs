@@ -7,13 +7,48 @@
 
 use std::time::Duration;
 
-use flims::data::{gen_u32, Distribution};
+use flims::data::{gen_u32, gen_u64, Distribution};
 use flims::flims::butterfly::butterfly_desc_w;
 use flims::flims::chunk_sort::{sort_chunks_columnar, sort_chunks_desc};
 use flims::flims::lanes::{merge_desc_into, merge_desc_w, merge_flimsj_w_slice};
+use flims::flims::simd::{merge_desc_kernel_slice, MergeKernel, SimdMergeable};
 use flims::hw::{run_stream, FlimsCycle, SimConfig};
 use flims::util::bench::{bench, black_box, fmt_ns};
 use flims::util::rng::Rng;
+
+/// One scalar-vs-simd cell of the kernel sweep: merge the pair on both
+/// tiers, print per-kernel throughput, and fail loudly if the explicit
+/// kernel is slower than scalar beyond noise (×1.05) — a kernel
+/// regression should break the bench, not hide in the table. (On CPUs
+/// where the type has no SIMD kernel both runs take the scalar tier
+/// and trivially tie, so this never flakes on exotic runners.)
+fn kernel_cell<T: SimdMergeable>(label: &str, a: &[T], b: &[T], w: usize) {
+    let budget = Duration::from_millis(400);
+    let total = a.len() + b.len();
+    let mut dst = vec![T::SENTINEL; total];
+    let scalar = bench("scalar", budget, || {
+        merge_desc_kernel_slice(black_box(a), black_box(b), w, MergeKernel::Scalar, &mut dst);
+        black_box(dst[0].key());
+    });
+    let simd = bench("simd", budget, || {
+        merge_desc_kernel_slice(black_box(a), black_box(b), w, MergeKernel::Simd, &mut dst);
+        black_box(dst[0].key());
+    });
+    println!(
+        "{label:<24} W={w:<3} scalar {:>8.1} M elem/s   simd {:>8.1} M elem/s   ({:.2}x, {})",
+        scalar.mitems_per_sec(total),
+        simd.mitems_per_sec(total),
+        scalar.median_ns / simd.median_ns,
+        MergeKernel::Simd.resolved_name(),
+    );
+    assert!(
+        simd.median_ns <= scalar.median_ns * 1.05,
+        "{label} W={w}: simd {:.0} ns/iter vs scalar {:.0} ns/iter — \
+         the explicit kernel regressed past the 5% noise allowance",
+        simd.median_ns,
+        scalar.median_ns,
+    );
+}
 
 fn main() {
     let n = 1usize << 20;
@@ -99,6 +134,27 @@ fn main() {
         r.mitems_per_sec(1 << 18),
         fmt_ns(r.median_ns)
     );
+
+    // Scalar-vs-SIMD kernel sweep: u32/u64 × uniform/zipf × W ∈ {4,8,16}.
+    println!("\n== kernel sweep: scalar vs explicit SIMD (2 x 2^19) ==\n");
+    let n = 1usize << 19;
+    for (dist, dist_name) in [
+        (Distribution::Uniform, "uniform"),
+        (Distribution::Zipf { s_x100: 120, n_ranks: 1 << 12 }, "zipf"),
+    ] {
+        let mut a32 = gen_u32(&mut rng, n, dist);
+        let mut b32 = gen_u32(&mut rng, n, dist);
+        a32.sort_unstable_by(|x, y| y.cmp(x));
+        b32.sort_unstable_by(|x, y| y.cmp(x));
+        let mut a64 = gen_u64(&mut rng, n, dist);
+        let mut b64 = gen_u64(&mut rng, n, dist);
+        a64.sort_unstable_by(|x, y| y.cmp(x));
+        b64.sort_unstable_by(|x, y| y.cmp(x));
+        for w in [4usize, 8, 16] {
+            kernel_cell(&format!("u32/{dist_name}"), &a32, &b32, w);
+            kernel_cell(&format!("u64/{dist_name}"), &a64, &b64, w);
+        }
+    }
 
     // Cycle-sim throughput (perf target from DESIGN.md §7).
     let (sa, sb) = (&a[..1 << 16], &b[..1 << 16]);

@@ -7,6 +7,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::external::{Codec, Dtype, ExternalConfig};
+use crate::flims::simd::MergeKernel;
 
 /// Parsed configuration: section → key → raw value string.
 #[derive(Clone, Debug, Default)]
@@ -93,6 +94,12 @@ pub struct AppConfig {
     pub chunk: usize,
     /// worker threads (0 = auto)
     pub threads: usize,
+    /// merge-kernel tier (`[core] kernel = auto|scalar|simd`) for every
+    /// lane merge — the in-memory pipelines, the service's merge
+    /// commands, and (substituted into [`AppConfig::external_config`])
+    /// the external sorter. Defaults from `FLIMS_KERNEL` (unset =
+    /// `auto`).
+    pub kernel: MergeKernel,
     /// AOT artifact directory for the PJRT runtime
     pub artifacts_dir: String,
     /// hardware-sim FIFO depth per bank
@@ -115,6 +122,7 @@ impl Default for AppConfig {
             w: 16,
             chunk: 128,
             threads: 0,
+            kernel: MergeKernel::env_default(),
             artifacts_dir: "artifacts".into(),
             fifo_depth: 2,
             bind: "127.0.0.1:7171".into(),
@@ -136,6 +144,9 @@ impl AppConfig {
         }
         if let Some(v) = raw.get_usize("engine", "threads")? {
             self.threads = v;
+        }
+        if let Some(v) = raw.get("core", "kernel") {
+            self.kernel = MergeKernel::parse(v).map_err(|e| format!("core.kernel: {e}"))?;
         }
         if let Some(v) = raw.get("runtime", "artifacts_dir") {
             self.artifacts_dir = v.to_string();
@@ -201,10 +212,15 @@ impl AppConfig {
     }
 
     /// The external-sort configuration with the engine's `w`/`chunk`
-    /// substituted in (the `[external]` section tunes only the
-    /// out-of-core knobs).
+    /// and the `[core]` merge kernel substituted in (the `[external]`
+    /// section tunes only the out-of-core knobs).
     pub fn external_config(&self) -> ExternalConfig {
-        ExternalConfig { w: self.w, chunk: self.chunk, ..self.external.clone() }
+        ExternalConfig {
+            w: self.w,
+            chunk: self.chunk,
+            kernel: self.kernel,
+            ..self.external.clone()
+        }
     }
 }
 
@@ -320,6 +336,27 @@ batch_max = 16
         let mut cfg = AppConfig::default();
         cfg.apply(&raw).unwrap();
         assert!(!cfg.external.overlap);
+    }
+
+    #[test]
+    fn core_kernel_applies_and_flows_into_external() {
+        let raw = RawConfig::parse("[core]\nkernel = \"scalar\"\n").unwrap();
+        let mut cfg = AppConfig::default();
+        cfg.apply(&raw).unwrap();
+        assert_eq!(cfg.kernel, MergeKernel::Scalar);
+        assert_eq!(cfg.external_config().kernel, MergeKernel::Scalar);
+
+        let raw = RawConfig::parse("[core]\nkernel = simd\n").unwrap();
+        let mut cfg = AppConfig::default();
+        cfg.apply(&raw).unwrap();
+        assert_eq!(cfg.kernel, MergeKernel::Simd);
+
+        // ExternalConfig-style validation: a bad value is a loud error
+        // naming the key, before anything runs.
+        let raw = RawConfig::parse("[core]\nkernel = \"gpu\"\n").unwrap();
+        let mut cfg = AppConfig::default();
+        let err = cfg.apply(&raw).unwrap_err();
+        assert!(err.contains("core.kernel: unknown kernel 'gpu'"), "{err}");
     }
 
     #[test]

@@ -16,8 +16,8 @@ use anyhow::{anyhow, Result};
 use crate::config::AppConfig;
 use crate::external::{self, Codec, Dtype, SpillStats};
 use crate::flims::parallel::{par_sort_desc, ParSortConfig};
-use crate::flims::sort::{sort_desc, SortConfig};
-use crate::flims::lanes::merge_desc_fast;
+use crate::flims::simd::{merge_desc_kernel, MergeKernel};
+use crate::flims::sort::{sort_desc_with, SortConfig};
 use crate::key::F32Key;
 use crate::metrics::ServiceMetrics;
 use crate::runtime::RuntimeHandle;
@@ -76,6 +76,12 @@ impl Router {
         SortConfig { w: self.cfg.w, chunk: self.cfg.chunk }
     }
 
+    /// What the configured merge kernel resolves to on this CPU —
+    /// surfaced in the `stats` protocol line and the CLI report.
+    pub fn kernel_name(&self) -> &'static str {
+        self.cfg.kernel.resolved_name()
+    }
+
     /// Sort u32 keys descending on the requested backend.
     pub fn sort_u32(&self, mut data: Vec<u32>, backend: Backend) -> Result<Vec<u32>> {
         self.metrics.requests.inc();
@@ -83,7 +89,7 @@ impl Router {
         let t = std::time::Instant::now();
         let out = match backend {
             Backend::Native => {
-                sort_desc(&mut data, self.sort_cfg());
+                sort_desc_with(&mut data, self.sort_cfg(), self.cfg.kernel);
                 data
             }
             Backend::NativeParallel => {
@@ -92,6 +98,7 @@ impl Router {
                     ParSortConfig {
                         base: self.sort_cfg(),
                         threads: self.cfg.threads,
+                        kernel: self.cfg.kernel,
                         ..Default::default()
                     },
                 );
@@ -114,16 +121,19 @@ impl Router {
 
     /// Sort the raw dataset at `input` with the external pipeline,
     /// writing `<input>.sorted` (descending). `dtype` selects the record
-    /// type, `codec` the spill-run codec, and `overlap` the schedule
-    /// (pipelined vs serial — same output bytes; `None` = the
-    /// `[external]` config defaults). Memory stays within the
-    /// configured budget however large the file is.
+    /// type, `codec` the spill-run codec, `overlap` the schedule
+    /// (pipelined vs serial — same output bytes), and `kernel` the
+    /// merge-kernel tier (scalar vs explicit SIMD — also same output
+    /// bytes; `None` = the `[external]`/`[core]` config defaults).
+    /// Memory stays within the configured budget however large the
+    /// file is.
     pub fn sort_file_external(
         &self,
         input: &Path,
         dtype: Option<Dtype>,
         codec: Option<Codec>,
         overlap: Option<bool>,
+        kernel: Option<MergeKernel>,
     ) -> Result<(PathBuf, SpillStats)> {
         self.metrics.requests.inc();
         let dtype = dtype.unwrap_or(self.cfg.external.dtype);
@@ -137,6 +147,9 @@ impl Router {
         }
         if let Some(overlap) = overlap {
             ext.overlap = overlap;
+        }
+        if let Some(kernel) = kernel {
+            ext.kernel = kernel;
         }
         let stats = external::sort_file_dtype(input, &output, &ext, dtype)?;
         self.metrics.elements_sorted.add(stats.elements);
@@ -175,11 +188,12 @@ impl Router {
                         ParSortConfig {
                             base: self.sort_cfg(),
                             threads: self.cfg.threads,
+                            kernel: self.cfg.kernel,
                             ..Default::default()
                         },
                     );
                 } else {
-                    sort_desc(&mut keys, self.sort_cfg());
+                    sort_desc_with(&mut keys, self.sort_cfg(), self.cfg.kernel);
                 }
                 keys.into_iter().map(|k| k.to_f32()).collect()
             }
@@ -203,7 +217,7 @@ impl Router {
         self.metrics.requests.inc();
         self.metrics.elements_sorted.add((a.len() + b.len()) as u64);
         let mut out = Vec::with_capacity(a.len() + b.len());
-        merge_desc_fast(a, b, self.cfg.w, &mut out);
+        merge_desc_kernel(a, b, self.cfg.w, self.cfg.kernel, &mut out);
         out
     }
 
@@ -233,7 +247,7 @@ impl Router {
                 let ka: Vec<F32Key> = a.iter().map(|&x| F32Key::from_f32(x)).collect();
                 let kb: Vec<F32Key> = b.iter().map(|&x| F32Key::from_f32(x)).collect();
                 let mut out = Vec::with_capacity(ka.len() + kb.len());
-                merge_desc_fast(&ka, &kb, self.cfg.w, &mut out);
+                merge_desc_kernel(&ka, &kb, self.cfg.w, self.cfg.kernel, &mut out);
                 Ok(out.into_iter().map(|k| k.to_f32()).collect())
             }
         }
@@ -330,7 +344,7 @@ mod tests {
         let mut cfg = AppConfig::default();
         cfg.external.mem_budget_bytes = 4096;
         let r = Router::new(cfg, None);
-        let (out_path, stats) = r.sort_file_external(&input, None, None, None).unwrap();
+        let (out_path, stats) = r.sort_file_external(&input, None, None, None, None).unwrap();
         assert_eq!(out_path, dir.join("data.u32.sorted"));
         assert_eq!(stats.elements, 5000);
 
@@ -353,7 +367,7 @@ mod tests {
         cfg.external.mem_budget_bytes = 4096;
         let r = Router::new(cfg, None);
         let (out_path, stats) =
-            r.sort_file_external(&input, None, Some(Codec::Delta), None).unwrap();
+            r.sort_file_external(&input, None, Some(Codec::Delta), None, None).unwrap();
         assert_eq!(stats.elements, 20_000);
         assert!(
             stats.bytes_spilled < stats.bytes_spilled_raw,
@@ -386,7 +400,7 @@ mod tests {
         cfg.external.mem_budget_bytes = 8192; // 1024-record Kv runs
         let r = Router::new(cfg, None);
         let (out_path, stats) = r
-            .sort_file_external(&input, Some(crate::external::Dtype::Kv), None, None)
+            .sort_file_external(&input, Some(crate::external::Dtype::Kv), None, None, None)
             .unwrap();
         assert_eq!(stats.elements, 4000);
 
@@ -414,7 +428,7 @@ mod tests {
             let input = dir.join(format!("data-{overlap}.u32"));
             crate::external::format::write_raw(&input, &v).unwrap();
             let (out_path, stats) =
-                r.sort_file_external(&input, None, None, Some(overlap)).unwrap();
+                r.sort_file_external(&input, None, None, Some(overlap), None).unwrap();
             assert_eq!(stats.elements, 20_000);
             assert!(stats.merge_passes >= 2, "multi-pass workload expected");
             if !overlap {
@@ -426,6 +440,45 @@ mod tests {
         // Both runs fed the cumulative wall/overlap counters.
         assert!(r.metrics.wall_us.get() > 0);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sort_file_external_kernel_override_matches() {
+        // The per-request kernel override must not change the output
+        // bytes — only which tier computed them.
+        let dir =
+            std::env::temp_dir().join(format!("flims-router-krn-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = Rng::new(307);
+        let v = gen_u32(&mut rng, 20_000, Distribution::Uniform);
+
+        let mut cfg = AppConfig::default();
+        cfg.external.mem_budget_bytes = 4096;
+        let r = Router::new(cfg, None);
+        let mut outputs = Vec::new();
+        for kernel in [MergeKernel::Scalar, MergeKernel::Simd] {
+            let input = dir.join(format!("data-{}.u32", kernel.name()));
+            crate::external::format::write_raw(&input, &v).unwrap();
+            let (out_path, stats) =
+                r.sort_file_external(&input, None, None, None, Some(kernel)).unwrap();
+            assert_eq!(stats.elements, 20_000);
+            outputs.push(std::fs::read(&out_path).unwrap());
+        }
+        assert_eq!(outputs[0], outputs[1], "kernel must not change output bytes");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn kernel_name_is_resolved() {
+        let r = router();
+        let name = r.kernel_name();
+        assert!(
+            ["scalar", "simd-sse2", "simd-avx2", "simd-neon"].contains(&name),
+            "{name}"
+        );
+        let mut cfg = AppConfig::default();
+        cfg.kernel = MergeKernel::Scalar;
+        assert_eq!(Router::new(cfg, None).kernel_name(), "scalar");
     }
 
     #[test]

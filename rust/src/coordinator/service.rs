@@ -9,21 +9,25 @@
 //! sortf <backend> <f1> <f2> …   →  ok <sorted descending>   (f32)
 //! batch <f1> <f2> …             →  ok <sorted>  (goes through the batcher)
 //! merge <a...> | <b...>         →  ok <merged>  (desc-sorted u32 inputs)
-//! sortfile external <path> [dtype=<d>] [codec=<c>] [overlap=<o>]
+//! sortfile external <path> [dtype=<d>] [codec=<c>] [overlap=<o>] [kernel=<k>]
 //!                               →  ok <n> <output-path>  (raw record file,
 //!                                   sorted descending to <path>.sorted;
 //!                                   d = u32|u64|kv|kv64|f32,
-//!                                   c = raw|delta and o = on|off (the
+//!                                   c = raw|delta, o = on|off (the
 //!                                   pipelined vs serial schedule — same
-//!                                   output bytes), defaults from the
-//!                                   `[external]` config section; only
-//!                                   trailing `dtype=`/`codec=`/`overlap=`-
-//!                                   prefixed tokens are treated as
-//!                                   options, so paths containing spaces
-//!                                   keep working. A bad value is a
-//!                                   one-line `err` naming the offending
+//!                                   output bytes) and k =
+//!                                   auto|scalar|simd (the merge-kernel
+//!                                   tier — also same output bytes),
+//!                                   defaults from the `[external]` /
+//!                                   `[core]` config sections; only
+//!                                   trailing `dtype=`/`codec=`/
+//!                                   `overlap=`/`kernel=`-prefixed
+//!                                   tokens are treated as options, so
+//!                                   paths containing spaces keep
+//!                                   working. A bad value is a one-line
+//!                                   `err` naming the offending
 //!                                   argument)
-//! stats                         →  ok <metrics summary>
+//! stats                         →  ok <metrics summary> kernel=<active>
 //! quit                          →  (closes the connection)
 //! ```
 //!
@@ -135,8 +139,8 @@ impl Service {
                 Ok(format!("ok {}", join(&out)))
             }
             "sortfile" => {
-                let usage =
-                    "usage: sortfile external <path> [dtype=<d>] [codec=<c>] [overlap=<o>]";
+                let usage = "usage: sortfile external <path> [dtype=<d>] [codec=<c>] \
+                             [overlap=<o>] [kernel=<k>]";
                 let (backend, rest) =
                     rest.split_once(' ').ok_or_else(|| anyhow!("{usage}"))?;
                 let backend = Backend::parse(backend)?;
@@ -144,13 +148,15 @@ impl Service {
                     bail!("sortfile requires the 'external' backend");
                 }
                 // Only explicit trailing `dtype=` / `codec=` /
-                // `overlap=` tokens are options — a bad value is a loud
-                // error *naming the argument*, and paths containing
-                // spaces are untouched (PR 1 grammar, extended).
+                // `overlap=` / `kernel=` tokens are options — a bad
+                // value is a loud error *naming the argument*, and
+                // paths containing spaces are untouched (PR 1 grammar,
+                // extended).
                 let mut path = rest.trim();
                 let mut dtype = None;
                 let mut codec = None;
                 let mut overlap = None;
+                let mut kernel = None;
                 while !path.is_empty() {
                     // The last whitespace-separated token; the whole
                     // string when no space remains.
@@ -176,6 +182,12 @@ impl Service {
                         if overlap.replace(o).is_some() {
                             bail!("overlap argument: given more than once");
                         }
+                    } else if let Some(name) = tail.strip_prefix("kernel=") {
+                        let k = crate::flims::simd::MergeKernel::parse(name)
+                            .map_err(|e| anyhow!("kernel argument: {e}"))?;
+                        if kernel.replace(k).is_some() {
+                            bail!("kernel argument: given more than once");
+                        }
                     } else {
                         break;
                     }
@@ -184,12 +196,20 @@ impl Service {
                 if path.is_empty() {
                     bail!("{usage}");
                 }
-                let (output, stats) =
-                    self.router
-                        .sort_file_external(Path::new(path), dtype, codec, overlap)?;
+                let (output, stats) = self.router.sort_file_external(
+                    Path::new(path),
+                    dtype,
+                    codec,
+                    overlap,
+                    kernel,
+                )?;
                 Ok(format!("ok {} {}", stats.elements, output.display()))
             }
-            "stats" => Ok(format!("ok {}", self.router.metrics.report())),
+            "stats" => Ok(format!(
+                "ok {} kernel={}",
+                self.router.metrics.report(),
+                self.router.kernel_name()
+            )),
             "quit" => Ok("bye".into()),
             other => Err(anyhow!("unknown command '{other}'")),
         }
@@ -309,6 +329,54 @@ mod tests {
         let out = s.handle_line("stats");
         assert!(out.starts_with("ok requests="));
         assert!(out.contains("external[sorts="), "{out}");
+        // The active merge-kernel name rides the stats line.
+        assert!(out.contains(" kernel="), "{out}");
+    }
+
+    #[test]
+    fn sortfile_with_kernel_argument() {
+        use crate::external::format::{read_raw, write_raw};
+        let dir = std::env::temp_dir().join(format!("flims-svc-krn-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("req.u32");
+        let data: Vec<u32> = (0..20_000u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        write_raw(&input, &data).unwrap();
+
+        // Tight budget so the request really spills through the kernels.
+        let mut app = crate::config::AppConfig::default();
+        app.external.mem_budget_bytes = 4096;
+        let router = Arc::new(Router::new(app, None));
+        let s = Service::new(
+            router,
+            BatcherConfig { max_batch: 2, window: Duration::from_micros(1) },
+        );
+
+        let mut expect = data;
+        expect.sort_unstable_by(|a, b| b.cmp(a));
+        let expect_path = format!("{}.sorted", input.display());
+        for arg in ["kernel=scalar", "kernel=simd", "kernel=auto dtype=u32 codec=delta"] {
+            let resp = s.handle_line(&format!("sortfile external {} {arg}", input.display()));
+            assert_eq!(resp, format!("ok 20000 {expect_path}"), "{arg}");
+            assert_eq!(
+                read_raw::<u32>(Path::new(&expect_path)).unwrap(),
+                expect,
+                "{arg}: the kernel must not change the sorted bytes"
+            );
+        }
+
+        // Bad values are one-line errors naming the offending argument.
+        let resp =
+            s.handle_line(&format!("sortfile external {} kernel=gpu", input.display()));
+        assert!(resp.starts_with("err "), "{resp}");
+        assert!(resp.contains("kernel argument: unknown kernel 'gpu'"), "{resp}");
+        assert!(!resp.contains('\n'), "response must stay one line");
+        let resp = s.handle_line(&format!(
+            "sortfile external {} kernel=simd kernel=scalar",
+            input.display()
+        ));
+        assert!(resp.starts_with("err "), "{resp}");
+        assert!(resp.contains("kernel argument: given more than once"), "{resp}");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -36,8 +36,8 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::flims::lanes::merge_desc_fast;
-use crate::flims::sort::{sort_desc, SortConfig};
+use crate::flims::simd::{merge_desc_kernel, MergeKernel};
+use crate::flims::sort::{sort_desc_with, SortConfig};
 use crate::flims::stable::{merge_stable_into, sort_stable_desc};
 use crate::key::{F32Key, Item, Kv, Kv64};
 
@@ -139,11 +139,13 @@ pub trait ExtItem: Item {
     /// Encode the payload tail into exactly `WIRE_BYTES - KEY_BYTES`
     /// bytes (no-op for plain keys).
     fn encode_payload(self, out: &mut [u8]);
-    /// Sort a phase-1 run descending in memory.
-    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig);
+    /// Sort a phase-1 run descending in memory on the given merge
+    /// kernel (plain keys may hit the explicit-SIMD tier; payload
+    /// records always stay on the stable scalar path).
+    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig, kernel: MergeKernel);
     /// Merge two descending-sorted slices, appending to `out` — the
-    /// per-block merge of every tree node.
-    fn merge_into(a: &[Self], b: &[Self], w: usize, out: &mut Vec<Self>);
+    /// per-block merge of every tree node, on the given merge kernel.
+    fn merge_into(a: &[Self], b: &[Self], w: usize, kernel: MergeKernel, out: &mut Vec<Self>);
 }
 
 impl ExtItem for u32 {
@@ -163,11 +165,11 @@ impl ExtItem for u32 {
         key as u32
     }
     fn encode_payload(self, _out: &mut [u8]) {}
-    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig) {
-        sort_desc(buf, cfg);
+    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig, kernel: MergeKernel) {
+        sort_desc_with(buf, cfg, kernel);
     }
-    fn merge_into(a: &[Self], b: &[Self], w: usize, out: &mut Vec<Self>) {
-        merge_desc_fast(a, b, w, out);
+    fn merge_into(a: &[Self], b: &[Self], w: usize, kernel: MergeKernel, out: &mut Vec<Self>) {
+        merge_desc_kernel(a, b, w, kernel, out);
     }
 }
 
@@ -188,11 +190,11 @@ impl ExtItem for u64 {
         key
     }
     fn encode_payload(self, _out: &mut [u8]) {}
-    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig) {
-        sort_desc(buf, cfg);
+    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig, kernel: MergeKernel) {
+        sort_desc_with(buf, cfg, kernel);
     }
-    fn merge_into(a: &[Self], b: &[Self], w: usize, out: &mut Vec<Self>) {
-        merge_desc_fast(a, b, w, out);
+    fn merge_into(a: &[Self], b: &[Self], w: usize, kernel: MergeKernel, out: &mut Vec<Self>) {
+        merge_desc_kernel(a, b, w, kernel, out);
     }
 }
 
@@ -219,11 +221,11 @@ impl ExtItem for F32Key {
         F32Key(key as u32)
     }
     fn encode_payload(self, _out: &mut [u8]) {}
-    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig) {
-        sort_desc(buf, cfg);
+    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig, kernel: MergeKernel) {
+        sort_desc_with(buf, cfg, kernel);
     }
-    fn merge_into(a: &[Self], b: &[Self], w: usize, out: &mut Vec<Self>) {
-        merge_desc_fast(a, b, w, out);
+    fn merge_into(a: &[Self], b: &[Self], w: usize, kernel: MergeKernel, out: &mut Vec<Self>) {
+        merge_desc_kernel(a, b, w, kernel, out);
     }
 }
 
@@ -253,10 +255,12 @@ impl ExtItem for Kv {
     fn encode_payload(self, out: &mut [u8]) {
         out.copy_from_slice(&self.val.to_le_bytes());
     }
-    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig) {
+    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig, _kernel: MergeKernel) {
+        // Stability carve-out (§6): payload records never take a SIMD
+        // kernel — equal-key payload order must survive.
         sort_stable_desc(buf, cfg);
     }
-    fn merge_into(a: &[Self], b: &[Self], w: usize, out: &mut Vec<Self>) {
+    fn merge_into(a: &[Self], b: &[Self], w: usize, _kernel: MergeKernel, out: &mut Vec<Self>) {
         merge_stable_into(a, b, w, out);
     }
 }
@@ -284,10 +288,12 @@ impl ExtItem for Kv64 {
     fn encode_payload(self, out: &mut [u8]) {
         out.copy_from_slice(&self.val.to_le_bytes());
     }
-    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig) {
+    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig, _kernel: MergeKernel) {
+        // Stability carve-out (§6): payload records never take a SIMD
+        // kernel — equal-key payload order must survive.
         sort_stable_desc(buf, cfg);
     }
-    fn merge_into(a: &[Self], b: &[Self], w: usize, out: &mut Vec<Self>) {
+    fn merge_into(a: &[Self], b: &[Self], w: usize, _kernel: MergeKernel, out: &mut Vec<Self>) {
         merge_stable_into(a, b, w, out);
     }
 }

@@ -162,7 +162,7 @@ fn open_group<T: ExtItem>(
             streams.push(Box::new(ReaderStream::new(reader, block)));
         }
     }
-    Ok(build_tree(streams, block, cfg.w))
+    Ok(build_tree(streams, block, cfg.w, cfg.kernel))
 }
 
 /// Merge one group of runs into a pre-created run writer. Runs on a

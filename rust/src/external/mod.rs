@@ -96,6 +96,7 @@ pub use stream::{
     ReaderStream, RunStream, WriterPool,
 };
 
+use crate::flims::simd::MergeKernel;
 use crate::flims::sort::SortConfig;
 use crate::key::{F32Key, Kv, Kv64};
 
@@ -138,6 +139,15 @@ pub struct ExternalConfig {
     pub tmp_dir: Option<PathBuf>,
     /// Cap on live spill bytes (`None` = unlimited).
     pub disk_budget_bytes: Option<u64>,
+    /// Merge-kernel tier for the phase-1 chunk sorts and every tree
+    /// node's inner merge loop: `auto` (explicit SIMD where a kernel
+    /// exists — plain-key dtypes on SSE2/AVX2/NEON), `scalar` (force
+    /// the branchless scalar lanes), or `simd`. Payload dtypes (`kv`,
+    /// `kv64`) always take the stable scalar tier (§6). The sorted
+    /// output is byte-identical for every value. Defaults from the
+    /// `FLIMS_KERNEL` environment variable (unset = `auto`) so CI can
+    /// run the whole suite on the scalar tier.
+    pub kernel: MergeKernel,
 }
 
 impl Default for ExternalConfig {
@@ -154,6 +164,7 @@ impl Default for ExternalConfig {
             codec: Codec::Raw,
             tmp_dir: None,
             disk_budget_bytes: None,
+            kernel: MergeKernel::env_default(),
         }
     }
 }
@@ -406,7 +417,7 @@ pub fn sort_vec<T: ExtItem>(data: &[T], cfg: &ExternalConfig) -> Result<(Vec<T>,
     if data.len() <= cfg.run_elems_for(T::WIRE_BYTES) {
         let t = Instant::now();
         let mut out = data.to_vec();
-        T::sort_run(&mut out, cfg.sort_config());
+        T::sort_run(&mut out, cfg.sort_config(), cfg.kernel);
         let us = t.elapsed().as_micros() as u64;
         let stats = SpillStats {
             elements: data.len() as u64,

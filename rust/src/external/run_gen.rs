@@ -231,7 +231,7 @@ fn generate_runs_serial<T: ExtItem>(
             if buf.is_empty() {
                 break;
             }
-            T::sort_run(&mut buf, cfg.sort_config());
+            T::sort_run(&mut buf, cfg.sort_config(), cfg.kernel);
             if let Some(prev) = in_flight.take() {
                 prev.finish(spill, emit)?;
             }
@@ -258,6 +258,7 @@ fn generate_runs_parallel<T: ExtItem>(
 ) -> Result<()> {
     let run_elems = cfg.run_elems_for(T::WIRE_BYTES);
     let sort_cfg = cfg.sort_config();
+    let kernel = cfg.kernel;
     // Cap on chunks that are queued, being sorted, or sorted-but-not-yet
     // spilled: bounds both memory and the reorder window.
     let max_in_flight = 2 * threads as u64;
@@ -274,7 +275,7 @@ fn generate_runs_parallel<T: ExtItem>(
             s.spawn(move || loop {
                 let job = rx.lock().unwrap().recv();
                 let Ok((seq, mut buf)) = job else { break };
-                T::sort_run(&mut buf, sort_cfg);
+                T::sort_run(&mut buf, sort_cfg, kernel);
                 if tx.send((seq, buf)).is_err() {
                     break;
                 }

@@ -39,6 +39,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::flims::simd::MergeKernel;
 use crate::key::Item;
 
 use super::format::{ExtItem, RunReader};
@@ -479,19 +480,22 @@ pub struct MergeStream<T: ExtItem> {
     sb: Side<T>,
     block: usize,
     w: usize,
+    kernel: MergeKernel,
 }
 
 impl<T: ExtItem> MergeStream<T> {
     /// Merge node over children `a` (earlier input — wins key ties) and
-    /// `b`, buffering `block` elements per side, FLiMS lane width `w`.
+    /// `b`, buffering `block` elements per side, FLiMS lane width `w`,
+    /// per-block merges dispatched through `kernel`.
     pub fn new(
         a: Box<dyn RunStream<T>>,
         b: Box<dyn RunStream<T>>,
         block: usize,
         w: usize,
+        kernel: MergeKernel,
     ) -> Self {
         assert!(w.is_power_of_two());
-        MergeStream { a, b, sa: Side::new(), sb: Side::new(), block: block.max(1), w }
+        MergeStream { a, b, sa: Side::new(), sb: Side::new(), block: block.max(1), w, kernel }
     }
 }
 
@@ -535,7 +539,7 @@ impl<T: ExtItem> RunStream<T> for MergeStream<T> {
             // ≥ B's bound, so the whole A buffer qualifies.
             bail!("merge stream stalled (avail {av}/{bv})");
         }
-        T::merge_into(&a_avail[..ka], &b_avail[..kb], self.w, out);
+        T::merge_into(&a_avail[..ka], &b_avail[..kb], self.w, self.kernel, out);
         self.sa.pos += ka;
         self.sb.pos += kb;
         Ok(ka + kb)
@@ -550,6 +554,7 @@ pub fn build_tree<T: ExtItem>(
     mut streams: Vec<Box<dyn RunStream<T>>>,
     block: usize,
     w: usize,
+    kernel: MergeKernel,
 ) -> Box<dyn RunStream<T>> {
     assert!(!streams.is_empty(), "build_tree needs at least one stream");
     while streams.len() > 1 {
@@ -557,7 +562,7 @@ pub fn build_tree<T: ExtItem>(
         let mut it = streams.into_iter();
         while let Some(a) = it.next() {
             match it.next() {
-                Some(b) => next.push(Box::new(MergeStream::new(a, b, block, w))),
+                Some(b) => next.push(Box::new(MergeStream::new(a, b, block, w, kernel))),
                 None => next.push(a),
             }
         }
@@ -643,6 +648,7 @@ mod tests {
                     Box::new(VecStream::new(b, 5)),
                     block,
                     8,
+                    MergeKernel::env_default(),
                 );
                 assert_eq!(drain(&mut m), expect, "na={na} nb={nb} block={block}");
             }
@@ -665,6 +671,7 @@ mod tests {
                 Box::new(VecStream::new(b, 23)),
                 32,
                 16,
+                MergeKernel::env_default(),
             );
             assert_eq!(drain(&mut m), expect, "{dist:?}");
         }
@@ -681,7 +688,7 @@ mod tests {
                 .iter()
                 .map(|l| Box::new(VecStream::new(l.clone(), 9)) as Box<dyn RunStream<u32>>)
                 .collect();
-            let mut tree = build_tree(streams, 16, 8);
+            let mut tree = build_tree(streams, 16, 8, MergeKernel::env_default());
             let got = drain(tree.as_mut());
             assert!(is_sorted_desc(&got));
             assert_eq!(got, expect, "k={k}");
@@ -698,6 +705,7 @@ mod tests {
             Box::new(VecStream::new(b, 29)),
             32,
             8,
+            MergeKernel::env_default(),
         );
         let mut chunk = Vec::new();
         let mut last: Option<u32> = None;
@@ -755,6 +763,7 @@ mod tests {
                 Box::new(KvStream { data: b, pos: 0, step: step_b }),
                 block,
                 8,
+                MergeKernel::env_default(),
             );
             let mut got = Vec::new();
             pump(&mut m, |c| {

@@ -3,6 +3,7 @@
 //! merge passes then combine. The paper found chunk = 512 optimal on
 //! AVX2; our sort pipeline tunes this per host (see `SortConfig`).
 
+use crate::flims::simd::{rowpair_minmax, MergeKernel, SimdMergeable};
 use crate::key::Item;
 
 /// Sort `x` descending with the full bitonic network. `x.len()` must be
@@ -60,10 +61,23 @@ pub fn sort_chunks_desc<T: Item>(x: &mut [T], chunk: usize) {
 /// registers.
 ///
 /// Plain keys only (`T::K == T`); `x.len()` must be a multiple of
-/// `chunk`, `chunk` a power of two.
+/// `chunk`, `chunk` a power of two. Runs on the process-default merge
+/// kernel; [`sort_chunks_columnar_with`] takes an explicit one.
 pub fn sort_chunks_columnar<T>(x: &mut [T], chunk: usize)
 where
-    T: Item<K = T> + crate::key::Key,
+    T: SimdMergeable,
+{
+    sort_chunks_columnar_with(x, chunk, MergeKernel::env_default())
+}
+
+/// [`sort_chunks_columnar`] on an explicit merge kernel: every CAS
+/// column of the network runs through
+/// [`rowpair_minmax`](crate::flims::simd::rowpair_minmax) — explicit
+/// SIMD min/max rows when the kernel and key type allow, the scalar
+/// loop otherwise (identical values either way).
+pub fn sort_chunks_columnar_with<T>(x: &mut [T], chunk: usize, kernel: MergeKernel)
+where
+    T: SimdMergeable,
 {
     debug_assert!(chunk.is_power_of_two());
     debug_assert_eq!(x.len() % chunk, 0);
@@ -104,21 +118,9 @@ where
                         let row_i = &mut lo[i * g..i * g + g];
                         let row_p = &mut hi[..g];
                         if desc_block {
-                            for c in 0..g {
-                                let (a, b) = (row_i[c], row_p[c]);
-                                let mx = if a > b { a } else { b };
-                                let mn = if a > b { b } else { a };
-                                row_i[c] = mx;
-                                row_p[c] = mn;
-                            }
+                            rowpair_minmax(row_i, row_p, kernel);
                         } else {
-                            for c in 0..g {
-                                let (a, b) = (row_i[c], row_p[c]);
-                                let mx = if a > b { a } else { b };
-                                let mn = if a > b { b } else { a };
-                                row_i[c] = mn;
-                                row_p[c] = mx;
-                            }
+                            rowpair_minmax(row_p, row_i, kernel);
                         }
                     }
                 }
@@ -203,6 +205,23 @@ mod tests {
                 sort_chunks_desc(&mut expect, chunk);
                 sort_chunks_columnar(&mut v, chunk);
                 assert_eq!(v, expect, "chunk={chunk} n={nchunks}");
+            }
+        }
+    }
+
+    #[test]
+    fn columnar_kernels_agree() {
+        // The SIMD rowpair columns must leave exactly the bytes the
+        // scalar columns leave — elementwise min/max is value-unique.
+        let mut rng = Rng::new(55);
+        for chunk in [4usize, 128] {
+            for nchunks in [1usize, 64, 65] {
+                let v: Vec<u32> = (0..chunk * nchunks).map(|_| rng.next_u32()).collect();
+                let mut scalar = v.clone();
+                sort_chunks_columnar_with(&mut scalar, chunk, MergeKernel::Scalar);
+                let mut simd = v.clone();
+                sort_chunks_columnar_with(&mut simd, chunk, MergeKernel::Simd);
+                assert_eq!(simd, scalar, "chunk={chunk} n={nchunks}");
             }
         }
     }

@@ -27,13 +27,13 @@ pub fn merge_desc<T: Item>(a: &[T], b: &[T], w: usize) -> Vec<T> {
 
 /// Merge two **ascending**-sorted slices into a new ascending vector —
 /// the convenience wrapper for callers outside the paper's descending
-/// convention. Internally the inputs are viewed reversed (an ascending
-/// slice read backwards is descending), merged by the same lanes, and
-/// the output reversed back.
+/// convention. The inputs are merged through reversed *views* (an
+/// ascending slice read back to front is descending) and only the
+/// output is reversed, in place — the output buffer is the single
+/// allocation, whatever the input sizes.
 pub fn merge_asc<T: Item>(a: &[T], b: &[T], w: usize) -> Vec<T> {
-    let ra: Vec<T> = a.iter().rev().copied().collect();
-    let rb: Vec<T> = b.iter().rev().copied().collect();
-    let mut out = merge_desc(&ra, &rb, w);
+    let mut out = Vec::new();
+    merge_desc_core::<T, true>(a, b, w, &mut out);
     out.reverse();
     out
 }
@@ -42,6 +42,14 @@ pub fn merge_asc<T: Item>(a: &[T], b: &[T], w: usize) -> Vec<T> {
 ///
 /// Pad-aware: safe for payload records whose key equals the sentinel.
 pub fn merge_desc_into<T: Item>(a: &[T], b: &[T], w: usize, out: &mut Vec<T>) {
+    merge_desc_core::<T, false>(a, b, w, out);
+}
+
+/// The dynamic-width pad-aware merge, parameterised over the read
+/// direction: `REV = true` indexes both inputs back to front, which is
+/// how [`merge_asc`] treats ascending slices as descending ones without
+/// materialising reversed copies.
+fn merge_desc_core<T: Item, const REV: bool>(a: &[T], b: &[T], w: usize, out: &mut Vec<T>) {
     assert!(w.is_power_of_two());
     out.clear();
     let total = a.len() + b.len();
@@ -51,9 +59,11 @@ pub fn merge_desc_into<T: Item>(a: &[T], b: &[T], w: usize, out: &mut Vec<T>) {
     }
     // (item, real) lane registers; B lanes bank-reversed (§3.1).
     let fetch = |xs: &[T], idx: usize| -> (T, bool) {
-        match xs.get(idx) {
-            Some(&x) => (x, true),
-            None => (T::sentinel(), false),
+        if idx < xs.len() {
+            let i = if REV { xs.len() - 1 - idx } else { idx };
+            (xs[i], true)
+        } else {
+            (T::sentinel(), false)
         }
     };
     let mut c_a: Vec<(T, bool)> = (0..w).map(|i| fetch(a, i)).collect();

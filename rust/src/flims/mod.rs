@@ -9,6 +9,8 @@
 //! * §4.1 algorithm 2 (skewness optimisation) → [`scalar::merge_skew`].
 //! * §4.2 algorithm 3 (stable merge) → [`stable`].
 //! * §4.3 algorithm 4 (FLiMSj, whole-row dequeues) → [`flimsj`].
+//! * §8 explicit-SIMD kernels (selector + butterfly as `core::arch`
+//!   intrinsics, runtime-dispatched) → [`simd`].
 //! * §8.2 sort-in-chunks + complete sort → [`chunk_sort`], [`sort`],
 //!   [`parallel`].
 //!
@@ -21,6 +23,7 @@ pub mod flimsj;
 pub mod lanes;
 pub mod parallel;
 pub mod scalar;
+pub mod simd;
 pub mod sort;
 pub mod stable;
 
@@ -28,5 +31,6 @@ pub use butterfly::butterfly_desc;
 pub use lanes::{merge_asc, merge_desc};
 pub use parallel::par_sort_desc;
 pub use scalar::{merge_basic, merge_skew, FlimsMerger, MergeTrace, Variant};
+pub use simd::{merge_desc_kernel, merge_desc_kernel_slice, MergeKernel, SimdMergeable};
 pub use sort::{sort_asc, sort_desc, SortConfig};
 pub use stable::{merge_stable, merge_stable_into, sort_stable_desc};

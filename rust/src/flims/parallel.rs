@@ -10,9 +10,8 @@
 //! no synchronisation beyond the pass barrier is needed — the same
 //! barrier structure as a PMT level.
 
-use crate::flims::lanes::merge_desc_fast_slice;
-use crate::flims::sort::{sort_desc, SortConfig};
-use crate::key::{Item, Key};
+use crate::flims::simd::{merge_desc_kernel_slice, MergeKernel, SimdMergeable};
+use crate::flims::sort::{sort_desc_with, SortConfig};
 
 /// Parallel sort configuration.
 #[derive(Clone, Copy, Debug)]
@@ -22,6 +21,9 @@ pub struct ParSortConfig {
     pub threads: usize,
     /// below this, fall back to single-threaded sort
     pub seq_cutoff: usize,
+    /// merge-kernel tier for the per-thread sorts and the pass merges
+    /// (defaults from `FLIMS_KERNEL`)
+    pub kernel: MergeKernel,
 }
 
 impl Default for ParSortConfig {
@@ -30,6 +32,7 @@ impl Default for ParSortConfig {
             base: SortConfig::default(),
             threads: 0,
             seq_cutoff: 1 << 15,
+            kernel: MergeKernel::env_default(),
         }
     }
 }
@@ -45,12 +48,12 @@ fn effective_threads(req: usize) -> usize {
 /// Sort descending using multiple threads.
 pub fn par_sort_desc<T>(x: &mut Vec<T>, cfg: ParSortConfig)
 where
-    T: Item<K = T> + Key,
+    T: SimdMergeable,
 {
     let n = x.len();
     let threads = effective_threads(cfg.threads);
     if n < cfg.seq_cutoff || threads == 1 {
-        sort_desc(x, cfg.base);
+        sort_desc_with(x, cfg.base, cfg.kernel);
         return;
     }
 
@@ -61,11 +64,12 @@ where
     let part_len = n.div_ceil(parts);
     {
         let base = cfg.base;
+        let kernel = cfg.kernel;
         std::thread::scope(|s| {
             for piece in x.chunks_mut(part_len) {
                 s.spawn(move || {
                     let mut v = piece.to_vec();
-                    sort_desc(&mut v, base);
+                    sort_desc_with(&mut v, base, kernel);
                     piece.copy_from_slice(&v);
                 });
             }
@@ -85,6 +89,7 @@ where
                 (&scratch[..], &mut x[..])
             };
             let w = cfg.base.w;
+            let kernel = cfg.kernel;
             std::thread::scope(|s| {
                 let mut pos = 0;
                 let mut dst_rest = dst;
@@ -98,7 +103,7 @@ where
                         if src_b.is_empty() {
                             dst_piece.copy_from_slice(src_a);
                         } else {
-                            merge_desc_fast_slice(src_a, src_b, w, dst_piece);
+                            merge_desc_kernel_slice(src_a, src_b, w, kernel, dst_piece);
                         }
                     });
                     pos = end;

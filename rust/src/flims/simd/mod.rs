@@ -1,0 +1,615 @@
+//! Explicit-SIMD FLiMS merge kernels with runtime dispatch.
+//!
+//! The paper's §8 runs FLiMS "as conventional software on modern CPUs
+//! supporting SIMD instructions"; [`lanes`](crate::flims::lanes) is the
+//! branchless scalar tier that *hopes* the auto-vectoriser finds that
+//! shape. This module is the explicit version: the §3 selector stage
+//! (pairwise max of the candidate lanes against the **bank-reversed**
+//! carry lanes) and the §3.2 butterfly cleanup network written directly
+//! with `core::arch` min/max + shuffle intrinsics, with the FLiMSj-style
+//! whole-row candidate refill of §8.1 (one scalar head compare steers a
+//! contiguous `w`-row load — no per-lane gathers).
+//!
+//! Tiers and dispatch:
+//!
+//! * **x86_64** — SSE2 baseline (always present on the target) for
+//!   `u32` at W ∈ {4, 8}; AVX2 (runtime-detected once via
+//!   `is_x86_feature_detected!`, cached) for `u32` at W ∈ {8, 16} and
+//!   `u64` at W ∈ {4, 8}.
+//! * **aarch64** — NEON (architectural) for `u32` at W ∈ {4, 8} and
+//!   `u64` at W = 4.
+//! * everything else — the scalar lanes.
+//!
+//! Only **plain keys** (`u32`, `u64`, and `f32` via the order-preserving
+//! [`F32Key`] bit mapping) have SIMD kernels. Payload records (`Kv`,
+//! `Kv64`) always take the pad-aware scalar tier: the §6 tie-record
+//! guarantee requires the stable merge path, and vectorising it would
+//! reorder equal-key payloads. For plain keys the descending merge
+//! output of a multiset is *unique*, so every kernel produces
+//! byte-identical output by construction — the `prop_kernel`
+//! equivalence suite pins this across dtypes, widths, schedules and
+//! adversarial inputs.
+//!
+//! Selection is a [`MergeKernel`] knob threaded through every layer
+//! that touches the lane merger: `[core] kernel` in the config file,
+//! the `FLIMS_KERNEL` environment variable (the process default — how
+//! CI forces the whole suite onto the scalar tier), `--kernel` on the
+//! CLI, and `kernel=<k>` on the service's `sortfile` command. See
+//! `docs/KERNELS.md` for the full dispatch table.
+
+use std::sync::OnceLock;
+
+use crate::flims::lanes::{merge_desc_fast, merge_desc_fast_slice};
+use crate::key::{F32Key, Item, Key};
+
+/// Which merge-kernel tier the lane mergers run on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MergeKernel {
+    /// Pick per type and CPU: explicit SIMD where a kernel exists,
+    /// scalar otherwise. The default.
+    Auto,
+    /// Force the branchless scalar lanes everywhere.
+    Scalar,
+    /// Ask for the explicit-SIMD tier. Falls back to scalar for types,
+    /// widths, or CPUs without a kernel — payload records always do.
+    Simd,
+}
+
+impl Default for MergeKernel {
+    /// The process default: [`MergeKernel::env_default`].
+    fn default() -> Self {
+        MergeKernel::env_default()
+    }
+}
+
+impl MergeKernel {
+    /// Parse a kernel name (`auto` | `scalar` | `simd`), forgiving case
+    /// and surrounding whitespace.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(MergeKernel::Auto),
+            "scalar" => Ok(MergeKernel::Scalar),
+            "simd" => Ok(MergeKernel::Simd),
+            other => Err(format!("unknown kernel '{other}' (expected auto|scalar|simd)")),
+        }
+    }
+
+    /// The knob spelling of this kernel.
+    pub fn name(self) -> &'static str {
+        match self {
+            MergeKernel::Auto => "auto",
+            MergeKernel::Scalar => "scalar",
+            MergeKernel::Simd => "simd",
+        }
+    }
+
+    /// Whether this kernel tries the SIMD tier before falling back.
+    #[inline]
+    pub fn wants_simd(self) -> bool {
+        !matches!(self, MergeKernel::Scalar)
+    }
+
+    /// What this kernel resolves to on the running CPU — the name
+    /// surfaced in the `stats` protocol line and the CLI report
+    /// (`scalar`, `simd-sse2`, `simd-avx2`, or `simd-neon`). For
+    /// `auto`/`simd` this is the CPU's tier *ceiling*: payload dtypes
+    /// and types without a kernel still run the scalar tier underneath
+    /// it (see `docs/KERNELS.md` for the per-dtype table).
+    pub fn resolved_name(self) -> &'static str {
+        match self {
+            MergeKernel::Scalar => "scalar",
+            MergeKernel::Auto | MergeKernel::Simd => simd_tier_name(),
+        }
+    }
+
+    /// The kernel default: the `FLIMS_KERNEL` environment variable when
+    /// set, else `auto`. Read once and cached — this is how CI runs the
+    /// whole suite with the scalar tier forced. An unparseable value
+    /// warns on stderr instead of silently meaning `auto`.
+    pub fn env_default() -> Self {
+        static CACHE: OnceLock<MergeKernel> = OnceLock::new();
+        *CACHE.get_or_init(|| match std::env::var("FLIMS_KERNEL") {
+            Err(_) => MergeKernel::Auto,
+            Ok(v) => MergeKernel::parse(&v).unwrap_or_else(|e| {
+                eprintln!("warning: FLIMS_KERNEL ignored: {e}");
+                MergeKernel::Auto
+            }),
+        })
+    }
+}
+
+/// The SIMD tier available on the running CPU, by name (`simd-avx2`,
+/// `simd-sse2`, `simd-neon`, or `scalar` when no kernel exists).
+pub fn simd_tier_name() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if x86::have_avx2() {
+            "simd-avx2"
+        } else {
+            "simd-sse2"
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        "simd-neon"
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        "scalar"
+    }
+}
+
+/// A plain-key element the kernel dispatcher can route: every method
+/// returns `false` to mean "no SIMD kernel here — take the scalar
+/// tier". Types whose payload is their key (`u32`, `u64`, [`F32Key`])
+/// override with real kernels; signed and narrow keys keep the
+/// defaults (their lane order differs from the unsigned compare the
+/// kernels use).
+pub trait SimdMergeable: Item<K = Self> + Key {
+    /// Merge two descending-sorted slices into `dst` (`dst.len() ==
+    /// a.len() + b.len()`) with an explicit-SIMD kernel near lane width
+    /// `w`. Returns `false` when no kernel fits this type, width, or
+    /// CPU.
+    fn simd_merge_desc(a: &[Self], b: &[Self], w: usize, dst: &mut [Self]) -> bool {
+        let _ = (a, b, w, dst);
+        false
+    }
+
+    /// One elementwise CAS column over two equal-length rows (`hi[i]`
+    /// keeps the max, `lo[i]` the min) — the sort-in-chunks network
+    /// stage of §8.2. Returns `false` when no kernel exists.
+    fn simd_rowpair_minmax(hi: &mut [Self], lo: &mut [Self]) -> bool {
+        let _ = (hi, lo);
+        false
+    }
+}
+
+impl SimdMergeable for u16 {}
+impl SimdMergeable for i32 {}
+impl SimdMergeable for i64 {}
+
+impl SimdMergeable for u32 {
+    fn simd_merge_desc(a: &[Self], b: &[Self], w: usize, dst: &mut [Self]) -> bool {
+        #[cfg(target_arch = "x86_64")]
+        {
+            x86::merge_desc_u32(a, b, w, dst)
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            neon::merge_desc_u32(a, b, w, dst)
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            let _ = (a, b, w, dst);
+            false
+        }
+    }
+
+    fn simd_rowpair_minmax(hi: &mut [Self], lo: &mut [Self]) -> bool {
+        #[cfg(target_arch = "x86_64")]
+        {
+            x86::rowpair_minmax_u32(hi, lo)
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            neon::rowpair_minmax_u32(hi, lo)
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            let _ = (hi, lo);
+            false
+        }
+    }
+}
+
+impl SimdMergeable for u64 {
+    fn simd_merge_desc(a: &[Self], b: &[Self], w: usize, dst: &mut [Self]) -> bool {
+        #[cfg(target_arch = "x86_64")]
+        {
+            x86::merge_desc_u64(a, b, w, dst)
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            neon::merge_desc_u64(a, b, w, dst)
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            let _ = (a, b, w, dst);
+            false
+        }
+    }
+}
+
+// SAFETY of the casts below: `F32Key` is `#[repr(transparent)]` over
+// `u32`, and its derived `Ord` is exactly the wrapped integer's order
+// (that is the whole point of the order-preserving bit mapping), so the
+// u32 kernels merge it bit-exactly.
+impl SimdMergeable for F32Key {
+    fn simd_merge_desc(a: &[Self], b: &[Self], w: usize, dst: &mut [Self]) -> bool {
+        let (a, b) = (f32key_bits(a), f32key_bits(b));
+        let dst = f32key_bits_mut(dst);
+        <u32 as SimdMergeable>::simd_merge_desc(a, b, w, dst)
+    }
+
+    fn simd_rowpair_minmax(hi: &mut [Self], lo: &mut [Self]) -> bool {
+        <u32 as SimdMergeable>::simd_rowpair_minmax(f32key_bits_mut(hi), f32key_bits_mut(lo))
+    }
+}
+
+#[inline]
+fn f32key_bits(xs: &[F32Key]) -> &[u32] {
+    // SAFETY: see the comment on the `SimdMergeable for F32Key` impl.
+    unsafe { std::slice::from_raw_parts(xs.as_ptr().cast(), xs.len()) }
+}
+
+#[inline]
+fn f32key_bits_mut(xs: &mut [F32Key]) -> &mut [u32] {
+    // SAFETY: see the comment on the `SimdMergeable for F32Key` impl.
+    unsafe { std::slice::from_raw_parts_mut(xs.as_mut_ptr().cast(), xs.len()) }
+}
+
+/// Merge two descending-sorted plain-key slices into `dst`
+/// (`dst.len()` must equal `a.len() + b.len()`) through the selected
+/// kernel: explicit SIMD when `kernel` wants it and the type/CPU
+/// supports it, otherwise the branchless scalar lanes
+/// ([`merge_desc_fast_slice`]). Output bytes are identical whichever
+/// tier runs — a plain-key descending merge output is unique.
+pub fn merge_desc_kernel_slice<T: SimdMergeable>(
+    a: &[T],
+    b: &[T],
+    w: usize,
+    kernel: MergeKernel,
+    dst: &mut [T],
+) {
+    debug_assert_eq!(dst.len(), a.len() + b.len());
+    // The length check is a hard gate, not just the debug assert: the
+    // SIMD kernels store through raw pointers, so a contract-violating
+    // caller must land on the scalar tier (which panics cleanly on its
+    // slice bounds) rather than write out of bounds in release builds.
+    if kernel.wants_simd()
+        && dst.len() == a.len() + b.len()
+        && T::simd_merge_desc(a, b, w, dst)
+    {
+        return;
+    }
+    merge_desc_fast_slice(a, b, w, dst);
+}
+
+/// The smallest per-side length any SIMD kernel accepts (the narrowest
+/// block is 4 lanes on every supported arch) — lets Vec-appending
+/// callers skip the output pre-fill for merges no kernel would take.
+const SIMD_MIN_SIDE: usize = 4;
+
+/// [`merge_desc_kernel_slice`] appending to a `Vec` — the shape
+/// [`ExtItem::merge_into`](crate::external::ExtItem::merge_into) wants.
+pub fn merge_desc_kernel<T: SimdMergeable>(
+    a: &[T],
+    b: &[T],
+    w: usize,
+    kernel: MergeKernel,
+    out: &mut Vec<T>,
+) {
+    // Only pre-size the output when a kernel could actually take this
+    // merge (both sides can prime the narrowest block) — tail blocks
+    // and tiny merges go straight to the scalar append path with no
+    // wasted sentinel fill. (When a kernel does run, the fill is one
+    // vectorised pass the merge immediately overwrites — small next to
+    // the merge itself.)
+    if kernel.wants_simd() && a.len().min(b.len()) >= SIMD_MIN_SIDE {
+        let base = out.len();
+        let total = a.len() + b.len();
+        out.resize(base + total, T::SENTINEL);
+        if T::simd_merge_desc(a, b, w, &mut out[base..]) {
+            return;
+        }
+        out.truncate(base);
+    }
+    merge_desc_fast(a, b, w, out);
+}
+
+/// One elementwise CAS column over two equal-length rows: `hi[i]` keeps
+/// the max, `lo[i]` the min — the sort-in-chunks network stage (§8.2),
+/// SIMD when the kernel and type allow.
+pub fn rowpair_minmax<T: SimdMergeable>(hi: &mut [T], lo: &mut [T], kernel: MergeKernel) {
+    debug_assert_eq!(hi.len(), lo.len());
+    // Hard equal-length gate for the same reason as the merge entry:
+    // the SIMD rows store through raw pointers; mismatched callers get
+    // the scalar path's zip semantics instead of out-of-bounds writes.
+    if kernel.wants_simd() && hi.len() == lo.len() && T::simd_rowpair_minmax(hi, lo) {
+        return;
+    }
+    rowpair_scalar(hi, lo);
+}
+
+/// The scalar CAS column — also the tail pass of the SIMD rowpair
+/// kernels for lengths off the register width.
+pub(crate) fn rowpair_scalar<T: Copy + Ord>(hi: &mut [T], lo: &mut [T]) {
+    for (h, l) in hi.iter_mut().zip(lo.iter_mut()) {
+        if *l > *h {
+            std::mem::swap(h, l);
+        }
+    }
+}
+
+/// Simple scalar 2-way descending merge into an exact-sized slice —
+/// used by the kernel epilogues to fold the carry block into the
+/// *short* input remainder (both at most `2·W − 1` elements). Plain
+/// keys only, so any tie order is correct.
+pub(crate) fn merge2_desc<T: Copy + Ord>(a: &[T], b: &[T], dst: &mut [T]) {
+    debug_assert_eq!(dst.len(), a.len() + b.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    for slot in dst.iter_mut() {
+        let take_a = match (a.get(i), b.get(j)) {
+            (Some(x), Some(y)) => x >= y,
+            (Some(_), None) => true,
+            _ => false,
+        };
+        if take_a {
+            *slot = a[i];
+            i += 1;
+        } else {
+            *slot = b[j];
+            j += 1;
+        }
+    }
+}
+
+/// Generates one explicit-SIMD merge kernel: the §3 selector (pairwise
+/// compare of the candidate block against the bank-reversed carry
+/// block), the §3.2 butterfly cleanup on both halves, and the
+/// FLiMSj-style whole-row refill of §8.1 steered by one scalar head
+/// compare. Callers must guarantee `a.len() >= W`, `b.len() >= W`,
+/// `dst.len() == a.len() + b.len()`, and (for feature-gated kernels)
+/// that the CPU supports the instruction set.
+macro_rules! gen_merge {
+    ($(#[$attr:meta])* $name:ident, $ty:ty, $w:expr,
+     $load:ident, $store:ident, $rev:ident, $stage:ident, $butterfly:ident) => {
+        $(#[$attr])*
+        unsafe fn $name(a: &[$ty], b: &[$ty], dst: &mut [$ty]) {
+            const W: usize = $w;
+            debug_assert!(a.len() >= W && b.len() >= W);
+            debug_assert_eq!(dst.len(), a.len() + b.len());
+            let (na, nb) = (a.len(), b.len());
+            let mut va = $load(a.as_ptr());
+            let mut carry = $load(b.as_ptr());
+            let (mut ia, mut ib, mut o) = (W, W, 0usize);
+            loop {
+                // Selector stage: lane i of the candidate block against
+                // the bank-reversed carry lane (§3.1); maxes stream out,
+                // mins become the next carry — both butterfly-cleaned
+                // (§3.2).
+                let (lo, hi) = $stage(va, $rev(carry));
+                $store(dst.as_mut_ptr().add(o), $butterfly(hi));
+                o += W;
+                carry = $butterfly(lo);
+                if ia + W > na || ib + W > nb {
+                    break;
+                }
+                // Whole-row refill (§8.1): the stream with the larger
+                // head must supply the next candidates.
+                if *a.get_unchecked(ia) > *b.get_unchecked(ib) {
+                    va = $load(a.as_ptr().add(ia));
+                    ia += W;
+                } else {
+                    va = $load(b.as_ptr().add(ib));
+                    ib += W;
+                }
+            }
+            // Tail. The loop only breaks when a remainder cannot fill a
+            // row, so the *shorter* remainder holds < W elements: fold
+            // the spilled carry into it scalar-2-way (≤ 2·W−1 values),
+            // then finish against the long remainder on the branchless
+            // scalar lanes — a skewed merge never drains its dominant
+            // side through a slow element-at-a-time loop.
+            let mut tail = [0 as $ty; W];
+            $store(tail.as_mut_ptr(), carry);
+            let (ra, rb) = (&a[ia..], &b[ib..]);
+            let (short, long) = if ra.len() <= rb.len() { (ra, rb) } else { (rb, ra) };
+            let mut small = [0 as $ty; 2 * W];
+            let n_small = W + short.len();
+            super::merge2_desc(&tail, short, &mut small[..n_small]);
+            crate::flims::lanes::merge_desc_fast_slice(&small[..n_small], long, W, &mut dst[o..]);
+        }
+    };
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_sorted_pair, gen_u32, gen_u64, Distribution};
+    use crate::util::rng::Rng;
+
+    fn oracle<T: Item>(a: &[T], b: &[T]) -> Vec<T> {
+        let mut v: Vec<T> = a.iter().chain(b.iter()).copied().collect();
+        v.sort_by(|x, y| y.key().cmp(&x.key()));
+        v
+    }
+
+    fn both_kernels<T: SimdMergeable + PartialEq + std::fmt::Debug>(a: &[T], b: &[T], w: usize) {
+        let total = a.len() + b.len();
+        let mut scalar = vec![T::SENTINEL; total];
+        merge_desc_kernel_slice(a, b, w, MergeKernel::Scalar, &mut scalar);
+        let mut simd = vec![T::SENTINEL; total];
+        merge_desc_kernel_slice(a, b, w, MergeKernel::Simd, &mut simd);
+        let expect = oracle(a, b);
+        assert_eq!(scalar, expect, "scalar w={w} na={} nb={}", a.len(), b.len());
+        assert_eq!(simd, expect, "simd w={w} na={} nb={}", a.len(), b.len());
+    }
+
+    #[test]
+    fn parse_and_names() {
+        assert_eq!(MergeKernel::parse("auto").unwrap(), MergeKernel::Auto);
+        assert_eq!(MergeKernel::parse(" Scalar ").unwrap(), MergeKernel::Scalar);
+        assert_eq!(MergeKernel::parse("SIMD").unwrap(), MergeKernel::Simd);
+        let err = MergeKernel::parse("gpu").unwrap_err();
+        assert!(err.contains("unknown kernel"), "{err}");
+        assert_eq!(MergeKernel::Auto.name(), "auto");
+        assert_eq!(MergeKernel::Scalar.name(), "scalar");
+        assert_eq!(MergeKernel::Simd.name(), "simd");
+        assert!(!MergeKernel::Scalar.wants_simd());
+        assert!(MergeKernel::Auto.wants_simd());
+        assert_eq!(MergeKernel::Scalar.resolved_name(), "scalar");
+        // Auto and Simd resolve to the same tier name, whatever the CPU.
+        assert_eq!(MergeKernel::Auto.resolved_name(), MergeKernel::Simd.resolved_name());
+        assert_eq!(MergeKernel::Auto.resolved_name(), simd_tier_name());
+    }
+
+    #[test]
+    fn merge2_desc_matches_oracle() {
+        let mut rng = Rng::new(771);
+        for _ in 0..50 {
+            let mk = |n: usize, rng: &mut Rng| -> Vec<u32> {
+                let mut v: Vec<u32> = (0..n).map(|_| rng.below(50) as u32).collect();
+                v.sort_unstable_by(|a, b| b.cmp(a));
+                v
+            };
+            let (na, nb) = (rng.range(0, 20), rng.range(0, 20));
+            let (a, b) = (mk(na, &mut rng), mk(nb, &mut rng));
+            let mut dst = vec![0u32; na + nb];
+            merge2_desc(&a, &b, &mut dst);
+            let mut expect: Vec<u32> = a.iter().chain(b.iter()).copied().collect();
+            expect.sort_unstable_by(|x, y| y.cmp(x));
+            assert_eq!(dst, expect, "na={na} nb={nb}");
+        }
+    }
+
+    #[test]
+    fn length_contract_violations_stay_safe() {
+        // A wrong-size dst must land on the scalar tier's clean panic,
+        // never on a raw-pointer SIMD store (release-mode safety gate).
+        let a: Vec<u32> = (0..64u32).rev().collect();
+        let b: Vec<u32> = (0..64u32).rev().collect();
+        let mut dst = vec![0u32; 100]; // != 128
+        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            merge_desc_kernel_slice(&a, &b, 16, MergeKernel::Simd, &mut dst);
+        }))
+        .is_err();
+        assert!(panicked, "short dst must panic cleanly, not write out of bounds");
+    }
+
+    #[test]
+    fn u32_kernels_match_scalar_all_widths() {
+        let mut rng = Rng::new(772);
+        for w in [2usize, 4, 8, 16, 32] {
+            for _ in 0..20 {
+                let (na, nb) = (rng.range(0, 600), rng.range(0, 600));
+                let (a, b) = gen_sorted_pair(&mut rng, na, nb, Distribution::Uniform, gen_u32);
+                both_kernels(&a, &b, w);
+            }
+        }
+    }
+
+    #[test]
+    fn u64_kernels_match_scalar_all_widths() {
+        let mut rng = Rng::new(773);
+        for w in [4usize, 8, 16] {
+            for _ in 0..15 {
+                let (na, nb) = (rng.range(0, 500), rng.range(0, 500));
+                let (a, b) = gen_sorted_pair(&mut rng, na, nb, Distribution::Uniform, gen_u64);
+                both_kernels(&a, &b, w);
+            }
+        }
+    }
+
+    #[test]
+    fn f32key_kernel_matches_scalar() {
+        let mut rng = Rng::new(774);
+        for _ in 0..15 {
+            let mk = |n: usize, rng: &mut Rng| -> Vec<F32Key> {
+                let mut v: Vec<F32Key> = (0..n)
+                    .map(|_| F32Key::from_f32(rng.next_u32() as f32 - 2e9))
+                    .collect();
+                v.sort_unstable_by(|a, b| b.cmp(a));
+                v
+            };
+            let (na, nb) = (rng.range(0, 400), rng.range(0, 400));
+            let (a, b) = (mk(na, &mut rng), mk(nb, &mut rng));
+            both_kernels(&a, &b, 16);
+        }
+    }
+
+    #[test]
+    fn edge_shapes_and_sentinels() {
+        // Empty sides, singles, all-equal, sentinel-valued keys, and
+        // lengths off the register width.
+        both_kernels::<u32>(&[], &[], 8);
+        both_kernels::<u32>(&[7], &[], 8);
+        both_kernels::<u32>(&[], &[7], 8);
+        both_kernels::<u32>(&[9, 4, 0, 0, 0], &[7, 0], 8);
+        both_kernels::<u32>(&[5u32; 100], &[5u32; 37], 16);
+        let a: Vec<u32> = (0..97u32).rev().collect();
+        let b: Vec<u32> = (0..31u32).rev().map(|x| x * 3).collect();
+        for w in [4usize, 8, 16] {
+            both_kernels(&a, &b, w);
+        }
+        // One side far shorter than the other (adversarial skew).
+        let long: Vec<u32> = (0..5000u32).rev().collect();
+        both_kernels(&long, &[2500, 2500, 2500], 16);
+    }
+
+    #[test]
+    fn append_variant_preserves_prefix() {
+        let mut out = vec![111u32];
+        merge_desc_kernel(&[5u32, 3], &[4, 2], 4, MergeKernel::Simd, &mut out);
+        assert_eq!(out, vec![111, 5, 4, 3, 2]);
+        let mut out = vec![222u32];
+        merge_desc_kernel(&[5u32, 3], &[4, 2], 4, MergeKernel::Scalar, &mut out);
+        assert_eq!(out, vec![222, 5, 4, 3, 2]);
+        // Large enough to actually hit a SIMD kernel.
+        let mut rng = Rng::new(775);
+        let (a, b) = gen_sorted_pair(&mut rng, 300, 200, Distribution::Uniform, gen_u32);
+        let mut simd = vec![1u32, 2];
+        merge_desc_kernel(&a, &b, 16, MergeKernel::Simd, &mut simd);
+        let mut scalar = vec![1u32, 2];
+        merge_desc_kernel(&a, &b, 16, MergeKernel::Scalar, &mut scalar);
+        assert_eq!(simd, scalar);
+    }
+
+    #[test]
+    fn rowpair_matches_scalar() {
+        let mut rng = Rng::new(776);
+        for n in [0usize, 1, 3, 4, 7, 8, 64, 65] {
+            let hi0: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+            let lo0: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+            let (mut hi_a, mut lo_a) = (hi0.clone(), lo0.clone());
+            rowpair_minmax(&mut hi_a, &mut lo_a, MergeKernel::Scalar);
+            let (mut hi_b, mut lo_b) = (hi0.clone(), lo0.clone());
+            rowpair_minmax(&mut hi_b, &mut lo_b, MergeKernel::Simd);
+            assert_eq!(hi_a, hi_b, "n={n}");
+            assert_eq!(lo_a, lo_b, "n={n}");
+            for i in 0..n {
+                assert_eq!(hi_a[i], hi0[i].max(lo0[i]));
+                assert_eq!(lo_a[i], hi0[i].min(lo0[i]));
+            }
+        }
+    }
+
+    #[test]
+    fn payload_records_have_no_simd_kernel() {
+        // The §6 stability carve-out is structural: record types do not
+        // implement `SimdMergeable`, and the signed/narrow keys that do
+        // take the default (scalar) path.
+        assert!(!<i32 as SimdMergeable>::simd_merge_desc(&[3, 1], &[2], 4, &mut [0; 3]));
+        assert!(!<u16 as SimdMergeable>::simd_merge_desc(&[3, 1], &[2], 4, &mut [0; 3]));
+    }
+
+    #[test]
+    fn dup_heavy_and_zipf_inputs() {
+        let mut rng = Rng::new(777);
+        for dist in [
+            Distribution::DupHeavy { alphabet: 2 },
+            Distribution::Zipf { s_x100: 150, n_ranks: 32 },
+        ] {
+            for w in [4usize, 8, 16] {
+                let (a, b) = gen_sorted_pair(&mut rng, 700, 300, dist, gen_u32);
+                both_kernels(&a, &b, w);
+            }
+        }
+    }
+}

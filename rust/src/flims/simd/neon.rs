@@ -1,0 +1,204 @@
+//! aarch64 NEON FLiMS merge kernels. NEON (ASIMD) is architectural on
+//! aarch64, so there is no runtime detection — every kernel is always
+//! available.
+//!
+//! Same structure as the x86 tier: the §3 selector as elementwise
+//! min/max of the candidate block against the bank-reversed carry
+//! block, the §3.2 butterfly as `ext`/`rev`/`trn` shuffles + min/max.
+//! `u32` runs at W ∈ {4, 8} (one/two q-registers), `u64` at W = 4 (two
+//! q-registers; `vcgtq_u64` + `vbslq_u64` stand in for the missing
+//! 64-bit min/max).
+
+use core::arch::aarch64::*;
+
+// ---------------------------------------------------------------------
+// u32: W = 4 (one q) and W = 8 (two q).
+// ---------------------------------------------------------------------
+
+#[inline]
+unsafe fn ld4(p: *const u32) -> uint32x4_t {
+    vld1q_u32(p)
+}
+
+#[inline]
+unsafe fn st4(p: *mut u32, x: uint32x4_t) {
+    vst1q_u32(p, x)
+}
+
+#[inline]
+unsafe fn ld8(p: *const u32) -> (uint32x4_t, uint32x4_t) {
+    (ld4(p), ld4(p.add(4)))
+}
+
+#[inline]
+unsafe fn st8(p: *mut u32, x: (uint32x4_t, uint32x4_t)) {
+    st4(p, x.0);
+    st4(p.add(4), x.1);
+}
+
+/// Full lane reversal `[x3, x2, x1, x0]`: reverse within 64-bit pairs,
+/// then swap the pairs.
+#[inline]
+unsafe fn rev4(x: uint32x4_t) -> uint32x4_t {
+    let r = vrev64q_u32(x);
+    vextq_u32::<2>(r, r)
+}
+
+#[inline]
+unsafe fn rev8(x: (uint32x4_t, uint32x4_t)) -> (uint32x4_t, uint32x4_t) {
+    (rev4(x.1), rev4(x.0))
+}
+
+#[inline]
+unsafe fn minmax4(a: uint32x4_t, b: uint32x4_t) -> (uint32x4_t, uint32x4_t) {
+    (vminq_u32(a, b), vmaxq_u32(a, b))
+}
+
+#[inline]
+unsafe fn stage4(a: uint32x4_t, b: uint32x4_t) -> (uint32x4_t, uint32x4_t) {
+    minmax4(a, b)
+}
+
+#[inline]
+unsafe fn stage8(
+    a: (uint32x4_t, uint32x4_t),
+    b: (uint32x4_t, uint32x4_t),
+) -> ((uint32x4_t, uint32x4_t), (uint32x4_t, uint32x4_t)) {
+    let (l0, h0) = minmax4(a.0, b.0);
+    let (l1, h1) = minmax4(a.1, b.1);
+    ((l0, l1), (h0, h1))
+}
+
+/// Descending butterfly over 4 lanes (stride 2 then stride 1, maxes to
+/// the lower index).
+#[inline]
+unsafe fn bf4(x: uint32x4_t) -> uint32x4_t {
+    // stride 2: pairs (0,2) and (1,3)
+    let t = vextq_u32::<2>(x, x); // [x2, x3, x0, x1]
+    let (mn, mx) = minmax4(x, t);
+    // want [mx0, mx1, mn2, mn3]
+    let x = vcombine_u32(vget_low_u32(mx), vget_high_u32(mn));
+    // stride 1: pairs (0,1) and (2,3)
+    let t = vrev64q_u32(x); // [x1, x0, x3, x2]
+    let (mn, mx) = minmax4(x, t);
+    // mx = [Ma, Ma, Mb, Mb], mn = [ma, ma, mb, mb] → [Ma, ma, Mb, mb]
+    vtrn1q_u32(mx, mn)
+}
+
+#[inline]
+unsafe fn bf8(x: (uint32x4_t, uint32x4_t)) -> (uint32x4_t, uint32x4_t) {
+    let (mn, mx) = minmax4(x.0, x.1);
+    (bf4(mx), bf4(mn))
+}
+
+gen_merge!(merge_u32_w4_neon, u32, 4, ld4, st4, rev4, stage4, bf4);
+gen_merge!(merge_u32_w8_neon, u32, 8, ld8, st8, rev8, stage8, bf8);
+
+// ---------------------------------------------------------------------
+// u64: W = 4 (two q-registers of 2 lanes each).
+// ---------------------------------------------------------------------
+
+#[inline]
+unsafe fn ld4q(p: *const u64) -> (uint64x2_t, uint64x2_t) {
+    (vld1q_u64(p), vld1q_u64(p.add(2)))
+}
+
+#[inline]
+unsafe fn st4q(p: *mut u64, x: (uint64x2_t, uint64x2_t)) {
+    vst1q_u64(p, x.0);
+    vst1q_u64(p.add(2), x.1);
+}
+
+#[inline]
+unsafe fn rev2q(x: uint64x2_t) -> uint64x2_t {
+    vextq_u64::<1>(x, x)
+}
+
+#[inline]
+unsafe fn rev4q(x: (uint64x2_t, uint64x2_t)) -> (uint64x2_t, uint64x2_t) {
+    (rev2q(x.1), rev2q(x.0))
+}
+
+#[inline]
+unsafe fn minmax2q(a: uint64x2_t, b: uint64x2_t) -> (uint64x2_t, uint64x2_t) {
+    let gt = vcgtq_u64(a, b);
+    (vbslq_u64(gt, b, a), vbslq_u64(gt, a, b))
+}
+
+#[inline]
+unsafe fn stage4q(
+    a: (uint64x2_t, uint64x2_t),
+    b: (uint64x2_t, uint64x2_t),
+) -> ((uint64x2_t, uint64x2_t), (uint64x2_t, uint64x2_t)) {
+    let (l0, h0) = minmax2q(a.0, b.0);
+    let (l1, h1) = minmax2q(a.1, b.1);
+    ((l0, l1), (h0, h1))
+}
+
+/// Descending sort of a bitonic 2-lane register.
+#[inline]
+unsafe fn bf2q(x: uint64x2_t) -> uint64x2_t {
+    let t = vextq_u64::<1>(x, x); // [x1, x0]
+    let (mn, mx) = minmax2q(x, t);
+    vtrn1q_u64(mx, mn) // [max, min]
+}
+
+#[inline]
+unsafe fn bf4q(x: (uint64x2_t, uint64x2_t)) -> (uint64x2_t, uint64x2_t) {
+    let (mn, mx) = minmax2q(x.0, x.1);
+    (bf2q(mx), bf2q(mn))
+}
+
+gen_merge!(merge_u64_w4_neon, u64, 4, ld4q, st4q, rev4q, stage4q, bf4q);
+
+// ---------------------------------------------------------------------
+// Dispatchers.
+// ---------------------------------------------------------------------
+
+/// u32 merge through the widest NEON kernel the config and input sizes
+/// allow.
+pub(super) fn merge_desc_u32(a: &[u32], b: &[u32], w: usize, dst: &mut [u32]) -> bool {
+    let min_side = a.len().min(b.len());
+    if min_side < 4 {
+        return false;
+    }
+    unsafe {
+        if w >= 8 && min_side >= 8 {
+            merge_u32_w8_neon(a, b, dst);
+        } else {
+            merge_u32_w4_neon(a, b, dst);
+        }
+    }
+    true
+}
+
+/// u64 merge (W = 4).
+pub(super) fn merge_desc_u64(a: &[u64], b: &[u64], w: usize, dst: &mut [u64]) -> bool {
+    let _ = w;
+    if a.len().min(b.len()) < 4 {
+        return false;
+    }
+    unsafe {
+        merge_u64_w4_neon(a, b, dst);
+    }
+    true
+}
+
+/// Elementwise CAS column over two u32 rows, 4 lanes per step.
+pub(super) fn rowpair_minmax_u32(hi: &mut [u32], lo: &mut [u32]) -> bool {
+    debug_assert_eq!(hi.len(), lo.len());
+    unsafe {
+        let n = hi.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            let a = ld4(hi.as_ptr().add(i));
+            let b = ld4(lo.as_ptr().add(i));
+            let (mn, mx) = minmax4(a, b);
+            st4(hi.as_mut_ptr().add(i), mx);
+            st4(lo.as_mut_ptr().add(i), mn);
+            i += 4;
+        }
+        super::rowpair_scalar(&mut hi[i..], &mut lo[i..]);
+    }
+    true
+}

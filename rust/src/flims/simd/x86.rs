@@ -1,0 +1,451 @@
+//! x86_64 FLiMS merge kernels: SSE2 baseline (part of the x86_64
+//! ABI — no detection needed) and AVX2 (runtime-detected once, cached).
+//!
+//! Every kernel is an instance of the `gen_merge!` skeleton from the
+//! parent module: the §3 selector as an elementwise unsigned min/max of
+//! the candidate block against the bank-reversed carry block, then the
+//! §3.2 butterfly as `log2(W)` shuffle + min/max + recombine stages.
+//! Multi-register blocks (W = 8 on SSE2, W = 16 on AVX2, W = 8 for
+//! `u64`) add one cross-register CAS per doubling before the
+//! intra-register stages — the classic bitonic-merge register network.
+//!
+//! SSE2 has no unsigned 32-bit min/max or 64-bit compare, so the SSE2
+//! tier emulates `minmax_epu32` with a sign-bias + `cmpgt` + mask
+//! select, and `u64` kernels exist only on AVX2 (whose `cmpgt_epi64` +
+//! `blendv` make the emulation cheap).
+
+use core::arch::x86_64::*;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// AVX2 support, detected once via `is_x86_feature_detected!` and
+/// cached (0 = unknown, 1 = absent, 2 = present).
+pub(super) fn have_avx2() -> bool {
+    static CACHE: AtomicU8 = AtomicU8::new(0);
+    match CACHE.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => {
+            let v = is_x86_feature_detected!("avx2");
+            CACHE.store(if v { 2 } else { 1 }, Ordering::Relaxed);
+            v
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// SSE2 tier: u32 at W = 4 (one xmm) and W = 8 (two xmm).
+// ---------------------------------------------------------------------
+
+#[inline]
+unsafe fn ld4(p: *const u32) -> __m128i {
+    _mm_loadu_si128(p as *const __m128i)
+}
+
+#[inline]
+unsafe fn st4(p: *mut u32, x: __m128i) {
+    _mm_storeu_si128(p as *mut __m128i, x)
+}
+
+#[inline]
+unsafe fn ld8(p: *const u32) -> (__m128i, __m128i) {
+    (ld4(p), ld4(p.add(4)))
+}
+
+#[inline]
+unsafe fn st8(p: *mut u32, x: (__m128i, __m128i)) {
+    st4(p, x.0);
+    st4(p.add(4), x.1);
+}
+
+/// Full lane reversal `[x3, x2, x1, x0]` — the §3.1 bank reversal.
+#[inline]
+unsafe fn rev4(x: __m128i) -> __m128i {
+    _mm_shuffle_epi32::<0x1B>(x)
+}
+
+#[inline]
+unsafe fn rev8(x: (__m128i, __m128i)) -> (__m128i, __m128i) {
+    (rev4(x.1), rev4(x.0))
+}
+
+/// Elementwise unsigned (min, max) — SSE2 has no `epu32` min/max, so
+/// bias both operands by the sign bit and select through the compare
+/// mask.
+#[inline]
+unsafe fn minmax4(a: __m128i, b: __m128i) -> (__m128i, __m128i) {
+    let bias = _mm_set1_epi32(i32::MIN);
+    let gt = _mm_cmpgt_epi32(_mm_xor_si128(a, bias), _mm_xor_si128(b, bias));
+    let mx = _mm_or_si128(_mm_and_si128(gt, a), _mm_andnot_si128(gt, b));
+    let mn = _mm_or_si128(_mm_and_si128(gt, b), _mm_andnot_si128(gt, a));
+    (mn, mx)
+}
+
+#[inline]
+unsafe fn stage4(a: __m128i, b: __m128i) -> (__m128i, __m128i) {
+    minmax4(a, b)
+}
+
+#[inline]
+unsafe fn stage8(
+    a: (__m128i, __m128i),
+    b: (__m128i, __m128i),
+) -> ((__m128i, __m128i), (__m128i, __m128i)) {
+    let (l0, h0) = minmax4(a.0, b.0);
+    let (l1, h1) = minmax4(a.1, b.1);
+    ((l0, l1), (h0, h1))
+}
+
+/// Descending butterfly over 4 lanes: stride 2 then stride 1, maxes to
+/// the lower index (§3.2).
+#[inline]
+unsafe fn bf4(x: __m128i) -> __m128i {
+    // stride 2: pairs (0,2) and (1,3)
+    let t = _mm_shuffle_epi32::<0x4E>(x); // [x2, x3, x0, x1]
+    let (mn, mx) = minmax4(x, t);
+    // mx = [M0, M1, M0, M1], mn = [m0, m1, m0, m1] → [M0, M1, m0, m1]
+    let x = _mm_unpacklo_epi64(mx, mn);
+    // stride 1: pairs (0,1) and (2,3)
+    let t = _mm_shuffle_epi32::<0xB1>(x); // [x1, x0, x3, x2]
+    let (mn, mx) = minmax4(x, t);
+    // mx = [Ma, Ma, Mb, Mb], mn = [ma, ma, mb, mb] → [Ma, ma, Mb, mb]
+    let lo = _mm_unpacklo_epi32(mx, mn);
+    let hi = _mm_unpackhi_epi32(mx, mn);
+    _mm_unpacklo_epi64(lo, hi)
+}
+
+/// W = 8 butterfly: one cross-register CAS (stride 4), then the 4-lane
+/// butterfly in each register.
+#[inline]
+unsafe fn bf8(x: (__m128i, __m128i)) -> (__m128i, __m128i) {
+    let (mn, mx) = minmax4(x.0, x.1);
+    (bf4(mx), bf4(mn))
+}
+
+gen_merge!(merge_u32_w4_sse2, u32, 4, ld4, st4, rev4, stage4, bf4);
+gen_merge!(merge_u32_w8_sse2, u32, 8, ld8, st8, rev8, stage8, bf8);
+
+// ---------------------------------------------------------------------
+// AVX2 tier: u32 at W = 8 (one ymm) and W = 16 (two ymm);
+//            u64 at W = 4 (one ymm) and W = 8 (two ymm).
+// ---------------------------------------------------------------------
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn ld8a(p: *const u32) -> __m256i {
+    _mm256_loadu_si256(p as *const __m256i)
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn st8a(p: *mut u32, x: __m256i) {
+    _mm256_storeu_si256(p as *mut __m256i, x)
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn ld16a(p: *const u32) -> (__m256i, __m256i) {
+    (ld8a(p), ld8a(p.add(8)))
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn st16a(p: *mut u32, x: (__m256i, __m256i)) {
+    st8a(p, x.0);
+    st8a(p.add(8), x.1);
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn rev8a(x: __m256i) -> __m256i {
+    let idx = _mm256_setr_epi32(7, 6, 5, 4, 3, 2, 1, 0);
+    _mm256_permutevar8x32_epi32(x, idx)
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn rev16a(x: (__m256i, __m256i)) -> (__m256i, __m256i) {
+    (rev8a(x.1), rev8a(x.0))
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn minmax8a(a: __m256i, b: __m256i) -> (__m256i, __m256i) {
+    (_mm256_min_epu32(a, b), _mm256_max_epu32(a, b))
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn stage8a(a: __m256i, b: __m256i) -> (__m256i, __m256i) {
+    minmax8a(a, b)
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn stage16a(
+    a: (__m256i, __m256i),
+    b: (__m256i, __m256i),
+) -> ((__m256i, __m256i), (__m256i, __m256i)) {
+    let (l0, h0) = minmax8a(a.0, b.0);
+    let (l1, h1) = minmax8a(a.1, b.1);
+    ((l0, l1), (h0, h1))
+}
+
+/// Descending butterfly over 8 lanes: strides 4, 2, 1; maxes blend to
+/// the lower indices.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn bf8a(x: __m256i) -> __m256i {
+    // stride 4: swap the 128-bit halves
+    let t = _mm256_permute2x128_si256::<0x01>(x, x);
+    let (mn, mx) = minmax8a(x, t);
+    let x = _mm256_blend_epi32::<0b1111_0000>(mx, mn);
+    // stride 2
+    let t = _mm256_shuffle_epi32::<0x4E>(x);
+    let (mn, mx) = minmax8a(x, t);
+    let x = _mm256_blend_epi32::<0b1100_1100>(mx, mn);
+    // stride 1
+    let t = _mm256_shuffle_epi32::<0xB1>(x);
+    let (mn, mx) = minmax8a(x, t);
+    _mm256_blend_epi32::<0b1010_1010>(mx, mn)
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn bf16a(x: (__m256i, __m256i)) -> (__m256i, __m256i) {
+    let (mn, mx) = minmax8a(x.0, x.1);
+    (bf8a(mx), bf8a(mn))
+}
+
+gen_merge!(
+    #[target_feature(enable = "avx2")]
+    merge_u32_w8_avx2,
+    u32,
+    8,
+    ld8a,
+    st8a,
+    rev8a,
+    stage8a,
+    bf8a
+);
+gen_merge!(
+    #[target_feature(enable = "avx2")]
+    merge_u32_w16_avx2,
+    u32,
+    16,
+    ld16a,
+    st16a,
+    rev16a,
+    stage16a,
+    bf16a
+);
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn ld4q(p: *const u64) -> __m256i {
+    _mm256_loadu_si256(p as *const __m256i)
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn st4q(p: *mut u64, x: __m256i) {
+    _mm256_storeu_si256(p as *mut __m256i, x)
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn ld8q(p: *const u64) -> (__m256i, __m256i) {
+    (ld4q(p), ld4q(p.add(4)))
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn st8q(p: *mut u64, x: (__m256i, __m256i)) {
+    st4q(p, x.0);
+    st4q(p.add(4), x.1);
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn rev4q(x: __m256i) -> __m256i {
+    _mm256_permute4x64_epi64::<0x1B>(x)
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn rev8q(x: (__m256i, __m256i)) -> (__m256i, __m256i) {
+    (rev4q(x.1), rev4q(x.0))
+}
+
+/// Elementwise unsigned 64-bit (min, max): sign-bias + `cmpgt_epi64`,
+/// then `blendv` through the lane-wide mask.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn minmax4q(a: __m256i, b: __m256i) -> (__m256i, __m256i) {
+    let bias = _mm256_set1_epi64x(i64::MIN);
+    let gt = _mm256_cmpgt_epi64(_mm256_xor_si256(a, bias), _mm256_xor_si256(b, bias));
+    let mx = _mm256_blendv_epi8(b, a, gt);
+    let mn = _mm256_blendv_epi8(a, b, gt);
+    (mn, mx)
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn stage4q(a: __m256i, b: __m256i) -> (__m256i, __m256i) {
+    minmax4q(a, b)
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn stage8q(
+    a: (__m256i, __m256i),
+    b: (__m256i, __m256i),
+) -> ((__m256i, __m256i), (__m256i, __m256i)) {
+    let (l0, h0) = minmax4q(a.0, b.0);
+    let (l1, h1) = minmax4q(a.1, b.1);
+    ((l0, l1), (h0, h1))
+}
+
+/// Descending butterfly over 4 u64 lanes: stride 2 then stride 1.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn bf4q(x: __m256i) -> __m256i {
+    // stride 2: pairs (0,2) and (1,3)
+    let t = _mm256_permute4x64_epi64::<0x4E>(x);
+    let (mn, mx) = minmax4q(x, t);
+    let x = _mm256_blend_epi32::<0b1111_0000>(mx, mn);
+    // stride 1: pairs (0,1) and (2,3) — swap the u64 halves of each
+    // 128-bit lane
+    let t = _mm256_shuffle_epi32::<0x4E>(x);
+    let (mn, mx) = minmax4q(x, t);
+    _mm256_blend_epi32::<0b1100_1100>(mx, mn)
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn bf8q(x: (__m256i, __m256i)) -> (__m256i, __m256i) {
+    let (mn, mx) = minmax4q(x.0, x.1);
+    (bf4q(mx), bf4q(mn))
+}
+
+gen_merge!(
+    #[target_feature(enable = "avx2")]
+    merge_u64_w4_avx2,
+    u64,
+    4,
+    ld4q,
+    st4q,
+    rev4q,
+    stage4q,
+    bf4q
+);
+gen_merge!(
+    #[target_feature(enable = "avx2")]
+    merge_u64_w8_avx2,
+    u64,
+    8,
+    ld8q,
+    st8q,
+    rev8q,
+    stage8q,
+    bf8q
+);
+
+// ---------------------------------------------------------------------
+// Dispatchers (safe entry points used by the SimdMergeable impls).
+// ---------------------------------------------------------------------
+
+/// Pick the kernel block width: the configured lane width clamped to
+/// the supported range, halved until both inputs can prime a block.
+fn pick_width(w: usize, min_side: usize, max: usize) -> usize {
+    let mut width = w.clamp(4, max).next_power_of_two();
+    if width > max {
+        width = max;
+    }
+    while width > min_side {
+        width /= 2;
+    }
+    width
+}
+
+/// u32 merge through the widest kernel the config, input sizes, and
+/// CPU allow. Returns `false` (scalar fallback) only when an input side
+/// cannot prime even the narrowest block.
+pub(super) fn merge_desc_u32(a: &[u32], b: &[u32], w: usize, dst: &mut [u32]) -> bool {
+    let width = pick_width(w, a.len().min(b.len()), 16);
+    if width < 4 {
+        return false;
+    }
+    unsafe {
+        match width {
+            4 => merge_u32_w4_sse2(a, b, dst),
+            8 if have_avx2() => merge_u32_w8_avx2(a, b, dst),
+            8 => merge_u32_w8_sse2(a, b, dst),
+            _ if have_avx2() => merge_u32_w16_avx2(a, b, dst),
+            _ => merge_u32_w8_sse2(a, b, dst),
+        }
+    }
+    true
+}
+
+/// u64 merge — AVX2 only (SSE2 lacks a usable 64-bit compare).
+pub(super) fn merge_desc_u64(a: &[u64], b: &[u64], w: usize, dst: &mut [u64]) -> bool {
+    if !have_avx2() {
+        return false;
+    }
+    let width = pick_width(w, a.len().min(b.len()), 8);
+    if width < 4 {
+        return false;
+    }
+    unsafe {
+        if width >= 8 {
+            merge_u64_w8_avx2(a, b, dst);
+        } else {
+            merge_u64_w4_avx2(a, b, dst);
+        }
+    }
+    true
+}
+
+/// Elementwise CAS column over two u32 rows (`hi` keeps maxes) — the
+/// sort-in-chunks network stage, 8 lanes per step on AVX2, 4 on SSE2,
+/// scalar tail.
+pub(super) fn rowpair_minmax_u32(hi: &mut [u32], lo: &mut [u32]) -> bool {
+    debug_assert_eq!(hi.len(), lo.len());
+    unsafe {
+        if have_avx2() {
+            rowpair_u32_avx2(hi, lo);
+        } else {
+            rowpair_u32_sse2(hi, lo);
+        }
+    }
+    true
+}
+
+unsafe fn rowpair_u32_sse2(hi: &mut [u32], lo: &mut [u32]) {
+    let n = hi.len();
+    let mut i = 0;
+    while i + 4 <= n {
+        let a = ld4(hi.as_ptr().add(i));
+        let b = ld4(lo.as_ptr().add(i));
+        let (mn, mx) = minmax4(a, b);
+        st4(hi.as_mut_ptr().add(i), mx);
+        st4(lo.as_mut_ptr().add(i), mn);
+        i += 4;
+    }
+    super::rowpair_scalar(&mut hi[i..], &mut lo[i..]);
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn rowpair_u32_avx2(hi: &mut [u32], lo: &mut [u32]) {
+    let n = hi.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let a = ld8a(hi.as_ptr().add(i));
+        let b = ld8a(lo.as_ptr().add(i));
+        let (mn, mx) = minmax8a(a, b);
+        st8a(hi.as_mut_ptr().add(i), mx);
+        st8a(lo.as_mut_ptr().add(i), mn);
+        i += 8;
+    }
+    super::rowpair_scalar(&mut hi[i..], &mut lo[i..]);
+}

@@ -6,9 +6,8 @@
 //! chunk-aligned; the tail run is sorted directly and folded in by a
 //! final unbalanced merge — the merger itself supports unequal inputs.
 
-use crate::flims::chunk_sort::{insertion_sort_desc, sort_chunks_columnar};
-use crate::flims::lanes::merge_desc_fast_slice;
-use crate::key::{Item, Key};
+use crate::flims::chunk_sort::{insertion_sort_desc, sort_chunks_columnar_with};
+use crate::flims::simd::{merge_desc_kernel_slice, MergeKernel, SimdMergeable};
 
 /// Tuning knobs for the sort pipeline.
 #[derive(Clone, Copy, Debug)]
@@ -44,10 +43,21 @@ impl SortConfig {
     }
 }
 
-/// Sort descending in place (buffer strategy internally ping-pongs).
+/// Sort descending in place (buffer strategy internally ping-pongs),
+/// on the process-default merge kernel ([`MergeKernel::env_default`]).
 pub fn sort_desc<T>(x: &mut Vec<T>, cfg: SortConfig)
 where
-    T: Item<K = T> + Key,
+    T: SimdMergeable,
+{
+    sort_desc_with(x, cfg, MergeKernel::env_default())
+}
+
+/// [`sort_desc`] on an explicit merge kernel: every merge pass (and the
+/// sort-in-chunks CAS columns) dispatches through `kernel` — the seam
+/// the config/CLI/service kernel knobs thread down to.
+pub fn sort_desc_with<T>(x: &mut Vec<T>, cfg: SortConfig, kernel: MergeKernel)
+where
+    T: SimdMergeable,
 {
     cfg.validate().expect("invalid SortConfig");
     let n = x.len();
@@ -61,7 +71,7 @@ where
 
     // Split: chunk-aligned bulk + tail.
     let bulk = (n / cfg.chunk) * cfg.chunk;
-    sort_chunks_columnar(&mut x[..bulk], cfg.chunk);
+    sort_chunks_columnar_with(&mut x[..bulk], cfg.chunk, kernel);
     insertion_sort_desc(&mut x[bulk..]);
 
     // Merge passes over the bulk, ping-ponging between x and a scratch
@@ -90,7 +100,7 @@ where
                     dst[pos..end].copy_from_slice(&src[pos..end]);
                 } else {
                     let (a, b) = (&src[pos..pos + run], &src[pos + run..end]);
-                    merge_desc_fast_slice(a, b, w, &mut dst[pos..end]);
+                    merge_desc_kernel_slice(a, b, w, kernel, &mut dst[pos..end]);
                 }
                 pos = end;
             }
@@ -108,7 +118,7 @@ where
     if bulk < n {
         {
             let (head, tail) = x.split_at(bulk);
-            merge_desc_fast_slice(head, tail, cfg.w, &mut scratch[..n]);
+            merge_desc_kernel_slice(head, tail, cfg.w, kernel, &mut scratch[..n]);
         }
         x.copy_from_slice(&scratch[..n]);
     }
@@ -126,7 +136,7 @@ pub fn adaptive_w(base_w: usize, run: usize) -> usize {
 /// Sort ascending in place (descending sort + reverse).
 pub fn sort_asc<T>(x: &mut Vec<T>, cfg: SortConfig)
 where
-    T: Item<K = T> + Key,
+    T: SimdMergeable,
 {
     sort_desc(x, cfg);
     x.reverse();
@@ -182,6 +192,27 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn kernels_sort_identically() {
+        // Forced-scalar and forced-SIMD pipelines must emit the same
+        // bytes for every width that changes the SIMD block choice.
+        let mut rng = Rng::new(66);
+        let v = gen_u32(&mut rng, 30_000, Distribution::Zipf { s_x100: 120, n_ranks: 64 });
+        for w in [4usize, 8, 16, 32] {
+            let cfg = SortConfig { w, chunk: 128 };
+            let mut scalar = v.clone();
+            sort_desc_with(&mut scalar, cfg, MergeKernel::Scalar);
+            let mut simd = v.clone();
+            sort_desc_with(&mut simd, cfg, MergeKernel::Simd);
+            assert_eq!(simd, scalar, "w={w}");
+        }
+        let mut v64: Vec<u64> = (0..20_000).map(|_| rng.next_u64()).collect();
+        let mut expect = v64.clone();
+        expect.sort_unstable_by(|a, b| b.cmp(a));
+        sort_desc_with(&mut v64, SortConfig::default(), MergeKernel::Simd);
+        assert_eq!(v64, expect);
     }
 
     #[test]

@@ -40,7 +40,13 @@ impl Key for u16 {
 /// negatives; the resulting `u32` order matches IEEE-754 numeric order
 /// (with -NaN lowest). This is how the PJRT runtime path and the native
 /// engines agree on float ordering.
+///
+/// `repr(transparent)` is load-bearing: the SIMD kernel tier
+/// ([`crate::flims::simd`]) reinterprets `F32Key` slices as `u32`
+/// slices (the derived `Ord` *is* the wrapped integer's order), so f32
+/// datasets ride the unsigned-integer merge kernels bit-exactly.
 #[derive(Copy, Clone, PartialEq, Eq, PartialOrd, Ord, Debug, Hash)]
+#[repr(transparent)]
 pub struct F32Key(pub u32);
 
 impl F32Key {

@@ -40,7 +40,12 @@
 //!
 //! * [`key`] — sort-item traits (keys, records, sentinels).
 //! * [`flims`] — the paper's algorithms 1–4 plus complete sort
-//!   (sequential and parallel).
+//!   (sequential and parallel). [`flims::simd`] is the explicit-SIMD
+//!   kernel tier (§8): the selector + butterfly written with
+//!   `core::arch` intrinsics (SSE2/AVX2/NEON, runtime-dispatched) for
+//!   the plain-key dtypes, selected by the `[core] kernel` config key,
+//!   the `FLIMS_KERNEL` env var, `--kernel`, or `kernel=` per request —
+//!   byte-identical output on every tier (see `docs/KERNELS.md`).
 //! * [`baselines`] — std-sort, LSD radix, samplesort, and the "basic"
 //!   bitonic merger the paper compares against.
 //! * [`hw`] — structural netlist generators + cycle-accurate simulator
@@ -98,5 +103,7 @@ pub mod util;
 pub use external::{
     sort_file, sort_file_dtype, sort_vec, Codec, Dtype, ExtItem, ExternalConfig, SpillStats,
 };
-pub use flims::{merge_asc, merge_desc, par_sort_desc, sort_asc, sort_desc, SortConfig};
+pub use flims::{
+    merge_asc, merge_desc, par_sort_desc, sort_asc, sort_desc, MergeKernel, SortConfig,
+};
 pub use key::{is_sorted_desc, F32Key, Item, Key, Kv, Kv64};

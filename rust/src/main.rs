@@ -3,11 +3,11 @@
 //! Subcommands:
 //!
 //! ```text
-//! flims sort     --n 1000000 [--dist uniform|zipf|dup] [--backend native|parallel|pjrt|external] [--w 16] [--chunk 128]
-//! flims merge    --n 65536 [--w 16]
+//! flims sort     --n 1000000 [--dist uniform|zipf|dup] [--backend native|parallel|pjrt|external] [--w 16] [--chunk 128] [--kernel auto|scalar|simd]
+//! flims merge    --n 65536 [--w 16] [--kernel auto|scalar|simd]
 //! flims sortfile --input data.u32 [--output out.u32] [--dtype u32|u64|kv|kv64|f32]
-//!                [--codec raw|delta] [--overlap on|off] [--budget-mb 64]
-//!                [--fan-in 8] [--threads T] [--prefetch B] [--gen N]
+//!                [--codec raw|delta] [--overlap on|off] [--kernel auto|scalar|simd]
+//!                [--budget-mb 64] [--fan-in 8] [--threads T] [--prefetch B] [--gen N]
 //! flims trace                              # the paper's Table 1 example
 //! flims simulate --design flims|flimsj|wms|mms|vms|basic --w 8 [--skew] [--dup]
 //! flims report   table2|table3|fig13 [--data-bits 64]
@@ -31,7 +31,9 @@ use flims::coordinator::{BatcherConfig, Router, Service};
 use flims::data::{gen_u32, gen_u64, Distribution};
 use flims::key::{F32Key, Item, Kv, Kv64};
 use flims::flims::scalar::{FlimsMerger, Variant};
-use flims::flims::{merge_desc, par_sort_desc, sort_desc, SortConfig};
+use flims::flims::simd::{merge_desc_kernel, MergeKernel};
+use flims::flims::sort::sort_desc_with;
+use flims::flims::{par_sort_desc, SortConfig};
 use flims::flims::parallel::ParSortConfig;
 use flims::hw::{self, Design, SimConfig};
 use flims::key::is_sorted_desc;
@@ -102,6 +104,9 @@ fn load_config(f: &HashMap<String, String>) -> Result<AppConfig, String> {
     if let Some(t) = f.get("threads") {
         cfg.threads = t.parse().map_err(|_| "--threads must be an integer".to_string())?;
     }
+    if let Some(k) = f.get("kernel") {
+        cfg.kernel = MergeKernel::parse(k).map_err(|e| format!("--kernel: {e}"))?;
+    }
     if let Some(d) = f.get("dir") {
         cfg.artifacts_dir = d.clone();
     }
@@ -142,11 +147,13 @@ fn print_help() {
          commands:\n\
            sort      --n N [--dist uniform|dup|zipf|sorted|constant]\n\
                      [--backend native|parallel|pjrt|external|std|radix|samplesort]\n\
-                     [--w W] [--chunk C] [--threads T] [--config FILE]\n\
-           merge     --n N [--w W]\n\
+                     [--w W] [--chunk C] [--threads T] [--kernel auto|scalar|simd]\n\
+                     [--config FILE]\n\
+           merge     --n N [--w W] [--kernel auto|scalar|simd]\n\
            sortfile  --input F [--output F] [--dtype u32|u64|kv|kv64|f32]\n\
                      [--codec raw|delta] [--overlap on|off] [--budget-mb M]\n\
                      [--fan-in K] [--threads T] [--prefetch B]\n\
+                     [--kernel auto|scalar|simd]\n\
                      [--gen N [--dist D] [--seed S]]   (raw LE record datasets)\n\
            trace     (replays the paper's Table 1 example, w=4)\n\
            simulate  --design flims|flimsj|wms|mms|vms|basic --w W [--skew] [--dup] [--n N]\n\
@@ -166,12 +173,15 @@ fn cmd_sort(f: &HashMap<String, String>) -> Result<(), String> {
 
     let t = Instant::now();
     match backend {
-        "native" => sort_desc(&mut data, SortConfig { w: cfg.w, chunk: cfg.chunk }),
+        "native" => {
+            sort_desc_with(&mut data, SortConfig { w: cfg.w, chunk: cfg.chunk }, cfg.kernel)
+        }
         "parallel" => par_sort_desc(
             &mut data,
             ParSortConfig {
                 base: SortConfig { w: cfg.w, chunk: cfg.chunk },
                 threads: cfg.threads,
+                kernel: cfg.kernel,
                 ..Default::default()
             },
         ),
@@ -210,10 +220,11 @@ fn cmd_sort(f: &HashMap<String, String>) -> Result<(), String> {
         return Err("output is not sorted!".into());
     }
     println!(
-        "sorted {} u32 ({}) with {} in {:?} — {:.1} M elem/s",
+        "sorted {} u32 ({}) with {} (kernel {}) in {:?} — {:.1} M elem/s",
         n,
         dist.name(),
         backend,
+        cfg.kernel.resolved_name(),
         dt,
         n as f64 / dt.as_secs_f64() / 1e6
     );
@@ -229,15 +240,17 @@ fn cmd_merge(f: &HashMap<String, String>) -> Result<(), String> {
     a.sort_unstable_by(|x, y| y.cmp(x));
     b.sort_unstable_by(|x, y| y.cmp(x));
     let t = Instant::now();
-    let out = merge_desc(&a, &b, cfg.w);
+    let mut out = Vec::with_capacity(2 * n);
+    merge_desc_kernel(&a, &b, cfg.w, cfg.kernel, &mut out);
     let dt = t.elapsed();
     if !is_sorted_desc(&out) {
         return Err("merge output not sorted!".into());
     }
     println!(
-        "merged 2x{} u32 at w={} in {:?} — {:.1} M elem/s",
+        "merged 2x{} u32 at w={} (kernel {}) in {:?} — {:.1} M elem/s",
         n,
         cfg.w,
+        cfg.kernel.resolved_name(),
         dt,
         (2 * n) as f64 / dt.as_secs_f64() / 1e6
     );
@@ -316,6 +329,12 @@ fn cmd_sortfile(f: &HashMap<String, String>) -> Result<(), String> {
     }
     if let Some(o) = f.get("overlap") {
         ext.overlap = external::parse_overlap(o)?;
+    }
+    // (--kernel already landed in `ext` through load_config →
+    // external_config; accept it here too for symmetry with the other
+    // sortfile knobs.)
+    if let Some(k) = f.get("kernel") {
+        ext.kernel = MergeKernel::parse(k).map_err(|e| format!("--kernel: {e}"))?;
     }
     ext.validate()?;
     let input = PathBuf::from(
@@ -416,8 +435,9 @@ fn sortfile_typed<T: GenRecord>(
         stats.codec_decode_us as f64 / 1000.0,
     );
     println!(
-        "  schedule {} | phase1 {:.1} ms | phase2 {:.1} ms | wall {:.1} ms | overlapped {:.1} ms",
+        "  schedule {} | kernel {} | phase1 {:.1} ms | phase2 {:.1} ms | wall {:.1} ms | overlapped {:.1} ms",
         if ext.overlap { "pipelined" } else { "serial" },
+        ext.kernel.resolved_name(),
         stats.phase1_us as f64 / 1000.0,
         stats.phase2_us as f64 / 1000.0,
         stats.wall_us as f64 / 1000.0,

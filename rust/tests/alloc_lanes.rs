@@ -1,0 +1,68 @@
+//! Allocation regression test for `merge_asc`: it used to clone both
+//! inputs into reversed temporaries (two O(n) allocations) before
+//! merging. It now merges through reversed *views* and reverses only
+//! the output, in place — so the bytes allocated per call must stay
+//! within the output buffer plus small O(w) lane state, never scale
+//! with 2× the input again.
+//!
+//! Measured with a counting global allocator; this lives in its own
+//! integration-test binary so the counter sees only this file's tests.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCATED_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATED_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATED_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn merge_asc_allocates_only_the_output() {
+    const N: usize = 1 << 16; // per side
+    let w = 16usize;
+    let a: Vec<u32> = (0..N as u32).map(|x| x.wrapping_mul(7)).collect();
+    let b: Vec<u32> = (0..N as u32).map(|x| x.wrapping_mul(13)).collect();
+    let mut a = a;
+    let mut b = b;
+    a.sort_unstable();
+    b.sort_unstable();
+
+    // Warm up once (lazy runtime allocations, kernel detection, &c.).
+    let warm = flims::merge_asc(&a, &b, w);
+    assert_eq!(warm.len(), 2 * N);
+
+    let before = ALLOCATED_BYTES.load(Ordering::Relaxed);
+    let out = flims::merge_asc(&a, &b, w);
+    let delta = ALLOCATED_BYTES.load(Ordering::Relaxed) - before;
+    assert_eq!(out.len(), 2 * N);
+    assert!(out.windows(2).all(|p| p[0] <= p[1]), "output must be ascending");
+
+    let output_bytes = (2 * N * std::mem::size_of::<u32>()) as u64;
+    // Output buffer + O(w) lane state + slack. The old implementation
+    // also cloned both inputs (another `output_bytes`), which this
+    // bound rejects.
+    let budget = output_bytes + 16 * 1024;
+    assert!(
+        delta <= budget,
+        "merge_asc allocated {delta} bytes for a {output_bytes}-byte output \
+         (budget {budget}) — did the reversed-copy regression return?"
+    );
+}
