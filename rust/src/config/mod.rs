@@ -191,6 +191,14 @@ impl AppConfig {
         if let Some(v) = raw.get("external", "codec") {
             self.external.codec = Codec::parse(v)?;
         }
+        if let Some(v) = raw.get("obs", "trace_dir") {
+            // The observability section maps onto the external config's
+            // trace_dir — every external sort auto-writes a Chrome
+            // trace-event JSON into the directory (empty = disable,
+            // overriding a FLIMS_TRACE_DIR env default).
+            self.external.trace_dir =
+                if v.is_empty() { None } else { Some(std::path::PathBuf::from(v)) };
+        }
         self.validate()
     }
 
@@ -357,6 +365,24 @@ batch_max = 16
         let mut cfg = AppConfig::default();
         let err = cfg.apply(&raw).unwrap_err();
         assert!(err.contains("core.kernel: unknown kernel 'gpu'"), "{err}");
+    }
+
+    #[test]
+    fn obs_trace_dir_applies_and_flows_into_external() {
+        let raw = RawConfig::parse("[obs]\ntrace_dir = \"/tmp/flims-traces\"\n").unwrap();
+        let mut cfg = AppConfig::default();
+        cfg.apply(&raw).unwrap();
+        assert_eq!(
+            cfg.external_config().trace_dir,
+            Some(std::path::PathBuf::from("/tmp/flims-traces"))
+        );
+
+        // An empty value disables auto-tracing even over an env default.
+        let raw = RawConfig::parse("[obs]\ntrace_dir = \"\"\n").unwrap();
+        let mut cfg = AppConfig::default();
+        cfg.external.trace_dir = Some(std::path::PathBuf::from("/elsewhere"));
+        cfg.apply(&raw).unwrap();
+        assert_eq!(cfg.external_config().trace_dir, None);
     }
 
     #[test]

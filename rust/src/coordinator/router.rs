@@ -9,17 +9,18 @@
 //! request size (and `sort_file_external` sorts whole datasets on disk).
 
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::config::AppConfig;
-use crate::external::{self, Codec, Dtype, SpillStats};
+use crate::external::{self, Codec, Dtype, ExternalConfig, SpillStats};
 use crate::flims::parallel::{par_sort_desc, ParSortConfig};
 use crate::flims::simd::{merge_desc_kernel, MergeKernel};
 use crate::flims::sort::{sort_desc_with, SortConfig};
 use crate::key::F32Key;
-use crate::metrics::ServiceMetrics;
+use crate::metrics::{ServiceMetrics, SortLabels, SortSample};
+use crate::obs::{self, progress, Trace};
 use crate::runtime::RuntimeHandle;
 
 /// Execution backend for a request.
@@ -54,12 +55,20 @@ pub struct Router {
     runtime: Option<RuntimeHandle>,
     /// Shared service metrics, updated on every routed request.
     pub metrics: Arc<ServiceMetrics>,
+    /// The most recent external sort's labels + stats (the `stats`
+    /// verb's `last[…]` block).
+    last_sort: Mutex<Option<(SortLabels, SpillStats)>>,
 }
 
 impl Router {
     /// Build a router over the given config and (optional) PJRT runtime.
     pub fn new(cfg: AppConfig, runtime: Option<RuntimeHandle>) -> Self {
-        Router { cfg, runtime, metrics: Arc::new(ServiceMetrics::default()) }
+        Router {
+            cfg,
+            runtime,
+            metrics: Arc::new(ServiceMetrics::default()),
+            last_sort: Mutex::new(None),
+        }
     }
 
     /// Whether the PJRT runtime loaded (the `pjrt` backend is servable).
@@ -110,8 +119,9 @@ impl Router {
                 return Err(anyhow!("pjrt backend sorts f32 only (use 'sortf')"));
             }
             Backend::External => {
-                let (out, stats) = external::sort_vec(&data, &self.cfg.external_config())?;
-                self.record_spill(&stats);
+                let ext = self.cfg.external_config();
+                let (out, stats) = external::sort_vec(&data, &ext)?;
+                self.record_spill(&stats, Self::labels_for(&ext, Dtype::U32));
                 out
             }
         };
@@ -126,7 +136,9 @@ impl Router {
     /// merge-kernel tier (scalar vs explicit SIMD — also same output
     /// bytes; `None` = the `[external]`/`[core]` config defaults).
     /// Memory stays within the configured budget however large the
-    /// file is.
+    /// file is. `trace` writes a Chrome trace-event JSON of the sort to
+    /// that path (the `--trace` flag / `trace=` protocol option),
+    /// independent of the config's `trace_dir` auto-tracing.
     pub fn sort_file_external(
         &self,
         input: &Path,
@@ -134,6 +146,7 @@ impl Router {
         codec: Option<Codec>,
         overlap: Option<bool>,
         kernel: Option<MergeKernel>,
+        trace: Option<&Path>,
     ) -> Result<(PathBuf, SpillStats)> {
         self.metrics.requests.inc();
         let dtype = dtype.unwrap_or(self.cfg.external.dtype);
@@ -151,14 +164,34 @@ impl Router {
         if let Some(kernel) = kernel {
             ext.kernel = kernel;
         }
-        let stats = external::sort_file_dtype(input, &output, &ext, dtype)?;
+        let stats = match trace {
+            None => external::sort_file_dtype(input, &output, &ext, dtype)?,
+            Some(trace_path) => {
+                let handle = Trace::enabled();
+                let stats =
+                    external::sort_file_dtype_traced(input, &output, &ext, dtype, &handle)?;
+                obs::chrome::write_file(&handle, trace_path)
+                    .with_context(|| format!("writing trace {}", trace_path.display()))?;
+                stats
+            }
+        };
         self.metrics.elements_sorted.add(stats.elements);
-        self.record_spill(&stats);
+        self.record_spill(&stats, Self::labels_for(&ext, dtype));
         self.metrics.latency.observe(t.elapsed());
         Ok((output, stats))
     }
 
-    fn record_spill(&self, stats: &SpillStats) {
+    /// The exposition label set an external sort ran under.
+    fn labels_for(ext: &ExternalConfig, dtype: Dtype) -> SortLabels {
+        SortLabels {
+            dtype: dtype.name(),
+            codec: ext.codec_for(dtype).name(),
+            kernel: ext.kernel.resolved_name(),
+            overlap: ext.overlap,
+        }
+    }
+
+    fn record_spill(&self, stats: &SpillStats, labels: SortLabels) {
         self.metrics.external_sorts.inc();
         self.metrics.runs_spilled.add(stats.runs_spilled);
         self.metrics.bytes_spilled.add(stats.bytes_spilled);
@@ -172,6 +205,46 @@ impl Router {
         self.metrics.prefetch_misses.add(stats.prefetch_misses);
         self.metrics.codec_encode_us.add(stats.codec_encode_us);
         self.metrics.codec_decode_us.add(stats.codec_decode_us);
+        self.metrics.per_sort.record(
+            labels,
+            &SortSample {
+                elements: stats.elements,
+                runs_spilled: stats.runs_spilled,
+                bytes_spilled: stats.bytes_spilled,
+                bytes_spilled_raw: stats.bytes_spilled_raw,
+                merge_passes: stats.merge_passes,
+                wall_us: stats.wall_us,
+                overlap_us: stats.overlap_us,
+                codec_encode_us: stats.codec_encode_us,
+                codec_decode_us: stats.codec_decode_us,
+            },
+        );
+        *self.last_sort.lock().unwrap() = Some((labels, *stats));
+    }
+
+    /// The most recent external sort's labels + stats, if any sort ran
+    /// since startup (or the last `stats reset`).
+    pub fn last_sort(&self) -> Option<(SortLabels, SpillStats)> {
+        *self.last_sort.lock().unwrap()
+    }
+
+    /// Zero every counter, histogram, and per-label aggregate, and
+    /// forget the last sort (`stats reset`). The process-wide progress
+    /// totals are left alone — they are monotonic by contract.
+    pub fn reset_metrics(&self) {
+        self.metrics.reset();
+        *self.last_sort.lock().unwrap() = None;
+    }
+
+    /// The full Prometheus text exposition: the service metric set, the
+    /// per-label sort aggregates, and the process-wide progress
+    /// counters, terminated by `# EOF` (OpenMetrics-style, and the
+    /// marker TCP clients read up to).
+    pub fn prometheus(&self) -> String {
+        let mut out = self.metrics.prometheus();
+        progress::prometheus_into(&mut out);
+        out.push_str("# EOF");
+        out
     }
 
     /// Sort f32 values descending on the requested backend.
@@ -344,7 +417,8 @@ mod tests {
         let mut cfg = AppConfig::default();
         cfg.external.mem_budget_bytes = 4096;
         let r = Router::new(cfg, None);
-        let (out_path, stats) = r.sort_file_external(&input, None, None, None, None).unwrap();
+        let (out_path, stats) =
+            r.sort_file_external(&input, None, None, None, None, None).unwrap();
         assert_eq!(out_path, dir.join("data.u32.sorted"));
         assert_eq!(stats.elements, 5000);
 
@@ -367,7 +441,7 @@ mod tests {
         cfg.external.mem_budget_bytes = 4096;
         let r = Router::new(cfg, None);
         let (out_path, stats) =
-            r.sort_file_external(&input, None, Some(Codec::Delta), None, None).unwrap();
+            r.sort_file_external(&input, None, Some(Codec::Delta), None, None, None).unwrap();
         assert_eq!(stats.elements, 20_000);
         assert!(
             stats.bytes_spilled < stats.bytes_spilled_raw,
@@ -400,7 +474,7 @@ mod tests {
         cfg.external.mem_budget_bytes = 8192; // 1024-record Kv runs
         let r = Router::new(cfg, None);
         let (out_path, stats) = r
-            .sort_file_external(&input, Some(crate::external::Dtype::Kv), None, None, None)
+            .sort_file_external(&input, Some(crate::external::Dtype::Kv), None, None, None, None)
             .unwrap();
         assert_eq!(stats.elements, 4000);
 
@@ -428,7 +502,7 @@ mod tests {
             let input = dir.join(format!("data-{overlap}.u32"));
             crate::external::format::write_raw(&input, &v).unwrap();
             let (out_path, stats) =
-                r.sort_file_external(&input, None, None, Some(overlap), None).unwrap();
+                r.sort_file_external(&input, None, None, Some(overlap), None, None).unwrap();
             assert_eq!(stats.elements, 20_000);
             assert!(stats.merge_passes >= 2, "multi-pass workload expected");
             if !overlap {
@@ -460,7 +534,7 @@ mod tests {
             let input = dir.join(format!("data-{}.u32", kernel.name()));
             crate::external::format::write_raw(&input, &v).unwrap();
             let (out_path, stats) =
-                r.sort_file_external(&input, None, None, None, Some(kernel)).unwrap();
+                r.sort_file_external(&input, None, None, None, Some(kernel), None).unwrap();
             assert_eq!(stats.elements, 20_000);
             outputs.push(std::fs::read(&out_path).unwrap());
         }
@@ -488,5 +562,67 @@ mod tests {
         let _ = r.merge_u32(&[2], &[1]);
         assert_eq!(r.metrics.requests.get(), 2);
         assert_eq!(r.metrics.elements_sorted.get(), 5);
+    }
+
+    #[test]
+    fn sort_file_external_trace_writes_chrome_json() {
+        let dir = std::env::temp_dir().join(format!("flims-router-trc-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("data.u32");
+        let mut rng = Rng::new(308);
+        let v = gen_u32(&mut rng, 10_000, Distribution::Uniform);
+        crate::external::format::write_raw(&input, &v).unwrap();
+
+        let mut cfg = AppConfig::default();
+        cfg.external.mem_budget_bytes = 4096;
+        let r = Router::new(cfg, None);
+        let trace_path = dir.join("sort.trace.json");
+        let (out_path, stats) = r
+            .sort_file_external(&input, None, None, None, None, Some(&trace_path))
+            .unwrap();
+        assert_eq!(stats.elements, 10_000);
+
+        // Tracing must not perturb the sorted bytes.
+        let mut expect = v;
+        expect.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(crate::external::format::read_raw::<u32>(&out_path).unwrap(), expect);
+
+        let json = std::fs::read_to_string(&trace_path).unwrap();
+        assert!(json.starts_with("{\"traceEvents\":["), "{}", &json[..40.min(json.len())]);
+        for name in ["chunk_sort", "seal_run", "group_merge"] {
+            assert!(json.contains(&format!("\"name\":\"{name}\"")), "missing {name} span");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn labeled_metrics_and_last_sort_flow_from_external_sorts() {
+        let mut cfg = AppConfig::default();
+        cfg.external.mem_budget_bytes = 4096;
+        let r = Router::new(cfg, None);
+        assert!(r.last_sort().is_none());
+        let mut rng = Rng::new(309);
+        let v = gen_u32(&mut rng, 10_000, Distribution::Uniform);
+        r.sort_u32(v, Backend::External).unwrap();
+
+        let (labels, stats) = r.last_sort().expect("external sort must record last_sort");
+        assert_eq!(labels.dtype, "u32");
+        assert!(stats.wall_us > 0, "wall clock must be recorded");
+        assert_eq!(stats.elements, 10_000);
+
+        let text = r.prometheus();
+        assert!(text.ends_with("# EOF"), "exposition must end with # EOF");
+        let series = format!(
+            "flims_sorts_total{{dtype=\"u32\",codec=\"{}\",kernel=\"{}\",overlap=\"{}\"}} 1",
+            labels.codec,
+            labels.kernel,
+            if labels.overlap { "on" } else { "off" },
+        );
+        assert!(text.contains(&series), "missing {series} in:\n{text}");
+
+        r.reset_metrics();
+        assert!(r.last_sort().is_none());
+        assert_eq!(r.metrics.external_sorts.get(), 0);
+        assert!(!r.prometheus().contains("flims_sorts_total{"), "per-label series must reset");
     }
 }

@@ -10,24 +10,42 @@
 //! batch <f1> <f2> …             →  ok <sorted>  (goes through the batcher)
 //! merge <a...> | <b...>         →  ok <merged>  (desc-sorted u32 inputs)
 //! sortfile external <path> [dtype=<d>] [codec=<c>] [overlap=<o>] [kernel=<k>]
+//!                   [trace=<t>]
 //!                               →  ok <n> <output-path>  (raw record file,
 //!                                   sorted descending to <path>.sorted;
 //!                                   d = u32|u64|kv|kv64|f32,
 //!                                   c = raw|delta, o = on|off (the
 //!                                   pipelined vs serial schedule — same
-//!                                   output bytes) and k =
+//!                                   output bytes), k =
 //!                                   auto|scalar|simd (the merge-kernel
-//!                                   tier — also same output bytes),
-//!                                   defaults from the `[external]` /
-//!                                   `[core]` config sections; only
-//!                                   trailing `dtype=`/`codec=`/
-//!                                   `overlap=`/`kernel=`-prefixed
-//!                                   tokens are treated as options, so
-//!                                   paths containing spaces keep
-//!                                   working. A bad value is a one-line
-//!                                   `err` naming the offending
-//!                                   argument)
+//!                                   tier — also same output bytes) and
+//!                                   t = a path to write a Chrome
+//!                                   trace-event JSON of the sort to
+//!                                   (load it in chrome://tracing or
+//!                                   Perfetto; tracing never changes the
+//!                                   output bytes), defaults from the
+//!                                   `[external]` / `[core]` config
+//!                                   sections; only trailing `dtype=`/
+//!                                   `codec=`/`overlap=`/`kernel=`/
+//!                                   `trace=`-prefixed tokens are
+//!                                   treated as options, so paths
+//!                                   containing spaces keep working. A
+//!                                   bad value is a one-line `err`
+//!                                   naming the offending argument)
 //! stats                         →  ok <metrics summary> kernel=<active>
+//!                                   [last[…] — the most recent external
+//!                                   sort's labels + timings]
+//! stats reset                   →  ok reset  (zeroes every counter,
+//!                                   histogram, per-label aggregate and
+//!                                   the `last[…]` block)
+//! progress                      →  ok <live progress counters>  (runs
+//!                                   sealed / merges fired / elements +
+//!                                   bytes out, process-wide)
+//! metrics                       →  Prometheus text exposition ending
+//!                                   with `# EOF` (the ONE multi-line
+//!                                   response; clients read until the
+//!                                   terminator — see
+//!                                   docs/OBSERVABILITY.md)
 //! quit                          →  (closes the connection)
 //! ```
 //!
@@ -140,7 +158,7 @@ impl Service {
             }
             "sortfile" => {
                 let usage = "usage: sortfile external <path> [dtype=<d>] [codec=<c>] \
-                             [overlap=<o>] [kernel=<k>]";
+                             [overlap=<o>] [kernel=<k>] [trace=<t>]";
                 let (backend, rest) =
                     rest.split_once(' ').ok_or_else(|| anyhow!("{usage}"))?;
                 let backend = Backend::parse(backend)?;
@@ -148,15 +166,16 @@ impl Service {
                     bail!("sortfile requires the 'external' backend");
                 }
                 // Only explicit trailing `dtype=` / `codec=` /
-                // `overlap=` / `kernel=` tokens are options — a bad
-                // value is a loud error *naming the argument*, and
-                // paths containing spaces are untouched (PR 1 grammar,
-                // extended).
+                // `overlap=` / `kernel=` / `trace=` tokens are options
+                // — a bad value is a loud error *naming the argument*,
+                // and paths containing spaces are untouched (PR 1
+                // grammar, extended).
                 let mut path = rest.trim();
                 let mut dtype = None;
                 let mut codec = None;
                 let mut overlap = None;
                 let mut kernel = None;
+                let mut trace: Option<std::path::PathBuf> = None;
                 while !path.is_empty() {
                     // The last whitespace-separated token; the whole
                     // string when no space remains.
@@ -188,6 +207,13 @@ impl Service {
                         if kernel.replace(k).is_some() {
                             bail!("kernel argument: given more than once");
                         }
+                    } else if let Some(name) = tail.strip_prefix("trace=") {
+                        if name.is_empty() {
+                            bail!("trace argument: empty path");
+                        }
+                        if trace.replace(std::path::PathBuf::from(name)).is_some() {
+                            bail!("trace argument: given more than once");
+                        }
                     } else {
                         break;
                     }
@@ -202,16 +228,44 @@ impl Service {
                     codec,
                     overlap,
                     kernel,
+                    trace.as_deref(),
                 )?;
                 Ok(format!("ok {} {}", stats.elements, output.display()))
             }
-            "stats" => Ok(format!(
-                "ok {} kernel={}",
-                self.router.metrics.report(),
-                self.router.kernel_name()
-            )),
+            "stats" => match rest.trim() {
+                "" => {
+                    let mut out = format!(
+                        "ok {} kernel={}",
+                        self.router.metrics.report(),
+                        self.router.kernel_name()
+                    );
+                    if let Some((labels, stats)) = self.router.last_sort() {
+                        out.push_str(&format!(
+                            " last[dtype={} codec={} overlap={} wall_us={} overlap_us={} \
+                             codec_enc_us={} codec_dec_us={}]",
+                            labels.dtype,
+                            labels.codec,
+                            if labels.overlap { "on" } else { "off" },
+                            stats.wall_us,
+                            stats.overlap_us,
+                            stats.codec_encode_us,
+                            stats.codec_decode_us,
+                        ));
+                    }
+                    Ok(out)
+                }
+                "reset" => {
+                    self.router.reset_metrics();
+                    Ok("ok reset".into())
+                }
+                other => Err(anyhow!("unknown stats subcommand '{other}'")),
+            },
+            "progress" => Ok(format!("ok {}", crate::obs::progress::report())),
+            // The one multi-line response: Prometheus text exposition,
+            // terminated by `# EOF` so clients know where it stops.
+            "metrics" => Ok(self.router.prometheus()),
             "quit" => Ok("bye".into()),
-            other => Err(anyhow!("unknown command '{other}'")),
+            other => Err(anyhow!("unknown command: {other}")),
         }
     }
 
@@ -394,6 +448,109 @@ mod tests {
             assert!(!resp.contains('\n'), "response must stay one line");
         }
         assert_eq!(s.router.metrics.errors.get(), 4);
+    }
+
+    #[test]
+    fn unknown_command_names_the_verb_with_a_colon() {
+        let s = svc();
+        assert_eq!(s.handle_line("frobnicate"), "err unknown command: frobnicate");
+        assert_eq!(s.handle_line("frobnicate the widget"), "err unknown command: frobnicate");
+    }
+
+    #[test]
+    fn metrics_command_returns_prometheus_text() {
+        let s = svc();
+        let _ = s.handle_line("sort native 3 1 2");
+        let text = s.handle_line("metrics");
+        assert!(!text.starts_with("ok "), "raw exposition, no ok prefix");
+        assert!(!text.starts_with("err "), "{text}");
+        assert!(text.contains("# TYPE flims_requests_total counter"), "{text}");
+        assert!(text.contains("\nflims_requests_total 1\n"), "{text}");
+        assert!(text.contains("flims_request_latency_seconds_bucket{le="), "{text}");
+        assert!(text.ends_with("# EOF"), "clients read until the terminator");
+    }
+
+    #[test]
+    fn progress_command_reports_live_counters() {
+        let s = svc();
+        let resp = s.handle_line("progress");
+        assert!(resp.starts_with("ok active="), "{resp}");
+        for field in ["runs_sealed=", "merges_fired=", "elements_out=", "bytes_out="] {
+            assert!(resp.contains(field), "{resp}");
+        }
+    }
+
+    #[test]
+    fn stats_reset_zeroes_and_forgets_the_last_sort() {
+        use crate::external::format::write_raw;
+        let dir = std::env::temp_dir().join(format!("flims-svc-reset-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("req.u32");
+        let data: Vec<u32> = (0..3000u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        write_raw(&input, &data).unwrap();
+
+        let s = svc();
+        assert!(!s.handle_line("stats").contains("last["), "no sort ran yet");
+        let resp = s.handle_line(&format!("sortfile external {}", input.display()));
+        assert!(resp.starts_with("ok 3000 "), "{resp}");
+        let stats = s.handle_line("stats");
+        assert!(stats.contains(" last[dtype=u32 codec="), "{stats}");
+        assert!(stats.contains(" wall_us="), "{stats}");
+
+        assert_eq!(s.handle_line("stats reset"), "ok reset");
+        let stats = s.handle_line("stats");
+        assert!(stats.contains("requests=0"), "{stats}");
+        assert!(!stats.contains("last["), "reset must forget the last sort: {stats}");
+        let resp = s.handle_line("stats frobnicate");
+        assert!(resp.starts_with("err unknown stats subcommand"), "{resp}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sortfile_with_trace_argument_writes_chrome_json() {
+        use crate::external::format::{read_raw, write_raw};
+        let dir = std::env::temp_dir().join(format!("flims-svc-trc-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("req.u32");
+        let data: Vec<u32> = (0..20_000u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        write_raw(&input, &data).unwrap();
+
+        // Tight budget so the traced request really spills.
+        let mut app = crate::config::AppConfig::default();
+        app.external.mem_budget_bytes = 4096;
+        let router = Arc::new(Router::new(app, None));
+        let s = Service::new(
+            router,
+            BatcherConfig { max_batch: 2, window: Duration::from_micros(1) },
+        );
+
+        let trace_path = dir.join("req.trace.json");
+        let resp = s.handle_line(&format!(
+            "sortfile external {} codec=delta trace={}",
+            input.display(),
+            trace_path.display()
+        ));
+        let expect_path = format!("{}.sorted", input.display());
+        assert_eq!(resp, format!("ok 20000 {expect_path}"));
+
+        let json = std::fs::read_to_string(&trace_path).unwrap();
+        assert!(json.starts_with("{\"traceEvents\":["), "{}", &json[..40.min(json.len())]);
+        assert!(json.contains("\"name\":\"seal_run\""), "traced sort must record spans");
+
+        // Tracing must not perturb the sorted bytes.
+        let mut expect = data;
+        expect.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(read_raw::<u32>(Path::new(&expect_path)).unwrap(), expect);
+
+        // Bad values are one-line errors naming the offending argument.
+        let resp = s.handle_line(&format!("sortfile external {} trace=", input.display()));
+        assert!(resp.contains("trace argument: empty path"), "{resp}");
+        let resp = s.handle_line(&format!(
+            "sortfile external {} trace=/tmp/a.json trace=/tmp/b.json",
+            input.display()
+        ));
+        assert!(resp.contains("trace argument: given more than once"), "{resp}");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

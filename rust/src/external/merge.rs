@@ -47,6 +47,7 @@ use super::stream::{
     WriterPool,
 };
 use super::ExternalConfig;
+use crate::obs::{progress, SpanKind, Trace};
 
 /// The pass/group structure for merging `k` runs at a given fan-in.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -178,10 +179,14 @@ fn merge_group<T: ExtItem>(
     writer: RunWriter<T>,
     pool: Option<&WriterPool>,
 ) -> Result<(RunFile, u64)> {
+    let t = counters.trace.begin();
     let mut tree = open_group::<T>(group, cfg, counters)?;
     let mut dbw = DoubleBufWriter::spawn_with(writer, 1, pool)?;
     let written = pump(tree.as_mut(), |chunk| dbw.write_block(chunk))?;
-    Ok((dbw.finish()?.finish()?, written))
+    let out = dbw.finish()?.finish()?;
+    counters.trace.end(SpanKind::GroupMerge, t, written);
+    progress::merge_fired();
+    Ok((out, written))
 }
 
 /// Merge `runs` into `sink` per `MergePlan::new(runs.len(), fan_in)` —
@@ -195,9 +200,14 @@ pub fn merge_runs<T: ExtItem>(
     spill: &SpillManager,
     pool: Option<&WriterPool>,
     sink: &mut dyn RecordSink<T>,
+    trace: &Trace,
 ) -> Result<MergeOutcome> {
     let plan = MergePlan::new(runs.len(), cfg.fan_in);
-    let counters = Arc::new(PrefetchCounters::default());
+    // The counters carry the trace so group merges (worker threads) and
+    // prefetch waits (leaf readers) can record spans without threading
+    // another handle through every layer.
+    let counters =
+        Arc::new(PrefetchCounters { trace: trace.clone(), ..Default::default() });
     let threads = cfg.effective_threads().max(1);
     let codec = cfg.codec_for(T::DTYPE);
 
@@ -309,8 +319,13 @@ pub fn merge_runs<T: ExtItem>(
     debug_assert_eq!(runs.len(), plan.final_width);
     let mut elements = 0u64;
     if !runs.is_empty() {
+        let t = trace.begin();
         let mut tree = open_group::<T>(&runs, cfg, &counters)?;
-        elements = pump(tree.as_mut(), |chunk| sink.write_block(chunk))?;
+        elements = pump(tree.as_mut(), |chunk| {
+            progress::block_out(chunk.len() as u64, (chunk.len() * T::WIRE_BYTES) as u64);
+            sink.write_block(chunk)
+        })?;
+        trace.end(SpanKind::FinalDrain, t, elements);
         drop(tree); // joins prefetch threads before the files go away
         for run in &runs {
             spill.consume(run)?;
@@ -585,9 +600,11 @@ pub fn sort_pipelined<T: ExtItem>(
     spill: &SpillManager,
     pool: Option<&WriterPool>,
     sink: &mut dyn RecordSink<T>,
+    trace: &Trace,
 ) -> Result<PipelineOutcome> {
     let threads = cfg.effective_threads().max(1);
-    let counters = Arc::new(PrefetchCounters::default());
+    let counters =
+        Arc::new(PrefetchCounters { trace: trace.clone(), ..Default::default() });
     let cancel = AtomicBool::new(false);
 
     std::thread::scope(|scope| -> Result<PipelineOutcome> {
@@ -627,7 +644,7 @@ pub fn sort_pipelined<T: ExtItem>(
         let cancel_ref = &cancel;
         scope.spawn(move || {
             let t = Instant::now();
-            let result = generate_runs_streaming::<T>(src, cfg, spill, pool, &mut |run| {
+            let result = generate_runs_streaming::<T>(src, cfg, spill, pool, trace, &mut |run| {
                 if cancel_ref.load(Ordering::Relaxed) {
                     anyhow::bail!("sort aborted");
                 }
@@ -747,8 +764,13 @@ pub fn sort_pipelined<T: ExtItem>(
         let mut elements = 0u64;
         if !final_runs.is_empty() {
             phase2_start.get_or_insert_with(Instant::now);
+            let t = trace.begin();
             let mut tree = open_group::<T>(&final_runs, cfg, &counters)?;
-            elements = pump(tree.as_mut(), |chunk| sink.write_block(chunk))?;
+            elements = pump(tree.as_mut(), |chunk| {
+                progress::block_out(chunk.len() as u64, (chunk.len() * T::WIRE_BYTES) as u64);
+                sink.write_block(chunk)
+            })?;
+            trace.end(SpanKind::FinalDrain, t, elements);
             drop(tree); // joins prefetch threads before the files go away
             for run in &final_runs {
                 spill.consume(run)?;

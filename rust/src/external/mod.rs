@@ -99,6 +99,7 @@ pub use stream::{
 use crate::flims::simd::MergeKernel;
 use crate::flims::sort::SortConfig;
 use crate::key::{F32Key, Kv, Kv64};
+use crate::obs::{self, progress, SpanKind, Trace};
 
 /// Tuning for the external sort.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -148,6 +149,17 @@ pub struct ExternalConfig {
     /// `FLIMS_KERNEL` environment variable (unset = `auto`) so CI can
     /// run the whole suite on the scalar tier.
     pub kernel: MergeKernel,
+    /// When set, every sort records a span trace (phase-1 chunk sorts,
+    /// sealed runs, group merges, codec and prefetch activity) and
+    /// auto-writes it into this directory as Chrome trace-event JSON on
+    /// completion (`flims-trace-<pid>-<seq>.json` — load it in
+    /// Perfetto; see `docs/OBSERVABILITY.md`). `None` disables tracing:
+    /// the [`Trace`] handle threaded through the pipeline is a no-op
+    /// that allocates nothing and never touches the clock, and the
+    /// sorted output is byte-identical either way. Defaults from the
+    /// `FLIMS_TRACE_DIR` environment variable (unset/empty = off) so CI
+    /// can run the whole suite traced.
+    pub trace_dir: Option<PathBuf>,
 }
 
 impl Default for ExternalConfig {
@@ -165,7 +177,19 @@ impl Default for ExternalConfig {
             tmp_dir: None,
             disk_budget_bytes: None,
             kernel: MergeKernel::env_default(),
+            trace_dir: trace_dir_default(),
         }
+    }
+}
+
+/// The `trace_dir` default: the `FLIMS_TRACE_DIR` environment variable
+/// when set and non-empty, else off. Any non-empty value is a valid
+/// path, so unlike `FLIMS_EXTERNAL_OVERLAP` there is nothing to warn
+/// about.
+fn trace_dir_default() -> Option<PathBuf> {
+    match std::env::var_os("FLIMS_TRACE_DIR") {
+        Some(v) if !v.is_empty() => Some(PathBuf::from(v)),
+        _ => None,
     }
 }
 
@@ -254,6 +278,17 @@ impl ExternalConfig {
     pub fn sort_config(&self) -> SortConfig {
         SortConfig { w: self.w, chunk: self.chunk }
     }
+
+    /// The trace handle sorts started through the non-`_traced` entry
+    /// points record into: enabled iff [`trace_dir`](Self::trace_dir)
+    /// is set.
+    pub fn make_trace(&self) -> Trace {
+        if self.trace_dir.is_some() {
+            Trace::enabled()
+        } else {
+            Trace::disabled()
+        }
+    }
 }
 
 /// What an external sort did — surfaced through `metrics` by the
@@ -314,7 +349,26 @@ pub fn sort_stream<T: ExtItem>(
     sink: &mut dyn RecordSink<T>,
     cfg: &ExternalConfig,
 ) -> Result<SpillStats> {
+    let trace = cfg.make_trace();
+    let stats = sort_stream_traced(src, sink, cfg, &trace)?;
+    if let Some(dir) = &cfg.trace_dir {
+        obs::chrome::write_auto(&trace, dir);
+    }
+    Ok(stats)
+}
+
+/// [`sort_stream`] recording spans into a caller-owned [`Trace`] — the
+/// entry point for callers that render or write the trace themselves
+/// (`--trace <path>`, the protocol's `trace=` option). Never writes a
+/// trace file; `cfg.trace_dir` is ignored here.
+pub fn sort_stream_traced<T: ExtItem>(
+    src: &mut (dyn RecordSource<T> + Send),
+    sink: &mut dyn RecordSink<T>,
+    cfg: &ExternalConfig,
+    trace: &Trace,
+) -> Result<SpillStats> {
     cfg.validate().map_err(|e| anyhow!("{e}"))?;
+    let _active = progress::sort_started();
     let spill = SpillManager::new(cfg.tmp_dir.clone(), cfg.disk_budget_bytes)?;
     // One long-lived writer thread per concurrent spill writer (the
     // phase-1 producer + up to `threads` group merges, plus slack) —
@@ -322,17 +376,23 @@ pub fn sort_stream<T: ExtItem>(
     let pool = WriterPool::new(cfg.effective_threads() + 2)?;
     let wall = Instant::now();
     let (outcome, input_elems, phase1_us, phase2_us) = if cfg.overlap {
-        let p = sort_pipelined(src, cfg, &spill, Some(&pool), sink)?;
+        let p = sort_pipelined(src, cfg, &spill, Some(&pool), sink, trace)?;
         (p.outcome, p.input_elems, p.phase1_us, p.phase2_us)
     } else {
         let t1 = Instant::now();
-        let runs = generate_runs(src, cfg, &spill, Some(&pool))?;
+        let runs = generate_runs(src, cfg, &spill, Some(&pool), trace)?;
         let phase1_us = t1.elapsed().as_micros() as u64;
         let input_elems: u64 = runs.iter().map(|r| r.elems).sum();
         let t2 = Instant::now();
-        let outcome = merge_runs(runs, cfg, &spill, Some(&pool), sink)?;
+        let outcome = merge_runs(runs, cfg, &spill, Some(&pool), sink, trace)?;
         (outcome, input_elems, phase1_us, t2.elapsed().as_micros() as u64)
     };
+    // Decode work happens on the prefetch/reader threads in slices too
+    // small to span individually; attribute the total as one aggregate
+    // span over the sort (see the span taxonomy in OBSERVABILITY.md).
+    if outcome.codec_decode_us > 0 {
+        trace.record_dur(SpanKind::CodecDecode, wall, outcome.codec_decode_us * 1000, 0);
+    }
     let wall_us = wall.elapsed().as_micros() as u64;
     if outcome.elements != input_elems {
         return Err(anyhow!(
@@ -369,6 +429,22 @@ pub fn sort_file<T: ExtItem>(
     output: &Path,
     cfg: &ExternalConfig,
 ) -> Result<SpillStats> {
+    let trace = cfg.make_trace();
+    let stats = sort_file_traced::<T>(input, output, cfg, &trace)?;
+    if let Some(dir) = &cfg.trace_dir {
+        obs::chrome::write_auto(&trace, dir);
+    }
+    Ok(stats)
+}
+
+/// [`sort_file`] recording spans into a caller-owned [`Trace`] (see
+/// [`sort_stream_traced`]); never writes a trace file itself.
+pub fn sort_file_traced<T: ExtItem>(
+    input: &Path,
+    output: &Path,
+    cfg: &ExternalConfig,
+    trace: &Trace,
+) -> Result<SpillStats> {
     let same_file = input == output
         || match (input.canonicalize(), output.canonicalize()) {
             (Ok(a), Ok(b)) => a == b,
@@ -385,7 +461,7 @@ pub fn sort_file<T: ExtItem>(
     // to a writer thread instead of blocking on the output disk.
     let writer = RawWriter::<T>::create(output)?;
     let mut sink = DoubleBufWriter::spawn(writer, 2)?;
-    let stats = sort_stream(&mut src, &mut sink, cfg)?;
+    let stats = sort_stream_traced(&mut src, &mut sink, cfg, trace)?;
     let written = sink.finish()?.finish()?;
     debug_assert_eq!(written, stats.elements);
     Ok(stats)
@@ -405,6 +481,24 @@ pub fn sort_file_dtype(
         Dtype::Kv => sort_file::<Kv>(input, output, cfg),
         Dtype::Kv64 => sort_file::<Kv64>(input, output, cfg),
         Dtype::F32 => sort_file::<F32Key>(input, output, cfg),
+    }
+}
+
+/// [`sort_file_dtype`] recording spans into a caller-owned [`Trace`]
+/// (see [`sort_stream_traced`]); never writes a trace file itself.
+pub fn sort_file_dtype_traced(
+    input: &Path,
+    output: &Path,
+    cfg: &ExternalConfig,
+    dtype: Dtype,
+    trace: &Trace,
+) -> Result<SpillStats> {
+    match dtype {
+        Dtype::U32 => sort_file_traced::<u32>(input, output, cfg, trace),
+        Dtype::U64 => sort_file_traced::<u64>(input, output, cfg, trace),
+        Dtype::Kv => sort_file_traced::<Kv>(input, output, cfg, trace),
+        Dtype::Kv64 => sort_file_traced::<Kv64>(input, output, cfg, trace),
+        Dtype::F32 => sort_file_traced::<F32Key>(input, output, cfg, trace),
     }
 }
 
@@ -607,6 +701,26 @@ mod tests {
             stats.bytes_spilled, stats.bytes_spilled_raw,
             "f32 must fall back to the raw codec"
         );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn trace_dir_auto_writes_chrome_json() {
+        let dir = std::env::temp_dir().join(format!("flims-tracedir-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = ExternalConfig { trace_dir: Some(dir.clone()), ..tiny_cfg() };
+        let mut rng = Rng::new(110);
+        let data = gen_u32(&mut rng, 10_000, Distribution::Uniform);
+        let (got, _) = sort_vec(&data, &cfg).unwrap();
+        assert!(is_sorted_desc(&got));
+        let traces: Vec<_> =
+            std::fs::read_dir(&dir).unwrap().map(|e| e.unwrap().path()).collect();
+        assert_eq!(traces.len(), 1, "one sort, one trace file: {traces:?}");
+        let json = std::fs::read_to_string(&traces[0]).unwrap();
+        assert!(json.starts_with("{\"traceEvents\":["), "{json}");
+        assert!(json.contains("\"name\":\"chunk_sort\""), "{json}");
+        assert!(json.contains("\"name\":\"seal_run\""), "{json}");
+        assert!(json.contains("\"name\":\"group_merge\""), "{json}");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -35,6 +35,7 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
@@ -43,6 +44,7 @@ use super::format::{ExtItem, RawReader, RunFile, RunWriter, RUN_HEADER_BYTES};
 use super::spill::SpillManager;
 use super::stream::{DoubleBufWriter, WriterPool};
 use super::ExternalConfig;
+use crate::obs::{progress, SpanKind, Trace};
 
 /// Source of unsorted record blocks — a dataset file, an in-memory
 /// slice, or anything else that can feed the run generator.
@@ -110,6 +112,8 @@ struct PendingSpill<T: ExtItem> {
     path: PathBuf,
     /// Budget bytes claimed for this write until it registers.
     reserved: u64,
+    /// Seal-span start (run creation), when tracing.
+    t0: Option<Instant>,
     dbw: DoubleBufWriter<T, RunWriter<T>>,
 }
 
@@ -125,7 +129,9 @@ impl<T: ExtItem> PendingSpill<T> {
         pool: Option<&WriterPool>,
         codec: Codec,
         buf: Vec<T>,
+        trace: &Trace,
     ) -> Result<Self> {
+        let t0 = trace.begin();
         let reserved = RUN_HEADER_BYTES + (buf.len() * T::WIRE_BYTES) as u64;
         spill.reserve(reserved)?;
         let started = (|| {
@@ -137,7 +143,7 @@ impl<T: ExtItem> PendingSpill<T> {
                 let _ = std::fs::remove_file(&path);
                 return Err(e);
             }
-            Ok(PendingSpill { path, reserved, dbw })
+            Ok(PendingSpill { path, reserved, t0, dbw })
         })();
         if started.is_err() {
             spill.release(reserved);
@@ -148,12 +154,20 @@ impl<T: ExtItem> PendingSpill<T> {
     /// Wait for the write to land, swap the reservation for the
     /// finished run's registration, then hand it to `emit` (the
     /// collector's push, or the pipeline channel).
-    fn finish(self, spill: &SpillManager, emit: &mut RunEmit<'_>) -> Result<()> {
+    fn finish(self, spill: &SpillManager, trace: &Trace, emit: &mut RunEmit<'_>) -> Result<()> {
         match self.dbw.finish().and_then(|w| w.finish()) {
             Ok(run) => {
                 // register keeps the run tracked even when it reports
                 // a budget breach, so SpillManager::drop still cleans it.
                 spill.register_reserved(&run, self.reserved)?;
+                // The seal span covers create → registered; the encode
+                // span shares its start and attributes the codec CPU
+                // measured on the writer thread, so it nests inside.
+                if let Some(t0) = self.t0 {
+                    trace.record_dur(SpanKind::CodecEncode, t0, run.encode_ns, run.elems);
+                }
+                trace.end(SpanKind::SealRun, self.t0, run.elems);
+                progress::run_sealed();
                 emit(run)
             }
             Err(e) => {
@@ -181,9 +195,10 @@ pub fn generate_runs<T: ExtItem>(
     cfg: &ExternalConfig,
     spill: &SpillManager,
     pool: Option<&WriterPool>,
+    trace: &Trace,
 ) -> Result<Vec<RunFile>> {
     let mut runs = Vec::new();
-    generate_runs_streaming(src, cfg, spill, pool, &mut |run| {
+    generate_runs_streaming(src, cfg, spill, pool, trace, &mut |run| {
         runs.push(run);
         Ok(())
     })?;
@@ -202,13 +217,14 @@ pub fn generate_runs_streaming<T: ExtItem>(
     cfg: &ExternalConfig,
     spill: &SpillManager,
     pool: Option<&WriterPool>,
+    trace: &Trace,
     emit: &mut RunEmit<'_>,
 ) -> Result<()> {
     let threads = cfg.effective_threads();
     if threads <= 1 {
-        generate_runs_serial(src, cfg, spill, pool, emit)
+        generate_runs_serial(src, cfg, spill, pool, trace, emit)
     } else {
-        generate_runs_parallel(src, cfg, spill, pool, emit, threads)
+        generate_runs_parallel(src, cfg, spill, pool, trace, emit, threads)
     }
 }
 
@@ -217,6 +233,7 @@ fn generate_runs_serial<T: ExtItem>(
     cfg: &ExternalConfig,
     spill: &SpillManager,
     pool: Option<&WriterPool>,
+    trace: &Trace,
     emit: &mut RunEmit<'_>,
 ) -> Result<()> {
     let codec = cfg.codec_for(T::DTYPE);
@@ -231,14 +248,16 @@ fn generate_runs_serial<T: ExtItem>(
             if buf.is_empty() {
                 break;
             }
+            let t = trace.begin();
             T::sort_run(&mut buf, cfg.sort_config(), cfg.kernel);
+            trace.end(SpanKind::ChunkSort, t, buf.len() as u64);
             if let Some(prev) = in_flight.take() {
-                prev.finish(spill, emit)?;
+                prev.finish(spill, trace, emit)?;
             }
-            in_flight = Some(PendingSpill::start(spill, pool, codec, buf)?);
+            in_flight = Some(PendingSpill::start(spill, pool, codec, buf, trace)?);
         }
         if let Some(prev) = in_flight.take() {
-            prev.finish(spill, emit)?;
+            prev.finish(spill, trace, emit)?;
         }
         Ok(())
     })();
@@ -253,6 +272,7 @@ fn generate_runs_parallel<T: ExtItem>(
     cfg: &ExternalConfig,
     spill: &SpillManager,
     pool: Option<&WriterPool>,
+    trace: &Trace,
     emit: &mut RunEmit<'_>,
     threads: usize,
 ) -> Result<()> {
@@ -272,10 +292,13 @@ fn generate_runs_parallel<T: ExtItem>(
         for _ in 0..threads {
             let rx = Arc::clone(&work_rx);
             let tx = done_tx.clone();
+            let trace = trace.clone();
             s.spawn(move || loop {
                 let job = rx.lock().unwrap().recv();
                 let Ok((seq, mut buf)) = job else { break };
+                let t = trace.begin();
                 T::sort_run(&mut buf, sort_cfg, kernel);
+                trace.end(SpanKind::ChunkSort, t, buf.len() as u64);
                 if tx.send((seq, buf)).is_err() {
                     break;
                 }
@@ -319,14 +342,14 @@ fn generate_runs_parallel<T: ExtItem>(
                 pending.insert(seq, buf);
                 while let Some(buf) = pending.remove(&next_write) {
                     if let Some(prev) = in_flight.take() {
-                        prev.finish(spill, emit)?;
+                        prev.finish(spill, trace, emit)?;
                     }
-                    in_flight = Some(PendingSpill::start(spill, pool, codec, buf)?);
+                    in_flight = Some(PendingSpill::start(spill, pool, codec, buf, trace)?);
                     next_write += 1;
                 }
             }
             if let Some(prev) = in_flight.take() {
-                prev.finish(spill, emit)?;
+                prev.finish(spill, trace, emit)?;
             }
             Ok(())
         })();
@@ -369,7 +392,7 @@ mod tests {
         let data = gen_u32(&mut rng, 5000, Distribution::Uniform);
         let spill = SpillManager::new(None, None).unwrap();
         let mut src = SliceSource::new(&data);
-        let runs = generate_runs(&mut src, &cfg, &spill, None).unwrap();
+        let runs = generate_runs(&mut src, &cfg, &spill, None, &Trace::disabled()).unwrap();
 
         // 5000 elements at 1024/run → 5 runs; sizes sum to the input.
         assert_eq!(runs.len(), 5);
@@ -389,6 +412,35 @@ mod tests {
     }
 
     #[test]
+    fn traced_run_generation_records_spans() {
+        for threads in [1usize, 4] {
+            let cfg = ExternalConfig { threads, ..small_cfg() };
+            let mut rng = Rng::new(96);
+            let data = gen_u32(&mut rng, 5000, Distribution::Uniform);
+            let spill = SpillManager::new(None, None).unwrap();
+            let mut src = SliceSource::new(&data);
+            let trace = Trace::enabled();
+            let runs = generate_runs(&mut src, &cfg, &spill, None, &trace).unwrap();
+            let spans = trace.spans();
+            let count = |k| spans.iter().filter(|s| s.kind == k).count();
+            assert_eq!(count(SpanKind::ChunkSort), runs.len(), "threads={threads}");
+            assert_eq!(count(SpanKind::SealRun), runs.len(), "threads={threads}");
+            assert_eq!(count(SpanKind::CodecEncode), runs.len(), "threads={threads}");
+            // Every encode span shares its seal span's start and lane
+            // and nests inside it.
+            for e in spans.iter().filter(|s| s.kind == SpanKind::CodecEncode) {
+                let seal = spans.iter().find(|s| {
+                    s.kind == SpanKind::SealRun && s.lane == e.lane && s.start_ns == e.start_ns
+                });
+                assert!(
+                    seal.is_some_and(|s| s.dur_ns >= e.dur_ns),
+                    "threads={threads}: encode span not nested in a seal span: {e:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn parallel_run_layout_matches_serial() {
         // The same input must produce byte-identical, identically-named
         // runs whatever the worker count.
@@ -399,7 +451,7 @@ mod tests {
             let cfg = ExternalConfig { threads, ..small_cfg() };
             let spill = SpillManager::new(None, None).unwrap();
             let mut src = SliceSource::new(&data);
-            let runs = generate_runs(&mut src, &cfg, &spill, None).unwrap();
+            let runs = generate_runs(&mut src, &cfg, &spill, None, &Trace::disabled()).unwrap();
             layouts.push(
                 runs.iter()
                     .map(|r| {
@@ -427,7 +479,7 @@ mod tests {
             let spill = SpillManager::new(None, None).unwrap();
             let mut src = SliceSource::new(&data);
             let mut seen: Vec<RunFile> = Vec::new();
-            generate_runs_streaming(&mut src, &cfg, &spill, None, &mut |run| {
+            generate_runs_streaming(&mut src, &cfg, &spill, None, &Trace::disabled(), &mut |run| {
                 // Emitted runs are already registered and on disk.
                 assert!(run.path.exists(), "emitted run must be sealed");
                 seen.push(run);
@@ -460,13 +512,20 @@ mod tests {
         let spill = SpillManager::new(None, None).unwrap();
         let mut src = SliceSource::new(&data);
         let mut emitted = 0usize;
-        let err = generate_runs_streaming::<u32>(&mut src, &cfg, &spill, None, &mut |_| {
-            emitted += 1;
-            if emitted == 3 {
-                anyhow::bail!("downstream gave up");
-            }
-            Ok(())
-        })
+        let err = generate_runs_streaming::<u32>(
+            &mut src,
+            &cfg,
+            &spill,
+            None,
+            &Trace::disabled(),
+            &mut |_| {
+                emitted += 1;
+                if emitted == 3 {
+                    anyhow::bail!("downstream gave up");
+                }
+                Ok(())
+            },
+        )
         .unwrap_err();
         assert!(format!("{err:#}").contains("downstream gave up"));
         assert_eq!(emitted, 3);
@@ -485,7 +544,7 @@ mod tests {
         };
         let spill = SpillManager::new(None, None).unwrap();
         let mut src = SliceSource::new(&data);
-        let runs = generate_runs(&mut src, &cfg, &spill, None).unwrap();
+        let runs = generate_runs(&mut src, &cfg, &spill, None, &Trace::disabled()).unwrap();
         assert_eq!(runs.len(), 3);
         let run_elems = cfg.run_elems_for(Kv::WIRE_BYTES);
         assert_eq!(run_elems, 1024);
@@ -503,7 +562,7 @@ mod tests {
             let cfg = ExternalConfig { threads, ..small_cfg() };
             let spill = SpillManager::new(None, None).unwrap();
             let mut src = SliceSource::new(&[] as &[u32]);
-            let runs = generate_runs(&mut src, &cfg, &spill, None).unwrap();
+            let runs = generate_runs(&mut src, &cfg, &spill, None, &Trace::disabled()).unwrap();
             assert!(runs.is_empty());
             assert_eq!(spill.runs_created(), 0);
         }
@@ -531,7 +590,7 @@ mod tests {
         let cfg = small_cfg();
         let spill = SpillManager::new(None, None).unwrap();
         let mut src = Dribble { left: 3000, next: 1 };
-        let runs = generate_runs(&mut src, &cfg, &spill, None).unwrap();
+        let runs = generate_runs(&mut src, &cfg, &spill, None, &Trace::disabled()).unwrap();
         assert_eq!(runs.len(), 3);
         assert_eq!(runs[0].elems, 1024);
         assert_eq!(runs[2].elems, 3000 - 2048);
@@ -556,8 +615,10 @@ mod tests {
         let cfg = ExternalConfig { threads: 4, ..small_cfg() };
         let spill = SpillManager::new(None, None).unwrap();
         let mut src = Failing { fed: 0 };
-        let err =
-            format!("{:#}", generate_runs(&mut src, &cfg, &spill, None).unwrap_err());
+        let err = format!(
+            "{:#}",
+            generate_runs(&mut src, &cfg, &spill, None, &Trace::disabled()).unwrap_err()
+        );
         assert!(err.contains("simulated I/O failure"), "{err}");
     }
 }

@@ -85,6 +85,9 @@ pub struct PrefetchCounters {
     /// Nanoseconds spent in codec decode across all leaves (shared with
     /// each [`RunReader`] via [`RunReader::open_with`]).
     pub decode_ns: Arc<AtomicU64>,
+    /// The owning sort's span trace: group merges and prefetch waits
+    /// record through it (the default is a disabled, no-op trace).
+    pub trace: crate::obs::Trace,
 }
 
 /// Leaf: a double-buffered run reader. A dedicated thread reads ahead up
@@ -148,13 +151,20 @@ impl<T: ExtItem> RunStream<T> for PrefetchStream<T> {
                 self.counters.hits.fetch_add(1, Ordering::Relaxed);
                 Some(b)
             }
-            Err(TryRecvError::Empty) => match rx.recv() {
-                Ok(b) => {
-                    self.counters.misses.fetch_add(1, Ordering::Relaxed);
-                    Some(b)
-                }
-                Err(_) => None,
-            },
+            Err(TryRecvError::Empty) => {
+                // The merge is about to stall on the disk — span the
+                // wait so it shows up on the merge lane in traces.
+                let t = self.counters.trace.begin();
+                let received = match rx.recv() {
+                    Ok(b) => {
+                        self.counters.misses.fetch_add(1, Ordering::Relaxed);
+                        Some(b)
+                    }
+                    Err(_) => None,
+                };
+                self.counters.trace.end(crate::obs::SpanKind::PrefetchWait, t, 1);
+                received
+            }
             Err(TryRecvError::Disconnected) => None,
         };
         let Some(block) = received else {

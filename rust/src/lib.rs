@@ -69,6 +69,11 @@
 //!   the prefetch threads, so codec CPU and disk I/O overlap the merge.
 //!   Key ties keep input order end to end (§6).
 //! * [`coordinator`] — sorting-as-a-service: router + dynamic batcher.
+//! * [`obs`] — observability: the per-sort [`obs::Trace`] span ring
+//!   rendered as Chrome trace-event JSON ([`obs::chrome`]), plus the
+//!   process-wide progress counters ([`obs::progress`]) behind the
+//!   `progress` verb and the Prometheus exposition served by the
+//!   `metrics` verb (see `docs/OBSERVABILITY.md`).
 //! * [`runtime`] — PJRT client wrapper executing `artifacts/*.hlo.txt`
 //!   (a stub unless built with the `pjrt` feature).
 //! * [`config`] / [`metrics`] / [`data`] / [`util`] — framework glue.
@@ -93,6 +98,7 @@ pub mod hw;
 #[allow(missing_docs)]
 pub mod key;
 pub mod metrics;
+pub mod obs;
 #[allow(missing_docs)]
 pub mod runtime;
 #[allow(missing_docs)]
@@ -107,3 +113,4 @@ pub use flims::{
     merge_asc, merge_desc, par_sort_desc, sort_asc, sort_desc, MergeKernel, SortConfig,
 };
 pub use key::{is_sorted_desc, F32Key, Item, Key, Kv, Kv64};
+pub use obs::{SpanKind, Trace};

@@ -8,10 +8,12 @@
 //! flims sortfile --input data.u32 [--output out.u32] [--dtype u32|u64|kv|kv64|f32]
 //!                [--codec raw|delta] [--overlap on|off] [--kernel auto|scalar|simd]
 //!                [--budget-mb 64] [--fan-in 8] [--threads T] [--prefetch B] [--gen N]
+//!                [--trace out.trace.json]  # Chrome trace-event JSON of the sort
 //! flims trace                              # the paper's Table 1 example
 //! flims simulate --design flims|flimsj|wms|mms|vms|basic --w 8 [--skew] [--dup]
 //! flims report   table2|table3|fig13 [--data-bits 64]
 //! flims serve    [--bind 127.0.0.1:7171] [--config flims.toml]
+//! flims metrics  [--addr 127.0.0.1:7171]   # Prometheus exposition from a server
 //! flims artifacts [--dir artifacts]        # list + smoke-run the AOT artifacts
 //! ```
 //!
@@ -131,6 +133,7 @@ fn run(args: Vec<String>) -> Result<(), String> {
         "simulate" => cmd_simulate(&flags),
         "report" => cmd_report(&args[1..], &flags),
         "serve" => cmd_serve(&flags),
+        "metrics" => cmd_metrics(&flags),
         "artifacts" => cmd_artifacts(&flags),
         "help" | "--help" | "-h" => {
             print_help();
@@ -154,11 +157,13 @@ fn print_help() {
                      [--codec raw|delta] [--overlap on|off] [--budget-mb M]\n\
                      [--fan-in K] [--threads T] [--prefetch B]\n\
                      [--kernel auto|scalar|simd]\n\
+                     [--trace F]   (Chrome trace-event JSON, for Perfetto)\n\
                      [--gen N [--dist D] [--seed S]]   (raw LE record datasets)\n\
            trace     (replays the paper's Table 1 example, w=4)\n\
            simulate  --design flims|flimsj|wms|mms|vms|basic --w W [--skew] [--dup] [--n N]\n\
            report    table2|table3|fig13 [--data-bits B]\n\
            serve     [--bind ADDR] [--config FILE] [--dir artifacts]\n\
+           metrics   [--addr ADDR] [--config FILE]   (Prometheus text from a server)\n\
            artifacts [--dir artifacts]"
     );
 }
@@ -345,12 +350,18 @@ fn cmd_sortfile(f: &HashMap<String, String>) -> Result<(), String> {
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from(format!("{}.sorted", input.display())));
 
+    let trace = f.get("trace").map(PathBuf::from);
+    if trace.as_deref().is_some_and(|p| p.as_os_str().is_empty()) {
+        return Err("--trace: empty path".into());
+    }
+    let trace = trace.as_deref();
+
     match ext.dtype {
-        Dtype::U32 => sortfile_typed::<u32>(f, &ext, &input, &output),
-        Dtype::U64 => sortfile_typed::<u64>(f, &ext, &input, &output),
-        Dtype::Kv => sortfile_typed::<Kv>(f, &ext, &input, &output),
-        Dtype::Kv64 => sortfile_typed::<Kv64>(f, &ext, &input, &output),
-        Dtype::F32 => sortfile_typed::<F32Key>(f, &ext, &input, &output),
+        Dtype::U32 => sortfile_typed::<u32>(f, &ext, &input, &output, trace),
+        Dtype::U64 => sortfile_typed::<u64>(f, &ext, &input, &output, trace),
+        Dtype::Kv => sortfile_typed::<Kv>(f, &ext, &input, &output, trace),
+        Dtype::Kv64 => sortfile_typed::<Kv64>(f, &ext, &input, &output, trace),
+        Dtype::F32 => sortfile_typed::<F32Key>(f, &ext, &input, &output, trace),
     }
 }
 
@@ -359,6 +370,7 @@ fn sortfile_typed<T: GenRecord>(
     ext: &ExternalConfig,
     input: &std::path::Path,
     output: &std::path::Path,
+    trace: Option<&std::path::Path>,
 ) -> Result<(), String> {
     if let Some(n) = f.get("gen") {
         let n: usize = n.parse().map_err(|_| "--gen must be an integer".to_string())?;
@@ -383,7 +395,17 @@ fn sortfile_typed<T: GenRecord>(
     }
 
     let t = Instant::now();
-    let stats = external::sort_file::<T>(input, output, ext).map_err(|e| format!("{e:#}"))?;
+    let stats = match trace {
+        None => external::sort_file::<T>(input, output, ext).map_err(|e| format!("{e:#}"))?,
+        Some(trace_path) => {
+            let handle = flims::obs::Trace::enabled();
+            let stats = external::sort_file_traced::<T>(input, output, ext, &handle)
+                .map_err(|e| format!("{e:#}"))?;
+            flims::obs::chrome::write_file(&handle, trace_path)
+                .map_err(|e| format!("writing trace {}: {e}", trace_path.display()))?;
+            stats
+        }
+    };
     let dt = t.elapsed();
 
     // Streaming verification — never loads the dataset whole.
@@ -447,6 +469,12 @@ fn sortfile_typed<T: GenRecord>(
         "  prefetch {} hits / {} misses",
         stats.prefetch_hits, stats.prefetch_misses,
     );
+    if let Some(trace_path) = trace {
+        println!(
+            "  trace → {} (load in chrome://tracing or https://ui.perfetto.dev)",
+            trace_path.display()
+        );
+    }
     Ok(())
 }
 
@@ -628,6 +656,34 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<(), String> {
         },
     ));
     service.serve(&cfg.bind).map_err(|e| format!("{e:#}"))
+}
+
+/// `flims metrics` — fetch the Prometheus text exposition from a
+/// running `flims serve` over the line protocol's `metrics` verb and
+/// print it (scrape-by-hand, or pipe into a pushgateway). Reads until
+/// the `# EOF` terminator the server appends.
+fn cmd_metrics(f: &HashMap<String, String>) -> Result<(), String> {
+    use std::io::{BufRead, BufReader, Write};
+    let cfg = load_config(f)?;
+    let addr = f.get("addr").cloned().unwrap_or_else(|| cfg.bind.clone());
+    let stream = std::net::TcpStream::connect(&addr)
+        .map_err(|e| format!("connecting to {addr}: {e} (is `flims serve` running?)"))?;
+    let mut writer = stream.try_clone().map_err(|e| format!("{e}"))?;
+    writeln!(writer, "metrics").map_err(|e| format!("{e}"))?;
+    let reader = BufReader::new(stream);
+    let mut saw_eof = false;
+    for line in reader.lines() {
+        let line = line.map_err(|e| format!("{e}"))?;
+        println!("{line}");
+        if line == "# EOF" {
+            saw_eof = true;
+            break;
+        }
+    }
+    if !saw_eof {
+        return Err("connection closed before the # EOF terminator".into());
+    }
+    Ok(())
 }
 
 fn cmd_artifacts(f: &HashMap<String, String>) -> Result<(), String> {

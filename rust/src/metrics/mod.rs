@@ -1,7 +1,12 @@
-//! Lightweight metrics: atomic counters and a latency histogram with
-//! percentile snapshots, used by the coordinator's data plane.
+//! Lightweight metrics: atomic counters, gauges, and a latency
+//! histogram with percentile snapshots — the process-wide registry
+//! behind the coordinator's data plane, the `stats` line, and the
+//! Prometheus text exposition served by the `metrics` protocol verb
+//! (`docs/OBSERVABILITY.md` lists every metric and label).
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
 /// Monotonic counter.
@@ -11,6 +16,10 @@ pub struct Counter {
 }
 
 impl Counter {
+    /// A zeroed counter, usable in `static` registries.
+    pub const fn new() -> Self {
+        Counter { v: AtomicU64::new(0) }
+    }
     /// Add one.
     pub fn inc(&self) {
         self.v.fetch_add(1, Ordering::Relaxed);
@@ -18,6 +27,37 @@ impl Counter {
     /// Add `n`.
     pub fn add(&self, n: u64) {
         self.v.fetch_add(n, Ordering::Relaxed);
+    }
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+    /// Zero the counter (`stats reset`).
+    pub fn reset(&self) {
+        self.v.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A value that goes up *and* down (active jobs, queue depths).
+/// Increments and decrements must balance — the counter wraps rather
+/// than saturating on a stray extra decrement.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    /// A zeroed gauge, usable in `static` registries.
+    pub const fn new() -> Self {
+        Gauge { v: AtomicU64::new(0) }
+    }
+    /// Add one.
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+    /// Subtract one.
+    pub fn dec(&self) {
+        self.v.fetch_sub(1, Ordering::Relaxed);
     }
     /// Current value.
     pub fn get(&self) -> u64 {
@@ -49,16 +89,33 @@ impl Default for LatencyHistogram {
 impl LatencyHistogram {
     /// Record one latency sample.
     pub fn observe(&self, d: Duration) {
-        let us = (d.as_nanos() / 1000).max(1) as u64;
+        // Clamp before narrowing: a pathological duration must land in
+        // the overflow bucket, not wrap the microsecond math; and the
+        // running sum saturates instead of overflowing.
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        let us = (ns / 1000).max(1);
         let bucket = (63 - us.leading_zeros() as usize).min(NBUCKETS - 1);
         self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        let _ = self
+            .sum_ns
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |c| Some(c.saturating_add(ns)));
     }
 
     /// Samples recorded so far.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
+    }
+
+    /// Total of every observed duration, nanoseconds (saturating).
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
+    }
+
+    /// A snapshot of the per-bucket sample counts; bucket `i` covers
+    /// `[2^i, 2^(i+1))` µs, with the last bucket open-ended.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
     }
 
     /// Mean latency.
@@ -70,21 +127,39 @@ impl LatencyHistogram {
         Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed) / c)
     }
 
-    /// Approximate percentile (upper bound of the bucket containing it).
+    /// Approximate percentile, interpolated within the winning bucket:
+    /// the `r`-th of `k` samples in bucket `[lo, 2·lo)` is read at
+    /// `lo + lo·(r − ½)/k` (midpoint-rank), so a histogram holding one
+    /// 3µs sample reports p50 = 3µs, not the 4µs bucket upper bound.
     pub fn percentile(&self, p: f64) -> Duration {
         let total = self.count();
         if total == 0 {
             return Duration::ZERO;
         }
-        let target = ((total as f64) * p / 100.0).ceil() as u64;
-        let mut acc = 0;
+        let target = (((total as f64) * p / 100.0).ceil() as u64).clamp(1, total);
+        let mut acc = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
-            acc += b.load(Ordering::Relaxed);
-            if acc >= target {
-                return Duration::from_micros(1u64 << (i + 1));
+            let k = b.load(Ordering::Relaxed);
+            if k > 0 && acc + k >= target {
+                let lower = (1u64 << i) as f64; // µs; bucket width == lower
+                let rank = (target - acc) as f64;
+                let frac = ((rank - 0.5) / k as f64).clamp(0.0, 1.0);
+                let us = lower + lower * frac;
+                return Duration::from_nanos((us * 1000.0).round() as u64);
             }
+            acc += k;
         }
+        // Unreachable (target ≤ total); keep the historical bound.
         Duration::from_micros(1u64 << NBUCKETS)
+    }
+
+    /// Zero every bucket and total (`stats reset`).
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_ns.store(0, Ordering::Relaxed);
     }
 
     /// One-line count/mean/percentile summary.
@@ -96,6 +171,181 @@ impl LatencyHistogram {
             self.percentile(50.0),
             self.percentile(99.0)
         )
+    }
+
+    /// Append this histogram in Prometheus text format (cumulative
+    /// `_bucket{le=…}` lines in seconds, then `_sum` / `_count`). The
+    /// open-ended overflow bucket folds into `le="+Inf"`.
+    pub fn prometheus_into(&self, name: &str, help: &str, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().take(NBUCKETS - 1).enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            let le = (1u64 << (i + 1)) as f64 * 1e-6;
+            let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {acc}");
+        }
+        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", self.count());
+        let _ = writeln!(out, "{name}_sum {}", self.sum_ns() as f64 * 1e-9);
+        let _ = writeln!(out, "{name}_count {}", self.count());
+    }
+}
+
+/// Append one `# HELP`/`# TYPE`/value triple in Prometheus text format.
+fn push_metric(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    kind: &str,
+    value: impl std::fmt::Display,
+) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+    let _ = writeln!(out, "{name} {value}");
+}
+
+/// The label set a per-sort sample is aggregated under in the
+/// exposition: what was sorted (`dtype`), how its spill runs were
+/// encoded (`codec`), which merge-kernel tier ran (`kernel`, the
+/// *resolved* name), and which schedule (`overlap`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SortLabels {
+    /// Record type name (`u32` | `u64` | `kv` | `kv64` | `f32`).
+    pub dtype: &'static str,
+    /// Effective spill codec name (`raw` | `delta`).
+    pub codec: &'static str,
+    /// Resolved merge-kernel name (`scalar`, `simd-avx2`, …).
+    pub kernel: &'static str,
+    /// Whether the pipelined schedule ran.
+    pub overlap: bool,
+}
+
+impl SortLabels {
+    fn render(&self) -> String {
+        format!(
+            "dtype=\"{}\",codec=\"{}\",kernel=\"{}\",overlap=\"{}\"",
+            self.dtype,
+            self.codec,
+            self.kernel,
+            if self.overlap { "on" } else { "off" }
+        )
+    }
+}
+
+/// The per-sort quantities aggregated under [`SortLabels`] — a plain
+/// mirror of the external sorter's `SpillStats` fields that belong in
+/// the exposition (the router converts between the two, keeping this
+/// module free of external-sort types).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SortSample {
+    /// Elements sorted.
+    pub elements: u64,
+    /// Runs spilled (initial + intermediate).
+    pub runs_spilled: u64,
+    /// Encoded bytes written to spill files.
+    pub bytes_spilled: u64,
+    /// The same traffic uncompressed.
+    pub bytes_spilled_raw: u64,
+    /// Merge passes executed.
+    pub merge_passes: u64,
+    /// End-to-end wall-clock, microseconds.
+    pub wall_us: u64,
+    /// Time the two phases ran concurrently, microseconds.
+    pub overlap_us: u64,
+    /// Codec encode wall-clock, microseconds.
+    pub codec_encode_us: u64,
+    /// Codec decode wall-clock, microseconds.
+    pub codec_decode_us: u64,
+}
+
+impl SortSample {
+    fn absorb(&mut self, o: &SortSample) {
+        self.elements += o.elements;
+        self.runs_spilled += o.runs_spilled;
+        self.bytes_spilled += o.bytes_spilled;
+        self.bytes_spilled_raw += o.bytes_spilled_raw;
+        self.merge_passes += o.merge_passes;
+        self.wall_us += o.wall_us;
+        self.overlap_us += o.overlap_us;
+        self.codec_encode_us += o.codec_encode_us;
+        self.codec_decode_us += o.codec_decode_us;
+    }
+}
+
+/// Labelled external-sort aggregates: every finished sort folds its
+/// [`SortSample`] into the bucket for its [`SortLabels`], and the
+/// exposition emits one line per label set per metric.
+#[derive(Debug, Default)]
+pub struct LabeledSpills {
+    per_label: Mutex<BTreeMap<SortLabels, (u64, SortSample)>>,
+}
+
+impl LabeledSpills {
+    /// Fold one finished sort into its label bucket.
+    pub fn record(&self, labels: SortLabels, sample: &SortSample) {
+        let mut map = self.per_label.lock().unwrap();
+        let entry = map.entry(labels).or_default();
+        entry.0 += 1;
+        entry.1.absorb(sample);
+    }
+
+    /// Drop every aggregate (`stats reset`).
+    pub fn reset(&self) {
+        self.per_label.lock().unwrap().clear();
+    }
+
+    /// Append the labelled aggregates in Prometheus text format.
+    pub fn prometheus_into(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        let map = self.per_label.lock().unwrap();
+        if map.is_empty() {
+            return;
+        }
+        let mut metric = |name: &str, help: &str, value: &dyn Fn(u64, &SortSample) -> f64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            for (labels, (sorts, sample)) in map.iter() {
+                let _ = writeln!(out, "{name}{{{}}} {}", labels.render(), value(*sorts, sample));
+            }
+        };
+        metric("flims_sorts_total", "External sorts finished, by label.", &|s, _| s as f64);
+        metric("flims_sort_elements_total", "Elements sorted, by label.", &|_, x| {
+            x.elements as f64
+        });
+        metric("flims_sort_runs_spilled_total", "Runs spilled, by label.", &|_, x| {
+            x.runs_spilled as f64
+        });
+        metric("flims_sort_spilled_bytes_total", "Encoded spill bytes, by label.", &|_, x| {
+            x.bytes_spilled as f64
+        });
+        metric(
+            "flims_sort_spilled_raw_bytes_total",
+            "Uncompressed equivalent of the spill traffic, by label.",
+            &|_, x| x.bytes_spilled_raw as f64,
+        );
+        metric("flims_sort_merge_passes_total", "Merge passes executed, by label.", &|_, x| {
+            x.merge_passes as f64
+        });
+        metric("flims_sort_wall_seconds_total", "End-to-end sort wall-clock, by label.", &|_, x| {
+            x.wall_us as f64 * 1e-6
+        });
+        metric(
+            "flims_sort_overlap_seconds_total",
+            "Wall-clock the two phases ran concurrently, by label.",
+            &|_, x| x.overlap_us as f64 * 1e-6,
+        );
+        metric(
+            "flims_sort_codec_encode_seconds_total",
+            "Run-codec encode wall-clock, by label.",
+            &|_, x| x.codec_encode_us as f64 * 1e-6,
+        );
+        metric(
+            "flims_sort_codec_decode_seconds_total",
+            "Run-codec decode wall-clock, by label.",
+            &|_, x| x.codec_decode_us as f64 * 1e-6,
+        );
     }
 }
 
@@ -142,6 +392,8 @@ pub struct ServiceMetrics {
     pub prefetch_hits: Counter,
     /// Leaf blocks the merge had to wait for.
     pub prefetch_misses: Counter,
+    /// External-sort aggregates by `dtype`/`codec`/`kernel`/`overlap`.
+    pub per_sort: LabeledSpills,
 }
 
 impl ServiceMetrics {
@@ -173,6 +425,146 @@ impl ServiceMetrics {
             self.prefetch_misses.get(),
         )
     }
+
+    /// Zero every counter, the latency histogram, and the labelled
+    /// aggregates (`stats reset`).
+    pub fn reset(&self) {
+        for c in [
+            &self.requests,
+            &self.batches,
+            &self.elements_sorted,
+            &self.errors,
+            &self.external_sorts,
+            &self.runs_spilled,
+            &self.bytes_spilled,
+            &self.bytes_spilled_raw,
+            &self.merge_passes,
+            &self.codec_encode_us,
+            &self.codec_decode_us,
+            &self.phase1_us,
+            &self.phase2_us,
+            &self.wall_us,
+            &self.overlap_us,
+            &self.prefetch_hits,
+            &self.prefetch_misses,
+        ] {
+            c.reset();
+        }
+        self.latency.reset();
+        self.per_sort.reset();
+    }
+
+    /// The full Prometheus text exposition of this metric set (no
+    /// trailing `# EOF` — the serving layer appends process-level
+    /// sections and the terminator).
+    pub fn prometheus(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        let c = |out: &mut String, name: &str, help: &str, v: u64| {
+            push_metric(out, name, help, "counter", v);
+        };
+        c(&mut out, "flims_requests_total", "Requests routed (all commands).", self.requests.get());
+        c(
+            &mut out,
+            "flims_batches_total",
+            "Batches the dynamic batcher flushed.",
+            self.batches.get(),
+        );
+        c(
+            &mut out,
+            "flims_elements_sorted_total",
+            "Elements across every sorted/merged request.",
+            self.elements_sorted.get(),
+        );
+        c(&mut out, "flims_errors_total", "Requests answered with an err line.", self.errors.get());
+        c(
+            &mut out,
+            "flims_external_sorts_total",
+            "External (out-of-core) sorts finished.",
+            self.external_sorts.get(),
+        );
+        c(
+            &mut out,
+            "flims_runs_spilled_total",
+            "Spilled runs written (initial + intermediate).",
+            self.runs_spilled.get(),
+        );
+        c(
+            &mut out,
+            "flims_spilled_bytes_total",
+            "Encoded bytes written to spill files.",
+            self.bytes_spilled.get(),
+        );
+        c(
+            &mut out,
+            "flims_spilled_raw_bytes_total",
+            "Uncompressed equivalent of the spill traffic.",
+            self.bytes_spilled_raw.get(),
+        );
+        c(
+            &mut out,
+            "flims_merge_passes_total",
+            "Merge passes executed over spilled data.",
+            self.merge_passes.get(),
+        );
+        let s = |out: &mut String, name: &str, help: &str, us: u64| {
+            push_metric(out, name, help, "counter", us as f64 * 1e-6);
+        };
+        s(
+            &mut out,
+            "flims_codec_encode_seconds_total",
+            "Run-codec encode wall-clock.",
+            self.codec_encode_us.get(),
+        );
+        s(
+            &mut out,
+            "flims_codec_decode_seconds_total",
+            "Run-codec decode wall-clock.",
+            self.codec_decode_us.get(),
+        );
+        s(
+            &mut out,
+            "flims_phase1_seconds_total",
+            "Phase-1 (run generation) wall-clock.",
+            self.phase1_us.get(),
+        );
+        s(
+            &mut out,
+            "flims_phase2_seconds_total",
+            "Phase-2 (k-way merge) wall-clock.",
+            self.phase2_us.get(),
+        );
+        s(
+            &mut out,
+            "flims_wall_seconds_total",
+            "End-to-end external-sort wall-clock.",
+            self.wall_us.get(),
+        );
+        s(
+            &mut out,
+            "flims_overlap_seconds_total",
+            "Wall-clock the two phases ran concurrently.",
+            self.overlap_us.get(),
+        );
+        c(
+            &mut out,
+            "flims_prefetch_hits_total",
+            "Leaf blocks buffered before the merge asked.",
+            self.prefetch_hits.get(),
+        );
+        c(
+            &mut out,
+            "flims_prefetch_misses_total",
+            "Leaf blocks the merge had to wait for.",
+            self.prefetch_misses.get(),
+        );
+        self.latency.prometheus_into(
+            "flims_request_latency_seconds",
+            "End-to-end request latency.",
+            &mut out,
+        );
+        self.per_sort.prometheus_into(&mut out);
+        out
+    }
 }
 
 #[cfg(test)]
@@ -185,6 +577,17 @@ mod tests {
         c.inc();
         c.add(4);
         assert_eq!(c.get(), 5);
+        c.reset();
+        assert_eq!(c.get(), 0);
+    }
+
+    #[test]
+    fn gauge_basics() {
+        let g = Gauge::new();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
     }
 
     #[test]
@@ -203,6 +606,67 @@ mod tests {
         let h = LatencyHistogram::default();
         assert_eq!(h.percentile(99.0), Duration::ZERO);
         assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.sum_ns(), 0);
+        assert!(h.bucket_counts().iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn percentile_interpolates_within_bucket() {
+        // One 3µs sample: bucket [2, 4) µs, midpoint rank → exactly
+        // 3µs, not the 4µs upper bound the pre-fix code reported.
+        let h = LatencyHistogram::default();
+        h.observe(Duration::from_micros(3));
+        assert_eq!(h.percentile(50.0), Duration::from_micros(3));
+        assert_eq!(h.percentile(100.0), Duration::from_micros(3));
+
+        // One 10µs sample: bucket [8, 16) µs → its midpoint, 12µs.
+        let h = LatencyHistogram::default();
+        h.observe(Duration::from_micros(10));
+        assert_eq!(h.percentile(50.0), Duration::from_micros(12));
+    }
+
+    #[test]
+    fn percentile_ranks_within_a_shared_bucket() {
+        // Two samples in [2, 4) µs: ranks read at 2 + 2·(r−½)/2.
+        let h = LatencyHistogram::default();
+        h.observe(Duration::from_micros(2));
+        h.observe(Duration::from_micros(3));
+        assert_eq!(h.percentile(50.0), Duration::from_nanos(2500));
+        assert_eq!(h.percentile(100.0), Duration::from_nanos(3500));
+        assert!(h.percentile(50.0) >= Duration::from_micros(2));
+        assert!(h.percentile(100.0) < Duration::from_micros(4));
+    }
+
+    #[test]
+    fn observe_saturates_instead_of_wrapping() {
+        let h = LatencyHistogram::default();
+        h.observe(Duration::MAX);
+        h.observe(Duration::MAX);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.sum_ns(), u64::MAX, "sum must saturate, not wrap");
+        assert!(h.mean() > Duration::ZERO);
+        // Both samples land in the open-ended overflow bucket.
+        assert_eq!(h.bucket_counts()[NBUCKETS - 1], 2);
+        assert!(h.percentile(50.0) >= Duration::from_micros(1 << 26));
+    }
+
+    #[test]
+    fn overflow_bucket_percentile_is_finite() {
+        let h = LatencyHistogram::default();
+        h.observe(Duration::from_secs(1 << 30));
+        let p = h.percentile(50.0);
+        assert!(p >= Duration::from_micros(1 << 26));
+        assert!(p <= Duration::from_micros(1 << 27));
+    }
+
+    #[test]
+    fn histogram_reset_clears_everything() {
+        let h = LatencyHistogram::default();
+        h.observe(Duration::from_micros(5));
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum_ns(), 0);
+        assert_eq!(h.percentile(50.0), Duration::ZERO);
     }
 
     #[test]
@@ -234,6 +698,98 @@ mod tests {
         assert!(s.contains("codec_enc_us=300 codec_dec_us=200 passes=2"), "{s}");
         assert!(s.contains("phase1_us=1500 phase2_us=2500 wall_us=3000 overlap_us=1000"), "{s}");
         assert!(s.contains("prefetch_hits=40 prefetch_misses=2]"), "{s}");
+    }
+
+    #[test]
+    fn service_metrics_reset_zeroes_the_report() {
+        let m = ServiceMetrics::default();
+        m.requests.add(9);
+        m.bytes_spilled.add(512);
+        m.latency.observe(Duration::from_micros(50));
+        m.per_sort.record(
+            SortLabels { dtype: "u32", codec: "raw", kernel: "scalar", overlap: false },
+            &SortSample { elements: 10, ..Default::default() },
+        );
+        m.reset();
+        let s = m.report();
+        assert!(s.contains("requests=0"), "{s}");
+        assert!(s.contains("spilled_bytes=0"), "{s}");
+        assert!(s.contains("count=0"), "{s}");
+        assert!(!m.prometheus().contains("flims_sorts_total{"));
+    }
+
+    /// Every exposition line must be a comment or `name[{labels}] value`
+    /// with a float-parseable value — the grammar Prometheus scrapes.
+    fn assert_exposition_parses(text: &str) {
+        assert!(!text.is_empty());
+        for line in text.lines() {
+            if line.starts_with("# ") {
+                continue;
+            }
+            let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| {
+                panic!("exposition line has no value: {line}");
+            });
+            assert!(!series.is_empty(), "{line}");
+            let name = series.split('{').next().unwrap();
+            assert!(
+                name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+                "bad metric name in: {line}"
+            );
+            if let Some(rest) = series.strip_prefix(name) {
+                if !rest.is_empty() {
+                    assert!(rest.starts_with('{') && rest.ends_with('}'), "{line}");
+                }
+            }
+            assert!(value.parse::<f64>().is_ok(), "unparseable value in: {line}");
+        }
+    }
+
+    #[test]
+    fn prometheus_exposition_golden() {
+        let m = ServiceMetrics::default();
+        m.requests.add(5);
+        m.errors.inc();
+        m.bytes_spilled.add(2048);
+        m.wall_us.add(1_500_000);
+        m.latency.observe(Duration::from_micros(3));
+        m.latency.observe(Duration::from_micros(700));
+        let text = m.prometheus();
+        assert_exposition_parses(&text);
+        assert!(text.contains("# TYPE flims_requests_total counter"), "{text}");
+        assert!(text.contains("\nflims_requests_total 5\n"), "{text}");
+        assert!(text.contains("\nflims_errors_total 1\n"), "{text}");
+        assert!(text.contains("\nflims_spilled_bytes_total 2048\n"), "{text}");
+        assert!(text.contains("\nflims_wall_seconds_total 1.5\n"), "{text}");
+        assert!(text.contains("# TYPE flims_request_latency_seconds histogram"), "{text}");
+        assert!(text.contains("flims_request_latency_seconds_bucket{le=\"+Inf\"} 2"), "{text}");
+        assert!(text.contains("flims_request_latency_seconds_count 2"), "{text}");
+        // Cumulative buckets are monotone non-decreasing.
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.contains("_bucket{le=")) {
+            let v: f64 = line.rsplit_once(' ').unwrap().1.parse().unwrap();
+            assert!(v as u64 >= last, "bucket counts must be cumulative: {line}");
+            last = v as u64;
+        }
+    }
+
+    #[test]
+    fn labeled_spills_expose_per_label_series() {
+        let m = ServiceMetrics::default();
+        let a = SortLabels { dtype: "u32", codec: "raw", kernel: "scalar", overlap: false };
+        let b = SortLabels { dtype: "kv", codec: "delta", kernel: "scalar", overlap: true };
+        m.per_sort.record(a, &SortSample { elements: 100, wall_us: 2000, ..Default::default() });
+        m.per_sort.record(a, &SortSample { elements: 50, wall_us: 1000, ..Default::default() });
+        m.per_sort.record(b, &SortSample { elements: 7, runs_spilled: 3, ..Default::default() });
+        let text = m.prometheus();
+        assert_exposition_parses(&text);
+        let a_labels = "dtype=\"u32\",codec=\"raw\",kernel=\"scalar\",overlap=\"off\"";
+        let b_labels = "dtype=\"kv\",codec=\"delta\",kernel=\"scalar\",overlap=\"on\"";
+        assert!(text.contains(&format!("flims_sorts_total{{{a_labels}}} 2")), "{text}");
+        assert!(text.contains(&format!("flims_sort_elements_total{{{a_labels}}} 150")), "{text}");
+        let wall = format!("flims_sort_wall_seconds_total{{{a_labels}}} 0.003");
+        assert!(text.contains(&wall), "{text}");
+        assert!(text.contains(&format!("flims_sorts_total{{{b_labels}}} 1")), "{text}");
+        assert!(text.contains(&format!("flims_sort_runs_spilled_total{{{b_labels}}} 3")), "{text}");
     }
 
     #[test]

@@ -1,0 +1,150 @@
+//! Chrome `trace_event` JSON rendering for a finished [`Trace`].
+//!
+//! The output is the JSON-object flavour of the [trace-event format]:
+//! one complete event (`"ph":"X"`) per recorded span, timestamps and
+//! durations in fractional microseconds relative to the trace's
+//! creation, the recording thread's lane as `tid`. Load the file in
+//! `chrome://tracing` or <https://ui.perfetto.dev> — each sort worker
+//! gets its own row, so the pipelined schedule's phase-1 `seal_run`
+//! spans are visibly concurrent with phase-2 `group_merge` spans.
+//!
+//! [trace-event format]: https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU
+//!
+//! ```
+//! use flims::obs::{chrome, SpanKind, Trace};
+//!
+//! let t = Trace::enabled();
+//! t.end(SpanKind::FinalDrain, t.begin(), 42);
+//! let json = chrome::render(&t);
+//! assert!(json.starts_with("{\"traceEvents\":["));
+//! assert!(json.contains("\"name\":\"final_drain\""));
+//! assert!(json.contains("\"ph\":\"X\""));
+//! ```
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::Trace;
+
+/// Render `trace` as a Chrome trace-event JSON document (always valid
+/// JSON, even for an empty or disabled trace).
+pub fn render(trace: &Trace) -> String {
+    let spans = trace.spans();
+    let mut s = String::with_capacity(spans.len() * 128 + 128);
+    s.push_str("{\"traceEvents\":[");
+    for (i, sp) in spans.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(
+            s,
+            "\n{{\"name\":\"{}\",\"cat\":\"flims\",\"ph\":\"X\",\
+             \"ts\":{}.{:03},\"dur\":{}.{:03},\"pid\":1,\"tid\":{},\
+             \"args\":{{\"{}\":{}}}}}",
+            sp.kind.name(),
+            sp.start_ns / 1000,
+            sp.start_ns % 1000,
+            sp.dur_ns / 1000,
+            sp.dur_ns % 1000,
+            sp.lane,
+            sp.kind.arg_name(),
+            sp.arg,
+        );
+    }
+    let _ = write!(
+        s,
+        "\n],\"displayTimeUnit\":\"ms\",\"otherData\":{{\"dropped_spans\":{}}}}}\n",
+        trace.dropped()
+    );
+    s
+}
+
+/// Render `trace` and write it to `path`, creating parent directories
+/// as needed.
+pub fn write_file(trace: &Trace, path: &Path) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, render(trace))
+}
+
+/// Write `trace` into `dir` under a generated per-process, per-sort
+/// file name (`flims-trace-<pid>-<seq>.json`) — the `[obs] trace_dir`
+/// / `FLIMS_TRACE_DIR` auto-trace path. A write failure is reported on
+/// stderr and swallowed: tracing must never fail a sort that already
+/// produced its output. Returns the path written, if any.
+pub fn write_auto(trace: &Trace, dir: &Path) -> Option<PathBuf> {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let path = dir.join(format!("flims-trace-{}-{seq}.json", std::process::id()));
+    match std::fs::create_dir_all(dir).and_then(|()| std::fs::write(&path, render(trace))) {
+        Ok(()) => Some(path),
+        Err(e) => {
+            eprintln!("obs: writing trace {}: {e}", path.display());
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::SpanKind;
+    use std::time::Instant;
+
+    #[test]
+    fn empty_trace_renders_valid_skeleton() {
+        for t in [Trace::disabled(), Trace::enabled()] {
+            let json = render(&t);
+            assert!(json.starts_with("{\"traceEvents\":["));
+            assert!(json.contains("\"dropped_spans\":0"));
+            assert_eq!(json.matches('{').count(), json.matches('}').count());
+        }
+    }
+
+    #[test]
+    fn events_carry_every_required_field() {
+        let t = Trace::enabled();
+        let base = Instant::now();
+        t.record_dur(SpanKind::ChunkSort, base, 1_234_567, 4096);
+        t.record_dur(SpanKind::GroupMerge, base, 10, 7);
+        let json = render(&t);
+        assert_eq!(json.matches("\"ph\":\"X\"").count(), 2);
+        assert!(json.contains("\"name\":\"chunk_sort\""));
+        assert!(json.contains("\"name\":\"group_merge\""));
+        assert!(json.contains("\"dur\":1234.567"), "{json}");
+        assert!(json.contains("\"dur\":0.010"), "{json}");
+        assert!(json.contains("\"args\":{\"elems\":4096}"), "{json}");
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn write_file_creates_parents() {
+        let dir = std::env::temp_dir().join(format!("flims-chrome-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested/trace.json");
+        let t = Trace::enabled();
+        t.end(SpanKind::SealRun, t.begin(), 3);
+        write_file(&t, &path).unwrap();
+        let back = std::fs::read_to_string(&path).unwrap();
+        assert!(back.contains("seal_run"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn write_auto_generates_unique_names() {
+        let dir = std::env::temp_dir().join(format!("flims-chrome-auto-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let t = Trace::enabled();
+        let a = write_auto(&t, &dir).unwrap();
+        let b = write_auto(&t, &dir).unwrap();
+        assert_ne!(a, b);
+        assert!(a.file_name().unwrap().to_str().unwrap().starts_with("flims-trace-"));
+        assert!(a.exists() && b.exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

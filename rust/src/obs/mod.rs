@@ -1,0 +1,429 @@
+//! Observability: per-sort span tracing and process-wide progress.
+//!
+//! The external sorter is a pipeline of concurrent stages — phase-1
+//! chunk sorts feeding spilled runs, phase-2 group merges consuming
+//! them, codec and prefetch threads in between — and a one-line stats
+//! summary cannot show *where* a multi-pass sort spends its wall-clock,
+//! or whether the pipelined schedule actually overlaps the phases it
+//! claims to (the TopSort-style `overlap = on` schedule). This module
+//! provides the instrumentation:
+//!
+//! * [`Trace`] — a per-sort span recorder. A cheap clonable handle;
+//!   every recording call on a *disabled* trace returns before touching
+//!   any state (zero allocation, pinned by `tests/obs_alloc.rs`).
+//!   Enabled traces write into a bounded lock-free ring of atomic
+//!   slots, so the hot path never locks or allocates either.
+//! * [`chrome`] — renders a finished trace as Chrome `trace_event`
+//!   JSON, loadable in `chrome://tracing` or [Perfetto](https://ui.perfetto.dev),
+//!   where the overlap schedule is literally visible: `seal_run` spans
+//!   from phase 1 running concurrently with `group_merge` spans from
+//!   phase 2.
+//! * [`progress`] — process-wide progress counters (runs sealed,
+//!   merges fired, elements out) surfaced by the service `progress`
+//!   verb while long sorts are still running.
+//!
+//! Tracing never changes what the sorter produces: the span points
+//! observe timestamps only, and the determinism suites run byte-exact
+//! with tracing on and off (the CI `test-trace` job).
+//!
+//! # Example
+//!
+//! ```
+//! use flims::obs::{SpanKind, Trace};
+//!
+//! let trace = Trace::enabled();
+//! let t0 = trace.begin();
+//! // ... the work being measured ...
+//! trace.end(SpanKind::ChunkSort, t0, 1024);
+//! assert_eq!(trace.recorded(), 1);
+//! let spans = trace.spans();
+//! assert_eq!(spans[0].kind, SpanKind::ChunkSort);
+//! assert_eq!(spans[0].arg, 1024);
+//!
+//! // A disabled trace accepts the same calls and records nothing.
+//! let off = Trace::disabled();
+//! off.end(SpanKind::ChunkSort, off.begin(), 1024);
+//! assert_eq!(off.recorded(), 0);
+//! ```
+
+pub mod chrome;
+pub mod progress;
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// What a span measured. One value per instrumentation point in the
+/// external sorter (the span taxonomy — `docs/OBSERVABILITY.md`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// Phase 1: one in-memory chunk sort (`ExtItem::sort_run`).
+    ChunkSort = 1,
+    /// Phase 1: the lifetime of one spilled run, from the first block
+    /// handed to its writer until the run is sealed on disk.
+    SealRun = 2,
+    /// Codec encode wall-clock attributed to one sealed run (runs on
+    /// the writer thread, inside the enclosing `SealRun` interval).
+    CodecEncode = 3,
+    /// Phase 2: one fan-in group merged into an intermediate run.
+    GroupMerge = 4,
+    /// Codec decode wall-clock aggregated over every leaf reader of
+    /// the merge (recorded once per sort as an attributed span).
+    CodecDecode = 5,
+    /// A merge asked a prefetch leaf for a block that was not buffered
+    /// yet — the time the merge spent blocked on disk/decode.
+    PrefetchWait = 6,
+    /// The final pass: draining the root merge tree into the output.
+    FinalDrain = 7,
+}
+
+impl SpanKind {
+    /// Every kind, in declaration order.
+    pub const ALL: [SpanKind; 7] = [
+        SpanKind::ChunkSort,
+        SpanKind::SealRun,
+        SpanKind::CodecEncode,
+        SpanKind::GroupMerge,
+        SpanKind::CodecDecode,
+        SpanKind::PrefetchWait,
+        SpanKind::FinalDrain,
+    ];
+
+    /// The event name rendered into the Chrome trace.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::ChunkSort => "chunk_sort",
+            SpanKind::SealRun => "seal_run",
+            SpanKind::CodecEncode => "codec_encode",
+            SpanKind::GroupMerge => "group_merge",
+            SpanKind::CodecDecode => "codec_decode",
+            SpanKind::PrefetchWait => "prefetch_wait",
+            SpanKind::FinalDrain => "final_drain",
+        }
+    }
+
+    /// What the span's `arg` value counts.
+    pub fn arg_name(self) -> &'static str {
+        match self {
+            SpanKind::ChunkSort
+            | SpanKind::SealRun
+            | SpanKind::CodecEncode
+            | SpanKind::GroupMerge
+            | SpanKind::FinalDrain => "elems",
+            SpanKind::CodecDecode | SpanKind::PrefetchWait => "n",
+        }
+    }
+
+    fn from_u64(v: u64) -> Option<SpanKind> {
+        SpanKind::ALL.into_iter().find(|k| *k as u64 == v)
+    }
+}
+
+/// One recorded span, as returned by [`Trace::spans`]. Times are
+/// nanoseconds relative to the trace's creation.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanRecord {
+    /// What was measured.
+    pub kind: SpanKind,
+    /// Recording thread's lane id (the Chrome `tid`). Lanes are
+    /// assigned per OS thread in first-record order, so every worker
+    /// gets its own row in the viewer.
+    pub lane: u64,
+    /// Span start, nanoseconds since the trace was created.
+    pub start_ns: u64,
+    /// Span duration in nanoseconds.
+    pub dur_ns: u64,
+    /// Kind-specific magnitude (see [`SpanKind::arg_name`]).
+    pub arg: u64,
+}
+
+impl SpanRecord {
+    /// Span end, nanoseconds since the trace was created.
+    pub fn end_ns(&self) -> u64 {
+        self.start_ns.saturating_add(self.dur_ns)
+    }
+
+    /// Whether two spans overlap in wall-clock time.
+    pub fn overlaps(&self, other: &SpanRecord) -> bool {
+        self.start_ns < other.end_ns() && other.start_ns < self.end_ns()
+    }
+}
+
+/// One ring slot: per-field atomics so writers never lock. A writer
+/// that wraps the ring while another is mid-write can tear that slot —
+/// accepted lossy-ring semantics; rendering happens after the sort's
+/// workers have joined, when the ring is quiescent.
+#[derive(Default)]
+struct Slot {
+    kind: AtomicU64,
+    lane: AtomicU64,
+    start_ns: AtomicU64,
+    dur_ns: AtomicU64,
+    arg: AtomicU64,
+}
+
+struct TraceInner {
+    /// All span times are relative to this.
+    epoch: Instant,
+    slots: Box<[Slot]>,
+    /// Total spans ever claimed; `head % capacity` is the next slot.
+    head: AtomicUsize,
+    /// Spans overwritten after the ring wrapped.
+    dropped: AtomicU64,
+}
+
+/// Per-sort span recorder. Clone freely — clones share the ring. The
+/// default value is disabled; [`Trace::enabled`] allocates the ring
+/// once up front (never on the recording path).
+#[derive(Clone, Default)]
+pub struct Trace(Option<Arc<TraceInner>>);
+
+/// Default ring capacity: enough for every run/merge span of a
+/// multi-thousand-run sort at ~40 bytes per slot.
+const DEFAULT_CAPACITY: usize = 65_536;
+
+static NEXT_LANE: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static LANE: u64 = NEXT_LANE.fetch_add(1, Ordering::Relaxed);
+}
+
+fn lane_id() -> u64 {
+    LANE.with(|l| *l)
+}
+
+impl Trace {
+    /// A trace that records nothing. Every call on it is a no-op that
+    /// returns before touching any shared state.
+    pub fn disabled() -> Self {
+        Trace(None)
+    }
+
+    /// An enabled trace with the default ring capacity.
+    pub fn enabled() -> Self {
+        Self::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    /// An enabled trace whose ring holds `capacity` spans (clamped to
+    /// ≥ 1); older spans are overwritten once it wraps.
+    pub fn with_capacity(capacity: usize) -> Self {
+        let cap = capacity.max(1);
+        Trace(Some(Arc::new(TraceInner {
+            epoch: Instant::now(),
+            slots: (0..cap).map(|_| Slot::default()).collect(),
+            head: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        })))
+    }
+
+    /// Whether this trace records anything.
+    pub fn is_enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Start timing a span: `Some(now)` when enabled, `None` when
+    /// disabled (so the disabled path skips the clock read too). Pair
+    /// with [`Trace::end`].
+    pub fn begin(&self) -> Option<Instant> {
+        if self.0.is_some() {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Finish a span started by [`Trace::begin`], recording it with
+    /// the current time as its end. No-op when `started` is `None`.
+    pub fn end(&self, kind: SpanKind, started: Option<Instant>, arg: u64) {
+        let Some(t0) = started else { return };
+        self.record(kind, t0, Instant::now(), arg);
+    }
+
+    /// Record a span over an explicit `[start, end]` interval.
+    pub fn record(&self, kind: SpanKind, start: Instant, end: Instant, arg: u64) {
+        if self.0.is_none() {
+            return;
+        }
+        let dur = end.saturating_duration_since(start);
+        self.record_dur(kind, start, dur.as_nanos().min(u64::MAX as u128) as u64, arg);
+    }
+
+    /// Record a span starting at `start` with an externally measured
+    /// duration — how attributed spans (codec encode/decode time
+    /// accumulated on other threads) land on the timeline.
+    pub fn record_dur(&self, kind: SpanKind, start: Instant, dur_ns: u64, arg: u64) {
+        let Some(inner) = &self.0 else { return };
+        let start_ns =
+            start.saturating_duration_since(inner.epoch).as_nanos().min(u64::MAX as u128) as u64;
+        let cap = inner.slots.len();
+        let idx = inner.head.fetch_add(1, Ordering::Relaxed);
+        if idx >= cap {
+            inner.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        let slot = &inner.slots[idx % cap];
+        slot.kind.store(kind as u64, Ordering::Relaxed);
+        slot.lane.store(lane_id(), Ordering::Relaxed);
+        slot.start_ns.store(start_ns, Ordering::Relaxed);
+        slot.dur_ns.store(dur_ns, Ordering::Relaxed);
+        slot.arg.store(arg, Ordering::Relaxed);
+    }
+
+    /// Spans currently held in the ring (≤ the ring capacity).
+    pub fn recorded(&self) -> u64 {
+        match &self.0 {
+            None => 0,
+            Some(inner) => inner.head.load(Ordering::Relaxed).min(inner.slots.len()) as u64,
+        }
+    }
+
+    /// Spans lost to ring wrap-around (oldest first).
+    pub fn dropped(&self) -> u64 {
+        match &self.0 {
+            None => 0,
+            Some(inner) => inner.dropped.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Snapshot the ring, sorted by start time. Meant for rendering
+    /// and assertions after the traced work has finished; a snapshot
+    /// taken while writers are active may contain torn spans.
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        let Some(inner) = &self.0 else { return Vec::new() };
+        let n = inner.head.load(Ordering::Relaxed).min(inner.slots.len());
+        let mut out = Vec::with_capacity(n);
+        for slot in inner.slots[..n].iter() {
+            let Some(kind) = SpanKind::from_u64(slot.kind.load(Ordering::Relaxed)) else {
+                continue;
+            };
+            out.push(SpanRecord {
+                kind,
+                lane: slot.lane.load(Ordering::Relaxed),
+                start_ns: slot.start_ns.load(Ordering::Relaxed),
+                dur_ns: slot.dur_ns.load(Ordering::Relaxed),
+                arg: slot.arg.load(Ordering::Relaxed),
+            });
+        }
+        out.sort_by_key(|s| (s.start_ns, s.lane, s.kind));
+        out
+    }
+}
+
+impl std::fmt::Debug for Trace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.0 {
+            None => write!(f, "Trace(disabled)"),
+            Some(inner) => write!(
+                f,
+                "Trace(recorded={}, dropped={}, capacity={})",
+                self.recorded(),
+                self.dropped(),
+                inner.slots.len()
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let t = Trace::disabled();
+        assert!(!t.is_enabled());
+        assert!(t.begin().is_none());
+        t.end(SpanKind::ChunkSort, t.begin(), 5);
+        let now = Instant::now();
+        t.record(SpanKind::GroupMerge, now, now, 1);
+        t.record_dur(SpanKind::CodecEncode, now, 100, 1);
+        assert_eq!(t.recorded(), 0);
+        assert_eq!(t.dropped(), 0);
+        assert!(t.spans().is_empty());
+    }
+
+    #[test]
+    fn enabled_trace_round_trips_spans() {
+        let t = Trace::enabled();
+        assert!(t.is_enabled());
+        let t0 = t.begin();
+        assert!(t0.is_some());
+        t.end(SpanKind::ChunkSort, t0, 123);
+        let base = Instant::now();
+        t.record(SpanKind::GroupMerge, base, base + Duration::from_micros(50), 9);
+        let spans = t.spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(t.recorded(), 2);
+        let merge = spans.iter().find(|s| s.kind == SpanKind::GroupMerge).unwrap();
+        assert_eq!(merge.arg, 9);
+        assert!(merge.dur_ns >= 50_000, "dur_ns={}", merge.dur_ns);
+        let sort = spans.iter().find(|s| s.kind == SpanKind::ChunkSort).unwrap();
+        assert_eq!(sort.arg, 123);
+        assert!(sort.lane > 0);
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let t = Trace::with_capacity(4);
+        let base = Instant::now();
+        for i in 0..10u64 {
+            t.record_dur(SpanKind::SealRun, base, i, i);
+        }
+        assert_eq!(t.recorded(), 4);
+        assert_eq!(t.dropped(), 6);
+        let spans = t.spans();
+        assert_eq!(spans.len(), 4);
+        // The survivors are the newest four records (args 6..=9).
+        let mut args: Vec<u64> = spans.iter().map(|s| s.arg).collect();
+        args.sort_unstable();
+        assert_eq!(args, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn clones_share_the_ring() {
+        let t = Trace::enabled();
+        let c = t.clone();
+        c.end(SpanKind::FinalDrain, c.begin(), 1);
+        assert_eq!(t.recorded(), 1);
+        assert_eq!(t.spans()[0].kind, SpanKind::FinalDrain);
+    }
+
+    #[test]
+    fn lanes_distinguish_threads() {
+        let t = Trace::enabled();
+        let base = Instant::now();
+        t.record_dur(SpanKind::ChunkSort, base, 1, 0);
+        std::thread::scope(|s| {
+            let tc = t.clone();
+            s.spawn(move || tc.record_dur(SpanKind::ChunkSort, base, 1, 0));
+        });
+        let spans = t.spans();
+        assert_eq!(spans.len(), 2);
+        assert_ne!(spans[0].lane, spans[1].lane);
+    }
+
+    #[test]
+    fn span_overlap_predicate() {
+        let a = SpanRecord { kind: SpanKind::SealRun, lane: 1, start_ns: 0, dur_ns: 100, arg: 0 };
+        let b =
+            SpanRecord { kind: SpanKind::GroupMerge, lane: 2, start_ns: 50, dur_ns: 100, arg: 0 };
+        let c =
+            SpanRecord { kind: SpanKind::GroupMerge, lane: 2, start_ns: 100, dur_ns: 10, arg: 0 };
+        assert!(a.overlaps(&b));
+        assert!(b.overlaps(&a));
+        assert!(!a.overlaps(&c), "touching intervals do not overlap");
+        assert_eq!(a.end_ns(), 100);
+    }
+
+    #[test]
+    fn kind_names_and_tags_are_total() {
+        for k in SpanKind::ALL {
+            assert!(!k.name().is_empty());
+            assert!(!k.arg_name().is_empty());
+            assert_eq!(SpanKind::from_u64(k as u64), Some(k));
+        }
+        assert_eq!(SpanKind::from_u64(0), None);
+        assert_eq!(SpanKind::from_u64(255), None);
+    }
+}

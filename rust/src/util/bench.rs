@@ -4,7 +4,12 @@
 //!
 //! Every `rust/benches/*.rs` target (declared `harness = false`) uses
 //! this; `cargo bench` therefore prints the paper-table rows directly.
+//! Each bench also accepts `--json <path>` (write a machine-readable
+//! `BENCH_<name>.json` trajectory via [`write_json_report`] — schema in
+//! docs/OBSERVABILITY.md) and `--smoke` (shrunken workloads, no perf
+//! assertions: the CI smoke lane), parsed leniently by [`BenchArgs`].
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 #[derive(Clone, Debug)]
@@ -28,6 +33,103 @@ impl BenchResult {
     /// Throughput in M items/s.
     pub fn mitems_per_sec(&self, items_per_iter: usize) -> f64 {
         self.items_per_sec(items_per_iter) / 1e6
+    }
+
+    /// A result from one timed run (the macro-benchmarks: whole external
+    /// sorts are seconds long, so they run once per cell rather than in
+    /// [`bench`] batches). median = mean = min = the single sample.
+    pub fn single(name: &str, elapsed: Duration) -> BenchResult {
+        let ns = elapsed.as_nanos() as f64;
+        BenchResult {
+            name: name.to_string(),
+            median_ns: ns,
+            mean_ns: ns,
+            min_ns: ns,
+            mad_ns: 0.0,
+            iters: 1,
+        }
+    }
+
+    /// This result as one JSON object (the `results[]` rows of
+    /// [`write_json_report`]).
+    pub fn json_row(&self) -> String {
+        format!(
+            "{{\"name\":\"{}\",\"median_ns\":{:.1},\"mean_ns\":{:.1},\"min_ns\":{:.1},\
+             \"mad_ns\":{:.1},\"iters\":{}}}",
+            json_escape(&self.name),
+            self.median_ns,
+            self.mean_ns,
+            self.min_ns,
+            self.mad_ns,
+            self.iters
+        )
+    }
+}
+
+/// Escape a string for embedding in a JSON string literal.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Write the machine-readable bench trajectory:
+/// `{"bench":"<name>","schema":1,"results":[{...}, …]}` (one object per
+/// [`BenchResult`], field-for-field — the schema is documented in
+/// docs/OBSERVABILITY.md and consumed by the CI `bench-smoke` artifact).
+pub fn write_json_report(bench: &str, results: &[BenchResult], path: &Path) -> std::io::Result<()> {
+    let mut out = format!("{{\"bench\":\"{}\",\"schema\":1,\"results\":[", json_escape(bench));
+    for (i, r) in results.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push('\n');
+        out.push_str(&r.json_row());
+    }
+    out.push_str("\n]}\n");
+    std::fs::write(path, out)
+}
+
+/// Bench command-line options, parsed leniently: `cargo bench` forwards
+/// its own flags (`--bench`, the bench name) to `harness = false`
+/// targets, so anything unrecognised is ignored rather than an error.
+#[derive(Clone, Debug, Default)]
+pub struct BenchArgs {
+    /// `--json <path>`: where to write the [`write_json_report`] file.
+    pub json: Option<PathBuf>,
+    /// `--smoke`: shrink the workload and skip the perf assertions (the
+    /// CI smoke lane exercises the reporting path, not the numbers).
+    pub smoke: bool,
+}
+
+impl BenchArgs {
+    /// Parse the process's arguments (see [`BenchArgs`]).
+    pub fn parse() -> BenchArgs {
+        Self::from_iter(std::env::args().skip(1))
+    }
+
+    fn from_iter<I: IntoIterator<Item = String>>(args: I) -> BenchArgs {
+        let mut out = BenchArgs::default();
+        let mut args = args.into_iter();
+        while let Some(a) = args.next() {
+            match a.as_str() {
+                "--json" => {
+                    if let Some(path) = args.next() {
+                        out.json = Some(PathBuf::from(path));
+                    }
+                }
+                "--smoke" => out.smoke = true,
+                _ => {} // cargo's own flags, the bench-name filter, etc.
+            }
+        }
+        out
     }
 }
 
@@ -125,5 +227,58 @@ mod tests {
         assert!(fmt_ns(5e3).ends_with("µs"));
         assert!(fmt_ns(5e6).ends_with("ms"));
         assert!(fmt_ns(5e9).ends_with("s"));
+    }
+
+    #[test]
+    fn single_sample_result() {
+        let r = BenchResult::single("one", Duration::from_micros(3));
+        assert_eq!(r.median_ns, 3000.0);
+        assert_eq!(r.mean_ns, 3000.0);
+        assert_eq!(r.min_ns, 3000.0);
+        assert_eq!(r.mad_ns, 0.0);
+        assert_eq!(r.iters, 1);
+    }
+
+    #[test]
+    fn json_row_shape_and_escaping() {
+        let r = BenchResult::single("a \"quoted\"\\name", Duration::from_nanos(1500));
+        let row = r.json_row();
+        assert_eq!(
+            row,
+            "{\"name\":\"a \\\"quoted\\\"\\\\name\",\"median_ns\":1500.0,\
+             \"mean_ns\":1500.0,\"min_ns\":1500.0,\"mad_ns\":0.0,\"iters\":1}"
+        );
+    }
+
+    #[test]
+    fn json_report_round_trips_through_a_file() {
+        let dir = std::env::temp_dir().join(format!("flims-bench-json-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let rows = [
+            BenchResult::single("row_a", Duration::from_micros(10)),
+            BenchResult::single("row_b", Duration::from_micros(20)),
+        ];
+        write_json_report("test", &rows, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("{\"bench\":\"test\",\"schema\":1,\"results\":["), "{text}");
+        assert!(text.contains("\"name\":\"row_a\""), "{text}");
+        assert!(text.contains("\"name\":\"row_b\""), "{text}");
+        assert!(text.trim_end().ends_with("]}"), "{text}");
+        // Exactly one comma between the two rows, none trailing.
+        assert_eq!(text.matches("},\n{").count(), 1, "{text}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bench_args_parse_leniently() {
+        let args = |v: &[&str]| BenchArgs::from_iter(v.iter().map(|s| s.to_string()));
+        let a = args(&["--bench", "merge_hot_path", "--json", "out.json", "--smoke"]);
+        assert_eq!(a.json, Some(PathBuf::from("out.json")));
+        assert!(a.smoke);
+        // cargo's stray flags and a missing --json value are ignored.
+        let a = args(&["--exact", "somefilter", "--json"]);
+        assert_eq!(a.json, None);
+        assert!(!a.smoke);
     }
 }

@@ -1,0 +1,88 @@
+//! Zero-overhead guarantee for disabled tracing: every sort carries a
+//! [`flims::obs::Trace`] handle, so the disabled handle must cost
+//! nothing — no clock reads (checked in obs unit tests) and, here, no
+//! heap traffic on any hot-path operation. A disabled trace that
+//! allocates would tax every untraced sort.
+//!
+//! Measured with a counting global allocator; this lives in its own
+//! integration-test binary so the counter sees only this file's tests.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use flims::obs::{SpanKind, Trace};
+
+struct CountingAlloc;
+
+static ALLOCATED_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATED_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATED_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn disabled_trace_never_touches_the_heap() {
+    let trace = Trace::disabled();
+    let clone = trace.clone();
+    let start = Instant::now();
+
+    // Warm up once (lane thread-local &c. — none should exist on the
+    // disabled path, but the measurement must not depend on that).
+    trace.end(SpanKind::ChunkSort, trace.begin(), 1);
+
+    let before = ALLOCATED_BYTES.load(Ordering::Relaxed);
+    for kind in SpanKind::ALL {
+        for i in 0..10_000u64 {
+            let t = trace.begin();
+            assert!(t.is_none(), "disabled trace must skip the clock");
+            trace.end(kind, t, i);
+            trace.record_dur(kind, start, i, i);
+            clone.end(kind, clone.begin(), i);
+        }
+    }
+    assert!(!trace.is_enabled());
+    assert_eq!(trace.recorded(), 0);
+    assert_eq!(trace.dropped(), 0);
+    assert!(trace.spans().is_empty());
+    let delta = ALLOCATED_BYTES.load(Ordering::Relaxed) - before;
+    assert_eq!(
+        delta, 0,
+        "disabled tracing allocated {delta} bytes across \
+         {} hot-path calls — it must be free",
+        SpanKind::ALL.len() * 10_000 * 3
+    );
+}
+
+#[test]
+fn enabled_trace_records_without_reallocating_the_ring() {
+    // The enabled ring is allocated once up front; steady-state
+    // recording must not grow it (the final `spans()` drain may copy).
+    let trace = Trace::with_capacity(1024);
+    let start = Instant::now();
+    trace.record_dur(SpanKind::GroupMerge, start, 10, 1); // warmup + lane init
+
+    let before = ALLOCATED_BYTES.load(Ordering::Relaxed);
+    for i in 0..100_000u64 {
+        trace.record_dur(SpanKind::GroupMerge, start, 10, i);
+    }
+    let delta = ALLOCATED_BYTES.load(Ordering::Relaxed) - before;
+    assert_eq!(delta, 0, "steady-state recording allocated {delta} bytes");
+    assert_eq!(trace.recorded(), 1024, "ring keeps the newest capacity-many spans");
+    assert_eq!(trace.dropped(), 100_001 - 1024);
+}

@@ -1,0 +1,289 @@
+//! Integration: end-to-end sort tracing.
+//!
+//! The contract under test: a traced external sort records the full
+//! span taxonomy (docs/OBSERVABILITY.md), renders well-formed Chrome
+//! trace-event JSON, demonstrably shows phase 1 overlapping phase 2 on
+//! a pipelined multi-pass workload — and never changes the output
+//! bytes relative to the same sort untraced.
+
+use std::path::PathBuf;
+
+use flims::data::{gen_u32, Distribution};
+use flims::external::format::write_raw;
+use flims::external::{sort_file_traced, Codec, ExternalConfig};
+use flims::obs::{chrome, SpanKind, Trace};
+use flims::util::rng::Rng;
+
+fn test_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("flims-obstrc-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Minimal JSON well-formedness validator (no serde offline): checks
+/// the full value grammar — objects, arrays, strings with escapes,
+/// numbers, literals — and that nothing trails the top-level value.
+fn validate_json(text: &str) -> Result<(), String> {
+    let b = text.as_bytes();
+    let mut i = 0usize;
+    let end = value(b, &mut i)?;
+    debug_assert!(end <= b.len());
+    skip_ws(b, &mut i);
+    if i != b.len() {
+        return Err(format!("trailing bytes at offset {i}"));
+    }
+    Ok(())
+}
+
+fn skip_ws(b: &[u8], i: &mut usize) {
+    while *i < b.len() && matches!(b[*i], b' ' | b'\t' | b'\n' | b'\r') {
+        *i += 1;
+    }
+}
+
+fn value(b: &[u8], i: &mut usize) -> Result<usize, String> {
+    skip_ws(b, i);
+    match b.get(*i) {
+        None => Err("unexpected end of input".into()),
+        Some(b'{') => {
+            *i += 1;
+            skip_ws(b, i);
+            if b.get(*i) == Some(&b'}') {
+                *i += 1;
+                return Ok(*i);
+            }
+            loop {
+                skip_ws(b, i);
+                string(b, i)?;
+                skip_ws(b, i);
+                if b.get(*i) != Some(&b':') {
+                    return Err(format!("expected ':' at offset {i}"));
+                }
+                *i += 1;
+                value(b, i)?;
+                skip_ws(b, i);
+                match b.get(*i) {
+                    Some(b',') => *i += 1,
+                    Some(b'}') => {
+                        *i += 1;
+                        return Ok(*i);
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at offset {i}")),
+                }
+            }
+        }
+        Some(b'[') => {
+            *i += 1;
+            skip_ws(b, i);
+            if b.get(*i) == Some(&b']') {
+                *i += 1;
+                return Ok(*i);
+            }
+            loop {
+                value(b, i)?;
+                skip_ws(b, i);
+                match b.get(*i) {
+                    Some(b',') => *i += 1,
+                    Some(b']') => {
+                        *i += 1;
+                        return Ok(*i);
+                    }
+                    _ => return Err(format!("expected ',' or ']' at offset {i}")),
+                }
+            }
+        }
+        Some(b'"') => string(b, i),
+        Some(b't') => literal(b, i, "true"),
+        Some(b'f') => literal(b, i, "false"),
+        Some(b'n') => literal(b, i, "null"),
+        Some(c) if c.is_ascii_digit() || *c == b'-' => number(b, i),
+        Some(c) => Err(format!("unexpected byte {c:?} at offset {i}")),
+    }
+}
+
+fn string(b: &[u8], i: &mut usize) -> Result<usize, String> {
+    if b.get(*i) != Some(&b'"') {
+        return Err(format!("expected string at offset {i}"));
+    }
+    *i += 1;
+    while let Some(&c) = b.get(*i) {
+        match c {
+            b'"' => {
+                *i += 1;
+                return Ok(*i);
+            }
+            b'\\' => *i += 2,
+            _ => *i += 1,
+        }
+    }
+    Err("unterminated string".into())
+}
+
+fn number(b: &[u8], i: &mut usize) -> Result<usize, String> {
+    let start = *i;
+    if b.get(*i) == Some(&b'-') {
+        *i += 1;
+    }
+    while b.get(*i).is_some_and(|c| c.is_ascii_digit()) {
+        *i += 1;
+    }
+    if b.get(*i) == Some(&b'.') {
+        *i += 1;
+        while b.get(*i).is_some_and(|c| c.is_ascii_digit()) {
+            *i += 1;
+        }
+    }
+    if matches!(b.get(*i), Some(b'e') | Some(b'E')) {
+        *i += 1;
+        if matches!(b.get(*i), Some(b'+') | Some(b'-')) {
+            *i += 1;
+        }
+        while b.get(*i).is_some_and(|c| c.is_ascii_digit()) {
+            *i += 1;
+        }
+    }
+    if *i == start {
+        return Err(format!("expected number at offset {i}"));
+    }
+    Ok(*i)
+}
+
+fn literal(b: &[u8], i: &mut usize, lit: &str) -> Result<usize, String> {
+    if b[*i..].starts_with(lit.as_bytes()) {
+        *i += lit.len();
+        Ok(*i)
+    } else {
+        Err(format!("expected '{lit}' at offset {i}"))
+    }
+}
+
+/// The pipelined multi-pass workload from tests/overlap_external.rs:
+/// 4 KiB budget → 1024-element runs, fan-in 4, ~117 runs → ≥ 3 passes.
+fn traced_cfg(tmp: &std::path::Path) -> ExternalConfig {
+    ExternalConfig {
+        mem_budget_bytes: 4096,
+        fan_in: 4,
+        overlap: true,
+        threads: 4,
+        codec: Codec::Delta,
+        tmp_dir: Some(tmp.to_path_buf()),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn traced_multipass_sort_is_byte_identical_with_valid_overlapping_spans() {
+    let dir = test_dir("full");
+    let mut rng = Rng::new(9001);
+    let n = 120_000usize;
+    let data = gen_u32(&mut rng, n, Distribution::Zipf { s_x100: 130, n_ranks: 1 << 12 });
+    let input = dir.join("data.u32");
+    write_raw(&input, &data).unwrap();
+    let cfg = traced_cfg(&dir);
+
+    // Same sort, tracing off then on: the bytes must match exactly.
+    let out_off = dir.join("off.sorted");
+    let stats_off = sort_file_traced::<u32>(&input, &out_off, &cfg, &Trace::disabled()).unwrap();
+    let out_on = dir.join("on.sorted");
+    let trace = Trace::enabled();
+    let stats_on = sort_file_traced::<u32>(&input, &out_on, &cfg, &trace).unwrap();
+    assert_eq!(stats_on.elements, n as u64);
+    assert!(stats_on.merge_passes >= 3, "want a multi-pass workload");
+    assert_eq!(stats_off.merge_passes, stats_on.merge_passes);
+    assert_eq!(
+        std::fs::read(&out_off).unwrap(),
+        std::fs::read(&out_on).unwrap(),
+        "tracing changed the output bytes"
+    );
+
+    // The span taxonomy is fully represented. Chunk-sort / seal /
+    // encode spans come one per *phase-1* run (stats.runs_spilled also
+    // counts intermediate-pass outputs, which merge under group-merge
+    // spans instead).
+    let spans = trace.spans();
+    assert_eq!(trace.dropped(), 0, "the default ring must hold this workload");
+    let count = |k: SpanKind| spans.iter().filter(|s| s.kind == k).count();
+    let phase1_runs = n.div_ceil(cfg.run_elems_for(std::mem::size_of::<u32>()));
+    assert_eq!(count(SpanKind::ChunkSort), phase1_runs);
+    assert_eq!(count(SpanKind::SealRun), phase1_runs);
+    assert_eq!(count(SpanKind::CodecEncode), phase1_runs);
+    assert!((stats_on.runs_spilled as usize) > phase1_runs, "multi-pass spills extra runs");
+    assert!(count(SpanKind::GroupMerge) >= 3, "multi-pass → many group merges");
+    assert_eq!(count(SpanKind::FinalDrain), 1, "exactly one final drain per sort");
+    assert!(count(SpanKind::CodecDecode) >= 1, "delta codec must report decode time");
+
+    // The pipelined schedule is visible: some phase-1 span (a chunk
+    // sort or run seal) runs concurrently with a phase-2 group merge.
+    let merges: Vec<_> = spans.iter().filter(|s| s.kind == SpanKind::GroupMerge).collect();
+    let phase1_overlaps_phase2 = spans
+        .iter()
+        .filter(|s| matches!(s.kind, SpanKind::ChunkSort | SpanKind::SealRun))
+        .any(|s| merges.iter().any(|m| s.overlaps(m)));
+    assert!(phase1_overlaps_phase2, "no phase-1 span overlapped a group merge");
+
+    // Codec-encode spans nest inside their sealing run: same lane and
+    // start, never longer than the seal.
+    for enc in spans.iter().filter(|s| s.kind == SpanKind::CodecEncode) {
+        let seal = spans
+            .iter()
+            .find(|s| {
+                s.kind == SpanKind::SealRun && s.lane == enc.lane && s.start_ns == enc.start_ns
+            })
+            .unwrap_or_else(|| panic!("codec_encode span without an enclosing seal_run: {enc:?}"));
+        assert!(seal.dur_ns >= enc.dur_ns, "encode outlived its seal: {enc:?} vs {seal:?}");
+    }
+
+    // The Chrome rendering is well-formed JSON with the trace_event
+    // shape, both in-memory and through write_file.
+    let json = chrome::render(&trace);
+    validate_json(&json).unwrap_or_else(|e| panic!("invalid trace JSON: {e}"));
+    assert!(json.starts_with("{\"traceEvents\":["));
+    for name in ["chunk_sort", "seal_run", "codec_encode", "group_merge", "final_drain"] {
+        assert!(json.contains(&format!("\"name\":\"{name}\"")), "missing {name}");
+    }
+    assert!(json.contains("\"dropped_spans\":0"), "clean run must drop nothing");
+    let path = dir.join("sort.trace.json");
+    chrome::write_file(&trace, &path).unwrap();
+    assert_eq!(std::fs::read_to_string(&path).unwrap(), json);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn serial_trace_records_no_overlap_between_final_drain_and_chunk_sorts() {
+    // The serial schedule is the control: every chunk sort finishes
+    // before the final drain begins.
+    let dir = test_dir("serial");
+    let mut rng = Rng::new(9002);
+    let data = gen_u32(&mut rng, 40_000, Distribution::Uniform);
+    let input = dir.join("data.u32");
+    write_raw(&input, &data).unwrap();
+    let cfg = ExternalConfig { overlap: false, threads: 1, ..traced_cfg(&dir) };
+    let trace = Trace::enabled();
+    sort_file_traced::<u32>(&input, &dir.join("out.sorted"), &cfg, &trace).unwrap();
+    let spans = trace.spans();
+    let drain = spans.iter().find(|s| s.kind == SpanKind::FinalDrain).expect("final drain span");
+    for s in spans.iter().filter(|s| s.kind == SpanKind::ChunkSort) {
+        assert!(
+            s.end_ns() <= drain.start_ns,
+            "serial schedule: chunk sort {s:?} overlapped the final drain {drain:?}"
+        );
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn json_validator_rejects_malformed_documents() {
+    // The validator itself has teeth — a green well-formedness test
+    // must mean something.
+    for good in [
+        "{}",
+        "[]",
+        "{\"a\":[1,2.5,-3e4],\"b\":\"x\\\"y\",\"c\":true,\"d\":null}",
+        " { \"nested\" : { \"deep\" : [ { } ] } } ",
+    ] {
+        validate_json(good).unwrap_or_else(|e| panic!("{good}: {e}"));
+    }
+    for bad in ["{", "{]", "{\"a\":}", "[1,]", "[1] trailing", "{\"a\" 1}", "\"open", "01x"] {
+        assert!(validate_json(bad).is_err(), "accepted malformed: {bad}");
+    }
+}
