@@ -110,6 +110,16 @@ pub struct AppConfig {
     pub batch_max: usize,
     /// dynamic-batcher window in microseconds
     pub batch_window_us: u64,
+    /// maximum concurrently *running* scheduler jobs (`[server]
+    /// max_jobs`; 1 = serial, the pre-scheduler behaviour). The
+    /// `[external]` memory/disk/thread budgets are carved evenly across
+    /// this many slots. Defaults from `FLIMS_MAX_JOBS` (unset = 2) so
+    /// CI can run the whole suite with a wider scheduler.
+    pub max_jobs: usize,
+    /// bounded admission queue: jobs beyond the running `max_jobs` wait
+    /// here (`[server] queue_depth`); past that, requests are rejected
+    /// with `err busy` — backpressure instead of unbounded pile-up.
+    pub job_queue_depth: usize,
     /// external (out-of-core) sort tuning; `w`/`chunk` here are
     /// placeholders — [`AppConfig::external_config`] substitutes the
     /// engine's values so one pair of knobs tunes both pipelines.
@@ -128,8 +138,28 @@ impl Default for AppConfig {
             bind: "127.0.0.1:7171".into(),
             batch_max: 8,
             batch_window_us: 500,
+            max_jobs: max_jobs_default(),
+            job_queue_depth: 16,
             external: ExternalConfig::default(),
         }
+    }
+}
+
+/// The `max_jobs` default: the `FLIMS_MAX_JOBS` environment variable
+/// when set and valid, else 2. This is how the CI `test-concurrent`
+/// lane runs the full suite with a wider scheduler without touching
+/// every test's config. An invalid value warns on stderr instead of
+/// silently meaning "2" — a typo would quietly serialise the lane.
+fn max_jobs_default() -> usize {
+    match std::env::var("FLIMS_MAX_JOBS") {
+        Err(_) => 2,
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if (1..=64).contains(&n) => n,
+            _ => {
+                eprintln!("warning: FLIMS_MAX_JOBS ignored: '{v}' (expected 1..=64)");
+                2
+            }
+        },
     }
 }
 
@@ -162,6 +192,12 @@ impl AppConfig {
         }
         if let Some(v) = raw.get_usize("service", "batch_window_us")? {
             self.batch_window_us = v as u64;
+        }
+        if let Some(v) = raw.get_usize("server", "max_jobs")? {
+            self.max_jobs = v;
+        }
+        if let Some(v) = raw.get_usize("server", "queue_depth")? {
+            self.job_queue_depth = v;
         }
         if let Some(v) = raw.get_usize("external", "mem_budget_mb")? {
             self.external.mem_budget_bytes = v << 20;
@@ -215,6 +251,15 @@ impl AppConfig {
         }
         if self.batch_max == 0 {
             return Err("service.batch_max must be > 0".into());
+        }
+        if !(1..=64).contains(&self.max_jobs) {
+            return Err(format!("server.max_jobs = {} must be in 1..=64", self.max_jobs));
+        }
+        if self.job_queue_depth > 1024 {
+            return Err(format!(
+                "server.queue_depth = {} is absurd (max 1024, 0 = reject when slots are full)",
+                self.job_queue_depth
+            ));
         }
         self.external_config().validate()
     }
@@ -383,6 +428,30 @@ batch_max = 16
         cfg.external.trace_dir = Some(std::path::PathBuf::from("/elsewhere"));
         cfg.apply(&raw).unwrap();
         assert_eq!(cfg.external_config().trace_dir, None);
+    }
+
+    #[test]
+    fn server_section_applies() {
+        let raw = RawConfig::parse("[server]\nmax_jobs = 4\nqueue_depth = 32\n").unwrap();
+        let mut cfg = AppConfig::default();
+        cfg.apply(&raw).unwrap();
+        assert_eq!(cfg.max_jobs, 4);
+        assert_eq!(cfg.job_queue_depth, 32);
+    }
+
+    #[test]
+    fn bad_server_values_rejected() {
+        let raw = RawConfig::parse("[server]\nmax_jobs = 0\n").unwrap();
+        let mut cfg = AppConfig::default();
+        let err = cfg.apply(&raw).unwrap_err();
+        assert!(err.contains("server.max_jobs"), "{err}");
+        let raw = RawConfig::parse("[server]\nmax_jobs = 100\n").unwrap();
+        let mut cfg = AppConfig::default();
+        assert!(cfg.apply(&raw).is_err());
+        let raw = RawConfig::parse("[server]\nqueue_depth = 100000\n").unwrap();
+        let mut cfg = AppConfig::default();
+        let err = cfg.apply(&raw).unwrap_err();
+        assert!(err.contains("server.queue_depth"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,591 @@
+//! The multi-tenant job scheduler: admits N concurrent `sortfile`/`sort`
+//! jobs, queues the overflow (bounded — beyond that requests are
+//! rejected with `err busy`, backpressure instead of pile-up), carves
+//! the `[external]` memory/disk/thread budgets evenly across the
+//! running slots, and owns the one process-wide [`WriterPool`] every
+//! job's spill writers draw from instead of spawning per-sort pools.
+//!
+//! A job is born `queued`, becomes `running` when it reaches the front
+//! of the FIFO queue and a slot is free, and retires as `done`,
+//! `failed`, or `cancelled`. Each job carries its own
+//! [`ProgressCounters`] (surfaced by `status <id>`) and a
+//! [`CancelToken`] (tripped by `cancel <id>`): cancellation lands at
+//! the sort pipeline's batch boundaries and unwinds through the normal
+//! error path, so spill files and partial outputs never leak. A
+//! cancelled job that never started simply leaves the queue.
+//!
+//! Budget carving is static — each slot gets `1/max_jobs` of the
+//! configured memory/disk/thread budgets — so admission is trivially
+//! safe: N admitted jobs can never oversubscribe the totals. Carving
+//! changes only the spill layout (run sizes), never the sorted output
+//! bytes, which depend on the input data and dtype alone.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::AppConfig;
+use crate::external::{CancelToken, ExternalConfig, SortCtx, WriterPool};
+use crate::obs::progress::{ProgressCounters, ProgressHandle};
+
+/// Finished jobs kept visible to `jobs`/`status <id>` before the oldest
+/// are forgotten.
+const RETAIN_FINISHED: usize = 64;
+
+/// Where a job is in its lifecycle.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Admitted, waiting for a running slot.
+    Queued,
+    /// Occupying one of the `max_jobs` slots.
+    Running,
+    /// Completed successfully.
+    Done,
+    /// Completed with an error (the message).
+    Failed(String),
+    /// Cancelled — before or while running.
+    Cancelled,
+}
+
+impl JobState {
+    /// The wire-format state name (`status <id>` / `jobs`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed(_) => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// One admitted job: identity, live progress, and the cancel flag.
+#[derive(Debug)]
+pub struct Job {
+    /// Process-unique id (`status <id>` / `cancel <id>`).
+    pub id: u64,
+    /// Human-readable request description (shown nowhere yet; kept for
+    /// log lines and debugging).
+    pub desc: String,
+    /// This job's live progress counters.
+    pub progress: Arc<ProgressCounters>,
+    /// Trip to request cancellation.
+    pub cancel: CancelToken,
+    state: Mutex<JobState>,
+}
+
+impl Job {
+    /// The [`SortCtx`] to thread through this job's sort: progress
+    /// lands on the job's counters (and the process totals), and the
+    /// job's cancel token aborts it.
+    pub fn ctx(&self) -> SortCtx {
+        SortCtx {
+            progress: ProgressHandle::with_job(Arc::clone(&self.progress)),
+            cancel: self.cancel.clone(),
+        }
+    }
+
+    /// Current lifecycle state (a clone; the job may move on).
+    pub fn state(&self) -> JobState {
+        self.state.lock().unwrap().clone()
+    }
+}
+
+#[derive(Default)]
+struct SchedState {
+    next_id: u64,
+    running: usize,
+    queue: VecDeque<u64>,
+    jobs: BTreeMap<u64, Arc<Job>>,
+    finished: VecDeque<u64>,
+}
+
+/// The scheduler itself — one per [`Router`](super::Router), long-lived.
+pub struct JobScheduler {
+    max_jobs: usize,
+    queue_depth: usize,
+    /// The process-wide spill-writer pool every job shares. `None` only
+    /// if thread spawning failed at startup; jobs then build per-sort
+    /// pools exactly as before the scheduler existed.
+    pool: Option<WriterPool>,
+    state: Mutex<SchedState>,
+    slot_free: Condvar,
+    admitted_total: AtomicU64,
+    rejected_total: AtomicU64,
+    completed_total: AtomicU64,
+    failed_total: AtomicU64,
+    cancelled_total: AtomicU64,
+}
+
+impl std::fmt::Debug for JobScheduler {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("JobScheduler")
+            .field("max_jobs", &self.max_jobs)
+            .field("queue_depth", &self.queue_depth)
+            .finish_non_exhaustive()
+    }
+}
+
+impl JobScheduler {
+    /// Build the scheduler for `cfg`: `[server] max_jobs` running
+    /// slots, `[server] queue_depth` waiters, and one process-wide
+    /// writer pool sized for every slot's spill writers at once.
+    pub fn new(cfg: &AppConfig) -> Self {
+        let ext = cfg.external_config();
+        // One writer thread per concurrent spill writer across all
+        // slots (each job: its phase-1 producer + its group merges),
+        // plus slack. `try_execute` falls back to a dedicated thread
+        // under saturation, so undersizing costs a spawn, never a
+        // deadlock.
+        let workers = ext.effective_threads() + cfg.max_jobs + 2;
+        JobScheduler {
+            max_jobs: cfg.max_jobs.max(1),
+            queue_depth: cfg.job_queue_depth,
+            pool: WriterPool::new(workers).ok(),
+            state: Mutex::new(SchedState { next_id: 1, ..Default::default() }),
+            slot_free: Condvar::new(),
+            admitted_total: AtomicU64::new(0),
+            rejected_total: AtomicU64::new(0),
+            completed_total: AtomicU64::new(0),
+            failed_total: AtomicU64::new(0),
+            cancelled_total: AtomicU64::new(0),
+        }
+    }
+
+    /// The shared process-wide writer pool (for `sort_stream_ctx`'s
+    /// `shared_pool` argument).
+    pub fn pool(&self) -> Option<&WriterPool> {
+        self.pool.as_ref()
+    }
+
+    /// Configured running-slot count.
+    pub fn max_jobs(&self) -> usize {
+        self.max_jobs
+    }
+
+    /// `cfg` with the memory/disk/thread budgets carved down to one
+    /// slot's share, floored at the smallest valid values, so
+    /// `max_jobs` concurrent sorts stay inside the configured totals.
+    /// With `max_jobs = 1` the config passes through untouched.
+    pub fn carve(&self, ext: &ExternalConfig) -> ExternalConfig {
+        let n = self.max_jobs;
+        if n <= 1 {
+            return ext.clone();
+        }
+        let mut c = ext.clone();
+        c.mem_budget_bytes = (ext.mem_budget_bytes / n).max(4096);
+        c.threads = (ext.effective_threads() / n).max(1);
+        if let Some(d) = ext.disk_budget_bytes {
+            c.disk_budget_bytes = Some((d / n as u64).max(1));
+        }
+        c
+    }
+
+    /// Admit, wait for a slot, run `f`, retire. The whole job lifecycle:
+    /// rejects with `busy` when the server is at capacity
+    /// (`max_jobs` running + `queue_depth` queued), waits FIFO for a
+    /// running slot otherwise, and classifies the outcome —
+    /// `cancelled` whenever the job's token was tripped, regardless of
+    /// which pipeline check point surfaced the abort.
+    pub fn run<R>(&self, desc: &str, f: impl FnOnce(&Job) -> Result<R>) -> Result<R> {
+        let job = self.admit(desc)?;
+        self.wait_for_slot(&job)?;
+        let res = f(&job);
+        self.retire_running(&job, &res);
+        res
+    }
+
+    fn admit(&self, desc: &str) -> Result<Arc<Job>> {
+        let mut st = self.state.lock().unwrap();
+        if st.running + st.queue.len() >= self.max_jobs + self.queue_depth {
+            self.rejected_total.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow!(
+                "busy: {} running, {} queued (capacity {} jobs + {} queued)",
+                st.running,
+                st.queue.len(),
+                self.max_jobs,
+                self.queue_depth
+            ));
+        }
+        let id = st.next_id;
+        st.next_id += 1;
+        let job = Arc::new(Job {
+            id,
+            desc: desc.to_string(),
+            progress: Arc::new(ProgressCounters::default()),
+            cancel: CancelToken::new(),
+            state: Mutex::new(JobState::Queued),
+        });
+        st.queue.push_back(id);
+        st.jobs.insert(id, Arc::clone(&job));
+        self.admitted_total.fetch_add(1, Ordering::Relaxed);
+        // A slot may be free right now; the waiter loop checks.
+        self.slot_free.notify_all();
+        Ok(job)
+    }
+
+    /// Block until `job` reaches the queue front and a running slot is
+    /// free (strict FIFO — small jobs do not overtake big ones *in the
+    /// scheduler*; tail latency for small `sort`s is preserved by the
+    /// router's bypass, not by reordering). Returns an error if the job
+    /// is cancelled while still queued.
+    fn wait_for_slot(&self, job: &Job) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if job.cancel.is_cancelled() {
+                st.queue.retain(|&id| id != job.id);
+                self.retire_locked(&mut st, job, JobState::Cancelled);
+                return Err(anyhow!("job {} cancelled", job.id));
+            }
+            if st.queue.front() == Some(&job.id) && st.running < self.max_jobs {
+                st.queue.pop_front();
+                st.running += 1;
+                *job.state.lock().unwrap() = JobState::Running;
+                return Ok(());
+            }
+            st = self.slot_free.wait(st).unwrap();
+        }
+    }
+
+    fn retire_running<R>(&self, job: &Job, res: &Result<R>) {
+        let state = match res {
+            Ok(_) => JobState::Done,
+            // The token decides, not the message: whichever check point
+            // surfaced the abort ("sort cancelled", "sort aborted",
+            // "merge cancelled"), a tripped token means cancelled.
+            Err(_) if job.cancel.is_cancelled() => JobState::Cancelled,
+            Err(e) => JobState::Failed(format!("{e:#}")),
+        };
+        let mut st = self.state.lock().unwrap();
+        st.running -= 1;
+        self.retire_locked(&mut st, job, state);
+    }
+
+    fn retire_locked(&self, st: &mut SchedState, job: &Job, state: JobState) {
+        match &state {
+            JobState::Done => &self.completed_total,
+            JobState::Failed(_) => &self.failed_total,
+            _ => &self.cancelled_total,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+        *job.state.lock().unwrap() = state;
+        st.finished.push_back(job.id);
+        while st.finished.len() > RETAIN_FINISHED {
+            if let Some(old) = st.finished.pop_front() {
+                st.jobs.remove(&old);
+            }
+        }
+        self.slot_free.notify_all();
+    }
+
+    /// Trip `id`'s cancel token. Queued jobs leave the queue promptly;
+    /// running jobs abort at the pipeline's next check point and retire
+    /// as `cancelled`.
+    pub fn cancel(&self, id: u64) -> Result<()> {
+        let st = self.state.lock().unwrap();
+        let job = st.jobs.get(&id).ok_or_else(|| anyhow!("unknown job {id}"))?;
+        match job.state() {
+            JobState::Queued | JobState::Running => {
+                job.cancel.cancel();
+                self.slot_free.notify_all();
+                Ok(())
+            }
+            s => Err(anyhow!("job {id} already {}", s.name())),
+        }
+    }
+
+    /// The `status <id>` payload: state plus the job's own progress
+    /// counters; a failed job's error message comes last (it may
+    /// contain spaces — everything before it is strict `k=v`).
+    pub fn status_line(&self, id: u64) -> Result<String> {
+        let job = {
+            let st = self.state.lock().unwrap();
+            st.jobs.get(&id).cloned().ok_or_else(|| anyhow!("unknown job {id}"))?
+        };
+        let p = job.progress.snapshot();
+        let state = job.state();
+        let mut line = format!(
+            "job={id} state={} runs_sealed={} merges_fired={} elements_out={} bytes_out={}",
+            state.name(),
+            p.runs_sealed,
+            p.merges_fired,
+            p.elements_out,
+            p.bytes_out
+        );
+        if let JobState::Failed(msg) = &state {
+            line.push_str(" error=");
+            line.push_str(msg);
+        }
+        Ok(line)
+    }
+
+    /// The `jobs` payload: totals, live gauges, and every retained job
+    /// as `<id>:<state>` in id order.
+    pub fn report(&self) -> String {
+        let st = self.state.lock().unwrap();
+        let mut s = format!(
+            "jobs={} running={} queued={}",
+            self.admitted_total.load(Ordering::Relaxed),
+            st.running,
+            st.queue.len()
+        );
+        for (id, job) in &st.jobs {
+            s.push_str(&format!(" {}:{}", id, job.state().name()));
+        }
+        s
+    }
+
+    /// Jobs currently running or queued.
+    pub fn active(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.running + st.queue.len()
+    }
+
+    /// Run `f` only if no job is running or queued, holding the
+    /// scheduler lock throughout so none can be admitted mid-`f` — the
+    /// `stats reset` race fix. `Err(active)` reports how many jobs
+    /// blocked it.
+    pub fn if_idle<R>(&self, f: impl FnOnce() -> R) -> Result<R, usize> {
+        let st = self.state.lock().unwrap();
+        let active = st.running + st.queue.len();
+        if active > 0 {
+            return Err(active);
+        }
+        let out = f();
+        drop(st);
+        Ok(out)
+    }
+
+    /// Append the scheduler's Prometheus series: admission totals, live
+    /// gauges, and one `flims_job_*{job="<id>"}` sample per retained
+    /// job (queued, running, and recently finished).
+    pub fn prometheus_into(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        let mut metric = |name: &str, help: &str, kind: &str, v: u64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} {kind}");
+            let _ = writeln!(out, "{name} {v}");
+        };
+        metric(
+            "flims_jobs_admitted_total",
+            "Jobs admitted by the scheduler.",
+            "counter",
+            self.admitted_total.load(Ordering::Relaxed),
+        );
+        metric(
+            "flims_jobs_rejected_total",
+            "Jobs rejected at admission (server busy).",
+            "counter",
+            self.rejected_total.load(Ordering::Relaxed),
+        );
+        metric(
+            "flims_jobs_completed_total",
+            "Jobs finished successfully.",
+            "counter",
+            self.completed_total.load(Ordering::Relaxed),
+        );
+        metric(
+            "flims_jobs_failed_total",
+            "Jobs finished with an error.",
+            "counter",
+            self.failed_total.load(Ordering::Relaxed),
+        );
+        metric(
+            "flims_jobs_cancelled_total",
+            "Jobs cancelled before or while running.",
+            "counter",
+            self.cancelled_total.load(Ordering::Relaxed),
+        );
+        let st = self.state.lock().unwrap();
+        let _ = writeln!(out, "# HELP flims_jobs_running Jobs occupying a running slot.");
+        let _ = writeln!(out, "# TYPE flims_jobs_running gauge");
+        let _ = writeln!(out, "flims_jobs_running {}", st.running);
+        let _ = writeln!(out, "# HELP flims_jobs_queued Jobs waiting for a running slot.");
+        let _ = writeln!(out, "# TYPE flims_jobs_queued gauge");
+        let _ = writeln!(out, "flims_jobs_queued {}", st.queue.len());
+        if st.jobs.is_empty() {
+            return;
+        }
+        let series: [(&str, &str, fn(&crate::obs::progress::JobProgress) -> u64); 4] = [
+            ("flims_job_runs_sealed", "Runs this job sealed on disk.", |p| p.runs_sealed),
+            ("flims_job_merges_fired", "Group merges this job completed.", |p| p.merges_fired),
+            ("flims_job_elements_out", "Elements this job wrote to its output.", |p| {
+                p.elements_out
+            }),
+            ("flims_job_bytes_out", "Bytes this job wrote to its output.", |p| p.bytes_out),
+        ];
+        for (name, help, get) in series {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            for (id, job) in &st.jobs {
+                let _ = writeln!(out, "{name}{{job=\"{id}\"}} {}", get(&job.progress.snapshot()));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn sched(max_jobs: usize, queue_depth: usize) -> JobScheduler {
+        let cfg =
+            AppConfig { max_jobs, job_queue_depth: queue_depth, ..AppConfig::default() };
+        JobScheduler::new(&cfg)
+    }
+
+    #[test]
+    fn jobs_run_and_retire_in_order() {
+        let s = sched(2, 4);
+        let out = s.run("a", |job| {
+            assert_eq!(job.id, 1);
+            assert_eq!(job.state(), JobState::Running);
+            Ok(42)
+        });
+        assert_eq!(out.unwrap(), 42);
+        assert!(s.report().contains("1:done"), "{}", s.report());
+        let err = s.run("b", |_| Err::<(), _>(anyhow!("boom"))).unwrap_err();
+        assert!(format!("{err:#}").contains("boom"));
+        let line = s.status_line(2).unwrap();
+        assert!(line.contains("state=failed") && line.ends_with("error=boom"), "{line}");
+    }
+
+    #[test]
+    fn admission_rejects_beyond_capacity() {
+        let s = Arc::new(sched(1, 0));
+        let (started_tx, started_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let s2 = Arc::clone(&s);
+        let t = std::thread::spawn(move || {
+            s2.run("big", |_| {
+                started_tx.send(()).unwrap();
+                release_rx.recv().unwrap();
+                Ok(())
+            })
+        });
+        started_rx.recv().unwrap();
+        // Capacity is 1 running + 0 queued: the next job bounces.
+        let err = s.run("small", |_| Ok(())).unwrap_err();
+        assert!(format!("{err:#}").contains("busy"), "{err:#}");
+        release_tx.send(()).unwrap();
+        t.join().unwrap().unwrap();
+        // Capacity freed: admitted again.
+        s.run("after", |_| Ok(())).unwrap();
+    }
+
+    #[test]
+    fn cancel_while_queued_skips_the_job() {
+        let s = Arc::new(sched(1, 4));
+        let (started_tx, started_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let s2 = Arc::clone(&s);
+        let blocker = std::thread::spawn(move || {
+            s2.run("blocker", |_| {
+                started_tx.send(()).unwrap();
+                release_rx.recv().unwrap();
+                Ok(())
+            })
+        });
+        started_rx.recv().unwrap();
+        let s3 = Arc::clone(&s);
+        let queued = std::thread::spawn(move || s3.run("queued", |_| Ok(())));
+        // Wait until job 2 is actually queued, then cancel it.
+        while s.active() < 2 {
+            std::thread::yield_now();
+        }
+        s.cancel(2).unwrap();
+        let err = queued.join().unwrap().unwrap_err();
+        assert!(format!("{err:#}").contains("cancelled"), "{err:#}");
+        assert!(s.status_line(2).unwrap().contains("state=cancelled"));
+        // Cancelling a finished job is an error; unknown ids too.
+        assert!(s.cancel(2).is_err());
+        assert!(s.cancel(99).unwrap_err().to_string().contains("unknown job"));
+        release_tx.send(()).unwrap();
+        blocker.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn running_cancel_classifies_by_token() {
+        let s = sched(1, 0);
+        let err = s
+            .run("self-cancelling", |job| {
+                job.cancel.cancel();
+                job.cancel.check()?;
+                Ok(())
+            })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("cancelled"));
+        assert!(s.status_line(1).unwrap().contains("state=cancelled"));
+    }
+
+    #[test]
+    fn carve_divides_budgets_with_floors() {
+        let s = sched(4, 0);
+        let ext = ExternalConfig {
+            mem_budget_bytes: 64 << 20,
+            threads: 8,
+            disk_budget_bytes: Some(1 << 30),
+            ..Default::default()
+        };
+        let c = s.carve(&ext);
+        assert_eq!(c.mem_budget_bytes, 16 << 20);
+        assert_eq!(c.threads, 2);
+        assert_eq!(c.disk_budget_bytes, Some((1 << 30) / 4));
+        // Floors: budgets never carve below the smallest valid values.
+        let tiny = ExternalConfig {
+            mem_budget_bytes: 4096,
+            threads: 1,
+            disk_budget_bytes: Some(2),
+            ..Default::default()
+        };
+        let c = s.carve(&tiny);
+        assert_eq!(c.mem_budget_bytes, 4096);
+        assert_eq!(c.threads, 1);
+        assert_eq!(c.disk_budget_bytes, Some(1));
+        // max_jobs = 1: pass-through, bit for bit.
+        let s1 = sched(1, 0);
+        assert_eq!(s1.carve(&ext), ext);
+    }
+
+    #[test]
+    fn if_idle_gates_on_active_jobs() {
+        let s = Arc::new(sched(1, 4));
+        assert_eq!(s.if_idle(|| 7), Ok(7));
+        let (started_tx, started_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let s2 = Arc::clone(&s);
+        let t = std::thread::spawn(move || {
+            s2.run("busy", |_| {
+                started_tx.send(()).unwrap();
+                release_rx.recv().unwrap();
+                Ok(())
+            })
+        });
+        started_rx.recv().unwrap();
+        assert_eq!(s.if_idle(|| 7), Err(1));
+        release_tx.send(()).unwrap();
+        t.join().unwrap().unwrap();
+        assert_eq!(s.if_idle(|| 7), Ok(7));
+    }
+
+    #[test]
+    fn prometheus_series_render() {
+        let s = sched(2, 4);
+        s.run("a", |job| {
+            job.ctx().progress.block_out(5, 20);
+            Ok(())
+        })
+        .unwrap();
+        let mut out = String::new();
+        s.prometheus_into(&mut out);
+        assert!(out.contains("flims_jobs_admitted_total 1"), "{out}");
+        assert!(out.contains("flims_jobs_completed_total 1"), "{out}");
+        assert!(out.contains("flims_jobs_running 0"), "{out}");
+        assert!(out.contains("flims_job_elements_out{job=\"1\"} 5"), "{out}");
+        assert!(out.contains("flims_job_bytes_out{job=\"1\"} 20"), "{out}");
+    }
+}

@@ -8,13 +8,19 @@
 //! * [`batcher`] — dynamic batching: concurrent sort requests of the
 //!   same shape coalesce into one `batched_sort` artifact execution
 //!   (vLLM-router-style window + max-batch policy).
+//! * [`jobs`] — the multi-tenant job scheduler: admission control over
+//!   N concurrent `sortfile`/`sort` jobs, a bounded FIFO queue with
+//!   `err busy` backpressure, per-job progress/cancellation, budget
+//!   carving, and the shared process-wide spill-writer pool.
 //! * [`service`] — a TCP front end with a line-oriented protocol, one
 //!   worker thread per connection, shared metrics.
 
 pub mod batcher;
+pub mod jobs;
 pub mod router;
 pub mod service;
 
 pub use batcher::{Batcher, BatcherConfig};
+pub use jobs::{Job, JobScheduler, JobState};
 pub use router::{Backend, Router};
 pub use service::Service;

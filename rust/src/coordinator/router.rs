@@ -13,8 +13,9 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
+use super::jobs::{Job, JobScheduler};
 use crate::config::AppConfig;
-use crate::external::{self, Codec, Dtype, ExternalConfig, SpillStats};
+use crate::external::{self, Codec, Dtype, ExtItem, ExternalConfig, SpillStats};
 use crate::flims::parallel::{par_sort_desc, ParSortConfig};
 use crate::flims::simd::{merge_desc_kernel, MergeKernel};
 use crate::flims::sort::{sort_desc_with, SortConfig};
@@ -49,12 +50,15 @@ impl Backend {
     }
 }
 
-/// The router owns the engines and the metrics.
+/// The router owns the engines, the job scheduler, and the metrics.
 pub struct Router {
     cfg: AppConfig,
     runtime: Option<RuntimeHandle>,
     /// Shared service metrics, updated on every routed request.
     pub metrics: Arc<ServiceMetrics>,
+    /// The multi-tenant job scheduler every external sort runs under
+    /// (the `jobs`/`status <id>`/`cancel <id>` verbs talk to it).
+    pub jobs: Arc<JobScheduler>,
     /// The most recent external sort's labels + stats (the `stats`
     /// verb's `last[…]` block).
     last_sort: Mutex<Option<(SortLabels, SpillStats)>>,
@@ -63,10 +67,12 @@ pub struct Router {
 impl Router {
     /// Build a router over the given config and (optional) PJRT runtime.
     pub fn new(cfg: AppConfig, runtime: Option<RuntimeHandle>) -> Self {
+        let jobs = Arc::new(JobScheduler::new(&cfg));
         Router {
             cfg,
             runtime,
             metrics: Arc::new(ServiceMetrics::default()),
+            jobs,
             last_sort: Mutex::new(None),
         }
     }
@@ -120,7 +126,27 @@ impl Router {
             }
             Backend::External => {
                 let ext = self.cfg.external_config();
-                let (out, stats) = external::sort_vec(&data, &ext)?;
+                // Inputs that fit a single run take `sort_vec`'s
+                // in-memory fast path — no spill machinery, nothing to
+                // schedule — so small `sort external` requests keep
+                // their tail latency however many huge `sortfile` jobs
+                // are queued. Everything larger runs as a job under the
+                // carved budgets.
+                let (out, stats) = if data.len() <= ext.run_elems_for(<u32 as ExtItem>::WIRE_BYTES)
+                {
+                    external::sort_vec(&data, &ext)?
+                } else {
+                    let carved = self.jobs.carve(&ext);
+                    self.jobs.run("sort external", |job| {
+                        let (ext, job_dir) = Self::job_ext(&carved, job);
+                        let res =
+                            external::sort_vec_ctx(&data, &ext, &job.ctx(), self.jobs.pool());
+                        if let Some(d) = &job_dir {
+                            let _ = std::fs::remove_dir(d);
+                        }
+                        res
+                    })?
+                };
                 self.record_spill(&stats, Self::labels_for(&ext, Dtype::U32));
                 out
             }
@@ -139,6 +165,14 @@ impl Router {
     /// file is. `trace` writes a Chrome trace-event JSON of the sort to
     /// that path (the `--trace` flag / `trace=` protocol option),
     /// independent of the config's `trace_dir` auto-tracing.
+    ///
+    /// Every `sortfile` runs as a scheduler job: it waits for one of
+    /// the `max_jobs` running slots (rejected with `busy` past the
+    /// admission queue), sorts under the carved per-slot budgets with
+    /// its own progress counters and cancel token, and draws spill
+    /// writers from the shared process-wide pool. The sorted bytes are
+    /// identical to a serial run — carving changes spill layout, never
+    /// output.
     pub fn sort_file_external(
         &self,
         input: &Path,
@@ -154,7 +188,7 @@ impl Router {
         let mut name = input.as_os_str().to_owned();
         name.push(".sorted");
         let output = PathBuf::from(name);
-        let mut ext = self.cfg.external_config();
+        let mut ext = self.jobs.carve(&self.cfg.external_config());
         if let Some(codec) = codec {
             ext.codec = codec;
         }
@@ -164,21 +198,56 @@ impl Router {
         if let Some(kernel) = kernel {
             ext.kernel = kernel;
         }
-        let stats = match trace {
-            None => external::sort_file_dtype(input, &output, &ext, dtype)?,
-            Some(trace_path) => {
-                let handle = Trace::enabled();
-                let stats =
-                    external::sort_file_dtype_traced(input, &output, &ext, dtype, &handle)?;
-                obs::chrome::write_file(&handle, trace_path)
-                    .with_context(|| format!("writing trace {}", trace_path.display()))?;
-                stats
+        let desc = format!("sortfile {}", input.display());
+        let stats = self.jobs.run(&desc, |job| {
+            let (ext, job_dir) = Self::job_ext(&ext, job);
+            let ctx = job.ctx();
+            let pool = self.jobs.pool();
+            let res = match trace {
+                None => {
+                    let handle = ext.make_trace();
+                    let res = external::sort_file_dtype_ctx(
+                        input, &output, &ext, dtype, &ctx, pool, &handle,
+                    );
+                    if let (Ok(_), Some(dir)) = (&res, &ext.trace_dir) {
+                        obs::chrome::write_auto(&handle, dir);
+                    }
+                    res
+                }
+                Some(trace_path) => {
+                    let handle = Trace::enabled();
+                    external::sort_file_dtype_ctx(
+                        input, &output, &ext, dtype, &ctx, pool, &handle,
+                    )
+                    .and_then(|stats| {
+                        obs::chrome::write_file(&handle, trace_path)
+                            .with_context(|| format!("writing trace {}", trace_path.display()))?;
+                        Ok(stats)
+                    })
+                }
+            };
+            if let Some(d) = &job_dir {
+                let _ = std::fs::remove_dir(d);
             }
-        };
+            res
+        })?;
         self.metrics.elements_sorted.add(stats.elements);
         self.record_spill(&stats, Self::labels_for(&ext, dtype));
         self.metrics.latency.observe(t.elapsed());
         Ok((output, stats))
+    }
+
+    /// `ext` with `job`'s private spill subdirectory substituted in
+    /// (when a `tmp_dir` is configured at all): concurrent jobs sharing
+    /// one configured directory would collide on `run-NNNNNN.flr`
+    /// names. Returns the subdirectory so the caller can best-effort
+    /// remove it after the job (the `SpillManager` deletes the run
+    /// files but treats a caller-provided directory as caller-owned).
+    fn job_ext(ext: &ExternalConfig, job: &Job) -> (ExternalConfig, Option<PathBuf>) {
+        let mut e = ext.clone();
+        let dir = e.tmp_dir.take().map(|d| d.join(format!("job-{}", job.id)));
+        e.tmp_dir.clone_from(&dir);
+        (e, dir)
     }
 
     /// The exposition label set an external sort ran under.
@@ -231,18 +300,31 @@ impl Router {
     /// Zero every counter, histogram, and per-label aggregate, and
     /// forget the last sort (`stats reset`). The process-wide progress
     /// totals are left alone — they are monotonic by contract.
-    pub fn reset_metrics(&self) {
-        self.metrics.reset();
-        *self.last_sort.lock().unwrap() = None;
+    ///
+    /// Rejected while any job is running or queued: a reset landing
+    /// mid-sort would zero counters between a job's updates, leaving
+    /// the per-sort label aggregates inconsistent with the totals. The
+    /// check holds the scheduler's admission lock, so no job can slip
+    /// in while the counters swap.
+    pub fn reset_metrics(&self) -> Result<()> {
+        self.jobs
+            .if_idle(|| {
+                self.metrics.reset();
+                *self.last_sort.lock().unwrap() = None;
+            })
+            .map_err(|active| anyhow!("stats reset rejected: {active} job(s) active"))
     }
 
     /// The full Prometheus text exposition: the service metric set, the
-    /// per-label sort aggregates, and the process-wide progress
-    /// counters, terminated by `# EOF` (OpenMetrics-style, and the
-    /// marker TCP clients read up to).
+    /// per-label sort aggregates, the process-wide progress counters,
+    /// and the job scheduler's series (admission totals, queue gauges,
+    /// per-job `flims_job_*{job="<id>"}` progress), terminated by
+    /// `# EOF` (OpenMetrics-style, and the marker TCP clients read up
+    /// to).
     pub fn prometheus(&self) -> String {
         let mut out = self.metrics.prometheus();
         progress::prometheus_into(&mut out);
+        self.jobs.prometheus_into(&mut out);
         out.push_str("# EOF");
         out
     }
@@ -620,9 +702,115 @@ mod tests {
         );
         assert!(text.contains(&series), "missing {series} in:\n{text}");
 
-        r.reset_metrics();
+        r.reset_metrics().unwrap();
         assert!(r.last_sort().is_none());
         assert_eq!(r.metrics.external_sorts.get(), 0);
         assert!(!r.prometheus().contains("flims_sorts_total{"), "per-label series must reset");
+    }
+
+    #[test]
+    fn external_sorts_run_as_jobs_and_small_sorts_bypass() {
+        let cfg = AppConfig {
+            // 1024-element u32 runs
+            external: ExternalConfig { mem_budget_bytes: 4096, ..ExternalConfig::default() },
+            ..AppConfig::default()
+        };
+        let r = Router::new(cfg, None);
+        let mut rng = Rng::new(310);
+        // 500 elements fit one run: served inline, no job admitted.
+        let small = gen_u32(&mut rng, 500, Distribution::Uniform);
+        r.sort_u32(small, Backend::External).unwrap();
+        assert!(r.jobs.report().starts_with("jobs=0"), "{}", r.jobs.report());
+        // 10k elements spill: runs under the scheduler with per-job
+        // progress visible afterwards.
+        let big = gen_u32(&mut rng, 10_000, Distribution::Uniform);
+        let mut expect = big.clone();
+        expect.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(r.sort_u32(big, Backend::External).unwrap(), expect);
+        assert!(r.jobs.report().contains("1:done"), "{}", r.jobs.report());
+        let status = r.jobs.status_line(1).unwrap();
+        assert!(status.contains("state=done"), "{status}");
+        assert!(!status.contains("runs_sealed=0 "), "per-job progress must tick: {status}");
+        let text = r.prometheus();
+        assert!(text.contains("flims_jobs_completed_total 1"), "{text}");
+        assert!(text.contains("flims_job_runs_sealed{job=\"1\"}"), "{text}");
+    }
+
+    #[test]
+    fn stats_reset_rejected_while_jobs_active() {
+        use std::sync::mpsc;
+        let r = Arc::new(router());
+        r.reset_metrics().unwrap(); // idle: allowed
+        let (started_tx, started_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let r2 = Arc::clone(&r);
+        let t = std::thread::spawn(move || {
+            r2.jobs.run("hold", |_| {
+                started_tx.send(()).unwrap();
+                release_rx.recv().unwrap();
+                Ok(())
+            })
+        });
+        started_rx.recv().unwrap();
+        let err = r.reset_metrics().unwrap_err();
+        assert!(format!("{err:#}").contains("1 job(s) active"), "{err:#}");
+        release_tx.send(()).unwrap();
+        t.join().unwrap().unwrap();
+        r.reset_metrics().unwrap();
+    }
+
+    #[test]
+    fn concurrent_sortfile_jobs_share_a_tmp_dir_without_colliding() {
+        use std::sync::mpsc;
+        let dir =
+            std::env::temp_dir().join(format!("flims-router-jobs-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = AppConfig {
+            max_jobs: 2,
+            external: ExternalConfig {
+                mem_budget_bytes: 8192, // carved to 4096 at max_jobs 2
+                fan_in: 4,
+                tmp_dir: Some(dir.join("spill")),
+                ..ExternalConfig::default()
+            },
+            ..AppConfig::default()
+        };
+        let r = Arc::new(Router::new(cfg, None));
+
+        let mut rng = Rng::new(311);
+        let (tx, rx) = mpsc::channel();
+        let mut expects = Vec::new();
+        for i in 0..2u32 {
+            let v = gen_u32(&mut rng, 20_000, Distribution::Uniform);
+            let input = dir.join(format!("data-{i}.u32"));
+            crate::external::format::write_raw(&input, &v).unwrap();
+            let mut expect = v;
+            expect.sort_unstable_by(|a, b| b.cmp(a));
+            expects.push((input.clone(), expect));
+            let r = Arc::clone(&r);
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                tx.send(r.sort_file_external(&input, None, None, None, None, None)).unwrap();
+            });
+        }
+        drop(tx);
+        for res in rx {
+            let (out_path, stats) = res.unwrap();
+            assert_eq!(stats.elements, 20_000);
+            let got = crate::external::format::read_raw::<u32>(&out_path).unwrap();
+            let (_, want) = expects
+                .iter()
+                .find(|(i, _)| out_path == PathBuf::from(format!("{}.sorted", i.display())))
+                .expect("output path must match one input");
+            assert_eq!(&got, want, "concurrent job output must match serial sort");
+        }
+        // Both jobs retired; their spill subdirectories are gone.
+        assert!(r.jobs.report().contains("1:done"), "{}", r.jobs.report());
+        assert!(r.jobs.report().contains("2:done"), "{}", r.jobs.report());
+        let leftovers: Vec<_> = std::fs::read_dir(dir.join("spill"))
+            .map(|d| d.collect())
+            .unwrap_or_default();
+        assert!(leftovers.is_empty(), "spill leaked: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

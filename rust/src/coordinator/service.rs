@@ -37,10 +37,30 @@
 //!                                   sort's labels + timings]
 //! stats reset                   →  ok reset  (zeroes every counter,
 //!                                   histogram, per-label aggregate and
-//!                                   the `last[…]` block)
+//!                                   the `last[…]` block; rejected with
+//!                                   a one-line `err` while any job is
+//!                                   running or queued, so a reset can
+//!                                   never tear an in-flight sort's
+//!                                   counters)
 //! progress                      →  ok <live progress counters>  (runs
 //!                                   sealed / merges fired / elements +
 //!                                   bytes out, process-wide)
+//! jobs                          →  ok jobs=<admitted> running=<r>
+//!                                   queued=<q> <id>:<state>…  (every
+//!                                   retained job in id order; external
+//!                                   sorts big enough to spill run as
+//!                                   scheduler jobs)
+//! status <id>                   →  ok job=<id> state=<state>
+//!                                   runs_sealed=… merges_fired=…
+//!                                   elements_out=… bytes_out=…  (the
+//!                                   job's OWN progress counters; a
+//!                                   failed job's error=<msg> comes
+//!                                   last)
+//! cancel <id>                   →  ok cancelled <id>  (queued jobs
+//!                                   leave the queue promptly; running
+//!                                   jobs abort at the pipeline's next
+//!                                   check point and their spill files
+//!                                   and partial output are removed)
 //! metrics                       →  Prometheus text exposition ending
 //!                                   with `# EOF` (the ONE multi-line
 //!                                   response; clients read until the
@@ -53,8 +73,8 @@
 //! unknown backends or commands, bad numbers) always produce a one-line
 //! `err …` response — protocol errors never tear down the connection.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -73,6 +93,14 @@ pub struct Service {
     /// Dynamic batcher for the `batch` command.
     pub batcher: Arc<Batcher>,
     stop: Arc<AtomicBool>,
+}
+
+/// One live connection tracked by the accept loop: a clone of its
+/// socket (shut down to unblock the reader) and the worker thread's
+/// handle (joined on shutdown — connection threads are never detached).
+struct ConnSlot {
+    socket: Option<TcpStream>,
+    handle: std::thread::JoinHandle<()>,
 }
 
 impl Service {
@@ -255,12 +283,29 @@ impl Service {
                     Ok(out)
                 }
                 "reset" => {
-                    self.router.reset_metrics();
+                    self.router.reset_metrics()?;
                     Ok("ok reset".into())
                 }
                 other => Err(anyhow!("unknown stats subcommand '{other}'")),
             },
             "progress" => Ok(format!("ok {}", crate::obs::progress::report())),
+            "jobs" => {
+                if !rest.trim().is_empty() {
+                    bail!("usage: jobs");
+                }
+                Ok(format!("ok {}", self.router.jobs.report()))
+            }
+            "status" => {
+                let id: u64 =
+                    rest.trim().parse().map_err(|_| anyhow!("usage: status <job-id>"))?;
+                Ok(format!("ok {}", self.router.jobs.status_line(id)?))
+            }
+            "cancel" => {
+                let id: u64 =
+                    rest.trim().parse().map_err(|_| anyhow!("usage: cancel <job-id>"))?;
+                self.router.jobs.cancel(id)?;
+                Ok(format!("ok cancelled {id}"))
+            }
             // The one multi-line response: Prometheus text exposition,
             // terminated by `# EOF` so clients know where it stops.
             "metrics" => Ok(self.router.prometheus()),
@@ -269,13 +314,21 @@ impl Service {
         }
     }
 
-    /// Serve forever on `bind` (blocking). A background timer thread
-    /// drives `flush_if_due` so the batching window is honoured even
-    /// while connections idle.
+    /// Serve on `bind` until [`shutdown`](Self::shutdown) (blocking). A
+    /// background timer thread drives `flush_if_due` so the batching
+    /// window is honoured even while connections idle.
+    ///
+    /// The listener is nonblocking: the accept loop polls the stop flag
+    /// every couple of milliseconds, so `shutdown` takes effect
+    /// promptly instead of waiting for one more connection to arrive.
+    /// On the way out every live connection socket is shut down (which
+    /// unblocks its reader) and every connection thread — plus the
+    /// timer — is joined before `serve` returns.
     pub fn serve(self: &Arc<Self>, bind: &str) -> Result<()> {
         let listener = TcpListener::bind(bind)?;
+        listener.set_nonblocking(true)?;
         eprintln!("flims service listening on {bind}");
-        {
+        let timer = {
             let svc = self.clone();
             std::thread::spawn(move || loop {
                 if svc.stop.load(Ordering::Relaxed) {
@@ -283,33 +336,66 @@ impl Service {
                 }
                 svc.batcher.flush_if_due();
                 std::thread::sleep(Duration::from_micros(200));
-            });
-        }
-        for stream in listener.incoming() {
-            if self.stop.load(Ordering::Relaxed) {
-                break;
-            }
-            match stream {
-                Ok(s) => {
+            })
+        };
+        let mut conns: Vec<ConnSlot> = Vec::new();
+        while !self.stop.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    // Connection I/O stays blocking; only accept polls.
+                    if stream.set_nonblocking(false).is_err() {
+                        continue;
+                    }
+                    let socket = stream.try_clone().ok();
                     let svc = self.clone();
-                    std::thread::spawn(move || svc.handle_conn(s));
+                    let handle = std::thread::spawn(move || svc.handle_conn(stream));
+                    conns.push(ConnSlot { socket, handle });
                 }
-                Err(e) => eprintln!("accept error: {e}"),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    // Reap threads whose connections already closed, so
+                    // the slot list tracks live connections rather than
+                    // every connection ever accepted.
+                    let mut i = 0;
+                    while i < conns.len() {
+                        if conns[i].handle.is_finished() {
+                            let _ = conns.swap_remove(i).handle.join();
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => {
+                    eprintln!("accept error: {e}");
+                    std::thread::sleep(Duration::from_millis(2));
+                }
             }
         }
+        // Unblock every connection thread parked in a read, then join
+        // them all — shutdown leaves no detached threads behind.
+        for slot in conns {
+            if let Some(socket) = &slot.socket {
+                let _ = socket.shutdown(Shutdown::Both);
+            }
+            let _ = slot.handle.join();
+        }
+        let _ = timer.join();
         Ok(())
     }
 
-    /// Ask the accept loop and timer thread to exit (takes effect on
-    /// their next iteration).
+    /// Ask `serve` to stop: the accept loop notices within its poll
+    /// interval (no extra connection needed), shuts down the live
+    /// connection sockets, and joins every worker before returning.
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::Relaxed);
     }
 
     fn handle_conn(&self, stream: TcpStream) {
-        let peer = stream.peer_addr().ok();
+        // Buffer the writes (one syscall per response, not one per
+        // formatting fragment) and flush per response so the client
+        // always sees the full reply before its next request.
         let mut writer = match stream.try_clone() {
-            Ok(w) => w,
+            Ok(w) => BufWriter::new(w),
             Err(_) => return,
         };
         let reader = BufReader::new(stream);
@@ -318,16 +404,20 @@ impl Service {
                 Ok(l) => l,
                 Err(_) => break,
             };
-            if line.trim() == "quit" {
+            // Trim once, up front: a CRLF client's trailing `\r` (and
+            // stray whitespace) is gone before dispatch reads the verb,
+            // not just on the `quit` comparison.
+            let line = line.trim();
+            if line == "quit" {
                 let _ = writeln!(writer, "bye");
+                let _ = writer.flush();
                 break;
             }
-            let resp = self.handle_line(&line);
-            if writeln!(writer, "{resp}").is_err() {
+            let resp = self.handle_line(line);
+            if writeln!(writer, "{resp}").is_err() || writer.flush().is_err() {
                 break;
             }
         }
-        let _ = peer;
     }
 }
 
@@ -766,9 +856,166 @@ mod tests {
         assert_eq!(line.trim(), "ok 9 5 1");
 
         writeln!(conn, "quit").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "bye");
         service.shutdown();
-        // Poke the accept loop so it notices the stop flag.
-        let _ = TcpStream::connect(addr);
-        let _ = handle.join();
+        handle.join().unwrap();
+    }
+
+    /// Regression: `shutdown` must unblock the accept loop promptly
+    /// even with idle connections open. The old blocking `incoming()`
+    /// loop only noticed the stop flag after one more client connected,
+    /// and connection threads were detached, never joined.
+    #[test]
+    fn shutdown_unblocks_accept_and_joins_with_idle_connections() {
+        use std::io::{BufRead, BufReader, Write};
+        let router = Arc::new(Router::new(AppConfig::default(), None));
+        let service = Arc::new(Service::new(
+            router,
+            BatcherConfig { max_batch: 4, window: Duration::from_micros(100) },
+        ));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        drop(listener);
+        let svc2 = service.clone();
+        let bind = addr.to_string();
+        let serve_thread = std::thread::spawn(move || svc2.serve(&bind));
+        std::thread::sleep(Duration::from_millis(50));
+
+        // Two connections, both left open — and NO further connection
+        // after shutdown() to poke the loop awake.
+        let mut active = TcpStream::connect(addr).unwrap();
+        let _idle = TcpStream::connect(addr).unwrap();
+        writeln!(active, "sort native 2 1").unwrap();
+        let mut reader = BufReader::new(active.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "ok 2 1");
+
+        let t0 = std::time::Instant::now();
+        service.shutdown();
+        serve_thread.join().unwrap().unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "serve must return without another connection (took {:?})",
+            t0.elapsed()
+        );
+        // The server shut the socket down, so the open connection is
+        // at EOF (or reset) rather than parked forever.
+        let mut end = String::new();
+        assert_eq!(reader.read_line(&mut end).unwrap_or(0), 0, "{end:?}");
+    }
+
+    /// CRLF clients (telnet, Windows netcat) terminate lines with
+    /// `\r\n`; every verb must dispatch with the `\r` stripped, not
+    /// just the `quit` comparison.
+    #[test]
+    fn crlf_lines_dispatch_every_verb() {
+        use std::io::{BufRead, BufReader, Write};
+        let router = Arc::new(Router::new(AppConfig::default(), None));
+        let service = Arc::new(Service::new(
+            router,
+            BatcherConfig { max_batch: 4, window: Duration::from_micros(100) },
+        ));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        drop(listener);
+        let svc2 = service.clone();
+        let bind = addr.to_string();
+        let serve_thread = std::thread::spawn(move || svc2.serve(&bind));
+        std::thread::sleep(Duration::from_millis(50));
+
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+
+        conn.write_all(b"sort native 3 1 2\r\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim_end(), "ok 3 2 1");
+
+        line.clear();
+        conn.write_all(b"jobs\r\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ok jobs=0 running=0 queued=0"), "{line}");
+
+        line.clear();
+        conn.write_all(b"status 7\r\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim_end(), "err unknown job 7");
+
+        line.clear();
+        conn.write_all(b"quit\r\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim_end(), "bye");
+
+        service.shutdown();
+        serve_thread.join().unwrap().unwrap();
+    }
+
+    /// The job verbs end to end: an external `sortfile` big enough to
+    /// spill runs as a scheduler job, `jobs` lists it, `status <id>`
+    /// shows its own progress counters, and the cancel/usage errors
+    /// stay one-line.
+    #[test]
+    fn job_verbs_over_the_protocol() {
+        use crate::external::format::write_raw;
+        let dir = std::env::temp_dir().join(format!("flims-svc-jobs-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("req.u32");
+        let data: Vec<u32> = (0..20_000u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        write_raw(&input, &data).unwrap();
+
+        // Tight budget so the request really spills (and so becomes a
+        // job with nonzero per-job progress).
+        let mut app = crate::config::AppConfig::default();
+        app.external.mem_budget_bytes = 4096;
+        let router = Arc::new(Router::new(app, None));
+        let s = Service::new(
+            router,
+            BatcherConfig { max_batch: 2, window: Duration::from_micros(1) },
+        );
+
+        assert_eq!(s.handle_line("jobs"), "ok jobs=0 running=0 queued=0");
+        let resp = s.handle_line(&format!("sortfile external {}", input.display()));
+        assert!(resp.starts_with("ok 20000 "), "{resp}");
+        assert_eq!(s.handle_line("jobs"), "ok jobs=1 running=0 queued=0 1:done");
+        let status = s.handle_line("status 1");
+        assert!(status.starts_with("ok job=1 state=done runs_sealed="), "{status}");
+        assert!(!status.contains("runs_sealed=0 "), "a spilling sort seals runs: {status}");
+
+        // Finished jobs can't be cancelled; unknown ids and bad
+        // arguments are one-line errors.
+        assert_eq!(s.handle_line("cancel 1"), "err job 1 already done");
+        assert_eq!(s.handle_line("status 99"), "err unknown job 99");
+        assert_eq!(s.handle_line("cancel 99"), "err unknown job 99");
+        assert_eq!(s.handle_line("status banana"), "err usage: status <job-id>");
+        assert_eq!(s.handle_line("cancel"), "err usage: cancel <job-id>");
+        assert_eq!(s.handle_line("jobs now"), "err usage: jobs");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// `stats reset` is rejected — atomically, under the scheduler's
+    /// admission lock — while any job is running or queued, so a reset
+    /// can never tear an in-flight sort's counters.
+    #[test]
+    fn stats_reset_rejected_while_a_job_is_active() {
+        use std::sync::mpsc;
+        let s = svc();
+        let router = s.router.clone();
+        let (started_tx, started_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let t = std::thread::spawn(move || {
+            router.jobs.run("held", |_| {
+                started_tx.send(()).unwrap();
+                release_rx.recv().unwrap();
+                Ok(())
+            })
+        });
+        started_rx.recv().unwrap();
+        assert_eq!(s.handle_line("stats reset"), "err stats reset rejected: 1 job(s) active");
+        release_tx.send(()).unwrap();
+        t.join().unwrap().unwrap();
+        assert_eq!(s.handle_line("stats reset"), "ok reset");
     }
 }

@@ -33,21 +33,22 @@
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Error, Result};
 
 use super::format::{ExtItem, RawWriter, RunFile, RunReader, RunWriter, RUN_HEADER_BYTES};
-use super::run_gen::{generate_runs_streaming, RecordSource};
+use super::run_gen::{generate_runs_streaming_ctx, RecordSource};
 use super::spill::SpillManager;
 use super::stream::{
     build_tree, pump, DoubleBufWriter, PrefetchCounters, PrefetchStream, ReaderStream, RunStream,
     WriterPool,
 };
-use super::ExternalConfig;
-use crate::obs::{progress, SpanKind, Trace};
+use super::{ExternalConfig, SortCtx};
+use crate::obs::progress::ProgressHandle;
+use crate::obs::{SpanKind, Trace};
 
 /// The pass/group structure for merging `k` runs at a given fan-in.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -178,6 +179,7 @@ fn merge_group<T: ExtItem>(
     counters: &Arc<PrefetchCounters>,
     writer: RunWriter<T>,
     pool: Option<&WriterPool>,
+    progress: &ProgressHandle,
 ) -> Result<(RunFile, u64)> {
     let t = counters.trace.begin();
     let mut tree = open_group::<T>(group, cfg, counters)?;
@@ -185,7 +187,7 @@ fn merge_group<T: ExtItem>(
     let written = pump(tree.as_mut(), |chunk| dbw.write_block(chunk))?;
     let out = dbw.finish()?.finish()?;
     counters.trace.end(SpanKind::GroupMerge, t, written);
-    progress::merge_fired();
+    progress.merge_fired();
     Ok((out, written))
 }
 
@@ -195,12 +197,28 @@ fn merge_group<T: ExtItem>(
 /// merges of a pass run concurrently) and deleting consumed runs as
 /// results land.
 pub fn merge_runs<T: ExtItem>(
+    runs: Vec<RunFile>,
+    cfg: &ExternalConfig,
+    spill: &SpillManager,
+    pool: Option<&WriterPool>,
+    sink: &mut dyn RecordSink<T>,
+    trace: &Trace,
+) -> Result<MergeOutcome> {
+    merge_runs_ctx(runs, cfg, spill, pool, sink, trace, &SortCtx::default())
+}
+
+/// [`merge_runs`] with an explicit [`SortCtx`]: progress lands on the
+/// job's counters (as well as the process totals) and the job's cancel
+/// token is honoured between group batches and block by block during
+/// the final drain.
+pub fn merge_runs_ctx<T: ExtItem>(
     mut runs: Vec<RunFile>,
     cfg: &ExternalConfig,
     spill: &SpillManager,
     pool: Option<&WriterPool>,
     sink: &mut dyn RecordSink<T>,
     trace: &Trace,
+    ctx: &SortCtx,
 ) -> Result<MergeOutcome> {
     let plan = MergePlan::new(runs.len(), cfg.fan_in);
     // The counters carry the trace so group merges (worker threads) and
@@ -227,6 +245,7 @@ pub fn merge_runs<T: ExtItem>(
         }
 
         for batch in jobs.chunks(threads) {
+            ctx.cancel.check()?;
             // Enforce the disk budget for the whole batch before any
             // merged run is written, not after the disk has filled. The
             // projection is the uncompressed size — conservative when
@@ -255,9 +274,9 @@ pub fn merge_runs<T: ExtItem>(
                 let mut handles = Vec::with_capacity(batch.len());
                 for ((_, group), writer) in batch.iter().zip(writers) {
                     let counters = Arc::clone(&counters);
-                    handles.push(
-                        s.spawn(move || merge_group::<T>(group, cfg, &counters, writer, pool)),
-                    );
+                    handles.push(s.spawn(move || {
+                        merge_group::<T>(group, cfg, &counters, writer, pool, &ctx.progress)
+                    }));
                 }
                 handles
                     .into_iter()
@@ -322,7 +341,8 @@ pub fn merge_runs<T: ExtItem>(
         let t = trace.begin();
         let mut tree = open_group::<T>(&runs, cfg, &counters)?;
         elements = pump(tree.as_mut(), |chunk| {
-            progress::block_out(chunk.len() as u64, (chunk.len() * T::WIRE_BYTES) as u64);
+            ctx.cancel.check()?;
+            ctx.progress.block_out(chunk.len() as u64, (chunk.len() * T::WIRE_BYTES) as u64);
             sink.write_block(chunk)
         })?;
         trace.end(SpanKind::FinalDrain, t, elements);
@@ -602,10 +622,27 @@ pub fn sort_pipelined<T: ExtItem>(
     sink: &mut dyn RecordSink<T>,
     trace: &Trace,
 ) -> Result<PipelineOutcome> {
+    sort_pipelined_ctx(src, cfg, spill, pool, sink, trace, &SortCtx::default())
+}
+
+/// [`sort_pipelined`] with an explicit [`SortCtx`]. The job's cancel
+/// token doubles as the pipeline's internal abort flag: an external
+/// `cancel <id>` trips the same machinery an internal error does (the
+/// producer bails, in-flight merges drain, spill files are swept), and
+/// progress lands on the job's counters as well as the process totals.
+pub fn sort_pipelined_ctx<T: ExtItem>(
+    src: &mut (dyn RecordSource<T> + Send),
+    cfg: &ExternalConfig,
+    spill: &SpillManager,
+    pool: Option<&WriterPool>,
+    sink: &mut dyn RecordSink<T>,
+    trace: &Trace,
+    ctx: &SortCtx,
+) -> Result<PipelineOutcome> {
     let threads = cfg.effective_threads().max(1);
     let counters =
         Arc::new(PrefetchCounters { trace: trace.clone(), ..Default::default() });
-    let cancel = AtomicBool::new(false);
+    let cancel = &ctx.cancel;
 
     std::thread::scope(|scope| -> Result<PipelineOutcome> {
         // Bounded hand-off: phase 1 runs at most a few sealed runs
@@ -618,19 +655,18 @@ pub fn sort_pipelined<T: ExtItem>(
             let rx = Arc::clone(&job_rx);
             let tx = event_tx.clone();
             let counters = Arc::clone(&counters);
-            let cancel = &cancel;
             scope.spawn(move || loop {
                 let job = rx.lock().unwrap().recv();
                 let Ok(job) = job else { break };
                 let MergeJob { stage, group, inputs, writer } = job;
-                let result = if cancel.load(Ordering::Relaxed) {
+                let result = if cancel.is_cancelled() {
                     Err(anyhow!("merge cancelled")) // writer dropped; file swept below
                 } else {
                     // A panicking group merge must still report, or the
                     // scheduler waits on `outstanding` forever (the
                     // batch path surfaces this via join().expect()).
                     std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        merge_group::<T>(&inputs, cfg, &counters, writer, pool)
+                        merge_group::<T>(&inputs, cfg, &counters, writer, pool, &ctx.progress)
                     }))
                     .unwrap_or_else(|_| Err(anyhow!("merge worker panicked")))
                 };
@@ -641,17 +677,17 @@ pub fn sort_pipelined<T: ExtItem>(
         }
 
         let producer_tx = event_tx.clone();
-        let cancel_ref = &cancel;
         scope.spawn(move || {
             let t = Instant::now();
-            let result = generate_runs_streaming::<T>(src, cfg, spill, pool, trace, &mut |run| {
-                if cancel_ref.load(Ordering::Relaxed) {
-                    anyhow::bail!("sort aborted");
-                }
-                producer_tx
-                    .send(Event::Run(run))
-                    .map_err(|_| anyhow!("pipeline scheduler exited early"))
-            });
+            let result =
+                generate_runs_streaming_ctx::<T>(src, cfg, spill, pool, trace, ctx, &mut |run| {
+                    if cancel.is_cancelled() {
+                        anyhow::bail!("sort aborted");
+                    }
+                    producer_tx
+                        .send(Event::Run(run))
+                        .map_err(|_| anyhow!("pipeline scheduler exited early"))
+                });
             let elapsed_us = t.elapsed().as_micros() as u64;
             let _ = producer_tx.send(Event::ProducerDone { result, elapsed_us });
         });
@@ -673,7 +709,7 @@ pub fn sort_pipelined<T: ExtItem>(
             if slot.is_none() {
                 *slot = Some(err);
             }
-            cancel.store(true, Ordering::Relaxed);
+            cancel.cancel();
         };
         let mut producer_done = false;
         let mut phase1_us = 0u64;
@@ -767,7 +803,8 @@ pub fn sort_pipelined<T: ExtItem>(
             let t = trace.begin();
             let mut tree = open_group::<T>(&final_runs, cfg, &counters)?;
             elements = pump(tree.as_mut(), |chunk| {
-                progress::block_out(chunk.len() as u64, (chunk.len() * T::WIRE_BYTES) as u64);
+                ctx.cancel.check()?;
+                ctx.progress.block_out(chunk.len() as u64, (chunk.len() * T::WIRE_BYTES) as u64);
                 sink.write_block(chunk)
             })?;
             trace.end(SpanKind::FinalDrain, t, elements);

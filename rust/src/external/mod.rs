@@ -76,6 +76,8 @@ pub mod spill;
 pub mod stream;
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -99,7 +101,61 @@ pub use stream::{
 use crate::flims::simd::MergeKernel;
 use crate::flims::sort::SortConfig;
 use crate::key::{F32Key, Kv, Kv64};
+use crate::obs::progress::ProgressHandle;
 use crate::obs::{self, progress, SpanKind, Trace};
+
+/// A cooperative cancellation flag shared between a running sort and
+/// whoever may abort it (the job scheduler's `cancel <id>` verb). The
+/// pipeline polls it at its natural batch boundaries — the top of every
+/// phase-1 chunk, before every group merge, per block of the final
+/// drain — so cancellation lands within one chunk/block of work, and
+/// the normal error path then unwinds the sort: in-flight merges
+/// drain, the [`SpillManager`] deletes every live run, nothing leaks.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// A fresh, uncancelled token.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation (idempotent, thread-safe).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether cancellation was requested.
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// `Err("sort cancelled")` once cancellation was requested — the
+    /// form the pipeline's check points use so the abort flows through
+    /// the existing error unwinding.
+    pub fn check(&self) -> Result<()> {
+        if self.is_cancelled() {
+            Err(anyhow!("sort cancelled"))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+/// Per-job context threaded through one external sort: where progress
+/// is reported and how the sort is cancelled. The default value —
+/// which every non-`_ctx` entry point uses — reports to the
+/// process-wide progress totals only and is never cancelled, so
+/// standalone sorts behave exactly as before the job scheduler
+/// existed.
+#[derive(Clone, Debug, Default)]
+pub struct SortCtx {
+    /// Progress sink: global totals, plus one job's counters when the
+    /// sort runs under the scheduler.
+    pub progress: ProgressHandle,
+    /// Cooperative cancellation flag.
+    pub cancel: CancelToken,
+}
 
 /// Tuning for the external sort.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -367,24 +423,49 @@ pub fn sort_stream_traced<T: ExtItem>(
     cfg: &ExternalConfig,
     trace: &Trace,
 ) -> Result<SpillStats> {
+    sort_stream_ctx(src, sink, cfg, &SortCtx::default(), None, trace)
+}
+
+/// [`sort_stream_traced`] under an explicit [`SortCtx`] (per-job
+/// progress + cancellation) and, optionally, a caller-owned shared
+/// [`WriterPool`] — the entry point the job scheduler uses so N
+/// concurrent sorts draw writer threads from one long-lived
+/// process-wide pool instead of spawning a fresh pool each. With
+/// `shared_pool = None` the sort builds its own per-sort pool (the
+/// pre-scheduler behaviour).
+pub fn sort_stream_ctx<T: ExtItem>(
+    src: &mut (dyn RecordSource<T> + Send),
+    sink: &mut dyn RecordSink<T>,
+    cfg: &ExternalConfig,
+    ctx: &SortCtx,
+    shared_pool: Option<&WriterPool>,
+    trace: &Trace,
+) -> Result<SpillStats> {
     cfg.validate().map_err(|e| anyhow!("{e}"))?;
     let _active = progress::sort_started();
     let spill = SpillManager::new(cfg.tmp_dir.clone(), cfg.disk_budget_bytes)?;
     // One long-lived writer thread per concurrent spill writer (the
     // phase-1 producer + up to `threads` group merges, plus slack) —
     // thousand-run sorts reuse these instead of spawning per run.
-    let pool = WriterPool::new(cfg.effective_threads() + 2)?;
+    // When the job scheduler supplies its process-wide pool, use that;
+    // `try_execute` falls back to a dedicated thread under saturation,
+    // so sharing can never deadlock concurrent jobs.
+    let own_pool = match shared_pool {
+        Some(_) => None,
+        None => Some(WriterPool::new(cfg.effective_threads() + 2)?),
+    };
+    let pool = shared_pool.or(own_pool.as_ref());
     let wall = Instant::now();
     let (outcome, input_elems, phase1_us, phase2_us) = if cfg.overlap {
-        let p = sort_pipelined(src, cfg, &spill, Some(&pool), sink, trace)?;
+        let p = merge::sort_pipelined_ctx(src, cfg, &spill, pool, sink, trace, ctx)?;
         (p.outcome, p.input_elems, p.phase1_us, p.phase2_us)
     } else {
         let t1 = Instant::now();
-        let runs = generate_runs(src, cfg, &spill, Some(&pool), trace)?;
+        let runs = run_gen::generate_runs_ctx(src, cfg, &spill, pool, trace, ctx)?;
         let phase1_us = t1.elapsed().as_micros() as u64;
         let input_elems: u64 = runs.iter().map(|r| r.elems).sum();
         let t2 = Instant::now();
-        let outcome = merge_runs(runs, cfg, &spill, Some(&pool), sink, trace)?;
+        let outcome = merge::merge_runs_ctx(runs, cfg, &spill, pool, sink, trace, ctx)?;
         (outcome, input_elems, phase1_us, t2.elapsed().as_micros() as u64)
     };
     // Decode work happens on the prefetch/reader threads in slices too
@@ -502,11 +583,83 @@ pub fn sort_file_dtype_traced(
     }
 }
 
+/// [`sort_file_traced`] under an explicit [`SortCtx`] and optional
+/// shared [`WriterPool`] (see [`sort_stream_ctx`]). On any error —
+/// including cancellation — the partially written `output` file is
+/// removed, so a cancelled job leaves nothing behind.
+pub fn sort_file_ctx<T: ExtItem>(
+    input: &Path,
+    output: &Path,
+    cfg: &ExternalConfig,
+    ctx: &SortCtx,
+    shared_pool: Option<&WriterPool>,
+    trace: &Trace,
+) -> Result<SpillStats> {
+    let same_file = input == output
+        || match (input.canonicalize(), output.canonicalize()) {
+            (Ok(a), Ok(b)) => a == b,
+            _ => false, // output usually doesn't exist yet
+        };
+    if same_file {
+        return Err(anyhow!(
+            "refusing to sort {} in place: output would truncate the input (pick a different --output)",
+            input.display()
+        ));
+    }
+    let run = || -> Result<SpillStats> {
+        let mut src = RawReader::<T>::open(input)?;
+        let writer = RawWriter::<T>::create(output)?;
+        let mut sink = DoubleBufWriter::spawn(writer, 2)?;
+        let stats = sort_stream_ctx(&mut src, &mut sink, cfg, ctx, shared_pool, trace)?;
+        let written = sink.finish()?.finish()?;
+        debug_assert_eq!(written, stats.elements);
+        Ok(stats)
+    };
+    let res = run();
+    if res.is_err() {
+        let _ = std::fs::remove_file(output);
+    }
+    res
+}
+
+/// [`sort_file_ctx`] dispatched over a runtime [`Dtype`] — what the
+/// router's job closures call.
+pub fn sort_file_dtype_ctx(
+    input: &Path,
+    output: &Path,
+    cfg: &ExternalConfig,
+    dtype: Dtype,
+    ctx: &SortCtx,
+    shared_pool: Option<&WriterPool>,
+    trace: &Trace,
+) -> Result<SpillStats> {
+    match dtype {
+        Dtype::U32 => sort_file_ctx::<u32>(input, output, cfg, ctx, shared_pool, trace),
+        Dtype::U64 => sort_file_ctx::<u64>(input, output, cfg, ctx, shared_pool, trace),
+        Dtype::Kv => sort_file_ctx::<Kv>(input, output, cfg, ctx, shared_pool, trace),
+        Dtype::Kv64 => sort_file_ctx::<Kv64>(input, output, cfg, ctx, shared_pool, trace),
+        Dtype::F32 => sort_file_ctx::<F32Key>(input, output, cfg, ctx, shared_pool, trace),
+    }
+}
+
 /// Sort an in-memory vector through the external pipeline (descending).
 /// Exists for the service's `Backend::External` route and for tests.
 /// Inputs that fit a single run skip the spill machinery entirely — one
 /// in-memory sort, no run file round-trip — and report `runs_spilled = 0`.
 pub fn sort_vec<T: ExtItem>(data: &[T], cfg: &ExternalConfig) -> Result<(Vec<T>, SpillStats)> {
+    sort_vec_ctx(data, cfg, &SortCtx::default(), None)
+}
+
+/// [`sort_vec`] under an explicit [`SortCtx`] and optional shared
+/// [`WriterPool`] (see [`sort_stream_ctx`]). The single-run fast path
+/// is identical — it touches no spill machinery, so there is nothing
+/// to cancel or report mid-flight.
+pub fn sort_vec_ctx<T: ExtItem>(
+    data: &[T],
+    cfg: &ExternalConfig,
+    ctx: &SortCtx,
+    shared_pool: Option<&WriterPool>,
+) -> Result<(Vec<T>, SpillStats)> {
     cfg.validate().map_err(|e| anyhow!("{e}"))?;
     if data.len() <= cfg.run_elems_for(T::WIRE_BYTES) {
         let t = Instant::now();
@@ -521,9 +674,13 @@ pub fn sort_vec<T: ExtItem>(data: &[T], cfg: &ExternalConfig) -> Result<(Vec<T>,
         };
         return Ok((out, stats));
     }
+    let trace = cfg.make_trace();
     let mut src = SliceSource::new(data);
     let mut out = Vec::with_capacity(data.len());
-    let stats = sort_stream(&mut src, &mut out, cfg)?;
+    let stats = sort_stream_ctx(&mut src, &mut out, cfg, ctx, shared_pool, &trace)?;
+    if let Some(dir) = &cfg.trace_dir {
+        obs::chrome::write_auto(&trace, dir);
+    }
     Ok((out, stats))
 }
 
@@ -846,6 +1003,35 @@ mod tests {
         let err = format!("{:#}", sort_file::<u32>(&path, &alias, &tiny_cfg()).unwrap_err());
         assert!(err.contains("in place"), "{err}");
         assert_eq!(format::read_raw::<u32>(&path).unwrap(), data);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn cancelled_sort_unwinds_and_leaks_nothing() {
+        let dir = std::env::temp_dir().join(format!("flims-cancel-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("in.u32");
+        let output = dir.join("out.u32");
+        let mut rng = Rng::new(111);
+        let data = gen_u32(&mut rng, 20_000, Distribution::Uniform);
+        format::write_raw(&input, &data).unwrap();
+        for overlap in [false, true] {
+            let spill_dir = dir.join(format!("spill-{overlap}"));
+            std::fs::create_dir_all(&spill_dir).unwrap();
+            let cfg =
+                ExternalConfig { overlap, tmp_dir: Some(spill_dir.clone()), ..tiny_cfg() };
+            let ctx = SortCtx::default();
+            ctx.cancel.cancel(); // cancelled before the first chunk
+            let err = format!(
+                "{:#}",
+                sort_file_ctx::<u32>(&input, &output, &cfg, &ctx, None, &Trace::disabled())
+                    .unwrap_err()
+            );
+            assert!(err.contains("cancel") || err.contains("abort"), "{err}");
+            assert!(!output.exists(), "partial output must be removed on cancellation");
+            let leftovers: Vec<_> = std::fs::read_dir(&spill_dir).unwrap().collect();
+            assert!(leftovers.is_empty(), "overlap={overlap}: spill leaked: {leftovers:?}");
+        }
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

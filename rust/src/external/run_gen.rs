@@ -43,8 +43,8 @@ use super::codec::Codec;
 use super::format::{ExtItem, RawReader, RunFile, RunWriter, RUN_HEADER_BYTES};
 use super::spill::SpillManager;
 use super::stream::{DoubleBufWriter, WriterPool};
-use super::ExternalConfig;
-use crate::obs::{progress, SpanKind, Trace};
+use super::{ExternalConfig, SortCtx};
+use crate::obs::{SpanKind, Trace};
 
 /// Source of unsorted record blocks — a dataset file, an in-memory
 /// slice, or anything else that can feed the run generator.
@@ -154,7 +154,13 @@ impl<T: ExtItem> PendingSpill<T> {
     /// Wait for the write to land, swap the reservation for the
     /// finished run's registration, then hand it to `emit` (the
     /// collector's push, or the pipeline channel).
-    fn finish(self, spill: &SpillManager, trace: &Trace, emit: &mut RunEmit<'_>) -> Result<()> {
+    fn finish(
+        self,
+        spill: &SpillManager,
+        trace: &Trace,
+        ctx: &SortCtx,
+        emit: &mut RunEmit<'_>,
+    ) -> Result<()> {
         match self.dbw.finish().and_then(|w| w.finish()) {
             Ok(run) => {
                 // register keeps the run tracked even when it reports
@@ -167,7 +173,7 @@ impl<T: ExtItem> PendingSpill<T> {
                     trace.record_dur(SpanKind::CodecEncode, t0, run.encode_ns, run.elems);
                 }
                 trace.end(SpanKind::SealRun, self.t0, run.elems);
-                progress::run_sealed();
+                ctx.progress.run_sealed();
                 emit(run)
             }
             Err(e) => {
@@ -197,8 +203,21 @@ pub fn generate_runs<T: ExtItem>(
     pool: Option<&WriterPool>,
     trace: &Trace,
 ) -> Result<Vec<RunFile>> {
+    generate_runs_ctx(src, cfg, spill, pool, trace, &SortCtx::default())
+}
+
+/// [`generate_runs`] under an explicit [`SortCtx`] (per-job progress +
+/// cancellation).
+pub fn generate_runs_ctx<T: ExtItem>(
+    src: &mut dyn RecordSource<T>,
+    cfg: &ExternalConfig,
+    spill: &SpillManager,
+    pool: Option<&WriterPool>,
+    trace: &Trace,
+    ctx: &SortCtx,
+) -> Result<Vec<RunFile>> {
     let mut runs = Vec::new();
-    generate_runs_streaming(src, cfg, spill, pool, trace, &mut |run| {
+    generate_runs_streaming_ctx(src, cfg, spill, pool, trace, ctx, &mut |run| {
         runs.push(run);
         Ok(())
     })?;
@@ -220,11 +239,29 @@ pub fn generate_runs_streaming<T: ExtItem>(
     trace: &Trace,
     emit: &mut RunEmit<'_>,
 ) -> Result<()> {
+    generate_runs_streaming_ctx(src, cfg, spill, pool, trace, &SortCtx::default(), emit)
+}
+
+/// [`generate_runs_streaming`] under an explicit [`SortCtx`]: sealed
+/// runs are counted against the job's progress, and the producer
+/// checks the cancellation token at the top of every chunk — so a
+/// `cancel <id>` lands within one chunk's worth of work and unwinds
+/// through the ordinary error path (in-flight spill abandoned,
+/// reservations released).
+pub fn generate_runs_streaming_ctx<T: ExtItem>(
+    src: &mut dyn RecordSource<T>,
+    cfg: &ExternalConfig,
+    spill: &SpillManager,
+    pool: Option<&WriterPool>,
+    trace: &Trace,
+    ctx: &SortCtx,
+    emit: &mut RunEmit<'_>,
+) -> Result<()> {
     let threads = cfg.effective_threads();
     if threads <= 1 {
-        generate_runs_serial(src, cfg, spill, pool, trace, emit)
+        generate_runs_serial(src, cfg, spill, pool, trace, ctx, emit)
     } else {
-        generate_runs_parallel(src, cfg, spill, pool, trace, emit, threads)
+        generate_runs_parallel(src, cfg, spill, pool, trace, ctx, emit, threads)
     }
 }
 
@@ -234,6 +271,7 @@ fn generate_runs_serial<T: ExtItem>(
     spill: &SpillManager,
     pool: Option<&WriterPool>,
     trace: &Trace,
+    ctx: &SortCtx,
     emit: &mut RunEmit<'_>,
 ) -> Result<()> {
     let codec = cfg.codec_for(T::DTYPE);
@@ -241,6 +279,7 @@ fn generate_runs_serial<T: ExtItem>(
     let mut in_flight: Option<PendingSpill<T>> = None;
     let result = (|| -> Result<()> {
         loop {
+            ctx.cancel.check()?;
             // Owned buffer per run: it is handed to the writer thread,
             // which encodes and writes while we read + sort the next
             // chunk here.
@@ -252,12 +291,12 @@ fn generate_runs_serial<T: ExtItem>(
             T::sort_run(&mut buf, cfg.sort_config(), cfg.kernel);
             trace.end(SpanKind::ChunkSort, t, buf.len() as u64);
             if let Some(prev) = in_flight.take() {
-                prev.finish(spill, trace, emit)?;
+                prev.finish(spill, trace, ctx, emit)?;
             }
             in_flight = Some(PendingSpill::start(spill, pool, codec, buf, trace)?);
         }
         if let Some(prev) = in_flight.take() {
-            prev.finish(spill, trace, emit)?;
+            prev.finish(spill, trace, ctx, emit)?;
         }
         Ok(())
     })();
@@ -273,6 +312,7 @@ fn generate_runs_parallel<T: ExtItem>(
     spill: &SpillManager,
     pool: Option<&WriterPool>,
     trace: &Trace,
+    ctx: &SortCtx,
     emit: &mut RunEmit<'_>,
     threads: usize,
 ) -> Result<()> {
@@ -313,6 +353,7 @@ fn generate_runs_parallel<T: ExtItem>(
         let mut eof = false;
         let result = (|| -> Result<()> {
             while !eof || next_write < next_read {
+                ctx.cancel.check()?;
                 // Keep the queue fed up to the in-flight cap.
                 while !eof && next_read - next_write < max_in_flight {
                     let buf = read_chunk(src, run_elems)?;
@@ -342,14 +383,14 @@ fn generate_runs_parallel<T: ExtItem>(
                 pending.insert(seq, buf);
                 while let Some(buf) = pending.remove(&next_write) {
                     if let Some(prev) = in_flight.take() {
-                        prev.finish(spill, trace, emit)?;
+                        prev.finish(spill, trace, ctx, emit)?;
                     }
                     in_flight = Some(PendingSpill::start(spill, pool, codec, buf, trace)?);
                     next_write += 1;
                 }
             }
             if let Some(prev) = in_flight.take() {
-                prev.finish(spill, trace, emit)?;
+                prev.finish(spill, trace, ctx, emit)?;
             }
             Ok(())
         })();

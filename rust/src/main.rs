@@ -12,8 +12,9 @@
 //! flims trace                              # the paper's Table 1 example
 //! flims simulate --design flims|flimsj|wms|mms|vms|basic --w 8 [--skew] [--dup]
 //! flims report   table2|table3|fig13 [--data-bits 64]
-//! flims serve    [--bind 127.0.0.1:7171] [--config flims.toml]
+//! flims serve    [--bind 127.0.0.1:7171] [--config flims.toml] [--max-jobs N]
 //! flims metrics  [--addr 127.0.0.1:7171]   # Prometheus exposition from a server
+//! flims jobs     [--addr 127.0.0.1:7171] [--status ID | --cancel ID]  # job table
 //! flims artifacts [--dir artifacts]        # list + smoke-run the AOT artifacts
 //! ```
 //!
@@ -115,6 +116,9 @@ fn load_config(f: &HashMap<String, String>) -> Result<AppConfig, String> {
     if let Some(b) = f.get("bind") {
         cfg.bind = b.clone();
     }
+    if let Some(j) = f.get("max-jobs") {
+        cfg.max_jobs = j.parse().map_err(|_| "--max-jobs must be an integer".to_string())?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -134,6 +138,7 @@ fn run(args: Vec<String>) -> Result<(), String> {
         "report" => cmd_report(&args[1..], &flags),
         "serve" => cmd_serve(&flags),
         "metrics" => cmd_metrics(&flags),
+        "jobs" => cmd_jobs(&flags),
         "artifacts" => cmd_artifacts(&flags),
         "help" | "--help" | "-h" => {
             print_help();
@@ -162,8 +167,9 @@ fn print_help() {
            trace     (replays the paper's Table 1 example, w=4)\n\
            simulate  --design flims|flimsj|wms|mms|vms|basic --w W [--skew] [--dup] [--n N]\n\
            report    table2|table3|fig13 [--data-bits B]\n\
-           serve     [--bind ADDR] [--config FILE] [--dir artifacts]\n\
+           serve     [--bind ADDR] [--config FILE] [--dir artifacts] [--max-jobs N]\n\
            metrics   [--addr ADDR] [--config FILE]   (Prometheus text from a server)\n\
+           jobs      [--addr ADDR] [--status ID | --cancel ID]   (server job table)\n\
            artifacts [--dir artifacts]"
     );
 }
@@ -682,6 +688,40 @@ fn cmd_metrics(f: &HashMap<String, String>) -> Result<(), String> {
     }
     if !saw_eof {
         return Err("connection closed before the # EOF terminator".into());
+    }
+    Ok(())
+}
+
+/// `flims jobs` — query a running `flims serve`'s job table over the
+/// line protocol: the `jobs` summary by default, one job's `status`
+/// line with `--status <id>`, or trip a job's cancel token with
+/// `--cancel <id>`. Prints the server's one-line reply; an `err`
+/// reply becomes a nonzero exit.
+fn cmd_jobs(f: &HashMap<String, String>) -> Result<(), String> {
+    use std::io::{BufRead, BufReader, Write};
+    let cfg = load_config(f)?;
+    let addr = f.get("addr").cloned().unwrap_or_else(|| cfg.bind.clone());
+    let req = if let Some(id) = f.get("status") {
+        format!("status {id}")
+    } else if let Some(id) = f.get("cancel") {
+        format!("cancel {id}")
+    } else {
+        "jobs".to_string()
+    };
+    let stream = std::net::TcpStream::connect(&addr)
+        .map_err(|e| format!("connecting to {addr}: {e} (is `flims serve` running?)"))?;
+    let mut writer = stream.try_clone().map_err(|e| format!("{e}"))?;
+    writeln!(writer, "{req}").map_err(|e| format!("{e}"))?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).map_err(|e| format!("{e}"))?;
+    let line = line.trim();
+    if line.is_empty() {
+        return Err("connection closed before a reply".into());
+    }
+    println!("{line}");
+    if let Some(msg) = line.strip_prefix("err ") {
+        return Err(msg.to_string());
     }
     Ok(())
 }

@@ -1,15 +1,24 @@
-//! Process-wide sort progress: how far the running external sorts have
-//! got, visible while they are still running.
+//! Sort progress: how far the running external sorts have got, visible
+//! while they are still running.
 //!
-//! The counters are global (they accumulate across every sort the
-//! process runs — Prometheus-style monotonic totals, not per-job
-//! values) and updated straight from the pipeline's hot points: a run
-//! sealing, a group merge firing, a block landing in the output. The
-//! service surfaces them through the `progress` verb and inside the
-//! `metrics` exposition; a client polls either to watch a long
-//! `sortfile` advance.
+//! Two granularities share one update path:
+//!
+//! * **Process-wide totals** — global counters that accumulate across
+//!   every sort the process runs (Prometheus-style monotonic totals).
+//!   The service surfaces them through the `progress` verb and inside
+//!   the `metrics` exposition.
+//! * **Per-job counters** — a [`ProgressCounters`] instance owned by
+//!   one scheduler job, surfaced through the `status <id>` verb so a
+//!   client can watch *its own* `sortfile` advance while other jobs
+//!   run concurrently.
+//!
+//! The pipeline's hot points (a run sealing, a group merge firing, a
+//! block landing in the output) update both through a
+//! [`ProgressHandle`]: the global totals always, plus the job's
+//! counters when the sort runs under the job scheduler.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 static ACTIVE: AtomicU64 = AtomicU64::new(0);
 static RUNS_SEALED: AtomicU64 = AtomicU64::new(0);
@@ -17,7 +26,7 @@ static MERGES_FIRED: AtomicU64 = AtomicU64::new(0);
 static ELEMENTS_OUT: AtomicU64 = AtomicU64::new(0);
 static BYTES_OUT: AtomicU64 = AtomicU64::new(0);
 
-/// A point-in-time copy of the progress counters.
+/// A point-in-time copy of the process-wide progress counters.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ProgressSnapshot {
     /// External sorts currently running (a gauge, not a total).
@@ -30,6 +39,89 @@ pub struct ProgressSnapshot {
     pub elements_out: u64,
     /// Bytes written to final sort outputs, ever.
     pub bytes_out: u64,
+}
+
+/// Live counters for one scheduler job (shared between the sorting
+/// thread and `status <id>` readers).
+#[derive(Debug, Default)]
+pub struct ProgressCounters {
+    runs_sealed: AtomicU64,
+    merges_fired: AtomicU64,
+    elements_out: AtomicU64,
+    bytes_out: AtomicU64,
+}
+
+/// A point-in-time copy of one job's [`ProgressCounters`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct JobProgress {
+    /// Runs this job has sealed on disk.
+    pub runs_sealed: u64,
+    /// Group merges this job has completed.
+    pub merges_fired: u64,
+    /// Elements this job has written to its final output.
+    pub elements_out: u64,
+    /// Bytes this job has written to its final output.
+    pub bytes_out: u64,
+}
+
+impl ProgressCounters {
+    /// Read every per-job counter at once.
+    pub fn snapshot(&self) -> JobProgress {
+        JobProgress {
+            runs_sealed: self.runs_sealed.load(Ordering::Relaxed),
+            merges_fired: self.merges_fired.load(Ordering::Relaxed),
+            elements_out: self.elements_out.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Where a pipeline hot point reports progress: always the global
+/// totals, plus one job's [`ProgressCounters`] when the sort runs
+/// under the job scheduler. Cloning is cheap (an `Option<Arc>`).
+#[derive(Clone, Debug, Default)]
+pub struct ProgressHandle {
+    job: Option<Arc<ProgressCounters>>,
+}
+
+impl ProgressHandle {
+    /// A handle that updates only the process-wide totals (the
+    /// behaviour of every pre-scheduler entry point).
+    pub fn global() -> Self {
+        ProgressHandle { job: None }
+    }
+
+    /// A handle that additionally updates `job`'s counters.
+    pub fn with_job(job: Arc<ProgressCounters>) -> Self {
+        ProgressHandle { job: Some(job) }
+    }
+
+    /// Count one sealed run.
+    pub fn run_sealed(&self) {
+        RUNS_SEALED.fetch_add(1, Ordering::Relaxed);
+        if let Some(j) = &self.job {
+            j.runs_sealed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Count one completed group merge.
+    pub fn merge_fired(&self) {
+        MERGES_FIRED.fetch_add(1, Ordering::Relaxed);
+        if let Some(j) = &self.job {
+            j.merges_fired.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Count a block of final output (`elements` records, `bytes` on
+    /// the wire).
+    pub fn block_out(&self, elements: u64, bytes: u64) {
+        ELEMENTS_OUT.fetch_add(elements, Ordering::Relaxed);
+        BYTES_OUT.fetch_add(bytes, Ordering::Relaxed);
+        if let Some(j) = &self.job {
+            j.elements_out.fetch_add(elements, Ordering::Relaxed);
+            j.bytes_out.fetch_add(bytes, Ordering::Relaxed);
+        }
+    }
 }
 
 /// RAII marker for one running external sort: increments the active
@@ -49,24 +141,23 @@ pub fn sort_started() -> ActiveSort {
     ActiveSort(())
 }
 
-/// Count one sealed run.
+/// Count one sealed run (process-wide totals only).
 pub fn run_sealed() {
-    RUNS_SEALED.fetch_add(1, Ordering::Relaxed);
+    ProgressHandle::global().run_sealed();
 }
 
-/// Count one completed group merge.
+/// Count one completed group merge (process-wide totals only).
 pub fn merge_fired() {
-    MERGES_FIRED.fetch_add(1, Ordering::Relaxed);
+    ProgressHandle::global().merge_fired();
 }
 
 /// Count a block of final output (`elements` records, `bytes` on the
-/// wire).
+/// wire; process-wide totals only).
 pub fn block_out(elements: u64, bytes: u64) {
-    ELEMENTS_OUT.fetch_add(elements, Ordering::Relaxed);
-    BYTES_OUT.fetch_add(bytes, Ordering::Relaxed);
+    ProgressHandle::global().block_out(elements, bytes);
 }
 
-/// Read every counter at once.
+/// Read every process-wide counter at once.
 pub fn snapshot() -> ProgressSnapshot {
     ProgressSnapshot {
         active_sorts: ACTIVE.load(Ordering::Relaxed),
@@ -143,6 +234,36 @@ mod tests {
         assert!(during.elements_out >= before.elements_out + 100);
         assert!(during.bytes_out >= before.bytes_out + 400);
         drop(guard);
+    }
+
+    #[test]
+    fn job_handle_updates_both_levels() {
+        let job = Arc::new(ProgressCounters::default());
+        let h = ProgressHandle::with_job(job.clone());
+        let before = snapshot();
+        h.run_sealed();
+        h.merge_fired();
+        h.block_out(10, 40);
+        let after = snapshot();
+        // Globals advanced…
+        assert!(after.runs_sealed >= before.runs_sealed + 1);
+        assert!(after.merges_fired >= before.merges_fired + 1);
+        assert!(after.elements_out >= before.elements_out + 10);
+        // …and the job's own counters are exact (nothing else holds
+        // this Arc).
+        let j = job.snapshot();
+        assert_eq!(
+            j,
+            JobProgress { runs_sealed: 1, merges_fired: 1, elements_out: 10, bytes_out: 40 }
+        );
+    }
+
+    #[test]
+    fn global_handle_leaves_jobs_alone() {
+        let job = Arc::new(ProgressCounters::default());
+        let _h = ProgressHandle::with_job(job.clone());
+        ProgressHandle::global().run_sealed();
+        assert_eq!(job.snapshot().runs_sealed, 0);
     }
 
     #[test]

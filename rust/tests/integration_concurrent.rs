@@ -1,0 +1,214 @@
+//! Integration: the multi-job sort server over real TCP — concurrent
+//! `sortfile` jobs under carved budgets, interleaved small sorts and
+//! observability verbs, byte-identical outputs vs a serial run, and
+//! leak-free cancellation of queued and running jobs.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use flims::config::AppConfig;
+use flims::coordinator::{BatcherConfig, Router, Service};
+use flims::external::format::{read_raw, write_raw};
+
+fn start_service(app: AppConfig) -> (Arc<Service>, std::net::SocketAddr) {
+    let router = Arc::new(Router::new(app, None));
+    let service = Arc::new(Service::new(
+        router,
+        BatcherConfig { max_batch: 4, window: Duration::from_micros(200) },
+    ));
+    let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap();
+    drop(probe);
+    let svc = service.clone();
+    let bind = addr.to_string();
+    std::thread::spawn(move || {
+        let _ = svc.serve(&bind);
+    });
+    std::thread::sleep(Duration::from_millis(80));
+    (service, addr)
+}
+
+fn connect(addr: std::net::SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let conn = TcpStream::connect(addr).unwrap();
+    let reader = BufReader::new(conn.try_clone().unwrap());
+    (conn, reader)
+}
+
+fn roundtrip(conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str) -> String {
+    writeln!(conn, "{req}").unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    resp.trim().to_string()
+}
+
+/// Two multi-pass `sortfile` jobs run concurrently in carved budget
+/// slots — while small `sort`s and the observability verbs keep
+/// answering — and each output is byte-identical to what a serial run
+/// produces (sorted bytes depend only on the input data and dtype).
+#[test]
+fn concurrent_sortfile_jobs_match_the_serial_run() {
+    let dir = std::env::temp_dir().join(format!("flims-int-conc-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let spill = dir.join("spill");
+
+    // Two distinct datasets, big enough to really spill multi-pass
+    // under the tight carved budgets.
+    let inputs: Vec<(PathBuf, Vec<u32>)> = (0..2u32)
+        .map(|j| {
+            let path = dir.join(format!("in-{j}.u32"));
+            let data: Vec<u32> =
+                (0..40_000u32).map(|i| (i ^ (j * 7919)).wrapping_mul(2654435761)).collect();
+            write_raw(&path, &data).unwrap();
+            (path, data)
+        })
+        .collect();
+
+    let mut app = AppConfig { max_jobs: 2, job_queue_depth: 8, ..AppConfig::default() };
+    app.external.mem_budget_bytes = 4096;
+    app.external.fan_in = 4;
+    app.external.tmp_dir = Some(spill.clone());
+    let (service, addr) = start_service(app);
+
+    let mut handles = Vec::new();
+    for (path, _) in &inputs {
+        let path = path.clone();
+        handles.push(std::thread::spawn(move || {
+            let (mut conn, mut reader) = connect(addr);
+            roundtrip(&mut conn, &mut reader, &format!("sortfile external {}", path.display()))
+        }));
+    }
+
+    // While the big jobs run, small sorts keep answering (the router's
+    // scheduler bypass keeps their tail latency sane) and every
+    // observability verb answers from a separate connection.
+    let (mut conn, mut reader) = connect(addr);
+    for _ in 0..20 {
+        assert_eq!(roundtrip(&mut conn, &mut reader, "sort external 5 3 9 1"), "ok 9 5 3 1");
+        let resp = roundtrip(&mut conn, &mut reader, "jobs");
+        assert!(resp.starts_with("ok jobs="), "{resp}");
+        let resp = roundtrip(&mut conn, &mut reader, "progress");
+        assert!(resp.starts_with("ok active="), "{resp}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    for (h, (path, data)) in handles.into_iter().zip(&inputs) {
+        let resp = h.join().unwrap();
+        let out = PathBuf::from(format!("{}.sorted", path.display()));
+        assert_eq!(resp, format!("ok 40000 {}", out.display()));
+        let mut expect = data.clone();
+        expect.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(read_raw::<u32>(&out).unwrap(), expect, "{}", path.display());
+    }
+
+    // Both jobs retained with their own per-job progress.
+    let jobs = roundtrip(&mut conn, &mut reader, "jobs");
+    assert!(jobs.contains("1:done") && jobs.contains("2:done"), "{jobs}");
+    for id in [1, 2] {
+        let status = roundtrip(&mut conn, &mut reader, &format!("status {id}"));
+        assert!(status.starts_with(&format!("ok job={id} state=done runs_sealed=")), "{status}");
+        assert!(!status.contains("runs_sealed=0 "), "a spilling job seals runs: {status}");
+    }
+
+    // The Prometheus exposition carries the per-job series.
+    writeln!(conn, "metrics").unwrap();
+    let mut text = String::new();
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let done = line.trim_end() == "# EOF";
+        text.push_str(&line);
+        if done {
+            break;
+        }
+    }
+    assert!(text.contains("flims_jobs_completed_total 2"), "{text}");
+    assert!(text.contains("flims_job_runs_sealed{job=\"1\"}"), "{text}");
+    assert!(text.contains("flims_job_runs_sealed{job=\"2\"}"), "{text}");
+
+    // The shared spill dir holds nothing afterwards — every job's runs
+    // and per-job subdir are gone.
+    let leftovers: Vec<_> = std::fs::read_dir(&spill).unwrap().collect();
+    assert!(leftovers.is_empty(), "spill leftovers: {leftovers:?}");
+
+    service.shutdown();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Cancelling a queued job removes it from the queue promptly; a
+/// running job unwinds at the pipeline's next check point. Neither
+/// leaks spill files or a partial output.
+#[test]
+fn cancellation_unwinds_queued_and_running_jobs_without_leaks() {
+    let dir = std::env::temp_dir().join(format!("flims-int-cancel-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let spill = dir.join("spill");
+    let big = dir.join("big.u32");
+    // Large enough that the running job cannot finish before the
+    // cancel lands (~1000 runs at a 4096-byte budget, multi-pass).
+    let data: Vec<u32> = (0..1_000_000u32).map(|i| i.wrapping_mul(2654435761)).collect();
+    write_raw(&big, &data).unwrap();
+
+    let mut app = AppConfig { max_jobs: 1, job_queue_depth: 4, ..AppConfig::default() };
+    app.external.mem_budget_bytes = 4096;
+    app.external.fan_in = 4;
+    app.external.tmp_dir = Some(spill.clone());
+    let (service, addr) = start_service(app);
+
+    let sortfile = |path: PathBuf| {
+        std::thread::spawn(move || {
+            let (mut conn, mut reader) = connect(addr);
+            roundtrip(&mut conn, &mut reader, &format!("sortfile external {}", path.display()))
+        })
+    };
+
+    let running = sortfile(big.clone());
+    let (mut conn, mut reader) = connect(addr);
+    loop {
+        if roundtrip(&mut conn, &mut reader, "jobs").contains("1:running") {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // Queue a second job behind the single slot, then cancel it while
+    // it is still queued.
+    let queued = sortfile(big.clone());
+    loop {
+        if roundtrip(&mut conn, &mut reader, "jobs").contains("2:queued") {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(roundtrip(&mut conn, &mut reader, "cancel 2"), "ok cancelled 2");
+    let resp = queued.join().unwrap();
+    assert!(resp.starts_with("err ") && resp.contains("cancelled"), "{resp}");
+    assert!(
+        roundtrip(&mut conn, &mut reader, "status 2").contains("state=cancelled"),
+        "queued job must retire as cancelled"
+    );
+
+    // Cancel the running job mid-flight.
+    assert_eq!(roundtrip(&mut conn, &mut reader, "cancel 1"), "ok cancelled 1");
+    let resp = running.join().unwrap();
+    assert!(resp.starts_with("err "), "{resp}");
+    assert!(resp.contains("cancel") || resp.contains("abort"), "{resp}");
+    assert!(
+        roundtrip(&mut conn, &mut reader, "status 1").contains("state=cancelled"),
+        "a tripped token classifies the job cancelled, not failed"
+    );
+
+    // Nothing leaks: no partial output, no spill runs, no job subdirs.
+    assert!(
+        !PathBuf::from(format!("{}.sorted", big.display())).exists(),
+        "cancelled sort must remove its partial output"
+    );
+    if spill.exists() {
+        let leftovers: Vec<_> = std::fs::read_dir(&spill).unwrap().collect();
+        assert!(leftovers.is_empty(), "spill leftovers: {leftovers:?}");
+    }
+    service.shutdown();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
