@@ -13,11 +13,15 @@
 //! and double-buffered leaves overlap disk reads with merging. The
 //! parallel rows should beat `threads = 1` from 2 workers up.
 //!
-//! Part 3 sweeps the run codec (raw vs delta) over input distributions:
-//! uniform (worst case for delta), nearly-sorted, and skewed (zipf +
-//! dup-heavy). Delta must report `spilled encoded < spilled raw` on the
-//! sorted/skewed rows — the ~2-4× spill-bandwidth cut the ROADMAP
-//! promised — while the uniform row shows the codec's floor.
+//! Part 3 sweeps the run codec (raw vs delta vs flr3) over input
+//! distributions: uniform (worst case for compression), nearly-sorted,
+//! and skewed (zipf + dup-heavy). The compressing codecs must report
+//! `spilled encoded < spilled raw` on the sorted/skewed rows — the
+//! ~2-4× spill-bandwidth cut the ROADMAP promised — and FLR3's
+//! bitpacked decode must be at least as fast as FLR2's serial varint
+//! loop on uniform and sorted keys. Encode/decode GB/s (over the raw
+//! byte volume) lands in the `--json` rows as `codec_*_{encode,decode}`
+//! timings.
 //!
 //! Part 4 sweeps the schedule (serial vs pipelined/overlapped) on
 //! deep multi-pass workloads (k ≫ fan_in), uniform + zipf, reporting
@@ -129,14 +133,18 @@ fn main() {
         );
     }
 
-    // Codec sweep: raw vs delta across input distributions, serial, at
-    // dataset/16 budget. Spill bandwidth is the dominant cost here, so
-    // every byte the codec removes is a byte phase 1 + phase 2 never
-    // wait on.
-    println!("\n== run codec: raw vs delta, budget {} KiB, fan-in 8 ==\n", budget >> 10);
+    // Codec sweep: raw vs delta vs flr3 across input distributions,
+    // serial, at dataset/16 budget. Spill bandwidth is the dominant cost
+    // here, so every byte the codec removes is a byte phase 1 + phase 2
+    // never wait on — and FLR3's bitpacked blocks must decode at least
+    // as fast as FLR2's serial varint loop.
     println!(
-        "{:<24} {:>10} {:>12} {:>12} {:>8} {:>10} {:>10}",
-        "input / codec", "M elem/s", "enc MiB", "raw MiB", "ratio", "enc ms", "dec ms"
+        "\n== run codec: raw vs delta vs flr3, budget {} KiB, fan-in 8 ==\n",
+        budget >> 10
+    );
+    println!(
+        "{:<24} {:>10} {:>12} {:>12} {:>8} {:>9} {:>9}",
+        "input / codec", "M elem/s", "enc MiB", "raw MiB", "ratio", "enc GB/s", "dec GB/s"
     );
     for (label, dist) in [
         ("uniform", Distribution::Uniform),
@@ -147,8 +155,11 @@ fn main() {
         let mut rng = Rng::new(778);
         let data = gen_u32(&mut rng, n, dist);
         write_raw(&input, &data).unwrap();
-        let mut sizes = (0u64, 0u64); // (delta encoded, raw encoded)
-        for codec in [Codec::Raw, Codec::Delta] {
+        // Per-codec (bytes_spilled, decode_us), indexed like CODECS.
+        const CODECS: [Codec; 3] = [Codec::Raw, Codec::Delta, Codec::Flr3];
+        let mut spilled = [0u64; CODECS.len()];
+        let mut decode_us = [0u64; CODECS.len()];
+        for (ci, codec) in CODECS.into_iter().enumerate() {
             let cfg = ExternalConfig {
                 mem_budget_bytes: budget,
                 fan_in: 8,
@@ -161,28 +172,61 @@ fn main() {
             let dt = t.elapsed();
             assert_eq!(stats.elements, n as u64);
             rows.push(BenchResult::single(&format!("codec_{label}_{}", codec.name()), dt));
-            match codec {
-                Codec::Raw => sizes.1 = stats.bytes_spilled,
-                Codec::Delta => sizes.0 = stats.bytes_spilled,
+            // Encode/decode throughput over the *uncompressed* spill
+            // traffic: GB/s = raw bytes / codec CPU time. The raw codec
+            // is a memcpy, so its timings are ~0 — report the compressing
+            // codecs only.
+            let gbps = |us: u64| {
+                if us == 0 {
+                    f64::NAN
+                } else {
+                    stats.bytes_spilled_raw as f64 / 1e9 / (us as f64 / 1e6)
+                }
+            };
+            if codec != Codec::Raw {
+                rows.push(BenchResult::single(
+                    &format!("codec_{label}_{}_encode", codec.name()),
+                    std::time::Duration::from_micros(stats.codec_encode_us),
+                ));
+                rows.push(BenchResult::single(
+                    &format!("codec_{label}_{}_decode", codec.name()),
+                    std::time::Duration::from_micros(stats.codec_decode_us),
+                ));
             }
+            spilled[ci] = stats.bytes_spilled;
+            decode_us[ci] = stats.codec_decode_us;
             println!(
-                "{:<24} {:>10.1} {:>12.1} {:>12.1} {:>7.2}x {:>10.1} {:>10.1}",
+                "{:<24} {:>10.1} {:>12.1} {:>12.1} {:>7.2}x {:>9.1} {:>9.1}",
                 format!("{label} / {}", codec.name()),
                 n as f64 / dt.as_secs_f64() / 1e6,
                 stats.bytes_spilled as f64 / (1 << 20) as f64,
                 stats.bytes_spilled_raw as f64 / (1 << 20) as f64,
                 stats.bytes_spilled_raw as f64 / stats.bytes_spilled.max(1) as f64,
-                stats.codec_encode_us as f64 / 1000.0,
-                stats.codec_decode_us as f64 / 1000.0,
+                gbps(stats.codec_encode_us),
+                gbps(stats.codec_decode_us),
             );
         }
-        // The acceptance bar: compression on non-uniform keys.
+        // The acceptance bars: compression on non-uniform keys, and the
+        // FLR3 decode loop at least matching the delta varint loop on
+        // the distributions where spill decode dominates. Both codecs
+        // decode the same raw byte volume, so less CPU time = more GB/s.
         if label != "uniform" {
+            for ci in [1, 2] {
+                assert!(
+                    spilled[ci] < spilled[0],
+                    "{label}: {} ({}) must spill fewer bytes than raw ({})",
+                    CODECS[ci].name(),
+                    spilled[ci],
+                    spilled[0]
+                );
+            }
+        }
+        if !args.smoke && (label == "uniform" || label == "sorted") {
             assert!(
-                sizes.0 < sizes.1,
-                "{label}: delta ({}) must spill fewer bytes than raw ({})",
-                sizes.0,
-                sizes.1
+                decode_us[2] <= decode_us[1],
+                "{label}: flr3 decode ({}µs) must be at least as fast as delta ({}µs)",
+                decode_us[2],
+                decode_us[1]
             );
         }
     }

@@ -6,7 +6,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::external::{Codec, Dtype, ExternalConfig};
+use crate::external::{parse_codec_arg, Dtype, ExternalConfig};
 use crate::flims::simd::MergeKernel;
 
 /// Parsed configuration: section → key → raw value string.
@@ -225,7 +225,9 @@ impl AppConfig {
             self.external.dtype = Dtype::parse(v)?;
         }
         if let Some(v) = raw.get("external", "codec") {
-            self.external.codec = Codec::parse(v)?;
+            // One parser for config/CLI/protocol: the "codec argument:"
+            // prefix is the same everywhere a codec name can be typed.
+            self.external.codec = parse_codec_arg(v)?;
         }
         if let Some(v) = raw.get("obs", "trace_dir") {
             // The observability section maps onto the external config's
@@ -280,6 +282,7 @@ impl AppConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::external::Codec;
 
     const SAMPLE: &str = r#"
 # engine tuning
@@ -389,6 +392,17 @@ batch_max = 16
         let mut cfg = AppConfig::default();
         cfg.apply(&raw).unwrap();
         assert!(!cfg.external.overlap);
+
+        // All three codec names round-trip through the one parser.
+        for (name, codec) in
+            [("raw", Codec::Raw), ("delta", Codec::Delta), ("flr3", Codec::Flr3)]
+        {
+            let raw =
+                RawConfig::parse(&format!("[external]\ncodec = \"{name}\"\n")).unwrap();
+            let mut cfg = AppConfig::default();
+            cfg.apply(&raw).unwrap();
+            assert_eq!(cfg.external.codec, codec, "{name}");
+        }
     }
 
     #[test]
@@ -460,7 +474,9 @@ batch_max = 16
         assert_eq!(cfg.external.threads, 1);
         assert_eq!(cfg.external.prefetch_blocks, 2);
         assert_eq!(cfg.external.dtype, Dtype::U32);
-        assert_eq!(cfg.external.codec, Codec::Raw);
+        // The codec default honours FLIMS_CODEC (the test-codec-flr3 CI
+        // lane), so compare against the env-aware default, not Raw.
+        assert_eq!(cfg.external.codec, ExternalConfig::default().codec);
     }
 
     #[test]
@@ -478,7 +494,9 @@ batch_max = 16
         let raw = RawConfig::parse("[external]\ncodec = \"lz4\"\n").unwrap();
         let mut cfg = AppConfig::default();
         let err = cfg.apply(&raw).unwrap_err();
-        assert!(err.contains("unknown codec"), "{err}");
+        // Same wording as CLI/protocol: one parser, one error shape.
+        assert!(err.contains("codec argument: unknown codec 'lz4'"), "{err}");
+        assert!(err.contains("raw|delta|flr3"), "{err}");
         let raw = RawConfig::parse("[external]\nthreads = 5000\n").unwrap();
         let mut cfg = AppConfig::default();
         assert!(cfg.apply(&raw).is_err());

@@ -14,7 +14,7 @@
 //!                               →  ok <n> <output-path>  (raw record file,
 //!                                   sorted descending to <path>.sorted;
 //!                                   d = u32|u64|kv|kv64|f32,
-//!                                   c = raw|delta, o = on|off (the
+//!                                   c = raw|delta|flr3, o = on|off (the
 //!                                   pipelined vs serial schedule — same
 //!                                   output bytes), k =
 //!                                   auto|scalar|simd (the merge-kernel
@@ -218,8 +218,10 @@ impl Service {
                             bail!("dtype argument: given more than once");
                         }
                     } else if let Some(name) = tail.strip_prefix("codec=") {
-                        let c = crate::external::Codec::parse(name)
-                            .map_err(|e| anyhow!("codec argument: {e}"))?;
+                        // parse_codec_arg already says "codec argument:"
+                        // — the same wording as the CLI and config paths.
+                        let c = crate::external::parse_codec_arg(name)
+                            .map_err(|e| anyhow!("{e}"))?;
                         if codec.replace(c).is_some() {
                             bail!("codec argument: given more than once");
                         }
@@ -746,11 +748,14 @@ mod tests {
             BatcherConfig { max_batch: 2, window: Duration::from_micros(1) },
         );
 
-        // codec + dtype combine, in either order.
+        // codec + dtype combine, in either order; every codec name the
+        // protocol accepts sorts to the same bytes.
         for req in [
             format!("sortfile external {} codec=delta", input.display()),
             format!("sortfile external {} dtype=u32 codec=delta", input.display()),
             format!("sortfile external {} codec=delta dtype=u32", input.display()),
+            format!("sortfile external {} codec=flr3", input.display()),
+            format!("sortfile external {} codec=flr3 dtype=u32", input.display()),
         ] {
             let resp = s.handle_line(&req);
             let expect_path = format!("{}.sorted", input.display());

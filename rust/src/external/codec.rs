@@ -1,6 +1,6 @@
 //! Run codecs: how spilled-run payload bytes are laid out on disk.
 //!
-//! Two codecs exist (see `docs/FORMATS.md` for the byte-level spec):
+//! Three codecs exist (see `docs/FORMATS.md` for the byte-level spec):
 //!
 //! * [`Codec::Raw`] — fixed-width little-endian records, the `FLR1`
 //!   format the external sort has always spilled. Zero CPU cost, one
@@ -13,11 +13,22 @@
 //!   compress 2–4×, cutting the spill-disk bandwidth that dominates
 //!   out-of-core sorts — the same "internalise the bandwidth" argument
 //!   FLiMS makes for merge trees, applied to the spill boundary.
+//! * [`Codec::Flr3`] — the `FLR3` format: FastLanes-style 1024-key
+//!   blocks, frame-of-reference subtract fused with a bitpack to the
+//!   block's max delta width, keys in the 8-lane transposed order so
+//!   encode/decode are branch-free loops with explicit SIMD tiers
+//!   riding the same `MergeKernel` dispatch as the merge kernels (see
+//!   [`super::flr3`]). Slightly coarser compression than `FLR2`
+//!   (per-block width, not per-key), but decode runs at memory
+//!   bandwidth instead of one varint byte per iteration.
 //!
 //! The codec is chosen per sort via `[external] codec` (CLI
-//! `--codec`, protocol `codec=<c>`), with a dtype-aware fallback:
+//! `--codec`, protocol `codec=<c>`) — [`parse_codec_arg`] is the one
+//! parser all three entry points share — with a dtype-aware fallback:
 //! `f32` keys have no integer delta domain that is worth encoding, so
-//! [`Codec::effective_for`] silently drops them back to `Raw`.
+//! [`Codec::effective_for`] silently drops them back to `Raw`, and the
+//! keys-only FLR3 block layout can't carry `kv`/`kv64` payloads, so
+//! those fall back to `Delta`.
 //!
 //! Encoding runs on the spill writer's double-buffer thread
 //! ([`DoubleBufWriter`](super::stream::DoubleBufWriter)) and decoding
@@ -51,15 +62,20 @@ pub enum Codec {
     /// Base key + zigzag-delta LEB128 varints per block (`FLR2`),
     /// payloads fixed-width alongside.
     Delta,
+    /// Frame-of-reference bitpacked 1024-key blocks in FastLanes
+    /// transposed order (`FLR3`), keys only — SIMD decode on the
+    /// `MergeKernel` knob.
+    Flr3,
 }
 
 impl Codec {
-    /// Parse a codec name (`raw` | `delta`).
+    /// Parse a codec name (`raw` | `delta` | `flr3`).
     pub fn parse(s: &str) -> Result<Self, String> {
         Ok(match s {
             "raw" => Codec::Raw,
             "delta" => Codec::Delta,
-            other => return Err(format!("unknown codec '{other}' (expected raw|delta)")),
+            "flr3" => Codec::Flr3,
+            other => return Err(format!("unknown codec '{other}' (expected raw|delta|flr3)")),
         })
     }
 
@@ -68,18 +84,31 @@ impl Codec {
         match self {
             Codec::Raw => "raw",
             Codec::Delta => "delta",
+            Codec::Flr3 => "flr3",
         }
     }
 
     /// The codec actually used for `dtype`: `f32` keys stay raw (their
-    /// bit patterns have no delta structure worth varint-encoding), the
-    /// integer-keyed dtypes honour the request.
+    /// bit patterns have no delta structure worth varint-encoding), and
+    /// the keys-only FLR3 block layout drops payload records (`kv`,
+    /// `kv64`) back to `Delta` so they still compress. The integer key
+    /// dtypes honour the request.
     pub fn effective_for(self, dtype: Dtype) -> Codec {
         match (self, dtype) {
-            (Codec::Delta, Dtype::F32) => Codec::Raw,
+            (Codec::Delta | Codec::Flr3, Dtype::F32) => Codec::Raw,
+            (Codec::Flr3, Dtype::Kv | Dtype::Kv64) => Codec::Delta,
             (c, _) => c,
         }
     }
+}
+
+/// Parse a codec knob value the way every entry point — `[external]
+/// codec` in the config file, `--codec` on the CLI, `codec=<c>` on the
+/// protocol — reports it: errors are prefixed with the argument name,
+/// so a typo reads `codec argument: unknown codec 'lz4' (expected
+/// raw|delta|flr3)` wherever it was typed.
+pub fn parse_codec_arg(s: &str) -> Result<Codec, String> {
+    Codec::parse(s).map_err(|e| format!("codec argument: {e}"))
 }
 
 /// Zigzag-map a signed delta onto the unsigned varint domain
@@ -319,8 +348,9 @@ mod tests {
     fn codec_parse_name_and_fallback() {
         assert_eq!(Codec::parse("raw").unwrap(), Codec::Raw);
         assert_eq!(Codec::parse("delta").unwrap(), Codec::Delta);
+        assert_eq!(Codec::parse("flr3").unwrap(), Codec::Flr3);
         assert!(Codec::parse("lz4").unwrap_err().contains("unknown codec"));
-        for c in [Codec::Raw, Codec::Delta] {
+        for c in [Codec::Raw, Codec::Delta, Codec::Flr3] {
             assert_eq!(Codec::parse(c.name()).unwrap(), c);
         }
         assert_eq!(Codec::Delta.effective_for(Dtype::F32), Codec::Raw);
@@ -328,5 +358,31 @@ mod tests {
         assert_eq!(Codec::Delta.effective_for(Dtype::Kv64), Codec::Delta);
         assert_eq!(Codec::Raw.effective_for(Dtype::U32), Codec::Raw);
         assert_eq!(Codec::default(), Codec::Raw);
+    }
+
+    #[test]
+    fn flr3_fallback_matrix() {
+        // Plain integer keys honour the request …
+        assert_eq!(Codec::Flr3.effective_for(Dtype::U32), Codec::Flr3);
+        assert_eq!(Codec::Flr3.effective_for(Dtype::U64), Codec::Flr3);
+        // … f32 drops to raw like delta does …
+        assert_eq!(Codec::Flr3.effective_for(Dtype::F32), Codec::Raw);
+        // … and payload records keep compressing via FLR2.
+        assert_eq!(Codec::Flr3.effective_for(Dtype::Kv), Codec::Delta);
+        assert_eq!(Codec::Flr3.effective_for(Dtype::Kv64), Codec::Delta);
+        // Raw is always honoured.
+        for d in [Dtype::U32, Dtype::U64, Dtype::F32, Dtype::Kv, Dtype::Kv64] {
+            assert_eq!(Codec::Raw.effective_for(d), Codec::Raw);
+        }
+    }
+
+    #[test]
+    fn parse_codec_arg_names_the_argument() {
+        assert_eq!(parse_codec_arg("flr3").unwrap(), Codec::Flr3);
+        assert_eq!(parse_codec_arg("raw").unwrap(), Codec::Raw);
+        assert_eq!(parse_codec_arg("delta").unwrap(), Codec::Delta);
+        let err = parse_codec_arg("lz4").unwrap_err();
+        assert!(err.starts_with("codec argument: unknown codec 'lz4'"), "{err}");
+        assert!(err.contains("raw|delta|flr3"), "{err}");
     }
 }

@@ -1,0 +1,559 @@
+//! FLR3 block kernels: FastLanes-style frame-of-reference bitpacking
+//! over 1024-key blocks in an 8-lane transposed order.
+//!
+//! The FLR2 delta+varint codec decodes one byte at a time — an
+//! inherently serial loop that caps compressed spill reads well below
+//! memory bandwidth. FLR3 trades a little compression ratio for a
+//! branch-free layout: every block holds up to [`FLR3_BLOCK`] keys,
+//! stores the block minimum (`base`) once, subtracts it from every key
+//! (frame of reference), and bitpacks the deltas to the block's maximum
+//! delta width `W`. Keys are laid out in the FastLanes "unified
+//! transposed order": key `i` lives in lane `FL_ORDER[i % 8]` at slot
+//! `i / 8`, so the 8 lanes advance in lockstep and both pack and unpack
+//! are the *same* shift/mask arithmetic in every lane — one scalar loop
+//! the compiler can vectorise, and explicit SSE2/AVX2/NEON tiers that
+//! are arithmetically identical to it, dispatched on the same
+//! [`MergeKernel`] knob as the merge kernels (see `docs/KERNELS.md`).
+//!
+//! ## Packed layout
+//!
+//! Within a block of width `W` (1..=64), lane `l` owns the 128 deltas
+//! at slots `s = 0..128`; delta `(l, s)` occupies bits
+//! `[s*W, (s+1)*W)` of lane `l`'s little-endian bitstream, which is
+//! exactly `128*W` bits = `2*W` words long. The 16 lanes'-worth of
+//! words are interleaved word-major: packed word `j` of lane `l` is
+//! `words[j*8 + l]`, so for any slot the word index and bit offset are
+//! the same in all 8 lanes and the 8 words involved are contiguous —
+//! the shape every SIMD tier wants. `W = 0` (all keys equal `base`)
+//! stores no words at all.
+//!
+//! A delta can straddle two words. With `bit = s*W`, `wj = bit/64`,
+//! `off = bit%64`, unpack is
+//!
+//! ```text
+//! v = ((words[wj] >> off) | ((words[wj+1] << 1) << (63 - off))) & mask
+//! ```
+//!
+//! The double shift `(<<1, <<63-off)` keeps every shift count in
+//! 0..=63 (shifting by `64 - off` would be undefined at `off = 0`),
+//! and the word index `wj + 1` is clamped to the last word of the lane:
+//! whenever the clamp engages, `off + W <= 64` so the second term is
+//! masked away entirely, and the clamped read stays in bounds. Pack is
+//! the mirror image with `|=` stores. Byte order on disk is the words
+//! in index order, each little-endian — see `docs/FORMATS.md` for the
+//! framing around them.
+
+use crate::flims::simd::MergeKernel;
+
+/// Keys per FLR3 block. Partial blocks (tail of a writer batch) are
+/// zero-padded to this length before packing.
+pub const FLR3_BLOCK: usize = 1024;
+
+/// SIMD lanes in the transposed order.
+pub const FLR3_LANES: usize = 8;
+
+/// Slots per lane: `FLR3_BLOCK / FLR3_LANES`.
+pub const FLR3_LANE_SLOTS: usize = FLR3_BLOCK / FLR3_LANES;
+
+/// Bytes of the per-block header: `u32 n | u8 width | [0u8; 3] | u64
+/// base`, all little-endian.
+pub const FLR3_BLOCK_HEADER_BYTES: usize = 16;
+
+/// The FastLanes 8-lane transposed order (the 04261537 order): key
+/// `i` goes to lane `FL_ORDER[i % 8]`. The permutation is its own
+/// inverse, so the un-transpose uses the same table.
+pub const FL_ORDER: [usize; 8] = [0, 4, 2, 6, 1, 5, 3, 7];
+
+/// Packed `u64` words a block of this delta width stores on disk.
+#[inline]
+pub fn packed_words(width: usize) -> usize {
+    // 128 slots of `width` bits per lane = 2*width words, times 8 lanes.
+    2 * width * FLR3_LANES
+}
+
+/// Packed bytes a block of this delta width stores on disk.
+#[inline]
+pub fn packed_bytes(width: usize) -> usize {
+    packed_words(width) * 8
+}
+
+/// The low-`width` bitmask (`width` in 0..=64).
+#[inline]
+pub fn mask_for(width: usize) -> u64 {
+    if width >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << width) - 1
+    }
+}
+
+// ---------------------------------------------------------------------
+// Block encode / decode (header + transpose around the pack kernels).
+// ---------------------------------------------------------------------
+
+/// Append the FLR3 block encoding of `keys` (already mapped to the
+/// order-preserving `key_bits` domain) to `out`: one 16-byte header
+/// plus `packed_bytes(width)` packed words per `FLR3_BLOCK`-key chunk.
+pub fn encode_blocks(keys: &[u64], kernel: MergeKernel, out: &mut Vec<u8>) {
+    let mut tr = [0u64; FLR3_BLOCK];
+    let mut words: Vec<u64> = Vec::new();
+    for block in keys.chunks(FLR3_BLOCK) {
+        let base = block.iter().copied().min().unwrap_or(0);
+        let maxd = block.iter().map(|&k| k - base).max().unwrap_or(0);
+        let width = (64 - maxd.leading_zeros()) as usize;
+        out.extend_from_slice(&(block.len() as u32).to_le_bytes());
+        out.push(width as u8);
+        out.extend_from_slice(&[0u8; 3]);
+        out.extend_from_slice(&base.to_le_bytes());
+        if width == 0 {
+            continue;
+        }
+        // Transpose the deltas into lane order, zero-padding the tail.
+        tr.fill(0);
+        for (i, &k) in block.iter().enumerate() {
+            tr[(i >> 3) * FLR3_LANES + FL_ORDER[i & 7]] = k - base;
+        }
+        words.clear();
+        words.resize(packed_words(width), 0);
+        pack(&tr, width, &mut words, kernel);
+        for w in &words {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+}
+
+/// Decode one FLR3 block back to keys in original order, appending the
+/// first `n` to `out`. `words` must hold `packed_words(width)` words
+/// (empty for `width == 0`); `mask` is the dtype's key mask
+/// (`mask_for(8 * KEY_BYTES)`). Framing validation is the caller's job
+/// — this is pure arithmetic and cannot fail.
+pub fn decode_block(
+    words: &[u64],
+    n: usize,
+    width: usize,
+    base: u64,
+    mask: u64,
+    kernel: MergeKernel,
+    out: &mut Vec<u64>,
+) {
+    debug_assert!(n <= FLR3_BLOCK);
+    debug_assert!(width <= 64);
+    let mut tr = [0u64; FLR3_BLOCK];
+    if width > 0 {
+        unpack(words, width, &mut tr, kernel);
+    }
+    out.reserve(n);
+    for i in 0..n {
+        let d = tr[(i >> 3) * FLR3_LANES + FL_ORDER[i & 7]];
+        out.push(base.wrapping_add(d) & mask);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pack / unpack dispatch.
+// ---------------------------------------------------------------------
+
+/// Bitpack the transposed deltas `tr` at `width` into `words`
+/// (`packed_words(width)` long, pre-zeroed). `width` must be 1..=64
+/// and every delta must fit in `width` bits.
+pub fn pack(tr: &[u64; FLR3_BLOCK], width: usize, words: &mut [u64], kernel: MergeKernel) {
+    debug_assert!((1..=64).contains(&width));
+    debug_assert_eq!(words.len(), packed_words(width));
+    #[cfg(target_arch = "x86_64")]
+    if kernel.wants_simd() {
+        if have_avx2() {
+            unsafe { pack_avx2(tr, width, words) };
+        } else {
+            unsafe { pack_sse2(tr, width, words) };
+        }
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if kernel.wants_simd() {
+        unsafe { pack_neon(tr, width, words) };
+        return;
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    let _ = kernel;
+    pack_scalar(tr, width, words);
+}
+
+/// Unpack `words` at `width` back into the transposed delta buffer
+/// `tr`. The inverse of [`pack`]; every tier produces identical bytes.
+pub fn unpack(words: &[u64], width: usize, tr: &mut [u64; FLR3_BLOCK], kernel: MergeKernel) {
+    debug_assert!((1..=64).contains(&width));
+    debug_assert_eq!(words.len(), packed_words(width));
+    #[cfg(target_arch = "x86_64")]
+    if kernel.wants_simd() {
+        if have_avx2() {
+            unsafe { unpack_avx2(words, width, tr) };
+        } else {
+            unsafe { unpack_sse2(words, width, tr) };
+        }
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if kernel.wants_simd() {
+        unsafe { unpack_neon(words, width, tr) };
+        return;
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    let _ = kernel;
+    unpack_scalar(words, width, tr);
+}
+
+// ---------------------------------------------------------------------
+// Scalar reference tier. The 8-lane inner loops read/write contiguous
+// words, so the compiler auto-vectorises them; the explicit tiers below
+// perform bit-for-bit the same arithmetic.
+// ---------------------------------------------------------------------
+
+fn pack_scalar(tr: &[u64; FLR3_BLOCK], width: usize, words: &mut [u64]) {
+    let last = 2 * width - 1;
+    for s in 0..FLR3_LANE_SLOTS {
+        let bit = s * width;
+        let wj = bit >> 6;
+        let off = (bit & 63) as u32;
+        let wj1 = (wj + 1).min(last);
+        for l in 0..FLR3_LANES {
+            let v = tr[s * FLR3_LANES + l];
+            words[wj * FLR3_LANES + l] |= v << off;
+            words[wj1 * FLR3_LANES + l] |= (v >> 1) >> (63 - off);
+        }
+    }
+}
+
+fn unpack_scalar(words: &[u64], width: usize, tr: &mut [u64; FLR3_BLOCK]) {
+    let mask = mask_for(width);
+    let last = 2 * width - 1;
+    for s in 0..FLR3_LANE_SLOTS {
+        let bit = s * width;
+        let wj = bit >> 6;
+        let off = (bit & 63) as u32;
+        let wj1 = (wj + 1).min(last);
+        for l in 0..FLR3_LANES {
+            let lo = words[wj * FLR3_LANES + l] >> off;
+            let hi = (words[wj1 * FLR3_LANES + l] << 1) << (63 - off);
+            tr[s * FLR3_LANES + l] = (lo | hi) & mask;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// x86_64 tiers: SSE2 baseline (part of the ABI, no detection), AVX2
+// runtime-detected once and cached. `_mm_sll_epi64`/`_mm_srl_epi64`
+// take the shift count from a vector, so the per-slot counts stay out
+// of the instruction stream.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+fn have_avx2() -> bool {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    static CACHE: AtomicU8 = AtomicU8::new(0);
+    match CACHE.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => {
+            let v = is_x86_feature_detected!("avx2");
+            CACHE.store(if v { 2 } else { 1 }, Ordering::Relaxed);
+            v
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+unsafe fn pack_sse2(tr: &[u64; FLR3_BLOCK], width: usize, words: &mut [u64]) {
+    use core::arch::x86_64::*;
+    let last = 2 * width - 1;
+    for s in 0..FLR3_LANE_SLOTS {
+        let bit = s * width;
+        let wj = bit >> 6;
+        let off = (bit & 63) as i32;
+        let wj1 = (wj + 1).min(last);
+        let shl = _mm_cvtsi32_si128(off);
+        let shr = _mm_cvtsi32_si128(63 - off);
+        for h in 0..4 {
+            let v = _mm_loadu_si128(tr.as_ptr().add(s * 8 + h * 2) as *const __m128i);
+            let lo_p = words.as_mut_ptr().add(wj * 8 + h * 2) as *mut __m128i;
+            let lo = _mm_loadu_si128(lo_p as *const __m128i);
+            _mm_storeu_si128(lo_p, _mm_or_si128(lo, _mm_sll_epi64(v, shl)));
+            let hi_p = words.as_mut_ptr().add(wj1 * 8 + h * 2) as *mut __m128i;
+            let hi = _mm_loadu_si128(hi_p as *const __m128i);
+            let carry = _mm_srl_epi64(_mm_srli_epi64::<1>(v), shr);
+            _mm_storeu_si128(hi_p, _mm_or_si128(hi, carry));
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+unsafe fn unpack_sse2(words: &[u64], width: usize, tr: &mut [u64; FLR3_BLOCK]) {
+    use core::arch::x86_64::*;
+    let mask = _mm_set1_epi64x(mask_for(width) as i64);
+    let last = 2 * width - 1;
+    for s in 0..FLR3_LANE_SLOTS {
+        let bit = s * width;
+        let wj = bit >> 6;
+        let off = (bit & 63) as i32;
+        let wj1 = (wj + 1).min(last);
+        let shr = _mm_cvtsi32_si128(off);
+        let shl = _mm_cvtsi32_si128(63 - off);
+        for h in 0..4 {
+            let w0 = _mm_loadu_si128(words.as_ptr().add(wj * 8 + h * 2) as *const __m128i);
+            let w1 = _mm_loadu_si128(words.as_ptr().add(wj1 * 8 + h * 2) as *const __m128i);
+            let lo = _mm_srl_epi64(w0, shr);
+            let hi = _mm_sll_epi64(_mm_slli_epi64::<1>(w1), shl);
+            let v = _mm_and_si128(_mm_or_si128(lo, hi), mask);
+            _mm_storeu_si128(tr.as_mut_ptr().add(s * 8 + h * 2) as *mut __m128i, v);
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn pack_avx2(tr: &[u64; FLR3_BLOCK], width: usize, words: &mut [u64]) {
+    use core::arch::x86_64::*;
+    let last = 2 * width - 1;
+    for s in 0..FLR3_LANE_SLOTS {
+        let bit = s * width;
+        let wj = bit >> 6;
+        let off = (bit & 63) as i32;
+        let wj1 = (wj + 1).min(last);
+        let shl = _mm_cvtsi32_si128(off);
+        let shr = _mm_cvtsi32_si128(63 - off);
+        for h in 0..2 {
+            let v = _mm256_loadu_si256(tr.as_ptr().add(s * 8 + h * 4) as *const __m256i);
+            let lo_p = words.as_mut_ptr().add(wj * 8 + h * 4) as *mut __m256i;
+            let lo = _mm256_loadu_si256(lo_p as *const __m256i);
+            _mm256_storeu_si256(lo_p, _mm256_or_si256(lo, _mm256_sll_epi64(v, shl)));
+            let hi_p = words.as_mut_ptr().add(wj1 * 8 + h * 4) as *mut __m256i;
+            let hi = _mm256_loadu_si256(hi_p as *const __m256i);
+            let carry = _mm256_srl_epi64(_mm256_srli_epi64::<1>(v), shr);
+            _mm256_storeu_si256(hi_p, _mm256_or_si256(hi, carry));
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn unpack_avx2(words: &[u64], width: usize, tr: &mut [u64; FLR3_BLOCK]) {
+    use core::arch::x86_64::*;
+    let mask = _mm256_set1_epi64x(mask_for(width) as i64);
+    let last = 2 * width - 1;
+    for s in 0..FLR3_LANE_SLOTS {
+        let bit = s * width;
+        let wj = bit >> 6;
+        let off = (bit & 63) as i32;
+        let wj1 = (wj + 1).min(last);
+        let shr = _mm_cvtsi32_si128(off);
+        let shl = _mm_cvtsi32_si128(63 - off);
+        for h in 0..2 {
+            let w0 = _mm256_loadu_si256(words.as_ptr().add(wj * 8 + h * 4) as *const __m256i);
+            let w1 = _mm256_loadu_si256(words.as_ptr().add(wj1 * 8 + h * 4) as *const __m256i);
+            let lo = _mm256_srl_epi64(w0, shr);
+            let hi = _mm256_sll_epi64(_mm256_slli_epi64::<1>(w1), shl);
+            let v = _mm256_and_si256(_mm256_or_si256(lo, hi), mask);
+            _mm256_storeu_si256(tr.as_mut_ptr().add(s * 8 + h * 4) as *mut __m256i, v);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// aarch64 NEON tier. `vshlq_u64` shifts left for positive counts and
+// (logically) right for negative ones, so both directions use it.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+unsafe fn pack_neon(tr: &[u64; FLR3_BLOCK], width: usize, words: &mut [u64]) {
+    use core::arch::aarch64::*;
+    let last = 2 * width - 1;
+    for s in 0..FLR3_LANE_SLOTS {
+        let bit = s * width;
+        let wj = bit >> 6;
+        let off = (bit & 63) as i64;
+        let wj1 = (wj + 1).min(last);
+        let shl = vdupq_n_s64(off);
+        let shr = vdupq_n_s64(-(63 - off));
+        let one_r = vdupq_n_s64(-1);
+        for h in 0..4 {
+            let v = vld1q_u64(tr.as_ptr().add(s * 8 + h * 2));
+            let lo_p = words.as_mut_ptr().add(wj * 8 + h * 2);
+            let lo = vld1q_u64(lo_p as *const u64);
+            vst1q_u64(lo_p, vorrq_u64(lo, vshlq_u64(v, shl)));
+            let hi_p = words.as_mut_ptr().add(wj1 * 8 + h * 2);
+            let hi = vld1q_u64(hi_p as *const u64);
+            let carry = vshlq_u64(vshlq_u64(v, one_r), shr);
+            vst1q_u64(hi_p, vorrq_u64(hi, carry));
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+unsafe fn unpack_neon(words: &[u64], width: usize, tr: &mut [u64; FLR3_BLOCK]) {
+    use core::arch::aarch64::*;
+    let mask = vdupq_n_u64(mask_for(width));
+    let last = 2 * width - 1;
+    for s in 0..FLR3_LANE_SLOTS {
+        let bit = s * width;
+        let wj = bit >> 6;
+        let off = (bit & 63) as i64;
+        let wj1 = (wj + 1).min(last);
+        let shr = vdupq_n_s64(-off);
+        let shl = vdupq_n_s64(63 - off);
+        let one_l = vdupq_n_s64(1);
+        for h in 0..4 {
+            let w0 = vld1q_u64(words.as_ptr().add(wj * 8 + h * 2));
+            let w1 = vld1q_u64(words.as_ptr().add(wj1 * 8 + h * 2));
+            let lo = vshlq_u64(w0, shr);
+            let hi = vshlq_u64(vshlq_u64(w1, one_l), shl);
+            let v = vandq_u64(vorrq_u64(lo, hi), mask);
+            vst1q_u64(tr.as_mut_ptr().add(s * 8 + h * 2), v);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fl_order_is_its_own_inverse() {
+        for r in 0..FLR3_LANES {
+            assert_eq!(FL_ORDER[FL_ORDER[r]], r);
+        }
+        let mut seen = [false; FLR3_LANES];
+        for &l in &FL_ORDER {
+            assert!(!seen[l], "FL_ORDER is not a permutation");
+            seen[l] = true;
+        }
+    }
+
+    #[test]
+    fn packed_words_fill_exactly() {
+        for width in 1..=64usize {
+            assert_eq!(packed_words(width), 16 * width);
+            assert_eq!(packed_words(width) * 64, FLR3_BLOCK * width);
+            assert_eq!(packed_bytes(width), 128 * width);
+        }
+    }
+
+    fn random_deltas(width: usize, rng: &mut Rng) -> [u64; FLR3_BLOCK] {
+        let mask = mask_for(width);
+        let mut tr = [0u64; FLR3_BLOCK];
+        for d in tr.iter_mut() {
+            *d = rng.next_u64() & mask;
+        }
+        // Force at least one delta to use the top bit, so `width` really
+        // is the block's max width.
+        tr[FLR3_BLOCK / 2] |= 1u64 << (width - 1);
+        tr
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_every_width_scalar() {
+        let mut rng = Rng::new(0xf13a);
+        for width in 1..=64usize {
+            let tr = random_deltas(width, &mut rng);
+            let mut words = vec![0u64; packed_words(width)];
+            pack(&tr, width, &mut words, MergeKernel::Scalar);
+            let mut back = [0u64; FLR3_BLOCK];
+            unpack(&words, width, &mut back, MergeKernel::Scalar);
+            assert_eq!(tr[..], back[..], "scalar roundtrip failed at width {width}");
+        }
+    }
+
+    #[test]
+    fn simd_tiers_match_scalar_bit_for_bit() {
+        let mut rng = Rng::new(0xf13b);
+        for width in 1..=64usize {
+            let tr = random_deltas(width, &mut rng);
+            let mut w_scalar = vec![0u64; packed_words(width)];
+            let mut w_auto = vec![0u64; packed_words(width)];
+            pack(&tr, width, &mut w_scalar, MergeKernel::Scalar);
+            pack(&tr, width, &mut w_auto, MergeKernel::Auto);
+            assert_eq!(w_scalar, w_auto, "pack tiers diverge at width {width}");
+            let mut t_scalar = [0u64; FLR3_BLOCK];
+            let mut t_auto = [0u64; FLR3_BLOCK];
+            unpack(&w_scalar, width, &mut t_scalar, MergeKernel::Scalar);
+            unpack(&w_scalar, width, &mut t_auto, MergeKernel::Auto);
+            assert_eq!(
+                t_scalar[..],
+                t_auto[..],
+                "unpack tiers diverge at width {width}"
+            );
+            assert_eq!(t_scalar[..], tr[..]);
+        }
+    }
+
+    /// Parse the byte stream `encode_blocks` produced and decode every
+    /// block — the same walk `RunReader` does, minus the framing errors.
+    fn decode_stream(bytes: &[u8], kernel: MergeKernel) -> Vec<u64> {
+        let mut out = Vec::new();
+        let mut at = 0;
+        while at < bytes.len() {
+            let n = u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()) as usize;
+            let width = bytes[at + 4] as usize;
+            assert_eq!(&bytes[at + 5..at + 8], &[0u8; 3], "pad bytes must be zero");
+            let base = u64::from_le_bytes(bytes[at + 8..at + 16].try_into().unwrap());
+            at += FLR3_BLOCK_HEADER_BYTES;
+            let words: Vec<u64> = (0..packed_words(width))
+                .map(|j| {
+                    let p = at + j * 8;
+                    u64::from_le_bytes(bytes[p..p + 8].try_into().unwrap())
+                })
+                .collect();
+            at += packed_bytes(width);
+            decode_block(&words, n, width, base, u64::MAX, kernel, &mut out);
+        }
+        assert_eq!(at, bytes.len());
+        out
+    }
+
+    #[test]
+    fn encode_decode_blocks_roundtrip_with_tail() {
+        let mut rng = Rng::new(0xf13c);
+        for &len in &[0usize, 1, 7, 1023, 1024, 1025, 3000, 4096] {
+            let mut keys: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            keys.sort_unstable_by(|a, b| b.cmp(a)); // runs are descending
+            let mut bytes = Vec::new();
+            encode_blocks(&keys, MergeKernel::Auto, &mut bytes);
+            assert_eq!(decode_stream(&bytes, MergeKernel::Auto), keys);
+            assert_eq!(decode_stream(&bytes, MergeKernel::Scalar), keys);
+        }
+    }
+
+    #[test]
+    fn all_equal_block_is_header_only() {
+        let keys = vec![0xdead_beefu64; 1000];
+        let mut bytes = Vec::new();
+        encode_blocks(&keys, MergeKernel::Auto, &mut bytes);
+        assert_eq!(bytes.len(), FLR3_BLOCK_HEADER_BYTES);
+        assert_eq!(decode_stream(&bytes, MergeKernel::Auto), keys);
+    }
+
+    #[test]
+    fn extreme_keys_roundtrip() {
+        // Max-width deltas (0 and u64::MAX in one block) and the sign
+        // boundary, descending as a run would be.
+        let keys = vec![u64::MAX, 1u64 << 63, (1u64 << 63) - 1, 1, 0];
+        let mut bytes = Vec::new();
+        encode_blocks(&keys, MergeKernel::Auto, &mut bytes);
+        assert_eq!(bytes[4] as usize, 64, "max delta must pack at width 64");
+        assert_eq!(decode_stream(&bytes, MergeKernel::Auto), keys);
+        assert_eq!(decode_stream(&bytes, MergeKernel::Scalar), keys);
+    }
+
+    #[test]
+    fn scalar_encode_matches_auto_encode_byte_for_byte() {
+        let mut rng = Rng::new(0xf13d);
+        let mut keys: Vec<u64> = (0..2500).map(|_| rng.next_u64() >> 20).collect();
+        keys.sort_unstable_by(|a, b| b.cmp(a));
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        encode_blocks(&keys, MergeKernel::Auto, &mut a);
+        encode_blocks(&keys, MergeKernel::Scalar, &mut b);
+        assert_eq!(a, b);
+    }
+}

@@ -4,7 +4,7 @@
 //! Every supported dataset type implements [`ExtItem`]: a fixed-width
 //! little-endian wire encoding plus the in-memory sort used for phase-1
 //! runs (stable for payload records — the paper's §6 tie-record
-//! guarantee holds out-of-core, not just in RAM). Three layouts share
+//! guarantee holds out-of-core, not just in RAM). Four layouts share
 //! the encoding (byte-level spec with worked hex examples in
 //! `docs/FORMATS.md`):
 //!
@@ -15,6 +15,12 @@
 //!   `FLR2`), then a sequence of delta blocks: keys stored as a
 //!   full-width base plus zigzag-delta LEB128 varints, payloads
 //!   fixed-width alongside ([`Codec::Delta`], [`codec`](super::codec)).
+//! * **`FLR3` run files** — the same header shape (magic `FLR3`), then
+//!   frame-of-reference bitpacked 1024-key blocks in the FastLanes
+//!   transposed order ([`Codec::Flr3`], [`flr3`](super::flr3)). Keys
+//!   only — payload dtypes fall back to `FLR2` via
+//!   [`Codec::effective_for`] — and decode dispatches on the same
+//!   [`MergeKernel`] knob as the merge kernels.
 //! * **Raw datasets** ([`RawReader`] / [`RawWriter`]) — headerless
 //!   little-endian records, the input/output format of `sort_file` (and
 //!   what the `sortfile` CLI/service commands operate on). For `f32`
@@ -44,12 +50,15 @@ use crate::key::{F32Key, Item, Kv, Kv64};
 use super::codec::{
     decode_delta_keys, encode_delta, Codec, DELTA_BLOCK_MAX, DELTA_FRAME_BYTES, MAX_VARINT_BYTES,
 };
+use super::flr3::{self, FLR3_BLOCK, FLR3_BLOCK_HEADER_BYTES};
 
 /// Magic prefix of an `FLR1` (raw fixed-width) run file.
 pub const RUN_MAGIC: [u8; 4] = *b"FLR1";
 /// Magic prefix of an `FLR2` (delta + varint) run file.
 pub const RUN_MAGIC_V2: [u8; 4] = *b"FLR2";
-/// Header size shared by both run versions: magic + u64 element count.
+/// Magic prefix of an `FLR3` (frame-of-reference bitpacked) run file.
+pub const RUN_MAGIC_V3: [u8; 4] = *b"FLR3";
+/// Header size shared by every run version: magic + u64 element count.
 pub const RUN_HEADER_BYTES: u64 = 12;
 
 /// Dataset element type selector — the `dtype` argument of `sortfile`
@@ -348,15 +357,17 @@ fn read_record_block<T: ExtItem>(
 }
 
 /// Streaming writer for one run file (`FLR1` under [`Codec::Raw`],
-/// `FLR2` under [`Codec::Delta`]).
+/// `FLR2` under [`Codec::Delta`], `FLR3` under [`Codec::Flr3`]).
 pub struct RunWriter<T: ExtItem> {
     out: BufWriter<File>,
     path: PathBuf,
     codec: Codec,
+    kernel: MergeKernel,
     count: u64,
     payload_bytes: u64,
     encode_ns: u64,
     byte_buf: Vec<u8>,
+    key_buf: Vec<u64>,
     _elem: PhantomData<T>,
 }
 
@@ -369,24 +380,42 @@ impl<T: ExtItem> RunWriter<T> {
     /// Create `path` with the given codec, writing the matching magic
     /// and a zero count placeholder. Callers pass the *effective* codec
     /// ([`Codec::effective_for`]); this writer encodes whatever it is
-    /// told to.
+    /// told to — except that the keys-only `FLR3` layout rejects
+    /// payload dtypes outright.
     pub fn create_with(path: &Path, codec: Codec) -> Result<Self> {
+        Self::create_with_kernel(path, codec, MergeKernel::Auto)
+    }
+
+    /// [`create_with`](RunWriter::create_with) on an explicit
+    /// merge-kernel tier — `FLR3` encode dispatches its bitpack kernels
+    /// on it (the other codecs ignore it).
+    pub fn create_with_kernel(path: &Path, codec: Codec, kernel: MergeKernel) -> Result<Self> {
+        if codec == Codec::Flr3 && T::WIRE_BYTES != T::KEY_BYTES {
+            bail!(
+                "codec flr3 cannot carry {} payload records (keys only — \
+                 Codec::effective_for falls back to delta)",
+                T::DTYPE.name()
+            );
+        }
         let f = File::create(path)
             .with_context(|| format!("creating run file {}", path.display()))?;
         let mut out = BufWriter::new(f);
         match codec {
             Codec::Raw => out.write_all(&RUN_MAGIC)?,
             Codec::Delta => out.write_all(&RUN_MAGIC_V2)?,
+            Codec::Flr3 => out.write_all(&RUN_MAGIC_V3)?,
         }
         out.write_all(&0u64.to_le_bytes())?;
         Ok(RunWriter {
             out,
             path: path.to_path_buf(),
             codec,
+            kernel,
             count: 0,
             payload_bytes: 0,
             encode_ns: 0,
             byte_buf: Vec::new(),
+            key_buf: Vec::new(),
             _elem: PhantomData,
         })
     }
@@ -402,9 +431,9 @@ impl<T: ExtItem> RunWriter<T> {
     }
 
     /// Append a block of elements (need not be the whole run). Under
-    /// [`Codec::Delta`] each call frames its own delta blocks, so block
-    /// boundaries — hence output bytes — depend only on the call
-    /// sequence, never on thread timing.
+    /// [`Codec::Delta`] and [`Codec::Flr3`] each call frames its own
+    /// blocks, so block boundaries — hence output bytes — depend only
+    /// on the call sequence, never on thread timing.
     pub fn write_block(&mut self, xs: &[T]) -> Result<()> {
         if xs.is_empty() {
             return Ok(());
@@ -415,6 +444,12 @@ impl<T: ExtItem> RunWriter<T> {
             Codec::Delta => {
                 self.byte_buf.clear();
                 encode_delta(xs, &mut self.byte_buf);
+            }
+            Codec::Flr3 => {
+                self.byte_buf.clear();
+                self.key_buf.clear();
+                self.key_buf.extend(xs.iter().map(|x| x.key_bits()));
+                flr3::encode_blocks(&self.key_buf, self.kernel, &mut self.byte_buf);
             }
         }
         self.encode_ns += t.elapsed().as_nanos() as u64;
@@ -442,23 +477,31 @@ impl<T: ExtItem> RunWriter<T> {
 }
 
 /// Streaming reader for one run file. [`RunReader::open`] sniffs the
-/// magic, so it reads both `FLR1` (raw) and `FLR2` (delta) runs; delta
-/// decoding happens inside `read_block`, which is exactly what the
-/// prefetch threads call — decompression overlaps the merge.
+/// magic, so it reads `FLR1` (raw), `FLR2` (delta), and `FLR3`
+/// (bitpacked) runs; decoding happens inside `read_block`, which is
+/// exactly what the prefetch threads call — decompression overlaps the
+/// merge.
 pub struct RunReader<T: ExtItem> {
     inp: BufReader<File>,
     path: PathBuf,
     codec: Codec,
+    kernel: MergeKernel,
     remaining: u64,
     file_len: u64,
-    /// Bytes consumed from the file so far (delta path only) — lets EOF
-    /// detect trailing garbage that the header count cannot.
+    /// Bytes consumed from the file so far (delta/flr3 paths only) —
+    /// lets EOF detect trailing garbage that the header count cannot.
     consumed: u64,
-    /// Decoded-but-unserved records (delta path only).
+    /// Decoded-but-unserved records (delta/flr3 paths only).
     pending: Vec<T>,
     pending_pos: usize,
     byte_buf: Vec<u8>,
     key_buf: Vec<u64>,
+    word_buf: Vec<u64>,
+    /// Last key served (flr3 path only): spilled runs are descending by
+    /// construction, so the decoder enforces it — a mutated
+    /// frame-of-reference base or width surfaces as a clean error, not
+    /// silently wrong data.
+    prev_key: Option<u64>,
     decode_ns: Option<Arc<AtomicU64>>,
     _elem: PhantomData<T>,
 }
@@ -473,6 +516,17 @@ impl<T: ExtItem> RunReader<T> {
     /// wall-clock (nanoseconds) into `decode_ns` — how the merge
     /// surfaces codec CPU time in its stats.
     pub fn open_with(path: &Path, decode_ns: Option<Arc<AtomicU64>>) -> Result<Self> {
+        Self::open_with_kernel(path, decode_ns, MergeKernel::Auto)
+    }
+
+    /// [`open_with`](RunReader::open_with) on an explicit merge-kernel
+    /// tier — `FLR3` decode dispatches its unpack kernels on it (the
+    /// other codecs ignore it).
+    pub fn open_with_kernel(
+        path: &Path,
+        decode_ns: Option<Arc<AtomicU64>>,
+        kernel: MergeKernel,
+    ) -> Result<Self> {
         let f = File::open(path)
             .with_context(|| format!("opening run file {}", path.display()))?;
         let len = f.metadata()?.len();
@@ -483,8 +537,19 @@ impl<T: ExtItem> RunReader<T> {
         let codec = match magic {
             RUN_MAGIC => Codec::Raw,
             RUN_MAGIC_V2 => Codec::Delta,
+            RUN_MAGIC_V3 => Codec::Flr3,
             _ => bail!("{}: not a run file (bad magic {magic:?})", path.display()),
         };
+        // FLR3 blocks hold key bits only — there are no payload bytes
+        // to rebuild a record from, so a payload-typed read is a schema
+        // mismatch and must fail here, not panic in `from_parts`.
+        if codec == Codec::Flr3 && T::WIRE_BYTES != T::KEY_BYTES {
+            bail!(
+                "{}: corrupt run (flr3 runs are keys only, cannot decode {} payload records)",
+                path.display(),
+                T::DTYPE.name()
+            );
+        }
         let mut cnt = [0u8; 8];
         inp.read_exact(&mut cnt)
             .map_err(|e| anyhow!("{}: reading run header: {e}", path.display()))?;
@@ -506,15 +571,16 @@ impl<T: ExtItem> RunReader<T> {
                     );
                 }
             }
-            Codec::Delta => {
-                // Delta payloads are variable-length: full validation is
-                // per-block during streaming plus a trailing-bytes check
-                // at EOF. Only the cheap lower bound is checkable here.
-                let min = if remaining == 0 {
-                    RUN_HEADER_BYTES
-                } else {
-                    RUN_HEADER_BYTES + DELTA_FRAME_BYTES as u64 + T::KEY_BYTES as u64
+            Codec::Delta | Codec::Flr3 => {
+                // Encoded payloads are variable-length: full validation
+                // is per-block during streaming plus a trailing-bytes
+                // check at EOF. Only the cheap lower bound is checkable
+                // here.
+                let frame = match codec {
+                    Codec::Delta => DELTA_FRAME_BYTES as u64 + T::KEY_BYTES as u64,
+                    _ => FLR3_BLOCK_HEADER_BYTES as u64,
                 };
+                let min = if remaining == 0 { RUN_HEADER_BYTES } else { RUN_HEADER_BYTES + frame };
                 if len < min {
                     bail!(
                         "{}: truncated run (header claims {} {} elements, file is {} bytes)",
@@ -530,6 +596,7 @@ impl<T: ExtItem> RunReader<T> {
             inp,
             path: path.to_path_buf(),
             codec,
+            kernel,
             remaining,
             file_len: len,
             consumed: RUN_HEADER_BYTES,
@@ -537,6 +604,8 @@ impl<T: ExtItem> RunReader<T> {
             pending_pos: 0,
             byte_buf: Vec::new(),
             key_buf: Vec::new(),
+            word_buf: Vec::new(),
+            prev_key: None,
             decode_ns,
             _elem: PhantomData,
         })
@@ -563,8 +632,8 @@ impl<T: ExtItem> RunReader<T> {
                 out,
                 max,
             ),
-            Codec::Delta => {
-                // Loop across delta blocks so one call fills up to
+            Codec::Delta | Codec::Flr3 => {
+                // Loop across encoded blocks so one call fills up to
                 // `max` records whatever the on-disk block granularity
                 // — prefetch lookahead and merge-tree call counts stay
                 // identical to the raw codec's.
@@ -581,7 +650,10 @@ impl<T: ExtItem> RunReader<T> {
                             }
                             break;
                         }
-                        self.fill_pending()?;
+                        match self.codec {
+                            Codec::Flr3 => self.fill_pending_flr3()?,
+                            _ => self.fill_pending()?,
+                        }
                     }
                     let avail = self.pending.len() - self.pending_pos;
                     let take = avail.min(max - total);
@@ -652,6 +724,82 @@ impl<T: ExtItem> RunReader<T> {
             c.fetch_add(decode_keys_ns + t.elapsed().as_nanos() as u64, Ordering::Relaxed);
         }
         self.consumed += DELTA_FRAME_BYTES as u64 + key_bytes + (n * payload_bytes) as u64;
+        self.remaining -= n as u64;
+        Ok(())
+    }
+
+    /// Read + decode the next FLR3 block into `pending`. Framing is
+    /// fully validated here — record count, delta width, zero pad,
+    /// packed length against the file — and the decoded keys must keep
+    /// the run descending, so a mutated base/width never produces
+    /// silently wrong data.
+    fn fill_pending_flr3(&mut self) -> Result<()> {
+        let path = &self.path;
+        let mut hdr = [0u8; FLR3_BLOCK_HEADER_BYTES];
+        self.inp.read_exact(&mut hdr).map_err(|e| {
+            anyhow!("{}: truncated run (mid block header): {e}", path.display())
+        })?;
+        let n = u32::from_le_bytes(hdr[..4].try_into().unwrap()) as usize;
+        let width = hdr[4] as usize;
+        let base = u64::from_le_bytes(hdr[8..16].try_into().unwrap());
+        if hdr[5..8] != [0u8; 3] {
+            bail!("{}: corrupt run (nonzero pad in block header)", path.display());
+        }
+        if n == 0 || n > FLR3_BLOCK {
+            bail!("{}: corrupt run (block claims {n} records)", path.display());
+        }
+        if n as u64 > self.remaining {
+            bail!(
+                "{}: corrupt run (block claims {n} records, only {} remain)",
+                path.display(),
+                self.remaining
+            );
+        }
+        let max_width = 64.min(8 * T::KEY_BYTES);
+        if width > max_width {
+            bail!(
+                "{}: corrupt run (block claims delta width {width}, {} keys allow at most \
+                 {max_width})",
+                path.display(),
+                T::DTYPE.name()
+            );
+        }
+        let packed = flr3::packed_bytes(width) as u64;
+        let left_in_file = self.file_len - self.consumed - FLR3_BLOCK_HEADER_BYTES as u64;
+        if packed > left_in_file {
+            bail!(
+                "{}: truncated run (block needs {packed} packed bytes, {left_in_file} left)",
+                path.display()
+            );
+        }
+        self.byte_buf.resize(packed as usize, 0);
+        self.inp
+            .read_exact(&mut self.byte_buf)
+            .map_err(|e| anyhow!("{}: truncated run (mid packed block): {e}", path.display()))?;
+
+        let t = Instant::now();
+        self.word_buf.clear();
+        self.word_buf.extend(
+            self.byte_buf.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())),
+        );
+        self.key_buf.clear();
+        let mask = flr3::mask_for(8 * T::KEY_BYTES);
+        flr3::decode_block(&self.word_buf, n, width, base, mask, self.kernel, &mut self.key_buf);
+
+        self.pending.clear();
+        self.pending_pos = 0;
+        self.pending.reserve(n);
+        for &k in &self.key_buf {
+            if self.prev_key.is_some_and(|prev| k > prev) {
+                bail!("{}: corrupt run (keys not descending)", path.display());
+            }
+            self.prev_key = Some(k);
+            self.pending.push(T::from_parts(k, &[]));
+        }
+        if let Some(c) = &self.decode_ns {
+            c.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+        self.consumed += FLR3_BLOCK_HEADER_BYTES as u64 + packed;
         self.remaining -= n as u64;
         Ok(())
     }
@@ -824,6 +972,82 @@ mod tests {
     }
 
     #[test]
+    fn flr3_run_round_trip_in_blocks() {
+        let path = tmp("rt.flr3");
+        let mut w = RunWriter::create_with(&path, Codec::Flr3).unwrap();
+        w.write_block(&[9u32, 8, 7]).unwrap();
+        w.write_block(&[]).unwrap();
+        w.write_block(&[6, 5]).unwrap();
+        let run = w.finish().unwrap();
+        assert_eq!(run.elems, 5);
+        assert_eq!(run.raw_bytes, RUN_HEADER_BYTES + 20);
+        assert_eq!(run.bytes, std::fs::metadata(&path).unwrap().len());
+        // Two write calls → two framed blocks: header + 128·width packed
+        // bytes each (width 2 for deltas 0..=2, width 1 for 0..=1).
+        assert_eq!(run.bytes, RUN_HEADER_BYTES + (16 + 256) + (16 + 128));
+
+        let mut r = RunReader::<u32>::open(&path).unwrap();
+        assert_eq!(r.remaining(), 5);
+        assert_eq!(r.codec(), Codec::Flr3);
+        let mut out = Vec::new();
+        assert_eq!(r.read_block(&mut out, 2).unwrap(), 2);
+        while r.read_block(&mut out, 2).unwrap() > 0 {}
+        assert_eq!(out, vec![9, 8, 7, 6, 5]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn flr3_run_compresses_and_counts_decode_time() {
+        let path = tmp("rt-ctr.flr3");
+        let data: Vec<u64> = (0..5000u64).rev().collect();
+        let mut w = RunWriter::create_with(&path, Codec::Flr3).unwrap();
+        w.write_block(&data).unwrap();
+        let run = w.finish().unwrap();
+        assert!(run.bytes < run.raw_bytes, "dense u64 run must compress under flr3");
+
+        let ctr = Arc::new(AtomicU64::new(0));
+        let mut r = RunReader::<u64>::open_with(&path, Some(Arc::clone(&ctr))).unwrap();
+        let mut out = Vec::new();
+        while r.read_block(&mut out, 512).unwrap() > 0 {}
+        assert_eq!(out, data);
+        assert!(ctr.load(Ordering::Relaxed) > 0, "decode time must be counted");
+
+        // The scalar tier decodes the same file to the same bytes.
+        let mut r =
+            RunReader::<u64>::open_with_kernel(&path, None, MergeKernel::Scalar).unwrap();
+        let mut out2 = Vec::new();
+        while r.read_block(&mut out2, 777).unwrap() > 0 {}
+        assert_eq!(out2, data);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn flr3_writer_rejects_payload_dtypes() {
+        let path = tmp("reject.flr3");
+        let err =
+            format!("{:#}", RunWriter::<Kv>::create_with(&path, Codec::Flr3).unwrap_err());
+        assert!(err.contains("payload"), "{err}");
+        let err =
+            format!("{:#}", RunWriter::<Kv64>::create_with(&path, Codec::Flr3).unwrap_err());
+        assert!(err.contains("payload"), "{err}");
+    }
+
+    #[test]
+    fn flr3_reader_rejects_non_descending_runs() {
+        // The writer encodes whatever it is given; the reader enforces
+        // the descending invariant spilled runs always satisfy.
+        let path = tmp("asc.flr3");
+        let mut w = RunWriter::create_with(&path, Codec::Flr3).unwrap();
+        w.write_block(&[1u32, 2, 3]).unwrap();
+        w.finish().unwrap();
+        let mut r = RunReader::<u32>::open(&path).unwrap();
+        let mut out = Vec::new();
+        let err = format!("{:#}", r.read_block(&mut out, 10).unwrap_err());
+        assert!(err.contains("not descending"), "{err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
     fn delta_run_decode_counter_accumulates() {
         let path = tmp("rt-ctr.flr2");
         let data: Vec<u64> = (0..5000u64).rev().collect();
@@ -963,15 +1187,17 @@ mod tests {
         assert_eq!(r.read_block(&mut out, 10).unwrap(), 0);
         std::fs::remove_file(&path).unwrap();
 
-        // An empty delta run is just a header too.
-        let path = tmp("empty.flr2");
-        let run = RunWriter::<u32>::create_with(&path, Codec::Delta).unwrap().finish().unwrap();
-        assert_eq!(run.elems, 0);
-        assert_eq!(run.bytes, RUN_HEADER_BYTES);
-        let mut r = RunReader::<u32>::open(&path).unwrap();
-        let mut out = Vec::new();
-        assert_eq!(r.read_block(&mut out, 10).unwrap(), 0);
-        std::fs::remove_file(&path).unwrap();
+        // An empty delta or flr3 run is just a header too.
+        for codec in [Codec::Delta, Codec::Flr3] {
+            let path = tmp(&format!("empty-{}.flr", codec.name()));
+            let run = RunWriter::<u32>::create_with(&path, codec).unwrap().finish().unwrap();
+            assert_eq!(run.elems, 0);
+            assert_eq!(run.bytes, RUN_HEADER_BYTES);
+            let mut r = RunReader::<u32>::open(&path).unwrap();
+            let mut out = Vec::new();
+            assert_eq!(r.read_block(&mut out, 10).unwrap(), 0);
+            std::fs::remove_file(&path).unwrap();
+        }
 
         let path = tmp("empty.u32");
         write_raw::<u32>(&path, &[]).unwrap();

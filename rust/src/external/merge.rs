@@ -151,8 +151,11 @@ fn open_group<T: ExtItem>(
     let block = cfg.block_elems_for(T::WIRE_BYTES);
     let mut streams: Vec<Box<dyn RunStream<T>>> = Vec::with_capacity(group.len());
     for run in group {
-        let reader =
-            RunReader::<T>::open_with(&run.path, Some(Arc::clone(&counters.decode_ns)))?;
+        let reader = RunReader::<T>::open_with_kernel(
+            &run.path,
+            Some(Arc::clone(&counters.decode_ns)),
+            cfg.kernel,
+        )?;
         if cfg.prefetch_blocks > 0 {
             streams.push(Box::new(PrefetchStream::spawn(
                 reader,
@@ -265,7 +268,7 @@ pub fn merge_runs_ctx<T: ExtItem>(
             // through the codec layer in both phases.
             let mut writers = Vec::with_capacity(batch.len());
             for _ in batch {
-                writers.push(spill.create_run::<T>(codec)?);
+                writers.push(spill.create_run_with::<T>(codec, cfg.kernel)?);
             }
             let out_paths: Vec<std::path::PathBuf> =
                 writers.iter().map(|w| w.path().to_path_buf()).collect();
@@ -479,7 +482,7 @@ impl<T: ExtItem> Scheduler<'_, T> {
         // headroom check here would be blind to the others, and theirs
         // to ours.
         self.spill.reserve(projected)?;
-        let writer = match self.spill.create_run::<T>(self.codec) {
+        let writer = match self.spill.create_run_with::<T>(self.codec, self.cfg.kernel) {
             Ok(w) => w,
             Err(e) => {
                 self.spill.release(projected);

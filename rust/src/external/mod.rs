@@ -63,12 +63,16 @@
 //! Every byte crossing the spill boundary flows through the run-codec
 //! layer ([`codec`]): `[external] codec = raw` spills fixed-width
 //! `FLR1` runs, `codec = delta` spills `FLR2` delta + varint runs
-//! (~2–4× smaller on sorted/skewed keys), re-encoding intermediate
-//! passes too. Encoding rides the write-side double-buffer threads and
-//! decoding the prefetch threads, so codec CPU trades against spill
-//! bandwidth without lengthening the merge's critical path.
+//! (~2–4× smaller on sorted/skewed keys), and `codec = flr3` spills
+//! `FLR3` frame-of-reference bitpacked runs ([`flr3`]) whose decode is
+//! a branch-free SIMD loop on the [`MergeKernel`] knob, re-encoding
+//! intermediate passes too. Encoding rides the write-side
+//! double-buffer threads and decoding the prefetch threads, so codec
+//! CPU trades against spill bandwidth without lengthening the merge's
+//! critical path.
 
 pub mod codec;
+pub mod flr3;
 pub mod format;
 pub mod merge;
 pub mod run_gen;
@@ -82,7 +86,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-pub use codec::Codec;
+pub use codec::{parse_codec_arg, Codec};
 pub use format::{
     read_raw, write_raw, Dtype, ExtItem, RawReader, RawWriter, RunFile, RunReader, RunWriter,
 };
@@ -189,8 +193,12 @@ pub struct ExternalConfig {
     /// does not name one.
     pub dtype: Dtype,
     /// Run codec for spilled runs (phase 1 and intermediate passes).
-    /// `delta` falls back to `raw` for dtypes without an integer delta
-    /// domain (`f32`) — see [`Codec::effective_for`].
+    /// `delta` and `flr3` fall back to `raw` for dtypes without an
+    /// integer delta domain (`f32`), and the keys-only `flr3` falls
+    /// back to `delta` for payload records — see
+    /// [`Codec::effective_for`]. Defaults from the `FLIMS_CODEC`
+    /// environment variable (unset = `raw`) so CI can run the whole
+    /// suite on any codec.
     pub codec: Codec,
     /// Spill directory (`None` = fresh dir under the system temp dir).
     pub tmp_dir: Option<PathBuf>,
@@ -229,7 +237,7 @@ impl Default for ExternalConfig {
             prefetch_blocks: 2,
             overlap: overlap_default(),
             dtype: Dtype::U32,
-            codec: Codec::Raw,
+            codec: codec_default(),
             tmp_dir: None,
             disk_budget_bytes: None,
             kernel: MergeKernel::env_default(),
@@ -271,6 +279,23 @@ fn overlap_default() -> bool {
         Ok(v) => parse_overlap(&v).unwrap_or_else(|e| {
             eprintln!("warning: FLIMS_EXTERNAL_OVERLAP ignored: {e}");
             false
+        }),
+    }
+}
+
+/// The `codec` default: the `FLIMS_CODEC` environment variable when
+/// set, else raw. This is how the `test-codec-flr3` CI lane runs the
+/// full integration suite with every spill compressed through FLR3
+/// without touching each test's config. Like the overlap knob, an
+/// unparseable value warns on stderr instead of silently meaning
+/// "raw" — a typo should not quietly turn the codec lane into a
+/// second raw run.
+fn codec_default() -> Codec {
+    match std::env::var("FLIMS_CODEC") {
+        Err(_) => Codec::Raw,
+        Ok(v) => Codec::parse(&v).unwrap_or_else(|e| {
+            eprintln!("warning: FLIMS_CODEC ignored: {e}");
+            Codec::Raw
         }),
     }
 }
@@ -723,11 +748,11 @@ mod tests {
         // Same input, same config, overlap on vs off: identical sorted
         // output AND identical spill layout (runs, passes, bytes) —
         // only the wall-clock schedule may differ. Multi-pass workload
-        // (20 runs ≫ fan-in 4), serial and parallel, both codecs.
+        // (20 runs ≫ fan-in 4), serial and parallel, all three codecs.
         let mut rng = Rng::new(109);
         let data = gen_u32(&mut rng, 20_000, Distribution::Uniform);
         for threads in [1usize, 4] {
-            for codec in [Codec::Raw, Codec::Delta] {
+            for codec in [Codec::Raw, Codec::Delta, Codec::Flr3] {
                 let off = ExternalConfig {
                     overlap: false,
                     threads,
@@ -857,6 +882,74 @@ mod tests {
         assert_eq!(
             stats.bytes_spilled, stats.bytes_spilled_raw,
             "f32 must fall back to the raw codec"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn flr3_codec_matches_raw_and_falls_back_per_dtype() {
+        use crate::data::gen_u64;
+        let dir = std::env::temp_dir().join(format!("flims-flr3-eq-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = Rng::new(111);
+
+        fn case<T: ExtItem + PartialEq>(dir: &std::path::Path, data: &[T]) {
+            let base = ExternalConfig {
+                mem_budget_bytes: 4096 * T::WIRE_BYTES / 4,
+                fan_in: 4,
+                tmp_dir: Some(dir.to_path_buf()),
+                ..Default::default()
+            };
+            let (raw_out, _) = sort_vec(data, &base).unwrap();
+            for threads in [1usize, 4] {
+                let cfg = ExternalConfig { codec: Codec::Flr3, threads, ..base.clone() };
+                let (flr3_out, _) = sort_vec(data, &cfg).unwrap();
+                assert!(
+                    flr3_out == raw_out,
+                    "{:?} threads={threads}: flr3 output differs from raw",
+                    T::DTYPE
+                );
+            }
+        }
+
+        // Key-only dtypes take the real FLR3 path; kv/kv64 fall back to
+        // delta and f32 to raw — all must sort identically regardless.
+        case::<u32>(&dir, &gen_u32(&mut rng, 9000, Distribution::Uniform));
+        let zipf = Distribution::Zipf { s_x100: 150, n_ranks: 64 };
+        case::<u64>(&dir, &gen_u64(&mut rng, 9000, zipf));
+        case::<crate::key::Kv>(
+            &dir,
+            &gen_kv(&mut rng, 9000, Distribution::DupHeavy { alphabet: 5 }),
+        );
+        let f32s: Vec<crate::key::F32Key> = gen_u32(&mut rng, 9000, Distribution::Uniform)
+            .into_iter()
+            .map(|x| crate::key::F32Key::from_f32(x as f32 - 1e9))
+            .collect();
+        case::<crate::key::F32Key>(&dir, &f32s);
+
+        // Sorted-ish u32 keys → small per-block deltas → FLR3 beats raw.
+        let near: Vec<u32> = (0..20_000u32).map(|i| i.wrapping_mul(7) % 30_000).collect();
+        let cfg = ExternalConfig {
+            mem_budget_bytes: 4096,
+            fan_in: 4,
+            codec: Codec::Flr3,
+            tmp_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let (_, stats) = sort_vec(&near, &cfg).unwrap();
+        assert!(
+            stats.bytes_spilled < stats.bytes_spilled_raw,
+            "flr3 {} vs raw {}",
+            stats.bytes_spilled,
+            stats.bytes_spilled_raw
+        );
+        assert!(stats.codec_encode_us > 0 || stats.bytes_spilled == 0);
+
+        // f32 falls back to raw: byte accounting identical.
+        let (_, f32_stats) = sort_vec(&f32s, &cfg).unwrap();
+        assert_eq!(
+            f32_stats.bytes_spilled, f32_stats.bytes_spilled_raw,
+            "f32 must fall back to the raw codec under flr3"
         );
         std::fs::remove_dir_all(&dir).unwrap();
     }

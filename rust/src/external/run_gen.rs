@@ -128,6 +128,7 @@ impl<T: ExtItem> PendingSpill<T> {
         spill: &SpillManager,
         pool: Option<&WriterPool>,
         codec: Codec,
+        kernel: crate::flims::simd::MergeKernel,
         buf: Vec<T>,
         trace: &Trace,
     ) -> Result<Self> {
@@ -135,7 +136,7 @@ impl<T: ExtItem> PendingSpill<T> {
         let reserved = RUN_HEADER_BYTES + (buf.len() * T::WIRE_BYTES) as u64;
         spill.reserve(reserved)?;
         let started = (|| {
-            let writer = spill.create_run::<T>(codec)?;
+            let writer = spill.create_run_with::<T>(codec, kernel)?;
             let path = writer.path().to_path_buf();
             let mut dbw = DoubleBufWriter::spawn_with(writer, 1, pool)?;
             if let Err(e) = dbw.send(buf) {
@@ -293,7 +294,8 @@ fn generate_runs_serial<T: ExtItem>(
             if let Some(prev) = in_flight.take() {
                 prev.finish(spill, trace, ctx, emit)?;
             }
-            in_flight = Some(PendingSpill::start(spill, pool, codec, buf, trace)?);
+            in_flight =
+                Some(PendingSpill::start(spill, pool, codec, cfg.kernel, buf, trace)?);
         }
         if let Some(prev) = in_flight.take() {
             prev.finish(spill, trace, ctx, emit)?;
@@ -385,7 +387,9 @@ fn generate_runs_parallel<T: ExtItem>(
                     if let Some(prev) = in_flight.take() {
                         prev.finish(spill, trace, ctx, emit)?;
                     }
-                    in_flight = Some(PendingSpill::start(spill, pool, codec, buf, trace)?);
+                    in_flight = Some(PendingSpill::start(
+                        spill, pool, codec, kernel, buf, trace,
+                    )?);
                     next_write += 1;
                 }
             }

@@ -100,6 +100,17 @@ impl SpillManager {
     /// the *names* vary run-to-run — never the sorted output bytes,
     /// which depend on run order and contents alone.
     pub fn create_run<T: ExtItem>(&self, codec: Codec) -> Result<RunWriter<T>> {
+        self.create_run_with(codec, crate::flims::simd::MergeKernel::Auto)
+    }
+
+    /// [`create_run`](SpillManager::create_run) with an explicit
+    /// [`MergeKernel`](crate::flims::simd::MergeKernel) for codecs
+    /// whose encode loop dispatches on it (FLR3 bitpacking).
+    pub fn create_run_with<T: ExtItem>(
+        &self,
+        codec: Codec,
+        kernel: crate::flims::simd::MergeKernel,
+    ) -> Result<RunWriter<T>> {
         let seq = {
             let mut st = self.state();
             let seq = st.next_run;
@@ -107,7 +118,7 @@ impl SpillManager {
             seq
         };
         let path = self.dir.join(format!("run-{seq:06}.flr"));
-        RunWriter::create_with(&path, codec)
+        RunWriter::create_with_kernel(&path, codec, kernel)
     }
 
     fn headroom_locked(&self, st: &SpillState, upcoming_bytes: u64) -> Result<()> {

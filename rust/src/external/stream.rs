@@ -852,7 +852,7 @@ mod tests {
         let mut data = gen_u32(&mut rng, 20_000, Distribution::Uniform);
         data.sort_unstable_by(|a, b| b.cmp(a));
 
-        for codec in [Codec::Raw, Codec::Delta] {
+        for codec in [Codec::Raw, Codec::Delta, Codec::Flr3] {
             let sync_path = dir.join(format!("sync.{}", codec.name()));
             let mut w = RunWriter::create_with(&sync_path, codec).unwrap();
             for chunk in data.chunks(777) {
@@ -925,7 +925,7 @@ mod tests {
         // Many sequential runs through the same 2-worker pool: the whole
         // point of pooling — no per-run thread spawn — and the bytes
         // must match the dedicated-thread writer exactly.
-        for (i, codec) in [Codec::Raw, Codec::Delta, Codec::Raw, Codec::Delta]
+        for (i, codec) in [Codec::Raw, Codec::Delta, Codec::Flr3, Codec::Raw, Codec::Delta]
             .into_iter()
             .enumerate()
         {

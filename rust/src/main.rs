@@ -6,7 +6,7 @@
 //! flims sort     --n 1000000 [--dist uniform|zipf|dup] [--backend native|parallel|pjrt|external] [--w 16] [--chunk 128] [--kernel auto|scalar|simd]
 //! flims merge    --n 65536 [--w 16] [--kernel auto|scalar|simd]
 //! flims sortfile --input data.u32 [--output out.u32] [--dtype u32|u64|kv|kv64|f32]
-//!                [--codec raw|delta] [--overlap on|off] [--kernel auto|scalar|simd]
+//!                [--codec raw|delta|flr3] [--overlap on|off] [--kernel auto|scalar|simd]
 //!                [--budget-mb 64] [--fan-in 8] [--threads T] [--prefetch B] [--gen N]
 //!                [--trace out.trace.json]  # Chrome trace-event JSON of the sort
 //! flims trace                              # the paper's Table 1 example
@@ -28,7 +28,7 @@ use std::time::Instant;
 
 use flims::baselines::{radix_sort_desc, samplesort_desc};
 use flims::external;
-use flims::external::{Codec, Dtype, ExtItem, ExternalConfig};
+use flims::external::{parse_codec_arg, Dtype, ExtItem, ExternalConfig};
 use flims::config::{AppConfig, RawConfig};
 use flims::coordinator::{BatcherConfig, Router, Service};
 use flims::data::{gen_u32, gen_u64, Distribution};
@@ -159,7 +159,7 @@ fn print_help() {
                      [--config FILE]\n\
            merge     --n N [--w W] [--kernel auto|scalar|simd]\n\
            sortfile  --input F [--output F] [--dtype u32|u64|kv|kv64|f32]\n\
-                     [--codec raw|delta] [--overlap on|off] [--budget-mb M]\n\
+                     [--codec raw|delta|flr3] [--overlap on|off] [--budget-mb M]\n\
                      [--fan-in K] [--threads T] [--prefetch B]\n\
                      [--kernel auto|scalar|simd]\n\
                      [--trace F]   (Chrome trace-event JSON, for Perfetto)\n\
@@ -336,7 +336,7 @@ fn cmd_sortfile(f: &HashMap<String, String>) -> Result<(), String> {
         ext.dtype = Dtype::parse(d)?;
     }
     if let Some(c) = f.get("codec") {
-        ext.codec = Codec::parse(c)?;
+        ext.codec = parse_codec_arg(c)?;
     }
     if let Some(o) = f.get("overlap") {
         ext.overlap = external::parse_overlap(o)?;

@@ -1,4 +1,5 @@
-//! Corruption hardening for the `FLR1` (raw) and `FLR2` (delta+varint)
+//! Corruption hardening for the `FLR1` (raw), `FLR2` (delta+varint) and
+//! `FLR3` (frame-of-reference bitpack)
 //! spill-run formats: every byte-level mutation of a valid run file must
 //! surface as a clean `Err` on open or read — never a panic, never an
 //! infinite loop, never silently wrong data. Exercised exactly as the
@@ -10,7 +11,7 @@ use std::path::PathBuf;
 use flims::external::codec::Codec;
 use flims::external::format::{
     read_raw, write_raw, ExtItem, RunReader, RunWriter, RUN_HEADER_BYTES, RUN_MAGIC,
-    RUN_MAGIC_V2,
+    RUN_MAGIC_V2, RUN_MAGIC_V3,
 };
 use flims::key::{Kv, Kv64};
 
@@ -342,6 +343,246 @@ fn flr2_wrong_dtype_is_an_error_not_garbage() {
         Ok(())
     });
     assert!(res.is_err(), "Kv delta run must not decode as Kv64");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Write a valid 100-element `FLR3` u32 run and return (path, bytes).
+/// Two `write_block` calls → two bitpacked blocks, so mid-stream
+/// framing (and the cross-block descending check) is exercised.
+///
+/// Layout recap (docs/FORMATS.md): 12-byte run header, then per block
+/// `n:u32 | width:u8 | pad:[0;3] | base:u64` + `128·width` packed
+/// bytes.
+fn valid_flr3_run(dir: &PathBuf) -> (PathBuf, Vec<u8>) {
+    let path = dir.join("valid.flr3");
+    let data: Vec<u32> = (0..100u32).rev().map(|x| x * 3).collect();
+    let mut w = RunWriter::create_with(&path, Codec::Flr3).unwrap();
+    w.write_block(&data[..60]).unwrap();
+    w.write_block(&data[60..]).unwrap();
+    let run = w.finish().unwrap();
+    assert_eq!(run.elems, 100);
+    let bytes = std::fs::read(&path).unwrap();
+    assert_eq!(bytes.len() as u64, run.bytes);
+    (path, bytes)
+}
+
+/// Offsets of the two block headers in a [`valid_flr3_run`] file.
+fn flr3_block_offsets(bytes: &[u8]) -> (usize, usize) {
+    let hdr1 = RUN_HEADER_BYTES as usize;
+    let packed1 = 128 * bytes[hdr1 + 4] as usize;
+    (hdr1, hdr1 + 16 + packed1)
+}
+
+/// Fully drain an FLR3 reader, capped so a looping decode bug fails the
+/// test instead of hanging it.
+fn drain_flr3(path: &PathBuf) -> anyhow::Result<Vec<u32>> {
+    let mut r = RunReader::<u32>::open(path)?;
+    let mut out = Vec::new();
+    for _ in 0..10_000 {
+        if r.read_block(&mut out, 64)? == 0 {
+            return Ok(out);
+        }
+    }
+    panic!("flr3 reader looped past any plausible block count");
+}
+
+#[test]
+fn flr3_sanity_and_version_negotiation() {
+    let dir = test_dir("flr3-sane");
+    let (path, bytes) = valid_flr3_run(&dir);
+    assert_eq!(&bytes[..4], &RUN_MAGIC_V3);
+    let out = drain_flr3(&path).unwrap();
+    assert_eq!(out.len(), 100);
+    assert_eq!(out[0], 99 * 3);
+    assert_eq!(out[99], 0);
+    // FLR1 and FLR2 runs with identical content still open and agree —
+    // all three versions negotiate from the magic alone.
+    for codec in [Codec::Raw, Codec::Delta] {
+        let p = dir.join(format!("older.{}", codec.name()));
+        let mut w = RunWriter::create_with(&p, codec).unwrap();
+        w.write_block(&out).unwrap();
+        w.finish().unwrap();
+        let mut r = RunReader::<u32>::open(&p).unwrap();
+        let mut back = Vec::new();
+        while r.read_block(&mut back, 64).unwrap() > 0 {}
+        assert_eq!(back, out, "{codec:?}");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn flr3_truncated_header_and_magic_flips() {
+    let dir = test_dir("flr3-hdr");
+    let (path, bytes) = valid_flr3_run(&dir);
+    for keep in 0..RUN_HEADER_BYTES as usize {
+        std::fs::write(&path, &bytes[..keep]).unwrap();
+        assert!(RunReader::<u32>::open(&path).is_err(), "header cut to {keep} must not open");
+    }
+    for flip in 0..4 {
+        let mut mutated = bytes.clone();
+        mutated[flip] ^= 0xFF;
+        std::fs::write(&path, &mutated).unwrap();
+        let err = format!("{:#}", RunReader::<u32>::open(&path).unwrap_err());
+        assert!(err.contains("bad magic"), "flip={flip}: {err}");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn flr3_count_lies_are_errors() {
+    // The run header's element count lying in either direction.
+    let dir = test_dir("flr3-count");
+    let (path, bytes) = valid_flr3_run(&dir);
+    for claim in [0u64, 1, 59, 99, 101, 1 << 62, u64::MAX] {
+        let mut mutated = bytes.clone();
+        mutated[4..12].copy_from_slice(&claim.to_le_bytes());
+        std::fs::write(&path, &mutated).unwrap();
+        let res = drain_flr3(&path);
+        assert!(res.is_err(), "count={claim} must error, got {:?}", res.map(|v| v.len()));
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn flr3_block_count_lies_are_errors() {
+    // A *block* header's record count lying: zero, over the run's
+    // remaining records, over the 1024 block capacity, and absurd.
+    let dir = test_dir("flr3-blk-n");
+    let (path, bytes) = valid_flr3_run(&dir);
+    let (hdr1, _) = flr3_block_offsets(&bytes);
+    for n in [0u32, 101, 2000, u32::MAX] {
+        let mut mutated = bytes.clone();
+        mutated[hdr1..hdr1 + 4].copy_from_slice(&n.to_le_bytes());
+        std::fs::write(&path, &mutated).unwrap();
+        let err = format!("{:#}", drain_flr3(&path).unwrap_err());
+        assert!(err.contains("corrupt run"), "n={n}: {err}");
+    }
+    // Understating n leaves records unaccounted for at EOF.
+    let mut mutated = bytes.clone();
+    mutated[hdr1..hdr1 + 4].copy_from_slice(&50u32.to_le_bytes());
+    std::fs::write(&path, &mutated).unwrap();
+    let err = format!("{:#}", drain_flr3(&path).unwrap_err());
+    assert!(err.contains("truncated run"), "n=50: {err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn flr3_out_of_range_widths_are_errors() {
+    let dir = test_dir("flr3-width");
+    let (path, bytes) = valid_flr3_run(&dir);
+    let (hdr1, _) = flr3_block_offsets(&bytes);
+    // u32 keys allow at most 32 delta bits: anything above is rejected
+    // before any packed bytes are read.
+    for width in [33u8, 64, 255] {
+        let mut mutated = bytes.clone();
+        mutated[hdr1 + 4] = width;
+        std::fs::write(&path, &mutated).unwrap();
+        let err = format!("{:#}", drain_flr3(&path).unwrap_err());
+        assert!(err.contains("corrupt run (block claims delta width"), "width={width}: {err}");
+    }
+    // An *understated* width misframes every byte after it; whatever the
+    // misparse stumbles on, it must be a clean error (capped drain), not
+    // a panic or silently wrong data.
+    let mut mutated = bytes.clone();
+    mutated[hdr1 + 4] = 1;
+    std::fs::write(&path, &mutated).unwrap();
+    assert!(drain_flr3(&path).is_err(), "understated width must not decode");
+    // Nonzero header pad bytes are rejected too — they'd otherwise be a
+    // silent place to hide garbage.
+    for pad in [5usize, 6, 7] {
+        let mut mutated = bytes.clone();
+        mutated[hdr1 + pad] = 0xAB;
+        std::fs::write(&path, &mutated).unwrap();
+        let err = format!("{:#}", drain_flr3(&path).unwrap_err());
+        assert!(err.contains("nonzero pad"), "pad byte {pad}: {err}");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn flr3_mutated_bases_are_errors() {
+    // Frame-of-reference bases are load-bearing: the reader enforces
+    // that decoded keys stay descending across blocks, so a mutated
+    // base that breaks the run's order is caught instead of yielding
+    // silently wrong data.
+    let dir = test_dir("flr3-base");
+    let (path, bytes) = valid_flr3_run(&dir);
+    let (hdr1, hdr2) = flr3_block_offsets(&bytes);
+    // Inflate the second block's base: its first key jumps above the
+    // first block's last key.
+    let base2 = u64::from_le_bytes(bytes[hdr2 + 8..hdr2 + 16].try_into().unwrap());
+    let mut mutated = bytes.clone();
+    mutated[hdr2 + 8..hdr2 + 16].copy_from_slice(&(base2 + 1000).to_le_bytes());
+    std::fs::write(&path, &mutated).unwrap();
+    let err = format!("{:#}", drain_flr3(&path).unwrap_err());
+    assert!(err.contains("keys not descending"), "inflated base: {err}");
+    // Swap the two blocks' bases — same effect from the other side.
+    let base1 = u64::from_le_bytes(bytes[hdr1 + 8..hdr1 + 16].try_into().unwrap());
+    let mut swapped = bytes.clone();
+    swapped[hdr1 + 8..hdr1 + 16].copy_from_slice(&base2.to_le_bytes());
+    swapped[hdr2 + 8..hdr2 + 16].copy_from_slice(&base1.to_le_bytes());
+    std::fs::write(&path, &swapped).unwrap();
+    let err = format!("{:#}", drain_flr3(&path).unwrap_err());
+    assert!(err.contains("keys not descending"), "swapped bases: {err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn flr3_truncated_blocks_and_trailing_garbage() {
+    let dir = test_dir("flr3-cut");
+    let (path, bytes) = valid_flr3_run(&dir);
+    let (_, hdr2) = flr3_block_offsets(&bytes);
+    let block2_len = bytes.len() - hdr2;
+    // Cuts: one byte, mid packed words, a whole word, mid the second
+    // block's header, and the entire second block.
+    for cut in [1usize, 7, 8, 100, block2_len - 3, block2_len] {
+        std::fs::write(&path, &bytes[..bytes.len() - cut]).unwrap();
+        let err = format!("{:#}", drain_flr3(&path).unwrap_err());
+        assert!(
+            err.contains("truncated run") || err.contains("corrupt run"),
+            "cut={cut}: {err}"
+        );
+    }
+    // Trailing garbage after the last block is caught at EOF.
+    let mut grown = bytes.clone();
+    grown.extend_from_slice(&[0xAB; 3]);
+    std::fs::write(&path, &grown).unwrap();
+    let err = format!("{:#}", drain_flr3(&path).unwrap_err());
+    assert!(err.contains("trailing"), "{err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn flr3_wrong_dtype_is_an_error_not_garbage() {
+    // FLR3 blocks carry bare u64 key bits, so a u32 run read as u64 is
+    // legitimately the same numeric keys (the format is key-portable).
+    // The failure modes to pin are the other two: payload dtypes must
+    // be rejected at *open* — the decode path has no payload bytes to
+    // hand `from_parts`, so letting it proceed would panic — and a run
+    // whose delta widths exceed the narrower dtype's key range must
+    // fail the width check, not decode garbage.
+    let dir = test_dir("flr3-dtype");
+    let (path, _) = valid_flr3_run(&dir);
+    for err in [
+        format!("{:#}", RunReader::<Kv>::open(&path).unwrap_err()),
+        format!("{:#}", RunReader::<Kv64>::open(&path).unwrap_err()),
+    ] {
+        assert!(err.contains("keys only"), "{err}");
+    }
+    let mut as_u64 = Vec::new();
+    let mut r = RunReader::<u64>::open(&path).unwrap();
+    while r.read_block(&mut as_u64, 16).unwrap() > 0 {}
+    assert_eq!(as_u64, (0..100u64).rev().map(|x| x * 3).collect::<Vec<_>>());
+
+    // u64 run with 41-bit deltas read back as u32: the per-block width
+    // check fires before any packed bytes are interpreted.
+    let wide = dir.join("wide.flr3");
+    let keys: Vec<u64> = (0..10u64).rev().map(|x| x << 40).collect();
+    let mut w = RunWriter::create_with(&wide, Codec::Flr3).unwrap();
+    w.write_block(&keys).unwrap();
+    w.finish().unwrap();
+    let err = format!("{:#}", drain_flr3(&wide).unwrap_err());
+    assert!(err.contains("corrupt run (block claims delta width"), "{err}");
     std::fs::remove_dir_all(&dir).unwrap();
 }
 

@@ -156,8 +156,8 @@ fn parallel_sort_equivalence() {
 }
 
 /// External equivalence: kernel {scalar, simd} × threads {1, 4} ×
-/// overlap {off, on} × codec {raw, delta} must yield one identical
-/// output (and identical spill shape) per dtype.
+/// overlap {off, on} × codec {raw, delta, flr3} must yield one
+/// identical output (and identical spill shape) per dtype.
 fn external_case<T: ExtItem + PartialEq + std::fmt::Debug>(data: &[T], tag: &str) {
     let tiny = ExternalConfig {
         mem_budget_bytes: 1024 * T::WIRE_BYTES, // 1024-element runs
@@ -166,7 +166,7 @@ fn external_case<T: ExtItem + PartialEq + std::fmt::Debug>(data: &[T], tag: &str
     };
     let mut reference: Option<(Vec<T>, u64, u64)> = None;
     for overlap in [false, true] {
-        for codec in [Codec::Raw, Codec::Delta] {
+        for codec in [Codec::Raw, Codec::Delta, Codec::Flr3] {
             for threads in [1usize, 4] {
                 for kernel in [MergeKernel::Scalar, MergeKernel::Simd] {
                     let cfg =
