@@ -12,11 +12,14 @@
 
 use std::time::Duration;
 
-use flims::data::{gen_u32, gen_u64, Distribution};
+use flims::data::{gen_i32, gen_i64, gen_kv, gen_kv64, gen_u32, gen_u64, Distribution};
+use flims::external::Dtype;
 use flims::flims::butterfly::butterfly_desc_w;
 use flims::flims::chunk_sort::{sort_chunks_columnar, sort_chunks_desc};
 use flims::flims::lanes::{merge_desc_into, merge_desc_w, merge_flimsj_w_slice};
 use flims::flims::simd::{merge_desc_kernel_slice, MergeKernel, SimdMergeable};
+use flims::flims::{merge_stable_into, merge_stable_simd, StableSimdMerge};
+use flims::key::Item;
 use flims::hw::{run_stream, FlimsCycle, SimConfig};
 use flims::util::bench::{bench, black_box, fmt_ns, write_json_report, BenchArgs, BenchResult};
 use flims::util::rng::Rng;
@@ -64,6 +67,75 @@ fn kernel_cell<T: SimdMergeable>(
     scalar.name = format!("kernel_{label}_w{w}_scalar");
     simd.name = format!("kernel_{label}_w{w}_simd");
     [scalar, simd]
+}
+
+/// The payload-record analogue of [`kernel_cell`]: merge (key, payload)
+/// records on the tagged scalar tier vs the SIMD key–index tier, plus a
+/// third row splitting out the payload-gather cost — the SIMD stable
+/// merge is "merge bare keys with SIMD, then gather payloads through
+/// the permutation", so gather ≈ stable-simd minus a bare-key merge of
+/// the same keys. The perf assertion is tier-aware: on CPUs where this
+/// dtype's effective kernel is scalar, both runs take the tagged
+/// scalar path and trivially tie.
+fn stable_cell<T>(
+    label: &str,
+    dtype: Dtype,
+    a: &[T],
+    b: &[T],
+    w: usize,
+    smoke: bool,
+) -> [BenchResult; 3]
+where
+    T: StableSimdMerge,
+    T::K: SimdMergeable,
+{
+    let budget = Duration::from_millis(if smoke { 30 } else { 400 });
+    let total = a.len() + b.len();
+    let mut dst: Vec<T> = Vec::with_capacity(total);
+    let mut scalar = bench("scalar", budget, || {
+        dst.clear();
+        merge_stable_into(black_box(a), black_box(b), w, &mut dst);
+        black_box(dst[0].key());
+    });
+    let mut simd = bench("simd", budget, || {
+        dst.clear();
+        merge_stable_simd(black_box(a), black_box(b), w, MergeKernel::Simd, &mut dst);
+        black_box(dst[0].key());
+    });
+    // Bare keys through the unsigned kernel: the SIMD stable merge's
+    // cost minus this is what the payload gather (and index tagging)
+    // adds on top.
+    let ka: Vec<T::K> = a.iter().map(|x| x.key()).collect();
+    let kb: Vec<T::K> = b.iter().map(|x| x.key()).collect();
+    let mut kdst = vec![T::K::SENTINEL; total];
+    let bare = bench("bare-key", budget, || {
+        merge_desc_kernel_slice(black_box(&ka), black_box(&kb), w, MergeKernel::Simd, &mut kdst);
+        black_box(kdst[0]);
+    });
+    let effective = dtype.effective_kernel(MergeKernel::Simd);
+    println!(
+        "{label:<24} W={w:<3} scalar {:>8.1} M rec/s   simd {:>8.1} M rec/s   \
+         ({:.2}x, {effective}) gather {:.1} µs",
+        scalar.mitems_per_sec(total),
+        simd.mitems_per_sec(total),
+        scalar.median_ns / simd.median_ns,
+        (simd.median_ns - bare.median_ns).max(0.0) / 1e3,
+    );
+    assert!(
+        smoke || simd.median_ns <= scalar.median_ns * 1.05,
+        "{label} W={w} ({effective}): stable simd {:.0} ns/iter vs scalar {:.0} ns/iter — \
+         the payload tier regressed past the 5% noise allowance",
+        simd.median_ns,
+        scalar.median_ns,
+    );
+    scalar.name = format!("kernel_{label}_w{w}_scalar");
+    simd.name = format!("kernel_{label}_w{w}_simd");
+    let mut gather = bare.clone();
+    gather.name = format!("kernel_{label}_w{w}_payload_gather");
+    gather.median_ns = (simd.median_ns - bare.median_ns).max(0.0);
+    gather.mean_ns = (simd.mean_ns - bare.mean_ns).max(0.0);
+    gather.min_ns = (simd.min_ns - bare.min_ns).max(0.0);
+    [scalar, simd, gather]
 }
 
 fn main() {
@@ -164,7 +236,8 @@ fn main() {
     );
     rows.push(r);
 
-    // Scalar-vs-SIMD kernel sweep: u32/u64 × uniform/zipf × W ∈ {4,8,16}.
+    // Scalar-vs-SIMD kernel sweep: u32/u64 × uniform/zipf × W ∈ {4,8,16},
+    // plus the signed bias kernels (i32/i64) at W ∈ {4,8}.
     println!("\n== kernel sweep: scalar vs explicit SIMD (2 x 2^19) ==\n");
     let n = if args.smoke { 1usize << 15 } else { 1usize << 19 };
     for (dist, dist_name) in [
@@ -182,6 +255,55 @@ fn main() {
         for w in [4usize, 8, 16] {
             rows.extend(kernel_cell(&format!("u32/{dist_name}"), &a32, &b32, w, args.smoke));
             rows.extend(kernel_cell(&format!("u64/{dist_name}"), &a64, &b64, w, args.smoke));
+        }
+        let mut ai32 = gen_i32(&mut rng, n, dist);
+        let mut bi32 = gen_i32(&mut rng, n, dist);
+        ai32.sort_unstable_by(|x, y| y.cmp(x));
+        bi32.sort_unstable_by(|x, y| y.cmp(x));
+        let mut ai64 = gen_i64(&mut rng, n, dist);
+        let mut bi64 = gen_i64(&mut rng, n, dist);
+        ai64.sort_unstable_by(|x, y| y.cmp(x));
+        bi64.sort_unstable_by(|x, y| y.cmp(x));
+        for w in [4usize, 8] {
+            rows.extend(kernel_cell(&format!("i32/{dist_name}"), &ai32, &bi32, w, args.smoke));
+            rows.extend(kernel_cell(&format!("i64/{dist_name}"), &ai64, &bi64, w, args.smoke));
+        }
+    }
+
+    // Payload records: the tagged scalar stable merge vs the SIMD
+    // key–index tier, with the payload-gather cost split out.
+    println!("\n== payload records: stable scalar vs SIMD key-index (2 x 2^19) ==\n");
+    for (dist, dist_name) in [
+        (Distribution::Uniform, "uniform"),
+        (Distribution::Zipf { s_x100: 120, n_ranks: 1 << 12 }, "zipf"),
+    ] {
+        let mut akv = gen_kv(&mut rng, n, dist);
+        let mut bkv = gen_kv(&mut rng, n, dist);
+        // Stable sort: tied keys keep their generation order, as the
+        // run-sort phase guarantees for real inputs.
+        akv.sort_by(|x, y| y.key().cmp(&x.key()));
+        bkv.sort_by(|x, y| y.key().cmp(&x.key()));
+        let mut akv64 = gen_kv64(&mut rng, n, dist);
+        let mut bkv64 = gen_kv64(&mut rng, n, dist);
+        akv64.sort_by(|x, y| y.key().cmp(&x.key()));
+        bkv64.sort_by(|x, y| y.key().cmp(&x.key()));
+        for w in [4usize, 8] {
+            rows.extend(stable_cell(
+                &format!("kv/{dist_name}"),
+                Dtype::Kv,
+                &akv,
+                &bkv,
+                w,
+                args.smoke,
+            ));
+            rows.extend(stable_cell(
+                &format!("kv64/{dist_name}"),
+                Dtype::Kv64,
+                &akv64,
+                &bkv64,
+                w,
+                args.smoke,
+            ));
         }
     }
 

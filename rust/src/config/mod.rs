@@ -6,7 +6,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::external::{parse_codec_arg, Dtype, ExternalConfig};
+use crate::external::{parse_codec_arg, parse_dtype_arg, Dtype, ExternalConfig};
 use crate::flims::simd::MergeKernel;
 
 /// Parsed configuration: section → key → raw value string.
@@ -222,7 +222,8 @@ impl AppConfig {
                 .map_err(|e| format!("external.overlap: {e}"))?;
         }
         if let Some(v) = raw.get("external", "dtype") {
-            self.external.dtype = Dtype::parse(v)?;
+            // Same parser (and error wording) as the CLI and protocol.
+            self.external.dtype = parse_dtype_arg(v)?;
         }
         if let Some(v) = raw.get("external", "codec") {
             // One parser for config/CLI/protocol: the "codec argument:"
@@ -473,9 +474,10 @@ batch_max = 16
         let cfg = AppConfig::default();
         assert_eq!(cfg.external.threads, 1);
         assert_eq!(cfg.external.prefetch_blocks, 2);
-        assert_eq!(cfg.external.dtype, Dtype::U32);
-        // The codec default honours FLIMS_CODEC (the test-codec-flr3 CI
-        // lane), so compare against the env-aware default, not Raw.
+        // The dtype and codec defaults honour FLIMS_DTYPE/FLIMS_CODEC
+        // (the kv64 and flr3 CI lanes), so compare against the
+        // env-aware defaults, not the literal U32/Raw.
+        assert_eq!(cfg.external.dtype, ExternalConfig::default().dtype);
         assert_eq!(cfg.external.codec, ExternalConfig::default().codec);
     }
 

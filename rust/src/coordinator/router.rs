@@ -250,12 +250,14 @@ impl Router {
         (e, dir)
     }
 
-    /// The exposition label set an external sort ran under.
+    /// The exposition label set an external sort ran under. The kernel
+    /// label is the *effective* tier for this dtype (what its merges
+    /// actually ran on), not the CPU-wide resolved ceiling.
     fn labels_for(ext: &ExternalConfig, dtype: Dtype) -> SortLabels {
         SortLabels {
             dtype: dtype.name(),
             codec: ext.codec_for(dtype).name(),
-            kernel: ext.kernel.resolved_name(),
+            kernel: dtype.effective_kernel(ext.kernel),
             overlap: ext.overlap,
         }
     }
@@ -419,6 +421,16 @@ mod tests {
         Router::new(AppConfig::default(), None)
     }
 
+    /// `AppConfig::default()` with the external dtype pinned to u32:
+    /// tests below write u32 datasets and pass `dtype: None`, so the
+    /// `FLIMS_DTYPE` CI lane must not change the record type under
+    /// them.
+    fn u32_cfg() -> AppConfig {
+        let mut cfg = AppConfig::default();
+        cfg.external.dtype = Dtype::U32;
+        cfg
+    }
+
     #[test]
     fn native_sort_u32() {
         let mut rng = Rng::new(301);
@@ -496,7 +508,7 @@ mod tests {
         let v = gen_u32(&mut rng, 5000, Distribution::Uniform);
         crate::external::format::write_raw(&input, &v).unwrap();
 
-        let mut cfg = AppConfig::default();
+        let mut cfg = u32_cfg();
         cfg.external.mem_budget_bytes = 4096;
         let r = Router::new(cfg, None);
         let (out_path, stats) =
@@ -519,7 +531,7 @@ mod tests {
         let v: Vec<u32> = (0..20_000u32).map(|i| i ^ 7).collect();
         crate::external::format::write_raw(&input, &v).unwrap();
 
-        let mut cfg = AppConfig::default();
+        let mut cfg = u32_cfg();
         cfg.external.mem_budget_bytes = 4096;
         let r = Router::new(cfg, None);
         let (out_path, stats) =
@@ -575,7 +587,7 @@ mod tests {
         let mut rng = Rng::new(306);
         let v = gen_u32(&mut rng, 20_000, Distribution::Uniform);
 
-        let mut cfg = AppConfig::default();
+        let mut cfg = u32_cfg();
         cfg.external.mem_budget_bytes = 4096; // 20 runs, fan-in 8 → 2 passes
         cfg.external.fan_in = 4;
         let r = Router::new(cfg, None);
@@ -608,7 +620,7 @@ mod tests {
         let mut rng = Rng::new(307);
         let v = gen_u32(&mut rng, 20_000, Distribution::Uniform);
 
-        let mut cfg = AppConfig::default();
+        let mut cfg = u32_cfg();
         cfg.external.mem_budget_bytes = 4096;
         let r = Router::new(cfg, None);
         let mut outputs = Vec::new();
@@ -655,7 +667,7 @@ mod tests {
         let v = gen_u32(&mut rng, 10_000, Distribution::Uniform);
         crate::external::format::write_raw(&input, &v).unwrap();
 
-        let mut cfg = AppConfig::default();
+        let mut cfg = u32_cfg();
         cfg.external.mem_budget_bytes = 4096;
         let r = Router::new(cfg, None);
         let trace_path = dir.join("sort.trace.json");
@@ -771,6 +783,7 @@ mod tests {
                 mem_budget_bytes: 8192, // carved to 4096 at max_jobs 2
                 fan_in: 4,
                 tmp_dir: Some(dir.join("spill")),
+                dtype: Dtype::U32, // u32 datasets below, whatever FLIMS_DTYPE says
                 ..ExternalConfig::default()
             },
             ..AppConfig::default()

@@ -212,8 +212,10 @@ impl Service {
                         None => ("", path),
                     };
                     if let Some(name) = tail.strip_prefix("dtype=") {
-                        let d = crate::external::Dtype::parse(name)
-                            .map_err(|e| anyhow!("dtype argument: {e}"))?;
+                        // parse_dtype_arg already says "dtype argument:"
+                        // — the same wording as the CLI and config paths.
+                        let d = crate::external::parse_dtype_arg(name)
+                            .map_err(|e| anyhow!("{e}"))?;
                         if dtype.replace(d).is_some() {
                             bail!("dtype argument: given more than once");
                         }
@@ -270,11 +272,15 @@ impl Service {
                         self.router.kernel_name()
                     );
                     if let Some((labels, stats)) = self.router.last_sort() {
+                        // `kernel=` here is the *effective* tier the
+                        // last sort's dtype merged on — the header's
+                        // `kernel=` above is the CPU-wide resolution.
                         out.push_str(&format!(
-                            " last[dtype={} codec={} overlap={} wall_us={} overlap_us={} \
-                             codec_enc_us={} codec_dec_us={}]",
+                            " last[dtype={} codec={} kernel={} overlap={} wall_us={} \
+                             overlap_us={} codec_enc_us={} codec_dec_us={}]",
                             labels.dtype,
                             labels.codec,
+                            labels.kernel,
                             if labels.overlap { "on" } else { "off" },
                             stats.wall_us,
                             stats.overlap_us,
@@ -439,7 +445,12 @@ mod tests {
     use crate::config::AppConfig;
 
     fn svc() -> Service {
-        let router = Arc::new(Router::new(AppConfig::default(), None));
+        // Pin the default dtype to u32: these tests sort u32 datasets
+        // without a `dtype=` argument, and the FLIMS_DTYPE CI lane
+        // must not change the record type under them.
+        let mut app = AppConfig::default();
+        app.external.dtype = crate::external::Dtype::U32;
+        let router = Arc::new(Router::new(app, None));
         Service::new(router, BatcherConfig { max_batch: 2, window: Duration::from_micros(1) })
     }
 
@@ -491,6 +502,7 @@ mod tests {
         // Tight budget so the request really spills through the kernels.
         let mut app = crate::config::AppConfig::default();
         app.external.mem_budget_bytes = 4096;
+        app.external.dtype = crate::external::Dtype::U32;
         let router = Arc::new(Router::new(app, None));
         let s = Service::new(
             router,
@@ -588,6 +600,15 @@ mod tests {
         let stats = s.handle_line("stats");
         assert!(stats.contains(" last[dtype=u32 codec="), "{stats}");
         assert!(stats.contains(" wall_us="), "{stats}");
+        // Both the global resolved kernel and the last sort's effective
+        // kernel ride the line.
+        assert_eq!(stats.matches(" kernel=").count(), 2, "{stats}");
+        let last = stats.split(" last[").nth(1).unwrap();
+        let eff = last.split(" kernel=").nth(1).unwrap().split(' ').next().unwrap();
+        assert!(
+            ["scalar", "simd-sse2", "simd-avx2", "simd-neon"].contains(&eff),
+            "{stats}"
+        );
 
         assert_eq!(s.handle_line("stats reset"), "ok reset");
         let stats = s.handle_line("stats");
@@ -610,6 +631,7 @@ mod tests {
         // Tight budget so the traced request really spills.
         let mut app = crate::config::AppConfig::default();
         app.external.mem_budget_bytes = 4096;
+        app.external.dtype = crate::external::Dtype::U32;
         let router = Arc::new(Router::new(app, None));
         let s = Service::new(
             router,
@@ -742,6 +764,7 @@ mod tests {
         // Tight budget so the request really spills through the codec.
         let mut app = crate::config::AppConfig::default();
         app.external.mem_budget_bytes = 4096;
+        app.external.dtype = crate::external::Dtype::U32;
         let router = Arc::new(Router::new(app, None));
         let s = Service::new(
             router,
@@ -799,6 +822,7 @@ mod tests {
         let mut app = crate::config::AppConfig::default();
         app.external.mem_budget_bytes = 4096;
         app.external.fan_in = 4;
+        app.external.dtype = crate::external::Dtype::U32;
         let router = Arc::new(Router::new(app, None));
         let s = Service::new(
             router,
@@ -975,6 +999,7 @@ mod tests {
         // job with nonzero per-job progress).
         let mut app = crate::config::AppConfig::default();
         app.external.mem_budget_bytes = 4096;
+        app.external.dtype = crate::external::Dtype::U32;
         let router = Arc::new(Router::new(app, None));
         let s = Service::new(
             router,

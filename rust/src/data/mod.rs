@@ -5,7 +5,7 @@
 //! (§6 tie-record), and pre-sorted sublists feeding the mergers. All
 //! generators are deterministic in the seed.
 
-use crate::key::{Item, Kv};
+use crate::key::{Item, Kv, Kv64};
 use crate::util::rng::Rng;
 
 /// Data distribution shapes used across benches and tests.
@@ -87,6 +87,19 @@ pub fn gen_u64(rng: &mut Rng, n: usize, dist: Distribution) -> Vec<u64> {
     }
 }
 
+/// Generate `n` i32 keys: the u32 draws mapped through the inverse
+/// sign-flip bias, so uniform covers the full signed range (negative
+/// and positive halves equally) and skewed distributions keep their
+/// shape around the low end of the signed line.
+pub fn gen_i32(rng: &mut Rng, n: usize, dist: Distribution) -> Vec<i32> {
+    gen_u32(rng, n, dist).into_iter().map(|x| (x ^ 0x8000_0000) as i32).collect()
+}
+
+/// Generate `n` i64 keys (see [`gen_i32`]).
+pub fn gen_i64(rng: &mut Rng, n: usize, dist: Distribution) -> Vec<i64> {
+    gen_u64(rng, n, dist).into_iter().map(|x| (x ^ (1 << 63)) as i64).collect()
+}
+
 /// Key-value records with payload = original index, so payload integrity
 /// and stable order are checkable after any merge/sort.
 pub fn gen_kv(rng: &mut Rng, n: usize, dist: Distribution) -> Vec<Kv> {
@@ -94,6 +107,15 @@ pub fn gen_kv(rng: &mut Rng, n: usize, dist: Distribution) -> Vec<Kv> {
         .into_iter()
         .enumerate()
         .map(|(i, key)| Kv::new(key, i as u32))
+        .collect()
+}
+
+/// Wide key-value records with payload = original index (see [`gen_kv`]).
+pub fn gen_kv64(rng: &mut Rng, n: usize, dist: Distribution) -> Vec<Kv64> {
+    gen_u64(rng, n, dist)
+        .into_iter()
+        .enumerate()
+        .map(|(i, key)| Kv64 { key, val: i as u64 })
         .collect()
 }
 
@@ -205,6 +227,18 @@ mod tests {
         let v = gen_u32(&mut Rng::new(5), 64, Distribution::Runs { run: 16 });
         for c in v.chunks(16) {
             assert!(is_sorted_desc(c));
+        }
+    }
+
+    #[test]
+    fn signed_generators_cover_both_signs() {
+        let v = gen_i32(&mut Rng::new(9), 1000, Distribution::Uniform);
+        assert!(v.iter().any(|&x| x < 0) && v.iter().any(|&x| x >= 0));
+        let v = gen_i64(&mut Rng::new(9), 1000, Distribution::Uniform);
+        assert!(v.iter().any(|&x| x < 0) && v.iter().any(|&x| x >= 0));
+        let kv = gen_kv64(&mut Rng::new(10), 50, Distribution::Uniform);
+        for (i, r) in kv.iter().enumerate() {
+            assert_eq!(r.val, i as u64);
         }
     }
 

@@ -362,16 +362,22 @@ mod tests {
 
     #[test]
     fn flr3_fallback_matrix() {
-        // Plain integer keys honour the request …
+        // Plain integer keys honour the request — signed included:
+        // `key_bits` is the order-preserving biased unsigned domain, so
+        // FLR2/FLR3 delta arithmetic works on signed runs unchanged.
         assert_eq!(Codec::Flr3.effective_for(Dtype::U32), Codec::Flr3);
         assert_eq!(Codec::Flr3.effective_for(Dtype::U64), Codec::Flr3);
+        assert_eq!(Codec::Flr3.effective_for(Dtype::I32), Codec::Flr3);
+        assert_eq!(Codec::Flr3.effective_for(Dtype::I64), Codec::Flr3);
+        assert_eq!(Codec::Delta.effective_for(Dtype::I32), Codec::Delta);
+        assert_eq!(Codec::Delta.effective_for(Dtype::I64), Codec::Delta);
         // … f32 drops to raw like delta does …
         assert_eq!(Codec::Flr3.effective_for(Dtype::F32), Codec::Raw);
         // … and payload records keep compressing via FLR2.
         assert_eq!(Codec::Flr3.effective_for(Dtype::Kv), Codec::Delta);
         assert_eq!(Codec::Flr3.effective_for(Dtype::Kv64), Codec::Delta);
         // Raw is always honoured.
-        for d in [Dtype::U32, Dtype::U64, Dtype::F32, Dtype::Kv, Dtype::Kv64] {
+        for d in Dtype::ALL {
             assert_eq!(Codec::Raw.effective_for(d), Codec::Raw);
         }
     }

@@ -42,9 +42,9 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::flims::simd::{merge_desc_kernel, MergeKernel};
+use crate::flims::simd::{merge_desc_kernel, MergeKernel, SimdMergeable};
 use crate::flims::sort::{sort_desc_with, SortConfig};
-use crate::flims::stable::{merge_stable_into, sort_stable_desc};
+use crate::flims::stable::{merge_stable_simd, sort_stable_desc_with};
 use crate::key::{F32Key, Item, Kv, Kv64};
 
 use super::codec::{
@@ -70,6 +70,10 @@ pub enum Dtype {
     U32,
     /// Plain 64-bit keys.
     U64,
+    /// Signed 32-bit keys (sign-flip bias kernels on the SIMD tier).
+    I32,
+    /// Signed 64-bit keys (sign-flip bias kernels on the SIMD tier).
+    I64,
     /// 32-bit key + 32-bit payload records.
     Kv,
     /// 64-bit key + 64-bit payload records.
@@ -79,20 +83,28 @@ pub enum Dtype {
 }
 
 impl Dtype {
-    /// Parse a dtype name (`u32` | `u64` | `kv` | `kv64` | `f32`).
+    /// Every dtype, in knob-spelling order — the single source of truth
+    /// for "what dtypes exist" across config, CLI, and protocol.
+    pub const ALL: [Dtype; 7] = [
+        Dtype::U32,
+        Dtype::U64,
+        Dtype::I32,
+        Dtype::I64,
+        Dtype::Kv,
+        Dtype::Kv64,
+        Dtype::F32,
+    ];
+
+    /// The knob spellings of [`ALL`](Dtype::ALL), `|`-joined — what parse
+    /// errors and help text enumerate.
+    pub const ALL_NAMES: &'static str = "u32|u64|i32|i64|kv|kv64|f32";
+
+    /// Parse a dtype name (one of [`ALL_NAMES`](Dtype::ALL_NAMES)).
     pub fn parse(s: &str) -> Result<Self, String> {
-        Ok(match s {
-            "u32" => Dtype::U32,
-            "u64" => Dtype::U64,
-            "kv" => Dtype::Kv,
-            "kv64" => Dtype::Kv64,
-            "f32" => Dtype::F32,
-            other => {
-                return Err(format!(
-                    "unknown dtype '{other}' (expected u32|u64|kv|kv64|f32)"
-                ))
-            }
-        })
+        Dtype::ALL
+            .into_iter()
+            .find(|d| d.name() == s)
+            .ok_or_else(|| format!("unknown dtype '{s}' (expected {})", Dtype::ALL_NAMES))
     }
 
     /// The knob spelling of this dtype.
@@ -100,6 +112,8 @@ impl Dtype {
         match self {
             Dtype::U32 => "u32",
             Dtype::U64 => "u64",
+            Dtype::I32 => "i32",
+            Dtype::I64 => "i64",
             Dtype::Kv => "kv",
             Dtype::Kv64 => "kv64",
             Dtype::F32 => "f32",
@@ -109,11 +123,40 @@ impl Dtype {
     /// Bytes per record on disk.
     pub fn wire_bytes(self) -> usize {
         match self {
-            Dtype::U32 | Dtype::F32 => 4,
-            Dtype::U64 | Dtype::Kv => 8,
+            Dtype::U32 | Dtype::I32 | Dtype::F32 => 4,
+            Dtype::U64 | Dtype::I64 | Dtype::Kv => 8,
             Dtype::Kv64 => 16,
         }
     }
+
+    /// The kernel tier this dtype's merges *actually* run on under the
+    /// given knob — what the `stats` line, sortfile report, and
+    /// `flims_sorts_total{kernel=…}` label surface. Narrower than
+    /// [`MergeKernel::resolved_name`], which is the CPU ceiling: a dtype
+    /// whose lane width has no kernel on this CPU (e.g. 64-bit lanes
+    /// without AVX2) reports `scalar` even when the knob says auto/simd.
+    pub fn effective_kernel(self, kernel: MergeKernel) -> &'static str {
+        if !kernel.wants_simd() {
+            return "scalar";
+        }
+        match self {
+            // 32-bit lanes (f32 rides them as order-preserving bits;
+            // i32 through the sign-flip bias wrappers).
+            Dtype::U32 | Dtype::I32 | Dtype::F32 => <u32 as SimdMergeable>::simd_tier(),
+            // 64-bit lanes: i64 via bias wrappers; Kv packs
+            // (key, rank) into u64 lanes, Kv64 merges bare u64 keys
+            // then gathers payloads.
+            Dtype::U64 | Dtype::I64 | Dtype::Kv | Dtype::Kv64 => {
+                <u64 as SimdMergeable>::simd_tier()
+            }
+        }
+    }
+}
+
+/// [`Dtype::parse`] with the argument-position error prefix shared by
+/// the config, CLI, and protocol surfaces.
+pub fn parse_dtype_arg(s: &str) -> Result<Dtype, String> {
+    Dtype::parse(s).map_err(|e| format!("dtype argument: {e}"))
 }
 
 /// A record the external sort can spill, merge, and stream: an [`Item`]
@@ -149,8 +192,10 @@ pub trait ExtItem: Item {
     /// bytes (no-op for plain keys).
     fn encode_payload(self, out: &mut [u8]);
     /// Sort a phase-1 run descending in memory on the given merge
-    /// kernel (plain keys may hit the explicit-SIMD tier; payload
-    /// records always stay on the stable scalar path).
+    /// kernel. Plain keys hit the explicit-SIMD tier directly (signed
+    /// keys through the sign-flip bias kernels); payload records take
+    /// the key–index SIMD stable tier ([`merge_stable_simd`]), which
+    /// preserves the §6 guarantee while still vectorising the compares.
     fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig, kernel: MergeKernel);
     /// Merge two descending-sorted slices, appending to `out` — the
     /// per-block merge of every tree node, on the given merge kernel.
@@ -197,6 +242,62 @@ impl ExtItem for u64 {
     }
     fn from_parts(key: u64, _payload: &[u8]) -> Self {
         key
+    }
+    fn encode_payload(self, _out: &mut [u8]) {}
+    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig, kernel: MergeKernel) {
+        sort_desc_with(buf, cfg, kernel);
+    }
+    fn merge_into(a: &[Self], b: &[Self], w: usize, kernel: MergeKernel, out: &mut Vec<Self>) {
+        merge_desc_kernel(a, b, w, kernel, out);
+    }
+}
+
+impl ExtItem for i32 {
+    const WIRE_BYTES: usize = 4;
+    const KEY_BYTES: usize = 4;
+    const DTYPE: Dtype = Dtype::I32;
+    fn encode(self, out: &mut [u8]) {
+        out.copy_from_slice(&self.to_le_bytes());
+    }
+    fn decode(b: &[u8]) -> Self {
+        i32::from_le_bytes(b.try_into().expect("4-byte record"))
+    }
+    fn key_bits(self) -> u64 {
+        // Sign-flip bias: an order-preserving injection into u32, so
+        // the delta codec's wrapping arithmetic and the FLR3 descending
+        // check both see a domain whose unsigned order matches the
+        // signed record order.
+        (self as u32 ^ 0x8000_0000) as u64
+    }
+    fn from_parts(key: u64, _payload: &[u8]) -> Self {
+        // The bias is a self-inverse XOR.
+        (key as u32 ^ 0x8000_0000) as i32
+    }
+    fn encode_payload(self, _out: &mut [u8]) {}
+    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig, kernel: MergeKernel) {
+        sort_desc_with(buf, cfg, kernel);
+    }
+    fn merge_into(a: &[Self], b: &[Self], w: usize, kernel: MergeKernel, out: &mut Vec<Self>) {
+        merge_desc_kernel(a, b, w, kernel, out);
+    }
+}
+
+impl ExtItem for i64 {
+    const WIRE_BYTES: usize = 8;
+    const KEY_BYTES: usize = 8;
+    const DTYPE: Dtype = Dtype::I64;
+    fn encode(self, out: &mut [u8]) {
+        out.copy_from_slice(&self.to_le_bytes());
+    }
+    fn decode(b: &[u8]) -> Self {
+        i64::from_le_bytes(b.try_into().expect("8-byte record"))
+    }
+    fn key_bits(self) -> u64 {
+        // Sign-flip bias (see the i32 impl).
+        (self as u64) ^ (1 << 63)
+    }
+    fn from_parts(key: u64, _payload: &[u8]) -> Self {
+        (key ^ (1 << 63)) as i64
     }
     fn encode_payload(self, _out: &mut [u8]) {}
     fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig, kernel: MergeKernel) {
@@ -264,13 +365,14 @@ impl ExtItem for Kv {
     fn encode_payload(self, out: &mut [u8]) {
         out.copy_from_slice(&self.val.to_le_bytes());
     }
-    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig, _kernel: MergeKernel) {
-        // Stability carve-out (§6): payload records never take a SIMD
-        // kernel — equal-key payload order must survive.
-        sort_stable_desc(buf, cfg);
+    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig, kernel: MergeKernel) {
+        // §6 stability on the SIMD tier: chunk merges go through the
+        // key–index packed kernels, falling back to the tagged scalar
+        // merge below the SIMD threshold.
+        sort_stable_desc_with(buf, cfg, kernel);
     }
-    fn merge_into(a: &[Self], b: &[Self], w: usize, _kernel: MergeKernel, out: &mut Vec<Self>) {
-        merge_stable_into(a, b, w, out);
+    fn merge_into(a: &[Self], b: &[Self], w: usize, kernel: MergeKernel, out: &mut Vec<Self>) {
+        merge_stable_simd(a, b, w, kernel, out);
     }
 }
 
@@ -297,13 +399,13 @@ impl ExtItem for Kv64 {
     fn encode_payload(self, out: &mut [u8]) {
         out.copy_from_slice(&self.val.to_le_bytes());
     }
-    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig, _kernel: MergeKernel) {
-        // Stability carve-out (§6): payload records never take a SIMD
-        // kernel — equal-key payload order must survive.
-        sort_stable_desc(buf, cfg);
+    fn sort_run(buf: &mut Vec<Self>, cfg: SortConfig, kernel: MergeKernel) {
+        // §6 stability on the SIMD tier: key-only SIMD merge plus a
+        // stable payload gather (see `StableSimdMerge` for Kv64).
+        sort_stable_desc_with(buf, cfg, kernel);
     }
-    fn merge_into(a: &[Self], b: &[Self], w: usize, _kernel: MergeKernel, out: &mut Vec<Self>) {
-        merge_stable_into(a, b, w, out);
+    fn merge_into(a: &[Self], b: &[Self], w: usize, kernel: MergeKernel, out: &mut Vec<Self>) {
+        merge_stable_simd(a, b, w, kernel, out);
     }
 }
 
@@ -1113,9 +1215,52 @@ mod tests {
         }
         check(&[0u32, 1, u32::MAX, 0x8000_0001]);
         check(&[0u64, 1, u64::MAX]);
+        check(&[i32::MIN, -1, 0, 1, i32::MAX]);
+        check(&[i64::MIN, -1, 0, 1, i64::MAX]);
         check(&[Kv::new(7, 9), Kv::new(u32::MAX, 0), Kv::new(0, u32::MAX)]);
         check(&[Kv64 { key: u64::MAX, val: 1 }, Kv64 { key: 0, val: u64::MAX }]);
         check(&[F32Key::from_f32(-1.5), F32Key::from_f32(f32::INFINITY)]);
+    }
+
+    #[test]
+    fn signed_key_bits_preserve_order() {
+        // The bias map must be monotone: descending signed records
+        // become descending key_bits, or FLR3's descending enforcement
+        // and the delta codec's framing would misfire.
+        let desc32 = [i32::MAX, 1, 0, -1, i32::MIN + 1, i32::MIN];
+        let bits: Vec<u64> = desc32.iter().map(|&x| ExtItem::key_bits(x)).collect();
+        assert!(bits.windows(2).all(|w| w[0] > w[1]), "{bits:?}");
+        let desc64 = [i64::MAX, 1, 0, -1, i64::MIN + 1, i64::MIN];
+        let bits: Vec<u64> = desc64.iter().map(|&x| ExtItem::key_bits(x)).collect();
+        assert!(bits.windows(2).all(|w| w[0] > w[1]), "{bits:?}");
+    }
+
+    #[test]
+    fn signed_runs_round_trip_every_codec() {
+        let data: Vec<i32> = vec![i32::MAX, 77, 0, -1, -500, i32::MIN];
+        for codec in [Codec::Raw, Codec::Delta, Codec::Flr3] {
+            let path = tmp(&format!("signed-{}.flr", codec.name()));
+            let mut w = RunWriter::create_with(&path, codec).unwrap();
+            w.write_block(&data).unwrap();
+            w.finish().unwrap();
+            let mut r = RunReader::<i32>::open(&path).unwrap();
+            let mut out = Vec::new();
+            while r.read_block(&mut out, 4).unwrap() > 0 {}
+            assert_eq!(out, data, "codec {}", codec.name());
+            std::fs::remove_file(&path).unwrap();
+        }
+        let data: Vec<i64> = vec![i64::MAX, 1 << 40, 0, -1, i64::MIN];
+        for codec in [Codec::Raw, Codec::Delta, Codec::Flr3] {
+            let path = tmp(&format!("signed64-{}.flr", codec.name()));
+            let mut w = RunWriter::create_with(&path, codec).unwrap();
+            w.write_block(&data).unwrap();
+            w.finish().unwrap();
+            let mut r = RunReader::<i64>::open(&path).unwrap();
+            let mut out = Vec::new();
+            while r.read_block(&mut out, 4).unwrap() > 0 {}
+            assert_eq!(out, data, "codec {}", codec.name());
+            std::fs::remove_file(&path).unwrap();
+        }
     }
 
     #[test]
@@ -1207,12 +1352,37 @@ mod tests {
 
     #[test]
     fn dtype_parse_and_names() {
-        for d in [Dtype::U32, Dtype::U64, Dtype::Kv, Dtype::Kv64, Dtype::F32] {
+        for d in Dtype::ALL {
             assert_eq!(Dtype::parse(d.name()).unwrap(), d);
+            assert!(Dtype::ALL_NAMES.split('|').any(|n| n == d.name()), "{}", d.name());
         }
+        assert_eq!(Dtype::ALL_NAMES.split('|').count(), Dtype::ALL.len());
         assert_eq!(Dtype::Kv64.wire_bytes(), 16);
         assert_eq!(Dtype::F32.wire_bytes(), 4);
+        assert_eq!(Dtype::I32.wire_bytes(), 4);
+        assert_eq!(Dtype::I64.wire_bytes(), 8);
         let err = Dtype::parse("f64").unwrap_err();
         assert!(err.contains("unknown dtype"), "{err}");
+        assert!(err.contains(Dtype::ALL_NAMES), "error must enumerate names: {err}");
+        let err = parse_dtype_arg("f64").unwrap_err();
+        assert!(err.starts_with("dtype argument:"), "{err}");
+    }
+
+    #[test]
+    fn effective_kernel_is_scalar_when_forced_and_tier_named_otherwise() {
+        let valid = ["scalar", "simd-sse2", "simd-avx2", "simd-neon"];
+        for d in Dtype::ALL {
+            assert_eq!(d.effective_kernel(MergeKernel::Scalar), "scalar", "{}", d.name());
+            let eff = d.effective_kernel(MergeKernel::Simd);
+            assert!(valid.contains(&eff), "{}: {eff}", d.name());
+            assert_eq!(d.effective_kernel(MergeKernel::Auto), eff, "{}", d.name());
+        }
+        // Same lane width → same effective tier.
+        let k = MergeKernel::Auto;
+        assert_eq!(Dtype::I32.effective_kernel(k), Dtype::U32.effective_kernel(k));
+        assert_eq!(Dtype::F32.effective_kernel(k), Dtype::U32.effective_kernel(k));
+        for d in [Dtype::I64, Dtype::Kv, Dtype::Kv64] {
+            assert_eq!(d.effective_kernel(k), Dtype::U64.effective_kernel(k), "{}", d.name());
+        }
     }
 }

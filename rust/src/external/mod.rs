@@ -88,7 +88,8 @@ use anyhow::{anyhow, Result};
 
 pub use codec::{parse_codec_arg, Codec};
 pub use format::{
-    read_raw, write_raw, Dtype, ExtItem, RawReader, RawWriter, RunFile, RunReader, RunWriter,
+    parse_dtype_arg, read_raw, write_raw, Dtype, ExtItem, RawReader, RawWriter, RunFile,
+    RunReader, RunWriter,
 };
 pub use merge::{
     merge_runs, sort_pipelined, MergeOutcome, MergePlan, PipelineOutcome, RecordSink,
@@ -190,7 +191,9 @@ pub struct ExternalConfig {
     /// unset = off) so CI can run the whole suite pipelined.
     pub overlap: bool,
     /// Default dataset element type for file sorts when the request
-    /// does not name one.
+    /// does not name one. Defaults from the `FLIMS_DTYPE` environment
+    /// variable (unset = `u32`) so CI can run the whole integration
+    /// suite on payload records.
     pub dtype: Dtype,
     /// Run codec for spilled runs (phase 1 and intermediate passes).
     /// `delta` and `flr3` fall back to `raw` for dtypes without an
@@ -206,12 +209,16 @@ pub struct ExternalConfig {
     pub disk_budget_bytes: Option<u64>,
     /// Merge-kernel tier for the phase-1 chunk sorts and every tree
     /// node's inner merge loop: `auto` (explicit SIMD where a kernel
-    /// exists — plain-key dtypes on SSE2/AVX2/NEON), `scalar` (force
-    /// the branchless scalar lanes), or `simd`. Payload dtypes (`kv`,
-    /// `kv64`) always take the stable scalar tier (§6). The sorted
-    /// output is byte-identical for every value. Defaults from the
-    /// `FLIMS_KERNEL` environment variable (unset = `auto`) so CI can
-    /// run the whole suite on the scalar tier.
+    /// exists), `scalar` (force the branchless scalar lanes), or
+    /// `simd`. Plain keys — unsigned, signed via the sign-flip bias
+    /// wrappers, f32 via the order-preserving bit map — merge on the
+    /// SSE2/AVX2/NEON lanes directly; payload dtypes (`kv`, `kv64`)
+    /// take the key–index SIMD stable tier, which keeps the §6
+    /// guarantee (see `merge_stable_simd`). The sorted output is
+    /// byte-identical for every value. Per-dtype reality is surfaced by
+    /// [`Dtype::effective_kernel`]. Defaults from the `FLIMS_KERNEL`
+    /// environment variable (unset = `auto`) so CI can run the whole
+    /// suite on the scalar tier.
     pub kernel: MergeKernel,
     /// When set, every sort records a span trace (phase-1 chunk sorts,
     /// sealed runs, group merges, codec and prefetch activity) and
@@ -236,7 +243,7 @@ impl Default for ExternalConfig {
             threads: 1,
             prefetch_blocks: 2,
             overlap: overlap_default(),
-            dtype: Dtype::U32,
+            dtype: dtype_default(),
             codec: codec_default(),
             tmp_dir: None,
             disk_budget_bytes: None,
@@ -279,6 +286,21 @@ fn overlap_default() -> bool {
         Ok(v) => parse_overlap(&v).unwrap_or_else(|e| {
             eprintln!("warning: FLIMS_EXTERNAL_OVERLAP ignored: {e}");
             false
+        }),
+    }
+}
+
+/// The `dtype` default: the `FLIMS_DTYPE` environment variable when
+/// set, else `u32`. This is how a CI lane runs the full integration
+/// suite over payload records (`FLIMS_DTYPE=kv64`) without touching
+/// every test's config. Like the other env knobs, an unparseable value
+/// warns on stderr instead of silently meaning `u32`.
+fn dtype_default() -> Dtype {
+    match std::env::var("FLIMS_DTYPE") {
+        Err(_) => Dtype::U32,
+        Ok(v) => Dtype::parse(&v).unwrap_or_else(|e| {
+            eprintln!("warning: FLIMS_DTYPE ignored: {e}");
+            Dtype::U32
         }),
     }
 }
@@ -584,6 +606,8 @@ pub fn sort_file_dtype(
     match dtype {
         Dtype::U32 => sort_file::<u32>(input, output, cfg),
         Dtype::U64 => sort_file::<u64>(input, output, cfg),
+        Dtype::I32 => sort_file::<i32>(input, output, cfg),
+        Dtype::I64 => sort_file::<i64>(input, output, cfg),
         Dtype::Kv => sort_file::<Kv>(input, output, cfg),
         Dtype::Kv64 => sort_file::<Kv64>(input, output, cfg),
         Dtype::F32 => sort_file::<F32Key>(input, output, cfg),
@@ -602,6 +626,8 @@ pub fn sort_file_dtype_traced(
     match dtype {
         Dtype::U32 => sort_file_traced::<u32>(input, output, cfg, trace),
         Dtype::U64 => sort_file_traced::<u64>(input, output, cfg, trace),
+        Dtype::I32 => sort_file_traced::<i32>(input, output, cfg, trace),
+        Dtype::I64 => sort_file_traced::<i64>(input, output, cfg, trace),
         Dtype::Kv => sort_file_traced::<Kv>(input, output, cfg, trace),
         Dtype::Kv64 => sort_file_traced::<Kv64>(input, output, cfg, trace),
         Dtype::F32 => sort_file_traced::<F32Key>(input, output, cfg, trace),
@@ -661,6 +687,8 @@ pub fn sort_file_dtype_ctx(
     match dtype {
         Dtype::U32 => sort_file_ctx::<u32>(input, output, cfg, ctx, shared_pool, trace),
         Dtype::U64 => sort_file_ctx::<u64>(input, output, cfg, ctx, shared_pool, trace),
+        Dtype::I32 => sort_file_ctx::<i32>(input, output, cfg, ctx, shared_pool, trace),
+        Dtype::I64 => sort_file_ctx::<i64>(input, output, cfg, ctx, shared_pool, trace),
         Dtype::Kv => sort_file_ctx::<Kv>(input, output, cfg, ctx, shared_pool, trace),
         Dtype::Kv64 => sort_file_ctx::<Kv64>(input, output, cfg, ctx, shared_pool, trace),
         Dtype::F32 => sort_file_ctx::<F32Key>(input, output, cfg, ctx, shared_pool, trace),
@@ -853,6 +881,8 @@ mod tests {
         case::<u32>(&dir, &gen_u32(&mut rng, 9000, Distribution::Uniform));
         let zipf = Distribution::Zipf { s_x100: 150, n_ranks: 64 };
         case::<u64>(&dir, &gen_u64(&mut rng, 9000, zipf));
+        case::<i32>(&dir, &crate::data::gen_i32(&mut rng, 9000, Distribution::Uniform));
+        case::<i64>(&dir, &crate::data::gen_i64(&mut rng, 9000, zipf));
         case::<crate::key::Kv>(
             &dir,
             &gen_kv(&mut rng, 9000, Distribution::DupHeavy { alphabet: 5 }),
@@ -917,6 +947,8 @@ mod tests {
         case::<u32>(&dir, &gen_u32(&mut rng, 9000, Distribution::Uniform));
         let zipf = Distribution::Zipf { s_x100: 150, n_ranks: 64 };
         case::<u64>(&dir, &gen_u64(&mut rng, 9000, zipf));
+        case::<i32>(&dir, &crate::data::gen_i32(&mut rng, 9000, zipf));
+        case::<i64>(&dir, &crate::data::gen_i64(&mut rng, 9000, Distribution::Uniform));
         case::<crate::key::Kv>(
             &dir,
             &gen_kv(&mut rng, 9000, Distribution::DupHeavy { alphabet: 5 }),
@@ -1161,7 +1193,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("flims-dtype-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let cfg = ExternalConfig { tmp_dir: Some(dir.clone()), ..tiny_cfg() };
-        for dtype in [Dtype::U32, Dtype::U64, Dtype::Kv, Dtype::Kv64, Dtype::F32] {
+        for dtype in Dtype::ALL {
             let input = dir.join(format!("in.{}", dtype.name()));
             let output = dir.join(format!("out.{}", dtype.name()));
             // 600 records of `wire_bytes` each, from a shared byte soup.

@@ -33,4 +33,7 @@ pub use parallel::par_sort_desc;
 pub use scalar::{merge_basic, merge_skew, FlimsMerger, MergeTrace, Variant};
 pub use simd::{merge_desc_kernel, merge_desc_kernel_slice, MergeKernel, SimdMergeable};
 pub use sort::{sort_asc, sort_desc, SortConfig};
-pub use stable::{merge_stable, merge_stable_into, sort_stable_desc};
+pub use stable::{
+    merge_stable, merge_stable_into, merge_stable_simd, sort_stable_desc, sort_stable_desc_with,
+    StableSimdMerge,
+};

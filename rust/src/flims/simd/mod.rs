@@ -13,22 +13,26 @@
 //! Tiers and dispatch:
 //!
 //! * **x86_64** — SSE2 baseline (always present on the target) for
-//!   `u32` at W ∈ {4, 8}; AVX2 (runtime-detected once via
-//!   `is_x86_feature_detected!`, cached) for `u32` at W ∈ {8, 16} and
-//!   `u64` at W ∈ {4, 8}.
-//! * **aarch64** — NEON (architectural) for `u32` at W ∈ {4, 8} and
-//!   `u64` at W = 4.
+//!   `u32`/`i32` at W ∈ {4, 8}; AVX2 (runtime-detected once via
+//!   `is_x86_feature_detected!`, cached) for `u32`/`i32` at W ∈ {8, 16}
+//!   and `u64`/`i64` at W ∈ {4, 8}.
+//! * **aarch64** — NEON (architectural) for `u32`/`i32` at W ∈ {4, 8}
+//!   and `u64`/`i64` at W = 4.
 //! * everything else — the scalar lanes.
 //!
-//! Only **plain keys** (`u32`, `u64`, and `f32` via the order-preserving
-//! [`F32Key`] bit mapping) have SIMD kernels. Payload records (`Kv`,
-//! `Kv64`) always take the pad-aware scalar tier: the §6 tie-record
-//! guarantee requires the stable merge path, and vectorising it would
-//! reorder equal-key payloads. For plain keys the descending merge
-//! output of a multiset is *unique*, so every kernel produces
-//! byte-identical output by construction — the `prop_kernel`
-//! equivalence suite pins this across dtypes, widths, schedules and
-//! adversarial inputs.
+//! Every key shape reaches these kernels through an order-preserving
+//! bit map: `f32` via the [`F32Key`] mapping, `i32`/`i64` via the
+//! sign-flip bias fused into the kernels' loads/stores (`x ^ sign-bit`
+//! maps signed order onto unsigned order), and `u16` by widening to
+//! `u32` lanes. Payload records (`Kv`, `Kv64`) ride the same kernels
+//! one level up: [`merge_stable_simd`](crate::flims::stable) merges
+//! `(key, source-index)` pairs packed into `u64` lanes — the index
+//! breaking key ties — then gathers payloads through the resulting
+//! permutation, so the §6 tie-record guarantee is preserved *on* the
+//! SIMD tier. For plain keys the descending merge output of a multiset
+//! is *unique*, so every kernel produces byte-identical output by
+//! construction — the `prop_kernel` equivalence suite pins this across
+//! dtypes, widths, schedules and adversarial inputs.
 //!
 //! Selection is a [`MergeKernel`] knob threaded through every layer
 //! that touches the lane merger: `[core] kernel` in the config file,
@@ -51,7 +55,7 @@ pub enum MergeKernel {
     /// Force the branchless scalar lanes everywhere.
     Scalar,
     /// Ask for the explicit-SIMD tier. Falls back to scalar for types,
-    /// widths, or CPUs without a kernel — payload records always do.
+    /// widths, or CPUs without a kernel.
     Simd,
 }
 
@@ -89,12 +93,14 @@ impl MergeKernel {
         !matches!(self, MergeKernel::Scalar)
     }
 
-    /// What this kernel resolves to on the running CPU — the name
-    /// surfaced in the `stats` protocol line and the CLI report
-    /// (`scalar`, `simd-sse2`, `simd-avx2`, or `simd-neon`). For
-    /// `auto`/`simd` this is the CPU's tier *ceiling*: payload dtypes
-    /// and types without a kernel still run the scalar tier underneath
-    /// it (see `docs/KERNELS.md` for the per-dtype table).
+    /// What this kernel resolves to on the running CPU — the CPU's
+    /// tier *ceiling* (`scalar`, `simd-sse2`, `simd-avx2`, or
+    /// `simd-neon`). Per-dtype surfaces (the `stats` protocol line,
+    /// the CLI report, the Prometheus `kernel` label) report the
+    /// *effective* tier instead, via
+    /// [`Dtype::effective_kernel`](crate::external::Dtype::effective_kernel):
+    /// a dtype whose kernel is missing on this CPU reports `scalar`
+    /// even under `auto`/`simd` (see `docs/KERNELS.md`).
     pub fn resolved_name(self) -> &'static str {
         match self {
             MergeKernel::Scalar => "scalar",
@@ -141,10 +147,10 @@ pub fn simd_tier_name() -> &'static str {
 
 /// A plain-key element the kernel dispatcher can route: every method
 /// returns `false` to mean "no SIMD kernel here — take the scalar
-/// tier". Types whose payload is their key (`u32`, `u64`, [`F32Key`])
-/// override with real kernels; signed and narrow keys keep the
-/// defaults (their lane order differs from the unsigned compare the
-/// kernels use).
+/// tier". Unsigned keys (`u32`, `u64`) dispatch directly; [`F32Key`],
+/// `i32`, and `i64` reach the same kernels through order-preserving
+/// bit maps (transparent cast / sign-flip bias), and `u16` widens to
+/// `u32` lanes.
 pub trait SimdMergeable: Item<K = Self> + Key {
     /// Merge two descending-sorted slices into `dst` (`dst.len() ==
     /// a.len() + b.len()`) with an explicit-SIMD kernel near lane width
@@ -162,11 +168,40 @@ pub trait SimdMergeable: Item<K = Self> + Key {
         let _ = (hi, lo);
         false
     }
+
+    /// The SIMD tier this type's merge kernel actually runs on for the
+    /// running CPU (`simd-sse2` | `simd-avx2` | `simd-neon`), or
+    /// `scalar` when no kernel exists — the *effective* name surfaced
+    /// per dtype in stats, the CLI report, and metrics labels.
+    fn simd_tier() -> &'static str {
+        "scalar"
+    }
 }
 
-impl SimdMergeable for u16 {}
-impl SimdMergeable for i32 {}
-impl SimdMergeable for i64 {}
+impl SimdMergeable for u16 {
+    /// `u16` rides the `u32` kernels by widening: no dedicated 16-bit
+    /// network, but the widened merge still beats the scalar tier for
+    /// block-sized inputs.
+    fn simd_merge_desc(a: &[Self], b: &[Self], w: usize, dst: &mut [Self]) -> bool {
+        if a.len().min(b.len()) < SIMD_MIN_SIDE {
+            return false;
+        }
+        let wa: Vec<u32> = a.iter().map(|&x| x as u32).collect();
+        let wb: Vec<u32> = b.iter().map(|&x| x as u32).collect();
+        let mut wide = vec![0u32; dst.len()];
+        if !<u32 as SimdMergeable>::simd_merge_desc(&wa, &wb, w, &mut wide) {
+            return false;
+        }
+        for (d, &x) in dst.iter_mut().zip(wide.iter()) {
+            *d = x as u16;
+        }
+        true
+    }
+
+    fn simd_tier() -> &'static str {
+        <u32 as SimdMergeable>::simd_tier()
+    }
+}
 
 impl SimdMergeable for u32 {
     fn simd_merge_desc(a: &[Self], b: &[Self], w: usize, dst: &mut [Self]) -> bool {
@@ -200,6 +235,49 @@ impl SimdMergeable for u32 {
             false
         }
     }
+
+    fn simd_tier() -> &'static str {
+        simd_tier_name()
+    }
+}
+
+impl SimdMergeable for i32 {
+    fn simd_merge_desc(a: &[Self], b: &[Self], w: usize, dst: &mut [Self]) -> bool {
+        #[cfg(target_arch = "x86_64")]
+        {
+            x86::merge_desc_i32(a, b, w, dst)
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            neon::merge_desc_i32(a, b, w, dst)
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            let _ = (a, b, w, dst);
+            false
+        }
+    }
+
+    fn simd_rowpair_minmax(hi: &mut [Self], lo: &mut [Self]) -> bool {
+        #[cfg(target_arch = "x86_64")]
+        {
+            x86::rowpair_minmax_i32(hi, lo)
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            neon::rowpair_minmax_i32(hi, lo)
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            let _ = (hi, lo);
+            false
+        }
+    }
+
+    /// The biased i32 kernels cover exactly the `u32` width menu.
+    fn simd_tier() -> &'static str {
+        <u32 as SimdMergeable>::simd_tier()
+    }
 }
 
 impl SimdMergeable for u64 {
@@ -218,6 +296,50 @@ impl SimdMergeable for u64 {
             false
         }
     }
+
+    /// 64-bit kernels need AVX2 on x86 (SSE2 lacks a usable 64-bit
+    /// compare), so an SSE2-only CPU reports `scalar` here.
+    fn simd_tier() -> &'static str {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if x86::have_avx2() {
+                "simd-avx2"
+            } else {
+                "scalar"
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            "simd-neon"
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            "scalar"
+        }
+    }
+}
+
+impl SimdMergeable for i64 {
+    fn simd_merge_desc(a: &[Self], b: &[Self], w: usize, dst: &mut [Self]) -> bool {
+        #[cfg(target_arch = "x86_64")]
+        {
+            x86::merge_desc_i64(a, b, w, dst)
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            neon::merge_desc_i64(a, b, w, dst)
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            let _ = (a, b, w, dst);
+            false
+        }
+    }
+
+    /// The biased i64 kernels cover exactly the `u64` width menu.
+    fn simd_tier() -> &'static str {
+        <u64 as SimdMergeable>::simd_tier()
+    }
 }
 
 // SAFETY of the casts below: `F32Key` is `#[repr(transparent)]` over
@@ -233,6 +355,10 @@ impl SimdMergeable for F32Key {
 
     fn simd_rowpair_minmax(hi: &mut [Self], lo: &mut [Self]) -> bool {
         <u32 as SimdMergeable>::simd_rowpair_minmax(f32key_bits_mut(hi), f32key_bits_mut(lo))
+    }
+
+    fn simd_tier() -> &'static str {
+        <u32 as SimdMergeable>::simd_tier()
     }
 }
 
@@ -277,8 +403,10 @@ pub fn merge_desc_kernel_slice<T: SimdMergeable>(
 
 /// The smallest per-side length any SIMD kernel accepts (the narrowest
 /// block is 4 lanes on every supported arch) — lets Vec-appending
-/// callers skip the output pre-fill for merges no kernel would take.
-const SIMD_MIN_SIDE: usize = 4;
+/// callers (here and the stable key–index path in
+/// [`crate::flims::stable`]) skip setup for merges no kernel would
+/// take.
+pub(crate) const SIMD_MIN_SIDE: usize = 4;
 
 /// [`merge_desc_kernel_slice`] appending to a `Vec` — the shape
 /// [`ExtItem::merge_into`](crate::external::ExtItem::merge_into) wants.
@@ -422,7 +550,7 @@ mod neon;
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::{gen_sorted_pair, gen_u32, gen_u64, Distribution};
+    use crate::data::{gen_i32, gen_i64, gen_sorted_pair, gen_u32, gen_u64, Distribution};
     use crate::util::rng::Rng;
 
     fn oracle<T: Item>(a: &[T], b: &[T]) -> Vec<T> {
@@ -591,12 +719,75 @@ mod tests {
     }
 
     #[test]
-    fn payload_records_have_no_simd_kernel() {
-        // The §6 stability carve-out is structural: record types do not
-        // implement `SimdMergeable`, and the signed/narrow keys that do
-        // take the default (scalar) path.
-        assert!(!<i32 as SimdMergeable>::simd_merge_desc(&[3, 1], &[2], 4, &mut [0; 3]));
-        assert!(!<u16 as SimdMergeable>::simd_merge_desc(&[3, 1], &[2], 4, &mut [0; 3]));
+    fn i32_kernels_match_scalar_all_widths() {
+        let mut rng = Rng::new(778);
+        for w in [2usize, 4, 8, 16, 32] {
+            for _ in 0..20 {
+                let (na, nb) = (rng.range(0, 600), rng.range(0, 600));
+                let (a, b) = gen_sorted_pair(&mut rng, na, nb, Distribution::Uniform, gen_i32);
+                both_kernels(&a, &b, w);
+            }
+        }
+    }
+
+    #[test]
+    fn i64_kernels_match_scalar_all_widths() {
+        let mut rng = Rng::new(779);
+        for w in [4usize, 8, 16] {
+            for _ in 0..15 {
+                let (na, nb) = (rng.range(0, 500), rng.range(0, 500));
+                let (a, b) = gen_sorted_pair(&mut rng, na, nb, Distribution::Uniform, gen_i64);
+                both_kernels(&a, &b, w);
+            }
+        }
+    }
+
+    #[test]
+    fn signed_sentinels_cross_zero_correctly() {
+        // The sign-flip bias must order MIN < -1 < 0 < MAX exactly like
+        // native signed compares, including inside the vector blocks.
+        let a: Vec<i32> = vec![i32::MAX, 100, 1, 0, -1, -100, i32::MIN + 1, i32::MIN];
+        let b: Vec<i32> = vec![i32::MAX - 1, 2, 0, 0, -2, -99, i32::MIN + 2, i32::MIN];
+        for w in [4usize, 8, 16] {
+            both_kernels(&a, &b, w);
+        }
+        let a: Vec<i64> = vec![i64::MAX, 7, 0, -1, -7, i64::MIN + 1, i64::MIN, i64::MIN];
+        let b: Vec<i64> = vec![i64::MAX, 6, 1, 0, -6, -8, i64::MIN + 2, i64::MIN];
+        for w in [4usize, 8] {
+            both_kernels(&a, &b, w);
+        }
+        // All-negative and straddling-zero skew shapes.
+        let neg: Vec<i32> = (0..300).map(|i| -1 - 3 * i).collect();
+        both_kernels(&neg, &[-2, -500, -501, -502, -900], 8);
+    }
+
+    #[test]
+    fn u16_kernel_matches_scalar_via_widening() {
+        let mut rng = Rng::new(780);
+        for _ in 0..15 {
+            let mk = |n: usize, rng: &mut Rng| -> Vec<u16> {
+                let mut v: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+                v.sort_unstable_by(|a, b| b.cmp(a));
+                v
+            };
+            let (na, nb) = (rng.range(0, 400), rng.range(0, 400));
+            let (a, b) = (mk(na, &mut rng), mk(nb, &mut rng));
+            both_kernels(&a, &b, 8);
+        }
+        both_kernels::<u16>(&[u16::MAX, 9, 0], &[u16::MAX, 1, 0, 0], 8);
+    }
+
+    #[test]
+    fn simd_tier_names_are_consistent() {
+        let valid = ["scalar", "simd-sse2", "simd-avx2", "simd-neon"];
+        assert!(valid.contains(&<u32 as SimdMergeable>::simd_tier()));
+        assert!(valid.contains(&<u64 as SimdMergeable>::simd_tier()));
+        // The mapped types ride the unsigned kernels, so their tiers
+        // must agree exactly.
+        assert_eq!(<i32 as SimdMergeable>::simd_tier(), <u32 as SimdMergeable>::simd_tier());
+        assert_eq!(<u16 as SimdMergeable>::simd_tier(), <u32 as SimdMergeable>::simd_tier());
+        assert_eq!(<F32Key as SimdMergeable>::simd_tier(), <u32 as SimdMergeable>::simd_tier());
+        assert_eq!(<i64 as SimdMergeable>::simd_tier(), <u64 as SimdMergeable>::simd_tier());
     }
 
     #[test]

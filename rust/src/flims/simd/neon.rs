@@ -152,6 +152,51 @@ unsafe fn bf4q(x: (uint64x2_t, uint64x2_t)) -> (uint64x2_t, uint64x2_t) {
 gen_merge!(merge_u64_w4_neon, u64, 4, ld4q, st4q, rev4q, stage4q, bf4q);
 
 // ---------------------------------------------------------------------
+// Signed tier: i32/i64 ride the unsigned kernels through biased
+// loads/stores (x ^ sign-bit maps signed order onto unsigned order);
+// the selector/butterfly bodies above are reused verbatim.
+// ---------------------------------------------------------------------
+
+#[inline]
+unsafe fn ld4s(p: *const i32) -> uint32x4_t {
+    veorq_u32(ld4(p as *const u32), vdupq_n_u32(0x8000_0000))
+}
+
+#[inline]
+unsafe fn st4s(p: *mut i32, x: uint32x4_t) {
+    st4(p as *mut u32, veorq_u32(x, vdupq_n_u32(0x8000_0000)))
+}
+
+#[inline]
+unsafe fn ld8s(p: *const i32) -> (uint32x4_t, uint32x4_t) {
+    (ld4s(p), ld4s(p.add(4)))
+}
+
+#[inline]
+unsafe fn st8s(p: *mut i32, x: (uint32x4_t, uint32x4_t)) {
+    st4s(p, x.0);
+    st4s(p.add(4), x.1);
+}
+
+gen_merge!(merge_i32_w4_neon, i32, 4, ld4s, st4s, rev4, stage4, bf4);
+gen_merge!(merge_i32_w8_neon, i32, 8, ld8s, st8s, rev8, stage8, bf8);
+
+#[inline]
+unsafe fn ld4qs(p: *const i64) -> (uint64x2_t, uint64x2_t) {
+    let bias = vdupq_n_u64(1 << 63);
+    let (x0, x1) = ld4q(p as *const u64);
+    (veorq_u64(x0, bias), veorq_u64(x1, bias))
+}
+
+#[inline]
+unsafe fn st4qs(p: *mut i64, x: (uint64x2_t, uint64x2_t)) {
+    let bias = vdupq_n_u64(1 << 63);
+    st4q(p as *mut u64, (veorq_u64(x.0, bias), veorq_u64(x.1, bias)));
+}
+
+gen_merge!(merge_i64_w4_neon, i64, 4, ld4qs, st4qs, rev4q, stage4q, bf4q);
+
+// ---------------------------------------------------------------------
 // Dispatchers.
 // ---------------------------------------------------------------------
 
@@ -184,6 +229,34 @@ pub(super) fn merge_desc_u64(a: &[u64], b: &[u64], w: usize, dst: &mut [u64]) ->
     true
 }
 
+/// i32 merge — same width menu as `u32`, through the biased kernels.
+pub(super) fn merge_desc_i32(a: &[i32], b: &[i32], w: usize, dst: &mut [i32]) -> bool {
+    let min_side = a.len().min(b.len());
+    if min_side < 4 {
+        return false;
+    }
+    unsafe {
+        if w >= 8 && min_side >= 8 {
+            merge_i32_w8_neon(a, b, dst);
+        } else {
+            merge_i32_w4_neon(a, b, dst);
+        }
+    }
+    true
+}
+
+/// i64 merge (W = 4), through the biased kernel.
+pub(super) fn merge_desc_i64(a: &[i64], b: &[i64], w: usize, dst: &mut [i64]) -> bool {
+    let _ = w;
+    if a.len().min(b.len()) < 4 {
+        return false;
+    }
+    unsafe {
+        merge_i64_w4_neon(a, b, dst);
+    }
+    true
+}
+
 /// Elementwise CAS column over two u32 rows, 4 lanes per step.
 pub(super) fn rowpair_minmax_u32(hi: &mut [u32], lo: &mut [u32]) -> bool {
     debug_assert_eq!(hi.len(), lo.len());
@@ -196,6 +269,24 @@ pub(super) fn rowpair_minmax_u32(hi: &mut [u32], lo: &mut [u32]) -> bool {
             let (mn, mx) = minmax4(a, b);
             st4(hi.as_mut_ptr().add(i), mx);
             st4(lo.as_mut_ptr().add(i), mn);
+            i += 4;
+        }
+        super::rowpair_scalar(&mut hi[i..], &mut lo[i..]);
+    }
+    true
+}
+
+/// Elementwise CAS column over two i32 rows — native signed min/max.
+pub(super) fn rowpair_minmax_i32(hi: &mut [i32], lo: &mut [i32]) -> bool {
+    debug_assert_eq!(hi.len(), lo.len());
+    unsafe {
+        let n = hi.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            let a = vld1q_s32(hi.as_ptr().add(i));
+            let b = vld1q_s32(lo.as_ptr().add(i));
+            vst1q_s32(hi.as_mut_ptr().add(i), vmaxq_s32(a, b));
+            vst1q_s32(lo.as_mut_ptr().add(i), vminq_s32(a, b));
             i += 4;
         }
         super::rowpair_scalar(&mut hi[i..], &mut lo[i..]);

@@ -13,6 +13,11 @@
 //! tier emulates `minmax_epu32` with a sign-bias + `cmpgt` + mask
 //! select, and `u64` kernels exist only on AVX2 (whose `cmpgt_epi64` +
 //! `blendv` make the emulation cheap).
+//!
+//! Signed keys (`i32`/`i64`) reuse the unsigned kernels through the
+//! order-preserving sign-flip bias: XORing the sign bit maps signed
+//! order onto unsigned order, so biased loads/stores bracket the same
+//! selector + butterfly bodies and the vector math never changes.
 
 use core::arch::x86_64::*;
 use std::sync::atomic::{AtomicU8, Ordering};
@@ -351,6 +356,133 @@ gen_merge!(
 );
 
 // ---------------------------------------------------------------------
+// Signed tier: i32/i64 ride the unsigned kernels above through biased
+// loads/stores (x ^ sign-bit is the order-preserving map from signed
+// to unsigned order). Only the memory boundary changes; every
+// selector/butterfly body is reused verbatim in the biased domain.
+// ---------------------------------------------------------------------
+
+#[inline]
+unsafe fn ld4s(p: *const i32) -> __m128i {
+    _mm_xor_si128(ld4(p as *const u32), _mm_set1_epi32(i32::MIN))
+}
+
+#[inline]
+unsafe fn st4s(p: *mut i32, x: __m128i) {
+    st4(p as *mut u32, _mm_xor_si128(x, _mm_set1_epi32(i32::MIN)))
+}
+
+#[inline]
+unsafe fn ld8s(p: *const i32) -> (__m128i, __m128i) {
+    (ld4s(p), ld4s(p.add(4)))
+}
+
+#[inline]
+unsafe fn st8s(p: *mut i32, x: (__m128i, __m128i)) {
+    st4s(p, x.0);
+    st4s(p.add(4), x.1);
+}
+
+gen_merge!(merge_i32_w4_sse2, i32, 4, ld4s, st4s, rev4, stage4, bf4);
+gen_merge!(merge_i32_w8_sse2, i32, 8, ld8s, st8s, rev8, stage8, bf8);
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn ld8as(p: *const i32) -> __m256i {
+    _mm256_xor_si256(ld8a(p as *const u32), _mm256_set1_epi32(i32::MIN))
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn st8as(p: *mut i32, x: __m256i) {
+    st8a(p as *mut u32, _mm256_xor_si256(x, _mm256_set1_epi32(i32::MIN)))
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn ld16as(p: *const i32) -> (__m256i, __m256i) {
+    (ld8as(p), ld8as(p.add(8)))
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn st16as(p: *mut i32, x: (__m256i, __m256i)) {
+    st8as(p, x.0);
+    st8as(p.add(8), x.1);
+}
+
+gen_merge!(
+    #[target_feature(enable = "avx2")]
+    merge_i32_w8_avx2,
+    i32,
+    8,
+    ld8as,
+    st8as,
+    rev8a,
+    stage8a,
+    bf8a
+);
+gen_merge!(
+    #[target_feature(enable = "avx2")]
+    merge_i32_w16_avx2,
+    i32,
+    16,
+    ld16as,
+    st16as,
+    rev16a,
+    stage16a,
+    bf16a
+);
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn ld4qs(p: *const i64) -> __m256i {
+    _mm256_xor_si256(ld4q(p as *const u64), _mm256_set1_epi64x(i64::MIN))
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn st4qs(p: *mut i64, x: __m256i) {
+    st4q(p as *mut u64, _mm256_xor_si256(x, _mm256_set1_epi64x(i64::MIN)))
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn ld8qs(p: *const i64) -> (__m256i, __m256i) {
+    (ld4qs(p), ld4qs(p.add(4)))
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn st8qs(p: *mut i64, x: (__m256i, __m256i)) {
+    st4qs(p, x.0);
+    st4qs(p.add(4), x.1);
+}
+
+gen_merge!(
+    #[target_feature(enable = "avx2")]
+    merge_i64_w4_avx2,
+    i64,
+    4,
+    ld4qs,
+    st4qs,
+    rev4q,
+    stage4q,
+    bf4q
+);
+gen_merge!(
+    #[target_feature(enable = "avx2")]
+    merge_i64_w8_avx2,
+    i64,
+    8,
+    ld8qs,
+    st8qs,
+    rev8q,
+    stage8q,
+    bf8q
+);
+
+// ---------------------------------------------------------------------
 // Dispatchers (safe entry points used by the SimdMergeable impls).
 // ---------------------------------------------------------------------
 
@@ -406,6 +538,43 @@ pub(super) fn merge_desc_u64(a: &[u64], b: &[u64], w: usize, dst: &mut [u64]) ->
     true
 }
 
+/// i32 merge — same width menu as `u32`, through the biased kernels.
+pub(super) fn merge_desc_i32(a: &[i32], b: &[i32], w: usize, dst: &mut [i32]) -> bool {
+    let width = pick_width(w, a.len().min(b.len()), 16);
+    if width < 4 {
+        return false;
+    }
+    unsafe {
+        match width {
+            4 => merge_i32_w4_sse2(a, b, dst),
+            8 if have_avx2() => merge_i32_w8_avx2(a, b, dst),
+            8 => merge_i32_w8_sse2(a, b, dst),
+            _ if have_avx2() => merge_i32_w16_avx2(a, b, dst),
+            _ => merge_i32_w8_sse2(a, b, dst),
+        }
+    }
+    true
+}
+
+/// i64 merge — AVX2 only, like `u64`.
+pub(super) fn merge_desc_i64(a: &[i64], b: &[i64], w: usize, dst: &mut [i64]) -> bool {
+    if !have_avx2() {
+        return false;
+    }
+    let width = pick_width(w, a.len().min(b.len()), 8);
+    if width < 4 {
+        return false;
+    }
+    unsafe {
+        if width >= 8 {
+            merge_i64_w8_avx2(a, b, dst);
+        } else {
+            merge_i64_w4_avx2(a, b, dst);
+        }
+    }
+    true
+}
+
 /// Elementwise CAS column over two u32 rows (`hi` keeps maxes) — the
 /// sort-in-chunks network stage, 8 lanes per step on AVX2, 4 on SSE2,
 /// scalar tail.
@@ -445,6 +614,60 @@ unsafe fn rowpair_u32_avx2(hi: &mut [u32], lo: &mut [u32]) {
         let (mn, mx) = minmax8a(a, b);
         st8a(hi.as_mut_ptr().add(i), mx);
         st8a(lo.as_mut_ptr().add(i), mn);
+        i += 8;
+    }
+    super::rowpair_scalar(&mut hi[i..], &mut lo[i..]);
+}
+
+/// Elementwise signed (min, max): SSE2's `cmpgt_epi32` is natively
+/// signed, so no bias is needed here.
+#[inline]
+unsafe fn minmax4s(a: __m128i, b: __m128i) -> (__m128i, __m128i) {
+    let gt = _mm_cmpgt_epi32(a, b);
+    let mx = _mm_or_si128(_mm_and_si128(gt, a), _mm_andnot_si128(gt, b));
+    let mn = _mm_or_si128(_mm_and_si128(gt, b), _mm_andnot_si128(gt, a));
+    (mn, mx)
+}
+
+/// Elementwise CAS column over two i32 rows — native signed compares,
+/// scalar tail.
+pub(super) fn rowpair_minmax_i32(hi: &mut [i32], lo: &mut [i32]) -> bool {
+    debug_assert_eq!(hi.len(), lo.len());
+    unsafe {
+        if have_avx2() {
+            rowpair_i32_avx2(hi, lo);
+        } else {
+            rowpair_i32_sse2(hi, lo);
+        }
+    }
+    true
+}
+
+unsafe fn rowpair_i32_sse2(hi: &mut [i32], lo: &mut [i32]) {
+    let n = hi.len();
+    let mut i = 0;
+    while i + 4 <= n {
+        let a = ld4(hi.as_ptr().add(i) as *const u32);
+        let b = ld4(lo.as_ptr().add(i) as *const u32);
+        let (mn, mx) = minmax4s(a, b);
+        st4(hi.as_mut_ptr().add(i) as *mut u32, mx);
+        st4(lo.as_mut_ptr().add(i) as *mut u32, mn);
+        i += 4;
+    }
+    super::rowpair_scalar(&mut hi[i..], &mut lo[i..]);
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn rowpair_i32_avx2(hi: &mut [i32], lo: &mut [i32]) {
+    let n = hi.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let a = ld8a(hi.as_ptr().add(i) as *const u32);
+        let b = ld8a(lo.as_ptr().add(i) as *const u32);
+        let mn = _mm256_min_epi32(a, b);
+        let mx = _mm256_max_epi32(a, b);
+        st8a(hi.as_mut_ptr().add(i) as *mut u32, mx);
+        st8a(lo.as_mut_ptr().add(i) as *mut u32, mn);
         i += 8;
     }
     super::rowpair_scalar(&mut hi[i..], &mut lo[i..]);

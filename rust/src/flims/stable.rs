@@ -10,8 +10,18 @@
 //! This module implements the *faithful finite-tag* scheme (not a
 //! widened sequence number), so the paper's claim that 2 bits are enough
 //! is itself under test here.
+//!
+//! Next to the tagged scalar path lives the **SIMD stable tier**
+//! ([`merge_stable_simd`]): payload records merge as `(key,
+//! source-index)` pairs packed into the plain `u64` kernels — the index
+//! breaks key ties exactly the way the tags do — and the payloads are
+//! then gathered through the resulting permutation. Output is
+//! byte-identical to the tagged path, so the §6 guarantee holds on both
+//! tiers.
 
-use crate::key::Item;
+use crate::flims::simd::{MergeKernel, SimdMergeable, SIMD_MIN_SIDE};
+use crate::flims::sort::SortConfig;
+use crate::key::{Item, Kv, Kv64};
 
 /// Augmented lane record: item + stability tag.
 #[derive(Clone, Copy, Debug)]
@@ -173,6 +183,114 @@ pub fn merge_stable_into<T: Item>(a: &[T], b: &[T], w: usize, out: &mut Vec<T>) 
     debug_assert_eq!(out.len() - base, total);
 }
 
+/// A payload record whose stable merge can ride the plain-key SIMD
+/// kernels: merge `(key, source-index)` pairs — the index ordered so
+/// that the packed comparison reproduces exactly the stable tie order
+/// (A's records before B's, input order within each side) — then
+/// gather the payloads through the resulting permutation.
+pub trait StableSimdMerge: Item {
+    /// Append the stable descending merge of `a` and `b` to `out`
+    /// using a SIMD key–index merge. Returns `false` when no kernel
+    /// fits this type or CPU (the caller takes the tagged scalar
+    /// path). When it returns `true` the output is byte-identical to
+    /// [`merge_stable_into`].
+    fn simd_stable_merge(a: &[Self], b: &[Self], w: usize, out: &mut Vec<Self>) -> bool {
+        let _ = (a, b, w, out);
+        false
+    }
+}
+
+/// `Kv` packs `(key << 32) | rank` into single `u64` lanes. Ranks are
+/// assigned descending in stable output order — A's record `i` gets
+/// `total−1−i`, B's record `j` gets `nb−1−j` — so all ranks are
+/// distinct, every A rank exceeds every B rank (A wins key ties), and
+/// within each side earlier records hold larger ranks. Both packed
+/// arrays are then *strictly* descending, and the unique descending
+/// u64 merge of them is exactly the stable merge of the records.
+impl StableSimdMerge for Kv {
+    fn simd_stable_merge(a: &[Self], b: &[Self], w: usize, out: &mut Vec<Self>) -> bool {
+        let (na, nb) = (a.len(), b.len());
+        let total = na + nb;
+        if total > u32::MAX as usize || <u64 as SimdMergeable>::simd_tier() == "scalar" {
+            return false;
+        }
+        let pa: Vec<u64> = a
+            .iter()
+            .enumerate()
+            .map(|(i, kv)| ((kv.key as u64) << 32) | (total - 1 - i) as u64)
+            .collect();
+        let pb: Vec<u64> = b
+            .iter()
+            .enumerate()
+            .map(|(j, kv)| ((kv.key as u64) << 32) | (nb - 1 - j) as u64)
+            .collect();
+        let mut merged = vec![0u64; total];
+        if !<u64 as SimdMergeable>::simd_merge_desc(&pa, &pb, w, &mut merged) {
+            return false;
+        }
+        out.reserve(total);
+        for &p in &merged {
+            let idx = (p & 0xffff_ffff) as usize;
+            // A ranks occupy [nb, total); B ranks occupy [0, nb).
+            out.push(if idx >= nb { a[total - 1 - idx] } else { b[nb - 1 - idx] });
+        }
+        true
+    }
+}
+
+/// `Kv64` keys fill a whole lane, so no index rides along: SIMD-merge
+/// the bare keys, then reconstruct the record order with a stable
+/// two-pointer gather. At each output slot the merged key is the max
+/// of the two remaining heads, so "A's head matches" is exactly the
+/// stable A-wins-ties rule, and each side is consumed in input order.
+impl StableSimdMerge for Kv64 {
+    fn simd_stable_merge(a: &[Self], b: &[Self], w: usize, out: &mut Vec<Self>) -> bool {
+        if <u64 as SimdMergeable>::simd_tier() == "scalar" {
+            return false;
+        }
+        let (na, nb) = (a.len(), b.len());
+        let ka: Vec<u64> = a.iter().map(|r| r.key).collect();
+        let kb: Vec<u64> = b.iter().map(|r| r.key).collect();
+        let mut merged = vec![0u64; na + nb];
+        if !<u64 as SimdMergeable>::simd_merge_desc(&ka, &kb, w, &mut merged) {
+            return false;
+        }
+        out.reserve(na + nb);
+        let (mut ia, mut ib) = (0usize, 0usize);
+        for &k in &merged {
+            if ia < na && a[ia].key == k {
+                out.push(a[ia]);
+                ia += 1;
+            } else {
+                out.push(b[ib]);
+                ib += 1;
+            }
+        }
+        true
+    }
+}
+
+/// [`merge_stable_into`] with kernel dispatch: the SIMD key–index tier
+/// when the kernel asks for it and both sides can prime a block, the
+/// tagged scalar path otherwise. Byte-identical either way — this is
+/// the entry `ExtItem::merge_into` uses for payload records, so both
+/// external-sort phases dispatch the same way.
+pub fn merge_stable_simd<T: StableSimdMerge>(
+    a: &[T],
+    b: &[T],
+    w: usize,
+    kernel: MergeKernel,
+    out: &mut Vec<T>,
+) {
+    if kernel.wants_simd()
+        && a.len().min(b.len()) >= SIMD_MIN_SIDE
+        && T::simd_stable_merge(a, b, w, out)
+    {
+        return;
+    }
+    merge_stable_into(a, b, w, out);
+}
+
 /// Stable descending sort of arbitrary [`Item`] records: insertion-sorted
 /// base runs of `cfg.chunk` (insertion sort is stable), then bottom-up
 /// [`merge_stable_into`] passes. This is the phase-1 pipeline the external
@@ -215,10 +333,50 @@ pub fn sort_stable_desc<T: Item>(x: &mut Vec<T>, cfg: crate::flims::sort::SortCo
     *x = src;
 }
 
+/// [`sort_stable_desc`] with kernel dispatch: every bottom-up pass
+/// merges through [`merge_stable_simd`], so phase-1 chunk sorts of
+/// payload records run the SIMD key–index tier too (under
+/// `kernel=scalar` this is exactly [`sort_stable_desc`]).
+pub fn sort_stable_desc_with<T: StableSimdMerge>(
+    x: &mut Vec<T>,
+    cfg: SortConfig,
+    kernel: MergeKernel,
+) {
+    use crate::flims::chunk_sort::insertion_sort_desc;
+    let n = x.len();
+    let chunk = cfg.chunk.max(2);
+    for c in x.chunks_mut(chunk) {
+        insertion_sort_desc(c);
+    }
+    if n <= chunk {
+        return;
+    }
+    let mut src = std::mem::take(x);
+    let mut dst: Vec<T> = Vec::with_capacity(n);
+    let mut run = chunk;
+    while run < n {
+        dst.clear();
+        let mut pos = 0;
+        while pos < n {
+            let end = (pos + 2 * run).min(n);
+            let mid = (pos + run).min(end);
+            if mid == end {
+                dst.extend_from_slice(&src[pos..end]);
+            } else {
+                merge_stable_simd(&src[pos..mid], &src[mid..end], cfg.w, kernel, &mut dst);
+            }
+            pos = end;
+        }
+        std::mem::swap(&mut src, &mut dst);
+        run *= 2;
+    }
+    *x = src;
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::{gen_kv, Distribution};
+    use crate::data::{gen_kv, gen_kv64, Distribution};
     use crate::key::Kv;
     use crate::util::rng::Rng;
 
@@ -350,5 +508,98 @@ mod tests {
         let expect = v.clone();
         sort_stable_desc(&mut v, SortConfig::default());
         assert_eq!(v, expect);
+    }
+
+    #[test]
+    fn kv_simd_stable_merge_matches_scalar() {
+        let mut rng = Rng::new(35);
+        for w in [4usize, 8, 16] {
+            for alphabet in [1u32, 3, 1 << 20] {
+                for _ in 0..8 {
+                    let (na, nb) = (rng.range(0, 300), rng.range(0, 300));
+                    let a = sorted_kv(&mut rng, na, alphabet);
+                    let b = sorted_kv(&mut rng, nb, alphabet);
+                    let mut scalar = Vec::new();
+                    merge_stable_simd(&a, &b, w, MergeKernel::Scalar, &mut scalar);
+                    let mut simd = Vec::new();
+                    merge_stable_simd(&a, &b, w, MergeKernel::Simd, &mut simd);
+                    assert_eq!(scalar, oracle(&a, &b), "scalar w={w}");
+                    assert_eq!(simd, scalar, "simd w={w} alphabet={alphabet}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kv64_simd_stable_merge_matches_scalar() {
+        let mut rng = Rng::new(36);
+        for w in [4usize, 8] {
+            for dist in [
+                Distribution::Uniform,
+                Distribution::DupHeavy { alphabet: 3 },
+                Distribution::Zipf { s_x100: 150, n_ranks: 64 },
+            ] {
+                for _ in 0..6 {
+                    let (na, nb) = (rng.range(0, 300), rng.range(0, 300));
+                    let mk = |n: usize, rng: &mut Rng| -> Vec<Kv64> {
+                        let mut v = gen_kv64(rng, n, dist);
+                        v.sort_by(|a, b| b.key.cmp(&a.key).then(a.val.cmp(&b.val)));
+                        v
+                    };
+                    let a = mk(na, &mut rng);
+                    let b = mk(nb, &mut rng);
+                    let mut scalar = Vec::new();
+                    merge_stable_into(&a, &b, w, &mut scalar);
+                    let mut simd = Vec::new();
+                    merge_stable_simd(&a, &b, w, MergeKernel::Simd, &mut simd);
+                    assert_eq!(simd, scalar, "w={w} dist={dist:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_stable_all_equal_keys_keeps_input_order() {
+        // The §6 extreme on the SIMD tier: every key identical — the
+        // key–index packing must emit exactly A in order, then B.
+        let a: Vec<Kv> = (0..64u32).map(|i| Kv::new(9, i)).collect();
+        let b: Vec<Kv> = (0..48u32).map(|i| Kv::new(9, 500 + i)).collect();
+        let mut out = Vec::new();
+        merge_stable_simd(&a, &b, 8, MergeKernel::Simd, &mut out);
+        let expect: Vec<Kv> = a.iter().chain(b.iter()).copied().collect();
+        assert_eq!(out, expect);
+        let a64: Vec<Kv64> = (0..64u64).map(|i| Kv64 { key: 9, val: i }).collect();
+        let b64: Vec<Kv64> = (0..48u64).map(|i| Kv64 { key: 9, val: 500 + i }).collect();
+        let mut out = Vec::new();
+        merge_stable_simd(&a64, &b64, 8, MergeKernel::Simd, &mut out);
+        let expect: Vec<Kv64> = a64.iter().chain(b64.iter()).copied().collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn merge_stable_simd_appends() {
+        let mut out = vec![Kv::new(99, 99)];
+        let a: Vec<Kv> = (0..8u32).map(|i| Kv::new(50 - i, i)).collect();
+        let b: Vec<Kv> = (0..8u32).map(|i| Kv::new(49 - i, 100 + i)).collect();
+        merge_stable_simd(&a, &b, 4, MergeKernel::Simd, &mut out);
+        assert_eq!(out[0], Kv::new(99, 99));
+        let mut expect = vec![Kv::new(99, 99)];
+        merge_stable_into(&a, &b, 4, &mut expect);
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn sort_stable_desc_with_matches_scalar_sort() {
+        let mut rng = Rng::new(37);
+        for n in [0usize, 1, 100, 1000, 5000] {
+            for alphabet in [2u32, 1 << 20] {
+                let v0 = gen_kv(&mut rng, n, Distribution::DupHeavy { alphabet });
+                let mut scalar = v0.clone();
+                sort_stable_desc(&mut scalar, SortConfig { w: 8, chunk: 64 });
+                let mut simd = v0.clone();
+                sort_stable_desc_with(&mut simd, SortConfig { w: 8, chunk: 64 }, MergeKernel::Simd);
+                assert_eq!(simd, scalar, "n={n} alphabet={alphabet}");
+            }
+        }
     }
 }

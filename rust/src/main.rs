@@ -5,7 +5,7 @@
 //! ```text
 //! flims sort     --n 1000000 [--dist uniform|zipf|dup] [--backend native|parallel|pjrt|external] [--w 16] [--chunk 128] [--kernel auto|scalar|simd]
 //! flims merge    --n 65536 [--w 16] [--kernel auto|scalar|simd]
-//! flims sortfile --input data.u32 [--output out.u32] [--dtype u32|u64|kv|kv64|f32]
+//! flims sortfile --input data.u32 [--output out.u32] [--dtype u32|u64|i32|i64|kv|kv64|f32]
 //!                [--codec raw|delta|flr3] [--overlap on|off] [--kernel auto|scalar|simd]
 //!                [--budget-mb 64] [--fan-in 8] [--threads T] [--prefetch B] [--gen N]
 //!                [--trace out.trace.json]  # Chrome trace-event JSON of the sort
@@ -31,7 +31,7 @@ use flims::external;
 use flims::external::{parse_codec_arg, Dtype, ExtItem, ExternalConfig};
 use flims::config::{AppConfig, RawConfig};
 use flims::coordinator::{BatcherConfig, Router, Service};
-use flims::data::{gen_u32, gen_u64, Distribution};
+use flims::data::{gen_i32, gen_i64, gen_u32, gen_u64, Distribution};
 use flims::key::{F32Key, Item, Kv, Kv64};
 use flims::flims::scalar::{FlimsMerger, Variant};
 use flims::flims::simd::{merge_desc_kernel, MergeKernel};
@@ -158,7 +158,7 @@ fn print_help() {
                      [--w W] [--chunk C] [--threads T] [--kernel auto|scalar|simd]\n\
                      [--config FILE]\n\
            merge     --n N [--w W] [--kernel auto|scalar|simd]\n\
-           sortfile  --input F [--output F] [--dtype u32|u64|kv|kv64|f32]\n\
+           sortfile  --input F [--output F] [--dtype u32|u64|i32|i64|kv|kv64|f32]\n\
                      [--codec raw|delta|flr3] [--overlap on|off] [--budget-mb M]\n\
                      [--fan-in K] [--threads T] [--prefetch B]\n\
                      [--kernel auto|scalar|simd]\n\
@@ -286,6 +286,18 @@ impl GenRecord for u64 {
     }
 }
 
+impl GenRecord for i32 {
+    fn gen_block(rng: &mut Rng, n: usize, dist: Distribution, _base: u64) -> Vec<Self> {
+        gen_i32(rng, n, dist)
+    }
+}
+
+impl GenRecord for i64 {
+    fn gen_block(rng: &mut Rng, n: usize, dist: Distribution, _base: u64) -> Vec<Self> {
+        gen_i64(rng, n, dist)
+    }
+}
+
 impl GenRecord for Kv {
     fn gen_block(rng: &mut Rng, n: usize, dist: Distribution, base: u64) -> Vec<Self> {
         gen_u32(rng, n, dist)
@@ -333,7 +345,7 @@ fn cmd_sortfile(f: &HashMap<String, String>) -> Result<(), String> {
             p.parse().map_err(|_| "--prefetch must be an integer".to_string())?;
     }
     if let Some(d) = f.get("dtype") {
-        ext.dtype = Dtype::parse(d)?;
+        ext.dtype = Dtype::parse(d).map_err(|e| format!("--dtype: {e}"))?;
     }
     if let Some(c) = f.get("codec") {
         ext.codec = parse_codec_arg(c)?;
@@ -365,6 +377,8 @@ fn cmd_sortfile(f: &HashMap<String, String>) -> Result<(), String> {
     match ext.dtype {
         Dtype::U32 => sortfile_typed::<u32>(f, &ext, &input, &output, trace),
         Dtype::U64 => sortfile_typed::<u64>(f, &ext, &input, &output, trace),
+        Dtype::I32 => sortfile_typed::<i32>(f, &ext, &input, &output, trace),
+        Dtype::I64 => sortfile_typed::<i64>(f, &ext, &input, &output, trace),
         Dtype::Kv => sortfile_typed::<Kv>(f, &ext, &input, &output, trace),
         Dtype::Kv64 => sortfile_typed::<Kv64>(f, &ext, &input, &output, trace),
         Dtype::F32 => sortfile_typed::<F32Key>(f, &ext, &input, &output, trace),
@@ -462,10 +476,12 @@ fn sortfile_typed<T: GenRecord>(
         stats.codec_encode_us as f64 / 1000.0,
         stats.codec_decode_us as f64 / 1000.0,
     );
+    // Effective kernel: the tier this dtype's merges actually ran on,
+    // which may sit below the CPU-wide resolved ceiling.
     println!(
         "  schedule {} | kernel {} | phase1 {:.1} ms | phase2 {:.1} ms | wall {:.1} ms | overlapped {:.1} ms",
         if ext.overlap { "pipelined" } else { "serial" },
-        ext.kernel.resolved_name(),
+        T::DTYPE.effective_kernel(ext.kernel),
         stats.phase1_us as f64 / 1000.0,
         stats.phase2_us as f64 / 1000.0,
         stats.wall_us as f64 / 1000.0,

@@ -209,14 +209,17 @@ fn push_metric(
 /// The label set a per-sort sample is aggregated under in the
 /// exposition: what was sorted (`dtype`), how its spill runs were
 /// encoded (`codec`), which merge-kernel tier ran (`kernel`, the
-/// *resolved* name), and which schedule (`overlap`).
+/// *effective* name for that dtype — see `Dtype::effective_kernel`),
+/// and which schedule (`overlap`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct SortLabels {
-    /// Record type name (`u32` | `u64` | `kv` | `kv64` | `f32`).
+    /// Record type name (`u32` | `u64` | `i32` | `i64` | `kv` | `kv64` | `f32`).
     pub dtype: &'static str,
     /// Effective spill codec name (`raw` | `delta`).
     pub codec: &'static str,
-    /// Resolved merge-kernel name (`scalar`, `simd-avx2`, …).
+    /// Effective merge-kernel name for this dtype (`scalar`,
+    /// `simd-avx2`, …) — what the sort's merges actually ran on, not
+    /// the CPU-wide resolved ceiling.
     pub kernel: &'static str,
     /// Whether the pipelined schedule ran.
     pub overlap: bool,

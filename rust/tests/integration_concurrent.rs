@@ -67,6 +67,8 @@ fn concurrent_sortfile_jobs_match_the_serial_run() {
         .collect();
 
     let mut app = AppConfig { max_jobs: 2, job_queue_depth: 8, ..AppConfig::default() };
+    // u32 datasets, no dtype= in the request: pin against FLIMS_DTYPE.
+    app.external.dtype = flims::external::Dtype::U32;
     app.external.mem_budget_bytes = 4096;
     app.external.fan_in = 4;
     app.external.tmp_dir = Some(spill.clone());
@@ -152,6 +154,8 @@ fn cancellation_unwinds_queued_and_running_jobs_without_leaks() {
     write_raw(&big, &data).unwrap();
 
     let mut app = AppConfig { max_jobs: 1, job_queue_depth: 4, ..AppConfig::default() };
+    // u32 dataset, no dtype= in the request: pin against FLIMS_DTYPE.
+    app.external.dtype = flims::external::Dtype::U32;
     app.external.mem_budget_bytes = 4096;
     app.external.fan_in = 4;
     app.external.tmp_dir = Some(spill.clone());

@@ -319,6 +319,8 @@ fn sortfile_service_round_trip_over_tcp() {
     app.external.tmp_dir = Some(dir.clone());
     app.external.threads = 2;
     app.external.prefetch_blocks = 2;
+    // u32 dataset, no dtype= in the request: pin against FLIMS_DTYPE.
+    app.external.dtype = flims::external::Dtype::U32;
     let router = Arc::new(Router::new(app, None));
     let service = Arc::new(Service::new(
         router,
@@ -372,7 +374,11 @@ fn sortfile_service_round_trip_over_tcp() {
 #[test]
 fn sortfile_service_error_paths_stay_one_line() {
     let dir = test_dir("errs");
-    let router = Arc::new(Router::new(AppConfig::default(), None));
+    // Case 2 below depends on the default dtype accepting a 12-byte
+    // file, so pin it to u32 against the FLIMS_DTYPE lane.
+    let mut app = AppConfig::default();
+    app.external.dtype = flims::external::Dtype::U32;
+    let router = Arc::new(Router::new(app, None));
     let service = Service::new(router, BatcherConfig::default());
 
     // 1. Missing input file.

@@ -227,6 +227,8 @@ fn overlap_errors_are_one_err_line_through_the_service() {
     // connection logic stays usable — no partial replies, no hang.
     let dir = test_dir("svc");
     let mut app = AppConfig::default();
+    // u32 fixtures, no dtype= in the requests: pin against FLIMS_DTYPE.
+    app.external.dtype = flims::external::Dtype::U32;
     app.external.mem_budget_bytes = 4096;
     app.external.overlap = true;
     app.external.threads = 2;

@@ -5,12 +5,13 @@
 //! (For plain keys a descending merge output is unique, so equivalence
 //! is exactly correctness; these tests pin both at once.)
 
-use flims::data::{gen_kv, gen_u32, gen_u64, Distribution};
+use flims::data::{gen_i32, gen_i64, gen_kv, gen_u32, gen_u64, Distribution};
 use flims::external::{sort_vec, Codec, ExtItem, ExternalConfig};
 use flims::flims::parallel::{par_sort_desc, ParSortConfig};
 use flims::flims::simd::{merge_desc_kernel_slice, MergeKernel, SimdMergeable};
 use flims::flims::sort::{sort_desc_with, SortConfig};
-use flims::key::{F32Key, Item, Kv64};
+use flims::flims::{merge_stable_into, merge_stable_simd, StableSimdMerge};
+use flims::key::{F32Key, Item, Kv, Kv64};
 use flims::util::rng::Rng;
 
 const WIDTHS: &[usize] = &[2, 4, 8, 16, 32];
@@ -94,6 +95,51 @@ fn merge_equivalence_u64() {
                 n_ranks: 128,
             }));
             assert_kernels_agree(&a, &b, w, "u64");
+        }
+    }
+}
+
+#[test]
+fn merge_equivalence_i32_with_sentinels() {
+    // The sign-flip bias kernels: the biased vector domain must order
+    // exactly like native signed comparison, across the sign boundary
+    // and at the extremes (the i32 sentinel is i32::MIN).
+    let mut rng = Rng::new(9110);
+    for &w in WIDTHS {
+        assert_kernels_agree::<i32>(&[], &[], w, "empty");
+        assert_kernels_agree::<i32>(
+            &[i32::MAX, 1, 0, -1, i32::MIN],
+            &[i32::MAX - 1, -1, i32::MIN],
+            w,
+            "extremes",
+        );
+        assert_kernels_agree::<i32>(&[0, -1, -1, i32::MIN, i32::MIN], &[-1; 64], w, "ties");
+        for (na, nb) in [(1usize, 63usize), (17, 15), (257, 255), (1023, 513)] {
+            let a = sorted_desc(gen_i32(&mut rng, na, Distribution::Uniform));
+            let b = sorted_desc(gen_i32(&mut rng, nb, Distribution::Zipf {
+                s_x100: 130,
+                n_ranks: 256,
+            }));
+            assert_kernels_agree(&a, &b, w, "i32");
+        }
+    }
+}
+
+#[test]
+fn merge_equivalence_i64_with_sentinels() {
+    let mut rng = Rng::new(9111);
+    for &w in WIDTHS {
+        assert_kernels_agree::<i64>(&[], &[], w, "empty");
+        assert_kernels_agree::<i64>(
+            &[i64::MAX, 1 << 40, 0, -1, i64::MIN],
+            &[i64::MAX / 2, -(1 << 40), i64::MIN],
+            w,
+            "extremes",
+        );
+        for (na, nb) in [(5usize, 1000usize), (129, 127), (64, 64)] {
+            let a = sorted_desc(gen_i64(&mut rng, na, Distribution::Uniform));
+            let b = sorted_desc(gen_i64(&mut rng, nb, Distribution::DupHeavy { alphabet: 3 }));
+            assert_kernels_agree(&a, &b, w, "i64");
         }
     }
 }
@@ -204,10 +250,18 @@ fn external_sort_equivalence_all_dtypes() {
         .map(|x| F32Key::from_f32(x as f32 - 2e9))
         .collect();
     external_case::<F32Key>(&f32s, "f32");
-    // Payload records: both kernels resolve to the stable scalar tier —
-    // the carve-out must hold the §6 guarantee and still be
-    // byte-identical (trivially, but pin it).
-    external_case::<flims::key::Kv>(
+    // Signed keys ride the bias kernels; salt the datasets with the
+    // extremes so the sign boundary crosses every spill run.
+    let mut i32s = gen_i32(&mut rng, 12_000, Distribution::Uniform);
+    i32s.extend_from_slice(&[i32::MIN, -1, 0, 1, i32::MAX]);
+    external_case::<i32>(&i32s, "i32");
+    let mut i64s = gen_i64(&mut rng, 12_000, Distribution::Zipf { s_x100: 120, n_ranks: 256 });
+    i64s.extend_from_slice(&[i64::MIN, -1, 0, 1, i64::MAX]);
+    external_case::<i64>(&i64s, "i64");
+    // Payload records: both kernels now agree through the SIMD
+    // key–index tier — byte-identical output, §6 guarantee held on
+    // both (stability itself is pinned below).
+    external_case::<Kv>(
         &gen_kv(&mut rng, 12_000, Distribution::DupHeavy { alphabet: 5 }),
         "kv",
     );
@@ -217,6 +271,92 @@ fn external_sort_equivalence_all_dtypes() {
         .map(|(i, key)| Kv64 { key, val: i as u64 })
         .collect();
     external_case::<Kv64>(&kv64, "kv64");
+}
+
+/// Direct stable-merge equivalence: the SIMD key–index tier must be
+/// byte-identical to the tagged scalar merge — which defines the §6
+/// guarantee (ties: all of A's records before any of B's, input order
+/// preserved within each side) — for every width and tie density.
+#[test]
+fn stable_simd_merge_matches_tagged_scalar() {
+    fn case<T>(a: &[T], b: &[T], label: &str)
+    where
+        T: StableSimdMerge + PartialEq + std::fmt::Debug,
+    {
+        for &w in WIDTHS {
+            let mut scalar = Vec::new();
+            merge_stable_into(a, b, w, &mut scalar);
+            for kernel in [MergeKernel::Auto, MergeKernel::Scalar, MergeKernel::Simd] {
+                let mut out = Vec::new();
+                merge_stable_simd(a, b, w, kernel, &mut out);
+                assert_eq!(out, scalar, "{label} w={w} {kernel:?}");
+            }
+        }
+    }
+    let mut rng = Rng::new(9112);
+    let stable = |mut v: Vec<Kv>| {
+        v.sort_by(|x, y| y.key().cmp(&x.key()));
+        v
+    };
+    for alphabet in [1u32, 2, 16] {
+        let a = stable(gen_kv(&mut rng, 3000, Distribution::DupHeavy { alphabet }));
+        let b = stable(gen_kv(&mut rng, 2777, Distribution::DupHeavy { alphabet }));
+        case(&a, &b, &format!("kv/alpha{alphabet}"));
+    }
+    // Degenerate shapes, including sides below the SIMD cutover.
+    case::<Kv>(&[], &[], "kv/empty");
+    case(&[Kv::new(5, 1), Kv::new(5, 2)], &[Kv::new(5, 3)], "kv/tiny-ties");
+    let kv64 = |keys: Vec<u64>, base: u64| -> Vec<Kv64> {
+        let mut v: Vec<Kv64> = keys
+            .into_iter()
+            .enumerate()
+            .map(|(i, key)| Kv64 { key, val: base + i as u64 })
+            .collect();
+        v.sort_by(|x, y| y.key.cmp(&x.key));
+        v
+    };
+    let a = kv64(gen_u64(&mut rng, 3000, Distribution::Zipf { s_x100: 150, n_ranks: 32 }), 0);
+    let b = kv64(gen_u64(&mut rng, 2911, Distribution::Zipf { s_x100: 150, n_ranks: 32 }), 1 << 20);
+    case(&a, &b, "kv64");
+}
+
+/// End-to-end stability property: an external payload sort must equal
+/// the std stable-sort oracle — ties keep input order — for every
+/// threads × overlap × codec combination, on both kernel tiers.
+#[test]
+fn external_payload_sorts_are_stable_across_every_config() {
+    let mut rng = Rng::new(9113);
+    // val = input index, so the oracle's tie order is visible in the
+    // payload bytes.
+    let recs: Vec<Kv> = gen_u32(&mut rng, 12_000, Distribution::DupHeavy { alphabet: 7 })
+        .into_iter()
+        .enumerate()
+        .map(|(i, key)| Kv::new(key, i as u32))
+        .collect();
+    let mut oracle = recs.clone();
+    oracle.sort_by(|x, y| y.key().cmp(&x.key())); // stable
+    for overlap in [false, true] {
+        for codec in [Codec::Raw, Codec::Delta, Codec::Flr3] {
+            for threads in [1usize, 4] {
+                for kernel in [MergeKernel::Scalar, MergeKernel::Simd] {
+                    let cfg = ExternalConfig {
+                        mem_budget_bytes: 1024 * <Kv as ExtItem>::WIRE_BYTES,
+                        fan_in: 4,
+                        overlap,
+                        codec,
+                        threads,
+                        kernel,
+                        ..Default::default()
+                    };
+                    let (out, _) = sort_vec(&recs, &cfg).unwrap();
+                    assert_eq!(
+                        out, oracle,
+                        "stability broke (overlap={overlap} {codec:?} t={threads} {kernel:?})"
+                    );
+                }
+            }
+        }
+    }
 }
 
 #[test]
