@@ -1,0 +1,82 @@
+//! Fault-seam overhead bench: the acceptance bar for PR 10's
+//! injection layer is that a sort with **no fault plan** pays nothing
+//! for the seams (a null check per I/O boundary), and a sort with an
+//! **armed-but-silent** plan (rate 0) pays only the per-checkpoint
+//! draw — bounded here at ≤ 1.05× the fault-free wall-clock.
+//!
+//! The two arms run interleaved round by round so both see the same
+//! machine noise, and the comparison uses each arm's best round (the
+//! classic low-variance estimator for "what does this code cost when
+//! the OS leaves it alone").
+//!
+//! Run: `cargo bench --bench fault_overhead`
+//! `--smoke` shrinks the dataset; the ratio assertion stays on — it is
+//! relative, not an absolute-throughput bar.
+
+use std::time::{Duration, Instant};
+
+use flims::data::{gen_u32, Distribution};
+use flims::external::{sort_vec, ExternalConfig};
+use flims::fault::{FaultSpec, KIND_ALL};
+use flims::util::bench::{write_json_report, BenchArgs, BenchResult};
+use flims::util::rng::Rng;
+
+fn main() {
+    let args = BenchArgs::parse();
+    let mut rows: Vec<BenchResult> = Vec::new();
+    let n = if args.smoke { 1usize << 17 } else { 1usize << 21 };
+    let rounds = 7usize;
+
+    let mut rng = Rng::new(4242);
+    let data = gen_u32(&mut rng, n, Distribution::Uniform);
+
+    // dataset/16 budget → a real spill through every injected seam.
+    let cfg = |fault: Option<FaultSpec>| ExternalConfig {
+        mem_budget_bytes: (n * 4) / 16,
+        fan_in: 8,
+        fault,
+        ..Default::default()
+    };
+    let off = cfg(None);
+    let armed = cfg(Some(FaultSpec { seed: 7, rate_ppm: 0, kinds: KIND_ALL }));
+
+    let mut best = [Duration::MAX; 2]; // [off, armed]
+    println!("== fault seam overhead: {n} u32, budget dataset/16, {rounds} rounds ==\n");
+    println!("{:<8} {:>14} {:>14}", "round", "off ms", "armed ms");
+    for round in 0..rounds {
+        let mut row = [Duration::ZERO; 2];
+        for (i, c) in [&off, &armed].into_iter().enumerate() {
+            let t = Instant::now();
+            let (out, stats) = sort_vec(&data, c).unwrap();
+            row[i] = t.elapsed();
+            assert_eq!(out.len(), n);
+            assert!(stats.runs_spilled > 1, "the bench must really spill");
+            best[i] = best[i].min(row[i]);
+        }
+        println!(
+            "{:<8} {:>14.1} {:>14.1}",
+            round,
+            row[0].as_secs_f64() * 1e3,
+            row[1].as_secs_f64() * 1e3
+        );
+    }
+
+    let ratio = best[1].as_secs_f64() / best[0].as_secs_f64();
+    rows.push(BenchResult::single("fault_off", best[0]));
+    rows.push(BenchResult::single("fault_armed_rate0", best[1]));
+    println!(
+        "\nbest-of-{rounds}: off {:.1} ms, armed {:.1} ms → ratio {ratio:.3}",
+        best[0].as_secs_f64() * 1e3,
+        best[1].as_secs_f64() * 1e3,
+    );
+    assert!(
+        ratio <= 1.05,
+        "an armed-but-silent fault plan costs {ratio:.3}x the fault-free sort \
+         (bar: 1.05x) — the seam is no longer cheap"
+    );
+
+    if let Some(path) = &args.json {
+        write_json_report("fault_overhead", &rows, path).unwrap();
+        println!("\nwrote {} results to {}", rows.len(), path.display());
+    }
+}

@@ -120,6 +120,16 @@ pub struct AppConfig {
     /// here (`[server] queue_depth`); past that, requests are rejected
     /// with `err busy` — backpressure instead of unbounded pile-up.
     pub job_queue_depth: usize,
+    /// times a job that failed on a *transient* I/O error is re-admitted
+    /// before its failure is final (`[server] job_retries`; 0 = never,
+    /// the default — a deterministic sort that failed once normally
+    /// fails again). Capped at 8.
+    pub job_retries: usize,
+    /// per-connection read timeout in milliseconds (`[server]
+    /// read_timeout_ms`; 0 = wait forever). A client that connects and
+    /// goes silent is reaped after this long instead of pinning its
+    /// handler thread for the life of the process.
+    pub read_timeout_ms: u64,
     /// external (out-of-core) sort tuning; `w`/`chunk` here are
     /// placeholders — [`AppConfig::external_config`] substitutes the
     /// engine's values so one pair of knobs tunes both pipelines.
@@ -140,6 +150,8 @@ impl Default for AppConfig {
             batch_window_us: 500,
             max_jobs: max_jobs_default(),
             job_queue_depth: 16,
+            job_retries: 0,
+            read_timeout_ms: 300_000,
             external: ExternalConfig::default(),
         }
     }
@@ -198,6 +210,21 @@ impl AppConfig {
         }
         if let Some(v) = raw.get_usize("server", "queue_depth")? {
             self.job_queue_depth = v;
+        }
+        if let Some(v) = raw.get_usize("server", "job_retries")? {
+            self.job_retries = v;
+        }
+        if let Some(v) = raw.get_usize("server", "read_timeout_ms")? {
+            self.read_timeout_ms = v as u64;
+        }
+        if let Some(v) = raw.get("fault", "plan") {
+            // The fault section maps onto the external config's
+            // injection plan — same grammar (and error wording) as the
+            // CLI's --faults and the protocol's faults= option. An
+            // empty value / "off" disables injection, overriding a
+            // FLIMS_FAULTS env default.
+            self.external.fault =
+                crate::fault::parse_faults_arg(v).map_err(|e| format!("fault.plan: {e}"))?;
         }
         if let Some(v) = raw.get_usize("external", "mem_budget_mb")? {
             self.external.mem_budget_bytes = v << 20;
@@ -262,6 +289,12 @@ impl AppConfig {
             return Err(format!(
                 "server.queue_depth = {} is absurd (max 1024, 0 = reject when slots are full)",
                 self.job_queue_depth
+            ));
+        }
+        if self.job_retries > 8 {
+            return Err(format!(
+                "server.job_retries = {} is absurd (max 8, 0 = never re-admit)",
+                self.job_retries
             ));
         }
         self.external_config().validate()
@@ -447,11 +480,46 @@ batch_max = 16
 
     #[test]
     fn server_section_applies() {
-        let raw = RawConfig::parse("[server]\nmax_jobs = 4\nqueue_depth = 32\n").unwrap();
+        let raw = RawConfig::parse(
+            "[server]\nmax_jobs = 4\nqueue_depth = 32\njob_retries = 2\nread_timeout_ms = 5000\n",
+        )
+        .unwrap();
         let mut cfg = AppConfig::default();
         cfg.apply(&raw).unwrap();
         assert_eq!(cfg.max_jobs, 4);
         assert_eq!(cfg.job_queue_depth, 32);
+        assert_eq!(cfg.job_retries, 2);
+        assert_eq!(cfg.read_timeout_ms, 5000);
+        // Defaults: no re-admission, 5-minute idle reap.
+        let cfg = AppConfig::default();
+        assert_eq!(cfg.job_retries, 0);
+        assert_eq!(cfg.read_timeout_ms, 300_000);
+    }
+
+    #[test]
+    fn fault_plan_applies_and_flows_into_external() {
+        use crate::fault::{FaultSpec, KIND_STALL, KIND_TRANSIENT};
+        let raw = RawConfig::parse("[fault]\nplan = \"7:0.01:transient,stall\"\n").unwrap();
+        let mut cfg = AppConfig::default();
+        cfg.apply(&raw).unwrap();
+        assert_eq!(
+            cfg.external_config().fault,
+            Some(FaultSpec { seed: 7, rate_ppm: 10_000, kinds: KIND_TRANSIENT | KIND_STALL })
+        );
+
+        // "off" disables injection even over an env default.
+        let raw = RawConfig::parse("[fault]\nplan = \"off\"\n").unwrap();
+        let mut cfg = AppConfig::default();
+        cfg.external.fault =
+            Some(FaultSpec { seed: 1, rate_ppm: 5, kinds: KIND_TRANSIENT });
+        cfg.apply(&raw).unwrap();
+        assert_eq!(cfg.external_config().fault, None);
+
+        // Bad plans are loud config errors naming the key.
+        let raw = RawConfig::parse("[fault]\nplan = \"7:2.0:all\"\n").unwrap();
+        let mut cfg = AppConfig::default();
+        let err = cfg.apply(&raw).unwrap_err();
+        assert!(err.contains("fault.plan:"), "{err}");
     }
 
     #[test]
@@ -467,6 +535,10 @@ batch_max = 16
         let mut cfg = AppConfig::default();
         let err = cfg.apply(&raw).unwrap_err();
         assert!(err.contains("server.queue_depth"), "{err}");
+        let raw = RawConfig::parse("[server]\njob_retries = 100\n").unwrap();
+        let mut cfg = AppConfig::default();
+        let err = cfg.apply(&raw).unwrap_err();
+        assert!(err.contains("server.job_retries"), "{err}");
     }
 
     #[test]

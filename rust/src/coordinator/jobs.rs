@@ -283,17 +283,21 @@ impl JobScheduler {
 
     /// Trip `id`'s cancel token. Queued jobs leave the queue promptly;
     /// running jobs abort at the pipeline's next check point and retire
-    /// as `cancelled`.
+    /// as `cancelled`. Idempotent: cancelling a job that already
+    /// finished (done, failed, or cancelled) is a no-op success — a
+    /// client retrying a timed-out `cancel` must not get an error for
+    /// having succeeded the first time. Only an id the scheduler never
+    /// issued (or has forgotten) errors.
     pub fn cancel(&self, id: u64) -> Result<()> {
         let st = self.state.lock().unwrap();
-        let job = st.jobs.get(&id).ok_or_else(|| anyhow!("unknown job {id}"))?;
+        let job = st.jobs.get(&id).ok_or_else(|| anyhow!("unknown job: {id}"))?;
         match job.state() {
             JobState::Queued | JobState::Running => {
                 job.cancel.cancel();
                 self.slot_free.notify_all();
                 Ok(())
             }
-            s => Err(anyhow!("job {id} already {}", s.name())),
+            JobState::Done | JobState::Failed(_) | JobState::Cancelled => Ok(()),
         }
     }
 
@@ -303,7 +307,7 @@ impl JobScheduler {
     pub fn status_line(&self, id: u64) -> Result<String> {
         let job = {
             let st = self.state.lock().unwrap();
-            st.jobs.get(&id).cloned().ok_or_else(|| anyhow!("unknown job {id}"))?
+            st.jobs.get(&id).cloned().ok_or_else(|| anyhow!("unknown job: {id}"))?
         };
         let p = job.progress.snapshot();
         let state = job.state();
@@ -501,9 +505,13 @@ mod tests {
         let err = queued.join().unwrap().unwrap_err();
         assert!(format!("{err:#}").contains("cancelled"), "{err:#}");
         assert!(s.status_line(2).unwrap().contains("state=cancelled"));
-        // Cancelling a finished job is an error; unknown ids too.
-        assert!(s.cancel(2).is_err());
-        assert!(s.cancel(99).unwrap_err().to_string().contains("unknown job"));
+        // Cancelling a finished job is an idempotent no-op success (a
+        // retried cancel must not error); only unknown ids error, with
+        // the uniform "unknown job: <id>" wording status uses too.
+        s.cancel(2).unwrap();
+        assert!(s.status_line(2).unwrap().contains("state=cancelled"));
+        assert!(s.cancel(99).unwrap_err().to_string().contains("unknown job: 99"));
+        assert!(s.status_line(99).unwrap_err().to_string().contains("unknown job: 99"));
         release_tx.send(()).unwrap();
         blocker.join().unwrap().unwrap();
     }

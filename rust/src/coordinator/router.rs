@@ -16,6 +16,7 @@ use anyhow::{anyhow, Context, Result};
 use super::jobs::{Job, JobScheduler};
 use crate::config::AppConfig;
 use crate::external::{self, Codec, Dtype, ExtItem, ExternalConfig, SpillStats};
+use crate::fault::{self, FaultSpec};
 use crate::flims::parallel::{par_sort_desc, ParSortConfig};
 use crate::flims::simd::{merge_desc_kernel, MergeKernel};
 use crate::flims::sort::{sort_desc_with, SortConfig};
@@ -173,6 +174,15 @@ impl Router {
     /// writers from the shared process-wide pool. The sorted bytes are
     /// identical to a serial run — carving changes spill layout, never
     /// output.
+    ///
+    /// `faults` attaches a per-request fault-injection plan (the
+    /// protocol's `faults=` option / `--faults`), overriding the
+    /// `[fault] plan` config default for this request only. With
+    /// `[server] job_retries > 0`, a job that fails on a *transient*
+    /// I/O error (injection exhausted its in-line retries, or a real
+    /// `EINTR` surfaced) is re-admitted that many times before the
+    /// failure is final — each re-admission is a fresh job with a fresh
+    /// id, and a deterministic non-transient failure is never retried.
     pub fn sort_file_external(
         &self,
         input: &Path,
@@ -180,6 +190,7 @@ impl Router {
         codec: Option<Codec>,
         overlap: Option<bool>,
         kernel: Option<MergeKernel>,
+        faults: Option<FaultSpec>,
         trace: Option<&Path>,
     ) -> Result<(PathBuf, SpillStats)> {
         self.metrics.requests.inc();
@@ -198,39 +209,56 @@ impl Router {
         if let Some(kernel) = kernel {
             ext.kernel = kernel;
         }
+        if let Some(spec) = faults {
+            ext.fault = Some(spec);
+        }
         let desc = format!("sortfile {}", input.display());
-        let stats = self.jobs.run(&desc, |job| {
-            let (ext, job_dir) = Self::job_ext(&ext, job);
-            let ctx = job.ctx();
-            let pool = self.jobs.pool();
-            let res = match trace {
-                None => {
-                    let handle = ext.make_trace();
-                    let res = external::sort_file_dtype_ctx(
-                        input, &output, &ext, dtype, &ctx, pool, &handle,
-                    );
-                    if let (Ok(_), Some(dir)) = (&res, &ext.trace_dir) {
-                        obs::chrome::write_auto(&handle, dir);
+        let mut attempt = 0usize;
+        let stats = loop {
+            let res = self.jobs.run(&desc, |job| {
+                let (ext, job_dir) = Self::job_ext(&ext, job);
+                let ctx = job.ctx();
+                let pool = self.jobs.pool();
+                let res = match trace {
+                    None => {
+                        let handle = ext.make_trace();
+                        let res = external::sort_file_dtype_ctx(
+                            input, &output, &ext, dtype, &ctx, pool, &handle,
+                        );
+                        if let (Ok(_), Some(dir)) = (&res, &ext.trace_dir) {
+                            obs::chrome::write_auto(&handle, dir);
+                        }
+                        res
                     }
-                    res
+                    Some(trace_path) => {
+                        let handle = Trace::enabled();
+                        external::sort_file_dtype_ctx(
+                            input, &output, &ext, dtype, &ctx, pool, &handle,
+                        )
+                        .and_then(|stats| {
+                            obs::chrome::write_file(&handle, trace_path).with_context(|| {
+                                format!("writing trace {}", trace_path.display())
+                            })?;
+                            Ok(stats)
+                        })
+                    }
+                };
+                if let Some(d) = &job_dir {
+                    let _ = std::fs::remove_dir(d);
                 }
-                Some(trace_path) => {
-                    let handle = Trace::enabled();
-                    external::sort_file_dtype_ctx(
-                        input, &output, &ext, dtype, &ctx, pool, &handle,
-                    )
-                    .and_then(|stats| {
-                        obs::chrome::write_file(&handle, trace_path)
-                            .with_context(|| format!("writing trace {}", trace_path.display()))?;
-                        Ok(stats)
-                    })
+                res
+            });
+            match res {
+                Ok(stats) => break stats,
+                // Only transient I/O failures are worth a second job;
+                // everything else (bad input, budget, cancellation)
+                // would fail identically.
+                Err(e) if attempt < self.cfg.job_retries && fault::error_is_transient(&e) => {
+                    attempt += 1;
                 }
-            };
-            if let Some(d) = &job_dir {
-                let _ = std::fs::remove_dir(d);
+                Err(e) => return Err(e),
             }
-            res
-        })?;
+        };
         self.metrics.elements_sorted.add(stats.elements);
         self.record_spill(&stats, Self::labels_for(&ext, dtype));
         self.metrics.latency.observe(t.elapsed());
@@ -327,8 +355,20 @@ impl Router {
         let mut out = self.metrics.prometheus();
         progress::prometheus_into(&mut out);
         self.jobs.prometheus_into(&mut out);
+        fault::prometheus_into(&mut out);
         out.push_str("# EOF");
         out
+    }
+
+    /// The per-connection read timeout from `[server] read_timeout_ms`
+    /// (`None` = wait forever) — what `handle_conn` arms each accepted
+    /// socket with so silent clients are reaped instead of pinning
+    /// handler threads.
+    pub fn conn_read_timeout(&self) -> Option<std::time::Duration> {
+        match self.cfg.read_timeout_ms {
+            0 => None,
+            ms => Some(std::time::Duration::from_millis(ms)),
+        }
     }
 
     /// Sort f32 values descending on the requested backend.
@@ -512,7 +552,7 @@ mod tests {
         cfg.external.mem_budget_bytes = 4096;
         let r = Router::new(cfg, None);
         let (out_path, stats) =
-            r.sort_file_external(&input, None, None, None, None, None).unwrap();
+            r.sort_file_external(&input, None, None, None, None, None, None).unwrap();
         assert_eq!(out_path, dir.join("data.u32.sorted"));
         assert_eq!(stats.elements, 5000);
 
@@ -535,7 +575,7 @@ mod tests {
         cfg.external.mem_budget_bytes = 4096;
         let r = Router::new(cfg, None);
         let (out_path, stats) =
-            r.sort_file_external(&input, None, Some(Codec::Delta), None, None, None).unwrap();
+            r.sort_file_external(&input, None, Some(Codec::Delta), None, None, None, None).unwrap();
         assert_eq!(stats.elements, 20_000);
         assert!(
             stats.bytes_spilled < stats.bytes_spilled_raw,
@@ -568,7 +608,7 @@ mod tests {
         cfg.external.mem_budget_bytes = 8192; // 1024-record Kv runs
         let r = Router::new(cfg, None);
         let (out_path, stats) = r
-            .sort_file_external(&input, Some(crate::external::Dtype::Kv), None, None, None, None)
+            .sort_file_external(&input, Some(crate::external::Dtype::Kv), None, None, None, None, None)
             .unwrap();
         assert_eq!(stats.elements, 4000);
 
@@ -596,7 +636,7 @@ mod tests {
             let input = dir.join(format!("data-{overlap}.u32"));
             crate::external::format::write_raw(&input, &v).unwrap();
             let (out_path, stats) =
-                r.sort_file_external(&input, None, None, Some(overlap), None, None).unwrap();
+                r.sort_file_external(&input, None, None, Some(overlap), None, None, None).unwrap();
             assert_eq!(stats.elements, 20_000);
             assert!(stats.merge_passes >= 2, "multi-pass workload expected");
             if !overlap {
@@ -628,7 +668,7 @@ mod tests {
             let input = dir.join(format!("data-{}.u32", kernel.name()));
             crate::external::format::write_raw(&input, &v).unwrap();
             let (out_path, stats) =
-                r.sort_file_external(&input, None, None, None, Some(kernel), None).unwrap();
+                r.sort_file_external(&input, None, None, None, Some(kernel), None, None).unwrap();
             assert_eq!(stats.elements, 20_000);
             outputs.push(std::fs::read(&out_path).unwrap());
         }
@@ -672,7 +712,7 @@ mod tests {
         let r = Router::new(cfg, None);
         let trace_path = dir.join("sort.trace.json");
         let (out_path, stats) = r
-            .sort_file_external(&input, None, None, None, None, Some(&trace_path))
+            .sort_file_external(&input, None, None, None, None, None, Some(&trace_path))
             .unwrap();
         assert_eq!(stats.elements, 10_000);
 
@@ -749,6 +789,44 @@ mod tests {
     }
 
     #[test]
+    fn transient_job_failures_are_readmitted_then_final() {
+        let dir =
+            std::env::temp_dir().join(format!("flims-router-retry-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("data.u32");
+        let mut rng = Rng::new(312);
+        let v = gen_u32(&mut rng, 10_000, Distribution::Uniform);
+        crate::external::format::write_raw(&input, &v).unwrap();
+
+        // A rate-1.0 transient-only plan: every spill op injects until
+        // the in-line retries are exhausted, so every job fails with a
+        // transient error — deterministically.
+        let mut cfg = u32_cfg();
+        cfg.external.mem_budget_bytes = 4096;
+        cfg.job_retries = 2;
+        cfg.external.fault = Some(crate::fault::FaultSpec {
+            seed: 1,
+            rate_ppm: 1_000_000,
+            kinds: crate::fault::KIND_TRANSIENT,
+        });
+        let r = Router::new(cfg, None);
+        let err = format!(
+            "{:#}",
+            r.sort_file_external(&input, None, None, None, None, None, None).unwrap_err()
+        );
+        assert!(err.contains("injected transient"), "{err}");
+        // Re-admitted twice after the first failure: three jobs total,
+        // all failed, and no partial output or spill left behind.
+        let report = r.jobs.report();
+        assert!(report.starts_with("jobs=3"), "{report}");
+        for id in 1..=3 {
+            assert!(report.contains(&format!("{id}:failed")), "{report}");
+        }
+        assert!(!dir.join("data.u32.sorted").exists(), "partial output must be removed");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
     fn stats_reset_rejected_while_jobs_active() {
         use std::sync::mpsc;
         let r = Arc::new(router());
@@ -803,7 +881,7 @@ mod tests {
             let r = Arc::clone(&r);
             let tx = tx.clone();
             std::thread::spawn(move || {
-                tx.send(r.sort_file_external(&input, None, None, None, None, None)).unwrap();
+                tx.send(r.sort_file_external(&input, None, None, None, None, None, None)).unwrap();
             });
         }
         drop(tx);

@@ -10,7 +10,7 @@
 //! batch <f1> <f2> …             →  ok <sorted>  (goes through the batcher)
 //! merge <a...> | <b...>         →  ok <merged>  (desc-sorted u32 inputs)
 //! sortfile external <path> [dtype=<d>] [codec=<c>] [overlap=<o>] [kernel=<k>]
-//!                   [trace=<t>]
+//!                   [faults=<f>] [trace=<t>]
 //!                               →  ok <n> <output-path>  (raw record file,
 //!                                   sorted descending to <path>.sorted;
 //!                                   d = u32|u64|kv|kv64|f32,
@@ -23,11 +23,17 @@
 //!                                   trace-event JSON of the sort to
 //!                                   (load it in chrome://tracing or
 //!                                   Perfetto; tracing never changes the
-//!                                   output bytes), defaults from the
+//!                                   output bytes), f = a fault plan
+//!                                   `<seed>:<rate>:<kinds>` (or `off`)
+//!                                   injected into THIS request only —
+//!                                   the deterministic fault-injection
+//!                                   hook the robustness tests drive
+//!                                   (docs/ROBUSTNESS.md), defaults
+//!                                   from the
 //!                                   `[external]` / `[core]` config
 //!                                   sections; only trailing `dtype=`/
 //!                                   `codec=`/`overlap=`/`kernel=`/
-//!                                   `trace=`-prefixed tokens are
+//!                                   `faults=`/`trace=`-prefixed tokens are
 //!                                   treated as options, so paths
 //!                                   containing spaces keep working. A
 //!                                   bad value is a one-line `err`
@@ -60,7 +66,13 @@
 //!                                   leave the queue promptly; running
 //!                                   jobs abort at the pipeline's next
 //!                                   check point and their spill files
-//!                                   and partial output are removed)
+//!                                   and partial output are removed;
+//!                                   cancelling an already-finished or
+//!                                   already-cancelled job is a no-op
+//!                                   `ok` — cancel is idempotent. Both
+//!                                   `status` and `cancel` answer a
+//!                                   missing id with the same
+//!                                   `err unknown job: <id>` line)
 //! metrics                       →  Prometheus text exposition ending
 //!                                   with `# EOF` (the ONE multi-line
 //!                                   response; clients read until the
@@ -186,7 +198,7 @@ impl Service {
             }
             "sortfile" => {
                 let usage = "usage: sortfile external <path> [dtype=<d>] [codec=<c>] \
-                             [overlap=<o>] [kernel=<k>] [trace=<t>]";
+                             [overlap=<o>] [kernel=<k>] [faults=<f>] [trace=<t>]";
                 let (backend, rest) =
                     rest.split_once(' ').ok_or_else(|| anyhow!("{usage}"))?;
                 let backend = Backend::parse(backend)?;
@@ -203,6 +215,9 @@ impl Service {
                 let mut codec = None;
                 let mut overlap = None;
                 let mut kernel = None;
+                // Two-level Option: the outer layer is the dup check
+                // (`faults=off` is a legal value meaning "no plan").
+                let mut faults: Option<Option<crate::fault::FaultSpec>> = None;
                 let mut trace: Option<std::path::PathBuf> = None;
                 while !path.is_empty() {
                     // The last whitespace-separated token; the whole
@@ -239,6 +254,12 @@ impl Service {
                         if kernel.replace(k).is_some() {
                             bail!("kernel argument: given more than once");
                         }
+                    } else if let Some(name) = tail.strip_prefix("faults=") {
+                        let f = crate::fault::parse_faults_arg(name)
+                            .map_err(|e| anyhow!("faults argument: {e}"))?;
+                        if faults.replace(f).is_some() {
+                            bail!("faults argument: given more than once");
+                        }
                     } else if let Some(name) = tail.strip_prefix("trace=") {
                         if name.is_empty() {
                             bail!("trace argument: empty path");
@@ -260,6 +281,7 @@ impl Service {
                     codec,
                     overlap,
                     kernel,
+                    faults.flatten(),
                     trace.as_deref(),
                 )?;
                 Ok(format!("ok {} {}", stats.elements, output.display()))
@@ -399,6 +421,13 @@ impl Service {
     }
 
     fn handle_conn(&self, stream: TcpStream) {
+        // Arm the per-connection read timeout ([server] read_timeout_ms;
+        // 0 = wait forever). A client that connects and then says
+        // nothing holds a worker thread + socket; when the timeout
+        // fires the blocked read returns Err, the loop below breaks,
+        // and the accept loop reaps the finished thread — idle
+        // connections can't accumulate forever.
+        let _ = stream.set_read_timeout(self.router.conn_read_timeout());
         // Buffer the writes (one syscall per response, not one per
         // formatting fragment) and flush per response so the client
         // always sees the full reply before its next request.
@@ -971,7 +1000,7 @@ mod tests {
         line.clear();
         conn.write_all(b"status 7\r\n").unwrap();
         reader.read_line(&mut line).unwrap();
-        assert_eq!(line.trim_end(), "err unknown job 7");
+        assert_eq!(line.trim_end(), "err unknown job: 7");
 
         line.clear();
         conn.write_all(b"quit\r\n").unwrap();
@@ -1014,14 +1043,133 @@ mod tests {
         assert!(status.starts_with("ok job=1 state=done runs_sealed="), "{status}");
         assert!(!status.contains("runs_sealed=0 "), "a spilling sort seals runs: {status}");
 
-        // Finished jobs can't be cancelled; unknown ids and bad
-        // arguments are one-line errors.
-        assert_eq!(s.handle_line("cancel 1"), "err job 1 already done");
-        assert_eq!(s.handle_line("status 99"), "err unknown job 99");
-        assert_eq!(s.handle_line("cancel 99"), "err unknown job 99");
+        // Cancelling a finished job is an idempotent no-op `ok`;
+        // unknown ids answer the same one-line error from both verbs,
+        // and bad arguments are one-line usage errors.
+        assert_eq!(s.handle_line("cancel 1"), "ok cancelled 1");
+        let status = s.handle_line("status 1");
+        assert!(status.contains("state=done"), "idempotent cancel must not flip state: {status}");
+        assert_eq!(s.handle_line("status 99"), "err unknown job: 99");
+        assert_eq!(s.handle_line("cancel 99"), "err unknown job: 99");
         assert_eq!(s.handle_line("status banana"), "err usage: status <job-id>");
         assert_eq!(s.handle_line("cancel"), "err usage: cancel <job-id>");
         assert_eq!(s.handle_line("jobs now"), "err usage: jobs");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// A connection that goes silent is reaped by the `[server]`
+    /// read-timeout: its worker's blocked read returns, the thread
+    /// exits, and the client sees EOF — idle sockets can't pin worker
+    /// threads forever.
+    #[test]
+    fn idle_connections_are_reaped_by_the_read_timeout() {
+        use std::io::{BufRead, BufReader, Write};
+        let mut app = AppConfig::default();
+        app.read_timeout_ms = 200;
+        let router = Arc::new(Router::new(app, None));
+        let service = Arc::new(Service::new(
+            router,
+            BatcherConfig { max_batch: 4, window: Duration::from_micros(100) },
+        ));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        drop(listener);
+        let svc2 = service.clone();
+        let bind = addr.to_string();
+        let serve_thread = std::thread::spawn(move || svc2.serve(&bind));
+        std::thread::sleep(Duration::from_millis(50));
+
+        // A chatty connection answers normally…
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        writeln!(conn, "sort native 2 1").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "ok 2 1");
+
+        // …while a silent one is closed by the server once the timeout
+        // fires, instead of holding its worker thread forever.
+        let idle = TcpStream::connect(addr).unwrap();
+        let mut idle_reader = BufReader::new(idle);
+        let mut end = String::new();
+        let t0 = std::time::Instant::now();
+        let got = idle_reader.read_line(&mut end);
+        assert!(
+            matches!(got, Ok(0) | Err(_)),
+            "reaped connection must see EOF/reset, got {end:?}"
+        );
+        assert!(t0.elapsed() < Duration::from_secs(5), "reap took {:?}", t0.elapsed());
+
+        service.shutdown();
+        serve_thread.join().unwrap().unwrap();
+    }
+
+    /// The `faults=` request argument: a survivable transient plan is
+    /// retried to byte-identical output, a lethal ENOSPC plan fails
+    /// that one request with a one-line `err` (the service keeps
+    /// serving), and bad values name the offending argument.
+    #[test]
+    fn sortfile_with_faults_argument() {
+        use crate::external::format::{read_raw, write_raw};
+        let dir = std::env::temp_dir().join(format!("flims-svc-flt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("req.u32");
+        let data: Vec<u32> = (0..20_000u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        write_raw(&input, &data).unwrap();
+
+        // Tight budget so every spill seam is actually exercised. Pin
+        // the config-level plan to None: this test drives faults per
+        // request, and the FLIMS_FAULTS CI lane must not pre-arm one.
+        let mut app = crate::config::AppConfig::default();
+        app.external.mem_budget_bytes = 4096;
+        app.external.dtype = crate::external::Dtype::U32;
+        app.external.fault = None;
+        let router = Arc::new(Router::new(app, None));
+        let s = Service::new(
+            router,
+            BatcherConfig { max_batch: 2, window: Duration::from_micros(1) },
+        );
+
+        let mut expect = data;
+        expect.sort_unstable_by(|a, b| b.cmp(a));
+        let expect_path = format!("{}.sorted", input.display());
+
+        // Transient faults are absorbed by the retry layer: same `ok`
+        // line, same output bytes as a fault-free sort.
+        let resp = s.handle_line(&format!(
+            "sortfile external {} faults=7:0.02:transient",
+            input.display()
+        ));
+        assert_eq!(resp, format!("ok 20000 {expect_path}"));
+        assert_eq!(read_raw::<u32>(Path::new(&expect_path)).unwrap(), expect);
+
+        // `faults=off` is a legal explicit no-plan value.
+        let resp =
+            s.handle_line(&format!("sortfile external {} faults=off", input.display()));
+        assert_eq!(resp, format!("ok 20000 {expect_path}"));
+
+        // A certain-death plan (ENOSPC on every draw) fails THAT
+        // request with one clean line; the next plain request succeeds.
+        let resp = s.handle_line(&format!(
+            "sortfile external {} faults=1:1.0:enospc",
+            input.display()
+        ));
+        assert!(resp.starts_with("err "), "{resp}");
+        assert!(!resp.contains('\n'), "response must stay one line");
+        let resp = s.handle_line(&format!("sortfile external {}", input.display()));
+        assert_eq!(resp, format!("ok 20000 {expect_path}"));
+        assert_eq!(read_raw::<u32>(Path::new(&expect_path)).unwrap(), expect);
+
+        // Bad values are one-line errors naming the offending argument.
+        let resp =
+            s.handle_line(&format!("sortfile external {} faults=7:2.0:all", input.display()));
+        assert!(resp.starts_with("err "), "{resp}");
+        assert!(resp.contains("faults argument:"), "{resp}");
+        let resp = s.handle_line(&format!(
+            "sortfile external {} faults=1:0.1:all faults=off",
+            input.display()
+        ));
+        assert!(resp.contains("faults argument: given more than once"), "{resp}");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -42,6 +42,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::fault::{self, Injector};
 use crate::flims::simd::{merge_desc_kernel, MergeKernel, SimdMergeable};
 use crate::flims::sort::{sort_desc_with, SortConfig};
 use crate::flims::stable::{merge_stable_simd, sort_stable_desc_with};
@@ -470,6 +471,10 @@ pub struct RunWriter<T: ExtItem> {
     encode_ns: u64,
     byte_buf: Vec<u8>,
     key_buf: Vec<u64>,
+    fault: Injector,
+    /// Set by [`finish`](RunWriter::finish); the drop-guard removes the
+    /// partial file when a writer dies unsealed (failure or cancel).
+    sealed: bool,
     _elem: PhantomData<T>,
 }
 
@@ -492,6 +497,19 @@ impl<T: ExtItem> RunWriter<T> {
     /// merge-kernel tier — `FLR3` encode dispatches its bitpack kernels
     /// on it (the other codecs ignore it).
     pub fn create_with_kernel(path: &Path, codec: Codec, kernel: MergeKernel) -> Result<Self> {
+        Self::create_with_fault(path, codec, kernel, Injector::disabled())
+    }
+
+    /// [`create_with_kernel`](RunWriter::create_with_kernel) with a
+    /// fault-injection handle for this writer's I/O seams (create /
+    /// write / seal). The spill layer materializes one injector per run
+    /// file; direct callers pass [`Injector::disabled`].
+    pub fn create_with_fault(
+        path: &Path,
+        codec: Codec,
+        kernel: MergeKernel,
+        mut fault: Injector,
+    ) -> Result<Self> {
         if codec == Codec::Flr3 && T::WIRE_BYTES != T::KEY_BYTES {
             bail!(
                 "codec flr3 cannot carry {} payload records (keys only — \
@@ -499,7 +517,7 @@ impl<T: ExtItem> RunWriter<T> {
                 T::DTYPE.name()
             );
         }
-        let f = File::create(path)
+        let f = fault::with_retry(&mut fault, fault::Op::Create, || File::create(path))
             .with_context(|| format!("creating run file {}", path.display()))?;
         let mut out = BufWriter::new(f);
         match codec {
@@ -518,6 +536,8 @@ impl<T: ExtItem> RunWriter<T> {
             encode_ns: 0,
             byte_buf: Vec::new(),
             key_buf: Vec::new(),
+            fault,
+            sealed: false,
             _elem: PhantomData,
         })
     }
@@ -555,7 +575,9 @@ impl<T: ExtItem> RunWriter<T> {
             }
         }
         self.encode_ns += t.elapsed().as_nanos() as u64;
-        self.out.write_all(&self.byte_buf)?;
+        let (fault, out, buf) = (&mut self.fault, &mut self.out, &self.byte_buf);
+        fault::with_retry(fault, fault::Op::Write, || out.write_all(buf))
+            .with_context(|| format!("writing run block to {}", self.path.display()))?;
         self.payload_bytes += self.byte_buf.len() as u64;
         self.count += xs.len() as u64;
         Ok(())
@@ -564,17 +586,33 @@ impl<T: ExtItem> RunWriter<T> {
     /// Flush, patch the element count into the header, and return the
     /// finished run's metadata.
     pub fn finish(mut self) -> Result<RunFile> {
-        self.out.flush()?;
-        let f = self.out.get_mut();
-        f.seek(SeekFrom::Start(RUN_MAGIC.len() as u64))?;
-        f.write_all(&self.count.to_le_bytes())?;
+        let (fault, out, count) = (&mut self.fault, &mut self.out, self.count);
+        fault::with_retry(fault, fault::Op::Seal, || {
+            out.flush()?;
+            let f = out.get_mut();
+            f.seek(SeekFrom::Start(RUN_MAGIC.len() as u64))?;
+            f.write_all(&count.to_le_bytes())
+        })
+        .with_context(|| format!("sealing run file {}", self.path.display()))?;
+        self.sealed = true;
         Ok(RunFile {
             bytes: RUN_HEADER_BYTES + self.payload_bytes,
             raw_bytes: RUN_HEADER_BYTES + self.count * T::WIRE_BYTES as u64,
             encode_ns: self.encode_ns,
-            path: self.path,
+            path: std::mem::take(&mut self.path),
             elems: self.count,
         })
+    }
+}
+
+impl<T: ExtItem> Drop for RunWriter<T> {
+    /// RAII guard: a writer dropped before [`finish`](RunWriter::finish)
+    /// — merge failure, cancellation, injected fault — removes its
+    /// partial run file so a failed sort never leaks spill bytes.
+    fn drop(&mut self) {
+        if !self.sealed && !self.path.as_os_str().is_empty() {
+            let _ = std::fs::remove_file(&self.path);
+        }
     }
 }
 
@@ -605,6 +643,7 @@ pub struct RunReader<T: ExtItem> {
     /// silently wrong data.
     prev_key: Option<u64>,
     decode_ns: Option<Arc<AtomicU64>>,
+    fault: Injector,
     _elem: PhantomData<T>,
 }
 
@@ -629,9 +668,32 @@ impl<T: ExtItem> RunReader<T> {
         decode_ns: Option<Arc<AtomicU64>>,
         kernel: MergeKernel,
     ) -> Result<Self> {
-        let f = File::open(path)
+        Self::open_with_fault(path, decode_ns, kernel, Injector::disabled())
+    }
+
+    /// [`open_with_kernel`](RunReader::open_with_kernel) with a
+    /// fault-injection handle for this reader's I/O seams (open and
+    /// every block read). The merge layer materializes one injector per
+    /// run file; direct callers pass [`Injector::disabled`].
+    pub fn open_with_fault(
+        path: &Path,
+        decode_ns: Option<Arc<AtomicU64>>,
+        kernel: MergeKernel,
+        mut fault: Injector,
+    ) -> Result<Self> {
+        let f = fault::with_retry(&mut fault, fault::Op::Read, || File::open(path))
             .with_context(|| format!("opening run file {}", path.display()))?;
         let len = f.metadata()?.len();
+        // A file shorter than the fixed header is a mid-write crash (or
+        // an empty placeholder): say so directly instead of surfacing a
+        // generic short-read error from the magic sniff below.
+        if len < RUN_HEADER_BYTES {
+            bail!(
+                "run truncated: {} ({len} bytes is shorter than the {RUN_HEADER_BYTES}-byte \
+                 run header)",
+                path.display()
+            );
+        }
         let mut inp = BufReader::new(f);
         let mut magic = [0u8; 4];
         inp.read_exact(&mut magic)
@@ -709,6 +771,7 @@ impl<T: ExtItem> RunReader<T> {
             word_buf: Vec::new(),
             prev_key: None,
             decode_ns,
+            fault,
             _elem: PhantomData,
         })
     }
@@ -726,6 +789,12 @@ impl<T: ExtItem> RunReader<T> {
     /// Append up to `max` elements to `out`; returns how many were read
     /// (0 = exhausted).
     pub fn read_block(&mut self, out: &mut Vec<T>, max: usize) -> Result<usize> {
+        // Fail-before-op injection at the block-read seam: a fault fires
+        // before any bytes are consumed, so a retried read re-executes
+        // from a clean stream position.
+        self.fault
+            .checkpoint(fault::Op::Read)
+            .with_context(|| format!("reading run block from {}", self.path.display()))?;
         match self.codec {
             Codec::Raw => read_record_block(
                 &mut self.inp,
@@ -958,6 +1027,7 @@ pub struct RawWriter<T: ExtItem> {
     out: BufWriter<File>,
     count: u64,
     byte_buf: Vec<u8>,
+    fault: Injector,
     _elem: PhantomData<T>,
 }
 
@@ -966,20 +1036,37 @@ impl<T: ExtItem> RawWriter<T> {
     pub fn create(path: &Path) -> Result<Self> {
         let f = File::create(path)
             .with_context(|| format!("creating output {}", path.display()))?;
-        Ok(RawWriter { out: BufWriter::new(f), count: 0, byte_buf: Vec::new(), _elem: PhantomData })
+        Ok(RawWriter {
+            out: BufWriter::new(f),
+            count: 0,
+            byte_buf: Vec::new(),
+            fault: Injector::disabled(),
+            _elem: PhantomData,
+        })
+    }
+
+    /// Attach a fault-injection handle to this writer's output seam
+    /// (the final sink is an injection point like any spill file).
+    pub fn with_fault(mut self, fault: Injector) -> Self {
+        self.fault = fault;
+        self
     }
 
     /// Append a block of records.
     pub fn write_block(&mut self, xs: &[T]) -> Result<()> {
         encode_block(xs, &mut self.byte_buf);
-        self.out.write_all(&self.byte_buf)?;
+        let (fault, out, buf) = (&mut self.fault, &mut self.out, &self.byte_buf);
+        fault::with_retry(fault, fault::Op::Write, || out.write_all(buf))
+            .context("writing output block")?;
         self.count += xs.len() as u64;
         Ok(())
     }
 
     /// Flush and return the element count written.
     pub fn finish(mut self) -> Result<u64> {
-        self.out.flush()?;
+        let (fault, out) = (&mut self.fault, &mut self.out);
+        fault::with_retry(fault, fault::Op::Seal, || out.flush())
+            .context("flushing output")?;
         Ok(self.count)
     }
 }
@@ -1294,6 +1381,41 @@ mod tests {
         std::fs::write(&path, bytes).unwrap();
         let err = format!("{:#}", RunReader::<u32>::open(&path).unwrap_err());
         assert!(err.contains("truncated run"), "{err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn unsealed_writer_drop_removes_partial_file() {
+        for codec in [Codec::Raw, Codec::Delta, Codec::Flr3] {
+            let path = tmp(&format!("dropped-{}.flr", codec.name()));
+            let mut w = RunWriter::create_with(&path, codec).unwrap();
+            w.write_block(&[9u32, 5, 1]).unwrap();
+            assert!(path.exists());
+            drop(w);
+            assert!(!path.exists(), "{}: unsealed writer must remove its partial file", codec.name());
+
+            // A sealed run survives its writer.
+            let mut w = RunWriter::create_with(&path, codec).unwrap();
+            w.write_block(&[9u32, 5, 1]).unwrap();
+            let run = w.finish().unwrap();
+            assert!(run.path.exists(), "{}: sealed run must survive", codec.name());
+            std::fs::remove_file(&run.path).unwrap();
+        }
+    }
+
+    #[test]
+    fn sub_header_files_report_run_truncated() {
+        let path = tmp("stub.flr");
+        for keep in 0..RUN_HEADER_BYTES as usize {
+            std::fs::write(&path, &b"FLR1\x00\x00\x00\x00\x00\x00\x00\x00"[..keep]).unwrap();
+            let err = format!("{:#}", RunReader::<u32>::open(&path).unwrap_err());
+            assert!(err.contains("run truncated:"), "keep={keep}: {err}");
+            assert!(err.contains("stub.flr"), "keep={keep}: {err}");
+        }
+        // Exactly one header claiming zero elements is a legitimate
+        // empty run, not a truncation.
+        std::fs::write(&path, b"FLR1\x00\x00\x00\x00\x00\x00\x00\x00").unwrap();
+        assert!(RunReader::<u32>::open(&path).is_ok());
         std::fs::remove_file(&path).unwrap();
     }
 

@@ -35,11 +35,12 @@ use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Error, Result};
 
 use super::format::{ExtItem, RawWriter, RunFile, RunReader, RunWriter, RUN_HEADER_BYTES};
+use crate::fault::{self, Injector};
 use super::run_gen::{generate_runs_streaming_ctx, RecordSource};
 use super::spill::SpillManager;
 use super::stream::{
@@ -151,10 +152,21 @@ fn open_group<T: ExtItem>(
     let block = cfg.block_elems_for(T::WIRE_BYTES);
     let mut streams: Vec<Box<dyn RunStream<T>>> = Vec::with_capacity(group.len());
     for run in group {
-        let reader = RunReader::<T>::open_with_kernel(
+        // Keyed by the run's file name — assigned in input order by the
+        // SpillManager — so the injected-fault sequence is independent
+        // of worker count and group scheduling.
+        let inj = match cfg.fault {
+            None => Injector::disabled(),
+            Some(_) => {
+                let name = run.path.file_name().map(|n| n.to_string_lossy());
+                Injector::for_site(cfg.fault, name.as_deref().unwrap_or("run"), &counters.trace)
+            }
+        };
+        let reader = RunReader::<T>::open_with_fault(
             &run.path,
             Some(Arc::clone(&counters.decode_ns)),
             cfg.kernel,
+            inj,
         )?;
         if cfg.prefetch_blocks > 0 {
             streams.push(Box::new(PrefetchStream::spawn(
@@ -247,8 +259,19 @@ pub fn merge_runs_ctx<T: ExtItem>(
             }
         }
 
-        for batch in jobs.chunks(threads) {
+        // Disk-pressure degradation ladder: when a batch's projected
+        // outputs breach the disk budget, first shrink the batch width
+        // to one group at a time — groups are independent and processed
+        // in input order, so the output bytes are unchanged, only the
+        // concurrency is lost — then wait briefly in case a concurrent
+        // deletion reclaims space, and only then fail the job with the
+        // original budget error.
+        let mut width = threads;
+        let mut at = 0;
+        while at < jobs.len() {
             ctx.cancel.check()?;
+            let take = width.min(jobs.len() - at);
+            let batch = &jobs[at..at + take];
             // Enforce the disk budget for the whole batch before any
             // merged run is written, not after the disk has filled. The
             // projection is the uncompressed size — conservative when
@@ -260,7 +283,29 @@ pub fn merge_runs_ctx<T: ExtItem>(
                         + g.iter().map(|r| r.elems).sum::<u64>() * T::WIRE_BYTES as u64
                 })
                 .sum();
-            spill.check_headroom(upcoming)?;
+            if let Err(err) = spill.check_headroom(upcoming) {
+                if take > 1 {
+                    width = 1;
+                    fault::note_job_degraded();
+                    continue;
+                }
+                // Already down to one group: a short bounded wait gives
+                // any still-unlinking consumed runs a chance to return
+                // their bytes, then the job fails with one clean error
+                // (never the process).
+                let mut reclaimed = false;
+                for _ in 0..5 {
+                    std::thread::sleep(Duration::from_millis(2));
+                    if spill.check_headroom(upcoming).is_ok() {
+                        reclaimed = true;
+                        break;
+                    }
+                }
+                if !reclaimed {
+                    return Err(err);
+                }
+                fault::note_job_degraded();
+            }
             // Writers are created in group order on this thread, so run
             // numbering stays deterministic for any worker count.
             // Intermediate runs re-encode through the same codec as
@@ -331,6 +376,7 @@ pub fn merge_runs_ctx<T: ExtItem>(
             if let Some(e) = first_err {
                 return Err(e);
             }
+            at += take;
         }
         runs = next
             .into_iter()
@@ -480,7 +526,10 @@ impl<T: ExtItem> Scheduler<'_, T> {
         // several groups merge at once (and, overlapped, phase 1 spills
         // concurrently), none registered until it completes — a plain
         // headroom check here would be blind to the others, and theirs
-        // to ours.
+        // to ours. No degradation ladder here, deliberately: reclaim
+        // (`consume`/`release`) runs on this same event-loop thread, so
+        // sleeping for it would deadlock — a budget breach under the
+        // pipeline fails the job cleanly instead (docs/ROBUSTNESS.md).
         self.spill.reserve(projected)?;
         let writer = match self.spill.create_run_with::<T>(self.codec, self.cfg.kernel) {
             Ok(w) => w,

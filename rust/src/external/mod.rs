@@ -103,6 +103,7 @@ pub use stream::{
     ReaderStream, RunStream, WriterPool,
 };
 
+use crate::fault::{parse_faults_arg, FaultSpec, Injector};
 use crate::flims::simd::MergeKernel;
 use crate::flims::sort::SortConfig;
 use crate::key::{F32Key, Kv, Kv64};
@@ -220,6 +221,18 @@ pub struct ExternalConfig {
     /// environment variable (unset = `auto`) so CI can run the whole
     /// suite on the scalar tier.
     pub kernel: MergeKernel,
+    /// Deterministic fault-injection plan for the spill-I/O seams
+    /// (`None` = disabled, the production default: one null check per
+    /// seam, no clock, no allocation). When set, every run
+    /// create/write/seal/read/delete and the output sink draw from a
+    /// seeded per-site decision stream ([`crate::fault`]), injecting
+    /// transient errors, disk-full, short I/O, and latency stalls —
+    /// recovery must keep the sorted output byte-identical or fail the
+    /// job with one clean error (see `docs/ROBUSTNESS.md`). Defaults
+    /// from the `FLIMS_FAULTS` environment variable
+    /// (`<seed>:<rate>:<kinds>`, unset = off) so CI can run the whole
+    /// suite under a low-rate fault plan.
+    pub fault: Option<FaultSpec>,
     /// When set, every sort records a span trace (phase-1 chunk sorts,
     /// sealed runs, group merges, codec and prefetch activity) and
     /// auto-writes it into this directory as Chrome trace-event JSON on
@@ -248,8 +261,26 @@ impl Default for ExternalConfig {
             tmp_dir: None,
             disk_budget_bytes: None,
             kernel: MergeKernel::env_default(),
+            fault: fault_default(),
             trace_dir: trace_dir_default(),
         }
+    }
+}
+
+/// The `fault` default: the `FLIMS_FAULTS` environment variable when
+/// set, else off. This is how the `test-faults` CI lane runs the full
+/// integration suite under a seeded low-rate fault plan without
+/// touching every test's config. Like the other env knobs, an
+/// unparseable value warns on stderr instead of silently meaning
+/// "off" — a typo should not quietly turn the fault lane into a second
+/// fault-free run.
+fn fault_default() -> Option<FaultSpec> {
+    match std::env::var("FLIMS_FAULTS") {
+        Err(_) => None,
+        Ok(v) => parse_faults_arg(&v).unwrap_or_else(|e| {
+            eprintln!("warning: FLIMS_FAULTS ignored: {e}");
+            None
+        }),
     }
 }
 
@@ -490,7 +521,8 @@ pub fn sort_stream_ctx<T: ExtItem>(
 ) -> Result<SpillStats> {
     cfg.validate().map_err(|e| anyhow!("{e}"))?;
     let _active = progress::sort_started();
-    let spill = SpillManager::new(cfg.tmp_dir.clone(), cfg.disk_budget_bytes)?;
+    let spill = SpillManager::new(cfg.tmp_dir.clone(), cfg.disk_budget_bytes)?
+        .with_faults(cfg.fault, trace.clone());
     // One long-lived writer thread per concurrent spill writer (the
     // phase-1 producer + up to `threads` group merges, plus slack) —
     // thousand-run sorts reuse these instead of spawning per run.
@@ -584,15 +616,40 @@ pub fn sort_file_traced<T: ExtItem>(
             input.display()
         ));
     }
-    let mut src = RawReader::<T>::open(input)?;
-    // Double-buffer the output too: the final merge pass hands blocks
-    // to a writer thread instead of blocking on the output disk.
-    let writer = RawWriter::<T>::create(output)?;
-    let mut sink = DoubleBufWriter::spawn(writer, 2)?;
-    let stats = sort_stream_traced(&mut src, &mut sink, cfg, trace)?;
-    let written = sink.finish()?.finish()?;
-    debug_assert_eq!(written, stats.elements);
-    Ok(stats)
+    let run = || -> Result<SpillStats> {
+        let mut src = RawReader::<T>::open(input)?;
+        // Double-buffer the output too: the final merge pass hands
+        // blocks to a writer thread instead of blocking on the output
+        // disk.
+        let writer =
+            RawWriter::<T>::create(output)?.with_fault(output_injector(cfg, output, trace));
+        let mut sink = DoubleBufWriter::spawn(writer, 2)?;
+        let stats = sort_stream_traced(&mut src, &mut sink, cfg, trace)?;
+        let written = sink.finish()?.finish()?;
+        debug_assert_eq!(written, stats.elements);
+        Ok(stats)
+    };
+    let res = run();
+    // A failed sort leaves no partial output behind — the same
+    // guarantee `sort_file_ctx` gives the job path.
+    if res.is_err() {
+        let _ = std::fs::remove_file(output);
+    }
+    res
+}
+
+/// The output-sink injector for a file sort, keyed by the output file
+/// name so the injected-fault sequence is stable run to run. Builds no
+/// site string when faults are off — the disabled path stays
+/// allocation-free.
+fn output_injector(cfg: &ExternalConfig, output: &Path, trace: &Trace) -> Injector {
+    match cfg.fault {
+        None => Injector::disabled(),
+        Some(_) => {
+            let name = output.file_name().map(|n| n.to_string_lossy());
+            Injector::for_site(cfg.fault, name.as_deref().unwrap_or("output"), trace)
+        }
+    }
 }
 
 /// [`sort_file`] dispatched over a runtime [`Dtype`] — the entry point
@@ -659,7 +716,8 @@ pub fn sort_file_ctx<T: ExtItem>(
     }
     let run = || -> Result<SpillStats> {
         let mut src = RawReader::<T>::open(input)?;
-        let writer = RawWriter::<T>::create(output)?;
+        let writer =
+            RawWriter::<T>::create(output)?.with_fault(output_injector(cfg, output, trace));
         let mut sink = DoubleBufWriter::spawn(writer, 2)?;
         let stats = sort_stream_ctx(&mut src, &mut sink, cfg, ctx, shared_pool, trace)?;
         let written = sink.finish()?.finish()?;

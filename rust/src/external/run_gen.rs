@@ -30,6 +30,16 @@
 //! with the effective codec ([`ExternalConfig::codec_for`]): `FLR2`
 //! delta blocks compress the sorted runs' small key deltas, cutting
 //! phase-1 spill bandwidth.
+//!
+//! Fault coverage rides along for free: every writer this module
+//! creates comes from [`SpillManager::create_run_with`], which attaches
+//! the per-run [`Injector`](crate::fault::Injector) when a
+//! [`FaultSpec`](crate::fault::FaultSpec) is configured — the
+//! create/write/seal seams inject and retry inside
+//! [`RunWriter`](super::format::RunWriter) itself, under this module's
+//! double-buffered writer threads. An abandoned pending spill (error
+//! mid-run) drops its unsealed `RunWriter`, whose drop guard removes
+//! the partial file.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;

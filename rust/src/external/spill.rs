@@ -23,6 +23,9 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
+use crate::fault::{self, FaultSpec, Injector};
+use crate::obs::Trace;
+
 use super::codec::Codec;
 use super::format::{ExtItem, RunFile, RunWriter};
 
@@ -56,6 +59,11 @@ pub struct SpillManager {
     /// We created the directory, so we remove it on drop.
     own_dir: bool,
     disk_budget: Option<u64>,
+    /// Fault plan materialized into one [`Injector`] per run file the
+    /// manager creates or deletes (`None` in production: zero overhead).
+    fault_spec: Option<FaultSpec>,
+    /// Where the injectors record retry/stall spans.
+    trace: Trace,
     state: Mutex<SpillState>,
 }
 
@@ -78,7 +86,31 @@ impl SpillManager {
                 (d, true)
             }
         };
-        Ok(SpillManager { dir, own_dir, disk_budget, state: Mutex::new(SpillState::default()) })
+        Ok(SpillManager {
+            dir,
+            own_dir,
+            disk_budget,
+            fault_spec: None,
+            trace: Trace::disabled(),
+            state: Mutex::new(SpillState::default()),
+        })
+    }
+
+    /// Attach a fault plan: every run writer this manager creates, and
+    /// every eager delete it performs, gets a per-file [`Injector`]
+    /// seeded from `spec` and the file name. `trace` receives the
+    /// retry/stall spans.
+    pub fn with_faults(mut self, spec: Option<FaultSpec>, trace: Trace) -> Self {
+        self.fault_spec = spec;
+        self.trace = trace;
+        self
+    }
+
+    /// The active fault plan, if any — how downstream seams (run
+    /// readers, the output sink) derive their own injectors from the
+    /// one plan a sort carries.
+    pub fn fault_spec(&self) -> Option<FaultSpec> {
+        self.fault_spec
     }
 
     fn state(&self) -> std::sync::MutexGuard<'_, SpillState> {
@@ -117,8 +149,13 @@ impl SpillManager {
             st.next_run += 1;
             seq
         };
-        let path = self.dir.join(format!("run-{seq:06}.flr"));
-        RunWriter::create_with_kernel(&path, codec, kernel)
+        let name = format!("run-{seq:06}.flr");
+        let path = self.dir.join(&name);
+        // Injector streams are seeded by the file *name*, which is
+        // assigned in input order regardless of worker count — the same
+        // plan replays the same fault sequence at any thread count.
+        let fault = Injector::for_site(self.fault_spec, &name, &self.trace);
+        RunWriter::create_with_fault(&path, codec, kernel, fault)
     }
 
     fn headroom_locked(&self, st: &SpillState, upcoming_bytes: u64) -> Result<()> {
@@ -214,7 +251,17 @@ impl SpillManager {
 
     /// Delete a fully-consumed run eagerly, reclaiming its disk.
     pub fn consume(&self, run: &RunFile) -> Result<()> {
-        std::fs::remove_file(&run.path)
+        // One deterministic decision per file, derived from the file
+        // name alone — consume order varies with merge timing, but the
+        // injected-fault sequence does not.
+        let mut inj = match self.fault_spec {
+            None => Injector::disabled(),
+            Some(_) => {
+                let name = run.path.file_name().map(|n| n.to_string_lossy());
+                Injector::for_site(self.fault_spec, name.as_deref().unwrap_or("run"), &self.trace)
+            }
+        };
+        fault::with_retry(&mut inj, fault::Op::Delete, || std::fs::remove_file(&run.path))
             .with_context(|| format!("deleting consumed run {}", run.path.display()))?;
         let mut st = self.state();
         st.live.retain(|r| r.path != run.path);
@@ -273,6 +320,68 @@ impl Drop for SpillManager {
             let _ = std::fs::remove_dir(&self.dir);
         }
     }
+}
+
+/// Startup crash recovery: sweep on-disk state a previous process left
+/// behind. Two families are reclaimed:
+///
+/// * Inside the configured spill dir (`tmp_dir`, when set): orphaned
+///   per-job `job-<id>` directories and stray half-written `run-*.flr`
+///   files. The server owns that directory and no jobs are running at
+///   startup, so anything present is leakage from a crash.
+/// * Under the system temp dir: `flims-spill-<pid>-<seq>` directories
+///   whose owning pid is no longer alive (checked via `/proc`; skipped
+///   on systems without it, where liveness cannot be told).
+///
+/// Returns the paths removed, for the caller to log. Never errors: a
+/// sweep that cannot remove something leaves it and moves on.
+pub fn recover_stale_spills(tmp_dir: Option<&Path>) -> Vec<PathBuf> {
+    let mut removed = Vec::new();
+    if let Some(dir) = tmp_dir {
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            for e in entries.flatten() {
+                let name = e.file_name();
+                let name = name.to_string_lossy();
+                let is_dir = e.file_type().map(|t| t.is_dir()).unwrap_or(false);
+                let p = e.path();
+                if is_dir && name.starts_with("job-") {
+                    if std::fs::remove_dir_all(&p).is_ok() {
+                        removed.push(p);
+                    }
+                } else if !is_dir && name.starts_with("run-") && name.ends_with(".flr") {
+                    if std::fs::remove_file(&p).is_ok() {
+                        removed.push(p);
+                    }
+                }
+            }
+        }
+    }
+    if let Ok(entries) = std::fs::read_dir(std::env::temp_dir()) {
+        for e in entries.flatten() {
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            let Some(rest) = name.strip_prefix("flims-spill-") else { continue };
+            let Some((pid, _seq)) = rest.split_once('-') else { continue };
+            let Ok(pid) = pid.parse::<u32>() else { continue };
+            if pid == std::process::id() || !pid_is_dead(pid) {
+                continue;
+            }
+            let p = e.path();
+            if std::fs::remove_dir_all(&p).is_ok() {
+                removed.push(p);
+            }
+        }
+    }
+    removed
+}
+
+/// Conservatively decide a pid is dead: only claim death when `/proc`
+/// exists and the pid has no entry. Where liveness cannot be observed,
+/// stale dirs are kept (leak-on-doubt beats deleting a live sort's
+/// spill).
+fn pid_is_dead(pid: u32) -> bool {
+    let proc_root = Path::new("/proc");
+    proc_root.is_dir() && !proc_root.join(pid.to_string()).exists()
 }
 
 #[cfg(test)]
@@ -412,6 +521,45 @@ mod tests {
         let _r2 = spill_run(&sm, &[1]);
         assert!(sm.peak_live_bytes() >= peak_after_one);
         assert!(sm.live_bytes() < sm.peak_live_bytes());
+    }
+
+    #[test]
+    fn recovery_sweep_reclaims_orphans_and_keeps_strangers() {
+        let dir = std::env::temp_dir().join(format!("flims-sweep-{}", std::process::id()));
+        std::fs::create_dir_all(dir.join("job-17")).unwrap();
+        std::fs::write(dir.join("job-17").join("run-000000.flr"), b"junk").unwrap();
+        std::fs::write(dir.join("run-000042.flr"), b"half-written").unwrap();
+        std::fs::write(dir.join("keep.txt"), b"not ours").unwrap();
+        std::fs::create_dir_all(dir.join("not-a-job")).unwrap();
+
+        let removed = recover_stale_spills(Some(&dir));
+        assert_eq!(removed.len(), 2, "{removed:?}");
+        assert!(!dir.join("job-17").exists(), "orphaned job dir must be swept");
+        assert!(!dir.join("run-000042.flr").exists(), "stray run must be swept");
+        assert!(dir.join("keep.txt").exists(), "unrelated files must survive");
+        assert!(dir.join("not-a-job").exists(), "unrelated dirs must survive");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn recovery_sweep_removes_dead_pid_dirs_and_keeps_live_ones() {
+        if !Path::new("/proc").is_dir() {
+            return; // liveness unobservable here; the sweep keeps everything
+        }
+        // A pid far outside any real pid space: /proc/<pid> cannot exist.
+        let dead = std::env::temp_dir().join("flims-spill-4294967295-7");
+        std::fs::create_dir_all(&dead).unwrap();
+        std::fs::write(dead.join("run-000000.flr"), b"junk").unwrap();
+        // Our own (live) dir must never be swept.
+        let live = std::env::temp_dir()
+            .join(format!("flims-spill-{}-999999", std::process::id()));
+        std::fs::create_dir_all(&live).unwrap();
+
+        let removed = recover_stale_spills(None);
+        assert!(removed.contains(&dead), "{removed:?}");
+        assert!(!dead.exists());
+        assert!(live.exists(), "a live process's spill dir must survive the sweep");
+        std::fs::remove_dir_all(&live).unwrap();
     }
 
     #[test]

@@ -31,6 +31,14 @@
 //! of paying a thread spawn/teardown per run (the ROADMAP's
 //! writer-pooling follow-on), with a dedicated-thread fallback whenever
 //! every pool worker is busy.
+//!
+//! Neither leaf nor writer adds a fault seam of its own: the injected
+//! [`RunReader`]/[`RunWriter`](super::format::RunWriter) they wrap
+//! carry the per-run [`Injector`](crate::fault::Injector), so prefetch
+//! threads and pooled writer threads inherit the same deterministic
+//! injection and retry behaviour as the synchronous paths — a retried
+//! read happens on the prefetch thread, before the block enters the
+//! bounded channel, never on the merge hot path.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, TryRecvError};

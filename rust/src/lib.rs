@@ -68,6 +68,9 @@
 //!   encoded on pooled double-buffered writer threads and decoded on
 //!   the prefetch threads, so codec CPU and disk I/O overlap the merge.
 //!   Key ties keep input order end to end (§6).
+//! * [`fault`] — deterministic seeded fault injection at every spill-I/O
+//!   seam plus the recovery half: bounded-backoff retry, disk-pressure
+//!   degradation, and crash-recovery sweeps (see `docs/ROBUSTNESS.md`).
 //! * [`coordinator`] — sorting-as-a-service: router + dynamic batcher.
 //! * [`obs`] — observability: the per-sort [`obs::Trace`] span ring
 //!   rendered as Chrome trace-event JSON ([`obs::chrome`]), plus the
@@ -91,6 +94,7 @@ pub mod coordinator;
 #[allow(missing_docs)]
 pub mod data;
 pub mod external;
+pub mod fault;
 #[allow(missing_docs)]
 pub mod flims;
 #[allow(missing_docs)]

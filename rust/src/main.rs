@@ -8,6 +8,7 @@
 //! flims sortfile --input data.u32 [--output out.u32] [--dtype u32|u64|i32|i64|kv|kv64|f32]
 //!                [--codec raw|delta|flr3] [--overlap on|off] [--kernel auto|scalar|simd]
 //!                [--budget-mb 64] [--fan-in 8] [--threads T] [--prefetch B] [--gen N]
+//!                [--faults seed:rate:kinds]  # deterministic fault injection (docs/ROBUSTNESS.md)
 //!                [--trace out.trace.json]  # Chrome trace-event JSON of the sort
 //! flims trace                              # the paper's Table 1 example
 //! flims simulate --design flims|flimsj|wms|mms|vms|basic --w 8 [--skew] [--dup]
@@ -162,6 +163,9 @@ fn print_help() {
                      [--codec raw|delta|flr3] [--overlap on|off] [--budget-mb M]\n\
                      [--fan-in K] [--threads T] [--prefetch B]\n\
                      [--kernel auto|scalar|simd]\n\
+                     [--faults S:R:K]   (seeded fault injection, e.g. 7:0.01:transient;\n\
+                                         kinds transient|enospc|short|stall|all — see\n\
+                                         docs/ROBUSTNESS.md)\n\
                      [--trace F]   (Chrome trace-event JSON, for Perfetto)\n\
                      [--gen N [--dist D] [--seed S]]   (raw LE record datasets)\n\
            trace     (replays the paper's Table 1 example, w=4)\n\
@@ -358,6 +362,9 @@ fn cmd_sortfile(f: &HashMap<String, String>) -> Result<(), String> {
     // sortfile knobs.)
     if let Some(k) = f.get("kernel") {
         ext.kernel = MergeKernel::parse(k).map_err(|e| format!("--kernel: {e}"))?;
+    }
+    if let Some(plan) = f.get("faults") {
+        ext.fault = flims::fault::parse_faults_arg(plan).map_err(|e| format!("--faults: {e}"))?;
     }
     ext.validate()?;
     let input = PathBuf::from(
@@ -656,6 +663,14 @@ fn cmd_report(args: &[String], f: &HashMap<String, String>) -> Result<(), String
 
 fn cmd_serve(f: &HashMap<String, String>) -> Result<(), String> {
     let cfg = load_config(f)?;
+    // Crash recovery before the first request: sweep orphaned spill
+    // directories and half-written runs a previous crashed/killed
+    // server left behind, so stale `job-<id>` tmp dirs never eat the
+    // disk budget of the new process.
+    let swept = external::spill::recover_stale_spills(cfg.external.tmp_dir.as_deref());
+    if !swept.is_empty() {
+        eprintln!("crash recovery: removed {} stale spill path(s)", swept.len());
+    }
     let runtime = match RuntimeHandle::load(std::path::Path::new(&cfg.artifacts_dir)) {
         Ok(rt) => {
             eprintln!(

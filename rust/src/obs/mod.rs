@@ -76,11 +76,17 @@ pub enum SpanKind {
     PrefetchWait = 6,
     /// The final pass: draining the root merge tree into the output.
     FinalDrain = 7,
+    /// A spill-I/O operation was retried after a transient error
+    /// (injected or real) — the span covers the backoff sleep.
+    IoRetry = 8,
+    /// The fault injector stalled an I/O operation (latency fault); the
+    /// span covers the injected delay.
+    FaultStall = 9,
 }
 
 impl SpanKind {
     /// Every kind, in declaration order.
-    pub const ALL: [SpanKind; 7] = [
+    pub const ALL: [SpanKind; 9] = [
         SpanKind::ChunkSort,
         SpanKind::SealRun,
         SpanKind::CodecEncode,
@@ -88,6 +94,8 @@ impl SpanKind {
         SpanKind::CodecDecode,
         SpanKind::PrefetchWait,
         SpanKind::FinalDrain,
+        SpanKind::IoRetry,
+        SpanKind::FaultStall,
     ];
 
     /// The event name rendered into the Chrome trace.
@@ -100,6 +108,8 @@ impl SpanKind {
             SpanKind::CodecDecode => "codec_decode",
             SpanKind::PrefetchWait => "prefetch_wait",
             SpanKind::FinalDrain => "final_drain",
+            SpanKind::IoRetry => "io_retry",
+            SpanKind::FaultStall => "fault_stall",
         }
     }
 
@@ -112,6 +122,8 @@ impl SpanKind {
             | SpanKind::GroupMerge
             | SpanKind::FinalDrain => "elems",
             SpanKind::CodecDecode | SpanKind::PrefetchWait => "n",
+            // attempt number for a retry; the fault `Op` code for a stall
+            SpanKind::IoRetry | SpanKind::FaultStall => "n",
         }
     }
 

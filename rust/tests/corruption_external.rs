@@ -58,7 +58,7 @@ fn truncated_header_is_an_error() {
         assert!(err.is_err(), "header truncated to {keep} bytes must not open");
         let msg = format!("{:#}", err.unwrap_err());
         assert!(
-            msg.contains("run header") || msg.contains("bad magic"),
+            msg.contains("run truncated") || msg.contains("run header") || msg.contains("bad magic"),
             "keep={keep}: {msg}"
         );
     }
@@ -114,9 +114,12 @@ fn corrupted_magic_is_an_error() {
 fn zero_length_file_and_header_only_run() {
     let dir = test_dir("zero");
     let path = dir.join("zero.flr");
-    // A zero-byte file is a truncated header: Err, not a hang.
+    // A zero-byte file is a truncated header: a clean `run truncated`
+    // error naming the path, not a hang.
     std::fs::write(&path, []).unwrap();
-    assert!(RunReader::<u32>::open(&path).is_err());
+    let err = format!("{:#}", RunReader::<u32>::open(&path).unwrap_err());
+    assert!(err.contains("run truncated"), "{err}");
+    assert!(err.contains("zero.flr"), "{err}");
 
     // A header-only run honestly claiming zero elements is the one legal
     // "zero-length" shape: opens, reads nothing, terminates immediately.
@@ -583,6 +586,96 @@ fn flr3_wrong_dtype_is_an_error_not_garbage() {
     w.finish().unwrap();
     let err = format!("{:#}", drain_flr3(&wide).unwrap_err());
     assert!(err.contains("corrupt run (block claims delta width"), "{err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The mid-write-crash family: a writer killed at any block boundary —
+/// or mid-block (a torn final block) — leaves a file that must fail
+/// with a clean one-line error for every format version. Never a
+/// panic, never a hang, never silently short data.
+#[test]
+fn mid_write_crash_truncations_fail_cleanly_for_every_format() {
+    let dir = test_dir("crash");
+    let hdr = RUN_HEADER_BYTES as usize;
+
+    // FLR1 (raw): no intra-run framing, so the boundaries are the
+    // header edge and record edges; the torn cuts land mid-record.
+    let (path, bytes) = valid_run(&dir);
+    for keep in [hdr, hdr + 4, hdr + 200, hdr + 399, bytes.len() - 1] {
+        std::fs::write(&path, &bytes[..keep]).unwrap();
+        let err = format!("{:#}", RunReader::<u32>::open(&path).unwrap_err());
+        assert!(err.contains("truncated run"), "flr1 keep={keep}: {err}");
+        assert!(!err.contains('\n'), "flr1 keep={keep}: must be one line: {err}");
+    }
+
+    // FLR2 (delta): cut at the header edge, mid block-1 header, at the
+    // exact block-1/block-2 boundary, mid block-2 header, and a torn
+    // final byte.
+    let (path, bytes) = valid_delta_run(&dir);
+    let kb1 = u32::from_le_bytes(bytes[hdr + 4..hdr + 8].try_into().unwrap()) as usize;
+    let blk2 = hdr + 8 + kb1; // first byte of block 2's header
+    for keep in [hdr, hdr + 3, blk2 - 1, blk2, blk2 + 3, bytes.len() - 1] {
+        std::fs::write(&path, &bytes[..keep]).unwrap();
+        let err = format!("{:#}", drain_delta(&path).unwrap_err());
+        assert!(
+            err.contains("truncated run") || err.contains("corrupt run"),
+            "flr2 keep={keep}: {err}"
+        );
+        assert!(!err.contains('\n'), "flr2 keep={keep}: must be one line: {err}");
+    }
+
+    // FLR3 (bitpack): the same family over its 16-byte block headers
+    // and packed payload.
+    let (path, bytes) = valid_flr3_run(&dir);
+    let (hdr1, hdr2) = flr3_block_offsets(&bytes);
+    for keep in [hdr1, hdr1 + 5, hdr1 + 16, hdr2, hdr2 + 15, hdr2 + 16, bytes.len() - 1] {
+        std::fs::write(&path, &bytes[..keep]).unwrap();
+        let err = format!("{:#}", drain_flr3(&path).unwrap_err());
+        assert!(
+            err.contains("truncated run") || err.contains("corrupt run"),
+            "flr3 keep={keep}: {err}"
+        );
+        assert!(!err.contains('\n'), "flr3 keep={keep}: must be one line: {err}");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A sort killed by an injected unrecoverable fault must fail with a
+/// clean one-line error AND leave nothing behind: no spill runs, no
+/// partial output — only the input survives in the spill directory.
+#[test]
+fn failed_sort_under_faults_leaks_no_spill_files() {
+    use flims::external::ExternalConfig;
+    use flims::fault::{FaultSpec, KIND_DISK_FULL};
+    let dir = test_dir("leak");
+    let input = dir.join("data.u32");
+    let data: Vec<u32> = (0..20_000u32).map(|i| i.wrapping_mul(2654435761)).collect();
+    write_raw(&input, &data).unwrap();
+    let output = dir.join("data.u32.sorted");
+
+    let mut cfg = ExternalConfig::default();
+    cfg.mem_budget_bytes = 4096; // force a real spill
+    cfg.tmp_dir = Some(dir.clone());
+    cfg.fault = Some(FaultSpec { seed: 3, rate_ppm: 1_000_000, kinds: KIND_DISK_FULL });
+    let err = flims::external::sort_file::<u32>(&input, &output, &cfg).unwrap_err();
+    let msg = format!("{err:#}");
+    // The injected fault is a real ENOSPC on unix, a tagged error
+    // elsewhere — either way the job dies with a space-exhaustion line.
+    assert!(
+        msg.contains("os error 28")
+            || msg.contains("No space left")
+            || msg.contains("injected disk full"),
+        "{msg}"
+    );
+    assert!(!msg.contains('\n'), "must be one line: {msg}");
+
+    // Nothing left behind: the input is the only entry in the dir.
+    let leftovers: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p != &input)
+        .collect();
+    assert!(leftovers.is_empty(), "failed sort leaked: {leftovers:?}");
     std::fs::remove_dir_all(&dir).unwrap();
 }
 

@@ -1,0 +1,82 @@
+//! Zero-overhead guarantee for disabled fault injection: every spill
+//! I/O seam carries an [`flims::fault::Injector`] handle, so the
+//! disabled handle must cost nothing — no clock reads, no RNG draws
+//! and, measured here, no heap traffic for `checkpoint` or the
+//! `with_retry` wrapper. A disabled seam that allocated would tax
+//! every fault-free sort (the acceptance bar this PR pins).
+//!
+//! Measured with a counting global allocator; this lives in its own
+//! integration-test binary so the counter sees only this file's tests.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use flims::fault::{self, Injector, Op};
+
+struct CountingAlloc;
+
+static ALLOCATED_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATED_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATED_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn disabled_injector_never_touches_the_heap() {
+    let mut inj = Injector::disabled();
+    assert!(!inj.is_enabled());
+
+    // Warm up once — nothing lazy should exist on the disabled path,
+    // but the measurement must not depend on that.
+    inj.checkpoint(Op::Write).unwrap();
+    let _ = fault::with_retry(&mut inj, Op::Read, || Ok::<u32, std::io::Error>(7)).unwrap();
+
+    let before = ALLOCATED_BYTES.load(Ordering::Relaxed);
+    let mut sum = 0u64;
+    for i in 0..10_000u64 {
+        for op in [Op::Create, Op::Write, Op::Seal, Op::Read, Op::Delete] {
+            inj.checkpoint(op).unwrap();
+            sum += fault::with_retry(&mut inj, op, || Ok::<u64, std::io::Error>(i)).unwrap();
+        }
+    }
+    assert_eq!(sum, 5 * (0..10_000u64).sum::<u64>());
+    let delta = ALLOCATED_BYTES.load(Ordering::Relaxed) - before;
+    assert_eq!(
+        delta, 0,
+        "the disabled fault seam allocated {delta} bytes across 100k hot-path \
+         calls — it must be a null check and nothing else"
+    );
+}
+
+#[test]
+fn constructing_a_disabled_site_is_free_too() {
+    // `Injector::for_site(None, …)` is the per-run call sites' disabled
+    // arm; the seam contract is that it builds no state when no plan is
+    // armed.
+    let trace = flims::obs::Trace::disabled();
+    let warm = Injector::for_site(None, "run-000000.flr", &trace);
+    drop(warm);
+
+    let before = ALLOCATED_BYTES.load(Ordering::Relaxed);
+    for _ in 0..10_000 {
+        let mut inj = Injector::for_site(None, "run-000000.flr", &trace);
+        inj.checkpoint(Op::Write).unwrap();
+    }
+    let delta = ALLOCATED_BYTES.load(Ordering::Relaxed) - before;
+    assert_eq!(delta, 0, "for_site(None) allocated {delta} bytes");
+}

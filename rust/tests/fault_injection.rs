@@ -1,0 +1,108 @@
+//! Determinism properties of the seeded fault-injection plan
+//! (`rust/src/fault`): the same seed + plan injects the identical
+//! fault sequence, recovery is transparent (output bytes identical to
+//! a fault-free sort), and a zero-rate plan never fires.
+//!
+//! The fault counters are process-wide, so every test reading them
+//! serializes on a file-local mutex — this binary owns its process,
+//! and within it only one counter-sensitive sort runs at a time.
+
+use std::sync::Mutex;
+
+use flims::external::{self, ExternalConfig};
+use flims::fault::{self, FaultSpec, KIND_ALL, KIND_STALL, KIND_TRANSIENT};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn dataset(n: usize) -> Vec<u32> {
+    (0..n as u32).map(|i| i.wrapping_mul(2654435761)).collect()
+}
+
+/// A config that really spills (tiny budget), with the fault plan
+/// pinned explicitly — the `FLIMS_FAULTS` CI lane must not leak its
+/// own plan into these measurements.
+fn cfg(threads: usize, overlap: bool, fault: Option<FaultSpec>) -> ExternalConfig {
+    let mut c = ExternalConfig::default();
+    c.mem_budget_bytes = 4096;
+    c.threads = threads;
+    c.overlap = overlap;
+    c.fault = fault;
+    c
+}
+
+/// The tentpole property: for every scheduling shape, a survivable
+/// fault plan (transient + stall) recovers to output bytes identical
+/// to the fault-free sort; and wherever the spill-file numbering is
+/// deterministic (the batch schedule — writers are created in group
+/// order for any worker count), repeating the sort injects *exactly*
+/// the same number of faults and retries, for every thread count.
+///
+/// The pipelined schedule assigns intermediate run numbers in event
+/// arrival order, which legitimately varies with thread timing — there
+/// the guarantee under test is recovery byte-identity, not the count.
+#[test]
+fn same_seed_same_plan_is_deterministic_and_byte_identical() {
+    let _g = LOCK.lock().unwrap();
+    let data = dataset(30_000);
+    let plan =
+        Some(FaultSpec { seed: 7, rate_ppm: 20_000, kinds: KIND_TRANSIENT | KIND_STALL });
+
+    let (reference, stats) = external::sort_vec(&data, &cfg(2, false, None)).unwrap();
+    assert!(stats.runs_spilled > 1, "the dataset must really spill");
+
+    // One (faults_injected, io_retries) signature for the whole batch
+    // family: identical across repeats AND across thread counts.
+    let mut batch_sig: Option<(u64, u64)> = None;
+    for threads in [1usize, 2, 8] {
+        for overlap in [false, true] {
+            let c = cfg(threads, overlap, plan);
+            let mut deltas = Vec::new();
+            for repeat in 0..2 {
+                let before = (fault::faults_injected(), fault::io_retries());
+                let (out, _) = external::sort_vec(&data, &c).unwrap();
+                deltas.push((
+                    fault::faults_injected() - before.0,
+                    fault::io_retries() - before.1,
+                ));
+                assert_eq!(
+                    out, reference,
+                    "threads={threads} overlap={overlap} repeat={repeat}: \
+                     injected faults must recover to the fault-free bytes"
+                );
+            }
+            if !overlap {
+                assert_eq!(
+                    deltas[0], deltas[1],
+                    "threads={threads}: same seed + plan must inject the identical \
+                     fault sequence on repeat"
+                );
+                match batch_sig {
+                    None => batch_sig = Some(deltas[0]),
+                    Some(sig) => assert_eq!(
+                        deltas[0], sig,
+                        "threads={threads}: batch-schedule fault counts must not \
+                         depend on the worker count"
+                    ),
+                }
+            }
+        }
+    }
+    let sig = batch_sig.unwrap();
+    assert!(sig.0 > 0, "the plan must actually fire (got {sig:?})");
+    assert!(sig.1 > 0, "transient faults must be recovered via retries (got {sig:?})");
+}
+
+/// A zero-rate plan is armed but silent: no faults, no retries, and
+/// the output bytes match the fault-free sort exactly.
+#[test]
+fn zero_rate_plan_injects_nothing() {
+    let _g = LOCK.lock().unwrap();
+    let data = dataset(20_000);
+    let (reference, _) = external::sort_vec(&data, &cfg(2, false, None)).unwrap();
+
+    let plan = Some(FaultSpec { seed: 1, rate_ppm: 0, kinds: KIND_ALL });
+    let before = fault::faults_injected();
+    let (out, _) = external::sort_vec(&data, &cfg(2, false, plan)).unwrap();
+    assert_eq!(out, reference);
+    assert_eq!(fault::faults_injected(), before, "a zero rate must never fire");
+}
